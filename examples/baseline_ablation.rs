@@ -1,0 +1,64 @@
+//! Ablation: the paper's divisible-task MILP vs the classic whole-task
+//! mapping heuristics from Braun et al. [5] (OLB/MET/MCT/Min-Min/Max-Min/
+//! Sufferage) on the same model data — quantifies how much of the win comes
+//! from task divisibility + billing awareness vs plain good mapping.
+//!
+//! ```bash
+//! cargo run --release --example baseline_ablation
+//! ```
+
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::partitioner::baselines::{Classic, ClassicPartitioner};
+use cloudshapes::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
+use cloudshapes::report::Experiment;
+use cloudshapes::util::table::{fnum, Align, Table};
+
+fn main() -> Result<(), String> {
+    let quick = std::env::args().any(|a| a == "quick");
+    let cfg = if quick {
+        ExperimentConfig::quick()
+    } else {
+        ExperimentConfig::load(std::path::Path::new("configs/paper.toml")).unwrap_or_default()
+    };
+    let e = Experiment::build(cfg.clone())?;
+    let models = e.models();
+
+    let mut t = Table::new(&["partitioner", "makespan (s)", "cost ($)", "platforms"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for c in Classic::all() {
+        let alloc = ClassicPartitioner(c).partition(models, None)?;
+        let (lat, cost) = models.evaluate(&alloc);
+        t.row(&[
+            c.name().to_string(),
+            fnum(lat, 1),
+            fnum(cost, 3),
+            alloc.used_platforms().len().to_string(),
+        ]);
+        results.push((c.name().to_string(), lat));
+    }
+    let h = HeuristicPartitioner::upper_bound_allocation(models);
+    let (hl, hc) = models.evaluate(&h);
+    t.row(&["paper-heuristic (C_U)".to_string(), fnum(hl, 1), fnum(hc, 3), h.used_platforms().len().to_string()]);
+
+    let milp = MilpPartitioner::new(cfg.milp.clone()).solve(models, None)?;
+    t.row(&[
+        "milp (divisible)".to_string(),
+        fnum(milp.makespan, 1),
+        fnum(milp.cost, 3),
+        milp.alloc.used_platforms().len().to_string(),
+    ]);
+    println!("{}", t.render());
+
+    // The divisible MILP must dominate every whole-task mapper on makespan.
+    for (name, lat) in &results {
+        assert!(
+            milp.makespan <= lat * 1.001,
+            "milp ({}) slower than {name} ({lat})",
+            milp.makespan
+        );
+    }
+    println!("baseline_ablation OK (milp dominates all whole-task mappers)");
+    Ok(())
+}

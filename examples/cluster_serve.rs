@@ -1,0 +1,71 @@
+//! Coordinator-as-a-service demo: starts the JSON-over-TCP coordinator on a
+//! free port, runs a scripted client session against it (ping, specs,
+//! partition at several budgets, evaluate, shutdown), and prints the
+//! round-trip results — the "long-running framework" usage mode.
+//!
+//! ```bash
+//! cargo run --release --example cluster_serve
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+
+use cloudshapes::cli::serve::serve_until_shutdown;
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::report::Experiment;
+use cloudshapes::util::json::Json;
+
+fn request(addr: &str, line: &str) -> Result<Json, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    stream
+        .write_all(format!("{line}\n").as_bytes())
+        .map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut response = String::new();
+    reader.read_line(&mut response).map_err(|e| e.to_string())?;
+    Json::parse(response.trim()).map_err(|e| e.to_string())
+}
+
+fn main() -> Result<(), String> {
+    let mut cfg = ExperimentConfig::quick();
+    cfg.milp.time_limit_secs = 3.0;
+    println!("building experiment + binding coordinator...");
+    let experiment = Arc::new(Experiment::build(cfg)?);
+    let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?.to_string();
+    println!("coordinator on {addr}");
+    let server = thread::spawn(move || serve_until_shutdown(listener, experiment));
+
+    // Scripted client session.
+    let session = [
+        r#"{"op":"ping"}"#.to_string(),
+        r#"{"op":"specs"}"#.to_string(),
+        r#"{"op":"partition","partitioner":"heuristic"}"#.to_string(),
+        r#"{"op":"partition","partitioner":"milp"}"#.to_string(),
+        r#"{"op":"partition","partitioner":"milp","budget":1.0}"#.to_string(),
+        r#"{"op":"evaluate","partitioner":"milp"}"#.to_string(),
+    ];
+    for line in &session {
+        let resp = request(&addr, line)?;
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(true)),
+            "request failed: {line} -> {}",
+            resp.to_string_compact()
+        );
+        println!("> {line}\n< {}", resp.to_string_compact());
+    }
+    // Model-vs-measured consistency from the evaluate round-trip.
+    let eval = request(&addr, r#"{"op":"evaluate","partitioner":"heuristic"}"#)?;
+    let pred = eval.get("predicted_latency_s").and_then(Json::as_f64).unwrap();
+    let meas = eval.get("measured_latency_s").and_then(Json::as_f64).unwrap();
+    println!("predicted {pred:.1}s vs measured {meas:.1}s");
+    assert!((meas / pred - 1.0).abs() < 0.5, "prediction wildly off");
+
+    let _ = request(&addr, r#"{"op":"shutdown"}"#);
+    let _ = server.join();
+    println!("cluster_serve OK");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! END-TO-END driver — proves all three layers compose on a real workload:
+//!
+//! 1. loads the AOT artifacts (L1 Pallas kernels inside L2 JAX chunk graphs,
+//!    lowered to HLO text) into the PJRT CPU runtime;
+//! 2. builds a heterogeneous cluster = simulated Table II platforms + the
+//!    REAL native platform executing those artifacts;
+//! 3. runs the paper's §III.A benchmarking procedure on it (the native
+//!    platform is benchmarked with real wall-clock executions);
+//! 4. partitions the workload with heuristic vs MILP at three budgets;
+//! 5. EXECUTES every partition — the native platform really prices its
+//!    slices — and reports predicted vs measured makespan/cost plus price
+//!    accuracy against Black-Scholes.
+//!
+//! Results of a reference run are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::executor::execute;
+use cloudshapes::coordinator::partitioner::lower_cost_bound;
+use cloudshapes::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
+use cloudshapes::pricing::blackscholes;
+use cloudshapes::report::Experiment;
+use cloudshapes::workload::option::Payoff;
+
+fn main() -> Result<(), String> {
+    let cfg = ExperimentConfig::load(std::path::Path::new("configs/native.toml"))
+        .unwrap_or_else(|_| {
+            let mut c = ExperimentConfig::quick();
+            c.cluster.with_native = true;
+            c
+        });
+    println!("building experiment (simulated cluster + native PJRT platform)...");
+    let e = Experiment::build(cfg.clone())?;
+    println!(
+        "cluster: {} platforms ({} native), workload: {} tasks / {} sims",
+        e.cluster.len(),
+        e.cluster.specs().iter().filter(|s| s.name.contains("native")).count(),
+        e.workload.len(),
+        e.workload.total_sims()
+    );
+
+    let models = e.models();
+    // Show what benchmarking learned about the native platform.
+    let native_idx = (0..models.mu)
+        .find(|&i| models.platform_names[i].contains("native"))
+        .ok_or("native platform missing")?;
+    println!("\nbenchmark-fitted native-platform models (real wall-clock):");
+    for j in 0..models.tau.min(4) {
+        let m = models.model(native_idx, j);
+        println!(
+            "  task {j}: beta {:.3e} s/path, gamma {:.4} s, R2 {:.4}",
+            m.beta, m.gamma, m.r_squared
+        );
+    }
+
+    let milp = MilpPartitioner::new(cfg.milp.clone());
+    let heuristic = HeuristicPartitioner::default();
+    let (c_l, _) = lower_cost_bound(models);
+    let un = milp.solve(models, None)?;
+    let budgets = [None, Some((c_l + un.cost) / 2.0), Some(c_l)];
+
+    println!("\n{:>12} {:>10} {:>24} {:>24}", "budget", "partnr", "predicted (s / $)", "measured (s / $)");
+    for budget in budgets {
+        for p in [&milp as &dyn Partitioner, &heuristic as &dyn Partitioner] {
+            let alloc = match p.partition(models, budget) {
+                Ok(a) => a,
+                Err(_) => continue,
+            };
+            let (pl, pc) = models.evaluate(&alloc);
+            let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor)?;
+            println!(
+                "{:>12} {:>10} {:>14.1} / {:<7.3} {:>14.1} / {:<7.3}  (native slice: {} sims)",
+                budget.map(|b| format!("{b:.2}")).unwrap_or_else(|| "uncon".into()),
+                p.name(),
+                pl,
+                pc,
+                rep.makespan_secs,
+                rep.cost,
+                rep.platforms[native_idx].sims,
+            );
+            assert_eq!(rep.failures, 0, "platform failures during execution");
+        }
+    }
+
+    // Price-correctness audit: every European task vs Black-Scholes.
+    println!("\nprice audit (milp unconstrained partition):");
+    let alloc = milp.partition(models, None)?;
+    let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor)?;
+    let mut audited = 0;
+    for (t, price) in e.workload.tasks.iter().zip(&rep.prices) {
+        let est = price.as_ref().ok_or("missing price")?;
+        if t.payoff == Payoff::European {
+            let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+            let ok = (est.price - bs).abs() < 6.0 * est.std_error + 0.1;
+            println!(
+                "  task {:>2}: mc {:>8.4} ± {:<7.4} bs {:>8.4} {}",
+                t.id,
+                est.price,
+                est.std_error,
+                bs,
+                if ok { "OK" } else { "MISMATCH" }
+            );
+            assert!(ok, "task {} price mismatch", t.id);
+            audited += 1;
+        }
+    }
+    println!("\nend_to_end OK ({audited} European prices verified against Black-Scholes)");
+    Ok(())
+}

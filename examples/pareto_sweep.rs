@@ -1,0 +1,76 @@
+//! Pareto sweep at paper scale: regenerate the Fig. 1 trade-off for both
+//! partitioners and print the curves side by side (ASCII + CSV on stdout).
+//!
+//! ```bash
+//! cargo run --release --example pareto_sweep            # paper scale
+//! cargo run --release --example pareto_sweep -- quick   # small preset
+//! ```
+
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner, SweepConfig};
+use cloudshapes::report::Experiment;
+use cloudshapes::util::plot::{Plot, Series};
+
+fn main() -> Result<(), String> {
+    let quick = std::env::args().any(|a| a == "quick");
+    let mut cfg = if quick {
+        ExperimentConfig::quick()
+    } else {
+        ExperimentConfig::load(std::path::Path::new("configs/paper.toml"))
+            .unwrap_or_default()
+    };
+    cfg.sweep = SweepConfig { levels: if quick { 5 } else { 9 } };
+    let e = Experiment::build(cfg.clone())?;
+    let models = e.models();
+
+    let milp = MilpPartitioner::new(cfg.milp.clone());
+    let heuristic = HeuristicPartitioner::default();
+    let m_curve = sweep(&milp, models, &cfg.sweep)?;
+    let h_curve = sweep(&heuristic, models, &cfg.sweep)?;
+
+    let mut plot = Plot::new(
+        "Latency vs Cost trade-off (model predictions)",
+        "cost ($)",
+        "makespan (s)",
+    );
+    let mut ms = Series::new("milp", 'o');
+    for p in m_curve.pareto_front() {
+        ms.push(p.cost, p.latency);
+    }
+    let mut hs = Series::new("heuristic", 'x');
+    for p in h_curve.pareto_front() {
+        hs.push(p.cost, p.latency);
+    }
+    plot.add(ms);
+    plot.add(hs);
+    println!("{}", plot.render());
+
+    println!("budget,milp_latency,milp_cost,heuristic_latency,heuristic_cost");
+    let pairs = m_curve.points.iter().zip(h_curve.points.iter());
+    for (mp, hp) in pairs {
+        println!(
+            "{},{:.1},{:.3},{:.1},{:.3}",
+            mp.budget.map(|b| format!("{b:.3}")).unwrap_or_else(|| "uncon".into()),
+            mp.latency,
+            mp.cost,
+            hp.latency,
+            hp.cost
+        );
+    }
+
+    // The paper's dominance claim, checked across the curve.
+    for (mp, hp) in m_curve.points.iter().zip(h_curve.points.iter()) {
+        if let (Some(mb), Some(hb)) = (mp.budget, hp.budget) {
+            if (mb - hb).abs() < 1e-6 {
+                assert!(
+                    mp.latency <= hp.latency * 1.001,
+                    "milp slower at budget {mb}: {} vs {}",
+                    mp.latency,
+                    hp.latency
+                );
+            }
+        }
+    }
+    println!("\npareto_sweep OK (milp <= heuristic at every shared budget)");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""Structural performance analysis of the L1 Pallas kernels.
+
+``interpret=True`` wallclock on CPU is not a TPU proxy (see DESIGN.md
+§Hardware-Adaptation), so the kernels are assessed *structurally*: VMEM
+working-set per block, HBM traffic per path, ALU operation counts, and the
+resulting VPU-roofline utilisation estimate for a TPU-class part. Run as
+
+    python -m compile.analysis [--block 4096] [--steps 64]
+
+and the same numbers back DESIGN.md §Perf / EXPERIMENTS.md §Perf.
+"""
+
+import argparse
+from dataclasses import dataclass
+
+# Reference TPU-class budgets (order-of-magnitude; v4-lite-ish core).
+VMEM_BYTES = 16 * 1024 * 1024
+VPU_OPS_PER_SEC = 2.0e12  # f32 vector ALU
+HBM_BYTES_PER_SEC = 400e9
+
+# ALU op counts per path-step (mirrors workload/option.rs flops_per_path).
+THREEFRY_OPS = 90  # 20 rounds x (add, rot, xor) + key schedule
+BOXMULLER_OPS = 40  # ln, sqrt, cos, scale
+STEP_OPS = 12      # drift/vol update, exp, accumulate
+
+
+@dataclass
+class KernelProfile:
+    payoff: str
+    block: int
+    steps: int
+    live_vectors: int  # f32[block] values concurrently live in the kernel
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Working set: live f32 vectors + params/key/offset + partial out."""
+        return self.live_vectors * self.block * 4 + 8 * 4 + 2 * 4 + 4 + 2 * 4
+
+    @property
+    def vmem_utilisation(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def alu_ops_per_path(self) -> float:
+        per_step = THREEFRY_OPS + BOXMULLER_OPS + STEP_OPS
+        return self.steps * per_step + 25  # payoff + reduction epilogue
+
+    @property
+    def hbm_bytes_per_path(self) -> float:
+        """O(1) HBM traffic per *block* (the in-kernel (Σ, Σ²) reduction);
+        amortised per path it is the 8-byte partial over the block."""
+        return 8.0 / self.block
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """ALU ops per HBM byte — astronomically compute-bound by design."""
+        return self.alu_ops_per_path / self.hbm_bytes_per_path
+
+    @property
+    def roofline_paths_per_sec(self) -> float:
+        """Compute-roofline throughput estimate (VPU-bound)."""
+        compute = VPU_OPS_PER_SEC / self.alu_ops_per_path
+        memory = HBM_BYTES_PER_SEC / self.hbm_bytes_per_path
+        return min(compute, memory)
+
+    @property
+    def compute_bound(self) -> bool:
+        return (VPU_OPS_PER_SEC / self.alu_ops_per_path) < (
+            HBM_BYTES_PER_SEC / self.hbm_bytes_per_path
+        )
+
+
+def profile(payoff: str, block: int = 4096, steps: int = 64) -> KernelProfile:
+    """Live-vector counts read off the kernel bodies in kernels/mc.py."""
+    live = {
+        # ctr, z, u0/u1 (transient), st, payoff, payoff^2
+        "european": 6,
+        # ctr, z, log_s, acc, exp(log_s), payoff (+transients)
+        "asian": 7,
+        # ctr, z, log_s, alive, exp(log_s), payoff (+transients)
+        "barrier": 7,
+    }[payoff]
+    eff_steps = 1 if payoff == "european" else steps
+    return KernelProfile(payoff, block, eff_steps, live)
+
+
+def report(block: int, steps: int) -> str:
+    lines = [
+        f"L1 kernel structural analysis (block={block}, steps={steps})",
+        f"{'payoff':>10} {'VMEM':>10} {'%VMEM':>7} {'ops/path':>9} "
+        f"{'AI (ops/B)':>11} {'roofline':>14} {'bound':>8}",
+    ]
+    for payoff in ("european", "asian", "barrier"):
+        p = profile(payoff, block, steps)
+        lines.append(
+            f"{payoff:>10} {p.vmem_bytes/1024:>8.0f}KiB {p.vmem_utilisation*100:>6.2f}% "
+            f"{p.alu_ops_per_path:>9.0f} {p.arithmetic_intensity:>11.2e} "
+            f"{p.roofline_paths_per_sec:>11.2e}/s "
+            f"{'compute' if p.compute_bound else 'memory':>8}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--block", type=int, default=4096)
+    ap.add_argument("--steps", type=int, default=64)
+    args = ap.parse_args()
+    print(report(args.block, args.steps))
+
+
+if __name__ == "__main__":
+    main()

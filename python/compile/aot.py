@@ -1,0 +1,117 @@
+"""AOT-lower every chunk variant to HLO *text* + a manifest for the rust side.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax>=0.5
+emits protos with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out ../artifacts`` (what ``make artifacts``
+does). Python never runs again after this: the rust binary loads
+``artifacts/manifest.json`` and the ``*.hlo.txt`` modules it lists.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import mc
+
+# The variant set the rust runtime expects. Chunk sizes are powers of two so
+# platforms can greedily cover any N; steps is fixed per path-dependent
+# variant (it is a static loop bound in the kernel).
+DEFAULT_VARIANTS = [
+    # (payoff, n, steps)
+    ("european", 4096, 1),
+    ("european", 16384, 1),
+    ("european", 65536, 1),
+    ("asian", 4096, 64),
+    ("asian", 16384, 64),
+    ("barrier", 4096, 64),
+    ("barrier", 16384, 64),
+]
+
+
+def variant_name(payoff, n, steps):
+    return f"mc_{payoff}_n{n}_s{steps}"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(payoff, n, steps, block=mc.DEFAULT_BLOCK):
+    fn = model.chunk_fn(payoff, n, steps, block)
+    args = model.example_args()
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build(out_dir, variants=None, block=mc.DEFAULT_BLOCK, quiet=False):
+    """Lower all variants into ``out_dir`` and write ``manifest.json``."""
+    variants = variants or DEFAULT_VARIANTS
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for payoff, n, steps in variants:
+        name = variant_name(payoff, n, steps)
+        text = lower_variant(payoff, n, steps, block)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "payoff": payoff,
+                "n": n,
+                "steps": steps,
+                "block": block,
+                "file": f"{name}.hlo.txt",
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                # Input signature, for the rust side to validate marshalling.
+                "inputs": [
+                    {"name": "params", "dtype": "f32", "shape": [8]},
+                    {"name": "key", "dtype": "u32", "shape": [2]},
+                    {"name": "offset", "dtype": "u32", "shape": [1]},
+                ],
+                "outputs": [
+                    {"name": "payoff_sum", "dtype": "f32", "shape": []},
+                    {"name": "payoff_sq_sum", "dtype": "f32", "shape": []},
+                ],
+            }
+        )
+        if not quiet:
+            print(f"  lowered {name}: {len(text)} chars")
+    manifest = {
+        "schema": 1,
+        "jax_version": jax.__version__,
+        "param_layout": ["s0", "strike", "rate", "sigma", "maturity", "barrier", "_r6", "_r7"],
+        "variants": entries,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not quiet:
+        print(f"wrote {mpath} ({len(entries)} variants)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true", help="smallest variant only (CI)")
+    args = ap.parse_args()
+    variants = [("european", 4096, 1)] if args.quick else None
+    build(args.out, variants)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""L1 Pallas kernels: Monte Carlo option-payoff simulation.
+
+One kernel per payoff family the Kaiserslautern benchmark covers:
+
+* ``european`` — terminal-value GBM, one normal per path;
+* ``asian``    — arithmetic-average path (fixing dates = ``steps``);
+* ``barrier``  — up-and-out call, knock-out monitored at each step.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the ``n``-path axis is
+tiled into ``block`` sized chunks via the Pallas grid + BlockSpec, so each
+block's working set (a handful of f32[block] vectors) sits comfortably in
+VMEM; randomness is generated in-lane with Threefry-2x32 (no memory traffic);
+each block reduces its payoffs to a single ``(sum, sum_sq)`` pair so HBM
+writeback is O(1) per block. The kernels are VPU-bound — there is no matmul,
+so the MXU is idle by construction and the roofline comparison in
+EXPERIMENTS.md §Perf is against the vector unit.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+
+Parameter vector layout (f32[8], shared with the rust coordinator —
+``rust/src/workload/option.rs`` must agree):
+
+    0: spot S0      1: strike K    2: risk-free r   3: volatility sigma
+    4: maturity T   5: barrier B   6: (reserved)    7: (reserved)
+
+Counter layout: path ``p`` of the overall task stream uses counters
+``(offset + p, step)`` under key ``(k0, k1)``; chunked execution advances
+``offset`` by the chunk size, so any partition of the path space yields the
+same multiset of samples.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import rng
+
+# Default number of paths simulated per Pallas block. 4096 f32 lanes x ~8 live
+# vectors = 128 KiB of VMEM — far below the ~16 MiB budget; chosen so the
+# threefry ALU chain, not memory, is the bottleneck.
+DEFAULT_BLOCK = 4096
+
+PAYOFFS = ("european", "asian", "barrier")
+
+
+def _lane_counters(block):
+    """Global path indices for the current block as uint32."""
+    base = (pl.program_id(0) * block).astype(jnp.uint32)
+    lanes = jax.lax.iota(jnp.uint32, block)
+    return base + lanes
+
+
+def _reduce_out(o_ref, payoff):
+    """Write this block's (sum, sum of squares) partial reduction."""
+    o_ref[0, 0] = jnp.sum(payoff)
+    o_ref[0, 1] = jnp.sum(payoff * payoff)
+
+
+def european_kernel(params_ref, key_ref, off_ref, o_ref, *, block):
+    """Terminal-value GBM European call: one normal per path."""
+    s0, k, r, sigma, t = (params_ref[i] for i in range(5))
+    k0, k1 = key_ref[0], key_ref[1]
+    ctr0 = off_ref[0] + _lane_counters(block)
+
+    z = rng.normal(k0, k1, ctr0, jnp.zeros_like(ctr0))
+    drift = (r - jnp.float32(0.5) * sigma * sigma) * t
+    st = s0 * jnp.exp(drift + sigma * jnp.sqrt(t) * z)
+    payoff = jnp.maximum(st - k, jnp.float32(0.0))
+    _reduce_out(o_ref, payoff)
+
+
+def asian_kernel(params_ref, key_ref, off_ref, o_ref, *, block, steps):
+    """Arithmetic-average Asian call over ``steps`` fixing dates."""
+    s0, k, r, sigma, t = (params_ref[i] for i in range(5))
+    k0, k1 = key_ref[0], key_ref[1]
+    ctr0 = off_ref[0] + _lane_counters(block)
+
+    dt = t / jnp.float32(steps)
+    drift = (r - jnp.float32(0.5) * sigma * sigma) * dt
+    vol = sigma * jnp.sqrt(dt)
+
+    def body(step, carry):
+        log_s, acc = carry
+        z = rng.normal(k0, k1, ctr0, jnp.full_like(ctr0, step.astype(jnp.uint32)))
+        log_s = log_s + drift + vol * z
+        return log_s, acc + jnp.exp(log_s)
+
+    log_s0 = jnp.log(s0) * jnp.ones((block,), jnp.float32)
+    _, acc = jax.lax.fori_loop(0, steps, body, (log_s0, jnp.zeros((block,), jnp.float32)))
+    avg = acc / jnp.float32(steps)
+    payoff = jnp.maximum(avg - k, jnp.float32(0.0))
+    _reduce_out(o_ref, payoff)
+
+
+def barrier_kernel(params_ref, key_ref, off_ref, o_ref, *, block, steps):
+    """Up-and-out barrier call, knock-out monitored at each of ``steps`` dates."""
+    s0, k, r, sigma, t, barrier = (params_ref[i] for i in range(6))
+    k0, k1 = key_ref[0], key_ref[1]
+    ctr0 = off_ref[0] + _lane_counters(block)
+
+    dt = t / jnp.float32(steps)
+    drift = (r - jnp.float32(0.5) * sigma * sigma) * dt
+    vol = sigma * jnp.sqrt(dt)
+
+    def body(step, carry):
+        log_s, alive = carry
+        z = rng.normal(k0, k1, ctr0, jnp.full_like(ctr0, step.astype(jnp.uint32)))
+        log_s = log_s + drift + vol * z
+        alive = alive & (jnp.exp(log_s) < barrier)
+        return log_s, alive
+
+    log_s0 = jnp.log(s0) * jnp.ones((block,), jnp.float32)
+    alive0 = jnp.ones((block,), jnp.bool_) & (s0 < barrier)
+    log_st, alive = jax.lax.fori_loop(0, steps, body, (log_s0, alive0))
+    st = jnp.exp(log_st)
+    payoff = jnp.where(alive, jnp.maximum(st - k, jnp.float32(0.0)), jnp.float32(0.0))
+    _reduce_out(o_ref, payoff)
+
+
+@functools.partial(jax.jit, static_argnames=("payoff", "n", "steps", "block"))
+def simulate_chunk(params, key, offset, *, payoff, n, steps=64, block=DEFAULT_BLOCK):
+    """Simulate ``n`` paths of ``payoff`` and return per-block partial sums.
+
+    Args:
+        params: f32[8] parameter vector (layout in the module docstring).
+        key:    u32[2] Threefry key (task id, seed).
+        offset: u32[1] starting path counter.
+        payoff: one of ``PAYOFFS``.
+        n:      number of paths; must be a multiple of ``block``.
+        steps:  fixing/monitoring dates for path-dependent payoffs.
+        block:  Pallas block size along the path axis.
+
+    Returns:
+        f32[n // block, 2] — per-block ``(sum, sum_sq)`` payoff reductions.
+    """
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    grid = n // block
+
+    if payoff == "european":
+        kern = functools.partial(european_kernel, block=block)
+    elif payoff == "asian":
+        kern = functools.partial(asian_kernel, block=block, steps=steps)
+    elif payoff == "barrier":
+        kern = functools.partial(barrier_kernel, block=block, steps=steps)
+    else:
+        raise ValueError(f"unknown payoff {payoff!r}")
+
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((8,), lambda i: (0,)),       # params: broadcast
+            pl.BlockSpec((2,), lambda i: (0,)),       # key: broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),       # offset: broadcast
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, 2), jnp.float32),
+        interpret=True,
+    )(params, key, offset)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for the Pallas kernels, plus closed-form Black-Scholes.
+
+``simulate_chunk_ref`` mirrors the counter layout of ``mc.simulate_chunk``
+exactly (path ``p`` uses counters ``(offset + p, step)``), so the Pallas
+kernels must match it bit-for-bit up to float-associativity in the block
+reductions. pytest enforces ``assert_allclose`` with tight tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import rng
+
+
+def _normals(key, offset, n, step):
+    ctr0 = jnp.asarray(offset[0], jnp.uint32) + jax.lax.iota(jnp.uint32, n)
+    ctr1 = jnp.full((n,), jnp.uint32(step))
+    return rng.normal(key[0], key[1], ctr0, ctr1)
+
+
+def european_paths(params, key, offset, n):
+    """Terminal spot payoffs for the European call. Returns f32[n]."""
+    s0, k, r, sigma, t = (params[i] for i in range(5))
+    z = _normals(key, offset, n, 0)
+    drift = (r - jnp.float32(0.5) * sigma * sigma) * t
+    st = s0 * jnp.exp(drift + sigma * jnp.sqrt(t) * z)
+    return jnp.maximum(st - k, jnp.float32(0.0))
+
+
+def asian_paths(params, key, offset, n, steps):
+    """Arithmetic-average Asian call payoffs. Returns f32[n]."""
+    s0, k, r, sigma, t = (params[i] for i in range(5))
+    dt = t / jnp.float32(steps)
+    drift = (r - jnp.float32(0.5) * sigma * sigma) * dt
+    vol = sigma * jnp.sqrt(dt)
+    log_s = jnp.log(s0) * jnp.ones((n,), jnp.float32)
+    acc = jnp.zeros((n,), jnp.float32)
+    for step in range(steps):
+        z = _normals(key, offset, n, step)
+        log_s = log_s + drift + vol * z
+        acc = acc + jnp.exp(log_s)
+    avg = acc / jnp.float32(steps)
+    return jnp.maximum(avg - k, jnp.float32(0.0))
+
+
+def barrier_paths(params, key, offset, n, steps):
+    """Up-and-out barrier call payoffs. Returns f32[n]."""
+    s0, k, r, sigma, t, barrier = (params[i] for i in range(6))
+    dt = t / jnp.float32(steps)
+    drift = (r - jnp.float32(0.5) * sigma * sigma) * dt
+    vol = sigma * jnp.sqrt(dt)
+    log_s = jnp.log(s0) * jnp.ones((n,), jnp.float32)
+    alive = jnp.ones((n,), jnp.bool_) & (s0 < barrier)
+    for step in range(steps):
+        z = _normals(key, offset, n, step)
+        log_s = log_s + drift + vol * z
+        alive = alive & (jnp.exp(log_s) < barrier)
+    st = jnp.exp(log_s)
+    return jnp.where(alive, jnp.maximum(st - k, jnp.float32(0.0)), jnp.float32(0.0))
+
+
+def simulate_chunk_ref(params, key, offset, *, payoff, n, steps=64, block=4096):
+    """Reference implementation of ``mc.simulate_chunk``: f32[n//block, 2]."""
+    if payoff == "european":
+        p = european_paths(params, key, offset, n)
+    elif payoff == "asian":
+        p = asian_paths(params, key, offset, n, steps)
+    elif payoff == "barrier":
+        p = barrier_paths(params, key, offset, n, steps)
+    else:
+        raise ValueError(f"unknown payoff {payoff!r}")
+    p = p.reshape(n // block, block)
+    return jnp.stack([jnp.sum(p, axis=1), jnp.sum(p * p, axis=1)], axis=1)
+
+
+# --- Closed forms -----------------------------------------------------------
+
+def _norm_cdf(x):
+    return jnp.float32(0.5) * (jnp.float32(1.0) + jax.lax.erf(x / jnp.sqrt(jnp.float32(2.0))))
+
+
+def black_scholes_call(s0, k, r, sigma, t):
+    """Closed-form Black-Scholes European call price (discounted)."""
+    s0, k, r, sigma, t = map(jnp.float32, (s0, k, r, sigma, t))
+    d1 = (jnp.log(s0 / k) + (r + 0.5 * sigma * sigma) * t) / (sigma * jnp.sqrt(t))
+    d2 = d1 - sigma * jnp.sqrt(t)
+    return s0 * _norm_cdf(d1) - k * jnp.exp(-r * t) * _norm_cdf(d2)
+
+
+def geometric_asian_call(s0, k, r, sigma, t, steps):
+    """Closed-form geometric-average Asian call (Kemna-Vorst, discrete fixings).
+
+    A sanity *lower bound* for the arithmetic Asian MC price (arithmetic
+    mean >= geometric mean => arithmetic Asian call >= geometric one).
+    """
+    s0, k, r, sigma, t = map(jnp.float32, (s0, k, r, sigma, t))
+    m = steps
+    dt = t / m
+    mu = (r - 0.5 * sigma * sigma) * dt * (m + 1) / 2.0
+    var = sigma * sigma * dt * (m + 1) * (2 * m + 1) / (6.0 * m)
+    sig_g = jnp.sqrt(var)
+    d1 = (jnp.log(s0 / k) + mu + var) / sig_g
+    d2 = d1 - sig_g
+    fwd = s0 * jnp.exp(mu + 0.5 * var)
+    return jnp.exp(-r * t) * (fwd * _norm_cdf(d1) - k * _norm_cdf(d2))

@@ -1,0 +1,86 @@
+"""Counter-based RNG primitives shared by the Pallas kernels and the ref oracle.
+
+The paper's Monte Carlo hot loop is dominated by random-number generation
+(§IV.A.1: "random generation accounting for the bulk of the computations").
+The FPGA designs it benchmarks pipeline Tausworthe/Mersenne generators; the
+TPU-shaped equivalent (DESIGN.md §Hardware-Adaptation) is a *counter-based*
+generator: Threefry-2x32, which is pure ALU work, needs no carried state, and
+vectorises across lanes.
+
+Everything here is plain ``jnp`` so the same code runs inside a Pallas kernel
+(interpret mode), in the pure-jnp reference oracle, and under jit.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Threefry-2x32 rotation schedule (Salmon et al., SC'11), 20 rounds.
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+# SKEIN key-schedule parity constant for the 32-bit variant. A *numpy* scalar
+# on purpose: a jax array created at import time would be closure-captured by
+# the Pallas kernels and rejected ("captures constants").
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def _rotl(x, d):
+    """Rotate the uint32 lanes of ``x`` left by the static amount ``d``."""
+    x = x.astype(jnp.uint32)
+    return (x << d) | (x >> (32 - d))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Threefry-2x32, 20 rounds. All args are uint32 arrays (broadcastable).
+
+    Returns a pair of uint32 arrays. Bit-compatible with
+    ``jax._src.prng.threefry_2x32`` (tested in ``python/tests/test_rng.py``).
+    """
+    k0 = jnp.asarray(k0, jnp.uint32)
+    k1 = jnp.asarray(k1, jnp.uint32)
+    x0 = jnp.asarray(x0, jnp.uint32)
+    x1 = jnp.asarray(x1, jnp.uint32)
+    ks = (k0, k1, k0 ^ k1 ^ _PARITY)
+
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for block in range(5):
+        for r in range(4):
+            x0 = x0 + x1
+            x1 = _rotl(x1, _ROTATIONS[(4 * block + r) % 8])
+            x1 = x1 ^ x0
+        # Key injection after every 4 rounds, with the round-block counter
+        # folded into the second word (Skein/Threefry schedule).
+        x0 = x0 + ks[(block + 1) % 3]
+        x1 = x1 + ks[(block + 2) % 3] + jnp.uint32(block + 1)
+    return x0, x1
+
+
+def uniforms(k0, k1, ctr0, ctr1):
+    """Two independent U(0,1] streams from one Threefry call.
+
+    Uses the top 24 bits of each output word so the result is exactly
+    representable in float32 and never 0 (offset by half an ulp).
+    """
+    r0, r1 = threefry2x32(k0, k1, ctr0, ctr1)
+    scale = jnp.float32(1.0 / (1 << 24))
+    u0 = (r0 >> 8).astype(jnp.float32) * scale + jnp.float32(0.5 / (1 << 24))
+    u1 = (r1 >> 8).astype(jnp.float32) * scale + jnp.float32(0.5 / (1 << 24))
+    return u0, u1
+
+
+def box_muller(u0, u1):
+    """Box-Muller transform: two U(0,1] streams -> two N(0,1) streams."""
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log(u0))
+    theta = jnp.float32(2.0 * jnp.pi) * u1
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def normal(k0, k1, ctr0, ctr1):
+    """One N(0,1) stream per (ctr0, ctr1) counter pair.
+
+    The second Box-Muller output is deliberately discarded: it keeps the
+    counter -> sample map bijective, which is what makes chunked execution
+    on the rust side order-independent.
+    """
+    u0, u1 = uniforms(k0, k1, ctr0, ctr1)
+    z0, _ = box_muller(u0, u1)
+    return z0

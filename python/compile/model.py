@@ -1,0 +1,65 @@
+"""L2: the JAX compute graph for one Monte Carlo pricing *chunk*.
+
+A chunk is the unit the rust runtime executes: a fixed number of paths ``n``
+of one payoff family, reduced to scalar ``(payoff_sum, payoff_sq_sum)``. The
+coordinator prices a task of arbitrary ``N`` by looping chunks with an
+advancing path-counter ``offset`` (the counter-based RNG makes the result
+independent of how the path space is partitioned).
+
+The chunk graph calls the L1 Pallas kernel (``kernels.mc.simulate_chunk``)
+and reduces the per-block partials; the whole thing lowers to ONE fused HLO
+module per (payoff, n, steps) variant — see ``aot.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mc
+
+
+def chunk_fn(payoff, n, steps=64, block=mc.DEFAULT_BLOCK):
+    """Build the chunk-pricing function for a variant.
+
+    Returns ``fn(params f32[8], key u32[2], offset u32[1]) ->
+    (sum f32[], sum_sq f32[])`` — payoffs are *undiscounted*; the rust
+    coordinator applies ``exp(-rT)`` (discounting there keeps the artifact
+    payoff-family-generic and matches how the paper's F3 framework treats
+    device results as raw statistics).
+    """
+
+    def fn(params, key, offset):
+        partials = mc.simulate_chunk(
+            params, key, offset, payoff=payoff, n=n, steps=steps, block=block
+        )
+        return jnp.sum(partials[:, 0]), jnp.sum(partials[:, 1])
+
+    return fn
+
+
+@functools.partial(jax.jit, static_argnames=("payoff", "n", "steps", "block"))
+def price_chunk(params, key, offset, *, payoff, n, steps=64, block=mc.DEFAULT_BLOCK):
+    """Convenience jitted entry point used by the python tests."""
+    return chunk_fn(payoff, n, steps, block)(params, key, offset)
+
+
+def mc_estimate(total, total_sq, n, r, t):
+    """Combine chunk statistics into a discounted price and std error.
+
+    Mirrors ``rust/src/pricing/mc.rs::combine`` — tested for agreement.
+    """
+    mean = total / n
+    var = max(total_sq / n - mean * mean, 0.0)
+    disc = float(jnp.exp(-jnp.float32(r) * jnp.float32(t)))
+    price = disc * mean
+    stderr = disc * (var / n) ** 0.5
+    return price, stderr
+
+
+def example_args(n=None):
+    """Example (params, key, offset) for lowering: shapes are what matter."""
+    params = jnp.array([100.0, 105.0, 0.05, 0.2, 1.0, 150.0, 0.0, 0.0], jnp.float32)
+    key = jnp.array([7, 42], jnp.uint32)
+    offset = jnp.array([0], jnp.uint32)
+    return params, key, offset

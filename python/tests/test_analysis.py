@@ -1,0 +1,60 @@
+"""Structural-analysis invariants: the kernel design goals of DESIGN.md
+§Hardware-Adaptation, checked as numbers rather than prose."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import analysis
+
+
+@pytest.mark.parametrize("payoff", ["european", "asian", "barrier"])
+def test_vmem_working_set_is_small(payoff):
+    p = analysis.profile(payoff, block=4096, steps=512)
+    # Design goal: block working set well under 10% of VMEM so double
+    # buffering and multiple concurrent blocks are trivially possible.
+    assert p.vmem_utilisation < 0.10, p.vmem_bytes
+
+
+@pytest.mark.parametrize("payoff", ["european", "asian", "barrier"])
+def test_kernels_are_compute_bound(payoff):
+    p = analysis.profile(payoff)
+    assert p.compute_bound
+    # O(1) HBM traffic per block => enormous arithmetic intensity.
+    assert p.arithmetic_intensity > 1e4
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    log2_block=st.integers(7, 14),
+    steps=st.integers(1, 1024),
+    payoff=st.sampled_from(["european", "asian", "barrier"]),
+)
+def test_block_scaling_invariants(log2_block, steps, payoff):
+    block = 1 << log2_block
+    p = analysis.profile(payoff, block=block, steps=steps)
+    # VMEM grows linearly with block; stays within budget up to 16k paths.
+    assert p.vmem_bytes < analysis.VMEM_BYTES
+    # HBM per path shrinks with block (better amortisation).
+    bigger = analysis.profile(payoff, block=block * 2, steps=steps)
+    assert bigger.hbm_bytes_per_path < p.hbm_bytes_per_path
+
+
+def test_european_is_single_step():
+    p = analysis.profile("european", steps=512)
+    assert p.steps == 1  # terminal-value simulation ignores the steps knob
+
+
+def test_ops_match_rust_flops_model():
+    """The rust coordinator's flops_per_path (workload/option.rs) and this
+    analysis must agree on the step cost, or the simulated platform
+    throughputs drift away from the kernel the native platform runs."""
+    p = analysis.profile("asian", steps=64)
+    # rust: steps * (130 + 12) + 25
+    rust_flops = 64 * (130 + 12) + 25
+    assert abs(p.alu_ops_per_path - rust_flops) / rust_flops < 0.10
+
+
+def test_report_renders():
+    out = analysis.report(4096, 64)
+    assert "european" in out and "barrier" in out
+    assert "compute" in out

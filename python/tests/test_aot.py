@@ -1,0 +1,67 @@
+"""AOT pipeline tests: lowering, manifest schema, HLO text sanity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), variants=[("european", 4096, 1), ("asian", 4096, 8)], quiet=True)
+    return str(out), manifest
+
+
+def test_manifest_written(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["schema"] == 1
+    assert len(on_disk["variants"]) == 2
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, manifest = built
+    for v in manifest["variants"]:
+        text = open(os.path.join(out, v["file"])).read()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # The signature the rust loader marshals against.
+        assert "f32[8]" in text and "u32[2]" in text and "u32[1]" in text
+        assert "(f32[], f32[])" in text
+
+
+def test_manifest_signature_schema(built):
+    _, manifest = built
+    for v in manifest["variants"]:
+        assert [i["dtype"] for i in v["inputs"]] == ["f32", "u32", "u32"]
+        assert [i["shape"] for i in v["inputs"]] == [[8], [2], [1]]
+        assert [o["shape"] for o in v["outputs"]] == [[], []]
+        assert v["n"] % v["block"] == 0
+
+
+def test_sha256_matches_file(built):
+    import hashlib
+
+    out, manifest = built
+    for v in manifest["variants"]:
+        text = open(os.path.join(out, v["file"])).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == v["sha256"]
+
+
+def test_variant_names_unique():
+    names = [aot.variant_name(*v) for v in aot.DEFAULT_VARIANTS]
+    assert len(names) == len(set(names))
+
+
+def test_lowered_hlo_has_no_custom_calls(built):
+    """interpret=True must fully inline the kernel: a Mosaic custom-call here
+    would make the artifact unloadable on the CPU PJRT client."""
+    out, manifest = built
+    for v in manifest["variants"]:
+        text = open(os.path.join(out, v["file"])).read()
+        assert "custom-call" not in text, f"{v['name']} contains a custom-call"

@@ -1,0 +1,152 @@
+"""Pallas kernel vs pure-jnp oracle: the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes (n, block), payoff families and market parameters;
+every case asserts ``assert_allclose`` against ``ref.simulate_chunk_ref``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mc, ref
+
+
+def make_params(s0, k, r, sigma, t, barrier=150.0):
+    return jnp.array([s0, k, r, sigma, t, barrier, 0.0, 0.0], jnp.float32)
+
+
+def make_key(a=7, b=42):
+    return jnp.array([a, b], jnp.uint32)
+
+
+def make_offset(o=0):
+    return jnp.array([o], jnp.uint32)
+
+
+DEFAULT = dict(params=make_params(100.0, 105.0, 0.05, 0.2, 1.0), key=make_key(), offset=make_offset())
+
+
+def run_both(payoff, n, steps=8, block=256, **kw):
+    a = dict(DEFAULT)
+    a.update(kw)
+    out_k = mc.simulate_chunk(a["params"], a["key"], a["offset"], payoff=payoff, n=n, steps=steps, block=block)
+    out_r = ref.simulate_chunk_ref(a["params"], a["key"], a["offset"], payoff=payoff, n=n, steps=steps, block=block)
+    return np.asarray(out_k), np.asarray(out_r)
+
+
+@pytest.mark.parametrize("payoff", mc.PAYOFFS)
+def test_kernel_matches_ref_basic(payoff):
+    out_k, out_r = run_both(payoff, n=1024, steps=8, block=256)
+    assert out_k.shape == (4, 2)
+    np.testing.assert_allclose(out_k, out_r, rtol=2e-5)
+
+
+@pytest.mark.parametrize("payoff", mc.PAYOFFS)
+@pytest.mark.parametrize("n,block", [(256, 256), (512, 128), (2048, 512), (4096, 4096)])
+def test_kernel_shapes(payoff, n, block):
+    out_k, out_r = run_both(payoff, n=n, steps=4, block=block)
+    assert out_k.shape == (n // block, 2)
+    np.testing.assert_allclose(out_k, out_r, rtol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    payoff=st.sampled_from(mc.PAYOFFS),
+    s0=st.floats(50.0, 200.0),
+    k=st.floats(50.0, 200.0),
+    r=st.floats(0.0, 0.1),
+    sigma=st.floats(0.05, 0.6),
+    t=st.floats(0.1, 3.0),
+    barrier_mult=st.floats(1.1, 2.5),
+    key0=st.integers(0, 2**32 - 1),
+    offset=st.integers(0, 2**24),
+)
+def test_kernel_matches_ref_param_sweep(payoff, s0, k, r, sigma, t, barrier_mult, key0, offset):
+    params = make_params(s0, k, r, sigma, t, barrier=s0 * barrier_mult)
+    out_k, out_r = run_both(
+        payoff, n=512, steps=6, block=128,
+        params=params, key=make_key(key0, 1), offset=make_offset(offset),
+    )
+    np.testing.assert_allclose(out_k, out_r, rtol=5e-5, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    log2_block=st.integers(5, 10),
+    grid=st.integers(1, 6),
+    payoff=st.sampled_from(mc.PAYOFFS),
+)
+def test_kernel_block_shape_sweep(log2_block, grid, payoff):
+    """Blocking is purely an execution schedule: results identical across it."""
+    block = 1 << log2_block
+    n = block * grid
+    out_k, out_r = run_both(payoff, n=n, steps=4, block=block)
+    np.testing.assert_allclose(out_k, out_r, rtol=2e-5)
+
+
+def test_block_partition_invariance():
+    """Total (sum, sum_sq) must not depend on the block size at all."""
+    totals = []
+    for block in (128, 256, 1024):
+        out_k, _ = run_both("european", n=2048, block=block)
+        totals.append(out_k.sum(axis=0))
+    np.testing.assert_allclose(totals[0], totals[1], rtol=1e-5)
+    np.testing.assert_allclose(totals[0], totals[2], rtol=1e-5)
+
+
+def test_chunk_offset_composition():
+    """Two n/2 chunks with advanced offset == one n chunk (path-space split)."""
+    a = dict(DEFAULT)
+    whole, _ = run_both("european", n=2048, block=256)
+    lo = mc.simulate_chunk(a["params"], a["key"], make_offset(0), payoff="european", n=1024, block=256)
+    hi = mc.simulate_chunk(a["params"], a["key"], make_offset(1024), payoff="european", n=1024, block=256)
+    np.testing.assert_allclose(
+        whole.sum(axis=0),
+        np.asarray(lo).sum(axis=0) + np.asarray(hi).sum(axis=0),
+        rtol=1e-5,
+    )
+
+
+def test_kernel_rejects_bad_n():
+    a = DEFAULT
+    with pytest.raises(ValueError, match="multiple of block"):
+        mc.simulate_chunk(a["params"], a["key"], a["offset"], payoff="european", n=1000, block=256)
+
+
+def test_kernel_rejects_bad_payoff():
+    a = DEFAULT
+    with pytest.raises(ValueError, match="unknown payoff"):
+        mc.simulate_chunk(a["params"], a["key"], a["offset"], payoff="digital", n=256, block=256)
+
+
+def test_output_dtype_is_f32():
+    out_k, _ = run_both("european", n=256, block=256)
+    assert out_k.dtype == np.float32
+
+
+def test_barrier_knockout_monotone_in_barrier():
+    """Higher barrier => fewer knock-outs => payoff sum cannot decrease."""
+    sums = []
+    for b in (110.0, 130.0, 1e6):
+        params = make_params(100.0, 105.0, 0.05, 0.2, 1.0, barrier=b)
+        out_k, _ = run_both("barrier", n=4096, steps=8, block=512, params=params)
+        sums.append(out_k[:, 0].sum())
+    assert sums[0] <= sums[1] <= sums[2]
+
+
+def test_barrier_at_infinity_equals_terminal_path():
+    """With an unreachable barrier, the payoff reduces to a European call on
+    the *path-discretised* terminal spot (same steps/counters)."""
+    params = make_params(100.0, 105.0, 0.05, 0.2, 1.0, barrier=1e7)
+    out_b, _ = run_both("barrier", n=2048, steps=8, block=256, params=params)
+    p = ref.barrier_paths(params, make_key(), make_offset(), 2048, 8)
+    expected = np.asarray(p).reshape(8, 256).sum(axis=1)
+    np.testing.assert_allclose(out_b[:, 0], expected, rtol=2e-5)
+
+
+def test_asian_payoff_below_european_for_same_strike():
+    """Averaging reduces volatility: Asian call <= European call (in sum)."""
+    out_a, _ = run_both("asian", n=8192, steps=16, block=1024)
+    out_e, _ = run_both("european", n=8192, block=1024)
+    assert out_a[:, 0].sum() < out_e[:, 0].sum()

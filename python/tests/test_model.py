@@ -1,0 +1,75 @@
+"""L2 model tests: chunk pricing statistics vs closed forms."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def price(payoff, params_list, n=1 << 16, steps=32, key=(7, 42)):
+    params = jnp.array(list(params_list) + [0.0] * (8 - len(params_list)), jnp.float32)
+    key = jnp.array(key, jnp.uint32)
+    off = jnp.array([0], jnp.uint32)
+    s, s2 = model.price_chunk(params, key, off, payoff=payoff, n=n, steps=steps)
+    r, t = float(params[2]), float(params[4])
+    return model.mc_estimate(float(s), float(s2), n, r, t)
+
+
+def test_european_matches_black_scholes():
+    p, se = price("european", [100.0, 105.0, 0.05, 0.2, 1.0])
+    bs = float(ref.black_scholes_call(100.0, 105.0, 0.05, 0.2, 1.0))
+    assert abs(p - bs) < 4 * se + 0.03, (p, se, bs)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s0=st.floats(80.0, 120.0),
+    k_rel=st.floats(0.8, 1.2),
+    sigma=st.floats(0.1, 0.4),
+    t=st.floats(0.25, 2.0),
+)
+def test_european_matches_black_scholes_sweep(s0, k_rel, sigma, t):
+    k = s0 * k_rel
+    p, se = price("european", [s0, k, 0.03, sigma, t], n=1 << 15)
+    bs = float(ref.black_scholes_call(s0, k, 0.03, sigma, t))
+    assert abs(p - bs) < 5 * se + 0.05, (p, se, bs)
+
+
+def test_asian_bracketed_by_geometric_and_european():
+    args = [100.0, 100.0, 0.05, 0.25, 1.0]
+    p, se = price("asian", args, steps=32)
+    geo = float(ref.geometric_asian_call(*args, steps=32))
+    bs = float(ref.black_scholes_call(*args))
+    assert geo - 4 * se - 0.05 < p < bs + 4 * se, (geo, p, bs)
+
+
+def test_barrier_below_european():
+    p_b, se = price("barrier", [100.0, 105.0, 0.05, 0.25, 1.0, 130.0], steps=32)
+    bs = float(ref.black_scholes_call(100.0, 105.0, 0.05, 0.25, 1.0))
+    assert p_b < bs
+    assert p_b >= 0.0
+
+
+def test_stderr_shrinks_with_n():
+    _, se_small = price("european", [100.0, 105.0, 0.05, 0.2, 1.0], n=1 << 13)
+    _, se_big = price("european", [100.0, 105.0, 0.05, 0.2, 1.0], n=1 << 17)
+    # sqrt(16) = 4x reduction expected; allow slack for sampling noise.
+    assert se_big < se_small / 2.5
+
+
+def test_mc_estimate_agrees_with_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.exponential(2.0, size=10_000).astype(np.float32)
+    p, se = model.mc_estimate(float(x.sum()), float((x * x).sum()), x.size, 0.0, 1.0)
+    assert abs(p - x.mean()) < 1e-4
+    assert abs(se - x.std() / np.sqrt(x.size)) < 1e-4
+
+
+def test_seed_changes_estimate_but_not_beyond_stderr():
+    p1, se1 = price("european", [100.0, 105.0, 0.05, 0.2, 1.0], key=(7, 1))
+    p2, se2 = price("european", [100.0, 105.0, 0.05, 0.2, 1.0], key=(7, 2))
+    assert p1 != p2  # different seeds genuinely resample
+    assert abs(p1 - p2) < 6 * (se1 + se2)

@@ -1,0 +1,46 @@
+//! Shared scaffolding for the bench binaries (`harness = false`; criterion
+//! is unavailable offline). Each bench regenerates one paper table/figure
+//! and reports wall-clock timings; outputs also land in `results/`.
+
+use std::time::Instant;
+
+/// Run `f`, print and return its duration in seconds.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    let secs = start.elapsed().as_secs_f64();
+    println!("[bench] {label}: {secs:.2}s");
+    (out, secs)
+}
+
+/// Write an artifact into `results/` (best-effort; benches still print to
+/// stdout).
+pub fn save(name: &str, contents: &str) {
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/{name}");
+    match std::fs::write(&path, contents) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
+/// Median-of-runs micro timing for the perf_* benches.
+pub fn measure(label: &str, runs: usize, mut f: impl FnMut()) -> f64 {
+    assert!(runs > 0);
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    println!(
+        "[perf] {label}: median {:.4}s (min {:.4}s, max {:.4}s, {} runs)",
+        median,
+        times[0],
+        times[times.len() - 1],
+        runs
+    );
+    median
+}

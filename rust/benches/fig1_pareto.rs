@@ -1,0 +1,40 @@
+//! Regenerates **Figure 1**: the latency-vs-cost Pareto trade-off for the
+//! 128-task workload on the 16-platform heterogeneous cluster.
+
+mod common;
+
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::report::{self, Experiment};
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sweep.levels = 9;
+    let (e, _) = common::timed("build paper experiment", || {
+        Experiment::build(cfg).expect("experiment")
+    });
+    let ((plot, curve), _) = common::timed("fig1 sweep (9 MILP solves)", || {
+        report::fig1(&e).expect("fig1")
+    });
+    let rendered = plot.render();
+    println!("\n{rendered}");
+    common::save("fig1.txt", &rendered);
+    common::save("fig1.csv", &plot.to_csv());
+
+    // The trade-off must be real: meaningfully cheaper at the cheap end,
+    // meaningfully faster at the fast end.
+    let front = curve.pareto_front();
+    assert!(front.len() >= 3, "degenerate front: {} points", front.len());
+    let cheap = front.first().unwrap();
+    let fast = front.last().unwrap();
+    println!(
+        "front: ${:.2}/{:.0}s ... ${:.2}/{:.0}s ({} points)",
+        cheap.cost, cheap.latency, fast.cost, fast.latency, front.len()
+    );
+    assert!(fast.cost > 1.5 * cheap.cost, "cost range too flat");
+    assert!(cheap.latency > 1.5 * fast.latency, "latency range too flat");
+    // Monotone front.
+    for w in front.windows(2) {
+        assert!(w[0].cost <= w[1].cost && w[0].latency >= w[1].latency);
+    }
+    println!("fig1 bench OK");
+}

@@ -1,0 +1,46 @@
+//! Regenerates **Figure 2**: latency-model prediction error vs problem
+//! scale. The paper's claim: relative error within ~10% for problems many
+//! times the size of the benchmarking subset.
+
+mod common;
+
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::report::{self, Experiment};
+use cloudshapes::util::stats::percentile;
+
+fn main() {
+    let (e, _) = common::timed("build paper experiment", || {
+        Experiment::build(ExperimentConfig::default()).expect("experiment")
+    });
+    let multiples = [1.0, 2.0, 5.0, 10.0, 20.0, 50.0];
+    let ((plot, points), _) =
+        common::timed("fig2 (predict vs fresh executions)", || report::fig2(&e, &multiples));
+    let rendered = plot.render();
+    println!("\n{rendered}");
+    common::save("fig2.txt", &rendered);
+    common::save("fig2.csv", &plot.to_csv());
+
+    // Error statistics per scale multiple.
+    println!("{:>8} {:>8} {:>10} {:>10}", "scale", "points", "median", "p90");
+    for m in multiples {
+        let errs: Vec<f64> = points
+            .iter()
+            .filter(|p| (p.scale - m).abs() < 1e-9)
+            .map(|p| p.rel_error)
+            .collect();
+        if errs.is_empty() {
+            continue;
+        }
+        println!(
+            "{m:>8.0} {:>8} {:>9.1}% {:>9.1}%",
+            errs.len(),
+            percentile(&errs, 50.0) * 100.0,
+            percentile(&errs, 90.0) * 100.0
+        );
+    }
+    let all: Vec<f64> = points.iter().map(|p| p.rel_error).collect();
+    let median = percentile(&all, 50.0);
+    println!("overall median error: {:.1}% (paper: within 10%)", median * 100.0);
+    assert!(median < 0.10, "median prediction error {median}");
+    println!("fig2 bench OK");
+}

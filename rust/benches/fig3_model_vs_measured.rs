@@ -1,0 +1,51 @@
+//! Regenerates **Figure 3**: partitioner model predictions vs measured
+//! execution — every Pareto point of both partitioners is actually run on
+//! the (simulated) cluster and compared with its model prediction. Paper:
+//! curves close enough to plan with; worst outlier ~12% fast / 7% cheap.
+
+mod common;
+
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::report::{self, Experiment};
+use cloudshapes::util::stats::percentile;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sweep.levels = 7;
+    let (e, _) = common::timed("build paper experiment", || {
+        Experiment::build(cfg).expect("experiment")
+    });
+    let ((plot, points), _) = common::timed("fig3 (sweep both + execute every point)", || {
+        report::fig3(&e).expect("fig3")
+    });
+    let rendered = plot.render();
+    println!("\n{rendered}");
+    common::save("fig3.txt", &rendered);
+    common::save("fig3.csv", &report::fig3_csv(&points));
+
+    println!(
+        "{:>10} {:>12} {:>14} {:>14} {:>9}",
+        "partnr", "budget", "model (s/$)", "measured (s/$)", "lat err"
+    );
+    let mut errs = Vec::new();
+    for p in &points {
+        let err = (p.measured_latency - p.model_latency) / p.model_latency;
+        errs.push(err.abs());
+        println!(
+            "{:>10} {:>12} {:>7.0}/{:<6.2} {:>7.0}/{:<6.2} {:>8.1}%",
+            p.partitioner,
+            p.budget.map(|b| format!("{b:.2}")).unwrap_or_else(|| "uncon".into()),
+            p.model_latency,
+            p.model_cost,
+            p.measured_latency,
+            p.measured_cost,
+            err * 100.0
+        );
+    }
+    let median = percentile(&errs, 50.0);
+    let worst = percentile(&errs, 100.0);
+    println!("latency prediction error: median {:.1}%, worst {:.1}%", median * 100.0, worst * 100.0);
+    assert!(median < 0.10, "median model-vs-measured error {median}");
+    assert!(worst < 0.30, "worst model-vs-measured error {worst}");
+    println!("fig3 bench OK");
+}

@@ -1,0 +1,61 @@
+//! Perf: cluster executor + benchmarker throughput (virtual-clock dispatch),
+//! and the native-mirror Monte Carlo kernel's paths/second.
+
+mod common;
+
+use cloudshapes::coordinator::executor::{execute, ExecutorConfig};
+use cloudshapes::coordinator::{benchmark, BenchmarkConfig, HeuristicPartitioner, ModelSet};
+use cloudshapes::platforms::spec::paper_cluster;
+use cloudshapes::platforms::{Cluster, SimConfig};
+use cloudshapes::pricing::mc;
+use cloudshapes::workload::{generate, GeneratorConfig, Payoff};
+
+fn main() {
+    let specs = paper_cluster();
+    let cfg = SimConfig { stats_cap: 2048, ..SimConfig::default() };
+    let cluster = Cluster::simulated(&specs, &cfg, 42);
+    let workload = generate(&GeneratorConfig::default());
+    let models = ModelSet::from_specs(&specs, &workload);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+
+    println!("== perf: executor (16 platforms x 128 tasks, virtual clock) ==");
+    let med = common::measure("execute full allocation", 5, || {
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        assert_eq!(rep.failures, 0);
+    });
+    let slices: usize = (0..workload.len())
+        .map(|j| (0..cluster.len()).filter(|&i| alloc.get(i, j) > 1e-6).count())
+        .sum();
+    println!("        -> {slices} slices, {:.0} slices/s", slices as f64 / med);
+
+    println!("\n== perf: benchmarker (16x128 ladder) ==");
+    common::measure("benchmark full cluster", 3, || {
+        benchmark(&cluster, &workload, &BenchmarkConfig::default());
+    });
+
+    println!("\n== perf: native Threefry MC mirror ==");
+    let task = workload
+        .tasks
+        .iter()
+        .find(|t| t.payoff == Payoff::European)
+        .expect("european task")
+        .clone();
+    let n = 1 << 20;
+    let med = common::measure(&format!("simulate {n} european paths"), 5, || {
+        mc::simulate(&task, 1, 0, n);
+    });
+    println!("        -> {:.1} Mpaths/s", n as f64 / med / 1e6);
+
+    let mut asian = task.clone();
+    asian.payoff = Payoff::Asian;
+    asian.steps = 64;
+    let n = 1 << 14;
+    let med = common::measure(&format!("simulate {n} asian-64 paths"), 5, || {
+        mc::simulate(&asian, 1, 0, n);
+    });
+    println!(
+        "        -> {:.1} Mpath-steps/s",
+        n as f64 * 64.0 / med / 1e6
+    );
+    println!("perf_executor bench OK");
+}

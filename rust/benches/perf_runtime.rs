@@ -1,0 +1,69 @@
+//! Perf: the PJRT request path — compile time per variant, chunk execution
+//! latency, and end-to-end pricing throughput (paths/second) per payoff
+//! family. This is the L1/L2 hot path as seen from rust; the structural
+//! VMEM/roofline analysis is in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::path::PathBuf;
+
+use cloudshapes::runtime::EngineHandle;
+use cloudshapes::workload::option::{OptionTask, Payoff};
+
+fn task(payoff: Payoff) -> OptionTask {
+    OptionTask {
+        id: 9,
+        payoff,
+        spot: 100.0,
+        strike: 105.0,
+        rate: 0.05,
+        sigma: 0.2,
+        maturity: 1.0,
+        barrier: 140.0,
+        steps: 64,
+        target_accuracy: 0.01,
+        n_sims: 1 << 20,
+    }
+}
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match EngineHandle::spawn(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("perf_runtime skipped: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    println!("platform: {}", engine.platform_name());
+
+    println!("\n== compile (all variants) ==");
+    common::measure("warmup/compile", 1, || engine.warmup().unwrap());
+
+    println!("\n== chunk pricing throughput ==");
+    for (payoff, n) in [
+        (Payoff::European, 1u64 << 20),
+        (Payoff::Asian, 1 << 16),
+        (Payoff::Barrier, 1 << 16),
+    ] {
+        let t = task(payoff);
+        let med = common::measure(&format!("{} x{}", payoff.name(), n), 5, || {
+            let stats = engine.price(&t, n, 3).unwrap();
+            assert!(stats.n >= n);
+        });
+        let steps = if payoff == Payoff::European { 1 } else { 64 };
+        println!(
+            "        -> {:.2} Mpaths/s ({:.1} Mpath-steps/s)",
+            n as f64 / med / 1e6,
+            n as f64 * steps as f64 / med / 1e6
+        );
+    }
+
+    println!("\n== single smallest-chunk latency (dispatch overhead) ==");
+    let t = task(Payoff::European);
+    let med = common::measure("price 1 path (forces 4096-chunk)", 10, || {
+        engine.price(&t, 1, 5).unwrap();
+    });
+    println!("        -> {:.3} ms/dispatch", med * 1e3);
+    println!("perf_runtime bench OK");
+}

@@ -1,0 +1,71 @@
+//! Perf: the MILP stack (simplex node LPs, full partitioner solves) — the
+//! L3 hot path that dominates Pareto-sweep wall-clock. Baselines + targets
+//! live in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use cloudshapes::coordinator::partitioner::{MilpConfig, MilpPartitioner};
+use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet, Partitioner};
+use cloudshapes::milp::lp::{Cmp, Problem};
+use cloudshapes::milp::simplex;
+use cloudshapes::platforms::spec::paper_cluster;
+use cloudshapes::util::rng::Rng;
+use cloudshapes::workload::{generate, GeneratorConfig};
+
+fn paper_models() -> ModelSet {
+    let specs = paper_cluster();
+    let w = generate(&GeneratorConfig::default());
+    ModelSet::from_specs(&specs, &w)
+}
+
+/// A transportation LP shaped like the reduced partitioning node LP.
+fn node_shaped_lp(mu: usize, tau: usize, seed: u64) -> Problem {
+    let mut rng = Rng::new(seed);
+    let mut p = Problem::new();
+    let vars: Vec<_> = (0..mu * tau)
+        .map(|k| p.cont(&format!("a{k}"), 0.0, 1.0))
+        .collect();
+    let f = p.cont("f", 0.0, f64::INFINITY);
+    for j in 0..tau {
+        let terms: Vec<_> = (0..mu).map(|i| (vars[i * tau + j], 1.0)).collect();
+        p.constrain(terms, Cmp::Eq, 1.0);
+    }
+    for i in 0..mu {
+        let mut terms: Vec<_> = (0..tau)
+            .map(|j| (vars[i * tau + j], rng.range_f64(1.0, 100.0)))
+            .collect();
+        terms.push((f, -1.0));
+        p.constrain(terms, Cmp::Le, 0.0);
+    }
+    p.minimize(vec![(f, 1.0)]);
+    p
+}
+
+fn main() {
+    println!("== perf: simplex ==");
+    for (mu, tau) in [(4, 16), (8, 64), (16, 128)] {
+        let lp = node_shaped_lp(mu, tau, 7);
+        common::measure(&format!("simplex {mu}x{tau} node LP"), 5, || {
+            let sol = simplex::solve(&lp);
+            assert_eq!(sol.status, cloudshapes::milp::LpStatus::Optimal);
+        });
+    }
+
+    println!("\n== perf: partitioners at paper scale (16x128) ==");
+    let models = paper_models();
+    common::measure("heuristic partition (budgeted sweep)", 5, || {
+        let h = HeuristicPartitioner::default();
+        h.partition(&models, Some(8.0)).unwrap();
+    });
+    for nodes in [1usize, 50, 200] {
+        let cfg = MilpConfig { max_nodes: nodes, time_limit_secs: 120.0, ..Default::default() };
+        let p = MilpPartitioner::new(cfg);
+        let mut makespan = 0.0;
+        let med = common::measure(&format!("milp solve ({nodes} nodes budget)"), 3, || {
+            let out = p.solve(&models, Some(8.0)).unwrap();
+            makespan = out.makespan;
+        });
+        println!("        -> makespan {makespan:.0}s at {med:.2}s solve time");
+    }
+    println!("perf_solver bench OK");
+}

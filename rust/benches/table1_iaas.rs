@@ -1,0 +1,21 @@
+//! Regenerates **Table I**: comparison of IaaS offerings (provider, instance,
+//! time quantum, peak performance, rate). Static published data — the bench
+//! verifies the embedded spec DB renders the paper's rows.
+
+mod common;
+
+use cloudshapes::report;
+
+fn main() {
+    let (table, _) = common::timed("table1", report::table1);
+    let rendered = table.render();
+    println!("\n{rendered}");
+    common::save("table1.txt", &rendered);
+    common::save("table1.csv", &table.to_csv());
+
+    // Paper row spot-checks.
+    for needle in ["A4", "n1-highcpu-8", "c3.4xlarge", "g2.2xlarge", "0.650", "0.352"] {
+        assert!(rendered.contains(needle), "missing {needle}");
+    }
+    println!("table1 bench OK");
+}

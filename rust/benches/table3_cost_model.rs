@@ -1,0 +1,33 @@
+//! Regenerates **Table III**: the Uptime-Institute-style TCO model applied
+//! to hypothetical FPGA/GPU/CPU IaaS offerings — calculated device rates vs
+//! the observed April-2015 market rates.
+
+mod common;
+
+use cloudshapes::models::tco::{self, DatacentreModel};
+use cloudshapes::report;
+
+fn main() {
+    let (table, _) = common::timed("table3", report::table3);
+    let rendered = table.render();
+    println!("\n{rendered}");
+    common::save("table3.txt", &rendered);
+    common::save("table3.csv", &table.to_csv());
+
+    // The paper's calculated rates, to the cent.
+    let dc = DatacentreModel::default();
+    let checks = [
+        ("FPGA", tco::table3::FPGA.device_base_rate(&dc), tco::table3::CALCULATED_FPGA),
+        ("GPU", tco::table3::GPU.device_base_rate(&dc), tco::table3::CALCULATED_GPU),
+        ("CPU", tco::table3::CPU.device_base_rate(&dc), tco::table3::CALCULATED_CPU),
+    ];
+    println!("{:>6} {:>12} {:>10}", "device", "calculated", "paper");
+    for (name, got, want) in checks {
+        println!("{name:>6} {got:>12.4} {want:>10.2}");
+        assert!((got - want).abs() < 0.005, "{name}: {got} vs paper {want}");
+    }
+    // Calculated < observed by a few percent (§IV.C.1).
+    assert!(tco::table3::GPU.device_base_rate(&dc) < tco::table3::OBSERVED_GPU);
+    assert!(tco::table3::CPU.device_base_rate(&dc) < tco::table3::OBSERVED_CPU);
+    println!("table3 bench OK");
+}

@@ -1,0 +1,49 @@
+//! Regenerates **Table IV**: latency-cost trade-off, heuristic vs ILP, at
+//! the cheapest (C_L), median (C_k) and fastest (C_U) cost levels — the
+//! paper's headline comparison (heuristic/ILP ratios up to 1.57× cost and
+//! 2.11× latency; never below 1.0).
+
+mod common;
+
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::report::{self, Experiment};
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let (e, _) = common::timed("build paper experiment", || {
+        Experiment::build(cfg.clone()).expect("experiment")
+    });
+    let (rows, _) = common::timed("table4 (heuristic + 2 MILP solves)", || {
+        report::table4_rows(e.models(), &cfg.milp).expect("table4")
+    });
+    let table = report::table4(e.models(), &cfg.milp).expect("render");
+    let rendered = table.render();
+    println!("\n{rendered}");
+    common::save("table4.txt", &rendered);
+    common::save("table4.csv", &table.to_csv());
+
+    println!("paper shape checks:");
+    // C_L: both approaches identical (all work on the cheapest platform).
+    assert!((rows[0].heuristic_latency - rows[0].milp_latency).abs() < 1e-9);
+    assert!((rows[0].heuristic_cost - rows[0].milp_cost).abs() < 1e-9);
+    println!("  C_L identical: OK");
+    // ILP never worse than the heuristic at any level.
+    for r in &rows {
+        assert!(
+            r.milp_latency <= r.heuristic_latency * 1.001,
+            "{}: milp {} vs heuristic {}",
+            r.level,
+            r.milp_latency,
+            r.heuristic_latency
+        );
+    }
+    println!("  ILP >= heuristic everywhere: OK");
+    // Strict improvement at median and C_U (paper: 1.73x / 2.11x).
+    let median_ratio = rows[1].heuristic_latency / rows[1].milp_latency;
+    let cu_ratio = rows[2].heuristic_latency / rows[2].milp_latency;
+    println!("  latency ratio at median: {median_ratio:.2}x (paper: 1.73x)");
+    println!("  latency ratio at C_U:    {cu_ratio:.2}x (paper: 2.11x)");
+    assert!(median_ratio > 1.2, "median improvement too small: {median_ratio}");
+    assert!(cu_ratio > 1.2, "C_U improvement too small: {cu_ratio}");
+    println!("table4 bench OK");
+}

@@ -1,0 +1,99 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `cloudshapes <subcommand> [positionals] [--flag [value]] ...`
+//! Flags without a following value (or followed by another flag) are
+//! booleans.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or boolean --key
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.flag(name)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("--{name} expects a number, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.flag(name)
+            .map(|v| v.parse::<usize>().map_err(|_| format!("--{name} expects an integer, got '{v}'")))
+            .transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_subcommand_and_positionals() {
+        let a = parse("table 4 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("table"));
+        assert_eq!(a.positionals, vec!["4", "extra"]);
+    }
+
+    #[test]
+    fn parses_flags_all_styles() {
+        let a = parse("run --budget 2.5 --levels=7 --quick");
+        assert_eq!(a.flag_f64("budget").unwrap(), Some(2.5));
+        assert_eq!(a.flag_usize("levels").unwrap(), Some(7));
+        assert!(a.flag_bool("quick"));
+        assert!(!a.flag_bool("missing"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("run --budget lots");
+        assert!(a.flag_f64("budget").is_err());
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = Args::parse(&[]);
+        assert!(a.subcommand.is_none());
+    }
+}

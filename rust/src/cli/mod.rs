@@ -1,0 +1,332 @@
+//! Command-line interface: the launcher every deliverable runs through.
+
+pub mod args;
+pub mod serve;
+
+use std::path::Path;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::executor::execute;
+use crate::coordinator::partitioner::baselines::{Classic, ClassicPartitioner};
+use crate::coordinator::partitioner::Partitioner;
+use crate::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner};
+use crate::report::{self, Experiment};
+use crate::util::table::fnum;
+
+use args::Args;
+
+const USAGE: &str = "\
+cloudshapes — Pareto-optimal performance-cost partitioning for heterogeneous IaaS
+(reproduction of Inggs et al., 'Seeing Shapes in Clouds', 2015)
+
+USAGE: cloudshapes <command> [options]
+
+COMMANDS
+  info                     Print cluster + workload summary
+  bench                    Run the benchmarking procedure; report model fits
+  partition                Partition the workload at a budget
+      --partitioner NAME   milp | heuristic | olb|met|mct|min-min|max-min|sufferage
+      --budget DOLLARS     Cost constraint C_k (omit for unconstrained)
+  pareto                   Generate the latency-cost trade-off curve
+      --partitioner NAME   (default milp)
+      --levels N           Budget levels (default from config)
+      --csv PATH           Also write the curve as CSV
+  run                      Partition AND execute on the cluster
+      --budget DOLLARS
+      --partitioner NAME
+  table <1|2|3|4>          Regenerate a paper table
+  fig <1|2|3>              Regenerate a paper figure (ASCII + optional CSV)
+      --csv PATH
+  serve                    JSON-over-TCP coordinator (see --port)
+      --port PORT          (default 7741)
+
+COMMON OPTIONS
+  --config PATH            TOML experiment config (configs/*.toml)
+  --quick                  Small cluster + small workload preset
+";
+
+/// Entry point; returns the process exit code.
+pub fn main(argv: &[String]) -> i32 {
+    let args = Args::parse(argv);
+    match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = if args.flag_bool("quick") {
+        ExperimentConfig::quick()
+    } else if let Some(path) = args.flag("config") {
+        ExperimentConfig::load(Path::new(path))?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(levels) = args.flag_usize("levels")? {
+        cfg.sweep.levels = levels;
+    }
+    if args.flag_bool("native") {
+        cfg.cluster.with_native = true;
+    }
+    Ok(cfg)
+}
+
+fn make_partitioner(name: &str, cfg: &ExperimentConfig) -> Result<Box<dyn Partitioner>, String> {
+    match name {
+        "milp" => Ok(Box::new(MilpPartitioner::new(cfg.milp.clone()))),
+        "heuristic" => Ok(Box::new(HeuristicPartitioner::default())),
+        other => Classic::all()
+            .into_iter()
+            .find(|c| c.name() == other)
+            .map(|c| Box::new(ClassicPartitioner(c)) as Box<dyn Partitioner>)
+            .ok_or_else(|| format!("unknown partitioner '{other}'")),
+    }
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    let Some(cmd) = args.subcommand.as_deref() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(args),
+        "bench" => cmd_bench(args),
+        "partition" => cmd_partition(args),
+        "pareto" => cmd_pareto(args),
+        "run" => cmd_run(args),
+        "table" => cmd_table(args),
+        "fig" => cmd_fig(args),
+        "serve" => serve::cmd_serve(args, load_config(args)?),
+        other => Err(format!("unknown command '{other}' (try `cloudshapes help`)")),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let e = Experiment::build(cfg)?;
+    println!("cluster: {} platforms", e.cluster.len());
+    for (cat, n) in report::tables::category_counts(&e.cluster) {
+        println!("  {:>4} x{}", cat.name(), n);
+    }
+    println!(
+        "workload: {} tasks, {} total simulations, {:.3e} total FLOPs",
+        e.workload.len(),
+        e.workload.total_sims(),
+        e.workload.total_flops()
+    );
+    let m = e.models();
+    for i in 0..m.mu {
+        println!(
+            "  solo {:>16}: {:>12.1} s  ${:>8.3}",
+            m.platform_names[i],
+            m.solo_latency(i),
+            m.solo_cost(i)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let e = Experiment::build(cfg)?;
+    let m = e.models();
+    println!("fitted {} (platform, task) latency models", m.mu * m.tau);
+    let mut r2_min: f64 = 1.0;
+    for i in 0..m.mu {
+        for j in 0..m.tau {
+            r2_min = r2_min.min(m.model(i, j).r_squared);
+        }
+    }
+    println!("worst fit R² = {r2_min:.6}");
+    println!("{}", report::tables::table2_for(&e).render());
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let budget = args.flag_f64("budget")?;
+    let name = args.flag("partitioner").unwrap_or("milp");
+    let e = Experiment::build(cfg.clone())?;
+    let part = make_partitioner(name, &cfg)?;
+    let alloc = part.partition(e.models(), budget)?;
+    let (lat, cost) = e.models().evaluate(&alloc);
+    println!("partitioner: {}", part.name());
+    println!("budget: {budget:?}");
+    println!("predicted makespan: {} s", fnum(lat, 1));
+    println!("predicted cost:     ${}", fnum(cost, 3));
+    println!("platforms used: {}", alloc.used_platforms().len());
+    for i in alloc.used_platforms() {
+        let share: f64 =
+            (0..e.models().tau).map(|j| alloc.get(i, j)).sum::<f64>() / e.models().tau as f64;
+        println!(
+            "  {:>16}: mean share {:>5.1}%  latency {:>10.1}s  cost ${:.3}",
+            e.models().platform_names[i],
+            share * 100.0,
+            e.models().platform_latency(&alloc, i),
+            e.models().platform_cost(&alloc, i),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pareto(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let name = args.flag("partitioner").unwrap_or("milp");
+    let e = Experiment::build(cfg.clone())?;
+    let part = make_partitioner(name, &cfg)?;
+    let curve = sweep(part.as_ref(), e.models(), &cfg.sweep)?;
+    println!(
+        "{}: C_L = ${}, C_U = ${}",
+        part.name(),
+        fnum(curve.c_lower, 3),
+        fnum(curve.c_upper, 3)
+    );
+    println!("{:>12} {:>14} {:>10}", "budget", "latency (s)", "cost ($)");
+    for p in &curve.points {
+        println!(
+            "{:>12} {:>14} {:>10}",
+            p.budget.map(|b| fnum(b, 3)).unwrap_or_else(|| "uncon".into()),
+            fnum(p.latency, 1),
+            fnum(p.cost, 3)
+        );
+    }
+    if let Some(path) = args.flag("csv") {
+        let mut csv = String::from("budget,latency_s,cost\n");
+        for p in &curve.points {
+            csv.push_str(&format!(
+                "{},{},{}\n",
+                p.budget.map(|b| b.to_string()).unwrap_or_else(|| "unconstrained".into()),
+                p.latency,
+                p.cost
+            ));
+        }
+        std::fs::write(path, csv).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let budget = args.flag_f64("budget")?;
+    let name = args.flag("partitioner").unwrap_or("milp");
+    let e = Experiment::build(cfg.clone())?;
+    let part = make_partitioner(name, &cfg)?;
+    let alloc = part.partition(e.models(), budget)?;
+    let (pred_lat, pred_cost) = e.models().evaluate(&alloc);
+    let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor)?;
+    println!("partitioner: {}  budget: {budget:?}", part.name());
+    println!(
+        "makespan: predicted {} s, measured {} s ({:+.1}%)",
+        fnum(pred_lat, 1),
+        fnum(rep.makespan_secs, 1),
+        (rep.makespan_secs / pred_lat - 1.0) * 100.0
+    );
+    println!(
+        "cost:     predicted ${}, measured ${} ({:+.1}%)",
+        fnum(pred_cost, 3),
+        fnum(rep.cost, 3),
+        (rep.cost / pred_cost - 1.0) * 100.0
+    );
+    println!("failures: {}", rep.failures);
+    let priced = rep.prices.iter().flatten().count();
+    println!("tasks priced: {priced}/{}", e.workload.len());
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let which = args
+        .positionals
+        .first()
+        .ok_or("table needs a number: 1..4")?
+        .as_str();
+    match which {
+        "1" => println!("{}", report::table1().render()),
+        "3" => println!("{}", report::table3().render()),
+        "2" => {
+            let e = Experiment::build(load_config(args)?)?;
+            println!("{}", report::tables::table2_for(&e).render());
+        }
+        "4" => {
+            let cfg = load_config(args)?;
+            let e = Experiment::build(cfg.clone())?;
+            println!("{}", report::table4(e.models(), &cfg.milp)?.render());
+        }
+        other => return Err(format!("unknown table '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<(), String> {
+    let which = args
+        .positionals
+        .first()
+        .ok_or("fig needs a number: 1..3")?
+        .as_str();
+    let cfg = load_config(args)?;
+    let e = Experiment::build(cfg)?;
+    let csv: Option<String> = match which {
+        "1" => {
+            let (plot, _) = report::fig1(&e)?;
+            println!("{}", plot.render());
+            Some(plot.to_csv())
+        }
+        "2" => {
+            let (plot, _) = report::fig2(&e, &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0]);
+            println!("{}", plot.render());
+            Some(plot.to_csv())
+        }
+        "3" => {
+            let (plot, points) = report::fig3(&e)?;
+            println!("{}", plot.render());
+            Some(report::fig3_csv(&points))
+        }
+        other => return Err(format!("unknown fig '{other}'")),
+    };
+    if let (Some(path), Some(csv)) = (args.flag("csv"), csv) {
+        std::fs::write(path, csv).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn help_and_empty_succeed() {
+        assert_eq!(main(&argv("help")), 0);
+        assert_eq!(main(&[]), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(main(&argv("frobnicate")), 1);
+    }
+
+    #[test]
+    fn static_tables_render() {
+        assert_eq!(main(&argv("table 1")), 0);
+        assert_eq!(main(&argv("table 3")), 0);
+        assert_eq!(main(&argv("table 99")), 1);
+    }
+
+    #[test]
+    fn quick_info_and_partition() {
+        assert_eq!(main(&argv("info --quick")), 0);
+        assert_eq!(main(&argv("partition --quick --partitioner heuristic")), 0);
+        assert_eq!(main(&argv("partition --quick --partitioner nope")), 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! JSON-over-TCP coordinator service.
+//!
+//! Newline-delimited JSON requests; one JSON response per line:
+//!
+//! ```text
+//! {"op":"ping"}
+//! {"op":"specs"}
+//! {"op":"partition","budget":2.5,"partitioner":"milp"}
+//! {"op":"evaluate","budget":2.5}            # partition + execute
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Used by `examples/cluster_serve.rs` (client mode) to demonstrate the
+//! coordinator as a long-running service: rust owns the event loop; each
+//! connection gets a worker thread.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::executor::execute;
+use crate::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
+use crate::report::Experiment;
+use crate::util::json::{obj, Json};
+
+use super::args::Args;
+
+/// `cloudshapes serve --port P` entry point. Blocks until a shutdown
+/// request arrives.
+pub fn cmd_serve(args: &Args, cfg: ExperimentConfig) -> Result<(), String> {
+    let port = args.flag_usize("port")?.unwrap_or(7741) as u16;
+    let experiment = Arc::new(Experiment::build(cfg)?);
+    let listener =
+        TcpListener::bind(("127.0.0.1", port)).map_err(|e| format!("bind 127.0.0.1:{port}: {e}"))?;
+    println!("cloudshapes coordinator listening on 127.0.0.1:{port}");
+    serve_until_shutdown(listener, experiment)
+}
+
+/// Serve an already-bound listener (test/entry-point shared path).
+pub fn serve_until_shutdown(
+    listener: TcpListener,
+    experiment: Arc<Experiment>,
+) -> Result<(), String> {
+    let stop = Arc::new(AtomicBool::new(false));
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let e = Arc::clone(&experiment);
+        let stop_conn = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let _ = handle_connection(stream, &e, &stop_conn);
+        });
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    e: &Experiment,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    // The accepted socket's local address IS the listener's address — used
+    // to poke the blocked accept loop after a shutdown request.
+    let listener_addr = stream.local_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_request(&line, e, stop);
+        writer.write_all(response.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if stop.load(Ordering::SeqCst) {
+            // Poke the listener so the accept loop notices shutdown.
+            let _ = TcpStream::connect(listener_addr);
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Handle one request line; always returns a JSON object.
+pub fn handle_request(line: &str, e: &Experiment, stop: &AtomicBool) -> Json {
+    let err = |msg: String| obj(vec![("ok", false.into()), ("error", msg.into())]);
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    let Some(op) = req.get("op").and_then(Json::as_str) else {
+        return err("missing 'op'".into());
+    };
+    match op {
+        "ping" => obj(vec![("ok", true.into()), ("pong", true.into())]),
+        "specs" => {
+            let specs: Vec<Json> = e
+                .cluster
+                .specs()
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("name", s.name.as_str().into()),
+                        ("category", s.category.name().into()),
+                        ("rate_per_hour", s.rate_per_hour.into()),
+                        ("quantum_secs", s.quantum_secs.into()),
+                        ("app_gflops", s.app_gflops.into()),
+                    ])
+                })
+                .collect();
+            obj(vec![("ok", true.into()), ("specs", Json::Arr(specs))])
+        }
+        "partition" | "evaluate" => {
+            let budget = req.get("budget").and_then(Json::as_f64);
+            let pname = req.get("partitioner").and_then(Json::as_str).unwrap_or("milp");
+            let milp = MilpPartitioner::new(e.config.milp.clone());
+            let heuristic = HeuristicPartitioner::default();
+            let part: &dyn Partitioner = match pname {
+                "milp" => &milp,
+                "heuristic" => &heuristic,
+                other => return err(format!("unknown partitioner '{other}'")),
+            };
+            let alloc = match part.partition(e.models(), budget) {
+                Ok(a) => a,
+                Err(msg) => return err(msg),
+            };
+            let (lat, cost) = e.models().evaluate(&alloc);
+            let mut fields = vec![
+                ("ok", true.into()),
+                ("partitioner", pname.into()),
+                ("predicted_latency_s", lat.into()),
+                ("predicted_cost", cost.into()),
+                ("platforms_used", alloc.used_platforms().len().into()),
+            ];
+            if op == "evaluate" {
+                match execute(&e.cluster, &e.workload, &alloc, &e.config.executor) {
+                    Ok(rep) => {
+                        fields.push(("measured_latency_s", rep.makespan_secs.into()));
+                        fields.push(("measured_cost", rep.cost.into()));
+                        fields.push(("failures", rep.failures.into()));
+                    }
+                    Err(msg) => return err(msg),
+                }
+            }
+            obj(fields)
+        }
+        "shutdown" => {
+            stop.store(true, Ordering::SeqCst);
+            obj(vec![("ok", true.into()), ("shutdown", true.into())])
+        }
+        other => err(format!("unknown op '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn experiment() -> Experiment {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.milp.time_limit_secs = 2.0;
+        Experiment::build(cfg).unwrap()
+    }
+
+    #[test]
+    fn ping_and_specs() {
+        let e = experiment();
+        let stop = AtomicBool::new(false);
+        let r = handle_request(r#"{"op":"ping"}"#, &e, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let r = handle_request(r#"{"op":"specs"}"#, &e, &stop);
+        assert_eq!(r.get("specs").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn partition_request_roundtrips() {
+        let e = experiment();
+        let stop = AtomicBool::new(false);
+        let r = handle_request(r#"{"op":"partition","partitioner":"heuristic"}"#, &e, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+        assert!(r.get("predicted_latency_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn errors_are_json() {
+        let e = experiment();
+        let stop = AtomicBool::new(false);
+        for bad in ["not json", r#"{"no_op":1}"#, r#"{"op":"explode"}"#] {
+            let r = handle_request(bad, &e, &stop);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        }
+    }
+
+    #[test]
+    fn shutdown_sets_flag() {
+        let e = experiment();
+        let stop = AtomicBool::new(false);
+        handle_request(r#"{"op":"shutdown"}"#, &e, &stop);
+        assert!(stop.load(Ordering::SeqCst));
+    }
+}

@@ -1,0 +1,266 @@
+//! Experiment configuration: one TOML file describes the workload, the
+//! cluster, the partitioner budgets and the sweep — the knobs every CLI
+//! subcommand, example and bench shares. See `configs/*.toml`.
+
+use std::path::Path;
+
+use crate::coordinator::executor::ExecutorConfig;
+use crate::coordinator::partitioner::MilpConfig;
+use crate::coordinator::{BenchmarkConfig, SweepConfig};
+use crate::platforms::sim::SimConfig;
+use crate::util::json::Json;
+use crate::util::toml;
+use crate::workload::GeneratorConfig;
+
+/// Which spec set the cluster uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterKind {
+    /// The paper's 16-platform Table II testbed.
+    Paper,
+    /// One platform per category (fast runs).
+    Small,
+}
+
+/// Cluster construction settings.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub kind: ClusterKind,
+    pub seed: u64,
+    pub sim: SimConfig,
+    /// Append the native PJRT platform (needs `make artifacts`).
+    pub with_native: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            kind: ClusterKind::Paper,
+            seed: 42,
+            // Paper scale: cap the per-execute payoff simulation so running
+            // a 128-task / 16-platform partition stays fast (prices from
+            // 2048-path slices are coarse but unbiased; quick/native
+            // presets raise the cap).
+            sim: SimConfig { stats_cap: 2048, ..SimConfig::default() },
+            with_native: false,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub workload: GeneratorConfig,
+    pub cluster: ClusterConfig,
+    pub benchmark: BenchmarkConfig,
+    pub sweep: SweepConfig,
+    pub milp: MilpConfig,
+    pub executor: ExecutorConfig,
+    /// Directory holding the AOT artifacts (manifest.json).
+    pub artifact_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            workload: GeneratorConfig::default(),
+            cluster: ClusterConfig::default(),
+            benchmark: BenchmarkConfig::default(),
+            sweep: SweepConfig::default(),
+            milp: MilpConfig::default(),
+            executor: ExecutorConfig::default(),
+            artifact_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// A configuration sized for CI / quick demos: 3 platforms, 8 small
+    /// tasks, coarse sweep.
+    pub fn quick() -> ExperimentConfig {
+        ExperimentConfig {
+            workload: GeneratorConfig::small(8, 0.02, 7),
+            cluster: ClusterConfig {
+                kind: ClusterKind::Small,
+                sim: SimConfig::default(), // full 32k-path statistics
+                ..Default::default()
+            },
+            sweep: SweepConfig { levels: 5 },
+            ..Default::default()
+        }
+    }
+
+    /// Load from a TOML file.
+    pub fn load(path: &Path) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from TOML text; unspecified keys keep their defaults.
+    pub fn parse(text: &str) -> Result<ExperimentConfig, String> {
+        let root = toml::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = ExperimentConfig::default();
+
+        if let Some(w) = root.get("workload") {
+            set_usize(w, "n_tasks", &mut cfg.workload.n_tasks)?;
+            set_u64(w, "seed", &mut cfg.workload.seed)?;
+            set_f64(w, "accuracy", &mut cfg.workload.accuracy)?;
+            if let Some(steps) = w.get("step_choices") {
+                let arr = steps
+                    .as_arr()
+                    .ok_or("workload.step_choices must be an array")?;
+                cfg.workload.step_choices = arr
+                    .iter()
+                    .map(|v| v.as_u64().map(|u| u as u32).ok_or("bad step value"))
+                    .collect::<Result<_, _>>()?;
+            }
+            if let Some(mix) = w.get("payoff_mix") {
+                let arr = mix.as_arr().ok_or("workload.payoff_mix must be an array")?;
+                if arr.len() != 3 {
+                    return Err("payoff_mix needs 3 weights".into());
+                }
+                let g = |k: usize| arr[k].as_f64().ok_or("bad mix weight");
+                cfg.workload.payoff_mix = (g(0)?, g(1)?, g(2)?);
+            }
+        }
+        if let Some(c) = root.get("cluster") {
+            if let Some(kind) = c.get("kind").and_then(Json::as_str) {
+                cfg.cluster.kind = match kind {
+                    "paper" => ClusterKind::Paper,
+                    "small" => ClusterKind::Small,
+                    other => return Err(format!("unknown cluster kind '{other}'")),
+                };
+            }
+            set_u64(c, "seed", &mut cfg.cluster.seed)?;
+            set_f64(c, "noise_sigma", &mut cfg.cluster.sim.noise_sigma)?;
+            set_f64(c, "hidden_spread", &mut cfg.cluster.sim.hidden_spread)?;
+            set_f64(c, "failure_rate", &mut cfg.cluster.sim.failure_rate)?;
+            set_bool(c, "with_native", &mut cfg.cluster.with_native)?;
+            let mut cap = cfg.cluster.sim.stats_cap as u64;
+            set_u64(c, "stats_cap", &mut cap)?;
+            cfg.cluster.sim.stats_cap = cap as u32;
+        }
+        if let Some(b) = root.get("benchmark") {
+            set_usize(b, "reps", &mut cfg.benchmark.reps)?;
+            set_f64(b, "rung_budget_secs", &mut cfg.benchmark.rung_budget_secs)?;
+            set_usize(b, "threads", &mut cfg.benchmark.threads)?;
+        }
+        if let Some(s) = root.get("sweep") {
+            set_usize(s, "levels", &mut cfg.sweep.levels)?;
+        }
+        if let Some(m) = root.get("milp") {
+            set_usize(m, "max_nodes", &mut cfg.milp.max_nodes)?;
+            set_f64(m, "rel_gap", &mut cfg.milp.rel_gap)?;
+            set_f64(m, "time_limit_secs", &mut cfg.milp.time_limit_secs)?;
+        }
+        if let Some(e) = root.get("executor") {
+            let mut seed64 = cfg.executor.seed as u64;
+            set_u64(e, "seed", &mut seed64)?;
+            cfg.executor.seed = seed64 as u32;
+            set_usize(e, "threads", &mut cfg.executor.threads)?;
+        }
+        if let Some(a) = root.get("artifact_dir").and_then(Json::as_str) {
+            cfg.artifact_dir = a.to_string();
+        }
+        Ok(cfg)
+    }
+}
+
+fn set_f64(obj: &Json, key: &str, out: &mut f64) -> Result<(), String> {
+    if let Some(v) = obj.get(key) {
+        *out = v.as_f64().ok_or_else(|| format!("{key} must be a number"))?;
+    }
+    Ok(())
+}
+
+fn set_u64(obj: &Json, key: &str, out: &mut u64) -> Result<(), String> {
+    if let Some(v) = obj.get(key) {
+        *out = v.as_u64().ok_or_else(|| format!("{key} must be a non-negative integer"))?;
+    }
+    Ok(())
+}
+
+fn set_usize(obj: &Json, key: &str, out: &mut usize) -> Result<(), String> {
+    let mut v = *out as u64;
+    set_u64(obj, key, &mut v)?;
+    *out = v as usize;
+    Ok(())
+}
+
+fn set_bool(obj: &Json, key: &str, out: &mut bool) -> Result<(), String> {
+    if let Some(v) = obj.get(key) {
+        *out = v.as_bool().ok_or_else(|| format!("{key} must be a boolean"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_scale() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.workload.n_tasks, 128);
+        assert_eq!(c.cluster.kind, ClusterKind::Paper);
+        assert_eq!(c.sweep.levels, 11);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+            artifact_dir = "artifacts"
+
+            [workload]
+            n_tasks = 16
+            seed = 5
+            accuracy = 0.01
+            step_choices = [64, 128]
+            payoff_mix = [1.0, 0.5, 0.5]
+
+            [cluster]
+            kind = "small"
+            seed = 9
+            noise_sigma = 0.02
+            failure_rate = 0.1
+            with_native = true
+
+            [sweep]
+            levels = 7
+
+            [milp]
+            max_nodes = 50
+            rel_gap = 0.01
+            time_limit_secs = 2.5
+
+            [executor]
+            seed = 3
+            threads = 4
+        "#;
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.workload.n_tasks, 16);
+        assert_eq!(c.workload.step_choices, vec![64, 128]);
+        assert_eq!(c.workload.payoff_mix, (1.0, 0.5, 0.5));
+        assert_eq!(c.cluster.kind, ClusterKind::Small);
+        assert!((c.cluster.sim.failure_rate - 0.1).abs() < 1e-12);
+        assert!(c.cluster.with_native);
+        assert_eq!(c.sweep.levels, 7);
+        assert_eq!(c.milp.max_nodes, 50);
+        assert!((c.milp.time_limit_secs - 2.5).abs() < 1e-12);
+        assert_eq!(c.executor.threads, 4);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let c = ExperimentConfig::parse("[sweep]\nlevels = 3").unwrap();
+        assert_eq!(c.sweep.levels, 3);
+        assert_eq!(c.workload.n_tasks, 128);
+    }
+
+    #[test]
+    fn bad_values_are_rejected() {
+        assert!(ExperimentConfig::parse("[cluster]\nkind = \"mainframe\"").is_err());
+        assert!(ExperimentConfig::parse("[sweep]\nlevels = \"many\"").is_err());
+        assert!(ExperimentConfig::parse("[workload]\npayoff_mix = [1.0]").is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! The allocation matrix **A** ∈ ℝ₊^(μ×τ) — the decision variable of the
+//! paper's optimisation (Eq. 3): `A[i][j]` is the fraction of task `j`'s
+//! simulations assigned to platform `i`. Columns sum to 1 (every task fully
+//! allocated); entries are real-valued because tasks are divisible
+//! ("relaxed" allocation, §III.B).
+
+/// Column-sum tolerance for validity checks.
+pub const ALLOC_TOL: f64 = 1e-6;
+
+/// A (μ platforms × τ tasks) allocation, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    mu: usize,
+    tau: usize,
+    a: Vec<f64>,
+}
+
+impl Allocation {
+    /// All-zero allocation (invalid until columns are filled).
+    pub fn zero(mu: usize, tau: usize) -> Allocation {
+        assert!(mu > 0 && tau > 0, "degenerate allocation shape");
+        Allocation { mu, tau, a: vec![0.0; mu * tau] }
+    }
+
+    /// Allocate every task wholly to platform `i`.
+    pub fn single_platform(mu: usize, tau: usize, i: usize) -> Allocation {
+        let mut al = Allocation::zero(mu, tau);
+        for j in 0..tau {
+            al.set(i, j, 1.0);
+        }
+        al
+    }
+
+    /// Same proportional split `weights[i] / Σ weights` for every task.
+    pub fn proportional(mu: usize, tau: usize, weights: &[f64]) -> Allocation {
+        assert_eq!(weights.len(), mu);
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must have positive sum");
+        let mut al = Allocation::zero(mu, tau);
+        for i in 0..mu {
+            for j in 0..tau {
+                al.set(i, j, weights[i] / total);
+            }
+        }
+        al
+    }
+
+    pub fn n_platforms(&self) -> usize {
+        self.mu
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tau
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.tau + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        assert!(v >= -ALLOC_TOL && v.is_finite(), "allocation entry {v}");
+        self.a[i * self.tau + j] = v.max(0.0);
+    }
+
+    /// Column sum for task `j`.
+    pub fn column_sum(&self, j: usize) -> f64 {
+        (0..self.mu).map(|i| self.get(i, j)).sum()
+    }
+
+    /// Re-scale every column to sum to exactly 1 (fails on zero columns).
+    pub fn normalise(&mut self) -> Result<(), String> {
+        for j in 0..self.tau {
+            let s = self.column_sum(j);
+            if s <= ALLOC_TOL {
+                return Err(format!("task {j} has no allocation"));
+            }
+            for i in 0..self.mu {
+                self.a[i * self.tau + j] /= s;
+            }
+        }
+        Ok(())
+    }
+
+    /// Validity: non-negative entries, all columns sum to 1.
+    pub fn validate(&self) -> Result<(), String> {
+        for (idx, v) in self.a.iter().enumerate() {
+            if *v < 0.0 || !v.is_finite() {
+                return Err(format!("entry {idx} invalid: {v}"));
+            }
+        }
+        for j in 0..self.tau {
+            let s = self.column_sum(j);
+            if (s - 1.0).abs() > ALLOC_TOL * self.mu as f64 {
+                return Err(format!("task {j} allocation sums to {s}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Platforms with any assigned work.
+    pub fn used_platforms(&self) -> Vec<usize> {
+        (0..self.mu)
+            .filter(|i| (0..self.tau).any(|j| self.get(*i, j) > ALLOC_TOL))
+            .collect()
+    }
+
+    /// Integer split of task `j`'s `n` simulations across platforms using
+    /// the largest-remainder method. Guarantees `Σᵢ out[i] == n` exactly.
+    pub fn split_sims(&self, j: usize, n: u64) -> Vec<u64> {
+        let shares: Vec<f64> = (0..self.mu).map(|i| self.get(i, j)).collect();
+        largest_remainder(&shares, n)
+    }
+}
+
+/// Apportion `n` items by fractional `shares` (assumed to sum to ~1) using
+/// the largest-remainder method; total is preserved exactly.
+pub fn largest_remainder(shares: &[f64], n: u64) -> Vec<u64> {
+    let total_share: f64 = shares.iter().sum();
+    assert!(total_share > ALLOC_TOL, "no positive shares");
+    let exact: Vec<f64> = shares.iter().map(|s| s / total_share * n as f64).collect();
+    let mut out: Vec<u64> = exact.iter().map(|e| e.floor() as u64).collect();
+    let assigned: u64 = out.iter().sum();
+    let mut rem: Vec<(usize, f64)> =
+        exact.iter().enumerate().map(|(i, e)| (i, e - e.floor())).collect();
+    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    for k in 0..(n - assigned) as usize {
+        out[rem[k % rem.len()].0] += 1;
+    }
+    debug_assert_eq!(out.iter().sum::<u64>(), n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{prop_assert, prop_check};
+
+    #[test]
+    fn single_platform_is_valid() {
+        let a = Allocation::single_platform(4, 7, 2);
+        assert!(a.validate().is_ok());
+        assert_eq!(a.used_platforms(), vec![2]);
+        assert_eq!(a.get(2, 3), 1.0);
+        assert_eq!(a.get(1, 3), 0.0);
+    }
+
+    #[test]
+    fn proportional_is_valid() {
+        let a = Allocation::proportional(3, 5, &[1.0, 2.0, 1.0]);
+        assert!(a.validate().is_ok());
+        assert!((a.get(1, 0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_columns_fail_validation() {
+        let a = Allocation::zero(2, 2);
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn normalise_fixes_scale() {
+        let mut a = Allocation::zero(2, 2);
+        a.set(0, 0, 2.0);
+        a.set(1, 0, 2.0);
+        a.set(0, 1, 0.1);
+        a.normalise().unwrap();
+        assert!(a.validate().is_ok());
+        assert!((a.get(0, 0) - 0.5).abs() < 1e-12);
+        assert!((a.get(0, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalise_rejects_empty_column() {
+        let mut a = Allocation::zero(2, 2);
+        a.set(0, 0, 1.0);
+        assert!(a.normalise().is_err());
+    }
+
+    #[test]
+    fn split_preserves_total_exactly() {
+        prop_check("largest-remainder preserves totals", 300, |g| {
+            let mu = g.usize(1, 12);
+            let shares: Vec<f64> = (0..mu).map(|_| g.f64(0.0, 1.0)).collect();
+            if shares.iter().sum::<f64>() <= ALLOC_TOL {
+                return Ok(()); // degenerate draw; skip
+            }
+            let n = g.usize(1, 10_000_000) as u64;
+            let split = largest_remainder(&shares, n);
+            prop_assert(split.iter().sum::<u64>() == n, "total changed")
+        });
+    }
+
+    #[test]
+    fn split_is_proportional() {
+        let split = largest_remainder(&[0.5, 0.25, 0.25], 1000);
+        assert_eq!(split, vec![500, 250, 250]);
+    }
+
+    #[test]
+    fn split_handles_indivisible_remainders() {
+        let split = largest_remainder(&[1.0, 1.0, 1.0], 10);
+        assert_eq!(split.iter().sum::<u64>(), 10);
+        assert!(split.iter().all(|&s| s == 3 || s == 4));
+    }
+
+    #[test]
+    fn split_sims_uses_columns() {
+        let mut a = Allocation::zero(2, 2);
+        a.set(0, 0, 0.75);
+        a.set(1, 0, 0.25);
+        a.set(0, 1, 1.0);
+        assert_eq!(a.split_sims(0, 100), vec![75, 25]);
+        assert_eq!(a.split_sims(1, 100), vec![100, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "allocation entry")]
+    fn rejects_negative_entries() {
+        Allocation::zero(1, 1).set(0, 0, -0.5);
+    }
+}

@@ -1,0 +1,222 @@
+//! The paper's benchmarking procedure (§III.A): run every task on every
+//! platform at a ladder of small-N sizes within a wall-clock budget, then
+//! fit `L(N) = βN + γ` per (task, platform) with weighted least squares.
+//!
+//! The fitted [`ModelSet`] — not the simulator's hidden ground truth — is
+//! what the partitioners consume; Fig. 2 measures how well these fits
+//! extrapolate, Fig. 3 how well partitions built on them predict reality.
+
+use crate::models::LatencyModel;
+use crate::platforms::Cluster;
+use crate::util::threadpool::parallel_map;
+use crate::workload::Workload;
+
+use super::objectives::ModelSet;
+
+/// Benchmarking controls.
+#[derive(Debug, Clone)]
+pub struct BenchmarkConfig {
+    /// N ladder per (task, platform); sizes are fractions of the task's N.
+    pub ladder_fracs: Vec<f64>,
+    /// Repetitions per ladder rung (averaged).
+    pub reps: usize,
+    /// Per-(task, platform) wall-clock budget in *platform* seconds: rungs
+    /// whose predicted latency would exceed it are skipped (the paper
+    /// benchmarks for "10 minutes" total on real hardware; simulated
+    /// platforms are free, native ones are not).
+    pub rung_budget_secs: f64,
+    /// RNG seed for the benchmark executions.
+    pub seed: u32,
+    /// OS threads used to benchmark platforms concurrently.
+    pub threads: usize,
+}
+
+impl Default for BenchmarkConfig {
+    fn default() -> Self {
+        BenchmarkConfig {
+            // Top rung at 0.2·N caps model extrapolation at 5×: benchmark
+            // noise on γ-dominated (tiny) tasks otherwise inflates the
+            // fitted β arbitrarily (see the noisy-benchmark test).
+            ladder_fracs: vec![1e-4, 1e-3, 1e-2, 0.05, 0.2],
+            reps: 3,
+            rung_budget_secs: 120.0,
+            seed: 0xBEEF,
+            threads: 8,
+        }
+    }
+}
+
+/// Raw benchmark samples for one (platform, task) pair.
+#[derive(Debug, Clone)]
+pub struct BenchSamples {
+    pub platform: usize,
+    pub task: usize,
+    /// (n, observed latency secs).
+    pub samples: Vec<(u64, f64)>,
+}
+
+/// Benchmark result: fitted models plus the raw samples (for Fig. 2).
+#[derive(Debug)]
+pub struct BenchmarkReport {
+    pub models: ModelSet,
+    pub samples: Vec<BenchSamples>,
+}
+
+/// Run the §III.A procedure over a cluster and workload.
+pub fn benchmark(cluster: &Cluster, workload: &Workload, cfg: &BenchmarkConfig) -> BenchmarkReport {
+    let mu = cluster.len();
+    let tau = workload.len();
+    // Benchmark platforms in parallel (each platform's runs are sequential,
+    // matching how a real benchmarking pass would own the device).
+    let per_platform: Vec<(Vec<LatencyModel>, Vec<BenchSamples>)> = parallel_map(
+        (0..mu).collect(),
+        cfg.threads,
+        |i| {
+            let platform = cluster.platform(i);
+            let mut fits = Vec::with_capacity(tau);
+            let mut all_samples = Vec::with_capacity(tau);
+            for (j, task) in workload.tasks.iter().enumerate() {
+                let mut samples: Vec<(u64, f64)> = Vec::new();
+                for frac in &cfg.ladder_fracs {
+                    let n = ((task.n_sims as f64 * frac).round() as u64).max(256);
+                    // Respect the rung budget using the samples so far.
+                    if let Some(fit) = LatencyModel::fit(&samples) {
+                        if fit.predict(n) > cfg.rung_budget_secs {
+                            break;
+                        }
+                    }
+                    let mut lat_sum = 0.0;
+                    let mut ok = 0usize;
+                    for rep in 0..cfg.reps {
+                        let out = platform.benchmark_execute(
+                            task,
+                            n,
+                            cfg.seed.wrapping_add(rep as u32),
+                        );
+                        if out.error.is_none() {
+                            lat_sum += out.latency_secs;
+                            ok += 1;
+                        }
+                    }
+                    if ok > 0 {
+                        samples.push((n, lat_sum / ok as f64));
+                    }
+                }
+                let fit = LatencyModel::fit(&samples).unwrap_or_else(|| {
+                    // Degenerate benchmark (e.g. all rungs failed): fall
+                    // back to a pessimistic placeholder so the partitioners
+                    // steer clear of the platform.
+                    LatencyModel::new(1.0, 3600.0)
+                });
+                fits.push(fit);
+                all_samples.push(BenchSamples { platform: i, task: j, samples });
+            }
+            (fits, all_samples)
+        },
+    );
+
+    let mut latency = Vec::with_capacity(mu * tau);
+    let mut samples = Vec::with_capacity(mu * tau);
+    for (fits, ss) in per_platform {
+        latency.extend(fits);
+        samples.extend(ss);
+    }
+    let specs = cluster.specs();
+    let models = ModelSet::new(
+        latency,
+        specs.iter().map(|s| s.cost_model()).collect(),
+        workload.tasks.iter().map(|t| t.n_sims).collect(),
+        specs.iter().map(|s| s.name.clone()).collect(),
+    );
+    BenchmarkReport { models, samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms::sim::SimConfig;
+    use crate::platforms::spec::small_cluster;
+    use crate::workload::{generate, GeneratorConfig};
+
+    fn setup() -> (Cluster, Workload) {
+        let cluster = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 42);
+        let workload = generate(&GeneratorConfig::small(4, 0.01, 7));
+        (cluster, workload)
+    }
+
+    #[test]
+    fn fits_recover_exact_sim_models() {
+        // With exact (noise-free) simulation, the WLS fit must recover the
+        // hidden ground truth almost perfectly.
+        let (cluster, workload) = setup();
+        let report = benchmark(&cluster, &workload, &BenchmarkConfig::default());
+        assert_eq!(report.models.mu, 3);
+        assert_eq!(report.models.tau, 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                let m = report.models.model(i, j);
+                // Verify against a fresh execution at full N.
+                let n = workload.tasks[j].n_sims;
+                let truth = cluster.platform(i).benchmark_execute(&workload.tasks[j], n, 1);
+                let err = m.relative_error(n, truth.latency_secs);
+                assert!(err < 0.02, "platform {i} task {j}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn noisy_benchmarks_still_within_10pct() {
+        // Fig. 2's claim, against a noisy simulator.
+        let specs = small_cluster();
+        let cluster = Cluster::simulated(&specs, &SimConfig::default(), 9);
+        let workload = generate(&GeneratorConfig::small(3, 0.01, 5));
+        let cfg = BenchmarkConfig { reps: 3, ..BenchmarkConfig::default() };
+        let report = benchmark(&cluster, &workload, &cfg);
+        let mut errs: Vec<f64> = Vec::new();
+        for i in 0..cluster.len() {
+            for j in 0..workload.len() {
+                let m = report.models.model(i, j);
+                let n = workload.tasks[j].n_sims;
+                // Average several noisy observations for the "actual".
+                let mut lat = 0.0;
+                for r in 0..5 {
+                    lat += cluster.platform(i).benchmark_execute(&workload.tasks[j], n, r).latency_secs;
+                }
+                lat /= 5.0;
+                errs.push(m.relative_error(n, lat));
+            }
+        }
+        // Fig. 2's ~10% bound applies to work-dominated predictions; the
+        // γ-dominated corner cases are noise-limited (documented in
+        // benchmarker docs) but must stay bounded.
+        let median = crate::util::stats::percentile(&errs, 50.0);
+        let worst = crate::util::stats::percentile(&errs, 100.0);
+        assert!(median < 0.10, "median extrapolation error {median}");
+        assert!(worst < 0.60, "worst extrapolation error {worst}");
+    }
+
+    #[test]
+    fn samples_are_recorded_for_fig2() {
+        let (cluster, workload) = setup();
+        let report = benchmark(&cluster, &workload, &BenchmarkConfig::default());
+        assert_eq!(report.samples.len(), 3 * 4);
+        for s in &report.samples {
+            assert!(s.samples.len() >= 2, "not enough rungs for ({}, {})", s.platform, s.task);
+        }
+    }
+
+    #[test]
+    fn failed_platform_gets_pessimistic_model() {
+        let specs = small_cluster();
+        let sim_cfg = SimConfig { failure_rate: 1.0, ..SimConfig::exact() };
+        let cluster = Cluster::simulated(&specs, &sim_cfg, 3);
+        let workload = generate(&GeneratorConfig::small(2, 0.05, 5));
+        let report = benchmark(&cluster, &workload, &BenchmarkConfig::default());
+        // Pessimistic fallback: enormous beta/gamma.
+        for i in 0..cluster.len() {
+            for j in 0..workload.len() {
+                assert!(report.models.model(i, j).gamma >= 3600.0);
+            }
+        }
+    }
+}

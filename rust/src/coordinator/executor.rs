@@ -1,0 +1,280 @@
+//! Execute an allocation on a cluster and measure what *actually* happens —
+//! the "we then ran the resulting partitions on our experimental hardware"
+//! step that produces the measured curves of Fig. 3.
+//!
+//! Each platform gets one worker thread and a private [`SimLane`] timeline:
+//! it processes its assigned task slices sequentially (latency accumulates
+//! on the lane), simulated platforms advancing virtual time and the native
+//! platform real time. The realised makespan is the max lane time; realised
+//! cost quantises each lane's total through the platform's billing terms.
+
+use std::sync::Arc;
+
+use crate::coordinator::allocation::{Allocation, ALLOC_TOL};
+use crate::platforms::Cluster;
+use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
+use crate::util::sim_time::SimClock;
+use crate::util::threadpool::parallel_map;
+use crate::workload::Workload;
+
+/// Per-platform execution record.
+#[derive(Debug, Clone)]
+pub struct PlatformReport {
+    pub name: String,
+    /// Total busy time on this platform's lane, seconds.
+    pub latency_secs: f64,
+    /// Billed quanta and cost.
+    pub quanta: u64,
+    pub cost: f64,
+    /// Simulations actually dispatched here.
+    pub sims: u64,
+    pub errors: Vec<String>,
+}
+
+/// Whole-run execution record.
+#[derive(Debug)]
+pub struct ExecutionReport {
+    /// Realised makespan (max platform latency), seconds.
+    pub makespan_secs: f64,
+    /// Realised total billed cost, $.
+    pub cost: f64,
+    pub platforms: Vec<PlatformReport>,
+    /// Discounted price estimate per task (None if every slice failed).
+    pub prices: Vec<Option<PriceEstimate>>,
+    /// Total failed slices.
+    pub failures: usize,
+}
+
+/// Execution controls.
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    pub seed: u32,
+    /// Worker threads (>= cluster size recommended; each platform runs its
+    /// queue sequentially regardless).
+    pub threads: usize,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig { seed: 1, threads: 16 }
+    }
+}
+
+/// Run `alloc` for `workload` on `cluster`.
+pub fn execute(
+    cluster: &Cluster,
+    workload: &Workload,
+    alloc: &Allocation,
+    cfg: &ExecutorConfig,
+) -> Result<ExecutionReport, String> {
+    alloc.validate()?;
+    workload.validate()?;
+    if alloc.n_platforms() != cluster.len() || alloc.n_tasks() != workload.len() {
+        return Err(format!(
+            "allocation shape {}x{} vs cluster {} / workload {}",
+            alloc.n_platforms(),
+            alloc.n_tasks(),
+            cluster.len(),
+            workload.len()
+        ));
+    }
+    let tau = workload.len();
+
+    // Integer-split every task's path space and compute per-slice counter
+    // offsets (prefix sums keep slices disjoint).
+    let splits: Vec<Vec<u64>> = (0..tau)
+        .map(|j| alloc.split_sims(j, workload.tasks[j].n_sims))
+        .collect();
+    let offsets: Vec<Vec<u64>> = splits
+        .iter()
+        .map(|row| {
+            let mut acc = 0u64;
+            row.iter()
+                .map(|n| {
+                    let o = acc;
+                    acc += n;
+                    o
+                })
+                .collect()
+        })
+        .collect();
+
+    let clock = SimClock::new();
+    struct LaneOut {
+        latency: f64,
+        sims: u64,
+        errors: Vec<String>,
+        stats: Vec<(usize, PayoffStats)>, // (task, slice stats)
+    }
+    let lane_outs: Vec<LaneOut> = parallel_map(
+        (0..cluster.len()).collect(),
+        cfg.threads.max(1),
+        |i| {
+            let platform: &Arc<_> = cluster.platform(i);
+            let mut lane = clock.lane();
+            let mut out =
+                LaneOut { latency: 0.0, sims: 0, errors: Vec::new(), stats: Vec::new() };
+            for (j, task) in workload.tasks.iter().enumerate() {
+                let n = splits[j][i];
+                if n == 0 || alloc.get(i, j) <= ALLOC_TOL {
+                    continue;
+                }
+                let offset = (offsets[j][i] % u32::MAX as u64) as u32;
+                let r = platform.execute(task, n, cfg.seed, offset);
+                lane.advance(r.latency_secs);
+                out.sims += n;
+                match (r.stats, r.error) {
+                    (Some(s), None) => out.stats.push((j, s)),
+                    (_, err) => out.errors.push(err.unwrap_or_else(|| "unknown".into())),
+                }
+            }
+            out.latency = lane.now_secs();
+            out
+        },
+    );
+
+    // Merge per-task statistics across platforms.
+    let mut merged: Vec<PayoffStats> = vec![PayoffStats::default(); tau];
+    let mut failures = 0usize;
+    let specs = cluster.specs();
+    let mut platforms = Vec::with_capacity(cluster.len());
+    for (i, lane) in lane_outs.iter().enumerate() {
+        for (j, s) in &lane.stats {
+            merged[*j] = merged[*j].merge(s);
+        }
+        failures += lane.errors.len();
+        let cm = specs[i].cost_model();
+        platforms.push(PlatformReport {
+            name: specs[i].name.clone(),
+            latency_secs: lane.latency,
+            quanta: cm.quanta(lane.latency),
+            cost: cm.cost(lane.latency),
+            sims: lane.sims,
+            errors: lane.errors.clone(),
+        });
+    }
+    let prices = merged
+        .iter()
+        .zip(&workload.tasks)
+        .map(|(s, t)| if s.n > 0 { Some(combine(s, t.discount())) } else { None })
+        .collect();
+    Ok(ExecutionReport {
+        makespan_secs: clock.high_water_secs(),
+        cost: platforms.iter().map(|p| p.cost).sum(),
+        platforms,
+        prices,
+        failures,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::objectives::ModelSet;
+    use crate::coordinator::partitioner::{HeuristicPartitioner, Partitioner};
+    use crate::platforms::sim::SimConfig;
+    use crate::platforms::spec::small_cluster;
+    use crate::pricing::blackscholes;
+    use crate::workload::option::Payoff;
+    use crate::workload::{generate, GeneratorConfig};
+
+    fn setup() -> (Cluster, Workload, ModelSet) {
+        let specs = small_cluster();
+        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21);
+        let workload = generate(&GeneratorConfig::small(5, 0.02, 13));
+        let models = ModelSet::from_specs(&specs, &workload);
+        (cluster, workload, models)
+    }
+
+    #[test]
+    fn executes_single_platform_allocation() {
+        let (cluster, workload, _) = setup();
+        let alloc = Allocation::single_platform(3, 5, 0);
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        assert_eq!(rep.failures, 0);
+        assert!(rep.makespan_secs > 0.0);
+        assert_eq!(rep.platforms[0].sims, workload.total_sims());
+        assert_eq!(rep.platforms[1].sims, 0);
+        assert_eq!(rep.platforms[1].cost, 0.0);
+        assert!((rep.cost - rep.platforms[0].cost).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_allocation_reduces_makespan() {
+        let (cluster, workload, models) = setup();
+        let solo = Allocation::single_platform(3, 5, 0);
+        let split = HeuristicPartitioner::upper_bound_allocation(&models);
+        let cfg = ExecutorConfig::default();
+        let rs = execute(&cluster, &workload, &solo, &cfg).unwrap();
+        let rp = execute(&cluster, &workload, &split, &cfg).unwrap();
+        assert!(rp.makespan_secs < rs.makespan_secs);
+    }
+
+    #[test]
+    fn makespan_is_max_platform_latency() {
+        let (cluster, workload, models) = setup();
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        let max_lane = rep
+            .platforms
+            .iter()
+            .map(|p| p.latency_secs)
+            .fold(0.0f64, f64::max);
+        assert!((rep.makespan_secs - max_lane).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prices_remain_correct_under_partitioning() {
+        // The end-to-end invariant: splitting a task across platforms must
+        // not bias its price (counter-disjoint slices).
+        let (cluster, workload, models) = setup();
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        for (t, price) in workload.tasks.iter().zip(&rep.prices) {
+            let est = price.as_ref().expect("price produced");
+            if t.payoff == Payoff::European {
+                let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+                assert!(
+                    (est.price - bs).abs() < 6.0 * est.std_error + 0.1,
+                    "task {}: {est:?} vs bs {bs}",
+                    t.id
+                );
+            } else {
+                assert!(est.price >= 0.0 && est.price < t.spot);
+            }
+        }
+    }
+
+    #[test]
+    fn model_predictions_track_exact_execution() {
+        // With a noise-free simulator and nominal==true models (exact sim
+        // config has hidden_spread 0), predicted and realised agree closely.
+        let (cluster, workload, models) = setup();
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        let predicted = models.makespan(&alloc);
+        let rel = (rep.makespan_secs - predicted).abs() / predicted;
+        assert!(rel < 0.25, "predicted {predicted} vs measured {} ", rep.makespan_secs);
+        let predicted_cost = models.total_cost(&alloc);
+        assert!((rep.cost - predicted_cost).abs() / predicted_cost < 0.5);
+    }
+
+    #[test]
+    fn failure_injection_is_reported() {
+        let specs = small_cluster();
+        let cluster =
+            Cluster::simulated(&specs, &SimConfig { failure_rate: 1.0, ..SimConfig::exact() }, 3);
+        let workload = generate(&GeneratorConfig::small(3, 0.05, 1));
+        let alloc = Allocation::single_platform(3, 3, 1);
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        assert_eq!(rep.failures, 3);
+        assert!(rep.prices.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (cluster, workload, _) = setup();
+        let alloc = Allocation::single_platform(2, 5, 0); // wrong mu
+        assert!(execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The coordinator — the paper's L3 contribution: benchmark the cluster,
+//! fit predictive models, partition the workload (heuristics vs MILP),
+//! generate the ε-constraint Pareto trade-off, and execute allocations.
+
+pub mod allocation;
+pub mod benchmarker;
+pub mod executor;
+pub mod objectives;
+pub mod pareto;
+pub mod partitioner;
+
+pub use allocation::Allocation;
+pub use benchmarker::{benchmark, BenchmarkConfig, BenchmarkReport};
+pub use executor::{execute, ExecutionReport, ExecutorConfig};
+pub use objectives::ModelSet;
+pub use pareto::{sweep, SweepConfig, TradeoffCurve, TradeoffPoint};
+pub use partitioner::{HeuristicPartitioner, MilpConfig, MilpPartitioner, Partitioner};

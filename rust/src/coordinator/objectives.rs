@@ -1,0 +1,247 @@
+//! The task- and platform-reduction functions of Eq. 3:
+//!
+//! ```text
+//! G_L(A)ᵢ = Σⱼ (βᵢⱼ Nⱼ Aᵢⱼ + γᵢⱼ ⌈Aᵢⱼ⌉)      per-platform latency
+//! F_L(A)  = maxᵢ G_L(A)ᵢ                       makespan
+//! G_C(A)ᵢ = πᵢ ⌈G_L(A)ᵢ / ρᵢ⌉                  per-platform billed cost
+//! F_C(A)  = Σᵢ G_C(A)ᵢ                         total cost
+//! ```
+//!
+//! plus [`ModelSet`], the (task × platform) model matrix the partitioners
+//! consume — built either from fitted benchmark models (the paper's method)
+//! or directly from platform specs (nominal models, for tests/ablations).
+
+use crate::models::{CostModel, LatencyModel};
+use crate::platforms::spec::PlatformSpec;
+use crate::workload::Workload;
+
+use super::allocation::{Allocation, ALLOC_TOL};
+
+/// Per-(platform, task) latency models plus per-platform billing terms.
+#[derive(Debug, Clone)]
+pub struct ModelSet {
+    pub mu: usize,
+    pub tau: usize,
+    /// Row-major (platform-major) latency models.
+    latency: Vec<LatencyModel>,
+    /// Per-platform billing.
+    pub cost: Vec<CostModel>,
+    /// Simulations per task (N_j).
+    pub n_sims: Vec<u64>,
+    /// Platform names for reporting.
+    pub platform_names: Vec<String>,
+}
+
+impl ModelSet {
+    pub fn new(
+        latency: Vec<LatencyModel>,
+        cost: Vec<CostModel>,
+        n_sims: Vec<u64>,
+        platform_names: Vec<String>,
+    ) -> ModelSet {
+        let mu = cost.len();
+        let tau = n_sims.len();
+        assert_eq!(latency.len(), mu * tau, "latency matrix shape");
+        assert_eq!(platform_names.len(), mu);
+        assert!(mu > 0 && tau > 0);
+        ModelSet { mu, tau, latency, cost, n_sims, platform_names }
+    }
+
+    /// Nominal models straight from platform specs: β from application
+    /// GFLOPS and the task's per-path FLOPs, γ from the spec's setup time.
+    /// (The simulator's hidden factors make *fitted* models differ — that
+    /// difference is exactly what Fig. 3 measures.)
+    pub fn from_specs(specs: &[PlatformSpec], workload: &Workload) -> ModelSet {
+        let mu = specs.len();
+        let tau = workload.len();
+        let mut latency = Vec::with_capacity(mu * tau);
+        for s in specs {
+            for t in &workload.tasks {
+                let beta = t.flops_per_path() / (s.app_gflops.max(1e-9) * 1e9);
+                latency.push(LatencyModel::new(beta, s.setup_secs));
+            }
+        }
+        ModelSet::new(
+            latency,
+            specs.iter().map(|s| s.cost_model()).collect(),
+            workload.tasks.iter().map(|t| t.n_sims).collect(),
+            specs.iter().map(|s| s.name.clone()).collect(),
+        )
+    }
+
+    pub fn model(&self, i: usize, j: usize) -> &LatencyModel {
+        &self.latency[i * self.tau + j]
+    }
+
+    /// β·N — the full-task compute seconds of task `j` on platform `i`.
+    pub fn work_secs(&self, i: usize, j: usize) -> f64 {
+        self.model(i, j).beta * self.n_sims[j] as f64
+    }
+
+    /// γ of (i, j).
+    pub fn setup_secs(&self, i: usize, j: usize) -> f64 {
+        self.model(i, j).gamma
+    }
+
+    /// G_L(A)ᵢ: predicted latency of platform `i` under `alloc`.
+    pub fn platform_latency(&self, alloc: &Allocation, i: usize) -> f64 {
+        debug_assert_eq!(alloc.n_platforms(), self.mu);
+        debug_assert_eq!(alloc.n_tasks(), self.tau);
+        let mut total = 0.0;
+        for j in 0..self.tau {
+            let a = alloc.get(i, j);
+            if a > ALLOC_TOL {
+                total += self.work_secs(i, j) * a + self.setup_secs(i, j);
+            }
+        }
+        total
+    }
+
+    /// F_L(A): the makespan.
+    pub fn makespan(&self, alloc: &Allocation) -> f64 {
+        (0..self.mu)
+            .map(|i| self.platform_latency(alloc, i))
+            .fold(0.0, f64::max)
+    }
+
+    /// G_C(A)ᵢ: billed cost of platform `i`.
+    pub fn platform_cost(&self, alloc: &Allocation, i: usize) -> f64 {
+        self.cost[i].cost(self.platform_latency(alloc, i))
+    }
+
+    /// F_C(A): total billed cost.
+    pub fn total_cost(&self, alloc: &Allocation) -> f64 {
+        (0..self.mu).map(|i| self.platform_cost(alloc, i)).sum()
+    }
+
+    /// Un-quantised total cost (LP lower bound).
+    pub fn total_cost_relaxed(&self, alloc: &Allocation) -> f64 {
+        (0..self.mu)
+            .map(|i| self.cost[i].cost_relaxed(self.platform_latency(alloc, i)))
+            .sum()
+    }
+
+    /// Latency of platform `i` running the ENTIRE workload alone — the
+    /// "individual makespan" the paper's heuristic upper bound divides by.
+    pub fn solo_latency(&self, i: usize) -> f64 {
+        (0..self.tau)
+            .map(|j| self.work_secs(i, j) + self.setup_secs(i, j))
+            .sum()
+    }
+
+    /// Billed cost of platform `i` running the entire workload alone.
+    pub fn solo_cost(&self, i: usize) -> f64 {
+        self.cost[i].cost(self.solo_latency(i))
+    }
+
+    /// Both objectives at once (the evaluation the sweeps report).
+    pub fn evaluate(&self, alloc: &Allocation) -> (f64, f64) {
+        (self.makespan(alloc), self.total_cost(alloc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms::spec::small_cluster;
+    use crate::workload::{generate, GeneratorConfig};
+
+    pub(crate) fn toy_models() -> ModelSet {
+        // 2 platforms x 2 tasks with hand-checkable numbers.
+        // platform 0: beta 1e-3 (fast), gamma 10; platform 1: beta 4e-3, gamma 1.
+        let l = |b, g| LatencyModel::new(b, g);
+        ModelSet::new(
+            vec![
+                l(1e-3, 10.0), // p0, t0
+                l(1e-3, 10.0), // p0, t1
+                l(4e-3, 1.0),  // p1, t0
+                l(4e-3, 1.0),  // p1, t1
+            ],
+            vec![CostModel::new(3600.0, 0.65), CostModel::new(60.0, 0.48)],
+            vec![100_000, 200_000],
+            vec!["fast".into(), "cheapish".into()],
+        )
+    }
+
+    #[test]
+    fn platform_latency_charges_setup_only_when_used() {
+        let m = toy_models();
+        let a = Allocation::single_platform(2, 2, 0);
+        // p0: (1e-3*1e5 + 10) + (1e-3*2e5 + 10) = 110 + 210 = 320.
+        assert!((m.platform_latency(&a, 0) - 320.0).abs() < 1e-9);
+        assert_eq!(m.platform_latency(&a, 1), 0.0);
+        assert!((m.makespan(&a) - 320.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractional_allocation_scales_work_not_setup() {
+        let m = toy_models();
+        let mut a = Allocation::zero(2, 2);
+        a.set(0, 0, 0.5);
+        a.set(1, 0, 0.5);
+        a.set(0, 1, 1.0);
+        // p0: 0.5*100 + 10 + 200 + 10 = 270; p1: 0.5*400 + 1 = 201.
+        assert!((m.platform_latency(&a, 0) - 270.0).abs() < 1e-9);
+        assert!((m.platform_latency(&a, 1) - 201.0).abs() < 1e-9);
+        assert!((m.makespan(&a) - 270.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn costs_are_quantised() {
+        let m = toy_models();
+        let a = Allocation::single_platform(2, 2, 0);
+        // 320 s on a 3600-s quantum -> 1 quantum -> $0.65.
+        assert!((m.total_cost(&a) - 0.65).abs() < 1e-12);
+        let b = Allocation::single_platform(2, 2, 1);
+        // p1: 400+1 + 800+1 = 1202 s on 60-s quanta -> ceil(20.03) = 21
+        // quanta -> 21 * 0.48/60h = 21 * 0.008 = $0.168.
+        assert!((m.total_cost(&b) - 21.0 * 0.48 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relaxed_cost_lower_bounds_billed() {
+        let m = toy_models();
+        for alloc in [
+            Allocation::single_platform(2, 2, 0),
+            Allocation::single_platform(2, 2, 1),
+            Allocation::proportional(2, 2, &[1.0, 1.0]),
+        ] {
+            assert!(m.total_cost_relaxed(&alloc) <= m.total_cost(&alloc) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn solo_latency_matches_single_platform_makespan() {
+        let m = toy_models();
+        for i in 0..2 {
+            let a = Allocation::single_platform(2, 2, i);
+            assert!((m.solo_latency(i) - m.makespan(&a)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn from_specs_builds_consistent_shapes() {
+        let specs = small_cluster();
+        let w = generate(&GeneratorConfig::small(5, 0.05, 1));
+        let m = ModelSet::from_specs(&specs, &w);
+        assert_eq!(m.mu, 3);
+        assert_eq!(m.tau, 5);
+        // A GPU beats a CPU on beta for every task.
+        let gpu = specs.iter().position(|s| s.name == "gk104").unwrap();
+        let cpu = specs.iter().position(|s| s.name == "xeon-e5-2660").unwrap();
+        for j in 0..5 {
+            assert!(m.model(gpu, j).beta < m.model(cpu, j).beta);
+        }
+    }
+
+    #[test]
+    fn splitting_beats_solo_on_makespan() {
+        // Two platforms sharing work must not be slower than the best solo
+        // run when setup times are small relative to work.
+        let m = toy_models();
+        let best_solo = (0..2).map(|i| m.solo_latency(i)).fold(f64::INFINITY, f64::min);
+        // Split inversely proportional to beta.
+        let a = Allocation::proportional(2, 2, &[1.0 / 1e-3, 1.0 / 4e-3]);
+        assert!(m.makespan(&a) < best_solo);
+    }
+}

@@ -1,0 +1,214 @@
+//! ε-constraint trade-off generation (§III.C, after Kirlik & Sayın):
+//! sweep cost budgets C_k between the lower bound C_L (cheapest single
+//! platform) and the upper bound C_U (cost of the unconstrained
+//! latency-optimal partition), solve each constrained problem, and filter
+//! the resulting (cost, latency) points to the Pareto-optimal set.
+
+use crate::coordinator::allocation::Allocation;
+use crate::coordinator::objectives::ModelSet;
+
+use super::partitioner::{lower_cost_bound, Partitioner};
+
+/// One point of a trade-off curve.
+#[derive(Debug, Clone)]
+pub struct TradeoffPoint {
+    /// The budget C_k this point was solved under (None = unconstrained).
+    pub budget: Option<f64>,
+    pub alloc: Allocation,
+    /// Model-predicted makespan, seconds.
+    pub latency: f64,
+    /// Model-predicted billed cost, $.
+    pub cost: f64,
+}
+
+/// A generated trade-off curve plus its bounds.
+#[derive(Debug, Clone)]
+pub struct TradeoffCurve {
+    pub partitioner: String,
+    pub c_lower: f64,
+    pub c_upper: f64,
+    /// All evaluated points, cheapest first (not necessarily Pareto).
+    pub points: Vec<TradeoffPoint>,
+}
+
+impl TradeoffCurve {
+    /// The Pareto-optimal (non-dominated) subset, cheapest first.
+    pub fn pareto_front(&self) -> Vec<&TradeoffPoint> {
+        let mut sorted: Vec<&TradeoffPoint> = self.points.iter().collect();
+        sorted.sort_by(|a, b| {
+            a.cost
+                .partial_cmp(&b.cost)
+                .unwrap()
+                .then(a.latency.partial_cmp(&b.latency).unwrap())
+        });
+        let mut front: Vec<&TradeoffPoint> = Vec::new();
+        let mut best_latency = f64::INFINITY;
+        for p in sorted {
+            if p.latency < best_latency - 1e-12 {
+                best_latency = p.latency;
+                front.push(p);
+            }
+        }
+        front
+    }
+
+    /// Point whose budget is the median of the sweep (Table IV's C_k row).
+    pub fn median_point(&self) -> Option<&TradeoffPoint> {
+        if self.points.is_empty() {
+            return None;
+        }
+        Some(&self.points[self.points.len() / 2])
+    }
+
+    /// Cheapest and fastest points.
+    pub fn cheapest(&self) -> Option<&TradeoffPoint> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+    }
+
+    pub fn fastest(&self) -> Option<&TradeoffPoint> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.latency.partial_cmp(&b.latency).unwrap())
+    }
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Number of budget levels between C_L and C_U (inclusive).
+    pub levels: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig { levels: 11 }
+    }
+}
+
+/// Generate the latency-cost trade-off for `partitioner` (§III.C steps 1-3).
+pub fn sweep(
+    partitioner: &dyn Partitioner,
+    models: &ModelSet,
+    cfg: &SweepConfig,
+) -> Result<TradeoffCurve, String> {
+    assert!(cfg.levels >= 2, "need at least the two bounds");
+    // Step 1: upper cost bound from the unconstrained latency optimum.
+    let fast_alloc = partitioner.partition(models, None)?;
+    let (fast_latency, c_upper) = models.evaluate(&fast_alloc);
+    // Step 2: lower cost bound.
+    let (c_lower, cheap_alloc) = lower_cost_bound(models);
+    let (cheap_latency, cheap_cost) = models.evaluate(&cheap_alloc);
+
+    let mut points = vec![TradeoffPoint {
+        budget: Some(c_lower),
+        alloc: cheap_alloc,
+        latency: cheap_latency,
+        cost: cheap_cost,
+    }];
+    // Step 3: iterate C_k between the bounds.
+    for k in 1..cfg.levels - 1 {
+        let c_k = c_lower + (c_upper - c_lower) * k as f64 / (cfg.levels - 1) as f64;
+        match partitioner.partition(models, Some(c_k)) {
+            Ok(alloc) => {
+                let (latency, cost) = models.evaluate(&alloc);
+                points.push(TradeoffPoint { budget: Some(c_k), alloc, latency, cost });
+            }
+            Err(_) => continue, // infeasible level (can happen near C_L)
+        }
+    }
+    points.push(TradeoffPoint {
+        budget: None,
+        alloc: fast_alloc,
+        latency: fast_latency,
+        cost: c_upper,
+    });
+    Ok(TradeoffCurve { partitioner: partitioner.name().to_string(), c_lower, c_upper, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::{HeuristicPartitioner, MilpPartitioner};
+    use crate::models::{CostModel, LatencyModel};
+
+    fn models() -> ModelSet {
+        let l = |b, g| LatencyModel::new(b, g);
+        ModelSet::new(
+            vec![
+                l(1e-4, 5.0),
+                l(1e-4, 5.0),
+                l(1e-3, 0.5),
+                l(1e-3, 0.5),
+                l(5e-3, 0.2),
+                l(5e-3, 0.2),
+            ],
+            vec![
+                CostModel::new(3600.0, 1.0),
+                CostModel::new(600.0, 0.4),
+                CostModel::new(60.0, 0.3),
+            ],
+            vec![5_000_000, 2_000_000],
+            vec!["p0".into(), "p1".into(), "p2".into()],
+        )
+    }
+
+    #[test]
+    fn heuristic_sweep_brackets_budgets() {
+        let m = models();
+        let curve = sweep(&HeuristicPartitioner::default(), &m, &SweepConfig::default()).unwrap();
+        assert!(curve.c_lower <= curve.c_upper);
+        assert!(curve.points.len() >= 2);
+        for p in &curve.points {
+            assert!(p.alloc.validate().is_ok());
+            if let Some(b) = p.budget {
+                assert!(p.cost <= b + 1e-9, "cost {} over budget {b}", p.cost);
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        let m = models();
+        let curve = sweep(&MilpPartitioner::default(), &m, &SweepConfig { levels: 6 }).unwrap();
+        let front = curve.pareto_front();
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+            assert!(w[0].latency >= w[1].latency);
+        }
+    }
+
+    #[test]
+    fn milp_dominates_heuristic_pointwise() {
+        // At every heuristic budget, MILP's latency is <= heuristic's
+        // (the paper's headline claim, "performs no worse in the worst case").
+        let m = models();
+        let hcurve =
+            sweep(&HeuristicPartitioner::default(), &m, &SweepConfig { levels: 5 }).unwrap();
+        let milp = MilpPartitioner::default();
+        for p in &hcurve.points {
+            if let Some(b) = p.budget {
+                let out = milp.solve(&m, Some(b)).unwrap();
+                assert!(
+                    out.makespan <= p.latency + 1e-6,
+                    "budget {b}: milp {} vs heuristic {}",
+                    out.makespan,
+                    p.latency
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn curve_accessors() {
+        let m = models();
+        let curve = sweep(&HeuristicPartitioner::default(), &m, &SweepConfig::default()).unwrap();
+        let cheap = curve.cheapest().unwrap();
+        let fast = curve.fastest().unwrap();
+        assert!(cheap.cost <= fast.cost + 1e-9);
+        assert!(fast.latency <= cheap.latency + 1e-9);
+        assert!(curve.median_point().is_some());
+    }
+}

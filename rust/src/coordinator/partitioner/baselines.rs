@@ -1,0 +1,232 @@
+//! Braun et al. static mapping heuristics — the literature baselines the
+//! paper positions against (§II.B, [5]). All assign *whole* tasks (binary
+//! allocations), optimise makespan only, and ignore billing: they exist for
+//! the ablation benches comparing divisible-MILP against classic whole-task
+//! mapping.
+//!
+//! Implemented: OLB, MET, MCT, Min-Min, Max-Min, Sufferage.
+
+use crate::coordinator::allocation::Allocation;
+use crate::coordinator::objectives::ModelSet;
+
+use super::Partitioner;
+
+/// Which classic heuristic to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Classic {
+    /// Opportunistic Load Balancing: next task to the earliest-ready
+    /// platform, ignoring execution time.
+    Olb,
+    /// Minimum Execution Time: each task to its fastest platform,
+    /// ignoring load.
+    Met,
+    /// Minimum Completion Time: each task (arrival order) to the platform
+    /// finishing it earliest.
+    Mct,
+    /// Min-Min: repeatedly commit the task with the smallest best
+    /// completion time.
+    MinMin,
+    /// Max-Min: repeatedly commit the task with the *largest* best
+    /// completion time.
+    MaxMin,
+    /// Sufferage: commit the task that would suffer most if denied its best
+    /// platform.
+    Sufferage,
+}
+
+impl Classic {
+    pub fn all() -> [Classic; 6] {
+        [Classic::Olb, Classic::Met, Classic::Mct, Classic::MinMin, Classic::MaxMin, Classic::Sufferage]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Classic::Olb => "olb",
+            Classic::Met => "met",
+            Classic::Mct => "mct",
+            Classic::MinMin => "min-min",
+            Classic::MaxMin => "max-min",
+            Classic::Sufferage => "sufferage",
+        }
+    }
+}
+
+/// Whole-task mapping heuristic baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassicPartitioner(pub Classic);
+
+impl ClassicPartitioner {
+    /// Execution time of whole task `j` on platform `i` (work + setup).
+    fn etc(models: &ModelSet, i: usize, j: usize) -> f64 {
+        models.work_secs(i, j) + models.setup_secs(i, j)
+    }
+
+    fn assign(models: &ModelSet, kind: Classic) -> Vec<usize> {
+        let (mu, tau) = (models.mu, models.tau);
+        let mut ready = vec![0.0f64; mu]; // per-platform ready time
+        let mut assignment = vec![usize::MAX; tau];
+
+        match kind {
+            Classic::Olb | Classic::Met | Classic::Mct => {
+                for j in 0..tau {
+                    let i = match kind {
+                        Classic::Olb => argmin(&(0..mu).map(|i| ready[i]).collect::<Vec<_>>()),
+                        Classic::Met => argmin(
+                            &(0..mu).map(|i| Self::etc(models, i, j)).collect::<Vec<_>>(),
+                        ),
+                        Classic::Mct => argmin(
+                            &(0..mu)
+                                .map(|i| ready[i] + Self::etc(models, i, j))
+                                .collect::<Vec<_>>(),
+                        ),
+                        _ => unreachable!(),
+                    };
+                    assignment[j] = i;
+                    ready[i] += Self::etc(models, i, j);
+                }
+            }
+            Classic::MinMin | Classic::MaxMin | Classic::Sufferage => {
+                let mut unassigned: Vec<usize> = (0..tau).collect();
+                while !unassigned.is_empty() {
+                    // For each unassigned task: best and second-best
+                    // completion times.
+                    let mut pick = 0usize; // index into unassigned
+                    let mut pick_platform = 0usize;
+                    let mut pick_key = f64::NEG_INFINITY;
+                    for (u, &j) in unassigned.iter().enumerate() {
+                        let cts: Vec<f64> = (0..mu)
+                            .map(|i| ready[i] + Self::etc(models, i, j))
+                            .collect();
+                        let best_i = argmin(&cts);
+                        let best = cts[best_i];
+                        let second = cts
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, _)| *i != best_i)
+                            .map(|(_, c)| *c)
+                            .fold(f64::INFINITY, f64::min);
+                        let key = match kind {
+                            Classic::MinMin => -best,          // smallest best CT
+                            Classic::MaxMin => best,           // largest best CT
+                            Classic::Sufferage => second - best, // max sufferage
+                            _ => unreachable!(),
+                        };
+                        if key > pick_key {
+                            pick_key = key;
+                            pick = u;
+                            pick_platform = best_i;
+                        }
+                    }
+                    let j = unassigned.swap_remove(pick);
+                    assignment[j] = pick_platform;
+                    ready[pick_platform] += Self::etc(models, pick_platform, j);
+                }
+            }
+        }
+        assignment
+    }
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .expect("non-empty")
+}
+
+impl Partitioner for ClassicPartitioner {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    /// Budget is ignored: the classic heuristics are makespan-only mappers.
+    fn partition(&self, models: &ModelSet, _budget: Option<f64>) -> Result<Allocation, String> {
+        let assignment = Self::assign(models, self.0);
+        let mut alloc = Allocation::zero(models.mu, models.tau);
+        for (j, i) in assignment.iter().enumerate() {
+            alloc.set(*i, j, 1.0);
+        }
+        alloc.validate()?;
+        Ok(alloc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{CostModel, LatencyModel};
+
+    fn models() -> ModelSet {
+        // 3 platforms with distinct speeds, 6 tasks of mixed sizes.
+        let betas = [1e-4, 5e-4, 2e-3];
+        let n: Vec<u64> = vec![1_000_000, 500_000, 2_000_000, 100_000, 800_000, 1_500_000];
+        let mut latency = Vec::new();
+        for b in betas {
+            for _ in 0..n.len() {
+                latency.push(LatencyModel::new(b, 1.0));
+            }
+        }
+        ModelSet::new(
+            latency,
+            vec![
+                CostModel::new(3600.0, 1.0),
+                CostModel::new(3600.0, 0.5),
+                CostModel::new(60.0, 0.3),
+            ],
+            n,
+            vec!["a".into(), "b".into(), "c".into()],
+        )
+    }
+
+    #[test]
+    fn all_heuristics_produce_valid_binary_allocations() {
+        let m = models();
+        for kind in Classic::all() {
+            let alloc = ClassicPartitioner(kind).partition(&m, None).unwrap();
+            assert!(alloc.validate().is_ok(), "{kind:?}");
+            for i in 0..m.mu {
+                for j in 0..m.tau {
+                    let a = alloc.get(i, j);
+                    assert!(a == 0.0 || a == 1.0, "{kind:?} fractional entry");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn met_puts_everything_on_fastest() {
+        let m = models();
+        let alloc = ClassicPartitioner(Classic::Met).partition(&m, None).unwrap();
+        assert_eq!(alloc.used_platforms(), vec![0]); // platform 0 has min beta
+    }
+
+    #[test]
+    fn mct_balances_better_than_met() {
+        let m = models();
+        let met = ClassicPartitioner(Classic::Met).partition(&m, None).unwrap();
+        let mct = ClassicPartitioner(Classic::Mct).partition(&m, None).unwrap();
+        assert!(m.makespan(&mct) <= m.makespan(&met) + 1e-9);
+        assert!(mct.used_platforms().len() > 1);
+    }
+
+    #[test]
+    fn minmin_no_worse_than_olb() {
+        // Braun's empirical finding (Min-Min among the best, OLB worst).
+        let m = models();
+        let olb = ClassicPartitioner(Classic::Olb).partition(&m, None).unwrap();
+        let minmin = ClassicPartitioner(Classic::MinMin).partition(&m, None).unwrap();
+        assert!(m.makespan(&minmin) <= m.makespan(&olb) + 1e-9);
+    }
+
+    #[test]
+    fn sufferage_valid_and_complete() {
+        let m = models();
+        let s = ClassicPartitioner(Classic::Sufferage).partition(&m, None).unwrap();
+        assert!(s.validate().is_ok());
+        // Every task assigned exactly once.
+        for j in 0..m.tau {
+            assert!((s.column_sum(j) - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! The paper's "common-sense" heuristic partitioner (§III.C).
+//!
+//! * **Upper cost bound C_U** — divide work inversely proportional to each
+//!   platform's *individual makespan* (its latency running the entire
+//!   workload alone).
+//! * **Lower cost bound C_L** — all tasks on the single cheapest platform.
+//! * **Interior points** — platform weights from a linear combination of the
+//!   *normalised* latency and cost: as the cost weighting λ grows, the
+//!   allocation slides from the C_U split towards the cheapest platform.
+//!
+//! Deliberately ignores the γ setup non-linearity and the billing-quantum
+//! ceiling — "only considering absolute latency and cost" — which is exactly
+//! why the MILP beats it at interior budgets (Table IV) and why it never
+//! touches the short-quantum CPUs (§IV.C.2).
+
+use crate::coordinator::allocation::Allocation;
+use crate::coordinator::objectives::ModelSet;
+
+use super::{lower_cost_bound, Partitioner};
+
+/// Paper heuristic. `lambda_grid` controls how finely the interior λ sweep
+/// searches for a budget-respecting allocation.
+#[derive(Debug, Clone)]
+pub struct HeuristicPartitioner {
+    pub lambda_grid: usize,
+}
+
+impl Default for HeuristicPartitioner {
+    fn default() -> Self {
+        HeuristicPartitioner { lambda_grid: 101 }
+    }
+}
+
+impl HeuristicPartitioner {
+    /// The C_U allocation: inverse-individual-makespan proportional split.
+    pub fn upper_bound_allocation(models: &ModelSet) -> Allocation {
+        let weights: Vec<f64> =
+            (0..models.mu).map(|i| 1.0 / models.solo_latency(i).max(1e-12)).collect();
+        Allocation::proportional(models.mu, models.tau, &weights)
+    }
+
+    /// The allocation at cost-weighting λ ∈ [0, 1].
+    ///
+    /// Platforms are scored by the normalised latency-cost linear
+    /// combination `(1-λ)·L̃ᵢ + λ·C̃ᵢ`; platforms whose score-weight falls
+    /// below λ·max-weight are dropped, and the survivors share work in
+    /// inverse proportion to their individual makespans. λ = 0 keeps every
+    /// platform (the C_U split); λ = 1 keeps only the cheapest (C_L).
+    pub fn allocation_at_lambda(models: &ModelSet, lambda: f64) -> Allocation {
+        if lambda >= 1.0 {
+            return lower_cost_bound(models).1;
+        }
+        // Normalised (relative) solo latency and cost per platform.
+        let lat: Vec<f64> = (0..models.mu).map(|i| models.solo_latency(i)).collect();
+        let cost: Vec<f64> = (0..models.mu).map(|i| models.solo_cost(i)).collect();
+        let lmin = lat.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-12);
+        let cmin = cost.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-12);
+        let scores: Vec<f64> = (0..models.mu)
+            .map(|i| (1.0 - lambda) * lat[i] / lmin + lambda * cost[i] / cmin)
+            .collect();
+        // Keep the top-k platforms by score, k sliding from μ (λ=0) to 1
+        // (λ→1); the worst-scoring platforms — the short-quantum CPUs, whose
+        // solo latency is enormous — drop out first, reproducing §IV.C.2's
+        // "the heuristic approach does not consider [the CPUs] at all".
+        let keep = ((models.mu as f64 * (1.0 - lambda)).round() as usize).clamp(1, models.mu);
+        let mut order: Vec<usize> = (0..models.mu).collect();
+        order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+        let mut weights = vec![0.0; models.mu];
+        for &i in order.iter().take(keep) {
+            weights[i] = 1.0 / lat[i].max(1e-12); // inverse-makespan among kept
+        }
+        Allocation::proportional(models.mu, models.tau, &weights)
+    }
+}
+
+impl Partitioner for HeuristicPartitioner {
+    fn name(&self) -> &str {
+        "heuristic"
+    }
+
+    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation, String> {
+        let Some(budget) = budget else {
+            return Ok(Self::upper_bound_allocation(models));
+        };
+        // Sweep λ from the fast end; keep the fastest allocation within
+        // budget. λ = 1 (single cheapest platform) is the fallback.
+        let mut best: Option<(f64, Allocation)> = None;
+        for k in 0..self.lambda_grid {
+            let lambda = k as f64 / (self.lambda_grid - 1).max(1) as f64;
+            let alloc = Self::allocation_at_lambda(models, lambda);
+            let (latency, cost) = models.evaluate(&alloc);
+            if cost <= budget + 1e-9
+                && best.as_ref().map(|(l, _)| latency < *l).unwrap_or(true)
+            {
+                best = Some((latency, alloc));
+            }
+        }
+        let fallback = lower_cost_bound(models);
+        match best {
+            Some((_, alloc)) => Ok(alloc),
+            None if fallback.0 <= budget + 1e-9 => Ok(fallback.1),
+            None => Err(format!(
+                "heuristic: budget ${budget:.3} below the cheapest single-platform cost ${:.3}",
+                fallback.0
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{CostModel, LatencyModel};
+
+    fn models() -> ModelSet {
+        let l = |b, g| LatencyModel::new(b, g);
+        // Three platforms: fast+expensive, medium, slow+cheap.
+        ModelSet::new(
+            vec![
+                l(1e-4, 5.0),
+                l(1e-4, 5.0),
+                l(1e-3, 2.0),
+                l(1e-3, 2.0),
+                l(1e-2, 0.5),
+                l(1e-2, 0.5),
+            ],
+            vec![
+                CostModel::new(3600.0, 2.0),
+                CostModel::new(3600.0, 0.6),
+                CostModel::new(60.0, 0.3),
+            ],
+            vec![1_000_000, 2_000_000],
+            vec!["fast".into(), "mid".into(), "cheap".into()],
+        )
+    }
+
+    #[test]
+    fn unconstrained_gives_inverse_makespan_split() {
+        let m = models();
+        let a = HeuristicPartitioner::default().partition(&m, None).unwrap();
+        assert!(a.validate().is_ok());
+        // Weights prop. to 1/solo_latency: platform 0 fastest -> biggest share.
+        assert!(a.get(0, 0) > a.get(1, 0));
+        assert!(a.get(1, 0) > a.get(2, 0));
+        // All tasks get the same split (the heuristic is task-blind).
+        assert!((a.get(0, 0) - a.get(0, 1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_one_is_single_cheapest() {
+        let m = models();
+        let a = HeuristicPartitioner::allocation_at_lambda(&m, 1.0);
+        assert_eq!(a.used_platforms().len(), 1);
+    }
+
+    #[test]
+    fn budget_tightening_reduces_cost_monotonely() {
+        let m = models();
+        let h = HeuristicPartitioner::default();
+        let unconstrained = HeuristicPartitioner::upper_bound_allocation(&m);
+        let cu = m.total_cost(&unconstrained);
+        let (cl, _) = crate::coordinator::partitioner::lower_cost_bound(&m);
+        let mut last_latency = 0.0;
+        for frac in [1.0, 0.75, 0.5, 0.25, 0.0] {
+            let budget = cl + frac * (cu - cl);
+            let a = h.partition(&m, Some(budget)).unwrap();
+            let (lat, cost) = m.evaluate(&a);
+            assert!(cost <= budget + 1e-9, "cost {cost} > budget {budget}");
+            assert!(lat >= last_latency - 1e-9, "latency not monotone");
+            last_latency = lat;
+        }
+    }
+
+    #[test]
+    fn impossible_budget_errors() {
+        let m = models();
+        let h = HeuristicPartitioner::default();
+        assert!(h.partition(&m, Some(1e-6)).is_err());
+    }
+
+    #[test]
+    fn heuristic_is_task_blind_by_design() {
+        // The allocation share of a platform must be identical across tasks
+        // (the heuristic considers only aggregate platform characteristics).
+        let m = models();
+        let a = HeuristicPartitioner::allocation_at_lambda(&m, 0.4);
+        for i in 0..m.mu {
+            for j in 1..m.tau {
+                assert!((a.get(i, j) - a.get(i, 0)).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Partitioners: strategies that turn a [`ModelSet`] (+ optional budget)
+//! into an [`Allocation`].
+
+pub mod baselines;
+pub mod heuristic;
+pub mod milp;
+
+pub use heuristic::HeuristicPartitioner;
+pub use milp::{MilpConfig, MilpPartitioner};
+
+use super::allocation::Allocation;
+use super::objectives::ModelSet;
+
+/// A workload partitioning strategy (§III.C).
+pub trait Partitioner {
+    fn name(&self) -> &str;
+
+    /// Produce an allocation. `budget` is the cost constraint C_k in $;
+    /// `None` means unconstrained (the latency-optimal end of the curve).
+    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation, String>;
+}
+
+/// Shared helper: the single platform that completes the whole workload at
+/// the lowest billed cost (the C_L lower bound both approaches share).
+pub fn cheapest_single_platform(models: &ModelSet) -> usize {
+    (0..models.mu)
+        .min_by(|&a, &b| {
+            let (ca, cb) = (models.solo_cost(a), models.solo_cost(b));
+            // Tie-break on latency so the choice is deterministic.
+            ca.partial_cmp(&cb)
+                .unwrap()
+                .then(models.solo_latency(a).partial_cmp(&models.solo_latency(b)).unwrap())
+        })
+        .expect("non-empty model set")
+}
+
+/// The lower cost bound C_L and its allocation (step 2 of §III.C).
+pub fn lower_cost_bound(models: &ModelSet) -> (f64, Allocation) {
+    let i = cheapest_single_platform(models);
+    let alloc = Allocation::single_platform(models.mu, models.tau, i);
+    (models.total_cost(&alloc), alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{CostModel, LatencyModel};
+
+    fn models() -> ModelSet {
+        let l = |b, g| LatencyModel::new(b, g);
+        ModelSet::new(
+            vec![l(1e-3, 10.0), l(1e-3, 10.0), l(4e-3, 1.0), l(4e-3, 1.0)],
+            vec![CostModel::new(3600.0, 0.65), CostModel::new(60.0, 0.48)],
+            vec![100_000, 200_000],
+            vec!["fast".into(), "cheapish".into()],
+        )
+    }
+
+    #[test]
+    fn cheapest_platform_is_found() {
+        let m = models();
+        // p0 solo: 320 s -> $0.65. p1 solo: 1202 s -> 21 quanta -> $0.168.
+        assert_eq!(cheapest_single_platform(&m), 1);
+        let (cl, alloc) = lower_cost_bound(&m);
+        assert!((cl - 0.168).abs() < 1e-9);
+        assert!(alloc.validate().is_ok());
+        assert_eq!(alloc.used_platforms(), vec![1]);
+    }
+}

@@ -1,0 +1,34 @@
+//! # cloudshapes
+//!
+//! Production-quality reproduction of *"Seeing Shapes in Clouds: On the
+//! Performance-Cost trade-off for Heterogeneous Infrastructure-as-a-Service"*
+//! (Inggs, Thomas, Constantinides, Luk — 2015).
+//!
+//! The library finds **Pareto-optimal latency↔cost trade-offs** for
+//! workloads of atomic, divisible tasks (Monte Carlo option pricing)
+//! partitioned across heterogeneous IaaS platforms (CPU / GPU / FPGA), by
+//! solving a family of cost-constrained Mixed-ILP makespan problems
+//! (ε-constraint method) and comparing against heuristic partitioners.
+//!
+//! Architecture (see DESIGN.md):
+//! - **L3** — this crate: benchmarking, model fitting, MILP + heuristic
+//!   partitioners, cluster execution;
+//! - **L2/L1** — JAX/Pallas Monte Carlo pricing chunks, AOT-lowered to HLO
+//!   text at build time (`make artifacts`), executed via PJRT from
+//!   [`runtime`]. Python never runs on the request path.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod milp;
+pub mod report;
+pub mod models;
+pub mod platforms;
+pub mod pricing;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

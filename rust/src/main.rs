@@ -1,0 +1,6 @@
+//! `cloudshapes` binary — see `cloudshapes help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(cloudshapes::cli::main(&argv));
+}

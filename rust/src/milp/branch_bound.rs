@@ -1,0 +1,413 @@
+//! Generic best-first branch & bound over [`Problem`]s with Int/Bin vars.
+//!
+//! This is the "SCIP as a black box" role from the paper (§III.B): LP
+//! relaxations from [`super::simplex`], most-fractional branching with bound
+//! tightening, rounding-based incumbents, node/gap/time budgets. It is exact
+//! on small/medium instances and *anytime* on large ones — it always returns
+//! the best incumbent plus the proven lower bound and gap.
+//!
+//! The full-size 128×16 partitioning MILP is solved by the structure-aware
+//! specialization in `coordinator::partitioner::milp`, which is validated
+//! against this generic solver on small instances.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use super::lp::{Problem, VarKind};
+use super::simplex::{self, LpStatus};
+
+/// Integrality tolerance.
+pub const INT_TOL: f64 = 1e-6;
+
+/// Search limits. Defaults are generous for test-sized problems.
+#[derive(Debug, Clone)]
+pub struct BnbLimits {
+    pub max_nodes: usize,
+    /// Relative optimality gap at which the search stops.
+    pub rel_gap: f64,
+    pub time_limit_secs: f64,
+}
+
+impl Default for BnbLimits {
+    fn default() -> Self {
+        BnbLimits { max_nodes: 100_000, rel_gap: 1e-6, time_limit_secs: 60.0 }
+    }
+}
+
+/// Outcome of a MILP solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MilpStatus {
+    /// Incumbent proven optimal within `rel_gap`.
+    Optimal,
+    /// Stopped on a budget with a feasible incumbent (gap reported).
+    Feasible,
+    Infeasible,
+    Unbounded,
+    /// No incumbent found within the budget (and not proven infeasible).
+    Unknown,
+}
+
+/// MILP solve result.
+#[derive(Debug, Clone)]
+pub struct MilpSolution {
+    pub status: MilpStatus,
+    /// Best integer-feasible point (valid when status is Optimal/Feasible).
+    pub x: Vec<f64>,
+    pub obj: f64,
+    /// Proven lower bound on the optimum.
+    pub bound: f64,
+    /// Relative gap between incumbent and bound.
+    pub gap: f64,
+    pub nodes: usize,
+}
+
+struct Node {
+    /// Lower bound inherited from the parent LP (priority key).
+    bound: f64,
+    /// (var index, new lb, new ub) deltas relative to the root problem.
+    bounds: Vec<(usize, f64, f64)>,
+    depth: usize,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; we want the *smallest* bound first.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Solve a mixed-integer problem by branch & bound.
+pub fn solve(p: &Problem, limits: &BnbLimits) -> MilpSolution {
+    let start = Instant::now();
+    let int_vars = p.int_vars();
+
+    // Root relaxation.
+    let root = simplex::solve(&p.relaxed());
+    match root.status {
+        LpStatus::Infeasible => {
+            return MilpSolution {
+                status: MilpStatus::Infeasible,
+                x: vec![],
+                obj: f64::INFINITY,
+                bound: f64::INFINITY,
+                gap: 0.0,
+                nodes: 1,
+            }
+        }
+        LpStatus::Unbounded => {
+            return MilpSolution {
+                status: MilpStatus::Unbounded,
+                x: vec![],
+                obj: f64::NEG_INFINITY,
+                bound: f64::NEG_INFINITY,
+                gap: 0.0,
+                nodes: 1,
+            }
+        }
+        LpStatus::IterLimit => {
+            return MilpSolution {
+                status: MilpStatus::Unknown,
+                x: vec![],
+                obj: f64::INFINITY,
+                bound: f64::NEG_INFINITY,
+                gap: f64::INFINITY,
+                nodes: 1,
+            }
+        }
+        LpStatus::Optimal => {}
+    }
+
+    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    let mut heap = BinaryHeap::new();
+    heap.push(Node { bound: root.obj, bounds: vec![], depth: 0 });
+    let mut nodes = 0usize;
+    let mut best_bound = root.obj;
+
+    while let Some(node) = heap.pop() {
+        nodes += 1;
+        best_bound = node.bound; // best-first: heap top is the global bound
+        if let Some((_, inc_obj)) = &incumbent {
+            if gap_of(*inc_obj, node.bound) <= limits.rel_gap {
+                break; // proven within tolerance
+            }
+        }
+        if nodes > limits.max_nodes || start.elapsed().as_secs_f64() > limits.time_limit_secs {
+            break;
+        }
+
+        // Re-solve this node's LP (bounds applied to a clone of the root).
+        let mut sub = p.relaxed();
+        for &(vi, lb, ub) in &node.bounds {
+            sub.vars[vi].lb = lb;
+            sub.vars[vi].ub = ub;
+        }
+        let rel = simplex::solve(&sub);
+        if rel.status != LpStatus::Optimal {
+            continue; // infeasible subtree (or solver failure: safe to drop —
+                      // bound-wise we only ever *under*-report progress)
+        }
+        if let Some((_, inc_obj)) = &incumbent {
+            if rel.obj >= *inc_obj - limits.rel_gap * inc_obj.abs().max(1.0) {
+                continue; // dominated
+            }
+        }
+
+        // Find the most fractional integer variable.
+        let frac = int_vars
+            .iter()
+            .map(|&vi| (vi, (rel.x[vi] - rel.x[vi].round()).abs()))
+            .filter(|(_, f)| *f > INT_TOL)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+        match frac {
+            None => {
+                // Integer feasible: candidate incumbent.
+                if incumbent.as_ref().map(|(_, o)| rel.obj < *o).unwrap_or(true) {
+                    incumbent = Some((rel.x.clone(), rel.obj));
+                }
+            }
+            Some((vi, _)) => {
+                // Rounding heuristic for an early incumbent: fix ints to the
+                // rounded LP values and re-solve the continuous rest.
+                if incumbent.is_none() && node.depth == 0 {
+                    if let Some(cand) = round_and_repair(p, &rel.x, &int_vars) {
+                        let obj = p.objective_value(&cand);
+                        incumbent = Some((cand, obj));
+                    }
+                }
+                let xv = rel.x[vi];
+                let (lb, ub) = (sub.vars[vi].lb, sub.vars[vi].ub);
+                // Down child: x <= floor.
+                if xv.floor() >= lb - INT_TOL {
+                    let mut bs = node.bounds.clone();
+                    bs.push((vi, lb, xv.floor()));
+                    heap.push(Node { bound: rel.obj, bounds: bs, depth: node.depth + 1 });
+                }
+                // Up child: x >= ceil.
+                if xv.ceil() <= ub + INT_TOL {
+                    let mut bs = node.bounds.clone();
+                    bs.push((vi, xv.ceil(), ub));
+                    heap.push(Node { bound: rel.obj, bounds: bs, depth: node.depth + 1 });
+                }
+            }
+        }
+    }
+
+    if heap.is_empty() {
+        // Search exhausted: the bound equals the incumbent (or the problem
+        // has no integer-feasible point).
+        if let Some((_, obj)) = &incumbent {
+            best_bound = *obj;
+        }
+    }
+
+    match incumbent {
+        Some((x, obj)) => {
+            let gap = gap_of(obj, best_bound);
+            let status = if gap <= limits.rel_gap { MilpStatus::Optimal } else { MilpStatus::Feasible };
+            MilpSolution { status, x, obj, bound: best_bound, gap, nodes }
+        }
+        None => {
+            let exhausted = heap.is_empty() && nodes <= limits.max_nodes;
+            MilpSolution {
+                status: if exhausted { MilpStatus::Infeasible } else { MilpStatus::Unknown },
+                x: vec![],
+                obj: f64::INFINITY,
+                bound: best_bound,
+                gap: f64::INFINITY,
+                nodes,
+            }
+        }
+    }
+}
+
+fn gap_of(incumbent: f64, bound: f64) -> f64 {
+    if incumbent == bound {
+        0.0
+    } else {
+        (incumbent - bound).abs() / incumbent.abs().max(1e-12)
+    }
+}
+
+/// Fix all integer vars at rounded LP values, re-solve for the continuous
+/// vars, and return the point if feasible. Tries round-to-nearest first and
+/// falls back to floor (feasible by construction for packing-style `<=`
+/// constraints with non-negative coefficients).
+fn round_and_repair(p: &Problem, x: &[f64], int_vars: &[usize]) -> Option<Vec<f64>> {
+    for round in [f64::round as fn(f64) -> f64, f64::floor as fn(f64) -> f64] {
+        let mut sub = p.relaxed();
+        for &vi in int_vars {
+            let r = round(x[vi]).clamp(p.vars[vi].lb, p.vars[vi].ub);
+            sub.vars[vi].lb = r;
+            sub.vars[vi].ub = r;
+        }
+        let sol = simplex::solve(&sub);
+        if sol.status == LpStatus::Optimal && p.is_feasible(&sol.x, 1e-6) {
+            return Some(sol.x);
+        }
+    }
+    None
+}
+
+/// True if every Int/Bin variable of `p` is integral in `x`.
+pub fn is_integral(p: &Problem, x: &[f64]) -> bool {
+    p.vars.iter().enumerate().all(|(i, v)| {
+        v.kind == VarKind::Cont || (x[i] - x[i].round()).abs() <= INT_TOL
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::milp::lp::{Cmp, Problem};
+
+    fn limits() -> BnbLimits {
+        BnbLimits::default()
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 13b + 7c, 3a + 4b + 2c <= 6, binary -> a=0? check:
+        // options: a+b (w7 no), a+c (w5, v17), b+c (w6, v20) <- best.
+        let mut p = Problem::new();
+        let a = p.bin("a");
+        let b = p.bin("b");
+        let c = p.bin("c");
+        p.constrain(vec![(a, 3.0), (b, 4.0), (c, 2.0)], Cmp::Le, 6.0);
+        p.minimize(vec![(a, -10.0), (b, -13.0), (c, -7.0)]);
+        let sol = solve(&p, &limits());
+        assert_eq!(sol.status, MilpStatus::Optimal);
+        assert!((sol.obj + 20.0).abs() < 1e-6, "{sol:?}");
+        assert_eq!(sol.x[0].round() as i64, 0);
+        assert_eq!(sol.x[1].round() as i64, 1);
+        assert_eq!(sol.x[2].round() as i64, 1);
+    }
+
+    #[test]
+    fn integer_rounding_is_not_assumed() {
+        // Classic: LP optimum fractional, IP optimum far from rounding.
+        // max y s.t. -x + y <= 0.5, x + y <= 3.5, x,y int >= 0.
+        let mut p = Problem::new();
+        let x = p.int("x", 0.0, 10.0);
+        let y = p.int("y", 0.0, 10.0);
+        p.constrain(vec![(x, -1.0), (y, 1.0)], Cmp::Le, 0.5);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 3.5);
+        p.minimize(vec![(y, -1.0)]);
+        let sol = solve(&p, &limits());
+        assert_eq!(sol.status, MilpStatus::Optimal);
+        assert!((sol.obj + 1.0).abs() < 1e-6, "y*=1, got {sol:?}");
+    }
+
+    #[test]
+    fn infeasible_ip_detected() {
+        // 2x = 1 with x integer.
+        let mut p = Problem::new();
+        let x = p.int("x", 0.0, 10.0);
+        p.constrain(vec![(x, 2.0)], Cmp::Eq, 1.0);
+        p.minimize(vec![(x, 1.0)]);
+        let sol = solve(&p, &limits());
+        assert_eq!(sol.status, MilpStatus::Infeasible);
+    }
+
+    #[test]
+    fn lp_infeasible_detected() {
+        let mut p = Problem::new();
+        let x = p.bin("x");
+        p.constrain(vec![(x, 1.0)], Cmp::Ge, 2.0);
+        p.minimize(vec![(x, 1.0)]);
+        assert_eq!(solve(&p, &limits()).status, MilpStatus::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = Problem::new();
+        let x = p.int("x", 0.0, f64::INFINITY);
+        p.minimize(vec![(x, -1.0)]);
+        assert_eq!(solve(&p, &limits()).status, MilpStatus::Unbounded);
+    }
+
+    #[test]
+    fn continuous_problem_solves_at_root() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 4.0);
+        p.minimize(vec![(x, -1.0)]);
+        let sol = solve(&p, &limits());
+        assert_eq!(sol.status, MilpStatus::Optimal);
+        assert_eq!(sol.nodes, 1);
+        assert!((sol.obj + 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_integer_with_continuous_part() {
+        // min -x - 10 b, x <= 3 + 2b, x cont in [0,10], b bin.
+        // b=1: x=5, obj -15. b=0: x=3, obj -3.
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 10.0);
+        let b = p.bin("b");
+        p.constrain(vec![(x, 1.0), (b, -2.0)], Cmp::Le, 3.0);
+        p.minimize(vec![(x, -1.0), (b, -10.0)]);
+        let sol = solve(&p, &limits());
+        assert_eq!(sol.status, MilpStatus::Optimal);
+        assert!((sol.obj + 15.0).abs() < 1e-6);
+        assert!((sol.x[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn node_budget_returns_feasible_with_gap() {
+        // A 12-item knapsack; 1-node budget forces an early stop, but the
+        // rounding heuristic should still give an incumbent.
+        let mut p = Problem::new();
+        let vars: Vec<_> = (0..12).map(|i| p.bin(&format!("b{i}"))).collect();
+        let w: Vec<f64> = (0..12).map(|i| 2.0 + (i as f64 * 7.3) % 5.0).collect();
+        let v: Vec<f64> = (0..12).map(|i| 1.0 + (i as f64 * 3.7) % 9.0).collect();
+        p.constrain(vars.iter().zip(&w).map(|(b, w)| (*b, *w)).collect(), Cmp::Le, 20.0);
+        p.minimize(vars.iter().zip(&v).map(|(b, v)| (*b, -*v)).collect());
+        let lim = BnbLimits { max_nodes: 1, ..limits() };
+        let sol = solve(&p, &lim);
+        assert!(matches!(sol.status, MilpStatus::Feasible | MilpStatus::Optimal), "{sol:?}");
+        assert!(p.is_feasible(&sol.x, 1e-6));
+        assert!(sol.bound <= sol.obj + 1e-9);
+    }
+
+    #[test]
+    fn exhaustive_matches_bruteforce_on_random_binaries() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        for trial in 0..10 {
+            let n = 8;
+            let mut p = Problem::new();
+            let vars: Vec<_> = (0..n).map(|i| p.bin(&format!("b{i}"))).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 5.0)).collect();
+            let c: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let cap = rng.range_f64(5.0, 12.0);
+            p.constrain(vars.iter().zip(&w).map(|(b, w)| (*b, *w)).collect(), Cmp::Le, cap);
+            p.minimize(vars.iter().zip(&c).map(|(b, c)| (*b, *c)).collect());
+            let sol = solve(&p, &limits());
+            // Brute force.
+            let mut best = f64::INFINITY;
+            for mask in 0..(1u32 << n) {
+                let weight: f64 =
+                    (0..n).filter(|i| mask >> i & 1 == 1).map(|i| w[i]).sum();
+                if weight <= cap {
+                    let cost: f64 =
+                        (0..n).filter(|i| mask >> i & 1 == 1).map(|i| c[i]).sum();
+                    best = best.min(cost);
+                }
+            }
+            assert_eq!(sol.status, MilpStatus::Optimal, "trial {trial}");
+            assert!((sol.obj - best).abs() < 1e-6, "trial {trial}: {} vs {best}", sol.obj);
+        }
+    }
+}

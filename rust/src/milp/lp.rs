@@ -1,0 +1,210 @@
+//! Linear / mixed-integer problem model.
+//!
+//! A thin, allocation-friendly builder that both the generic solver
+//! ([`super::simplex`], [`super::branch_bound`]) and the paper-specific
+//! partitioning formulation (`coordinator::partitioner::milp`) target.
+
+/// Variable kind. The simplex relaxes `Int`/`Bin` to `Cont`; branch & bound
+/// restores integrality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarKind {
+    Cont,
+    Int,
+    Bin,
+}
+
+/// Handle to a variable in a [`Problem`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VarId(pub usize);
+
+/// Comparison operator of a linear constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// One variable: bounds and kind. `lb`/`ub` may be ±infinity.
+#[derive(Debug, Clone)]
+pub struct Var {
+    pub name: String,
+    pub lb: f64,
+    pub ub: f64,
+    pub kind: VarKind,
+}
+
+/// A linear constraint `Σ coef·var  cmp  rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub terms: Vec<(VarId, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// A minimization problem. (Maximize by negating the objective.)
+#[derive(Debug, Clone, Default)]
+pub struct Problem {
+    pub vars: Vec<Var>,
+    pub cons: Vec<Constraint>,
+    /// Objective terms; duplicated VarIds are summed.
+    pub objective: Vec<(VarId, f64)>,
+    /// Constant added to the objective value.
+    pub obj_const: f64,
+}
+
+impl Problem {
+    pub fn new() -> Problem {
+        Problem::default()
+    }
+
+    /// Add a continuous variable with bounds.
+    pub fn cont(&mut self, name: &str, lb: f64, ub: f64) -> VarId {
+        self.add_var(name, lb, ub, VarKind::Cont)
+    }
+
+    /// Add an integer variable with bounds.
+    pub fn int(&mut self, name: &str, lb: f64, ub: f64) -> VarId {
+        self.add_var(name, lb, ub, VarKind::Int)
+    }
+
+    /// Add a binary variable.
+    pub fn bin(&mut self, name: &str) -> VarId {
+        self.add_var(name, 0.0, 1.0, VarKind::Bin)
+    }
+
+    fn add_var(&mut self, name: &str, lb: f64, ub: f64, kind: VarKind) -> VarId {
+        assert!(lb <= ub, "var '{name}': lb {lb} > ub {ub}");
+        let id = VarId(self.vars.len());
+        self.vars.push(Var { name: name.to_string(), lb, ub, kind });
+        id
+    }
+
+    /// Add a constraint; returns its index.
+    pub fn constrain(&mut self, terms: Vec<(VarId, f64)>, cmp: Cmp, rhs: f64) -> usize {
+        for (v, _) in &terms {
+            assert!(v.0 < self.vars.len(), "constraint references unknown var");
+        }
+        self.cons.push(Constraint { terms, cmp, rhs });
+        self.cons.len() - 1
+    }
+
+    /// Set (replace) the linear objective to minimize.
+    pub fn minimize(&mut self, terms: Vec<(VarId, f64)>) {
+        self.objective = terms;
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn n_cons(&self) -> usize {
+        self.cons.len()
+    }
+
+    /// Indices of integer-constrained (Int or Bin) variables.
+    pub fn int_vars(&self) -> Vec<usize> {
+        self.vars
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.kind != VarKind::Cont)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Evaluate the objective at a point.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.obj_const + self.objective.iter().map(|(v, c)| c * x[v.0]).sum::<f64>()
+    }
+
+    /// Check primal feasibility of `x` within tolerance `tol`
+    /// (bounds + constraints; integrality checked for Int/Bin vars).
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.vars.len() {
+            return false;
+        }
+        for (i, v) in self.vars.iter().enumerate() {
+            if x[i] < v.lb - tol || x[i] > v.ub + tol {
+                return false;
+            }
+            if v.kind != VarKind::Cont && (x[i] - x[i].round()).abs() > tol {
+                return false;
+            }
+        }
+        for c in &self.cons {
+            let lhs: f64 = c.terms.iter().map(|(v, a)| a * x[v.0]).sum();
+            let ok = match c.cmp {
+                Cmp::Le => lhs <= c.rhs + tol,
+                Cmp::Ge => lhs >= c.rhs - tol,
+                Cmp::Eq => (lhs - c.rhs).abs() <= tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Clone the problem with all Int/Bin kinds relaxed to Cont.
+    pub fn relaxed(&self) -> Problem {
+        let mut p = self.clone();
+        for v in &mut p.vars {
+            v.kind = VarKind::Cont;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_accessors() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        let y = p.bin("y");
+        let z = p.int("z", 0.0, 10.0);
+        p.constrain(vec![(x, 1.0), (y, 2.0)], Cmp::Le, 4.0);
+        p.minimize(vec![(x, 1.0), (z, -1.0)]);
+        assert_eq!(p.n_vars(), 3);
+        assert_eq!(p.n_cons(), 1);
+        assert_eq!(p.int_vars(), vec![1, 2]);
+        assert_eq!(p.objective_value(&[2.0, 0.0, 3.0]), -1.0);
+    }
+
+    #[test]
+    fn feasibility_checks_everything() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 5.0);
+        let y = p.bin("y");
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 3.0);
+        assert!(p.is_feasible(&[2.0, 1.0], 1e-9));
+        assert!(!p.is_feasible(&[2.5, 0.5], 1e-9)); // y fractional
+        assert!(!p.is_feasible(&[6.0, 1.0], 1e-9)); // x above ub (and cons violated)
+        assert!(!p.is_feasible(&[1.0, 1.0], 1e-9)); // eq violated
+        assert!(!p.is_feasible(&[1.0], 1e-9)); // wrong arity
+    }
+
+    #[test]
+    fn relaxed_drops_integrality() {
+        let mut p = Problem::new();
+        p.bin("b");
+        let r = p.relaxed();
+        assert!(r.int_vars().is_empty());
+        assert!(r.is_feasible(&[0.5], 1e-9));
+    }
+
+    #[test]
+    #[should_panic(expected = "lb")]
+    fn inverted_bounds_panic() {
+        Problem::new().cont("x", 2.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown var")]
+    fn unknown_var_in_constraint_panics() {
+        let mut p = Problem::new();
+        p.constrain(vec![(VarId(3), 1.0)], Cmp::Le, 0.0);
+    }
+}

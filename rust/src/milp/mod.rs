@@ -1,0 +1,19 @@
+//! Mixed-Integer Linear Programming substrate — the project's stand-in for
+//! SCIP (unavailable offline; see DESIGN.md §2).
+//!
+//! * [`lp`] — problem model (variables, bounds, constraints, objective);
+//! * [`simplex`] — dense two-phase primal simplex for LP relaxations;
+//! * [`branch_bound`] — generic best-first branch & bound with budgets and
+//!   gap reporting.
+//!
+//! The paper-specific Eq. 4 partitioning MILP is formulated in
+//! `coordinator::partitioner::milp` on top of these pieces (with a
+//! structure-aware reduction for the 128×16 instance).
+
+pub mod branch_bound;
+pub mod lp;
+pub mod simplex;
+
+pub use branch_bound::{solve as solve_milp, BnbLimits, MilpSolution, MilpStatus};
+pub use lp::{Cmp, Constraint, Problem, Var, VarId, VarKind};
+pub use simplex::{solve as solve_lp, LpSolution, LpStatus};

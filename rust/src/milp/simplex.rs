@@ -1,0 +1,596 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves the continuous relaxation of a [`Problem`]: variables are shifted /
+//! negated / split to the `x ≥ 0` standard form, finite upper bounds become
+//! explicit rows, slack/surplus/artificial columns are appended, phase 1
+//! minimizes artificial infeasibility, phase 2 the real objective.
+//!
+//! Pivoting uses Dantzig's rule with a permanent switch to Bland's rule after
+//! an iteration budget (anti-cycling). Suited to the dense, small-row-count
+//! LPs this project generates (the reduced partitioning LP is ~160 rows —
+//! see `coordinator::partitioner::milp`).
+
+use super::lp::{Cmp, Problem};
+
+const EPS: f64 = 1e-9;
+
+/// Termination status of an LP solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    /// Iteration budget exhausted — treat as a solver failure.
+    IterLimit,
+}
+
+/// LP solve result. `x` is in the original problem's variable space.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    pub x: Vec<f64>,
+    pub obj: f64,
+    pub iters: usize,
+}
+
+/// How an original variable maps into standard-form columns.
+#[derive(Debug, Clone, Copy)]
+enum Map {
+    /// lb == ub: substituted constant.
+    Fixed(f64),
+    /// x = col + lb  (lb finite).
+    Shifted { col: usize, lb: f64 },
+    /// x = ub - col  (lb = -inf, ub finite).
+    Negated { col: usize, ub: f64 },
+    /// x = pos - neg (free variable).
+    Split { pos: usize, neg: usize },
+}
+
+/// Solve the continuous relaxation of `p` (Int/Bin treated as Cont).
+pub fn solve(p: &Problem) -> LpSolution {
+    // ---- 1. Variable transformation to x' >= 0 ----------------------------
+    let mut maps = Vec::with_capacity(p.vars.len());
+    let mut n_cols = 0usize;
+    // Rows for finite upper bounds of shifted vars: (col, bound).
+    let mut ub_rows: Vec<(usize, f64)> = Vec::new();
+    for v in &p.vars {
+        debug_assert!(v.kind == v.kind); // silence unused-kind lint paths
+        if v.lb == v.ub {
+            maps.push(Map::Fixed(v.lb));
+        } else if v.lb.is_finite() {
+            let col = n_cols;
+            n_cols += 1;
+            maps.push(Map::Shifted { col, lb: v.lb });
+            if v.ub.is_finite() {
+                ub_rows.push((col, v.ub - v.lb));
+            }
+        } else if v.ub.is_finite() {
+            let col = n_cols;
+            n_cols += 1;
+            maps.push(Map::Negated { col, ub: v.ub });
+        } else {
+            let pos = n_cols;
+            let neg = n_cols + 1;
+            n_cols += 2;
+            maps.push(Map::Split { pos, neg });
+        }
+    }
+
+    // ---- 2. Rewrite constraints over standard-form columns ----------------
+    // Each row: (coeffs dense over n_cols, cmp, rhs).
+    struct Row {
+        a: Vec<f64>,
+        cmp: Cmp,
+        b: f64,
+    }
+    let mut rows: Vec<Row> = Vec::with_capacity(p.cons.len() + ub_rows.len());
+    for c in &p.cons {
+        let mut a = vec![0.0; n_cols];
+        let mut b = c.rhs;
+        for (vid, coef) in &c.terms {
+            match maps[vid.0] {
+                Map::Fixed(val) => b -= coef * val,
+                Map::Shifted { col, lb } => {
+                    a[col] += coef;
+                    b -= coef * lb;
+                }
+                Map::Negated { col, ub } => {
+                    a[col] -= coef;
+                    b -= coef * ub;
+                }
+                Map::Split { pos, neg } => {
+                    a[pos] += coef;
+                    a[neg] -= coef;
+                }
+            }
+        }
+        rows.push(Row { a, cmp: c.cmp, b });
+    }
+    for (col, bound) in ub_rows {
+        let mut a = vec![0.0; n_cols];
+        a[col] = 1.0;
+        rows.push(Row { a, cmp: Cmp::Le, b: bound });
+    }
+
+    // Normalize to b >= 0.
+    for r in &mut rows {
+        if r.b < 0.0 {
+            for v in &mut r.a {
+                *v = -*v;
+            }
+            r.b = -r.b;
+            r.cmp = match r.cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+        }
+    }
+
+    // ---- 3. Objective over standard-form columns ---------------------------
+    let mut cost = vec![0.0; n_cols];
+    let mut obj_const = p.obj_const;
+    for (vid, coef) in &p.objective {
+        match maps[vid.0] {
+            Map::Fixed(val) => obj_const += coef * val,
+            Map::Shifted { col, lb } => {
+                cost[col] += coef;
+                obj_const += coef * lb;
+            }
+            Map::Negated { col, ub } => {
+                cost[col] -= coef;
+                obj_const += coef * ub;
+            }
+            Map::Split { pos, neg } => {
+                cost[pos] += coef;
+                cost[neg] -= coef;
+            }
+        }
+    }
+
+    // ---- 4. Build tableau: slacks / surpluses / artificials ----------------
+    let m = rows.len();
+    // Column layout: [structural | slack+surplus | artificial | rhs]
+    let n_slack = rows.iter().filter(|r| r.cmp != Cmp::Eq).count();
+    let mut n_art = 0usize;
+    let total = n_cols + n_slack + {
+        // Count artificials: Ge and Eq rows need one.
+        rows.iter().filter(|r| r.cmp != Cmp::Le).count()
+    };
+    let width = total + 1; // + rhs
+    let mut t = vec![0.0; (m + 1) * width]; // last row = cost row
+    let mut basis = vec![usize::MAX; m];
+    let mut art_cols: Vec<usize> = Vec::new();
+
+    let mut next_slack = n_cols;
+    let mut next_art = n_cols + n_slack;
+    for (i, r) in rows.iter().enumerate() {
+        let off = i * width;
+        t[off..off + n_cols].copy_from_slice(&r.a);
+        t[off + total] = r.b;
+        match r.cmp {
+            Cmp::Le => {
+                t[off + next_slack] = 1.0;
+                basis[i] = next_slack;
+                next_slack += 1;
+            }
+            Cmp::Ge => {
+                t[off + next_slack] = -1.0;
+                next_slack += 1;
+                t[off + next_art] = 1.0;
+                basis[i] = next_art;
+                art_cols.push(next_art);
+                next_art += 1;
+                n_art += 1;
+            }
+            Cmp::Eq => {
+                t[off + next_art] = 1.0;
+                basis[i] = next_art;
+                art_cols.push(next_art);
+                next_art += 1;
+                n_art += 1;
+            }
+        }
+    }
+
+    let mut iters = 0usize;
+    let iter_limit = 200 * (m + total + 1);
+    let bland_after = 20 * (m + total + 1);
+    let is_art = |c: usize| c >= n_cols + n_slack && c < total;
+
+    // ---- 5. Phase 1 ---------------------------------------------------------
+    if n_art > 0 {
+        // Cost row: minimize sum of artificials.
+        let cost_off = m * width;
+        for cell in t[cost_off..cost_off + width].iter_mut() {
+            *cell = 0.0;
+        }
+        for &c in &art_cols {
+            t[cost_off + c] = 1.0;
+        }
+        // Price out the (artificial) basis.
+        for i in 0..m {
+            if is_art(basis[i]) {
+                for j in 0..width {
+                    t[cost_off + j] -= t[i * width + j];
+                }
+            }
+        }
+        match pivot_loop(&mut t, &mut basis, m, total, width, &mut iters, iter_limit, bland_after, |_| true) {
+            PivotOutcome::Optimal => {}
+            PivotOutcome::Unbounded => {
+                // Phase-1 objective is bounded below by 0; unbounded means bug.
+                return fail(LpStatus::IterLimit, p, iters);
+            }
+            PivotOutcome::IterLimit => return fail(LpStatus::IterLimit, p, iters),
+        }
+        let phase1_obj = -t[m * width + total];
+        if phase1_obj > 1e-7 {
+            return fail(LpStatus::Infeasible, p, iters);
+        }
+        // Drive artificials out of the basis where possible.
+        for i in 0..m {
+            if is_art(basis[i]) {
+                let off = i * width;
+                if let Some(j) = (0..n_cols + n_slack).find(|&j| t[off + j].abs() > 1e-7) {
+                    pivot(&mut t, &mut basis, m, width, i, j);
+                } // else: redundant row; artificial stays basic at 0.
+            }
+        }
+    }
+
+    // ---- 6. Phase 2 ---------------------------------------------------------
+    let cost_off = m * width;
+    for cell in t[cost_off..cost_off + width].iter_mut() {
+        *cell = 0.0;
+    }
+    t[cost_off..cost_off + n_cols].copy_from_slice(&cost);
+    // Price out the current basis.
+    for i in 0..m {
+        let b = basis[i];
+        if b < total {
+            let cb = if b < n_cols { cost[b] } else { 0.0 };
+            if cb != 0.0 {
+                for j in 0..width {
+                    t[cost_off + j] -= cb * t[i * width + j];
+                }
+            }
+        }
+    }
+    let allow = |c: usize| !is_art(c); // artificials must not re-enter
+    match pivot_loop(&mut t, &mut basis, m, total, width, &mut iters, iter_limit, bland_after, allow) {
+        PivotOutcome::Optimal => {}
+        PivotOutcome::Unbounded => return fail(LpStatus::Unbounded, p, iters),
+        PivotOutcome::IterLimit => return fail(LpStatus::IterLimit, p, iters),
+    }
+
+    // ---- 7. Extract solution ------------------------------------------------
+    let mut xs = vec![0.0; n_cols + n_slack + n_art];
+    for i in 0..m {
+        if basis[i] < xs.len() {
+            xs[basis[i]] = t[i * width + total];
+        }
+    }
+    let mut x = vec![0.0; p.vars.len()];
+    for (vi, map) in maps.iter().enumerate() {
+        x[vi] = match *map {
+            Map::Fixed(v) => v,
+            Map::Shifted { col, lb } => xs[col] + lb,
+            Map::Negated { col, ub } => ub - xs[col],
+            Map::Split { pos, neg } => xs[pos] - xs[neg],
+        };
+    }
+    let obj = p.objective_value(&x);
+    let _ = obj_const; // objective_value already includes the constant
+    LpSolution { status: LpStatus::Optimal, x, obj, iters }
+}
+
+fn fail(status: LpStatus, p: &Problem, iters: usize) -> LpSolution {
+    LpSolution { status, x: vec![0.0; p.vars.len()], obj: f64::NAN, iters }
+}
+
+enum PivotOutcome {
+    Optimal,
+    Unbounded,
+    IterLimit,
+}
+
+/// Run pivots until optimality/unboundedness. `allow(col)` filters entering
+/// candidates (used to lock artificials out in phase 2).
+#[allow(clippy::too_many_arguments)]
+fn pivot_loop<F: Fn(usize) -> bool>(
+    t: &mut [f64],
+    basis: &mut [usize],
+    m: usize,
+    total: usize,
+    width: usize,
+    iters: &mut usize,
+    iter_limit: usize,
+    bland_after: usize,
+    allow: F,
+) -> PivotOutcome {
+    loop {
+        if *iters >= iter_limit {
+            return PivotOutcome::IterLimit;
+        }
+        let cost_off = m * width;
+        // Entering column.
+        let entering = if *iters < bland_after {
+            // Dantzig: most negative reduced cost.
+            let mut best = None;
+            let mut best_val = -EPS;
+            for j in 0..total {
+                let rc = t[cost_off + j];
+                if rc < best_val && allow(j) {
+                    best_val = rc;
+                    best = Some(j);
+                }
+            }
+            best
+        } else {
+            // Bland: first negative.
+            (0..total).find(|&j| t[cost_off + j] < -EPS && allow(j))
+        };
+        let Some(e) = entering else {
+            return PivotOutcome::Optimal;
+        };
+        // Ratio test.
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            let a = t[i * width + e];
+            if a > EPS {
+                let ratio = t[i * width + total] / a;
+                // Ties: prefer the row whose basic var has the smallest index
+                // (lexicographic-ish anti-cycling).
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(false))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return PivotOutcome::Unbounded;
+        };
+        pivot(t, basis, m, width, l, e);
+        *iters += 1;
+    }
+}
+
+/// Gauss-pivot on (row, col), updating the cost row too.
+///
+/// The update only touches the pivot row's *non-zero* columns: early in a
+/// solve the tableau is sparse (structural constraint matrices here have
+/// ~3 entries per column), and skipping zeros cuts the dominant
+/// m×width daxpy cost substantially before fill-in densifies the tableau
+/// (≈2× on the 161×2227 partitioning root LP — EXPERIMENTS.md §Perf).
+fn pivot(t: &mut [f64], basis: &mut [usize], _m: usize, width: usize, row: usize, col: usize) {
+    let piv = t[row * width + col];
+    debug_assert!(piv.abs() > 1e-12, "pivot on ~zero");
+    let inv = 1.0 / piv;
+    for j in 0..width {
+        t[row * width + j] *= inv;
+    }
+    // Collect the pivot row's support once.
+    let (before, from_row) = t.split_at_mut(row * width);
+    let (pivot_row, after) = from_row.split_at_mut(width);
+    let nonzero: Vec<usize> = (0..width).filter(|&j| pivot_row[j] != 0.0).collect();
+    let update = |chunk: &mut [f64]| {
+        for r in chunk.chunks_exact_mut(width) {
+            let factor = r[col];
+            if factor.abs() > 1e-13 {
+                for &j in &nonzero {
+                    r[j] -= factor * pivot_row[j];
+                }
+                r[col] = 0.0; // exact zero to stop drift
+            }
+        }
+    };
+    update(before);
+    update(after);
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::milp::lp::{Cmp, Problem};
+
+    fn assert_opt(sol: &LpSolution, obj: f64, x: &[f64]) {
+        assert_eq!(sol.status, LpStatus::Optimal, "{sol:?}");
+        assert!((sol.obj - obj).abs() < 1e-6, "obj {} != {obj}", sol.obj);
+        for (i, xi) in x.iter().enumerate() {
+            assert!((sol.x[i] - xi).abs() < 1e-6, "x[{i}] {} != {xi}", sol.x[i]);
+        }
+    }
+
+    #[test]
+    fn textbook_max_problem() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 -> (2, 6), obj 36.
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        let y = p.cont("y", 0.0, f64::INFINITY);
+        p.constrain(vec![(x, 1.0)], Cmp::Le, 4.0);
+        p.constrain(vec![(y, 2.0)], Cmp::Le, 12.0);
+        p.constrain(vec![(x, 3.0), (y, 2.0)], Cmp::Le, 18.0);
+        p.minimize(vec![(x, -3.0), (y, -5.0)]);
+        let sol = solve(&p);
+        assert_opt(&sol, -36.0, &[2.0, 6.0]);
+    }
+
+    #[test]
+    fn equality_and_ge_constraints() {
+        // min x + y s.t. x + y = 10, x >= 3, y >= 2 -> obj 10.
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        let y = p.cont("y", 0.0, f64::INFINITY);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 10.0);
+        p.constrain(vec![(x, 1.0)], Cmp::Ge, 3.0);
+        p.constrain(vec![(y, 1.0)], Cmp::Ge, 2.0);
+        p.minimize(vec![(x, 1.0), (y, 1.0)]);
+        let sol = solve(&p);
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.obj - 10.0).abs() < 1e-7);
+        assert!(sol.x[0] >= 3.0 - 1e-7 && sol.x[1] >= 2.0 - 1e-7);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        p.constrain(vec![(x, 1.0)], Cmp::Le, 1.0);
+        p.constrain(vec![(x, 1.0)], Cmp::Ge, 2.0);
+        p.minimize(vec![(x, 1.0)]);
+        assert_eq!(solve(&p).status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        p.minimize(vec![(x, -1.0)]);
+        assert_eq!(solve(&p).status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn respects_variable_bounds() {
+        // min -x with x in [0, 7] -> x = 7.
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, 7.0);
+        p.minimize(vec![(x, -1.0)]);
+        assert_opt(&solve(&p), -7.0, &[7.0]);
+    }
+
+    #[test]
+    fn shifted_lower_bound() {
+        // min x with x in [3, 10] -> 3.
+        let mut p = Problem::new();
+        let x = p.cont("x", 3.0, 10.0);
+        p.minimize(vec![(x, 1.0)]);
+        assert_opt(&solve(&p), 3.0, &[3.0]);
+    }
+
+    #[test]
+    fn negative_lower_bound() {
+        // min x with x in [-5, 5] -> -5.
+        let mut p = Problem::new();
+        let x = p.cont("x", -5.0, 5.0);
+        p.minimize(vec![(x, 1.0)]);
+        assert_opt(&solve(&p), -5.0, &[-5.0]);
+    }
+
+    #[test]
+    fn free_variable_split() {
+        // min x s.t. x >= -4 encoded as a constraint on a free var.
+        let mut p = Problem::new();
+        let x = p.cont("x", f64::NEG_INFINITY, f64::INFINITY);
+        p.constrain(vec![(x, 1.0)], Cmp::Ge, -4.0);
+        p.minimize(vec![(x, 1.0)]);
+        assert_opt(&solve(&p), -4.0, &[-4.0]);
+    }
+
+    #[test]
+    fn negated_upper_bounded_var() {
+        // x in (-inf, 3], min -x -> 3.
+        let mut p = Problem::new();
+        let x = p.cont("x", f64::NEG_INFINITY, 3.0);
+        p.minimize(vec![(x, -1.0)]);
+        assert_opt(&solve(&p), -3.0, &[3.0]);
+    }
+
+    #[test]
+    fn fixed_variable_substituted() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 2.0, 2.0);
+        let y = p.cont("y", 0.0, f64::INFINITY);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 5.0);
+        p.minimize(vec![(y, -1.0)]);
+        assert_opt(&solve(&p), -3.0, &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn negative_rhs_row_normalized() {
+        // -x <= -2  (i.e. x >= 2); min x -> 2.
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        p.constrain(vec![(x, -1.0)], Cmp::Le, -2.0);
+        p.minimize(vec![(x, 1.0)]);
+        assert_opt(&solve(&p), 2.0, &[2.0]);
+    }
+
+    #[test]
+    fn degenerate_problem_terminates() {
+        // Classic degeneracy: multiple identical constraints.
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        let y = p.cont("y", 0.0, f64::INFINITY);
+        for _ in 0..5 {
+            p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 1.0);
+        }
+        p.minimize(vec![(x, -1.0), (y, -2.0)]);
+        let sol = solve(&p);
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.obj + 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn objective_constant_carried() {
+        let mut p = Problem::new();
+        let x = p.cont("x", 1.0, 2.0);
+        p.obj_const = 100.0;
+        p.minimize(vec![(x, 1.0)]);
+        let sol = solve(&p);
+        assert!((sol.obj - 101.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn redundant_equality_rows() {
+        // x + y = 4 twice plus x - y = 0 -> x = y = 2.
+        let mut p = Problem::new();
+        let x = p.cont("x", 0.0, f64::INFINITY);
+        let y = p.cont("y", 0.0, f64::INFINITY);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 4.0);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 4.0);
+        p.constrain(vec![(x, 1.0), (y, -1.0)], Cmp::Eq, 0.0);
+        p.minimize(vec![(x, 1.0)]);
+        let sol = solve(&p);
+        assert_opt(&sol, 2.0, &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn moderately_sized_random_lp_solves() {
+        // Transportation-style LP: 20 sources x 30 sinks.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        let (ns, nd) = (20, 30);
+        let mut p = Problem::new();
+        let mut vars = vec![];
+        for i in 0..ns {
+            for j in 0..nd {
+                vars.push(p.cont(&format!("x{i}_{j}"), 0.0, f64::INFINITY));
+            }
+        }
+        // Each sink needs 1 unit; each source supplies at most 2.
+        for j in 0..nd {
+            let terms: Vec<_> = (0..ns).map(|i| (vars[i * nd + j], 1.0)).collect();
+            p.constrain(terms, Cmp::Eq, 1.0);
+        }
+        for i in 0..ns {
+            let terms: Vec<_> = (0..nd).map(|j| (vars[i * nd + j], 1.0)).collect();
+            p.constrain(terms, Cmp::Le, 2.0);
+        }
+        let costs: Vec<f64> = (0..ns * nd).map(|_| rng.range_f64(1.0, 10.0)).collect();
+        p.minimize(vars.iter().zip(&costs).map(|(v, c)| (*v, *c)).collect());
+        let sol = solve(&p);
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!(p.relaxed().is_feasible(&sol.x, 1e-6));
+        // Objective can't beat assigning every sink its cheapest source.
+        let lb: f64 = (0..nd)
+            .map(|j| (0..ns).map(|i| costs[i * nd + j]).fold(f64::INFINITY, f64::min))
+            .sum();
+        assert!(sol.obj >= lb - 1e-6);
+    }
+}

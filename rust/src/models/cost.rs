@@ -1,0 +1,113 @@
+//! Cost model — Equation 1b of the paper: `C(L) = ⌈L/ρ⌉ · π`.
+//!
+//! IaaS billing is quantised: usage is rounded *up* to whole time quanta ρ
+//! (1 min for Azure, 10 min for GCE, 60 min for AWS — Table I) and charged
+//! at the platform rate π. The non-linearity this ceiling introduces is one
+//! of the two effects (with γ setup time) that the paper's MILP exploits and
+//! the heuristic misses (§IV.C.2).
+
+/// Billing terms of one platform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Time quantum ρ in seconds.
+    pub quantum_secs: f64,
+    /// Rate π in $ per *hour* (the industry quote unit, Table I/II).
+    pub rate_per_hour: f64,
+}
+
+impl CostModel {
+    pub fn new(quantum_secs: f64, rate_per_hour: f64) -> CostModel {
+        assert!(quantum_secs > 0.0, "quantum must be positive");
+        assert!(rate_per_hour >= 0.0, "rate must be non-negative");
+        CostModel { quantum_secs, rate_per_hour }
+    }
+
+    /// Number of quanta billed for a latency (the integer `D` of Eq. 4).
+    pub fn quanta(&self, latency_secs: f64) -> u64 {
+        if latency_secs <= 0.0 {
+            return 0;
+        }
+        (latency_secs / self.quantum_secs).ceil() as u64
+    }
+
+    /// $ per quantum.
+    pub fn rate_per_quantum(&self) -> f64 {
+        self.rate_per_hour * self.quantum_secs / 3600.0
+    }
+
+    /// Billed cost in $ for a latency (Eq. 1b).
+    pub fn cost(&self, latency_secs: f64) -> f64 {
+        self.quanta(latency_secs) as f64 * self.rate_per_quantum()
+    }
+
+    /// Un-quantised cost — the continuous relaxation used by LP bounds.
+    /// Always a lower bound on [`Self::cost`].
+    pub fn cost_relaxed(&self, latency_secs: f64) -> f64 {
+        latency_secs.max(0.0) / 3600.0 * self.rate_per_hour
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{prop_assert, prop_check};
+
+    #[test]
+    fn billing_rounds_up() {
+        // AWS-style 60-min quantum at $0.65/h.
+        let m = CostModel::new(3600.0, 0.65);
+        assert_eq!(m.quanta(1.0), 1);
+        assert_eq!(m.quanta(3600.0), 1);
+        assert_eq!(m.quanta(3601.0), 2);
+        assert!((m.cost(1.0) - 0.65).abs() < 1e-12);
+        assert!((m.cost(7200.0) - 1.30).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_latency_costs_nothing() {
+        let m = CostModel::new(60.0, 0.592);
+        assert_eq!(m.quanta(0.0), 0);
+        assert_eq!(m.cost(0.0), 0.0);
+    }
+
+    #[test]
+    fn short_quantum_bills_finer() {
+        // Azure 1-min vs AWS 60-min quantum, same hourly rate: for a 5-min
+        // job Azure bills 5 minutes, AWS bills the full hour.
+        let azure = CostModel::new(60.0, 0.60);
+        let aws = CostModel::new(3600.0, 0.60);
+        let latency = 300.0;
+        assert!((azure.cost(latency) - 0.05).abs() < 1e-12);
+        assert!((aws.cost(latency) - 0.60).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relaxed_cost_is_a_lower_bound() {
+        prop_check("relaxed cost <= billed cost", 300, |g| {
+            let m = CostModel::new(g.f64(1.0, 7200.0), g.f64(0.0, 5.0));
+            let latency = g.f64(0.0, 100_000.0);
+            prop_assert(
+                m.cost_relaxed(latency) <= m.cost(latency) + 1e-9,
+                "relaxation exceeded billed cost",
+            )
+        });
+    }
+
+    #[test]
+    fn billed_cost_within_one_quantum_of_relaxed() {
+        prop_check("billed - relaxed <= one quantum", 300, |g| {
+            let m = CostModel::new(g.f64(1.0, 7200.0), g.f64(0.01, 5.0));
+            let latency = g.f64(0.001, 100_000.0);
+            prop_assert(
+                m.cost(latency) - m.cost_relaxed(latency) <= m.rate_per_quantum() + 1e-9,
+                "quantisation overshoot beyond one quantum",
+            )
+        });
+    }
+
+    #[test]
+    fn rate_per_quantum_scales_with_quantum() {
+        let m = CostModel::new(600.0, 0.352); // GCE: 10-min quantum
+        assert!((m.rate_per_quantum() - 0.352 / 6.0).abs() < 1e-12);
+    }
+}

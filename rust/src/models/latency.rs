@@ -1,0 +1,135 @@
+//! Latency model — Equation 1a of the paper: `L(N) = β·N + γ`.
+//!
+//! The proportional term β reflects O(N) Monte Carlo work; the constant γ
+//! the task-initiation overhead (communication, FPGA configuration, …).
+//! Coefficients are fitted from benchmark samples with *weighted* least
+//! squares (§III.A); we use 1/L² weights so relative error is what's
+//! minimised — matching the paper's Fig. 2 evaluation metric.
+
+use crate::util::stats::{self, LinearFit};
+
+/// `L(N) = beta*N + gamma`, latencies in seconds, N in simulations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyModel {
+    pub beta: f64,
+    pub gamma: f64,
+    /// R² of the fit on the benchmark data (1.0 for exact models).
+    pub r_squared: f64,
+}
+
+impl LatencyModel {
+    pub fn new(beta: f64, gamma: f64) -> LatencyModel {
+        assert!(beta > 0.0 && beta.is_finite(), "beta must be positive: {beta}");
+        assert!(gamma >= 0.0 && gamma.is_finite(), "gamma must be non-negative: {gamma}");
+        LatencyModel { beta, gamma, r_squared: 1.0 }
+    }
+
+    /// Predicted latency for `n` simulations (n = 0 ⇒ no work ⇒ 0, not γ).
+    pub fn predict(&self, n: u64) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.beta * n as f64 + self.gamma
+        }
+    }
+
+    /// Largest `n` whose predicted latency fits within `budget_secs`
+    /// (0 if even the setup time doesn't fit).
+    pub fn max_n_within(&self, budget_secs: f64) -> u64 {
+        if budget_secs <= self.gamma {
+            return 0;
+        }
+        ((budget_secs - self.gamma) / self.beta).floor() as u64
+    }
+
+    /// Fit from benchmark samples `(n, latency_secs)` using WLS with 1/L²
+    /// (relative-error) weights. Returns `None` for degenerate inputs.
+    /// Negative fitted coefficients are clamped to tiny positive values —
+    /// they arise only from noise on near-degenerate sample sets.
+    pub fn fit(samples: &[(u64, f64)]) -> Option<LatencyModel> {
+        if samples.len() < 2 {
+            return None;
+        }
+        let xs: Vec<f64> = samples.iter().map(|(n, _)| *n as f64).collect();
+        let ys: Vec<f64> = samples.iter().map(|(_, l)| *l).collect();
+        if ys.iter().any(|l| *l <= 0.0) {
+            return None;
+        }
+        let ws: Vec<f64> = ys.iter().map(|l| 1.0 / (l * l)).collect();
+        let LinearFit { slope, intercept, r_squared } =
+            stats::weighted_least_squares(&xs, &ys, &ws)?;
+        Some(LatencyModel {
+            beta: slope.max(1e-15),
+            gamma: intercept.max(0.0),
+            r_squared,
+        })
+    }
+
+    /// Relative prediction error vs an observed latency (Fig. 2 metric).
+    pub fn relative_error(&self, n: u64, observed_secs: f64) -> f64 {
+        stats::relative_error(self.predict(n), observed_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn predict_is_linear_with_setup() {
+        let m = LatencyModel::new(1e-6, 2.0);
+        assert!((m.predict(1_000_000) - 3.0).abs() < 1e-12);
+        assert_eq!(m.predict(0), 0.0);
+    }
+
+    #[test]
+    fn fit_recovers_exact_model() {
+        let truth = LatencyModel::new(5e-7, 1.5);
+        let samples: Vec<(u64, f64)> =
+            (1..20).map(|i| (i * 100_000, truth.predict(i * 100_000))).collect();
+        let fit = LatencyModel::fit(&samples).unwrap();
+        assert!((fit.beta - truth.beta).abs() / truth.beta < 1e-9);
+        assert!((fit.gamma - truth.gamma).abs() < 1e-6);
+        assert!(fit.r_squared > 0.999999);
+    }
+
+    #[test]
+    fn fit_under_noise_extrapolates_within_10pct() {
+        // The paper's Fig. 2 claim: <=10% error at many times the benchmark
+        // size. Benchmark at n <= 1e6, predict at 3e7 (30x extrapolation).
+        let truth = LatencyModel::new(2e-6, 5.0);
+        let mut rng = Rng::new(17);
+        let samples: Vec<(u64, f64)> = (1..=30)
+            .map(|i| {
+                let n = i * 33_000;
+                (n, truth.predict(n) * rng.lognormal_noise(0.05))
+            })
+            .collect();
+        let fit = LatencyModel::fit(&samples).unwrap();
+        let err = fit.relative_error(30_000_000, truth.predict(30_000_000));
+        assert!(err < 0.10, "extrapolation error {err}");
+    }
+
+    #[test]
+    fn fit_rejects_degenerate() {
+        assert!(LatencyModel::fit(&[]).is_none());
+        assert!(LatencyModel::fit(&[(10, 1.0)]).is_none());
+        assert!(LatencyModel::fit(&[(10, 1.0), (10, 1.1)]).is_none()); // same n
+        assert!(LatencyModel::fit(&[(10, 0.0), (20, 1.0)]).is_none()); // zero latency
+    }
+
+    #[test]
+    fn max_n_within_budget() {
+        let m = LatencyModel::new(1e-3, 2.0);
+        assert_eq!(m.max_n_within(1.0), 0); // can't even set up
+        assert_eq!(m.max_n_within(3.0), 1000);
+        assert_eq!(m.max_n_within(2.0005), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "beta")]
+    fn zero_beta_rejected() {
+        LatencyModel::new(0.0, 1.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Predictive runtime-characteristic models (§III.A of the paper):
+//! latency `L(N) = βN + γ`, quantised IaaS cost `C = ⌈L/ρ⌉π`, and the
+//! TCO-based rate derivation for devices without market prices (Eq. 2).
+
+pub mod cost;
+pub mod latency;
+pub mod tco;
+
+pub use cost::CostModel;
+pub use latency::LatencyModel;
+pub use tco::{DatacentreModel, TcoInputs};
+
+/// The latency + cost models of one (task, platform) pairing, the unit the
+/// partitioners consume.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskPlatformModel {
+    pub latency: LatencyModel,
+    pub cost: CostModel,
+}
+
+impl TaskPlatformModel {
+    /// Predicted latency of running `n` simulations.
+    pub fn latency_secs(&self, n: u64) -> f64 {
+        self.latency.predict(n)
+    }
+
+    /// Billed cost of running `n` simulations in isolation.
+    pub fn cost_usd(&self, n: u64) -> f64 {
+        self.cost.cost(self.latency.predict(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_platform_model_composes() {
+        let m = TaskPlatformModel {
+            latency: LatencyModel::new(1e-3, 10.0),
+            cost: CostModel::new(60.0, 3.6),
+        };
+        // 50_000 sims -> 60 s -> 1 quantum -> $0.06.
+        assert!((m.latency_secs(50_000) - 60.0).abs() < 1e-9);
+        assert!((m.cost_usd(50_000) - 0.06).abs() < 1e-12);
+    }
+}

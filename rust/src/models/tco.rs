@@ -1,0 +1,193 @@
+//! Total-cost-of-ownership pricing — Equation 2 + Table III of the paper.
+//!
+//! In the absence of market prices for IaaS FPGAs, the paper derives a rate:
+//!
+//! ```text
+//! π   = DBR × RDP
+//! DBR = (TCO + PM) · ρ / P
+//! ```
+//!
+//! where DBR is the Device Base Rate (cost per device per time quantum) from
+//! an Uptime-Institute-style datacentre TCO model, and RDP is the Relative
+//! Device Performance — device performance relative to the (count-weighted)
+//! mean of the devices *of the same type* in the datacentre, mirroring how
+//! the market prices within a device category (§II.A).
+//!
+//! The datacentre overhead coefficients below are calibrated so the model
+//! reproduces Table III's calculated rates ($0.46 FPGA / $0.64 GPU /
+//! $0.50 CPU per hour) from its published inputs; they absorb energy,
+//! cooling, facility amortisation, and staffing at 2015 prices.
+
+/// Hours per year used throughout the paper's tables.
+pub const HOURS_PER_YEAR: f64 = 8760.0;
+
+/// Datacentre-wide overhead coefficients (Uptime Institute simple model,
+/// collapsed to per-device terms; see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct DatacentreModel {
+    /// $/W/year: energy + cooling + power-infrastructure amortisation.
+    pub per_watt_annual: f64,
+    /// $/device/year: space, network, staffing.
+    pub fixed_annual: f64,
+}
+
+impl Default for DatacentreModel {
+    fn default() -> Self {
+        // Calibrated against Table III (see module docs + tests).
+        DatacentreModel { per_watt_annual: 6.6, fixed_annual: 1280.0 }
+    }
+}
+
+/// Per-device-type TCO inputs — the rows of Table III.
+#[derive(Debug, Clone, Copy)]
+pub struct TcoInputs {
+    /// Device capital cost, $.
+    pub capital_cost: f64,
+    /// Device draw in watts.
+    pub energy_watts: f64,
+    /// Capital recovery period in years.
+    pub recovery_years: f64,
+    /// Fraction of wall-clock hours actually billed to customers.
+    pub charged_usage: f64,
+    /// Provider profit margin (0.20 = 20%).
+    pub profit_margin: f64,
+}
+
+impl TcoInputs {
+    /// Annual total cost of ownership for one device, $.
+    pub fn annual_tco(&self, dc: &DatacentreModel) -> f64 {
+        self.capital_cost / self.recovery_years
+            + self.energy_watts * dc.per_watt_annual
+            + dc.fixed_annual
+    }
+
+    /// Device Base Rate in $/hour: `(TCO + PM) · ρ/P` with ρ = 1 hour,
+    /// amortised over the *charged* hours only.
+    pub fn device_base_rate(&self, dc: &DatacentreModel) -> f64 {
+        self.annual_tco(dc) * (1.0 + self.profit_margin)
+            / (HOURS_PER_YEAR * self.charged_usage)
+    }
+}
+
+/// Relative Device Performance: performance of a device relative to the
+/// count-weighted mean performance of the same-type population (the
+/// weighting Table II's FPGA rates imply — verified in tests).
+pub fn relative_device_performance(perf: f64, population: &[(f64, usize)]) -> f64 {
+    assert!(!population.is_empty(), "empty device population");
+    let (sum, count) = population
+        .iter()
+        .fold((0.0, 0usize), |(s, c), (p, n)| (s + p * *n as f64, c + n));
+    assert!(count > 0 && sum > 0.0, "degenerate device population");
+    perf / (sum / count as f64)
+}
+
+/// π = DBR × RDP (Eq. 2), in $/hour.
+pub fn device_rate(inputs: &TcoInputs, dc: &DatacentreModel, rdp: f64) -> f64 {
+    inputs.device_base_rate(dc) * rdp
+}
+
+/// The paper's Table III input rows (2015 prices).
+pub mod table3 {
+    use super::TcoInputs;
+
+    pub const FPGA: TcoInputs = TcoInputs {
+        capital_cost: 5370.0,
+        energy_watts: 50.0,
+        recovery_years: 5.0,
+        charged_usage: 0.80,
+        profit_margin: 0.20,
+    };
+    pub const GPU: TcoInputs = TcoInputs {
+        capital_cost: 3120.0,
+        energy_watts: 135.0,
+        recovery_years: 2.0,
+        charged_usage: 0.80,
+        profit_margin: 0.20,
+    };
+    pub const CPU: TcoInputs = TcoInputs {
+        capital_cost: 2530.0,
+        energy_watts: 115.0,
+        recovery_years: 2.0,
+        charged_usage: 0.90,
+        profit_margin: 0.20,
+    };
+
+    /// Observed market rates the paper compares against (AWS, April 2015).
+    pub const OBSERVED_GPU: f64 = 0.65;
+    pub const OBSERVED_CPU: f64 = 0.53;
+    /// Rates the paper's model calculates (Table III bottom row).
+    pub const CALCULATED_FPGA: f64 = 0.46;
+    pub const CALCULATED_GPU: f64 = 0.64;
+    pub const CALCULATED_CPU: f64 = 0.50;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table3_calculated_rates() {
+        let dc = DatacentreModel::default();
+        let fpga = table3::FPGA.device_base_rate(&dc);
+        let gpu = table3::GPU.device_base_rate(&dc);
+        let cpu = table3::CPU.device_base_rate(&dc);
+        assert!((fpga - table3::CALCULATED_FPGA).abs() < 0.005, "fpga {fpga}");
+        assert!((gpu - table3::CALCULATED_GPU).abs() < 0.005, "gpu {gpu}");
+        assert!((cpu - table3::CALCULATED_CPU).abs() < 0.005, "cpu {cpu}");
+    }
+
+    #[test]
+    fn calculated_rates_slightly_below_observed() {
+        // §IV.C.1: "both are several percent below those seen in the market".
+        let dc = DatacentreModel::default();
+        let gpu = table3::GPU.device_base_rate(&dc);
+        let cpu = table3::CPU.device_base_rate(&dc);
+        assert!(gpu < table3::OBSERVED_GPU && gpu > 0.9 * table3::OBSERVED_GPU);
+        assert!(cpu < table3::OBSERVED_CPU && cpu > 0.9 * table3::OBSERVED_CPU);
+    }
+
+    #[test]
+    fn rdp_weights_by_population_count() {
+        // Table II FPGA fleet: 4x Virtex (111.978), 8x GSD8 (112.949),
+        // 1x GSD5 (176.871). RDP x $0.46 must give the table's rates.
+        let pop = [(111.978, 4usize), (112.949, 8), (176.871, 1)];
+        let dbr = 0.46;
+        let rates: Vec<f64> = pop
+            .iter()
+            .map(|(p, _)| dbr * relative_device_performance(*p, &pop))
+            .collect();
+        assert!((rates[0] - 0.438).abs() < 0.002, "virtex {:.4}", rates[0]);
+        assert!((rates[1] - 0.442).abs() < 0.002, "gsd8 {:.4}", rates[1]);
+        assert!((rates[2] - 0.692).abs() < 0.002, "gsd5 {:.4}", rates[2]);
+    }
+
+    #[test]
+    fn rdp_of_mean_device_is_one() {
+        let pop = [(100.0, 3usize)];
+        assert!((relative_device_performance(100.0, &pop) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn higher_usage_lowers_rate() {
+        let dc = DatacentreModel::default();
+        let mut busy = table3::FPGA;
+        busy.charged_usage = 0.95;
+        assert!(busy.device_base_rate(&dc) < table3::FPGA.device_base_rate(&dc));
+    }
+
+    #[test]
+    fn margin_scales_rate_linearly() {
+        let dc = DatacentreModel::default();
+        let mut cheap = table3::GPU;
+        cheap.profit_margin = 0.0;
+        let with_margin = table3::GPU.device_base_rate(&dc);
+        let without = cheap.device_base_rate(&dc);
+        assert!((with_margin / without - 1.2).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty device population")]
+    fn empty_population_panics() {
+        relative_device_performance(1.0, &[]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Cluster assembly: a named collection of [`Platform`] trait objects the
+//! coordinator partitions work across.
+
+use std::sync::Arc;
+
+use crate::workload::option::OptionTask;
+
+use super::sim::{SimConfig, SimPlatform};
+use super::spec::PlatformSpec;
+use super::{ExecOutcome, Platform};
+
+/// A heterogeneous cluster. Platforms are shared (`Arc`) so executor worker
+/// threads can dispatch concurrently.
+#[derive(Clone)]
+pub struct Cluster {
+    platforms: Vec<Arc<dyn Platform>>,
+}
+
+impl Cluster {
+    pub fn new(platforms: Vec<Arc<dyn Platform>>) -> Cluster {
+        assert!(!platforms.is_empty(), "empty cluster");
+        let mut names: Vec<String> =
+            platforms.iter().map(|p| p.spec().name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), platforms.len(), "duplicate platform names");
+        Cluster { platforms }
+    }
+
+    /// Build a fully simulated cluster from specs (the Table II testbed).
+    pub fn simulated(specs: &[PlatformSpec], cfg: &SimConfig, seed: u64) -> Cluster {
+        let platforms = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Arc::new(SimPlatform::new(s.clone(), cfg.clone(), seed.wrapping_add(i as u64)))
+                    as Arc<dyn Platform>
+            })
+            .collect();
+        Cluster::new(platforms)
+    }
+
+    /// Append a platform (e.g. the native PJRT one).
+    pub fn push(&mut self, p: Arc<dyn Platform>) {
+        assert!(
+            self.platforms.iter().all(|q| q.spec().name != p.spec().name),
+            "duplicate platform name {}",
+            p.spec().name
+        );
+        self.platforms.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.platforms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.platforms.is_empty()
+    }
+
+    pub fn platform(&self, i: usize) -> &Arc<dyn Platform> {
+        &self.platforms[i]
+    }
+
+    pub fn platforms(&self) -> &[Arc<dyn Platform>] {
+        &self.platforms
+    }
+
+    pub fn specs(&self) -> Vec<PlatformSpec> {
+        self.platforms.iter().map(|p| p.spec().clone()).collect()
+    }
+
+    /// Execute on platform `i` (convenience passthrough).
+    pub fn execute(&self, i: usize, task: &OptionTask, n: u64, seed: u32, offset: u32) -> ExecOutcome {
+        self.platforms[i].execute(task, n, seed, offset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms::spec::{paper_cluster, small_cluster};
+    use crate::workload::{generate, GeneratorConfig};
+
+    #[test]
+    fn builds_paper_testbed() {
+        let c = Cluster::simulated(&paper_cluster(), &SimConfig::exact(), 1);
+        assert_eq!(c.len(), 16);
+    }
+
+    #[test]
+    fn execute_passthrough_works() {
+        let c = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 1);
+        let w = generate(&GeneratorConfig::small(1, 0.1, 2));
+        let out = c.execute(0, &w.tasks[0], 10_000, 1, 0);
+        assert!(out.error.is_none());
+        assert!(out.latency_secs > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate platform names")]
+    fn duplicate_names_rejected() {
+        let spec = small_cluster()[0].clone();
+        let a = Arc::new(SimPlatform::new(spec.clone(), SimConfig::exact(), 1)) as Arc<dyn Platform>;
+        let b = Arc::new(SimPlatform::new(spec, SimConfig::exact(), 2)) as Arc<dyn Platform>;
+        Cluster::new(vec![a, b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty cluster")]
+    fn empty_cluster_rejected() {
+        Cluster::new(vec![]);
+    }
+}

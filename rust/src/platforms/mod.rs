@@ -1,0 +1,43 @@
+//! Platforms: the heterogeneous compute substrate the coordinator partitions
+//! work across — simulated (Table II testbed stand-ins) and native (real
+//! PJRT execution of the AOT artifacts).
+
+pub mod cluster;
+pub mod native;
+pub mod sim;
+pub mod spec;
+
+pub use cluster::Cluster;
+pub use sim::{SimConfig, SimPlatform};
+pub use spec::{paper_cluster, small_cluster, Category, PlatformSpec};
+
+use crate::pricing::mc::PayoffStats;
+use crate::workload::option::OptionTask;
+
+/// Result of executing a batch of `n` simulations on a platform.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    /// Wall-clock (native) or simulated latency, seconds.
+    pub latency_secs: f64,
+    /// Raw payoff statistics (None when the execution failed).
+    pub stats: Option<PayoffStats>,
+    /// Failure description, if any.
+    pub error: Option<String>,
+}
+
+/// A compute platform the coordinator can dispatch Monte Carlo work to.
+///
+/// `offset` is the starting path counter of this platform's slice of the
+/// task's path space; disjoint slices compose to exactly the statistics of
+/// a single-platform run (counter-based RNG — see `pricing::mc`).
+pub trait Platform: Send + Sync {
+    fn spec(&self) -> &PlatformSpec;
+    fn execute(&self, task: &OptionTask, n: u64, seed: u32, offset: u32) -> ExecOutcome;
+
+    /// Timing-only execution for the §III.A benchmarking procedure —
+    /// platforms that can skip producing payoff statistics (the simulator)
+    /// override this; the native platform's pricing IS its latency.
+    fn benchmark_execute(&self, task: &OptionTask, n: u64, seed: u32) -> ExecOutcome {
+        self.execute(task, n, seed, 0)
+    }
+}

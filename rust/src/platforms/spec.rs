@@ -1,0 +1,333 @@
+//! Platform specification database — Tables I and II of the paper, embedded
+//! verbatim (April-2015 prices).
+
+use crate::models::CostModel;
+
+/// Device category. Pricing correlates with performance *within* a category
+/// but not across categories — the market inefficiency the paper exploits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Cpu,
+    Gpu,
+    Fpga,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Cpu => "CPU",
+            Category::Gpu => "GPU",
+            Category::Fpga => "FPGA",
+        }
+    }
+}
+
+/// FPGA resource counts (Table II columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FpgaResources {
+    pub luts_k: u32,
+    pub flipflops_k: u32,
+    pub brams: u32,
+    pub dsps: u32,
+}
+
+/// One concrete platform instance of the experimental cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    /// Unique instance name, e.g. `virtex6-475t-2`.
+    pub name: String,
+    /// IaaS provider, if offered by one today ("-" in Table II otherwise).
+    pub provider: Option<&'static str>,
+    pub device: &'static str,
+    /// Programming standard (tool) the paper used on this device.
+    pub standard: &'static str,
+    pub category: Category,
+    pub resources: Option<FpgaResources>,
+    pub clock_ghz: f64,
+    /// Application performance on the option-pricing benchmark, GFLOPS.
+    pub app_gflops: f64,
+    /// IaaS rate, $/hour (market rate or Eq. 2-derived for FPGAs).
+    pub rate_per_hour: f64,
+    /// Billing time quantum, seconds.
+    pub quantum_secs: f64,
+    /// Nominal task-setup overhead γ, seconds (device configuration,
+    /// communication; dominated by bitstream load on FPGAs).
+    pub setup_secs: f64,
+}
+
+impl PlatformSpec {
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.quantum_secs, self.rate_per_hour)
+    }
+}
+
+/// One device-type row of Table II plus its instance count.
+struct Row {
+    count: usize,
+    provider: Option<&'static str>,
+    device: &'static str,
+    short: &'static str,
+    standard: &'static str,
+    category: Category,
+    resources: Option<FpgaResources>,
+    clock_ghz: f64,
+    app_gflops: f64,
+    rate_per_hour: f64,
+    quantum_secs: f64,
+    setup_secs: f64,
+}
+
+fn table2_rows() -> Vec<Row> {
+    vec![
+        Row {
+            count: 4,
+            provider: None,
+            device: "Xilinx Virtex 6 475T",
+            short: "virtex6",
+            standard: "OpenSPL (MaxCompiler 2013.2.2)",
+            category: Category::Fpga,
+            resources: Some(FpgaResources { luts_k: 298, flipflops_k: 595, brams: 1064, dsps: 2016 }),
+            clock_ghz: 0.2,
+            app_gflops: 111.978,
+            rate_per_hour: 0.438,
+            // Hypothetical FPGA IaaS billed hourly (DESIGN.md §2).
+            quantum_secs: 3600.0,
+            setup_secs: 40.0, // full-chip bitstream configuration
+        },
+        Row {
+            count: 8,
+            provider: None,
+            device: "Altera Stratix V GSD8",
+            short: "stratix5-gsd8",
+            standard: "OpenSPL (MaxCompiler 2013.2.2)",
+            category: Category::Fpga,
+            resources: Some(FpgaResources { luts_k: 695, flipflops_k: 1050, brams: 2567, dsps: 3926 }),
+            clock_ghz: 0.18,
+            app_gflops: 112.949,
+            rate_per_hour: 0.442,
+            quantum_secs: 3600.0,
+            setup_secs: 40.0,
+        },
+        Row {
+            count: 1,
+            provider: None,
+            device: "Altera Stratix V GSD5",
+            short: "stratix5-gsd5",
+            standard: "OpenCL (Altera SDK 14.0)",
+            category: Category::Fpga,
+            resources: Some(FpgaResources { luts_k: 457, flipflops_k: 690, brams: 2014, dsps: 3180 }),
+            clock_ghz: 0.25,
+            app_gflops: 176.871,
+            rate_per_hour: 0.692,
+            quantum_secs: 3600.0,
+            setup_secs: 25.0, // OpenCL runtime reconfiguration
+        },
+        Row {
+            count: 1,
+            provider: Some("AWS"),
+            device: "Nvidia Grid GK104",
+            short: "gk104",
+            standard: "OpenCL (Nvidia SDK 6.0)",
+            category: Category::Gpu,
+            resources: None,
+            clock_ghz: 0.8,
+            app_gflops: 556.085,
+            rate_per_hour: 0.650,
+            quantum_secs: 3600.0, // AWS hourly billing (Table I)
+            setup_secs: 2.0,      // context + JIT + transfer
+        },
+        Row {
+            count: 1,
+            provider: Some("MA"),
+            device: "Intel Xeon E5-2660",
+            short: "xeon-e5-2660",
+            standard: "POSIX (GCC 4.8)",
+            category: Category::Cpu,
+            resources: None,
+            clock_ghz: 2.2,
+            app_gflops: 4.160,
+            rate_per_hour: 0.480,
+            quantum_secs: 60.0, // Azure 1-minute quantum (Table I)
+            setup_secs: 0.5,
+        },
+        Row {
+            count: 1,
+            provider: Some("GCE"),
+            device: "Intel Xeon",
+            short: "xeon-gce",
+            standard: "POSIX (GCC 4.8)",
+            category: Category::Cpu,
+            resources: None,
+            clock_ghz: 2.0,
+            app_gflops: 6.022,
+            rate_per_hour: 0.352,
+            quantum_secs: 600.0, // GCE 10-minute quantum (Table I)
+            setup_secs: 0.5,
+        },
+    ]
+}
+
+/// The paper's 16-platform experimental cluster (Table II), with instance
+/// counts expanded (4× Virtex-6, 8× GSD8, 1× GSD5, 1× GPU, 2× CPU).
+pub fn paper_cluster() -> Vec<PlatformSpec> {
+    let mut out = Vec::new();
+    for row in table2_rows() {
+        for i in 0..row.count {
+            out.push(PlatformSpec {
+                name: if row.count > 1 {
+                    format!("{}-{}", row.short, i)
+                } else {
+                    row.short.to_string()
+                },
+                provider: row.provider,
+                device: row.device,
+                standard: row.standard,
+                category: row.category,
+                resources: row.resources,
+                clock_ghz: row.clock_ghz,
+                app_gflops: row.app_gflops,
+                rate_per_hour: row.rate_per_hour,
+                quantum_secs: row.quantum_secs,
+                setup_secs: row.setup_secs,
+            });
+        }
+    }
+    out
+}
+
+/// A reduced heterogeneous cluster for fast tests: one of each category.
+pub fn small_cluster() -> Vec<PlatformSpec> {
+    let all = paper_cluster();
+    let mut out = Vec::new();
+    for cat in [Category::Fpga, Category::Gpu, Category::Cpu] {
+        out.push(all.iter().find(|s| s.category == cat).unwrap().clone());
+    }
+    out
+}
+
+/// One row of Table I: IaaS offerings comparison.
+#[derive(Debug, Clone)]
+pub struct IaasOffering {
+    pub provider: &'static str,
+    pub instance_type: &'static str,
+    pub instance_name: &'static str,
+    pub quantum_minutes: u32,
+    pub peak_gflops: f64,
+    pub rate_per_hour: f64,
+}
+
+/// Table I, verbatim (April 2015).
+pub fn table1_offerings() -> Vec<IaasOffering> {
+    vec![
+        IaasOffering {
+            provider: "MA",
+            instance_type: "CPU",
+            instance_name: "A4",
+            quantum_minutes: 1,
+            peak_gflops: 416.0,
+            rate_per_hour: 0.592,
+        },
+        IaasOffering {
+            provider: "GCE",
+            instance_type: "CPU",
+            instance_name: "n1-highcpu-8",
+            quantum_minutes: 10,
+            peak_gflops: 400.0,
+            rate_per_hour: 0.352,
+        },
+        IaasOffering {
+            provider: "AWS",
+            instance_type: "CPU",
+            instance_name: "c3.4xlarge",
+            quantum_minutes: 60,
+            peak_gflops: 883.0,
+            rate_per_hour: 0.924,
+        },
+        IaasOffering {
+            provider: "AWS",
+            instance_type: "GPU",
+            instance_name: "g2.2xlarge",
+            quantum_minutes: 60,
+            peak_gflops: 2289.0,
+            rate_per_hour: 0.650,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_has_sixteen_platforms() {
+        let c = paper_cluster();
+        assert_eq!(c.len(), 16);
+        assert_eq!(c.iter().filter(|p| p.category == Category::Fpga).count(), 13);
+        assert_eq!(c.iter().filter(|p| p.category == Category::Gpu).count(), 1);
+        assert_eq!(c.iter().filter(|p| p.category == Category::Cpu).count(), 2);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let c = paper_cluster();
+        let mut names: Vec<&str> = c.iter().map(|p| p.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 16);
+    }
+
+    #[test]
+    fn fpga_rates_follow_eq2() {
+        // rate = 0.46 x RDP with count-weighted mean performance (tco.rs).
+        use crate::models::tco::relative_device_performance;
+        let pop = [(111.978, 4usize), (112.949, 8), (176.871, 1)];
+        let c = paper_cluster();
+        for p in c.iter().filter(|p| p.category == Category::Fpga) {
+            let expect = 0.46 * relative_device_performance(p.app_gflops, &pop);
+            assert!(
+                (p.rate_per_hour - expect).abs() < 0.002,
+                "{}: {} vs {}",
+                p.name,
+                p.rate_per_hour,
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_outperforms_cpus_per_dollar() {
+        // The Table I/II observation motivating heterogeneity.
+        let c = paper_cluster();
+        let gpu = c.iter().find(|p| p.category == Category::Gpu).unwrap();
+        for cpu in c.iter().filter(|p| p.category == Category::Cpu) {
+            assert!(
+                gpu.app_gflops / gpu.rate_per_hour > 10.0 * cpu.app_gflops / cpu.rate_per_hour
+            );
+        }
+    }
+
+    #[test]
+    fn quanta_match_table1() {
+        let c = paper_cluster();
+        let ma = c.iter().find(|p| p.provider == Some("MA")).unwrap();
+        let gce = c.iter().find(|p| p.provider == Some("GCE")).unwrap();
+        let aws = c.iter().find(|p| p.provider == Some("AWS")).unwrap();
+        assert_eq!(ma.quantum_secs, 60.0);
+        assert_eq!(gce.quantum_secs, 600.0);
+        assert_eq!(aws.quantum_secs, 3600.0);
+    }
+
+    #[test]
+    fn table1_has_four_offerings() {
+        assert_eq!(table1_offerings().len(), 4);
+    }
+
+    #[test]
+    fn small_cluster_is_heterogeneous() {
+        let s = small_cluster();
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().any(|p| p.category == Category::Fpga));
+        assert!(s.iter().any(|p| p.category == Category::Gpu));
+        assert!(s.iter().any(|p| p.category == Category::Cpu));
+    }
+}

@@ -1,0 +1,120 @@
+//! Closed-form Black-Scholes pricing — the end-to-end numerical oracle.
+//!
+//! Used to validate that the whole stack (Pallas kernel → AOT HLO → PJRT
+//! execution → coordinator aggregation) produces correct option prices.
+
+/// Error function via the Abramowitz & Stegun 7.1.26 rational approximation
+/// (|ε| < 1.5e-7 — far below Monte Carlo noise).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Black-Scholes European call price (discounted).
+pub fn call(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
+    assert!(s0 > 0.0 && k > 0.0 && sigma > 0.0 && t > 0.0);
+    let d1 = ((s0 / k).ln() + (r + 0.5 * sigma * sigma) * t) / (sigma * t.sqrt());
+    let d2 = d1 - sigma * t.sqrt();
+    s0 * norm_cdf(d1) - k * (-r * t).exp() * norm_cdf(d2)
+}
+
+/// Black-Scholes European put price (via put-call parity).
+pub fn put(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
+    call(s0, k, r, sigma, t) - s0 + k * (-r * t).exp()
+}
+
+/// Kemna-Vorst geometric-average Asian call with `m` discrete fixings —
+/// a lower bound for the arithmetic Asian call the MC kernels price.
+pub fn geometric_asian_call(s0: f64, k: f64, r: f64, sigma: f64, t: f64, m: u32) -> f64 {
+    assert!(m > 0);
+    let mf = m as f64;
+    let dt = t / mf;
+    let mu = (r - 0.5 * sigma * sigma) * dt * (mf + 1.0) / 2.0;
+    let var = sigma * sigma * dt * (mf + 1.0) * (2.0 * mf + 1.0) / (6.0 * mf);
+    let sig_g = var.sqrt();
+    let d1 = ((s0 / k).ln() + mu + var) / sig_g;
+    let d2 = d1 - sig_g;
+    let fwd = s0 * (mu + 0.5 * var).exp();
+    (-r * t).exp() * (fwd * norm_cdf(d1) - k * norm_cdf(d2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-7); // A&S 7.1.26 is ~1.5e-7 accurate
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_cdf_symmetry() {
+        for x in [-2.5, -1.0, 0.0, 0.7, 3.1] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 1e-7);
+        }
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-4);
+    }
+
+    #[test]
+    fn call_reference_value() {
+        // Hull's textbook example: S=42, K=40, r=10%, sigma=20%, T=0.5 -> 4.76.
+        let c = call(42.0, 40.0, 0.10, 0.20, 0.5);
+        assert!((c - 4.76).abs() < 0.01, "{c}");
+    }
+
+    #[test]
+    fn put_call_parity_holds() {
+        let (s0, k, r, sigma, t) = (100.0, 105.0, 0.05, 0.2, 1.0);
+        let lhs = call(s0, k, r, sigma, t) - put(s0, k, r, sigma, t);
+        let rhs = s0 - k * (-r * t as f64).exp();
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn call_monotone_in_spot_and_vol() {
+        let base = call(100.0, 100.0, 0.03, 0.2, 1.0);
+        assert!(call(110.0, 100.0, 0.03, 0.2, 1.0) > base);
+        assert!(call(100.0, 100.0, 0.03, 0.3, 1.0) > base);
+    }
+
+    #[test]
+    fn call_bounds() {
+        // max(S - K e^{-rT}, 0) <= C <= S.
+        let (s0, k, r, sigma, t) = (100.0, 90.0, 0.05, 0.25, 2.0);
+        let c = call(s0, k, r, sigma, t);
+        let intrinsic = s0 - k * (-r * t as f64).exp();
+        assert!(c >= intrinsic && c <= s0);
+    }
+
+    #[test]
+    fn geometric_asian_below_european() {
+        let e = call(100.0, 100.0, 0.05, 0.25, 1.0);
+        let g = geometric_asian_call(100.0, 100.0, 0.05, 0.25, 1.0, 64);
+        assert!(g < e);
+        assert!(g > 0.0);
+    }
+
+    #[test]
+    fn geometric_asian_approaches_terminal_with_one_fixing() {
+        // m = 1: the "average" is just the terminal value.
+        let e = call(100.0, 95.0, 0.05, 0.3, 1.0);
+        let g = geometric_asian_call(100.0, 95.0, 0.05, 0.3, 1.0, 1);
+        assert!((e - g).abs() < 1e-9, "{e} vs {g}");
+    }
+}

@@ -1,0 +1,238 @@
+//! Native rust Monte Carlo pricer.
+//!
+//! Bit-for-bit mirror of the L1 Pallas kernels (`python/compile/kernels/
+//! mc.py`): same Threefry-2x32 counter layout (path `p`, step `s` under key
+//! `(task_id, seed)`), same Box-Muller transform, same payoff recursions in
+//! f32. It serves as (a) the CPU fall-back when artifacts are not built,
+//! (b) a cross-check oracle on the PJRT path, and (c) the workhorse of the
+//! pure-simulation benchmarks where numerical payoffs don't matter but
+//! realistic statistics do.
+
+use crate::util::rng::threefry_normal;
+use crate::workload::option::{OptionTask, Payoff};
+
+/// Raw (undiscounted) payoff statistics of a batch of simulated paths.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PayoffStats {
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub n: u64,
+}
+
+impl PayoffStats {
+    pub fn merge(&self, other: &PayoffStats) -> PayoffStats {
+        PayoffStats {
+            sum: self.sum + other.sum,
+            sum_sq: self.sum_sq + other.sum_sq,
+            n: self.n + other.n,
+        }
+    }
+}
+
+/// A discounted price estimate with its standard error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriceEstimate {
+    pub price: f64,
+    pub std_error: f64,
+    pub n: u64,
+}
+
+/// Combine payoff statistics into a discounted estimate — mirrors
+/// `python/compile/model.py::mc_estimate` (tested for agreement there).
+pub fn combine(stats: &PayoffStats, discount: f64) -> PriceEstimate {
+    assert!(stats.n > 0, "no paths simulated");
+    let nf = stats.n as f64;
+    let mean = stats.sum / nf;
+    let var = (stats.sum_sq / nf - mean * mean).max(0.0);
+    PriceEstimate {
+        price: discount * mean,
+        std_error: discount * (var / nf).sqrt(),
+        n: stats.n,
+    }
+}
+
+/// Simulate `n` paths of `task` starting at path counter `offset` under
+/// `(task.id, seed)`. Matches the kernels' counter bijection, so chunked /
+/// partitioned execution composes to identical statistics.
+pub fn simulate(task: &OptionTask, seed: u32, offset: u32, n: u32) -> PayoffStats {
+    let k0 = task.id as u32;
+    let k1 = seed;
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let mut sum = 0.0f64;
+    let mut sum_sq = 0.0f64;
+    match task.payoff {
+        Payoff::European => {
+            let drift = (r - 0.5 * sigma * sigma) * t;
+            let vol = sigma * t.sqrt();
+            for p in 0..n {
+                let z = threefry_normal(k0, k1, offset.wrapping_add(p), 0);
+                let st = s0 * (drift + vol * z).exp();
+                let payoff = (st - k).max(0.0) as f64;
+                sum += payoff;
+                sum_sq += payoff * payoff;
+            }
+        }
+        Payoff::Asian => {
+            let steps = task.steps;
+            let dt = t / steps as f32;
+            let drift = (r - 0.5 * sigma * sigma) * dt;
+            let vol = sigma * dt.sqrt();
+            for p in 0..n {
+                let ctr0 = offset.wrapping_add(p);
+                let mut log_s = s0.ln();
+                let mut acc = 0.0f32;
+                for step in 0..steps {
+                    let z = threefry_normal(k0, k1, ctr0, step);
+                    log_s += drift + vol * z;
+                    acc += log_s.exp();
+                }
+                let payoff = ((acc / steps as f32) - k).max(0.0) as f64;
+                sum += payoff;
+                sum_sq += payoff * payoff;
+            }
+        }
+        Payoff::Barrier => {
+            let steps = task.steps;
+            let barrier = task.barrier as f32;
+            let dt = t / steps as f32;
+            let drift = (r - 0.5 * sigma * sigma) * dt;
+            let vol = sigma * dt.sqrt();
+            for p in 0..n {
+                let ctr0 = offset.wrapping_add(p);
+                let mut log_s = s0.ln();
+                let mut alive = s0 < barrier;
+                for step in 0..steps {
+                    let z = threefry_normal(k0, k1, ctr0, step);
+                    log_s += drift + vol * z;
+                    alive = alive && log_s.exp() < barrier;
+                }
+                let payoff = if alive { (log_s.exp() - k).max(0.0) as f64 } else { 0.0 };
+                sum += payoff;
+                sum_sq += payoff * payoff;
+            }
+        }
+    }
+    PayoffStats { sum, sum_sq, n: n as u64 }
+}
+
+/// Price a task natively with `n` paths (convenience wrapper).
+pub fn price(task: &OptionTask, seed: u32, n: u32) -> PriceEstimate {
+    combine(&simulate(task, seed, 0, n), task.discount())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pricing::blackscholes;
+    use crate::workload::{generate, GeneratorConfig};
+
+    fn european() -> OptionTask {
+        OptionTask {
+            id: 7,
+            payoff: Payoff::European,
+            spot: 100.0,
+            strike: 105.0,
+            rate: 0.05,
+            sigma: 0.2,
+            maturity: 1.0,
+            barrier: 0.0,
+            steps: 1,
+            target_accuracy: 0.01,
+            n_sims: 1 << 18,
+        }
+    }
+
+    #[test]
+    fn european_matches_black_scholes() {
+        let t = european();
+        let est = price(&t, 42, 1 << 18);
+        let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(
+            (est.price - bs).abs() < 4.0 * est.std_error + 0.03,
+            "mc {} ± {} vs bs {bs}",
+            est.price,
+            est.std_error
+        );
+    }
+
+    #[test]
+    fn chunking_is_exactly_additive() {
+        let t = european();
+        let whole = simulate(&t, 1, 0, 4096);
+        let lo = simulate(&t, 1, 0, 2048);
+        let hi = simulate(&t, 1, 2048, 2048);
+        let merged = lo.merge(&hi);
+        assert!((whole.sum - merged.sum).abs() < 1e-9 * whole.sum.abs().max(1.0));
+        assert!((whole.sum_sq - merged.sum_sq).abs() < 1e-9 * whole.sum_sq.abs().max(1.0));
+        assert_eq!(whole.n, merged.n);
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let t = european();
+        let a = simulate(&t, 1, 0, 8192);
+        let b = simulate(&t, 2, 0, 8192);
+        assert_ne!(a.sum, b.sum);
+        let pa = combine(&a, t.discount()).price;
+        let pb = combine(&b, t.discount()).price;
+        assert!((pa - pb).abs() < 0.5, "both near the true price");
+    }
+
+    #[test]
+    fn asian_bracketed_by_geometric_and_european() {
+        let mut t = european();
+        t.payoff = Payoff::Asian;
+        t.steps = 32;
+        t.strike = 100.0;
+        let est = price(&t, 9, 1 << 16);
+        let geo = blackscholes::geometric_asian_call(t.spot, t.strike, t.rate, t.sigma, t.maturity, 32);
+        let eur = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(est.price > geo - 4.0 * est.std_error - 0.05, "{est:?} vs geo {geo}");
+        assert!(est.price < eur + 4.0 * est.std_error, "{est:?} vs eur {eur}");
+    }
+
+    #[test]
+    fn barrier_below_european_and_monotone() {
+        let mut t = european();
+        t.payoff = Payoff::Barrier;
+        t.steps = 32;
+        t.barrier = 130.0;
+        let tight = price(&t, 3, 1 << 16).price;
+        t.barrier = 160.0;
+        let loose = price(&t, 3, 1 << 16).price;
+        let eur = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(tight <= loose + 1e-9);
+        assert!(loose < eur);
+    }
+
+    #[test]
+    fn std_error_shrinks_like_sqrt_n() {
+        let t = european();
+        let small = price(&t, 5, 1 << 12).std_error;
+        let big = price(&t, 5, 1 << 16).std_error;
+        let ratio = small / big;
+        assert!((2.8..5.7).contains(&ratio), "expected ~4, got {ratio}");
+    }
+
+    #[test]
+    fn whole_generated_workload_prices_sanely() {
+        let w = generate(&GeneratorConfig::small(6, 0.1, 11));
+        for t in &w.tasks {
+            let est = price(t, 1, 1 << 14);
+            assert!(est.price >= 0.0, "negative price for {t:?}");
+            assert!(est.price < t.spot, "call above spot for {t:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no paths")]
+    fn combine_rejects_empty() {
+        combine(&PayoffStats::default(), 1.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Option pricing: closed-form oracles and the native Monte Carlo mirror of
+//! the L1 kernels.
+
+pub mod blackscholes;
+pub mod mc;
+
+pub use mc::{combine, simulate, PayoffStats, PriceEstimate};

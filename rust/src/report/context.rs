@@ -1,0 +1,68 @@
+//! Experiment context: builds the cluster + workload + fitted models that
+//! every table/figure generator consumes, from one [`ExperimentConfig`].
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{ClusterKind, ExperimentConfig};
+use crate::coordinator::{benchmark, BenchmarkReport, ModelSet};
+use crate::platforms::native::NativePlatform;
+use crate::platforms::spec::{paper_cluster, small_cluster};
+use crate::platforms::Cluster;
+use crate::runtime::EngineHandle;
+use crate::workload::{generate, Workload};
+
+/// A fully-materialised experiment: cluster, workload, benchmark-fitted
+/// models (plus raw samples) and the nominal spec-derived models.
+pub struct Experiment {
+    pub config: ExperimentConfig,
+    pub cluster: Cluster,
+    pub workload: Workload,
+    /// Models fitted by the §III.A benchmarking procedure.
+    pub bench: BenchmarkReport,
+    /// Nominal models straight from the specs (ablation reference).
+    pub nominal: ModelSet,
+}
+
+impl Experiment {
+    /// Build everything. Benchmarking runs here (simulated platforms make
+    /// it cheap; the native platform, if enabled, costs real seconds).
+    pub fn build(config: ExperimentConfig) -> Result<Experiment, String> {
+        let specs = match config.cluster.kind {
+            ClusterKind::Paper => paper_cluster(),
+            ClusterKind::Small => small_cluster(),
+        };
+        let mut cluster = Cluster::simulated(&specs, &config.cluster.sim, config.cluster.seed);
+        if config.cluster.with_native {
+            let engine = EngineHandle::spawn(Path::new(&config.artifact_dir))
+                .map_err(|e| format!("starting PJRT engine: {e:#}"))?;
+            cluster.push(Arc::new(NativePlatform::new(engine)));
+        }
+        let workload = generate(&config.workload);
+        workload.validate()?;
+        let bench = benchmark(&cluster, &workload, &config.benchmark);
+        let specs_all = cluster.specs();
+        let nominal = ModelSet::from_specs(&specs_all, &workload);
+        Ok(Experiment { config, cluster, workload, bench, nominal })
+    }
+
+    /// The fitted models (what the partitioners should consume).
+    pub fn models(&self) -> &ModelSet {
+        &self.bench.models
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_experiment_builds() {
+        let e = Experiment::build(ExperimentConfig::quick()).unwrap();
+        assert_eq!(e.cluster.len(), 3);
+        assert_eq!(e.workload.len(), 8);
+        assert_eq!(e.models().mu, 3);
+        assert_eq!(e.models().tau, 8);
+        assert_eq!(e.nominal.mu, 3);
+    }
+}

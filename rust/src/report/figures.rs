@@ -1,0 +1,208 @@
+//! Regenerate the paper's Figures 1–3.
+
+use crate::coordinator::executor::{execute, ExecutorConfig};
+use crate::coordinator::partitioner::Partitioner;
+use crate::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner, TradeoffCurve};
+use crate::models::LatencyModel;
+use crate::util::plot::{Plot, Series};
+
+use super::context::Experiment;
+
+/// Figure 1: the latency-vs-cost trade-off for the full workload on the
+/// heterogeneous cluster (MILP curve, as the paper's headline figure).
+pub fn fig1(e: &Experiment) -> Result<(Plot, TradeoffCurve), String> {
+    let milp = MilpPartitioner::new(e.config.milp.clone());
+    let curve = sweep(&milp, e.models(), &e.config.sweep)?;
+    let mut plot = Plot::new(
+        "Fig. 1: Latency vs Cost trade-off (MILP, model predictions)",
+        "cost ($)",
+        "makespan (s)",
+    );
+    let mut s = Series::new("milp", 'o');
+    for p in curve.pareto_front() {
+        s.push(p.cost, p.latency);
+    }
+    plot.add(s);
+    Ok((plot, curve))
+}
+
+/// Figure 2 data point: relative latency-prediction error at a scale
+/// multiple of the largest benchmarked N.
+#[derive(Debug, Clone)]
+pub struct Fig2Point {
+    pub platform: usize,
+    pub task: usize,
+    /// Predicted-at N / largest-benchmarked N.
+    pub scale: f64,
+    pub rel_error: f64,
+}
+
+/// Figure 2: latency model prediction error characterisation — benchmark on
+/// small N, predict at growing multiples, compare against fresh executions.
+pub fn fig2(e: &Experiment, multiples: &[f64]) -> (Plot, Vec<Fig2Point>) {
+    let models = e.models();
+    let mut points = Vec::new();
+    for s in &e.bench.samples {
+        let Some(&(n_max, _)) = s.samples.iter().max_by_key(|(n, _)| *n) else {
+            continue;
+        };
+        let model: &LatencyModel = models.model(s.platform, s.task);
+        let task = &e.workload.tasks[s.task];
+        for &mult in multiples {
+            let n = (n_max as f64 * mult) as u64;
+            if n == 0 || n > task.n_sims * 4 {
+                continue;
+            }
+            // Average a few fresh observations as "reality".
+            let mut lat = 0.0;
+            const REPS: usize = 3;
+            for r in 0..REPS {
+                lat += e
+                    .cluster
+                    .platform(s.platform)
+                    .benchmark_execute(task, n, 0xF16_2 + r as u32)
+                    .latency_secs;
+            }
+            lat /= REPS as f64;
+            points.push(Fig2Point {
+                platform: s.platform,
+                task: s.task,
+                scale: mult,
+                rel_error: model.relative_error(n, lat),
+            });
+        }
+    }
+    let mut plot = Plot::new(
+        "Fig. 2: Latency model prediction error vs problem scale",
+        "N / largest benchmarked N",
+        "relative error",
+    );
+    let mut series = Series::new("pairs", '.');
+    for p in &points {
+        series.push(p.scale, p.rel_error);
+    }
+    plot.add(series);
+    (plot, points)
+}
+
+/// One Fig. 3 record: a partition's model prediction vs measured execution.
+#[derive(Debug, Clone)]
+pub struct Fig3Point {
+    pub partitioner: String,
+    pub budget: Option<f64>,
+    pub model_latency: f64,
+    pub model_cost: f64,
+    pub measured_latency: f64,
+    pub measured_cost: f64,
+}
+
+/// Figure 3: generate both partitioners' trade-off curves from model data,
+/// run every partition on the cluster, and report model vs measured.
+pub fn fig3(e: &Experiment) -> Result<(Plot, Vec<Fig3Point>), String> {
+    let mut records = Vec::new();
+    let heuristic = HeuristicPartitioner::default();
+    let milp = MilpPartitioner::new(e.config.milp.clone());
+    let partitioners: [(&str, &dyn Partitioner); 2] = [("heuristic", &heuristic), ("milp", &milp)];
+    let mut plot = Plot::new(
+        "Fig. 3: Partitioner model predictions vs measured",
+        "cost ($)",
+        "makespan (s)",
+    );
+    for (idx, (name, part)) in partitioners.iter().enumerate() {
+        let curve = sweep(*part, e.models(), &e.config.sweep)?;
+        let mut model_series = Series::new(&format!("{name}-model"), ['o', 'x'][idx]);
+        let mut measured_series = Series::new(&format!("{name}-measured"), ['*', '+'][idx]);
+        for p in curve.pareto_front() {
+            let exec = execute(
+                &e.cluster,
+                &e.workload,
+                &p.alloc,
+                &ExecutorConfig { seed: 0xF1_6_3, ..e.config.executor.clone() },
+            )?;
+            model_series.push(p.cost, p.latency);
+            measured_series.push(exec.cost, exec.makespan_secs);
+            records.push(Fig3Point {
+                partitioner: name.to_string(),
+                budget: p.budget,
+                model_latency: p.latency,
+                model_cost: p.cost,
+                measured_latency: exec.makespan_secs,
+                measured_cost: exec.cost,
+            });
+        }
+        plot.add(model_series);
+        plot.add(measured_series);
+    }
+    Ok((plot, records))
+}
+
+/// CSV emission for the Fig. 3 records.
+pub fn fig3_csv(points: &[Fig3Point]) -> String {
+    let mut out = String::from(
+        "partitioner,budget,model_latency_s,model_cost,measured_latency_s,measured_cost\n",
+    );
+    for p in points {
+        out.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            p.partitioner,
+            p.budget.map(|b| format!("{b:.4}")).unwrap_or_else(|| "unconstrained".into()),
+            p.model_latency,
+            p.model_cost,
+            p.measured_latency,
+            p.measured_cost
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::report::context::Experiment;
+
+    fn quick() -> Experiment {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.milp.time_limit_secs = 3.0;
+        cfg.sweep.levels = 4;
+        Experiment::build(cfg).unwrap()
+    }
+
+    #[test]
+    fn fig1_produces_monotone_front() {
+        let e = quick();
+        let (plot, curve) = fig1(&e).unwrap();
+        assert!(!curve.points.is_empty());
+        let front = curve.pareto_front();
+        for w in front.windows(2) {
+            assert!(w[0].cost <= w[1].cost && w[0].latency >= w[1].latency);
+        }
+        assert!(plot.render().contains("Fig. 1"));
+    }
+
+    #[test]
+    fn fig2_errors_are_mostly_small() {
+        let e = quick();
+        let (_, points) = fig2(&e, &[2.0, 5.0, 10.0]);
+        assert!(!points.is_empty());
+        let median = {
+            let mut errs: Vec<f64> = points.iter().map(|p| p.rel_error).collect();
+            errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            errs[errs.len() / 2]
+        };
+        assert!(median < 0.10, "median error {median}");
+    }
+
+    #[test]
+    fn fig3_model_tracks_measured() {
+        let e = quick();
+        let (_, points) = fig3(&e).unwrap();
+        assert!(points.len() >= 4);
+        for p in &points {
+            let lat_err = (p.measured_latency - p.model_latency).abs() / p.model_latency;
+            assert!(lat_err < 0.5, "{p:?}");
+        }
+        let csv = fig3_csv(&points);
+        assert!(csv.lines().count() == points.len() + 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Report generators: every table and figure of the paper's evaluation,
+//! regenerated from this implementation (DESIGN.md §4 experiment index).
+
+pub mod context;
+pub mod figures;
+pub mod tables;
+
+pub use context::Experiment;
+pub use figures::{fig1, fig2, fig3, fig3_csv, Fig2Point, Fig3Point};
+pub use tables::{table1, table2, table3, table4, table4_rows, Table4Row};

@@ -1,0 +1,259 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed with the in-tree JSON substrate.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::workload::option::Payoff;
+
+/// One AOT-lowered chunk variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub payoff: Payoff,
+    /// Paths simulated per execution.
+    pub n: u64,
+    /// Fixing dates baked into the variant (1 for European).
+    pub steps: u32,
+    /// Pallas block size (informational; execution doesn't depend on it).
+    pub block: u64,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    pub sha256: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub jax_version: String,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let schema = root.get("schema").and_then(Json::as_u64).unwrap_or(0);
+        if schema != 1 {
+            bail!("unsupported manifest schema {schema}");
+        }
+        let jax_version = root
+            .get("jax_version")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let vs = root
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing variants"))?;
+        let mut variants = Vec::with_capacity(vs.len());
+        for v in vs {
+            let get_str = |k: &str| {
+                v.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("variant missing '{k}'"))
+            };
+            let get_u64 =
+                |k: &str| v.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("variant missing '{k}'"));
+            let payoff_name = get_str("payoff")?;
+            let payoff = Payoff::from_name(&payoff_name)
+                .ok_or_else(|| anyhow!("unknown payoff '{payoff_name}'"))?;
+            variants.push(Variant {
+                name: get_str("name")?,
+                payoff,
+                n: get_u64("n")?,
+                steps: get_u64("steps")? as u32,
+                block: get_u64("block")?,
+                file: PathBuf::from(get_str("file")?),
+                sha256: get_str("sha256")?,
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest lists no variants");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), jax_version, variants })
+    }
+
+    /// Variants of a payoff family, sorted by chunk size ascending.
+    pub fn variants_for(&self, payoff: Payoff) -> Vec<&Variant> {
+        let mut vs: Vec<&Variant> =
+            self.variants.iter().filter(|v| v.payoff == payoff).collect();
+        vs.sort_by_key(|v| v.n);
+        vs
+    }
+
+    /// Absolute path of a variant's HLO text.
+    pub fn hlo_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+
+    /// Verify the HLO files exist and match their recorded hashes.
+    pub fn verify(&self) -> Result<()> {
+        for v in &self.variants {
+            let path = self.hlo_path(v);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("missing artifact {path:?}"))?;
+            let digest = sha256_hex(text.as_bytes());
+            if digest != v.sha256 {
+                bail!("artifact {} hash mismatch (stale artifacts/ — re-run make artifacts)", v.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Minimal SHA-256 (FIPS 180-4) — used only to verify artifact integrity.
+pub fn sha256_hex(data: &[u8]) -> String {
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+        0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+        0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+        0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+        0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+        0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+        0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+        0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+        0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let bit_len = (data.len() as u64) * 8;
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bit_len.to_be_bytes());
+    for chunk in msg.chunks_exact(64) {
+        let mut w = [0u32; 64];
+        for (i, word) in chunk.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([word[0], word[1], word[2], word[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "schema": 1,
+      "jax_version": "0.8.2",
+      "param_layout": ["s0","strike","rate","sigma","maturity","barrier","_r6","_r7"],
+      "variants": [
+        {"name": "mc_european_n4096_s1", "payoff": "european", "n": 4096,
+         "steps": 1, "block": 4096, "file": "mc_european_n4096_s1.hlo.txt",
+         "sha256": "deadbeef", "inputs": [], "outputs": []},
+        {"name": "mc_european_n16384_s1", "payoff": "european", "n": 16384,
+         "steps": 1, "block": 4096, "file": "mc_european_n16384_s1.hlo.txt",
+         "sha256": "deadbeef", "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.jax_version, "0.8.2");
+        assert_eq!(m.variants[0].payoff, Payoff::European);
+        assert_eq!(m.variants[1].n, 16384);
+    }
+
+    #[test]
+    fn variants_for_sorts_ascending() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let vs = m.variants_for(Payoff::European);
+        assert_eq!(vs.len(), 2);
+        assert!(vs[0].n < vs[1].n);
+        assert!(m.variants_for(Payoff::Asian).is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_schema() {
+        let bad = SAMPLE.replace("\"schema\": 1", "\"schema\": 99");
+        assert!(Manifest::parse(Path::new("/tmp/a"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_payoff() {
+        let bad = SAMPLE.replace("european", "swaption");
+        assert!(Manifest::parse(Path::new("/tmp/a"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_variants() {
+        let bad = r#"{"schema": 1, "variants": []}"#;
+        assert!(Manifest::parse(Path::new("/tmp/a"), bad).is_err());
+    }
+
+    #[test]
+    fn sha256_known_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // Multi-block message (>64 bytes).
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced by
+//! `make artifacts` and executes them from the rust request path.
+//!
+//! HLO *text* is the interchange format (aot_recipe / xla-example gotcha:
+//! the crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos; the text parser reassigns ids). One compiled executable per
+//! (payoff, chunk-size) variant, compile-once-execute-many.
+
+pub mod artifact;
+pub mod engine;
+pub mod service;
+
+pub use artifact::{Manifest, Variant};
+pub use engine::Engine;
+pub use service::EngineHandle;

@@ -1,0 +1,114 @@
+//! Engine service: the `xla` crate's PJRT types are not `Send`/`Sync`
+//! (internal `Rc`s), so the engine lives on a dedicated owner thread and the
+//! rest of the system talks to it through a cloneable [`EngineHandle`].
+//! The CPU PJRT client is a single device anyway — serializing executions
+//! through one thread costs nothing and gives a clean ownership story.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::pricing::mc::PayoffStats;
+use crate::workload::option::{OptionTask, Payoff};
+
+use super::engine::Engine;
+
+enum Request {
+    Price { task: OptionTask, n: u64, seed: u32, reply: mpsc::Sender<Result<PayoffStats>> },
+    Supported { reply: mpsc::Sender<Vec<Payoff>> },
+    Platform { reply: mpsc::Sender<String> },
+    Warmup { reply: mpsc::Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the engine owner thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+}
+
+impl EngineHandle {
+    /// Spawn the owner thread and load the engine from `artifact_dir`.
+    /// Fails fast if the manifest or PJRT client can't be created.
+    pub fn spawn(artifact_dir: &Path) -> Result<EngineHandle> {
+        let dir = artifact_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        thread::Builder::new()
+            .name("cloudshapes-engine".to_string())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Price { task, n, seed, reply } => {
+                            let _ = reply.send(engine.price(&task, n, seed));
+                        }
+                        Request::Supported { reply } => {
+                            let _ = reply.send(engine.supported_payoffs());
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(engine.platform_name());
+                        }
+                        Request::Warmup { reply } => {
+                            let _ = reply.send(engine.warmup());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(EngineHandle { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    fn send(&self, req: Request) {
+        self.tx.lock().unwrap().send(req).expect("engine thread gone");
+    }
+
+    /// Price `n` paths of `task` (see [`Engine::price`] for semantics).
+    pub fn price(&self, task: &OptionTask, n: u64, seed: u32) -> Result<PayoffStats> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Price { task: task.clone(), n, seed, reply });
+        rx.recv().map_err(|_| anyhow!("engine thread dropped request"))?
+    }
+
+    /// Payoff families with artifacts available.
+    pub fn supported_payoffs(&self) -> Vec<Payoff> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Supported { reply });
+        rx.recv().unwrap_or_default()
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Platform { reply });
+        rx.recv().unwrap_or_else(|_| "unknown".to_string())
+    }
+
+    /// Compile all variants now.
+    pub fn warmup(&self) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Warmup { reply });
+        rx.recv().map_err(|_| anyhow!("engine thread dropped request"))?
+    }
+
+    /// Stop the owner thread (handles become inert).
+    pub fn shutdown(&self) {
+        self.send(Request::Shutdown);
+    }
+}

@@ -1,0 +1,5 @@
+//! Test-support code compiled into the library so integration tests and
+//! benches can share it (the mini property harness replaces `proptest`,
+//! which is unavailable offline).
+
+pub mod prop;

@@ -1,0 +1,171 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("allocation columns sum to 1", 200, |g| {
+//!     let alloc = arbitrary_allocation(g);
+//!     prop_assert(alloc.is_valid(), "invalid allocation")
+//! });
+//! ```
+//!
+//! Failures report the case index and the seed, so a failing case can be
+//! replayed deterministically with [`prop_replay`]. There is no structural
+//! shrinking; generators are encouraged to draw "size" parameters first so
+//! low case indices are naturally small (the harness runs cases in
+//! increasing-size order, which is shrinking-by-construction).
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to property bodies: an RNG plus a size hint that
+/// grows with the case index (like proptest's sizing).
+pub struct Gen {
+    pub rng: Rng,
+    /// Grows from 2 to ~64 across the run; generators should scale their
+    /// collection sizes by it.
+    pub size: usize,
+}
+
+impl Gen {
+    /// A vector length scaled to the current size.
+    pub fn len(&mut self, max: usize) -> usize {
+        let cap = self.size.min(max).max(1);
+        self.rng.range_u64(1, cap as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    /// Positive float log-uniform in [lo, hi] — good for spanning scales
+    /// (latencies from ms to hours).
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.rng.range_f64(lo.ln(), hi.ln())).exp()
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property body.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert two floats are within `tol` (absolute) of each other.
+pub fn prop_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{msg}: |{a} - {b}| > {tol}"))
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics with seed + case on failure.
+pub fn prop_check<F>(name: &str, cases: usize, body: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    prop_check_seeded(name, cases, 0xC10D_5EED, body)
+}
+
+/// As [`prop_check`] with an explicit base seed (for replay).
+pub fn prop_check_seeded<F>(name: &str, cases: usize, base_seed: u64, body: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        // Size ramps from 2 up to 64 across the run.
+        let size = 2 + (case * 62) / cases.max(1);
+        let mut g = Gen { rng: Rng::new(seed), size };
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: prop_replay(\"{name}\", {seed:#x}, {size})): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed and size.
+pub fn prop_replay<F>(name: &str, seed: u64, size: usize, body: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut g = Gen { rng: Rng::new(seed), size };
+    if let Err(msg) = body(&mut g) {
+        panic!("property '{name}' failed on replay (seed {seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("reverse-reverse is identity", 50, |g| {
+            let n = g.len(32);
+            let xs: Vec<u64> = (0..n).map(|_| g.rng.next_u64()).collect();
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            prop_assert(xs == ys, "double reverse changed data")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        prop_check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0usize;
+        let seen = std::sync::Mutex::new(&mut max_seen);
+        prop_check("size ramps", 100, |g| {
+            let mut m = seen.lock().unwrap();
+            **m = (**m).max(g.size);
+            Ok(())
+        });
+        assert!(max_seen >= 60, "size never ramped: {max_seen}");
+    }
+
+    #[test]
+    fn log_uniform_spans_scales() {
+        let mut g = Gen { rng: Rng::new(1), size: 10 };
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..1000 {
+            let x = g.log_uniform(1e-3, 1e3);
+            assert!((1e-3..=1e3).contains(&x));
+            if x < 0.1 {
+                lo_seen = true;
+            }
+            if x > 10.0 {
+                hi_seen = true;
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(prop_close(1.0, 2.0, 0.5, "x").is_err());
+    }
+}

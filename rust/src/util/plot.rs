@@ -1,0 +1,171 @@
+//! ASCII plotting + CSV series emission for the figure reproductions.
+//!
+//! The paper's figures are scatter/line plots (latency vs cost trade-offs,
+//! prediction-error curves). We emit both a terminal-readable ASCII render
+//! and a CSV that external tooling can re-plot exactly.
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+    /// Glyph used in the ASCII render.
+    pub glyph: char,
+}
+
+impl Series {
+    pub fn new(name: &str, glyph: char) -> Series {
+        Series { name: name.to_string(), points: Vec::new(), glyph }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// A 2-D scatter plot with multiple series.
+#[derive(Debug, Clone)]
+pub struct Plot {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl Plot {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Plot {
+        Plot {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+            width: 72,
+            height: 22,
+        }
+    }
+
+    pub fn add(&mut self, s: Series) -> &mut Plot {
+        self.series.push(s);
+        self
+    }
+
+    fn bounds(&self) -> Option<(f64, f64, f64, f64)> {
+        let pts: Vec<(f64, f64)> = self.series.iter().flat_map(|s| s.points.clone()).collect();
+        if pts.is_empty() {
+            return None;
+        }
+        let (mut x0, mut x1, mut y0, mut y1) =
+            (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+        for (x, y) in pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        // Avoid zero-width ranges.
+        if x0 == x1 {
+            x1 = x0 + 1.0;
+        }
+        if y0 == y1 {
+            y1 = y0 + 1.0;
+        }
+        Some((x0, x1, y0, y1))
+    }
+
+    /// Render as ASCII. Later series overwrite earlier ones on collisions.
+    pub fn render(&self) -> String {
+        let Some((x0, x1, y0, y1)) = self.bounds() else {
+            return format!("{} (no data)\n", self.title);
+        };
+        let (w, h) = (self.width, self.height);
+        let mut grid = vec![vec![' '; w]; h];
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                let cx = (((x - x0) / (x1 - x0)) * (w - 1) as f64).round() as usize;
+                let cy = (((y - y0) / (y1 - y0)) * (h - 1) as f64).round() as usize;
+                grid[h - 1 - cy][cx] = s.glyph;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        let legend: Vec<String> =
+            self.series.iter().map(|s| format!("{}={}", s.glyph, s.name)).collect();
+        out.push_str(&format!("  [{}]   y: {}\n", legend.join("  "), self.y_label));
+        out.push_str(&format!("  {:>10.3} ┐\n", y1));
+        for row in grid {
+            out.push_str("             │");
+            out.push_str(&row.iter().collect::<String>());
+            out.push('\n');
+        }
+        out.push_str(&format!("  {:>10.3} └{}\n", y0, "─".repeat(w)));
+        out.push_str(&format!(
+            "  x: {}   {:.3} … {:.3}\n",
+            self.x_label, x0, x1
+        ));
+        out
+    }
+
+    /// CSV with one `(series, x, y)` row per point.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,x,y\n");
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                out.push_str(&format!("{},{},{}\n", s.name, x, y));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plot() -> Plot {
+        let mut p = Plot::new("t", "cost", "latency");
+        let mut a = Series::new("ilp", 'o');
+        a.push(1.0, 10.0);
+        a.push(2.0, 5.0);
+        let mut b = Series::new("heuristic", 'x');
+        b.push(1.5, 12.0);
+        p.add(a);
+        p.add(b);
+        p
+    }
+
+    #[test]
+    fn renders_with_legend_and_bounds() {
+        let s = sample_plot().render();
+        assert!(s.contains("o=ilp"));
+        assert!(s.contains("x=heuristic"));
+        assert!(s.contains("12.000"));
+        assert!(s.matches('o').count() >= 2);
+        assert!(s.contains('x'));
+    }
+
+    #[test]
+    fn empty_plot_is_graceful() {
+        let p = Plot::new("empty", "x", "y");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn single_point_does_not_divide_by_zero() {
+        let mut p = Plot::new("one", "x", "y");
+        let mut s = Series::new("s", '*');
+        s.push(3.0, 4.0);
+        p.add(s);
+        let r = p.render();
+        assert!(r.contains('*'));
+    }
+
+    #[test]
+    fn csv_lists_all_points() {
+        let csv = sample_plot().to_csv();
+        assert_eq!(csv.lines().count(), 4); // header + 3 points
+        assert!(csv.contains("ilp,1,10"));
+        assert!(csv.contains("heuristic,1.5,12"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Virtual clock for the cluster simulator.
+//!
+//! The paper's workloads have makespans in the thousands of seconds (Table
+//! IV: up to 8 760 s). Running Fig. 3's "execute every partition on the
+//! cluster" experiment in real time is absurd; instead simulated platforms
+//! *advance* a [`SimClock`] and only the native PJRT platform burns real
+//! wall-clock. Each platform advances its own lane; the cluster-level
+//! makespan is the max over lanes, matching the paper's definition
+//! ("the latency of the platform that takes the longest").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotone virtual clock measured in nanoseconds, shared between platform
+/// worker threads. Cheap to clone (Arc inside).
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    /// Global high-water mark across all lanes (the running makespan).
+    high_water_ns: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+
+    /// Create an independent per-platform lane starting at t=0.
+    pub fn lane(&self) -> SimLane {
+        SimLane { clock: self.clone(), now_ns: 0 }
+    }
+
+    /// The furthest any lane has advanced — i.e. the simulated makespan.
+    pub fn high_water_secs(&self) -> f64 {
+        self.high_water_ns.load(Ordering::SeqCst) as f64 * 1e-9
+    }
+
+    fn observe(&self, t_ns: u64) {
+        self.high_water_ns.fetch_max(t_ns, Ordering::SeqCst);
+    }
+}
+
+/// One platform's private timeline.
+#[derive(Debug, Clone)]
+pub struct SimLane {
+    clock: SimClock,
+    now_ns: u64,
+}
+
+impl SimLane {
+    /// Advance this lane by `secs` of simulated work.
+    pub fn advance(&mut self, secs: f64) {
+        assert!(secs >= 0.0 && secs.is_finite(), "advance({secs})");
+        self.now_ns = self.now_ns.saturating_add((secs * 1e9).round() as u64);
+        self.clock.observe(self.now_ns);
+    }
+
+    /// This lane's current simulated time in seconds.
+    pub fn now_secs(&self) -> f64 {
+        self.now_ns as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn lanes_are_independent() {
+        let clock = SimClock::new();
+        let mut a = clock.lane();
+        let mut b = clock.lane();
+        a.advance(5.0);
+        b.advance(2.0);
+        assert!((a.now_secs() - 5.0).abs() < 1e-9);
+        assert!((b.now_secs() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_water_is_max_over_lanes() {
+        let clock = SimClock::new();
+        let mut a = clock.lane();
+        let mut b = clock.lane();
+        a.advance(1.0);
+        a.advance(2.0); // lane a at 3.0
+        b.advance(2.5);
+        assert!((clock.high_water_secs() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_advances_race_free() {
+        let clock = SimClock::new();
+        thread::scope(|s| {
+            for i in 0..8u64 {
+                let mut lane = clock.lane();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        lane.advance(0.001 * (i + 1) as f64);
+                    }
+                });
+            }
+        });
+        // Longest lane: 1000 * 0.008 = 8.0 s
+        assert!((clock.high_water_secs() - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_advance_panics() {
+        let clock = SimClock::new();
+        clock.lane().advance(-1.0);
+    }
+}

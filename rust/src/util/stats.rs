@@ -1,0 +1,190 @@
+//! Statistics substrate: summaries and the weighted least squares regression
+//! the paper's latency-model fitting procedure relies on (§III.A).
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Unbiased sample variance (n-1 denominator); 0 for n < 2.
+    pub var: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Summary { n, mean, var, min, max }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var.sqrt()
+    }
+
+    pub fn stderr(&self) -> f64 {
+        (self.var / self.n as f64).sqrt()
+    }
+}
+
+/// Percentile via linear interpolation on the sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Result of a (weighted) simple linear regression `y = slope*x + intercept`.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination on the weighted data.
+    pub r_squared: f64,
+}
+
+/// Weighted least squares for `y = a*x + b`.
+///
+/// This is the paper's model-fitting procedure: latency samples at small `N`
+/// are fitted with WLS; weights `1/y²` (relative-error weighting) are what
+/// `coordinator::benchmarker` passes so that the short-runtime samples —
+/// which the 10-minute benchmarking budget mostly consists of — don't drown
+/// the γ (setup-time) estimate.
+pub fn weighted_least_squares(xs: &[f64], ys: &[f64], ws: &[f64]) -> Option<LinearFit> {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len(), ws.len());
+    if xs.len() < 2 {
+        return None;
+    }
+    let sw: f64 = ws.iter().sum();
+    if sw <= 0.0 {
+        return None;
+    }
+    let mx = xs.iter().zip(ws).map(|(x, w)| x * w).sum::<f64>() / sw;
+    let my = ys.iter().zip(ws).map(|(y, w)| y * w).sum::<f64>() / sw;
+    let sxx: f64 = xs.iter().zip(ws).map(|(x, w)| w * (x - mx).powi(2)).sum();
+    if sxx <= 0.0 {
+        return None; // all x identical: slope unidentifiable
+    }
+    let sxy: f64 = xs
+        .iter()
+        .zip(ys)
+        .zip(ws)
+        .map(|((x, y), w)| w * (x - mx) * (y - my))
+        .sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_tot: f64 = ys.iter().zip(ws).map(|(y, w)| w * (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .zip(ws)
+        .map(|((x, y), w)| w * (y - (slope * x + intercept)).powi(2))
+        .sum();
+    let r_squared = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    Some(LinearFit { slope, intercept, r_squared })
+}
+
+/// Ordinary least squares (unit weights).
+pub fn least_squares(xs: &[f64], ys: &[f64]) -> Option<LinearFit> {
+    weighted_least_squares(xs, ys, &vec![1.0; xs.len()])
+}
+
+/// Relative error |pred - actual| / actual.
+pub fn relative_error(pred: f64, actual: f64) -> f64 {
+    ((pred - actual) / actual).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.var - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_single_point() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.var, 0.0);
+        assert_eq!(s.mean, 7.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_recovers_exact_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 5.0).collect();
+        let fit = least_squares(&xs, &ys).unwrap();
+        assert!((fit.slope - 3.0).abs() < 1e-10);
+        assert!((fit.intercept - 5.0).abs() < 1e-10);
+        assert!((fit.r_squared - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wls_downweights_outliers() {
+        // Exact line y = 2x + 1 with one wild point that gets weight ~0.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [3.0, 5.0, 7.0, 9.0, 1000.0];
+        let ws = [1.0, 1.0, 1.0, 1.0, 1e-9];
+        let fit = weighted_least_squares(&xs, &ys, &ws).unwrap();
+        assert!((fit.slope - 2.0).abs() < 1e-3);
+        assert!((fit.intercept - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn wls_relative_weighting_changes_fit() {
+        // With 1/y^2 weights, small-y points dominate.
+        let xs = [1.0, 10.0, 100.0, 1000.0];
+        let ys = [2.1, 11.0, 105.0, 1300.0]; // slope drifts upward at scale
+        let w_rel: Vec<f64> = ys.iter().map(|y| 1.0 / (y * y)).collect();
+        let rel = weighted_least_squares(&xs, &ys, &w_rel).unwrap();
+        let ols = least_squares(&xs, &ys).unwrap();
+        assert!(rel.slope < ols.slope);
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(least_squares(&[1.0], &[2.0]).is_none());
+        assert!(least_squares(&[2.0, 2.0], &[1.0, 3.0]).is_none());
+        assert!(weighted_least_squares(&[1.0, 2.0], &[1.0, 2.0], &[0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn relative_error_is_symmetric_in_magnitude() {
+        assert!((relative_error(110.0, 100.0) - 0.1).abs() < 1e-12);
+        assert!((relative_error(90.0, 100.0) - 0.1).abs() < 1e-12);
+    }
+}

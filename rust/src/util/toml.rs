@@ -1,0 +1,289 @@
+//! Minimal TOML-subset parser for the experiment config system.
+//!
+//! Supports the subset the `configs/*.toml` files use: top-level key/values,
+//! `[table]` and `[[array-of-tables]]` headers, dotted keys inside headers,
+//! strings, integers, floats, booleans, and homogeneous inline arrays.
+//! Comments (`#`) and blank lines are skipped. Values parse into
+//! [`crate::util::json::Json`] so the config layer has a single value model.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML document into a JSON object tree.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root = BTreeMap::new();
+    // Path of the currently-open table header.
+    let mut current: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { msg: msg.to_string(), line: lineno + 1 };
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path = split_key(inner.trim());
+            push_array_table(&mut root, &path).map_err(|m| err(&m))?;
+            current = path;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path = split_key(inner.trim());
+            open_table(&mut root, &path).map_err(|m| err(&m))?;
+            current = path;
+        } else if let Some(eq) = find_unquoted(line, '=') {
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let mut path = current.clone();
+            path.extend(split_key(key));
+            insert(&mut root, &path, val).map_err(|m| err(&m))?;
+        } else {
+            return Err(err("expected key = value or [table]"));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_unquoted(line: &str, target: char) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            c if c == target && !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn split_key(key: &str) -> Vec<String> {
+    key.split('.').map(|s| s.trim().trim_matches('"').to_string()).collect()
+}
+
+/// Navigate to (creating) the table at `path`; error on type conflicts.
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(o) => o,
+            Json::Arr(a) => match a.last_mut() {
+                Some(Json::Obj(o)) => o,
+                _ => return Err(format!("'{part}' is not a table")),
+            },
+            _ => return Err(format!("'{part}' is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn open_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    navigate(root, path).map(|_| ())
+}
+
+fn push_array_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let (last, parents) = path.split_last().ok_or("empty table name")?;
+    let parent = navigate(root, parents)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(a) => {
+            a.push(Json::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("'{last}' is not an array of tables")),
+    }
+}
+
+fn insert(root: &mut BTreeMap<String, Json>, path: &[String], val: Json) -> Result<(), String> {
+    let (last, parents) = path.split_last().ok_or("empty key")?;
+    let parent = navigate(root, parents)?;
+    if parent.contains_key(last) {
+        return Err(format!("duplicate key '{last}'"));
+    }
+    parent.insert(last.clone(), val);
+    Ok(())
+}
+
+fn parse_value(text: &str) -> Result<Json, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(s) = text.strip_prefix('"') {
+        let s = s.strip_suffix('"').ok_or("unterminated string")?;
+        // Reuse the JSON string unescaper.
+        return Json::parse(&format!("\"{s}\"")).map_err(|e| e.msg);
+    }
+    if text == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    // Numbers: TOML allows underscores.
+    let cleaned: String = text.chars().filter(|c| *c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value '{text}'"))
+}
+
+/// Split on commas that are not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = r#"
+            # experiment config
+            name = "fig1"
+            seed = 42
+            scale = 1.5
+            verbose = true
+
+            [sweep]
+            points = 11
+        "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fig1"));
+        assert_eq!(v.get("seed").unwrap().as_u64(), Some(42));
+        assert_eq!(v.get("scale").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("sweep").unwrap().get("points").unwrap().as_u64(), Some(11));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("xs = [1, 2, 3]\nnames = [\"a\", \"b\"]\nnested = [[1,2],[3]]").unwrap();
+        assert_eq!(v.get("xs").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("names").unwrap().as_arr().unwrap()[1].as_str(), Some("b"));
+        assert_eq!(v.get("nested").unwrap().as_arr().unwrap()[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let doc = r#"
+            [[platform]]
+            name = "cpu"
+            rate = 0.48
+
+            [[platform]]
+            name = "gpu"
+            rate = 0.65
+        "#;
+        let v = parse(doc).unwrap();
+        let ps = v.get("platform").unwrap().as_arr().unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].get("name").unwrap().as_str(), Some("cpu"));
+        assert_eq!(ps[1].get("rate").unwrap().as_f64(), Some(0.65));
+    }
+
+    #[test]
+    fn keys_scoped_to_latest_array_table() {
+        let doc = "[[p]]\nx = 1\n[[p]]\nx = 2";
+        let v = parse(doc).unwrap();
+        let ps = v.get("p").unwrap().as_arr().unwrap();
+        assert_eq!(ps[0].get("x").unwrap().as_u64(), Some(1));
+        assert_eq!(ps[1].get("x").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn dotted_keys() {
+        let v = parse("a.b.c = 3").unwrap();
+        assert_eq!(v.get("a").unwrap().get("b").unwrap().get("c").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn comments_and_underscore_numbers() {
+        let v = parse("n = 1_000_000 # one million").unwrap();
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let v = parse("s = \"a # b\"").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let e = parse("a = 1\na = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(parse("just words").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, ").is_err());
+        assert!(parse("[a\nx=1").is_err());
+    }
+}

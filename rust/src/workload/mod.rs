@@ -1,0 +1,81 @@
+//! Workloads: sets of atomic, divisible option-pricing tasks (§IV.A.1).
+
+pub mod kaiserslautern;
+pub mod option;
+
+pub use kaiserslautern::{generate, GeneratorConfig};
+pub use option::{OptionTask, Payoff};
+
+/// An ordered set of tasks to partition across a cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub tasks: Vec<OptionTask>,
+}
+
+impl Workload {
+    pub fn new(tasks: Vec<OptionTask>) -> Workload {
+        Workload { tasks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Total simulations across all tasks.
+    pub fn total_sims(&self) -> u64 {
+        self.tasks.iter().map(|t| t.n_sims).sum()
+    }
+
+    /// Total floating-point work across all tasks.
+    pub fn total_flops(&self) -> f64 {
+        self.tasks.iter().map(|t| t.total_flops()).sum()
+    }
+
+    /// Validate every task.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tasks.is_empty() {
+            return Err("empty workload".to_string());
+        }
+        for t in &self.tasks {
+            t.validate()?;
+        }
+        // Task ids must be unique (they key the RNG streams).
+        let mut ids: Vec<usize> = self.tasks.iter().map(|t| t.id).collect();
+        ids.sort();
+        ids.dedup();
+        if ids.len() != self.tasks.len() {
+            return Err("duplicate task ids".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_validation() {
+        let w = generate(&GeneratorConfig::small(4, 0.05, 1));
+        assert!(w.validate().is_ok());
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.total_sims(), w.tasks.iter().map(|t| t.n_sims).sum::<u64>());
+        assert!(w.total_flops() > 0.0);
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let mut w = generate(&GeneratorConfig::small(2, 0.05, 1));
+        w.tasks[1].id = w.tasks[0].id;
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(Workload::new(vec![]).validate().is_err());
+    }
+}

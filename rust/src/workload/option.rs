@@ -1,0 +1,236 @@
+//! Option-pricing task definitions — the paper's atomic, divisible tasks.
+//!
+//! The parameter-vector layout (`to_params`) is the wire format shared with
+//! the L1 Pallas kernels (`python/compile/kernels/mc.py`): any change must
+//! be made in both places and re-AOT'd.
+
+/// Payoff family — one per AOT kernel variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Payoff {
+    European,
+    Asian,
+    Barrier,
+}
+
+impl Payoff {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Payoff::European => "european",
+            Payoff::Asian => "asian",
+            Payoff::Barrier => "barrier",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Payoff> {
+        match s {
+            "european" => Some(Payoff::European),
+            "asian" => Some(Payoff::Asian),
+            "barrier" => Some(Payoff::Barrier),
+            _ => None,
+        }
+    }
+
+    /// Approximate floating-point operations per simulated path, used to
+    /// translate device GFLOPS into a Monte Carlo throughput (β). Counts the
+    /// Threefry rounds (~`steps`×90 ALU ops), Box-Muller, and path update.
+    pub fn flops_per_path(&self, steps: u32) -> f64 {
+        const RNG_FLOPS: f64 = 130.0; // threefry-20rounds + box-muller
+        const STEP_FLOPS: f64 = 12.0; // exp/log-spot update, accumulate
+        match self {
+            Payoff::European => RNG_FLOPS + 25.0,
+            Payoff::Asian | Payoff::Barrier => steps as f64 * (RNG_FLOPS + STEP_FLOPS) + 25.0,
+        }
+    }
+}
+
+/// One option-pricing task. Monetary values in $, times in years.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptionTask {
+    pub id: usize,
+    pub payoff: Payoff,
+    pub spot: f64,
+    pub strike: f64,
+    pub rate: f64,
+    pub sigma: f64,
+    pub maturity: f64,
+    /// Knock-out level (Barrier payoff only; ignored otherwise).
+    pub barrier: f64,
+    /// Fixing/monitoring dates for path-dependent payoffs.
+    pub steps: u32,
+    /// Half-width of the 95% confidence interval the task must reach, $.
+    pub target_accuracy: f64,
+    /// Simulations required to reach `target_accuracy` (the task's N).
+    pub n_sims: u64,
+}
+
+impl OptionTask {
+    /// Size a task's N from its accuracy target via the CLT:
+    /// `N = (z·σ_payoff / ε)²` with z = 1.96.
+    ///
+    /// The payoff standard deviation is approximated analytically (ATM
+    /// lognormal dispersion `s0·σ√T` scaled by a payoff-family factor);
+    /// the paper sizes N "so as to achieve an accuracy of $0.001" the same
+    /// way — from pre-run estimates, not pilot runs.
+    pub fn size_n(payoff: Payoff, spot: f64, sigma: f64, maturity: f64, accuracy: f64) -> u64 {
+        let family_factor = match payoff {
+            Payoff::European => 0.8,
+            Payoff::Asian => 0.5,   // averaging shrinks dispersion
+            Payoff::Barrier => 0.9, // knock-out adds dispersion near the barrier
+        };
+        let payoff_std = family_factor * spot * sigma * maturity.sqrt();
+        let z = 1.96;
+        let n = ((z * payoff_std / accuracy).powi(2)).ceil() as u64;
+        n.clamp(1 << 16, 1 << 34)
+    }
+
+    /// The f32[8] parameter vector the AOT kernels take.
+    pub fn to_params(&self) -> [f32; 8] {
+        [
+            self.spot as f32,
+            self.strike as f32,
+            self.rate as f32,
+            self.sigma as f32,
+            self.maturity as f32,
+            self.barrier as f32,
+            0.0,
+            0.0,
+        ]
+    }
+
+    /// Discount factor for this task's payoff statistics.
+    pub fn discount(&self) -> f64 {
+        (-self.rate * self.maturity).exp()
+    }
+
+    /// FLOPs of one simulated path of this task.
+    pub fn flops_per_path(&self) -> f64 {
+        self.payoff.flops_per_path(self.steps)
+    }
+
+    /// Total FLOPs of the whole task.
+    pub fn total_flops(&self) -> f64 {
+        self.flops_per_path() * self.n_sims as f64
+    }
+
+    /// Validate economic sanity (positive prices, vol, maturity, ...).
+    pub fn validate(&self) -> Result<(), String> {
+        let pos = [
+            ("spot", self.spot),
+            ("strike", self.strike),
+            ("sigma", self.sigma),
+            ("maturity", self.maturity),
+        ];
+        for (name, v) in pos {
+            if !(v > 0.0 && v.is_finite()) {
+                return Err(format!("task {}: {name} must be positive, got {v}", self.id));
+            }
+        }
+        if self.rate < 0.0 || self.rate > 0.5 {
+            return Err(format!("task {}: implausible rate {}", self.id, self.rate));
+        }
+        if self.payoff == Payoff::Barrier && self.barrier <= self.spot {
+            return Err(format!(
+                "task {}: up-and-out barrier {} must exceed spot {}",
+                self.id, self.barrier, self.spot
+            ));
+        }
+        if self.n_sims == 0 {
+            return Err(format!("task {}: zero simulations", self.id));
+        }
+        if self.payoff != Payoff::European && self.steps == 0 {
+            return Err(format!("task {}: path-dependent payoff needs steps", self.id));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> OptionTask {
+        OptionTask {
+            id: 0,
+            payoff: Payoff::European,
+            spot: 100.0,
+            strike: 105.0,
+            rate: 0.05,
+            sigma: 0.2,
+            maturity: 1.0,
+            barrier: 150.0,
+            steps: 1,
+            target_accuracy: 0.001,
+            n_sims: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn payoff_names_roundtrip() {
+        for p in [Payoff::European, Payoff::Asian, Payoff::Barrier] {
+            assert_eq!(Payoff::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Payoff::from_name("swaption"), None);
+    }
+
+    #[test]
+    fn sizing_scales_inverse_square_with_accuracy() {
+        let n1 = OptionTask::size_n(Payoff::European, 100.0, 0.2, 1.0, 0.01);
+        let n2 = OptionTask::size_n(Payoff::European, 100.0, 0.2, 1.0, 0.005);
+        // Halving accuracy quadruples N (modulo clamping).
+        assert!((n2 as f64 / n1 as f64 - 4.0).abs() < 0.01, "{n1} {n2}");
+    }
+
+    #[test]
+    fn sizing_at_paper_accuracy_is_large() {
+        // $0.001 on an ATM option needs ~1e9 paths — the paper's tasks run
+        // for thousands of seconds, consistent with Table IV.
+        let n = OptionTask::size_n(Payoff::European, 100.0, 0.2, 1.0, 0.001);
+        assert!(n > 100_000_000, "{n}");
+    }
+
+    #[test]
+    fn params_layout_matches_kernel_contract() {
+        let t = task();
+        let p = t.to_params();
+        assert_eq!(p[0], 100.0);
+        assert_eq!(p[1], 105.0);
+        assert_eq!(p[2], 0.05);
+        assert_eq!(p[3], 0.2);
+        assert_eq!(p[4], 1.0);
+        assert_eq!(p[5], 150.0);
+        assert_eq!(p[6], 0.0);
+        assert_eq!(p[7], 0.0);
+    }
+
+    #[test]
+    fn flops_scale_with_steps_for_path_dependent() {
+        let e = Payoff::European.flops_per_path(1);
+        let a64 = Payoff::Asian.flops_per_path(64);
+        let a128 = Payoff::Asian.flops_per_path(128);
+        assert!(a64 > 10.0 * e);
+        assert!((a128 / a64 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn validation_catches_nonsense() {
+        let mut t = task();
+        t.sigma = -0.1;
+        assert!(t.validate().is_err());
+
+        let mut t = task();
+        t.payoff = Payoff::Barrier;
+        t.barrier = 90.0;
+        assert!(t.validate().is_err());
+
+        let mut t = task();
+        t.n_sims = 0;
+        assert!(t.validate().is_err());
+
+        assert!(task().validate().is_ok());
+    }
+
+    #[test]
+    fn discount_factor() {
+        assert!((task().discount() - (-0.05f64).exp()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,193 @@
+//! Property tests on the coordinator's invariants (prop-harness replaces
+//! proptest, which is unavailable offline — see testing::prop).
+
+use cloudshapes::coordinator::executor::{execute, ExecutorConfig};
+use cloudshapes::coordinator::partitioner::baselines::{Classic, ClassicPartitioner};
+use cloudshapes::coordinator::partitioner::{lower_cost_bound, MilpConfig, MilpPartitioner};
+use cloudshapes::coordinator::{sweep, HeuristicPartitioner, ModelSet, Partitioner, SweepConfig};
+use cloudshapes::models::{CostModel, LatencyModel};
+use cloudshapes::platforms::{Cluster, SimConfig};
+use cloudshapes::testing::prop::{prop_assert, prop_check, Gen};
+use cloudshapes::workload::{generate, GeneratorConfig};
+
+/// Random, economically plausible model set (sized by the generator).
+fn arb_models(g: &mut Gen) -> ModelSet {
+    let mu = g.usize(1, 6);
+    let tau = g.usize(1, 10);
+    let quanta = [60.0, 600.0, 3600.0];
+    let mut latency = Vec::new();
+    for _ in 0..mu {
+        // Platform-wide speed scale; per-task jitter on top.
+        let speed = g.log_uniform(1e-7, 1e-4);
+        let gamma = g.log_uniform(0.1, 60.0);
+        for _ in 0..tau {
+            latency.push(LatencyModel::new(speed * g.f64(0.5, 2.0), gamma * g.f64(0.5, 2.0)));
+        }
+    }
+    let cost: Vec<CostModel> = (0..mu)
+        .map(|_| CostModel::new(*g.rng.choose(&quanta), g.f64(0.05, 2.0)))
+        .collect();
+    let n: Vec<u64> = (0..tau).map(|_| g.rng.range_u64(10_000, 50_000_000)).collect();
+    ModelSet::new(latency, cost, n, (0..mu).map(|i| format!("p{i}")).collect())
+}
+
+fn fast_milp() -> MilpPartitioner {
+    MilpPartitioner::new(MilpConfig { max_nodes: 40, time_limit_secs: 1.0, ..Default::default() })
+}
+
+#[test]
+fn prop_all_partitioners_produce_valid_allocations() {
+    prop_check("partitioners produce valid allocations", 40, |g| {
+        let models = arb_models(g);
+        let milp = fast_milp();
+        let heuristic = HeuristicPartitioner::default();
+        let classics: Vec<ClassicPartitioner> =
+            Classic::all().into_iter().map(ClassicPartitioner).collect();
+        let mut parts: Vec<&dyn Partitioner> = vec![&milp, &heuristic];
+        for c in &classics {
+            parts.push(c);
+        }
+        for part in parts {
+            let alloc = part
+                .partition(&models, None)
+                .map_err(|e| format!("{}: {e}", part.name()))?;
+            alloc.validate().map_err(|e| format!("{}: {e}", part.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_milp_never_worse_than_heuristic() {
+    // The paper's headline claim, as a property over random problems.
+    prop_check("milp <= heuristic at matched budgets", 25, |g| {
+        let models = arb_models(g);
+        let heuristic = HeuristicPartitioner::default();
+        let h_alloc = heuristic.partition(&models, None).map_err(|e| e)?;
+        let (h_lat, h_cost) = models.evaluate(&h_alloc);
+        let milp = fast_milp();
+        let m = milp.solve(&models, Some(h_cost)).map_err(|e| e)?;
+        prop_assert(
+            m.makespan <= h_lat * (1.0 + 1e-6),
+            &format!("milp {} > heuristic {h_lat} at budget {h_cost}", m.makespan),
+        )
+    });
+}
+
+#[test]
+fn prop_milp_respects_budgets() {
+    prop_check("milp cost <= budget (true ceiling semantics)", 25, |g| {
+        let models = arb_models(g);
+        let (c_l, _) = lower_cost_bound(&models);
+        let budget = c_l * g.f64(1.0, 4.0) + g.f64(0.0, 2.0);
+        match fast_milp().solve(&models, Some(budget)) {
+            Ok(out) => prop_assert(
+                out.cost <= budget + 1e-9 && out.bound <= out.makespan + 1e-9,
+                &format!("cost {} budget {budget} bound {}", out.cost, out.bound),
+            ),
+            Err(_) => prop_assert(c_l > budget, "infeasible although C_L fits"),
+        }
+    });
+}
+
+#[test]
+fn prop_makespan_is_max_platform_latency() {
+    prop_check("F_L == max_i G_L_i", 60, |g| {
+        let models = arb_models(g);
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let max = (0..models.mu)
+            .map(|i| models.platform_latency(&alloc, i))
+            .fold(0.0f64, f64::max);
+        prop_assert((models.makespan(&alloc) - max).abs() < 1e-9, "makespan mismatch")
+    });
+}
+
+#[test]
+fn prop_total_cost_is_sum_of_quantised_platform_costs() {
+    prop_check("F_C == sum of ceil-quantised costs", 60, |g| {
+        let models = arb_models(g);
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let total: f64 = (0..models.mu).map(|i| models.platform_cost(&alloc, i)).sum();
+        prop_assert((models.total_cost(&alloc) - total).abs() < 1e-9, "cost mismatch")?;
+        prop_assert(
+            models.total_cost_relaxed(&alloc) <= total + 1e-9,
+            "relaxed cost above billed",
+        )
+    });
+}
+
+#[test]
+fn prop_pareto_fronts_are_monotone() {
+    prop_check("pareto front monotone in (cost, latency)", 10, |g| {
+        let models = arb_models(g);
+        let curve = sweep(
+            &HeuristicPartitioner::default(),
+            &models,
+            &SweepConfig { levels: g.usize(2, 6) },
+        )
+        .map_err(|e| e)?;
+        let front = curve.pareto_front();
+        for w in front.windows(2) {
+            prop_assert(
+                w[0].cost <= w[1].cost + 1e-9 && w[0].latency >= w[1].latency - 1e-9,
+                "front not monotone",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_executor_preserves_simulation_totals() {
+    prop_check("executor dispatches exactly N sims per task", 12, |g| {
+        let n_tasks = g.usize(1, 6);
+        let workload = generate(&GeneratorConfig::small(n_tasks, 0.1, g.rng.next_u64()));
+        let specs = cloudshapes::platforms::spec::small_cluster();
+        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), g.rng.next_u64());
+        let models = ModelSet::from_specs(&specs, &workload);
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default())
+            .map_err(|e| e)?;
+        let dispatched: u64 = rep.platforms.iter().map(|p| p.sims).sum();
+        prop_assert(
+            dispatched == workload.total_sims(),
+            &format!("{dispatched} != {}", workload.total_sims()),
+        )?;
+        let max_lane = rep.platforms.iter().map(|p| p.latency_secs).fold(0.0f64, f64::max);
+        prop_assert((rep.makespan_secs - max_lane).abs() < 1e-9, "makespan != max lane")
+    });
+}
+
+#[test]
+fn partial_platform_failures_are_survivable() {
+    // Failure injection: a flaky platform loses slices but the run
+    // completes, reports failures, and the other platforms' prices arrive.
+    let specs = cloudshapes::platforms::spec::small_cluster();
+    let flaky = SimConfig { failure_rate: 0.5, ..SimConfig::exact() };
+    let cluster = Cluster::simulated(&specs, &flaky, 11);
+    let workload = generate(&GeneratorConfig::small(10, 0.1, 3));
+    let models = ModelSet::from_specs(&specs, &workload);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+    assert!(rep.failures > 0, "failure injection never fired at rate 0.5");
+    assert!(rep.failures < 30, "everything failed");
+    // Some tasks should still be priced by surviving slices.
+    assert!(rep.prices.iter().any(Option::is_some));
+}
+
+#[test]
+fn benchmarking_under_failures_keeps_partitioning_usable() {
+    // A platform failing 30% of benchmark runs still gets a usable model
+    // from the surviving reps; end-to-end partitioning succeeds.
+    let specs = cloudshapes::platforms::spec::small_cluster();
+    let flaky = SimConfig { failure_rate: 0.3, ..SimConfig::default() };
+    let cluster = Cluster::simulated(&specs, &flaky, 5);
+    let workload = generate(&GeneratorConfig::small(5, 0.05, 9));
+    let report = cloudshapes::coordinator::benchmark(
+        &cluster,
+        &workload,
+        &cloudshapes::coordinator::BenchmarkConfig { reps: 5, ..Default::default() },
+    );
+    let alloc = fast_milp().partition(&report.models, None).unwrap();
+    assert!(alloc.validate().is_ok());
+}

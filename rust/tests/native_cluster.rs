@@ -1,0 +1,90 @@
+//! Hybrid-cluster integration: simulated platforms + the native PJRT
+//! platform in one executor run (requires `make artifacts`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cloudshapes::coordinator::executor::{execute, ExecutorConfig};
+use cloudshapes::coordinator::{benchmark, BenchmarkConfig, HeuristicPartitioner, ModelSet};
+use cloudshapes::platforms::native::NativePlatform;
+use cloudshapes::platforms::spec::small_cluster;
+use cloudshapes::platforms::{Cluster, Platform, SimConfig};
+use cloudshapes::pricing::blackscholes;
+use cloudshapes::runtime::EngineHandle;
+use cloudshapes::workload::option::Payoff;
+use cloudshapes::workload::{generate, GeneratorConfig};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn hybrid_cluster() -> Cluster {
+    let mut cluster = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 3);
+    let engine = EngineHandle::spawn(&artifact_dir()).expect("make artifacts first");
+    cluster.push(Arc::new(NativePlatform::new(engine)));
+    cluster
+}
+
+#[test]
+fn native_platform_measures_real_wallclock() {
+    let cluster = hybrid_cluster();
+    let native = cluster.platform(3);
+    let w = generate(&GeneratorConfig::small(1, 0.05, 1));
+    let mut t = w.tasks[0].clone();
+    t.payoff = Payoff::European;
+    t.steps = 1;
+    let _warmup = native.execute(&t, 1 << 12, 1, 0); // lazy compile happens here
+    let small = native.execute(&t, 1 << 12, 1, 0);
+    let big = native.execute(&t, 1 << 19, 1, 0);
+    assert!(small.error.is_none() && big.error.is_none());
+    assert!(big.latency_secs > small.latency_secs, "more paths must take longer");
+    assert!(big.stats.unwrap().n >= 1 << 19);
+}
+
+#[test]
+fn hybrid_execution_prices_correctly_and_uses_native() {
+    let cluster = hybrid_cluster();
+    // European-only workload so every price is closed-form checkable.
+    let workload = generate(&GeneratorConfig {
+        n_tasks: 4,
+        seed: 5,
+        accuracy: 0.05,
+        payoff_mix: (1.0, 0.0, 0.0),
+        step_choices: vec![64],
+    });
+    // Benchmark the hybrid cluster (native rungs burn real wall-clock, so
+    // keep the ladder modest) and partition with the fitted models.
+    let cfg = BenchmarkConfig { reps: 2, rung_budget_secs: 5.0, ..Default::default() };
+    let models: ModelSet = benchmark(&cluster, &workload, &cfg).models;
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+    assert_eq!(rep.failures, 0);
+    // Native platform (a real CPU vs simulated-seconds platforms) should
+    // have received a share of the work.
+    let native_report = rep.platforms.iter().find(|p| p.name.contains("native")).unwrap();
+    assert!(native_report.sims > 0, "native platform got no work");
+    for (t, price) in workload.tasks.iter().zip(&rep.prices) {
+        let est = price.as_ref().unwrap();
+        let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(
+            (est.price - bs).abs() < 6.0 * est.std_error + 0.1,
+            "task {}: {est:?} vs {bs}",
+            t.id
+        );
+    }
+}
+
+#[test]
+fn native_failure_path_reports_not_panics() {
+    // An engine pointed at a payoff with artifacts missing must fail
+    // gracefully through the ExecOutcome error channel.
+    let engine = EngineHandle::spawn(&artifact_dir()).unwrap();
+    let native = NativePlatform::new(engine);
+    let mut t = generate(&GeneratorConfig::small(1, 0.05, 1)).tasks[0].clone();
+    t.payoff = Payoff::Asian;
+    t.steps = 64;
+    let out = native.execute(&t, 4096, 1, 0);
+    // Asian artifacts exist, so this succeeds — now a nonexistent dir:
+    assert!(out.error.is_none());
+    assert!(EngineHandle::spawn(std::path::Path::new("/nonexistent-artifacts")).is_err());
+}

@@ -1,0 +1,126 @@
+//! Whole-pipeline integration: config -> experiment -> benchmark -> partition
+//! -> sweep -> execute -> report, on the quick preset (no artifacts needed),
+//! plus CLI and serve round-trips.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use cloudshapes::cli;
+use cloudshapes::cli::serve::serve_until_shutdown;
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::executor::execute;
+use cloudshapes::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner, Partitioner};
+use cloudshapes::report::{self, Experiment};
+use cloudshapes::util::json::Json;
+
+fn quick() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick();
+    cfg.milp.time_limit_secs = 2.0;
+    cfg.sweep.levels = 4;
+    cfg
+}
+
+#[test]
+fn full_pipeline_quick() {
+    let cfg = quick();
+    let e = Experiment::build(cfg.clone()).unwrap();
+
+    // Fitted models are usable and close to nominal for heavyweight pairs.
+    let m = e.models();
+    assert_eq!((m.mu, m.tau), (3, 8));
+
+    // Partition with both approaches, execute both, compare predictions.
+    let milp = MilpPartitioner::new(cfg.milp.clone());
+    let heuristic = HeuristicPartitioner::default();
+    for part in [&milp as &dyn Partitioner, &heuristic as &dyn Partitioner] {
+        let alloc = part.partition(m, None).unwrap();
+        let (pred_lat, pred_cost) = m.evaluate(&alloc);
+        let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor).unwrap();
+        assert_eq!(rep.failures, 0);
+        let lat_err = (rep.makespan_secs - pred_lat).abs() / pred_lat;
+        assert!(lat_err < 0.35, "{}: predicted {pred_lat} measured {}", part.name(), rep.makespan_secs);
+        assert!(rep.cost <= pred_cost * 1.5 + 0.1);
+        // All tasks priced.
+        assert!(rep.prices.iter().all(Option::is_some));
+    }
+}
+
+#[test]
+fn sweep_and_reports_quick() {
+    let cfg = quick();
+    let e = Experiment::build(cfg.clone()).unwrap();
+    let curve = sweep(&MilpPartitioner::new(cfg.milp.clone()), e.models(), &cfg.sweep).unwrap();
+    assert!(curve.points.len() >= 2);
+    assert!(curve.c_lower <= curve.c_upper + 1e-9);
+
+    // Table/figure generators run end to end on the same experiment.
+    let t2 = report::tables::table2_for(&e);
+    assert_eq!(t2.n_rows(), 3);
+    let t4 = report::table4(e.models(), &cfg.milp).unwrap();
+    assert!(t4.render().contains("Cheapest (C_L)"));
+    let (plot, points) = report::fig2(&e, &[2.0, 5.0]);
+    assert!(!points.is_empty());
+    assert!(plot.render().contains("Fig. 2"));
+}
+
+#[test]
+fn config_files_in_repo_parse() {
+    for name in ["configs/paper.toml", "configs/quick.toml", "configs/native.toml"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(name);
+        let cfg = ExperimentConfig::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(cfg.sweep.levels >= 2, "{name}");
+    }
+}
+
+#[test]
+fn cli_quick_commands() {
+    let run = |s: &str| cli::main(&s.split_whitespace().map(String::from).collect::<Vec<_>>());
+    assert_eq!(run("table 1"), 0);
+    assert_eq!(run("table 3"), 0);
+    assert_eq!(run("info --quick"), 0);
+    assert_eq!(run("partition --quick --partitioner min-min"), 0);
+    assert_eq!(run("pareto --quick --partitioner heuristic --levels 3"), 0);
+    assert_eq!(run("run --quick --partitioner heuristic"), 0);
+    assert_eq!(run("bogus"), 1);
+}
+
+#[test]
+fn serve_tcp_roundtrip() {
+    let experiment = Arc::new(Experiment::build(quick()).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || serve_until_shutdown(listener, experiment));
+
+    let ask = |line: &str| -> Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut r = BufReader::new(s);
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+    let pong = ask(r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+    let part = ask(r#"{"op":"partition","partitioner":"heuristic","budget":100.0}"#);
+    assert_eq!(part.get("ok"), Some(&Json::Bool(true)), "{}", part.to_string_compact());
+    let bye = ask(r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn workload_scales_are_consistent() {
+    // Paper-scale sanity: the default workload on the default cluster has
+    // the paper's order-of-magnitude makespans (thousands of seconds on the
+    // cheapest platform), so Table IV comparisons are meaningful.
+    let cfg = ExperimentConfig::default();
+    let e = Experiment::build(cfg).unwrap();
+    let (c_l, alloc) = cloudshapes::coordinator::partitioner::lower_cost_bound(e.models());
+    let lat = e.models().makespan(&alloc);
+    assert!(
+        (1_000.0..200_000.0).contains(&lat),
+        "cheapest-platform makespan {lat} out of paper range"
+    );
+    assert!(c_l > 0.5 && c_l < 100.0, "C_L {c_l} out of range");
+}

@@ -1,0 +1,106 @@
+//! Integration: AOT artifacts -> PJRT engine -> prices that match both the
+//! native rust Threefry mirror and Black-Scholes. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use cloudshapes::pricing::{blackscholes, combine, mc};
+use cloudshapes::runtime::EngineHandle;
+use cloudshapes::workload::option::{OptionTask, Payoff};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> EngineHandle {
+    EngineHandle::spawn(&artifact_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn task(payoff: Payoff) -> OptionTask {
+    OptionTask {
+        id: 3,
+        payoff,
+        spot: 100.0,
+        strike: 105.0,
+        rate: 0.05,
+        sigma: 0.2,
+        maturity: 1.0,
+        barrier: 140.0,
+        steps: 64, // matches the AOT variants for path-dependent payoffs
+        target_accuracy: 0.05,
+        n_sims: 1 << 16,
+    }
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let e = engine();
+    assert_eq!(e.platform_name().to_lowercase(), "cpu");
+    let payoffs = e.supported_payoffs();
+    assert!(payoffs.contains(&Payoff::European));
+    assert!(payoffs.contains(&Payoff::Asian));
+    assert!(payoffs.contains(&Payoff::Barrier));
+}
+
+#[test]
+fn european_price_matches_black_scholes() {
+    let e = engine();
+    let t = task(Payoff::European);
+    let stats = e.price(&t, 1 << 17, 42).unwrap();
+    assert!(stats.n >= 1 << 17);
+    let est = combine(&stats, t.discount());
+    let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+    assert!(
+        (est.price - bs).abs() < 4.0 * est.std_error + 0.05,
+        "pjrt {} ± {} vs bs {bs}",
+        est.price,
+        est.std_error
+    );
+}
+
+#[test]
+fn pjrt_matches_native_threefry_mirror_exactly() {
+    // Same (task id, seed) stream, same chunk: the HLO and the rust mirror
+    // must agree to f32 reduction tolerance.
+    let e = engine();
+    let t = task(Payoff::European);
+    let pjrt = e.price(&t, 4096, 7).unwrap();
+    let native = mc::simulate(&t, 7, 0, 4096);
+    assert_eq!(pjrt.n, native.n);
+    let rel = (pjrt.sum - native.sum).abs() / native.sum.abs().max(1.0);
+    assert!(rel < 1e-4, "pjrt {} vs native {}", pjrt.sum, native.sum);
+    let rel2 = (pjrt.sum_sq - native.sum_sq).abs() / native.sum_sq.abs().max(1.0);
+    assert!(rel2 < 1e-4, "pjrt {} vs native {}", pjrt.sum_sq, native.sum_sq);
+}
+
+#[test]
+fn path_dependent_payoffs_execute() {
+    let e = engine();
+    for payoff in [Payoff::Asian, Payoff::Barrier] {
+        let t = task(payoff);
+        let stats = e.price(&t, 4096, 1).unwrap();
+        let est = combine(&stats, t.discount());
+        assert!(est.price > 0.0 && est.price < t.spot, "{payoff:?}: {est:?}");
+        // Both are dominated by the European call on the same terms.
+        let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(est.price < bs + 4.0 * est.std_error, "{payoff:?}: {est:?} vs {bs}");
+    }
+}
+
+#[test]
+fn chunk_cover_overshoots_at_most_smallest_variant() {
+    let e = engine();
+    let t = task(Payoff::European);
+    let stats = e.price(&t, 5000, 3).unwrap();
+    // Smallest european variant is 4096: 5000 -> 4096 + 4096 = 8192.
+    assert_eq!(stats.n, 8192);
+}
+
+#[test]
+fn different_seeds_give_different_but_consistent_estimates() {
+    let e = engine();
+    let t = task(Payoff::European);
+    let a = combine(&e.price(&t, 1 << 15, 1).unwrap(), t.discount());
+    let b = combine(&e.price(&t, 1 << 15, 2).unwrap(), t.discount());
+    assert_ne!(a.price, b.price);
+    assert!((a.price - b.price).abs() < 6.0 * (a.std_error + b.std_error));
+}
