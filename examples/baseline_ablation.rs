@@ -3,50 +3,59 @@
 //! Sufferage) on the same model data — quantifies how much of the win comes
 //! from task divisibility + billing awareness vs plain good mapping.
 //!
+//! Every strategy is resolved by name through the session's
+//! `PartitionerRegistry`, so adding a strategy automatically adds a table
+//! row.
+//!
 //! ```bash
 //! cargo run --release --example baseline_ablation
 //! ```
 
+use cloudshapes::api::{CloudshapesError, SessionBuilder};
 use cloudshapes::config::ExperimentConfig;
-use cloudshapes::coordinator::partitioner::baselines::{Classic, ClassicPartitioner};
-use cloudshapes::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
-use cloudshapes::report::Experiment;
+use cloudshapes::coordinator::HeuristicPartitioner;
 use cloudshapes::util::table::{fnum, Align, Table};
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), CloudshapesError> {
     let quick = std::env::args().any(|a| a == "quick");
     let cfg = if quick {
         ExperimentConfig::quick()
     } else {
         ExperimentConfig::load(std::path::Path::new("configs/paper.toml")).unwrap_or_default()
     };
-    let e = Experiment::build(cfg.clone())?;
-    let models = e.models();
+    let session = SessionBuilder::from_config(cfg).build()?;
+    let models = session.models();
 
     let mut t = Table::new(&["partitioner", "makespan (s)", "cost ($)", "platforms"])
         .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
 
+    // Whole-task baselines, straight from the registry.
+    let classics = ["olb", "met", "mct", "min-min", "max-min", "sufferage"];
     let mut results: Vec<(String, f64)> = Vec::new();
-    for c in Classic::all() {
-        let alloc = ClassicPartitioner(c).partition(models, None)?;
-        let (lat, cost) = models.evaluate(&alloc);
+    for name in classics {
+        let p = session.partition_with(Some(name), None)?;
         t.row(&[
-            c.name().to_string(),
-            fnum(lat, 1),
-            fnum(cost, 3),
-            alloc.used_platforms().len().to_string(),
+            p.partitioner.clone(),
+            fnum(p.predicted_latency_s, 1),
+            fnum(p.predicted_cost, 3),
+            p.alloc.used_platforms().len().to_string(),
         ]);
-        results.push((c.name().to_string(), lat));
+        results.push((p.partitioner, p.predicted_latency_s));
     }
     let h = HeuristicPartitioner::upper_bound_allocation(models);
     let (hl, hc) = models.evaluate(&h);
-    t.row(&["paper-heuristic (C_U)".to_string(), fnum(hl, 1), fnum(hc, 3), h.used_platforms().len().to_string()]);
+    t.row(&[
+        "paper-heuristic (C_U)".to_string(),
+        fnum(hl, 1),
+        fnum(hc, 3),
+        h.used_platforms().len().to_string(),
+    ]);
 
-    let milp = MilpPartitioner::new(cfg.milp.clone()).solve(models, None)?;
+    let milp = session.partition_with(Some("milp"), None)?;
     t.row(&[
         "milp (divisible)".to_string(),
-        fnum(milp.makespan, 1),
-        fnum(milp.cost, 3),
+        fnum(milp.predicted_latency_s, 1),
+        fnum(milp.predicted_cost, 3),
         milp.alloc.used_platforms().len().to_string(),
     ]);
     println!("{}", t.render());
@@ -54,9 +63,9 @@ fn main() -> Result<(), String> {
     // The divisible MILP must dominate every whole-task mapper on makespan.
     for (name, lat) in &results {
         assert!(
-            milp.makespan <= lat * 1.001,
+            milp.predicted_latency_s <= lat * 1.001,
             "milp ({}) slower than {name} ({lat})",
-            milp.makespan
+            milp.predicted_latency_s
         );
     }
     println!("baseline_ablation OK (milp dominates all whole-task mappers)");

@@ -1,6 +1,7 @@
-//! Coordinator-as-a-service demo: starts the JSON-over-TCP coordinator on a
-//! free port, runs a scripted client session against it (ping, specs,
-//! partition at several budgets, evaluate, shutdown), and prints the
+//! Coordinator-as-a-service demo: starts the JSON-over-TCP coordinator
+//! (protocol v1) on a free port, runs a scripted client session against it
+//! (ping, specs, partition at several budgets, evaluate, a deliberately bad
+//! request to show the structured error payload, shutdown), and prints the
 //! round-trip results — the "long-running framework" usage mode.
 //!
 //! ```bash
@@ -12,42 +13,45 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::thread;
 
+use cloudshapes::api::{CloudshapesError, PROTOCOL_VERSION, SessionBuilder};
 use cloudshapes::cli::serve::serve_until_shutdown;
-use cloudshapes::config::ExperimentConfig;
-use cloudshapes::report::Experiment;
+use cloudshapes::coordinator::partitioner::MilpConfig;
 use cloudshapes::util::json::Json;
 
-fn request(addr: &str, line: &str) -> Result<Json, String> {
-    let mut stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
-    stream
-        .write_all(format!("{line}\n").as_bytes())
-        .map_err(|e| e.to_string())?;
+fn request(addr: &str, line: &str) -> Result<Json, CloudshapesError> {
+    let io = |e: std::io::Error| CloudshapesError::runtime(e.to_string());
+    let mut stream = TcpStream::connect(addr).map_err(io)?;
+    stream.write_all(format!("{line}\n").as_bytes()).map_err(io)?;
     let mut reader = BufReader::new(stream);
     let mut response = String::new();
-    reader.read_line(&mut response).map_err(|e| e.to_string())?;
-    Json::parse(response.trim()).map_err(|e| e.to_string())
+    reader.read_line(&mut response).map_err(io)?;
+    Ok(Json::parse(response.trim())?)
 }
 
-fn main() -> Result<(), String> {
-    let mut cfg = ExperimentConfig::quick();
-    cfg.milp.time_limit_secs = 3.0;
-    println!("building experiment + binding coordinator...");
-    let experiment = Arc::new(Experiment::build(cfg)?);
-    let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
-    let addr = listener.local_addr().map_err(|e| e.to_string())?.to_string();
+fn main() -> Result<(), CloudshapesError> {
+    println!("building session + binding coordinator (protocol v{PROTOCOL_VERSION})...");
+    let session = SessionBuilder::quick()
+        .milp(MilpConfig { time_limit_secs: 3.0, ..Default::default() })
+        .build()?;
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| CloudshapesError::runtime(e.to_string()))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| CloudshapesError::runtime(e.to_string()))?
+        .to_string();
     println!("coordinator on {addr}");
-    let server = thread::spawn(move || serve_until_shutdown(listener, experiment));
+    let server = thread::spawn(move || serve_until_shutdown(listener, Arc::new(session)));
 
-    // Scripted client session.
-    let session = [
-        r#"{"op":"ping"}"#.to_string(),
-        r#"{"op":"specs"}"#.to_string(),
-        r#"{"op":"partition","partitioner":"heuristic"}"#.to_string(),
-        r#"{"op":"partition","partitioner":"milp"}"#.to_string(),
-        r#"{"op":"partition","partitioner":"milp","budget":1.0}"#.to_string(),
-        r#"{"op":"evaluate","partitioner":"milp"}"#.to_string(),
+    // Scripted client session (note the explicit budget: null = unconstrained).
+    let session_lines = [
+        r#"{"v":1,"op":"ping"}"#,
+        r#"{"v":1,"op":"specs"}"#,
+        r#"{"v":1,"op":"partition","partitioner":"heuristic","budget":null}"#,
+        r#"{"v":1,"op":"partition","partitioner":"milp","budget":null}"#,
+        r#"{"v":1,"op":"partition","partitioner":"milp","budget":1.0}"#,
+        r#"{"v":1,"op":"evaluate","partitioner":"milp","budget":null}"#,
     ];
-    for line in &session {
+    for line in session_lines {
         let resp = request(&addr, line)?;
         assert_eq!(
             resp.get("ok"),
@@ -57,14 +61,24 @@ fn main() -> Result<(), String> {
         );
         println!("> {line}\n< {}", resp.to_string_compact());
     }
+
+    // A bad request comes back as a typed error payload, not a dropped
+    // connection.
+    let bad = request(&addr, r#"{"v":1,"op":"partition"}"#)?;
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    let kind = bad.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str);
+    assert_eq!(kind, Some("protocol"), "{}", bad.to_string_compact());
+    println!("> (missing budget)\n< {}", bad.to_string_compact());
+
     // Model-vs-measured consistency from the evaluate round-trip.
-    let eval = request(&addr, r#"{"op":"evaluate","partitioner":"heuristic"}"#)?;
+    let eval =
+        request(&addr, r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":null}"#)?;
     let pred = eval.get("predicted_latency_s").and_then(Json::as_f64).unwrap();
     let meas = eval.get("measured_latency_s").and_then(Json::as_f64).unwrap();
     println!("predicted {pred:.1}s vs measured {meas:.1}s");
     assert!((meas / pred - 1.0).abs() < 0.5, "prediction wildly off");
 
-    let _ = request(&addr, r#"{"op":"shutdown"}"#);
+    let _ = request(&addr, r#"{"v":1,"op":"shutdown"}"#);
     let _ = server.join();
     println!("cluster_serve OK");
     Ok(())

@@ -5,7 +5,8 @@
 //! 2. builds a heterogeneous cluster = simulated Table II platforms + the
 //!    REAL native platform executing those artifacts;
 //! 3. runs the paper's §III.A benchmarking procedure on it (the native
-//!    platform is benchmarked with real wall-clock executions);
+//!    platform is benchmarked with real wall-clock executions) — this is
+//!    `SessionBuilder::build`;
 //! 4. partitions the workload with heuristic vs MILP at three budgets;
 //! 5. EXECUTES every partition — the native platform really prices its
 //!    slices — and reports predicted vs measured makespan/cost plus price
@@ -17,23 +18,22 @@
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
+use cloudshapes::api::{CloudshapesError, SessionBuilder};
 use cloudshapes::config::ExperimentConfig;
-use cloudshapes::coordinator::executor::execute;
 use cloudshapes::coordinator::partitioner::lower_cost_bound;
-use cloudshapes::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
 use cloudshapes::pricing::blackscholes;
-use cloudshapes::report::Experiment;
 use cloudshapes::workload::option::Payoff;
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), CloudshapesError> {
     let cfg = ExperimentConfig::load(std::path::Path::new("configs/native.toml"))
         .unwrap_or_else(|_| {
             let mut c = ExperimentConfig::quick();
             c.cluster.with_native = true;
             c
         });
-    println!("building experiment (simulated cluster + native PJRT platform)...");
-    let e = Experiment::build(cfg.clone())?;
+    println!("building session (simulated cluster + native PJRT platform)...");
+    let session = SessionBuilder::from_config(cfg).build()?;
+    let e = session.experiment();
     println!(
         "cluster: {} platforms ({} native), workload: {} tasks / {} sims",
         e.cluster.len(),
@@ -42,11 +42,11 @@ fn main() -> Result<(), String> {
         e.workload.total_sims()
     );
 
-    let models = e.models();
+    let models = session.models();
     // Show what benchmarking learned about the native platform.
     let native_idx = (0..models.mu)
         .find(|&i| models.platform_names[i].contains("native"))
-        .ok_or("native platform missing")?;
+        .ok_or_else(|| CloudshapesError::platform("native platform missing"))?;
     println!("\nbenchmark-fitted native-platform models (real wall-clock):");
     for j in 0..models.tau.min(4) {
         let m = models.model(native_idx, j);
@@ -56,27 +56,28 @@ fn main() -> Result<(), String> {
         );
     }
 
-    let milp = MilpPartitioner::new(cfg.milp.clone());
-    let heuristic = HeuristicPartitioner::default();
     let (c_l, _) = lower_cost_bound(models);
-    let un = milp.solve(models, None)?;
-    let budgets = [None, Some((c_l + un.cost) / 2.0), Some(c_l)];
+    let un = session.partition_with(Some("milp"), None)?;
+    let budgets = [None, Some((c_l + un.predicted_cost) / 2.0), Some(c_l)];
 
-    println!("\n{:>12} {:>10} {:>24} {:>24}", "budget", "partnr", "predicted (s / $)", "measured (s / $)");
+    println!(
+        "\n{:>12} {:>10} {:>24} {:>24}",
+        "budget", "partnr", "predicted (s / $)", "measured (s / $)"
+    );
     for budget in budgets {
-        for p in [&milp as &dyn Partitioner, &heuristic as &dyn Partitioner] {
-            let alloc = match p.partition(models, budget) {
-                Ok(a) => a,
+        for name in ["milp", "heuristic"] {
+            // Skip only infeasible budgets; execution failures must propagate.
+            let p = match session.partition_with(Some(name), budget) {
+                Ok(p) => p,
                 Err(_) => continue,
             };
-            let (pl, pc) = models.evaluate(&alloc);
-            let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor)?;
+            let rep = session.execute_allocation(&p.alloc)?;
             println!(
                 "{:>12} {:>10} {:>14.1} / {:<7.3} {:>14.1} / {:<7.3}  (native slice: {} sims)",
                 budget.map(|b| format!("{b:.2}")).unwrap_or_else(|| "uncon".into()),
-                p.name(),
-                pl,
-                pc,
+                p.partitioner,
+                p.predicted_latency_s,
+                p.predicted_cost,
                 rep.makespan_secs,
                 rep.cost,
                 rep.platforms[native_idx].sims,
@@ -87,11 +88,12 @@ fn main() -> Result<(), String> {
 
     // Price-correctness audit: every European task vs Black-Scholes.
     println!("\nprice audit (milp unconstrained partition):");
-    let alloc = milp.partition(models, None)?;
-    let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor)?;
+    let rep = session.evaluate_with(Some("milp"), None)?.execution;
     let mut audited = 0;
     for (t, price) in e.workload.tasks.iter().zip(&rep.prices) {
-        let est = price.as_ref().ok_or("missing price")?;
+        let est = price
+            .as_ref()
+            .ok_or_else(|| CloudshapesError::runtime(format!("task {} missing price", t.id)))?;
         if t.payoff == Payoff::European {
             let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
             let ok = (est.price - bs).abs() < 6.0 * est.std_error + 0.1;

@@ -1,32 +1,30 @@
 //! Pareto sweep at paper scale: regenerate the Fig. 1 trade-off for both
-//! partitioners and print the curves side by side (ASCII + CSV on stdout).
+//! partitioners through one `TradeoffSession` and print the curves side by
+//! side (ASCII + CSV on stdout).
 //!
 //! ```bash
 //! cargo run --release --example pareto_sweep            # paper scale
 //! cargo run --release --example pareto_sweep -- quick   # small preset
 //! ```
 
+use cloudshapes::api::{CloudshapesError, SessionBuilder};
 use cloudshapes::config::ExperimentConfig;
-use cloudshapes::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner, SweepConfig};
-use cloudshapes::report::Experiment;
 use cloudshapes::util::plot::{Plot, Series};
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), CloudshapesError> {
     let quick = std::env::args().any(|a| a == "quick");
-    let mut cfg = if quick {
+    let cfg = if quick {
         ExperimentConfig::quick()
     } else {
         ExperimentConfig::load(std::path::Path::new("configs/paper.toml"))
             .unwrap_or_default()
     };
-    cfg.sweep = SweepConfig { levels: if quick { 5 } else { 9 } };
-    let e = Experiment::build(cfg.clone())?;
-    let models = e.models();
+    let session = SessionBuilder::from_config(cfg)
+        .budget_sweep(if quick { 5 } else { 9 })
+        .build()?;
 
-    let milp = MilpPartitioner::new(cfg.milp.clone());
-    let heuristic = HeuristicPartitioner::default();
-    let m_curve = sweep(&milp, models, &cfg.sweep)?;
-    let h_curve = sweep(&heuristic, models, &cfg.sweep)?;
+    let m_curve = session.pareto_frontier_with(Some("milp"))?;
+    let h_curve = session.pareto_frontier_with(Some("heuristic"))?;
 
     let mut plot = Plot::new(
         "Latency vs Cost trade-off (model predictions)",

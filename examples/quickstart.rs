@@ -1,22 +1,22 @@
 //! Quickstart: price one option through the full AOT stack, then partition a
-//! small workload across a heterogeneous cluster at two budgets.
+//! small workload across a heterogeneous cluster at two budgets — all
+//! through the `api::TradeoffSession` front door.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use cloudshapes::config::ExperimentConfig;
-use cloudshapes::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
+use cloudshapes::api::{CloudshapesError, SessionBuilder};
 use cloudshapes::pricing::{blackscholes, combine};
-use cloudshapes::report::Experiment;
 use cloudshapes::runtime::EngineHandle;
 use cloudshapes::workload::option::{OptionTask, Payoff};
 
-fn main() -> Result<(), String> {
+fn main() -> Result<(), CloudshapesError> {
     // --- 1. Price a European call on the PJRT CPU client (L1+L2 artifacts).
     println!("== pricing through the AOT Pallas kernel (PJRT CPU) ==");
-    let engine = EngineHandle::spawn(std::path::Path::new("artifacts"))
-        .map_err(|e| format!("{e:#} — run `make artifacts` first"))?;
+    let engine = EngineHandle::spawn(std::path::Path::new("artifacts")).map_err(|e| {
+        CloudshapesError::platform(format!("{e:#} — run `make artifacts` first"))
+    })?;
     let task = OptionTask {
         id: 1,
         payoff: Payoff::European,
@@ -30,7 +30,9 @@ fn main() -> Result<(), String> {
         target_accuracy: 0.01,
         n_sims: 1 << 18,
     };
-    let stats = engine.price(&task, task.n_sims, 42).map_err(|e| e.to_string())?;
+    let stats = engine
+        .price(&task, task.n_sims, 42)
+        .map_err(|e| CloudshapesError::runtime(e.to_string()))?;
     let est = combine(&stats, task.discount());
     let bs = blackscholes::call(task.spot, task.strike, task.rate, task.sigma, task.maturity);
     println!("  monte carlo: {:.4} ± {:.4}  ({} paths)", est.price, est.std_error, est.n);
@@ -38,26 +40,21 @@ fn main() -> Result<(), String> {
     assert!((est.price - bs).abs() < 4.0 * est.std_error + 0.05);
 
     // --- 2. Partition a workload across a simulated heterogeneous cluster.
+    //     One session = benchmark once, partition at any budget afterwards.
     println!("\n== partitioning 8 tasks across FPGA+GPU+CPU ==");
-    let e = Experiment::build(ExperimentConfig::quick())?;
-    let models = e.models();
-    let milp = MilpPartitioner::default();
-    let heuristic = HeuristicPartitioner::default();
+    let session = SessionBuilder::quick().build()?;
     for (label, budget) in [("unconstrained", None), ("tight budget", Some(0.8))] {
         println!("  -- {label} --");
-        for p in [&milp as &dyn Partitioner, &heuristic as &dyn Partitioner] {
-            match p.partition(models, budget) {
-                Ok(alloc) => {
-                    let (lat, cost) = models.evaluate(&alloc);
-                    println!(
-                        "  {:>9}: makespan {:>8.1}s  cost ${:<6.3} platforms {}",
-                        p.name(),
-                        lat,
-                        cost,
-                        alloc.used_platforms().len()
-                    );
-                }
-                Err(err) => println!("  {:>9}: infeasible ({err})", p.name()),
+        for name in ["milp", "heuristic"] {
+            match session.partition_with(Some(name), budget) {
+                Ok(p) => println!(
+                    "  {:>9}: makespan {:>8.1}s  cost ${:<6.3} platforms {}",
+                    p.partitioner,
+                    p.predicted_latency_s,
+                    p.predicted_cost,
+                    p.alloc.used_platforms().len()
+                ),
+                Err(err) => println!("  {name:>9}: infeasible ({err})"),
             }
         }
     }

@@ -1,0 +1,130 @@
+//! The crate-wide typed error: every fallible public API returns
+//! [`CloudshapesError`] (via the [`Result`] alias) instead of bare strings,
+//! so callers can dispatch on *what* failed — and the serve protocol can map
+//! failures to structured wire payloads — without parsing messages.
+
+use std::fmt;
+
+use crate::util::json::JsonError;
+use crate::util::toml::TomlError;
+
+/// What went wrong, with human-readable context.
+///
+/// Variants mirror the system's layers:
+/// - [`Config`](CloudshapesError::Config) — experiment configuration, CLI
+///   arguments, session-builder misuse (missing cluster/workload, unknown
+///   partitioner name);
+/// - [`Workload`](CloudshapesError::Workload) — workload construction or
+///   validation (empty workloads, duplicate task ids, implausible options);
+/// - [`Solver`](CloudshapesError::Solver) — partitioner failures (infeasible
+///   budgets, invalid allocations, LP breakdowns);
+/// - [`Platform`](CloudshapesError::Platform) — cluster construction or a
+///   platform backend (e.g. the native PJRT engine failing to start);
+/// - [`Runtime`](CloudshapesError::Runtime) — execution of an allocation on
+///   a cluster;
+/// - [`Protocol`](CloudshapesError::Protocol) — the versioned serve wire
+///   protocol (malformed JSON, unsupported versions, bad requests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CloudshapesError {
+    Config(String),
+    Workload(String),
+    Solver(String),
+    Platform(String),
+    Runtime(String),
+    Protocol(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, CloudshapesError>;
+
+impl CloudshapesError {
+    pub fn config(msg: impl Into<String>) -> CloudshapesError {
+        CloudshapesError::Config(msg.into())
+    }
+
+    pub fn workload(msg: impl Into<String>) -> CloudshapesError {
+        CloudshapesError::Workload(msg.into())
+    }
+
+    pub fn solver(msg: impl Into<String>) -> CloudshapesError {
+        CloudshapesError::Solver(msg.into())
+    }
+
+    pub fn platform(msg: impl Into<String>) -> CloudshapesError {
+        CloudshapesError::Platform(msg.into())
+    }
+
+    pub fn runtime(msg: impl Into<String>) -> CloudshapesError {
+        CloudshapesError::Runtime(msg.into())
+    }
+
+    pub fn protocol(msg: impl Into<String>) -> CloudshapesError {
+        CloudshapesError::Protocol(msg.into())
+    }
+
+    /// Stable lowercase kind tag — the `error.kind` field of serve error
+    /// payloads; also useful for metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CloudshapesError::Config(_) => "config",
+            CloudshapesError::Workload(_) => "workload",
+            CloudshapesError::Solver(_) => "solver",
+            CloudshapesError::Platform(_) => "platform",
+            CloudshapesError::Runtime(_) => "runtime",
+            CloudshapesError::Protocol(_) => "protocol",
+        }
+    }
+
+    /// The context message without the kind prefix.
+    pub fn message(&self) -> &str {
+        match self {
+            CloudshapesError::Config(m)
+            | CloudshapesError::Workload(m)
+            | CloudshapesError::Solver(m)
+            | CloudshapesError::Platform(m)
+            | CloudshapesError::Runtime(m)
+            | CloudshapesError::Protocol(m) => m,
+        }
+    }
+}
+
+impl fmt::Display for CloudshapesError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} error: {}", self.kind(), self.message())
+    }
+}
+
+impl std::error::Error for CloudshapesError {}
+
+impl From<TomlError> for CloudshapesError {
+    fn from(e: TomlError) -> Self {
+        CloudshapesError::Config(e.to_string())
+    }
+}
+
+impl From<JsonError> for CloudshapesError {
+    fn from(e: JsonError) -> Self {
+        CloudshapesError::Protocol(format!("malformed json: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_display() {
+        let e = CloudshapesError::solver("budget infeasible");
+        assert_eq!(e.kind(), "solver");
+        assert_eq!(e.message(), "budget infeasible");
+        assert_eq!(e.to_string(), "solver error: budget infeasible");
+    }
+
+    #[test]
+    fn conversions() {
+        let te = TomlError { msg: "bad".into(), line: 3 };
+        assert_eq!(CloudshapesError::from(te).kind(), "config");
+        let je = crate::util::json::Json::parse("{").unwrap_err();
+        assert_eq!(CloudshapesError::from(je).kind(), "protocol");
+    }
+}

@@ -1,0 +1,23 @@
+//! The public API facade: everything a consumer of the trade-off engine
+//! needs, in one place.
+//!
+//! - [`CloudshapesError`] / [`Result`] — the crate-wide typed error every
+//!   fallible API returns;
+//! - [`SessionBuilder`] → [`TradeoffSession`] — the builder-style front door
+//!   that owns benchmarking, model fitting, partitioning and execution;
+//! - [`PartitionerRegistry`] — pluggable name → strategy factories;
+//! - [`protocol`] — the versioned (`{"v":1,...}`) serve wire protocol.
+//!
+//! The CLI (`cloudshapes <cmd>`), the TCP coordinator (`cloudshapes serve`)
+//! and every example route through this module; see `rust/README.md` for a
+//! quickstart.
+
+pub mod error;
+pub mod protocol;
+pub mod registry;
+pub mod session;
+
+pub use error::{CloudshapesError, Result};
+pub use protocol::PROTOCOL_VERSION;
+pub use registry::{PartitionerFactory, PartitionerRegistry};
+pub use session::{Evaluation, PartitionSummary, SessionBuilder, TradeoffSession};

@@ -1,0 +1,201 @@
+//! The versioned serve wire protocol (v1).
+//!
+//! Requests are newline-delimited JSON objects that MUST carry the protocol
+//! version:
+//!
+//! ```text
+//! {"v":1,"op":"ping"}
+//! {"v":1,"op":"specs"}
+//! {"v":1,"op":"partition","budget":2.5,"partitioner":"milp"}
+//! {"v":1,"op":"partition","budget":null}            # null = unconstrained
+//! {"v":1,"op":"evaluate","budget":2.5}              # partition + execute
+//! {"v":1,"op":"pareto","partitioner":"heuristic"}   # trade-off curve
+//! {"v":1,"op":"shutdown"}
+//! ```
+//!
+//! Every response is one JSON object per line, `{"v":1,"ok":true,...}` on
+//! success or a structured error payload on failure:
+//!
+//! ```text
+//! {"v":1,"ok":false,"error":{"kind":"protocol","message":"unknown op 'frobnicate'"}}
+//! ```
+//!
+//! `error.kind` is [`CloudshapesError::kind`] — clients dispatch on it
+//! instead of parsing messages. `partition`/`evaluate` require the `budget`
+//! key (JSON `null` for unconstrained) so a forgotten budget is a typed
+//! error, not a silent unconstrained solve.
+
+use crate::util::json::{obj, Json};
+
+use super::error::{CloudshapesError, Result};
+
+/// The protocol version this build speaks.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// A parsed v1 request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    /// Platform spec listing for the served cluster.
+    Specs,
+    /// Partition the workload; predictions only.
+    Partition { partitioner: Option<String>, budget: Option<f64> },
+    /// Partition AND execute on the cluster.
+    Evaluate { partitioner: Option<String>, budget: Option<f64> },
+    /// Generate the ε-constraint trade-off curve.
+    Pareto { partitioner: Option<String> },
+    /// Stop the server (the in-flight response is still delivered).
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line. All failures are
+    /// [`CloudshapesError::Protocol`] with context.
+    pub fn parse(line: &str) -> Result<Request> {
+        let req = Json::parse(line)?;
+        if req.as_obj().is_none() {
+            return Err(CloudshapesError::protocol("request must be a JSON object"));
+        }
+        let v = match req.get("v") {
+            Some(v) => v.as_u64().ok_or_else(|| {
+                CloudshapesError::protocol("'v' must be a non-negative integer")
+            })?,
+            None => {
+                return Err(CloudshapesError::protocol(format!(
+                    "missing protocol version: send {{\"v\":{PROTOCOL_VERSION},\"op\":...}}"
+                )))
+            }
+        };
+        if v != PROTOCOL_VERSION {
+            return Err(CloudshapesError::protocol(format!(
+                "unsupported protocol version {v} (this server speaks v{PROTOCOL_VERSION})"
+            )));
+        }
+        let op = req
+            .get("op")
+            .ok_or_else(|| CloudshapesError::protocol("missing 'op'"))?
+            .as_str()
+            .ok_or_else(|| CloudshapesError::protocol("'op' must be a string"))?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "specs" => Ok(Request::Specs),
+            "partition" => {
+                let (partitioner, budget) = partition_fields(&req, op)?;
+                Ok(Request::Partition { partitioner, budget })
+            }
+            "evaluate" => {
+                let (partitioner, budget) = partition_fields(&req, op)?;
+                Ok(Request::Evaluate { partitioner, budget })
+            }
+            "pareto" => Ok(Request::Pareto { partitioner: partitioner_field(&req)? }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(CloudshapesError::protocol(format!(
+                "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, shutdown)"
+            ))),
+        }
+    }
+}
+
+fn partitioner_field(req: &Json) -> Result<Option<String>> {
+    match req.get("partitioner") {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| CloudshapesError::protocol("'partitioner' must be a string")),
+    }
+}
+
+fn partition_fields(req: &Json, op: &str) -> Result<(Option<String>, Option<f64>)> {
+    let partitioner = partitioner_field(req)?;
+    let budget = match req.get("budget") {
+        None => {
+            return Err(CloudshapesError::protocol(format!(
+                "op '{op}' requires 'budget' (a number, or null for unconstrained)"
+            )))
+        }
+        Some(Json::Null) => None,
+        Some(v) => Some(v.as_f64().ok_or_else(|| {
+            CloudshapesError::protocol("'budget' must be a number or null")
+        })?),
+    };
+    Ok((partitioner, budget))
+}
+
+/// Wrap success fields into the `{"v":1,"ok":true,...}` envelope.
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("v", Json::Num(PROTOCOL_VERSION as f64)), ("ok", Json::Bool(true))];
+    all.append(&mut fields);
+    obj(all)
+}
+
+/// Map an error to the structured `{"v":1,"ok":false,"error":{...}}`
+/// payload.
+pub fn error_response(err: &CloudshapesError) -> Json {
+    obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            obj(vec![
+                ("kind", err.kind().into()),
+                ("message", err.message().into()),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_ops() {
+        assert_eq!(Request::parse(r#"{"v":1,"op":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(Request::parse(r#"{"v":1,"op":"specs"}"#).unwrap(), Request::Specs);
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"partition","budget":2.5,"partitioner":"milp"}"#)
+                .unwrap(),
+            Request::Partition { partitioner: Some("milp".into()), budget: Some(2.5) }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"evaluate","budget":null}"#).unwrap(),
+            Request::Evaluate { partitioner: None, budget: None }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"pareto"}"#).unwrap(),
+            Request::Pareto { partitioner: None }
+        );
+        assert_eq!(Request::parse(r#"{"v":1,"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn protocol_errors_are_typed() {
+        for bad in [
+            "not json",
+            r#"{"op":"ping"}"#,                       // missing v
+            r#"{"v":2,"op":"ping"}"#,                 // wrong version
+            r#"{"v":1}"#,                             // missing op
+            r#"{"v":1,"op":"frobnicate"}"#,           // unknown op
+            r#"{"v":1,"op":"partition"}"#,            // missing budget
+            r#"{"v":1,"op":"partition","budget":"x"}"#, // bad budget type
+            r#"{"v":1,"op":"evaluate","budget":1,"partitioner":7}"#, // bad name type
+            "[1,2]",                                  // not an object
+        ] {
+            let e = Request::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "protocol", "{bad} -> {e}");
+        }
+    }
+
+    #[test]
+    fn envelopes_carry_version() {
+        let ok = ok_response(vec![("pong", true.into())]);
+        assert_eq!(ok.get("v").unwrap().as_u64(), Some(1));
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
+        let err = error_response(&CloudshapesError::solver("infeasible"));
+        assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+        let payload = err.get("error").unwrap();
+        assert_eq!(payload.get("kind").unwrap().as_str(), Some("solver"));
+        assert_eq!(payload.get("message").unwrap().as_str(), Some("infeasible"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Pluggable partitioner registry: name → factory.
+//!
+//! Every partitioning strategy — the paper's MILP and heuristic, the Braun
+//! et al. whole-task baselines, and any user-supplied strategy — registers
+//! under a name; the CLI, the serve protocol and [`TradeoffSession`] resolve
+//! strategies exclusively through the registry, so adding a strategy never
+//! touches the coordinator.
+//!
+//! [`TradeoffSession`]: super::session::TradeoffSession
+
+use std::collections::BTreeMap;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::partitioner::baselines::{Classic, ClassicPartitioner};
+use crate::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
+
+use super::error::{CloudshapesError, Result};
+
+/// Builds a partitioner from the experiment configuration (strategies read
+/// their knobs — e.g. [`MilpConfig`](crate::coordinator::MilpConfig) — from
+/// it).
+pub type PartitionerFactory = Box<dyn Fn(&ExperimentConfig) -> Box<dyn Partitioner> + Send + Sync>;
+
+/// Name → factory map. `BTreeMap` keeps `names()` deterministic.
+pub struct PartitionerRegistry {
+    factories: BTreeMap<String, PartitionerFactory>,
+}
+
+impl PartitionerRegistry {
+    /// A registry with no strategies (for fully custom setups).
+    pub fn empty() -> PartitionerRegistry {
+        PartitionerRegistry { factories: BTreeMap::new() }
+    }
+
+    /// A registry with every built-in strategy: `milp`, `heuristic`, and the
+    /// classic whole-task mappers (`olb`, `met`, `mct`, `min-min`,
+    /// `max-min`, `sufferage`).
+    pub fn with_builtins() -> PartitionerRegistry {
+        let mut r = PartitionerRegistry::empty();
+        r.register("milp", |cfg| Box::new(MilpPartitioner::new(cfg.milp.clone())));
+        r.register("heuristic", |_| Box::new(HeuristicPartitioner::default()));
+        for c in Classic::all() {
+            r.register(c.name(), move |_| Box::new(ClassicPartitioner(c)));
+        }
+        r
+    }
+
+    /// Register (or replace) a strategy under `name`.
+    pub fn register<F>(&mut self, name: &str, factory: F)
+    where
+        F: Fn(&ExperimentConfig) -> Box<dyn Partitioner> + Send + Sync + 'static,
+    {
+        self.factories.insert(name.to_string(), Box::new(factory));
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.factories.contains_key(name)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.factories.keys().map(String::as_str).collect()
+    }
+
+    /// Fail with the canonical unknown-strategy error unless `name` is
+    /// registered (shared by [`create`](Self::create) and the session
+    /// builder so the wording never diverges).
+    pub fn ensure(&self, name: &str) -> Result<()> {
+        if self.contains(name) {
+            Ok(())
+        } else {
+            Err(CloudshapesError::config(format!(
+                "unknown partitioner '{name}' (registered: {})",
+                self.names().join(", ")
+            )))
+        }
+    }
+
+    /// Instantiate the strategy registered under `name`.
+    pub fn create(&self, name: &str, cfg: &ExperimentConfig) -> Result<Box<dyn Partitioner>> {
+        self.ensure(name)?;
+        Ok(self.factories[name](cfg))
+    }
+}
+
+impl Default for PartitionerRegistry {
+    fn default() -> Self {
+        PartitionerRegistry::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_registered() {
+        let r = PartitionerRegistry::with_builtins();
+        for name in ["milp", "heuristic", "olb", "met", "mct", "min-min", "max-min", "sufferage"]
+        {
+            assert!(r.contains(name), "{name} missing");
+        }
+        assert_eq!(r.names().len(), 8);
+    }
+
+    #[test]
+    fn create_resolves_and_errors() {
+        let r = PartitionerRegistry::with_builtins();
+        let cfg = ExperimentConfig::quick();
+        let p = r.create("heuristic", &cfg).unwrap();
+        assert_eq!(p.name(), "heuristic");
+        let e = r.create("simulated-annealing", &cfg).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("simulated-annealing"));
+        assert!(e.message().contains("milp"), "lists available: {e}");
+    }
+
+    #[test]
+    fn custom_strategies_plug_in() {
+        let mut r = PartitionerRegistry::empty();
+        r.register("cheapest", |_| {
+            struct Cheapest;
+            impl Partitioner for Cheapest {
+                fn name(&self) -> &str {
+                    "cheapest"
+                }
+                fn partition(
+                    &self,
+                    models: &crate::coordinator::ModelSet,
+                    _budget: Option<f64>,
+                ) -> Result<crate::coordinator::Allocation> {
+                    Ok(crate::coordinator::partitioner::lower_cost_bound(models).1)
+                }
+            }
+            Box::new(Cheapest)
+        });
+        let cfg = ExperimentConfig::quick();
+        assert_eq!(r.create("cheapest", &cfg).unwrap().name(), "cheapest");
+        assert_eq!(r.names(), vec!["cheapest"]);
+    }
+}

@@ -1,0 +1,348 @@
+//! [`TradeoffSession`]: the one front door to the trade-off engine.
+//!
+//! A session owns the whole pipeline the paper describes — benchmark the
+//! cluster (§III.A), fit latency/cost models, partition under budgets
+//! (§III.B-C), execute allocations — behind a builder:
+//!
+//! ```no_run
+//! use cloudshapes::api::SessionBuilder;
+//! use cloudshapes::config::ExperimentConfig;
+//!
+//! let cfg = ExperimentConfig::quick();
+//! let session = SessionBuilder::new()
+//!     .cluster(cfg.cluster.clone())
+//!     .workload(cfg.workload.clone())
+//!     .partitioner("milp")
+//!     .budget_sweep(7)
+//!     .build()?;
+//! let frontier = session.pareto_frontier()?;
+//! let run = session.evaluate(Some(2.5))?;
+//! println!(
+//!     "measured {:.1}s for ${:.3}",
+//!     run.execution.makespan_secs, run.execution.cost
+//! );
+//! # Ok::<(), cloudshapes::api::CloudshapesError>(())
+//! ```
+//!
+//! The CLI, the serve protocol, the examples and the benches all go through
+//! this type; nothing else in the crate wires clusters to partitioners by
+//! hand.
+
+use crate::config::{ClusterConfig, ExperimentConfig};
+use crate::coordinator::executor::{execute, ExecutionReport, ExecutorConfig};
+use crate::coordinator::partitioner::MilpConfig;
+use crate::coordinator::{sweep, Allocation, ModelSet, Partitioner, SweepConfig, TradeoffCurve};
+use crate::report::Experiment;
+use crate::workload::{GeneratorConfig, Workload};
+
+use super::error::{CloudshapesError, Result};
+use super::registry::PartitionerRegistry;
+
+/// A partitioning decision plus its model predictions.
+#[derive(Debug, Clone)]
+pub struct PartitionSummary {
+    /// Strategy that produced the allocation.
+    pub partitioner: String,
+    /// The budget C_k it was solved under (`None` = unconstrained).
+    pub budget: Option<f64>,
+    pub alloc: Allocation,
+    /// Model-predicted makespan, seconds.
+    pub predicted_latency_s: f64,
+    /// Model-predicted billed cost, $.
+    pub predicted_cost: f64,
+}
+
+/// A partition that was also executed on the cluster.
+#[derive(Debug)]
+pub struct Evaluation {
+    pub partition: PartitionSummary,
+    /// What actually happened when the allocation ran.
+    pub execution: ExecutionReport,
+}
+
+/// Builder for [`TradeoffSession`]. `cluster` and `workload` are mandatory;
+/// everything else has paper-scale defaults.
+pub struct SessionBuilder {
+    base: ExperimentConfig,
+    cluster: Option<ClusterConfig>,
+    workload: Option<GeneratorConfig>,
+    partitioner: String,
+    sweep: Option<SweepConfig>,
+    registry: PartitionerRegistry,
+}
+
+impl SessionBuilder {
+    /// An empty builder: cluster and workload must be supplied before
+    /// [`build`](SessionBuilder::build).
+    pub fn new() -> SessionBuilder {
+        SessionBuilder {
+            base: ExperimentConfig::default(),
+            cluster: None,
+            workload: None,
+            partitioner: "milp".to_string(),
+            sweep: None,
+            registry: PartitionerRegistry::with_builtins(),
+        }
+    }
+
+    /// A builder pre-filled from a complete [`ExperimentConfig`] (TOML file
+    /// or preset) — the path the CLI takes.
+    pub fn from_config(cfg: ExperimentConfig) -> SessionBuilder {
+        SessionBuilder {
+            cluster: Some(cfg.cluster.clone()),
+            workload: Some(cfg.workload.clone()),
+            sweep: Some(cfg.sweep.clone()),
+            base: cfg,
+            partitioner: "milp".to_string(),
+            registry: PartitionerRegistry::with_builtins(),
+        }
+    }
+
+    /// The quick preset: 3 platforms, 8 small tasks, coarse sweep.
+    pub fn quick() -> SessionBuilder {
+        SessionBuilder::from_config(ExperimentConfig::quick())
+    }
+
+    /// Set the cluster to benchmark and execute on.
+    pub fn cluster(mut self, cluster: ClusterConfig) -> SessionBuilder {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    /// Set the workload to partition.
+    pub fn workload(mut self, workload: GeneratorConfig) -> SessionBuilder {
+        self.workload = Some(workload);
+        self
+    }
+
+    /// Pick the default partitioning strategy by registered name.
+    pub fn partitioner(mut self, name: &str) -> SessionBuilder {
+        self.partitioner = name.to_string();
+        self
+    }
+
+    /// Number of budget levels the ε-constraint sweep evaluates.
+    pub fn budget_sweep(mut self, levels: usize) -> SessionBuilder {
+        self.sweep = Some(SweepConfig { levels });
+        self
+    }
+
+    /// Override the MILP search budgets.
+    pub fn milp(mut self, cfg: MilpConfig) -> SessionBuilder {
+        self.base.milp = cfg;
+        self
+    }
+
+    /// Override execution controls (seed, worker threads).
+    pub fn executor(mut self, cfg: ExecutorConfig) -> SessionBuilder {
+        self.base.executor = cfg;
+        self
+    }
+
+    /// Replace the whole strategy registry.
+    pub fn registry(mut self, registry: PartitionerRegistry) -> SessionBuilder {
+        self.registry = registry;
+        self
+    }
+
+    /// Register one extra strategy on top of the current registry.
+    pub fn register<F>(mut self, name: &str, factory: F) -> SessionBuilder
+    where
+        F: Fn(&ExperimentConfig) -> Box<dyn Partitioner> + Send + Sync + 'static,
+    {
+        self.registry.register(name, factory);
+        self
+    }
+
+    /// Materialise the session: validates the builder, then benchmarks the
+    /// cluster and fits models (the expensive step).
+    pub fn build(self) -> Result<TradeoffSession> {
+        let cluster = self.cluster.ok_or_else(|| {
+            CloudshapesError::config(
+                "session has no cluster: call SessionBuilder::cluster(...) \
+                 or SessionBuilder::from_config(...)",
+            )
+        })?;
+        let workload = self.workload.ok_or_else(|| {
+            CloudshapesError::config(
+                "session has no workload: call SessionBuilder::workload(...) \
+                 or SessionBuilder::from_config(...)",
+            )
+        })?;
+        self.registry.ensure(&self.partitioner)?;
+        let sweep = self.sweep.unwrap_or_else(|| self.base.sweep.clone());
+        let config = ExperimentConfig { cluster, workload, sweep, ..self.base };
+        let experiment = Experiment::build(config)?;
+        Ok(TradeoffSession {
+            experiment,
+            registry: self.registry,
+            default_partitioner: self.partitioner,
+        })
+    }
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder::new()
+    }
+}
+
+/// A benchmarked, model-fitted trade-off engine over one cluster + workload.
+///
+/// Construction (via [`SessionBuilder`]) runs the benchmarking procedure
+/// once; afterwards partitioning, sweeping and executing are all cheap to
+/// repeat at different budgets — the intended long-running-service shape.
+pub struct TradeoffSession {
+    experiment: Experiment,
+    registry: PartitionerRegistry,
+    default_partitioner: String,
+}
+
+impl TradeoffSession {
+    /// The underlying experiment (cluster, workload, benchmark report,
+    /// fitted + nominal models) for report generators.
+    pub fn experiment(&self) -> &Experiment {
+        &self.experiment
+    }
+
+    /// The benchmark-fitted models the partitioners consume.
+    pub fn models(&self) -> &ModelSet {
+        self.experiment.models()
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.experiment.workload
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.experiment.config
+    }
+
+    /// Name of the session's default strategy.
+    pub fn default_partitioner(&self) -> &str {
+        &self.default_partitioner
+    }
+
+    /// All registered strategy names.
+    pub fn partitioner_names(&self) -> Vec<&str> {
+        self.registry.names()
+    }
+
+    /// Instantiate a strategy: `None` = the session default.
+    pub fn make_partitioner(&self, name: Option<&str>) -> Result<Box<dyn Partitioner>> {
+        self.registry.create(
+            name.unwrap_or(&self.default_partitioner),
+            &self.experiment.config,
+        )
+    }
+
+    /// Partition the workload at `budget` with the default strategy.
+    pub fn partition(&self, budget: Option<f64>) -> Result<PartitionSummary> {
+        self.partition_with(None, budget)
+    }
+
+    /// Partition with a named strategy (`None` = session default).
+    pub fn partition_with(
+        &self,
+        name: Option<&str>,
+        budget: Option<f64>,
+    ) -> Result<PartitionSummary> {
+        let part = self.make_partitioner(name)?;
+        let alloc = part.partition(self.models(), budget)?;
+        let (predicted_latency_s, predicted_cost) = self.models().evaluate(&alloc);
+        Ok(PartitionSummary {
+            partitioner: part.name().to_string(),
+            budget,
+            alloc,
+            predicted_latency_s,
+            predicted_cost,
+        })
+    }
+
+    /// Generate the ε-constraint latency-cost trade-off curve with the
+    /// default strategy.
+    pub fn pareto_frontier(&self) -> Result<TradeoffCurve> {
+        self.pareto_frontier_with(None)
+    }
+
+    /// Trade-off curve for a named strategy (`None` = session default).
+    pub fn pareto_frontier_with(&self, name: Option<&str>) -> Result<TradeoffCurve> {
+        let part = self.make_partitioner(name)?;
+        sweep(part.as_ref(), self.models(), &self.experiment.config.sweep)
+    }
+
+    /// Partition at `budget` AND execute the allocation on the cluster.
+    pub fn evaluate(&self, budget: Option<f64>) -> Result<Evaluation> {
+        self.evaluate_with(None, budget)
+    }
+
+    /// As [`evaluate`](TradeoffSession::evaluate) with a named strategy.
+    pub fn evaluate_with(&self, name: Option<&str>, budget: Option<f64>) -> Result<Evaluation> {
+        let partition = self.partition_with(name, budget)?;
+        let execution = execute(
+            &self.experiment.cluster,
+            &self.experiment.workload,
+            &partition.alloc,
+            &self.experiment.config.executor,
+        )?;
+        Ok(Evaluation { partition, execution })
+    }
+
+    /// Execute an externally-produced allocation (report generators use
+    /// this to measure sweep points).
+    pub fn execute_allocation(&self, alloc: &Allocation) -> Result<ExecutionReport> {
+        execute(
+            &self.experiment.cluster,
+            &self.experiment.workload,
+            alloc,
+            &self.experiment.config.executor,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_cluster_is_a_config_error() {
+        let e = SessionBuilder::new()
+            .workload(GeneratorConfig::small(4, 0.05, 1))
+            .build()
+            .unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("cluster"), "{e}");
+    }
+
+    #[test]
+    fn missing_workload_is_a_config_error() {
+        let e = SessionBuilder::new()
+            .cluster(ExperimentConfig::quick().cluster)
+            .build()
+            .unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("workload"), "{e}");
+    }
+
+    #[test]
+    fn unregistered_partitioner_is_a_config_error() {
+        let e = SessionBuilder::quick().partitioner("quantum-annealer").build().unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("quantum-annealer"), "{e}");
+    }
+
+    #[test]
+    fn quick_session_partitions_and_sweeps() {
+        let session = SessionBuilder::quick()
+            .partitioner("heuristic")
+            .budget_sweep(4)
+            .build()
+            .unwrap();
+        let p = session.partition(None).unwrap();
+        assert_eq!(p.partitioner, "heuristic");
+        assert!(p.predicted_latency_s > 0.0 && p.predicted_cost > 0.0);
+        assert!(p.alloc.validate().is_ok());
+        let curve = session.pareto_frontier().unwrap();
+        assert!(curve.points.len() >= 2);
+    }
+}

@@ -6,6 +6,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::api::error::{CloudshapesError, Result};
+
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -48,15 +50,23 @@ impl Args {
         matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
     }
 
-    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, String> {
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>> {
         self.flag(name)
-            .map(|v| v.parse::<f64>().map_err(|_| format!("--{name} expects a number, got '{v}'")))
+            .map(|v| {
+                v.parse::<f64>().map_err(|_| {
+                    CloudshapesError::config(format!("--{name} expects a number, got '{v}'"))
+                })
+            })
             .transpose()
     }
 
-    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, String> {
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>> {
         self.flag(name)
-            .map(|v| v.parse::<usize>().map_err(|_| format!("--{name} expects an integer, got '{v}'")))
+            .map(|v| {
+                v.parse::<usize>().map_err(|_| {
+                    CloudshapesError::config(format!("--{name} expects an integer, got '{v}'"))
+                })
+            })
             .transpose()
     }
 }

@@ -1,15 +1,17 @@
 //! Command-line interface: the launcher every deliverable runs through.
+//!
+//! Every subcommand builds an [`api::TradeoffSession`](crate::api) from the
+//! experiment config and works through it — the CLI owns flag parsing and
+//! printing, nothing else.
 
 pub mod args;
 pub mod serve;
 
 use std::path::Path;
 
+use crate::api::error::{CloudshapesError, Result};
+use crate::api::{SessionBuilder, TradeoffSession};
 use crate::config::ExperimentConfig;
-use crate::coordinator::executor::execute;
-use crate::coordinator::partitioner::baselines::{Classic, ClassicPartitioner};
-use crate::coordinator::partitioner::Partitioner;
-use crate::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner};
 use crate::report::{self, Experiment};
 use crate::util::table::fnum;
 
@@ -37,7 +39,7 @@ COMMANDS
   table <1|2|3|4>          Regenerate a paper table
   fig <1|2|3>              Regenerate a paper figure (ASCII + optional CSV)
       --csv PATH
-  serve                    JSON-over-TCP coordinator (see --port)
+  serve                    JSON-over-TCP coordinator, protocol v1 (see --port)
       --port PORT          (default 7741)
 
 COMMON OPTIONS
@@ -57,7 +59,7 @@ pub fn main(argv: &[String]) -> i32 {
     }
 }
 
-fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = if args.flag_bool("quick") {
         ExperimentConfig::quick()
     } else if let Some(path) = args.flag("config") {
@@ -74,19 +76,15 @@ fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
     Ok(cfg)
 }
 
-fn make_partitioner(name: &str, cfg: &ExperimentConfig) -> Result<Box<dyn Partitioner>, String> {
-    match name {
-        "milp" => Ok(Box::new(MilpPartitioner::new(cfg.milp.clone()))),
-        "heuristic" => Ok(Box::new(HeuristicPartitioner::default())),
-        other => Classic::all()
-            .into_iter()
-            .find(|c| c.name() == other)
-            .map(|c| Box::new(ClassicPartitioner(c)) as Box<dyn Partitioner>)
-            .ok_or_else(|| format!("unknown partitioner '{other}'")),
-    }
+/// Build the session every subcommand works through. The `--partitioner`
+/// flag picks the default strategy; unknown names fail here, before the
+/// (expensive) benchmarking step.
+fn session(args: &Args) -> Result<TradeoffSession> {
+    let name = args.flag("partitioner").unwrap_or("milp").to_string();
+    SessionBuilder::from_config(load_config(args)?).partitioner(&name).build()
 }
 
-fn run(args: &Args) -> Result<(), String> {
+fn run(args: &Args) -> Result<()> {
     let Some(cmd) = args.subcommand.as_deref() else {
         println!("{USAGE}");
         return Ok(());
@@ -103,14 +101,16 @@ fn run(args: &Args) -> Result<(), String> {
         "run" => cmd_run(args),
         "table" => cmd_table(args),
         "fig" => cmd_fig(args),
-        "serve" => serve::cmd_serve(args, load_config(args)?),
-        other => Err(format!("unknown command '{other}' (try `cloudshapes help`)")),
+        "serve" => serve::cmd_serve(args, || session(args)),
+        other => Err(CloudshapesError::config(format!(
+            "unknown command '{other}' (try `cloudshapes help`)"
+        ))),
     }
 }
 
-fn cmd_info(args: &Args) -> Result<(), String> {
-    let cfg = load_config(args)?;
-    let e = Experiment::build(cfg)?;
+fn cmd_info(args: &Args) -> Result<()> {
+    let s = session(args)?;
+    let e = s.experiment();
     println!("cluster: {} platforms", e.cluster.len());
     for (cat, n) in report::tables::category_counts(&e.cluster) {
         println!("  {:>4} x{}", cat.name(), n);
@@ -121,7 +121,8 @@ fn cmd_info(args: &Args) -> Result<(), String> {
         e.workload.total_sims(),
         e.workload.total_flops()
     );
-    let m = e.models();
+    println!("partitioners: {}", s.partitioner_names().join(", "));
+    let m = s.models();
     for i in 0..m.mu {
         println!(
             "  solo {:>16}: {:>12.1} s  ${:>8.3}",
@@ -133,10 +134,9 @@ fn cmd_info(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_bench(args: &Args) -> Result<(), String> {
-    let cfg = load_config(args)?;
-    let e = Experiment::build(cfg)?;
-    let m = e.models();
+fn cmd_bench(args: &Args) -> Result<()> {
+    let s = session(args)?;
+    let m = s.models();
     println!("fitted {} (platform, task) latency models", m.mu * m.tau);
     let mut r2_min: f64 = 1.0;
     for i in 0..m.mu {
@@ -145,46 +145,38 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         }
     }
     println!("worst fit R² = {r2_min:.6}");
-    println!("{}", report::tables::table2_for(&e).render());
+    println!("{}", report::tables::table2_for(s.experiment()).render());
     Ok(())
 }
 
-fn cmd_partition(args: &Args) -> Result<(), String> {
-    let cfg = load_config(args)?;
-    let budget = args.flag_f64("budget")?;
-    let name = args.flag("partitioner").unwrap_or("milp");
-    let e = Experiment::build(cfg.clone())?;
-    let part = make_partitioner(name, &cfg)?;
-    let alloc = part.partition(e.models(), budget)?;
-    let (lat, cost) = e.models().evaluate(&alloc);
-    println!("partitioner: {}", part.name());
-    println!("budget: {budget:?}");
-    println!("predicted makespan: {} s", fnum(lat, 1));
-    println!("predicted cost:     ${}", fnum(cost, 3));
-    println!("platforms used: {}", alloc.used_platforms().len());
-    for i in alloc.used_platforms() {
-        let share: f64 =
-            (0..e.models().tau).map(|j| alloc.get(i, j)).sum::<f64>() / e.models().tau as f64;
+fn cmd_partition(args: &Args) -> Result<()> {
+    let s = session(args)?;
+    let p = s.partition(args.flag_f64("budget")?)?;
+    let m = s.models();
+    println!("partitioner: {}", p.partitioner);
+    println!("budget: {:?}", p.budget);
+    println!("predicted makespan: {} s", fnum(p.predicted_latency_s, 1));
+    println!("predicted cost:     ${}", fnum(p.predicted_cost, 3));
+    println!("platforms used: {}", p.alloc.used_platforms().len());
+    for i in p.alloc.used_platforms() {
+        let share: f64 = (0..m.tau).map(|j| p.alloc.get(i, j)).sum::<f64>() / m.tau as f64;
         println!(
             "  {:>16}: mean share {:>5.1}%  latency {:>10.1}s  cost ${:.3}",
-            e.models().platform_names[i],
+            m.platform_names[i],
             share * 100.0,
-            e.models().platform_latency(&alloc, i),
-            e.models().platform_cost(&alloc, i),
+            m.platform_latency(&p.alloc, i),
+            m.platform_cost(&p.alloc, i),
         );
     }
     Ok(())
 }
 
-fn cmd_pareto(args: &Args) -> Result<(), String> {
-    let cfg = load_config(args)?;
-    let name = args.flag("partitioner").unwrap_or("milp");
-    let e = Experiment::build(cfg.clone())?;
-    let part = make_partitioner(name, &cfg)?;
-    let curve = sweep(part.as_ref(), e.models(), &cfg.sweep)?;
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let s = session(args)?;
+    let curve = s.pareto_frontier()?;
     println!(
         "{}: C_L = ${}, C_U = ${}",
-        part.name(),
+        curve.partitioner,
         fnum(curve.c_lower, 3),
         fnum(curve.c_upper, 3)
     );
@@ -207,91 +199,87 @@ fn cmd_pareto(args: &Args) -> Result<(), String> {
                 p.cost
             ));
         }
-        std::fs::write(path, csv).map_err(|e| e.to_string())?;
+        std::fs::write(path, csv)
+            .map_err(|e| CloudshapesError::config(format!("writing {path}: {e}")))?;
         println!("wrote {path}");
     }
     Ok(())
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
-    let cfg = load_config(args)?;
-    let budget = args.flag_f64("budget")?;
-    let name = args.flag("partitioner").unwrap_or("milp");
-    let e = Experiment::build(cfg.clone())?;
-    let part = make_partitioner(name, &cfg)?;
-    let alloc = part.partition(e.models(), budget)?;
-    let (pred_lat, pred_cost) = e.models().evaluate(&alloc);
-    let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor)?;
-    println!("partitioner: {}  budget: {budget:?}", part.name());
+fn cmd_run(args: &Args) -> Result<()> {
+    let s = session(args)?;
+    let ev = s.evaluate(args.flag_f64("budget")?)?;
+    let (p, rep) = (&ev.partition, &ev.execution);
+    println!("partitioner: {}  budget: {:?}", p.partitioner, p.budget);
     println!(
         "makespan: predicted {} s, measured {} s ({:+.1}%)",
-        fnum(pred_lat, 1),
+        fnum(p.predicted_latency_s, 1),
         fnum(rep.makespan_secs, 1),
-        (rep.makespan_secs / pred_lat - 1.0) * 100.0
+        (rep.makespan_secs / p.predicted_latency_s - 1.0) * 100.0
     );
     println!(
         "cost:     predicted ${}, measured ${} ({:+.1}%)",
-        fnum(pred_cost, 3),
+        fnum(p.predicted_cost, 3),
         fnum(rep.cost, 3),
-        (rep.cost / pred_cost - 1.0) * 100.0
+        (rep.cost / p.predicted_cost - 1.0) * 100.0
     );
     println!("failures: {}", rep.failures);
     let priced = rep.prices.iter().flatten().count();
-    println!("tasks priced: {priced}/{}", e.workload.len());
+    println!("tasks priced: {priced}/{}", s.workload().len());
     Ok(())
 }
 
-fn cmd_table(args: &Args) -> Result<(), String> {
+fn cmd_table(args: &Args) -> Result<()> {
     let which = args
         .positionals
         .first()
-        .ok_or("table needs a number: 1..4")?
+        .ok_or_else(|| CloudshapesError::config("table needs a number: 1..4"))?
         .as_str();
     match which {
         "1" => println!("{}", report::table1().render()),
         "3" => println!("{}", report::table3().render()),
         "2" => {
-            let e = Experiment::build(load_config(args)?)?;
-            println!("{}", report::tables::table2_for(&e).render());
+            let s = session(args)?;
+            println!("{}", report::tables::table2_for(s.experiment()).render());
         }
         "4" => {
-            let cfg = load_config(args)?;
-            let e = Experiment::build(cfg.clone())?;
-            println!("{}", report::table4(e.models(), &cfg.milp)?.render());
+            let s = session(args)?;
+            println!("{}", report::table4(s.models(), &s.config().milp)?.render());
         }
-        other => return Err(format!("unknown table '{other}'")),
+        other => return Err(CloudshapesError::config(format!("unknown table '{other}'"))),
     }
     Ok(())
 }
 
-fn cmd_fig(args: &Args) -> Result<(), String> {
+fn cmd_fig(args: &Args) -> Result<()> {
     let which = args
         .positionals
         .first()
-        .ok_or("fig needs a number: 1..3")?
+        .ok_or_else(|| CloudshapesError::config("fig needs a number: 1..3"))?
         .as_str();
-    let cfg = load_config(args)?;
-    let e = Experiment::build(cfg)?;
+    let s = session(args)?;
+    let e: &Experiment = s.experiment();
     let csv: Option<String> = match which {
         "1" => {
-            let (plot, _) = report::fig1(&e)?;
+            let (plot, _) = report::fig1(e)?;
             println!("{}", plot.render());
             Some(plot.to_csv())
         }
         "2" => {
-            let (plot, _) = report::fig2(&e, &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0]);
+            let (plot, _) = report::fig2(e, &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0]);
             println!("{}", plot.render());
             Some(plot.to_csv())
         }
         "3" => {
-            let (plot, points) = report::fig3(&e)?;
+            let (plot, points) = report::fig3(e)?;
             println!("{}", plot.render());
             Some(report::fig3_csv(&points))
         }
-        other => return Err(format!("unknown fig '{other}'")),
+        other => return Err(CloudshapesError::config(format!("unknown fig '{other}'"))),
     };
     if let (Some(path), Some(csv)) = (args.flag("csv"), csv) {
-        std::fs::write(path, csv).map_err(|e| e.to_string())?;
+        std::fs::write(path, csv)
+            .map_err(|e| CloudshapesError::config(format!("writing {path}: {e}")))?;
         println!("wrote {path}");
     }
     Ok(())

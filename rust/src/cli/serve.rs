@@ -1,17 +1,22 @@
-//! JSON-over-TCP coordinator service.
+//! JSON-over-TCP coordinator service speaking protocol **v1**
+//! (see [`crate::api::protocol`] for the wire format).
 //!
 //! Newline-delimited JSON requests; one JSON response per line:
 //!
 //! ```text
-//! {"op":"ping"}
-//! {"op":"specs"}
-//! {"op":"partition","budget":2.5,"partitioner":"milp"}
-//! {"op":"evaluate","budget":2.5}            # partition + execute
-//! {"op":"shutdown"}
+//! {"v":1,"op":"ping"}
+//! {"v":1,"op":"specs"}
+//! {"v":1,"op":"partition","budget":2.5,"partitioner":"milp"}
+//! {"v":1,"op":"partition","budget":null}       # null = unconstrained
+//! {"v":1,"op":"evaluate","budget":2.5}         # partition + execute
+//! {"v":1,"op":"pareto"}                        # trade-off curve
+//! {"v":1,"op":"shutdown"}
 //! ```
 //!
-//! Used by `examples/cluster_serve.rs` (client mode) to demonstrate the
-//! coordinator as a long-running service: rust owns the event loop; each
+//! Malformed requests never drop the connection: every failure maps to a
+//! structured `{"v":1,"ok":false,"error":{"kind":...,"message":...}}`
+//! payload. Used by `examples/cluster_serve.rs` (client mode) to demonstrate
+//! the coordinator as a long-running service: rust owns the event loop; each
 //! connection gets a worker thread.
 
 use std::io::{BufRead, BufReader, Write};
@@ -19,40 +24,40 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::config::ExperimentConfig;
-use crate::coordinator::executor::execute;
-use crate::coordinator::{HeuristicPartitioner, MilpPartitioner, Partitioner};
-use crate::report::Experiment;
+use crate::api::error::{CloudshapesError, Result};
+use crate::api::protocol::{error_response, ok_response, Request};
+use crate::api::TradeoffSession;
 use crate::util::json::{obj, Json};
 
 use super::args::Args;
 
 /// `cloudshapes serve --port P` entry point. Blocks until a shutdown
-/// request arrives.
-pub fn cmd_serve(args: &Args, cfg: ExperimentConfig) -> Result<(), String> {
+/// request arrives. Takes a session *factory* so bad ports and occupied
+/// addresses fail fast, before the expensive benchmarking step runs.
+pub fn cmd_serve(
+    args: &Args,
+    build_session: impl FnOnce() -> Result<TradeoffSession>,
+) -> Result<()> {
     let port = args.flag_usize("port")?.unwrap_or(7741) as u16;
-    let experiment = Arc::new(Experiment::build(cfg)?);
-    let listener =
-        TcpListener::bind(("127.0.0.1", port)).map_err(|e| format!("bind 127.0.0.1:{port}: {e}"))?;
-    println!("cloudshapes coordinator listening on 127.0.0.1:{port}");
-    serve_until_shutdown(listener, experiment)
+    let listener = TcpListener::bind(("127.0.0.1", port))
+        .map_err(|e| CloudshapesError::runtime(format!("bind 127.0.0.1:{port}: {e}")))?;
+    let session = Arc::new(build_session()?);
+    println!("cloudshapes coordinator listening on 127.0.0.1:{port} (protocol v1)");
+    serve_until_shutdown(listener, session)
 }
 
 /// Serve an already-bound listener (test/entry-point shared path).
-pub fn serve_until_shutdown(
-    listener: TcpListener,
-    experiment: Arc<Experiment>,
-) -> Result<(), String> {
+pub fn serve_until_shutdown(listener: TcpListener, session: Arc<TradeoffSession>) -> Result<()> {
     let stop = Arc::new(AtomicBool::new(false));
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
         }
         let Ok(stream) = stream else { continue };
-        let e = Arc::clone(&experiment);
+        let s = Arc::clone(&session);
         let stop_conn = Arc::clone(&stop);
         std::thread::spawn(move || {
-            let _ = handle_connection(stream, &e, &stop_conn);
+            let _ = handle_connection(stream, &s, &stop_conn);
         });
         if stop.load(Ordering::SeqCst) {
             break;
@@ -63,7 +68,7 @@ pub fn serve_until_shutdown(
 
 fn handle_connection(
     stream: TcpStream,
-    e: &Experiment,
+    session: &TradeoffSession,
     stop: &AtomicBool,
 ) -> std::io::Result<()> {
     // The accepted socket's local address IS the listener's address — used
@@ -76,7 +81,7 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let response = handle_request(&line, e, stop);
+        let response = handle_request(&line, session, stop);
         writer.write_all(response.to_string_compact().as_bytes())?;
         writer.write_all(b"\n")?;
         if stop.load(Ordering::SeqCst) {
@@ -88,20 +93,21 @@ fn handle_connection(
     Ok(())
 }
 
-/// Handle one request line; always returns a JSON object.
-pub fn handle_request(line: &str, e: &Experiment, stop: &AtomicBool) -> Json {
-    let err = |msg: String| obj(vec![("ok", false.into()), ("error", msg.into())]);
-    let req = match Json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return err(format!("bad json: {e}")),
-    };
-    let Some(op) = req.get("op").and_then(Json::as_str) else {
-        return err("missing 'op'".into());
-    };
-    match op {
-        "ping" => obj(vec![("ok", true.into()), ("pong", true.into())]),
-        "specs" => {
-            let specs: Vec<Json> = e
+/// Handle one request line; always returns a JSON object (success envelope
+/// or structured error payload).
+pub fn handle_request(line: &str, session: &TradeoffSession, stop: &AtomicBool) -> Json {
+    match Request::parse(line).and_then(|req| dispatch(req, session, stop)) {
+        Ok(response) => response,
+        Err(e) => error_response(&e),
+    }
+}
+
+fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Result<Json> {
+    match req {
+        Request::Ping => Ok(ok_response(vec![("pong", true.into())])),
+        Request::Specs => {
+            let specs: Vec<Json> = session
+                .experiment()
                 .cluster
                 .specs()
                 .iter()
@@ -115,95 +121,132 @@ pub fn handle_request(line: &str, e: &Experiment, stop: &AtomicBool) -> Json {
                     ])
                 })
                 .collect();
-            obj(vec![("ok", true.into()), ("specs", Json::Arr(specs))])
+            Ok(ok_response(vec![("specs", Json::Arr(specs))]))
         }
-        "partition" | "evaluate" => {
-            let budget = req.get("budget").and_then(Json::as_f64);
-            let pname = req.get("partitioner").and_then(Json::as_str).unwrap_or("milp");
-            let milp = MilpPartitioner::new(e.config.milp.clone());
-            let heuristic = HeuristicPartitioner::default();
-            let part: &dyn Partitioner = match pname {
-                "milp" => &milp,
-                "heuristic" => &heuristic,
-                other => return err(format!("unknown partitioner '{other}'")),
-            };
-            let alloc = match part.partition(e.models(), budget) {
-                Ok(a) => a,
-                Err(msg) => return err(msg),
-            };
-            let (lat, cost) = e.models().evaluate(&alloc);
-            let mut fields = vec![
-                ("ok", true.into()),
-                ("partitioner", pname.into()),
-                ("predicted_latency_s", lat.into()),
-                ("predicted_cost", cost.into()),
-                ("platforms_used", alloc.used_platforms().len().into()),
-            ];
-            if op == "evaluate" {
-                match execute(&e.cluster, &e.workload, &alloc, &e.config.executor) {
-                    Ok(rep) => {
-                        fields.push(("measured_latency_s", rep.makespan_secs.into()));
-                        fields.push(("measured_cost", rep.cost.into()));
-                        fields.push(("failures", rep.failures.into()));
-                    }
-                    Err(msg) => return err(msg),
-                }
-            }
-            obj(fields)
+        Request::Partition { partitioner, budget } => {
+            let p = session.partition_with(partitioner.as_deref(), budget)?;
+            Ok(ok_response(partition_fields(&p)))
         }
-        "shutdown" => {
+        Request::Evaluate { partitioner, budget } => {
+            let ev = session.evaluate_with(partitioner.as_deref(), budget)?;
+            let mut fields = partition_fields(&ev.partition);
+            fields.push(("measured_latency_s", ev.execution.makespan_secs.into()));
+            fields.push(("measured_cost", ev.execution.cost.into()));
+            fields.push(("failures", ev.execution.failures.into()));
+            Ok(ok_response(fields))
+        }
+        Request::Pareto { partitioner } => {
+            let curve = session.pareto_frontier_with(partitioner.as_deref())?;
+            let points: Vec<Json> = curve
+                .points
+                .iter()
+                .map(|p| {
+                    obj(vec![
+                        (
+                            "budget",
+                            p.budget.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        ("latency_s", p.latency.into()),
+                        ("cost", p.cost.into()),
+                    ])
+                })
+                .collect();
+            Ok(ok_response(vec![
+                ("partitioner", curve.partitioner.as_str().into()),
+                ("c_lower", curve.c_lower.into()),
+                ("c_upper", curve.c_upper.into()),
+                ("points", Json::Arr(points)),
+            ]))
+        }
+        Request::Shutdown => {
             stop.store(true, Ordering::SeqCst);
-            obj(vec![("ok", true.into()), ("shutdown", true.into())])
+            Ok(ok_response(vec![("shutdown", true.into())]))
         }
-        other => err(format!("unknown op '{other}'")),
     }
+}
+
+fn partition_fields(p: &crate::api::PartitionSummary) -> Vec<(&'static str, Json)> {
+    vec![
+        ("partitioner", p.partitioner.as_str().into()),
+        (
+            "budget",
+            p.budget.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("predicted_latency_s", p.predicted_latency_s.into()),
+        ("predicted_cost", p.predicted_cost.into()),
+        ("platforms_used", p.alloc.used_platforms().len().into()),
+    ]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ExperimentConfig;
+    use crate::api::SessionBuilder;
+    use crate::coordinator::partitioner::MilpConfig;
 
-    fn experiment() -> Experiment {
-        let mut cfg = ExperimentConfig::quick();
-        cfg.milp.time_limit_secs = 2.0;
-        Experiment::build(cfg).unwrap()
+    fn session() -> TradeoffSession {
+        SessionBuilder::quick()
+            .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn ping_and_specs() {
-        let e = experiment();
+        let s = session();
         let stop = AtomicBool::new(false);
-        let r = handle_request(r#"{"op":"ping"}"#, &e, &stop);
+        let r = handle_request(r#"{"v":1,"op":"ping"}"#, &s, &stop);
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
-        let r = handle_request(r#"{"op":"specs"}"#, &e, &stop);
+        assert_eq!(r.get("v").unwrap().as_u64(), Some(1));
+        let r = handle_request(r#"{"v":1,"op":"specs"}"#, &s, &stop);
         assert_eq!(r.get("specs").unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]
     fn partition_request_roundtrips() {
-        let e = experiment();
+        let s = session();
         let stop = AtomicBool::new(false);
-        let r = handle_request(r#"{"op":"partition","partitioner":"heuristic"}"#, &e, &stop);
+        let r = handle_request(
+            r#"{"v":1,"op":"partition","partitioner":"heuristic","budget":null}"#,
+            &s,
+            &stop,
+        );
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
         assert!(r.get("predicted_latency_s").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]
-    fn errors_are_json() {
-        let e = experiment();
+    fn errors_are_structured() {
+        let s = session();
         let stop = AtomicBool::new(false);
-        for bad in ["not json", r#"{"no_op":1}"#, r#"{"op":"explode"}"#] {
-            let r = handle_request(bad, &e, &stop);
+        for (bad, kind) in [
+            ("not json", "protocol"),
+            (r#"{"no_op":1}"#, "protocol"),
+            (r#"{"op":"ping"}"#, "protocol"),          // unversioned
+            (r#"{"v":1,"op":"explode"}"#, "protocol"), // unknown op
+            (r#"{"v":1,"op":"partition"}"#, "protocol"), // missing budget
+            (
+                // registered? no — config error from the registry
+                r#"{"v":1,"op":"partition","partitioner":"nope","budget":null}"#,
+                "config",
+            ),
+        ] {
+            let r = handle_request(bad, &s, &stop);
             assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{bad}");
+            assert_eq!(
+                r.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+                Some(kind),
+                "{bad}"
+            );
         }
     }
 
     #[test]
     fn shutdown_sets_flag() {
-        let e = experiment();
+        let s = session();
         let stop = AtomicBool::new(false);
-        handle_request(r#"{"op":"shutdown"}"#, &e, &stop);
+        let r = handle_request(r#"{"v":1,"op":"shutdown"}"#, &s, &stop);
+        assert_eq!(r.get("shutdown"), Some(&Json::Bool(true)));
         assert!(stop.load(Ordering::SeqCst));
     }
 }

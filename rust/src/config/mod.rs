@@ -4,6 +4,7 @@
 
 use std::path::Path;
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::executor::ExecutorConfig;
 use crate::coordinator::partitioner::MilpConfig;
 use crate::coordinator::{BenchmarkConfig, SweepConfig};
@@ -90,15 +91,15 @@ impl ExperimentConfig {
     }
 
     /// Load from a TOML file.
-    pub fn load(path: &Path) -> Result<ExperimentConfig, String> {
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("reading {path:?}: {e}"))?;
+            .map_err(|e| CloudshapesError::config(format!("reading {path:?}: {e}")))?;
         Self::parse(&text)
     }
 
     /// Parse from TOML text; unspecified keys keep their defaults.
-    pub fn parse(text: &str) -> Result<ExperimentConfig, String> {
-        let root = toml::parse(text).map_err(|e| e.to_string())?;
+    pub fn parse(text: &str) -> Result<ExperimentConfig> {
+        let root = toml::parse(text)?;
         let mut cfg = ExperimentConfig::default();
 
         if let Some(w) = root.get("workload") {
@@ -106,20 +107,28 @@ impl ExperimentConfig {
             set_u64(w, "seed", &mut cfg.workload.seed)?;
             set_f64(w, "accuracy", &mut cfg.workload.accuracy)?;
             if let Some(steps) = w.get("step_choices") {
-                let arr = steps
-                    .as_arr()
-                    .ok_or("workload.step_choices must be an array")?;
+                let arr = steps.as_arr().ok_or_else(|| {
+                    CloudshapesError::config("workload.step_choices must be an array")
+                })?;
                 cfg.workload.step_choices = arr
                     .iter()
-                    .map(|v| v.as_u64().map(|u| u as u32).ok_or("bad step value"))
-                    .collect::<Result<_, _>>()?;
+                    .map(|v| {
+                        v.as_u64()
+                            .map(|u| u as u32)
+                            .ok_or_else(|| CloudshapesError::config("bad step value"))
+                    })
+                    .collect::<Result<_>>()?;
             }
             if let Some(mix) = w.get("payoff_mix") {
-                let arr = mix.as_arr().ok_or("workload.payoff_mix must be an array")?;
+                let arr = mix.as_arr().ok_or_else(|| {
+                    CloudshapesError::config("workload.payoff_mix must be an array")
+                })?;
                 if arr.len() != 3 {
-                    return Err("payoff_mix needs 3 weights".into());
+                    return Err(CloudshapesError::config("payoff_mix needs 3 weights"));
                 }
-                let g = |k: usize| arr[k].as_f64().ok_or("bad mix weight");
+                let g = |k: usize| {
+                    arr[k].as_f64().ok_or_else(|| CloudshapesError::config("bad mix weight"))
+                };
                 cfg.workload.payoff_mix = (g(0)?, g(1)?, g(2)?);
             }
         }
@@ -128,7 +137,11 @@ impl ExperimentConfig {
                 cfg.cluster.kind = match kind {
                     "paper" => ClusterKind::Paper,
                     "small" => ClusterKind::Small,
-                    other => return Err(format!("unknown cluster kind '{other}'")),
+                    other => {
+                        return Err(CloudshapesError::config(format!(
+                            "unknown cluster kind '{other}'"
+                        )))
+                    }
                 };
             }
             set_u64(c, "seed", &mut cfg.cluster.seed)?;
@@ -166,30 +179,36 @@ impl ExperimentConfig {
     }
 }
 
-fn set_f64(obj: &Json, key: &str, out: &mut f64) -> Result<(), String> {
+fn set_f64(obj: &Json, key: &str, out: &mut f64) -> Result<()> {
     if let Some(v) = obj.get(key) {
-        *out = v.as_f64().ok_or_else(|| format!("{key} must be a number"))?;
+        *out = v
+            .as_f64()
+            .ok_or_else(|| CloudshapesError::config(format!("{key} must be a number")))?;
     }
     Ok(())
 }
 
-fn set_u64(obj: &Json, key: &str, out: &mut u64) -> Result<(), String> {
+fn set_u64(obj: &Json, key: &str, out: &mut u64) -> Result<()> {
     if let Some(v) = obj.get(key) {
-        *out = v.as_u64().ok_or_else(|| format!("{key} must be a non-negative integer"))?;
+        *out = v.as_u64().ok_or_else(|| {
+            CloudshapesError::config(format!("{key} must be a non-negative integer"))
+        })?;
     }
     Ok(())
 }
 
-fn set_usize(obj: &Json, key: &str, out: &mut usize) -> Result<(), String> {
+fn set_usize(obj: &Json, key: &str, out: &mut usize) -> Result<()> {
     let mut v = *out as u64;
     set_u64(obj, key, &mut v)?;
     *out = v as usize;
     Ok(())
 }
 
-fn set_bool(obj: &Json, key: &str, out: &mut bool) -> Result<(), String> {
+fn set_bool(obj: &Json, key: &str, out: &mut bool) -> Result<()> {
     if let Some(v) = obj.get(key) {
-        *out = v.as_bool().ok_or_else(|| format!("{key} must be a boolean"))?;
+        *out = v
+            .as_bool()
+            .ok_or_else(|| CloudshapesError::config(format!("{key} must be a boolean")))?;
     }
     Ok(())
 }

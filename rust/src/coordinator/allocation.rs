@@ -4,6 +4,8 @@
 //! allocated); entries are real-valued because tasks are divisible
 //! ("relaxed" allocation, §III.B).
 
+use crate::api::error::{CloudshapesError, Result};
+
 /// Column-sum tolerance for validity checks.
 pub const ALLOC_TOL: f64 = 1e-6;
 
@@ -68,11 +70,11 @@ impl Allocation {
     }
 
     /// Re-scale every column to sum to exactly 1 (fails on zero columns).
-    pub fn normalise(&mut self) -> Result<(), String> {
+    pub fn normalise(&mut self) -> Result<()> {
         for j in 0..self.tau {
             let s = self.column_sum(j);
             if s <= ALLOC_TOL {
-                return Err(format!("task {j} has no allocation"));
+                return Err(CloudshapesError::solver(format!("task {j} has no allocation")));
             }
             for i in 0..self.mu {
                 self.a[i * self.tau + j] /= s;
@@ -82,16 +84,16 @@ impl Allocation {
     }
 
     /// Validity: non-negative entries, all columns sum to 1.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<()> {
         for (idx, v) in self.a.iter().enumerate() {
             if *v < 0.0 || !v.is_finite() {
-                return Err(format!("entry {idx} invalid: {v}"));
+                return Err(CloudshapesError::solver(format!("entry {idx} invalid: {v}")));
             }
         }
         for j in 0..self.tau {
             let s = self.column_sum(j);
             if (s - 1.0).abs() > ALLOC_TOL * self.mu as f64 {
-                return Err(format!("task {j} allocation sums to {s}"));
+                return Err(CloudshapesError::solver(format!("task {j} allocation sums to {s}")));
             }
         }
         Ok(())
@@ -122,7 +124,7 @@ pub fn largest_remainder(shares: &[f64], n: u64) -> Vec<u64> {
     let assigned: u64 = out.iter().sum();
     let mut rem: Vec<(usize, f64)> =
         exact.iter().enumerate().map(|(i, e)| (i, e - e.floor())).collect();
-    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    rem.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     for k in 0..(n - assigned) as usize {
         out[rem[k % rem.len()].0] += 1;
     }

@@ -180,7 +180,10 @@ mod tests {
                 // Average several noisy observations for the "actual".
                 let mut lat = 0.0;
                 for r in 0..5 {
-                    lat += cluster.platform(i).benchmark_execute(&workload.tasks[j], n, r).latency_secs;
+                    lat += cluster
+                        .platform(i)
+                        .benchmark_execute(&workload.tasks[j], n, r)
+                        .latency_secs;
                 }
                 lat /= 5.0;
                 errs.push(m.relative_error(n, lat));

@@ -10,6 +10,7 @@
 
 use std::sync::Arc;
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::allocation::{Allocation, ALLOC_TOL};
 use crate::platforms::Cluster;
 use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
@@ -66,17 +67,17 @@ pub fn execute(
     workload: &Workload,
     alloc: &Allocation,
     cfg: &ExecutorConfig,
-) -> Result<ExecutionReport, String> {
+) -> Result<ExecutionReport> {
     alloc.validate()?;
     workload.validate()?;
     if alloc.n_platforms() != cluster.len() || alloc.n_tasks() != workload.len() {
-        return Err(format!(
+        return Err(CloudshapesError::runtime(format!(
             "allocation shape {}x{} vs cluster {} / workload {}",
             alloc.n_platforms(),
             alloc.n_tasks(),
             cluster.len(),
             workload.len()
-        ));
+        )));
     }
     let tau = workload.len();
 

@@ -4,6 +4,7 @@
 //! latency-optimal partition), solve each constrained problem, and filter
 //! the resulting (cost, latency) points to the Pareto-optimal set.
 
+use crate::api::error::Result;
 use crate::coordinator::allocation::Allocation;
 use crate::coordinator::objectives::ModelSet;
 
@@ -35,12 +36,7 @@ impl TradeoffCurve {
     /// The Pareto-optimal (non-dominated) subset, cheapest first.
     pub fn pareto_front(&self) -> Vec<&TradeoffPoint> {
         let mut sorted: Vec<&TradeoffPoint> = self.points.iter().collect();
-        sorted.sort_by(|a, b| {
-            a.cost
-                .partial_cmp(&b.cost)
-                .unwrap()
-                .then(a.latency.partial_cmp(&b.latency).unwrap())
-        });
+        sorted.sort_by(|a, b| a.cost.total_cmp(&b.cost).then(a.latency.total_cmp(&b.latency)));
         let mut front: Vec<&TradeoffPoint> = Vec::new();
         let mut best_latency = f64::INFINITY;
         for p in sorted {
@@ -64,13 +60,13 @@ impl TradeoffCurve {
     pub fn cheapest(&self) -> Option<&TradeoffPoint> {
         self.points
             .iter()
-            .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+            .min_by(|a, b| a.cost.total_cmp(&b.cost))
     }
 
     pub fn fastest(&self) -> Option<&TradeoffPoint> {
         self.points
             .iter()
-            .min_by(|a, b| a.latency.partial_cmp(&b.latency).unwrap())
+            .min_by(|a, b| a.latency.total_cmp(&b.latency))
     }
 }
 
@@ -92,7 +88,7 @@ pub fn sweep(
     partitioner: &dyn Partitioner,
     models: &ModelSet,
     cfg: &SweepConfig,
-) -> Result<TradeoffCurve, String> {
+) -> Result<TradeoffCurve> {
     assert!(cfg.levels >= 2, "need at least the two bounds");
     // Step 1: upper cost bound from the unconstrained latency optimum.
     let fast_alloc = partitioner.partition(models, None)?;

@@ -6,6 +6,7 @@
 //!
 //! Implemented: OLB, MET, MCT, Min-Min, Max-Min, Sufferage.
 
+use crate::api::error::Result;
 use crate::coordinator::allocation::Allocation;
 use crate::coordinator::objectives::ModelSet;
 
@@ -36,7 +37,14 @@ pub enum Classic {
 
 impl Classic {
     pub fn all() -> [Classic; 6] {
-        [Classic::Olb, Classic::Met, Classic::Mct, Classic::MinMin, Classic::MaxMin, Classic::Sufferage]
+        [
+            Classic::Olb,
+            Classic::Met,
+            Classic::Mct,
+            Classic::MinMin,
+            Classic::MaxMin,
+            Classic::Sufferage,
+        ]
     }
 
     pub fn name(&self) -> &'static str {
@@ -130,7 +138,7 @@ impl ClassicPartitioner {
 fn argmin(xs: &[f64]) -> usize {
     xs.iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .expect("non-empty")
 }
@@ -141,7 +149,7 @@ impl Partitioner for ClassicPartitioner {
     }
 
     /// Budget is ignored: the classic heuristics are makespan-only mappers.
-    fn partition(&self, models: &ModelSet, _budget: Option<f64>) -> Result<Allocation, String> {
+    fn partition(&self, models: &ModelSet, _budget: Option<f64>) -> Result<Allocation> {
         let assignment = Self::assign(models, self.0);
         let mut alloc = Allocation::zero(models.mu, models.tau);
         for (j, i) in assignment.iter().enumerate() {

@@ -13,6 +13,7 @@
 //! why the MILP beats it at interior budgets (Table IV) and why it never
 //! touches the short-quantum CPUs (§IV.C.2).
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::allocation::Allocation;
 use crate::coordinator::objectives::ModelSet;
 
@@ -64,7 +65,7 @@ impl HeuristicPartitioner {
         // "the heuristic approach does not consider [the CPUs] at all".
         let keep = ((models.mu as f64 * (1.0 - lambda)).round() as usize).clamp(1, models.mu);
         let mut order: Vec<usize> = (0..models.mu).collect();
-        order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+        order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
         let mut weights = vec![0.0; models.mu];
         for &i in order.iter().take(keep) {
             weights[i] = 1.0 / lat[i].max(1e-12); // inverse-makespan among kept
@@ -78,7 +79,7 @@ impl Partitioner for HeuristicPartitioner {
         "heuristic"
     }
 
-    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation, String> {
+    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation> {
         let Some(budget) = budget else {
             return Ok(Self::upper_bound_allocation(models));
         };
@@ -99,10 +100,10 @@ impl Partitioner for HeuristicPartitioner {
         match best {
             Some((_, alloc)) => Ok(alloc),
             None if fallback.0 <= budget + 1e-9 => Ok(fallback.1),
-            None => Err(format!(
+            None => Err(CloudshapesError::solver(format!(
                 "heuristic: budget ${budget:.3} below the cheapest single-platform cost ${:.3}",
                 fallback.0
-            )),
+            ))),
         }
     }
 }

@@ -38,6 +38,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::allocation::{Allocation, ALLOC_TOL};
 use crate::coordinator::objectives::ModelSet;
 use crate::milp::lp::{Cmp, Problem};
@@ -113,7 +114,7 @@ impl PartialOrd for Node {
 }
 impl Ord for Node {
     fn cmp(&self, o: &Self) -> Ordering {
-        o.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal) // min-heap
+        o.bound.total_cmp(&self.bound) // min-heap
     }
 }
 
@@ -255,7 +256,7 @@ impl MilpPartitioner {
         order.sort_by(|&a, &b| {
             let wa: f64 = subset.iter().map(|&i| models.work_secs(i, a)).sum();
             let wb: f64 = subset.iter().map(|&i| models.work_secs(i, b)).sum();
-            wb.partial_cmp(&wa).unwrap()
+            wb.total_cmp(&wa)
         });
         let mut ready = vec![0.0f64; models.mu];
         let mut alloc = Allocation::zero(models.mu, models.tau);
@@ -265,7 +266,7 @@ impl MilpPartitioner {
                 .min_by(|&&a, &&b| {
                     let ca = ready[a] + models.work_secs(a, j) + models.setup_secs(a, j);
                     let cb = ready[b] + models.work_secs(b, j) + models.setup_secs(b, j);
-                    ca.partial_cmp(&cb).unwrap()
+                    ca.total_cmp(&cb)
                 })
                 .unwrap();
             ready[best] += models.work_secs(best, j) + models.setup_secs(best, j);
@@ -278,9 +279,7 @@ impl MilpPartitioner {
     /// platforms for every k — strong initial incumbents at any budget.
     fn ladder_seeds(models: &ModelSet) -> Vec<Allocation> {
         let mut order: Vec<usize> = (0..models.mu).collect();
-        order.sort_by(|&a, &b| {
-            models.solo_latency(a).partial_cmp(&models.solo_latency(b)).unwrap()
-        });
+        order.sort_by(|&a, &b| models.solo_latency(a).total_cmp(&models.solo_latency(b)));
         (1..=models.mu)
             .flat_map(|k| {
                 [Self::mct_over(models, &order[..k]), Self::balanced_over(models, &order[..k])]
@@ -306,7 +305,7 @@ impl MilpPartitioner {
     }
 
     /// Solve Eq. 4; returns the detailed outcome.
-    pub fn solve(&self, models: &ModelSet, budget: Option<f64>) -> Result<MilpOutcome, String> {
+    pub fn solve(&self, models: &ModelSet, budget: Option<f64>) -> Result<MilpOutcome> {
         let start = Instant::now();
         let (mu, tau) = (models.mu, models.tau);
 
@@ -442,7 +441,7 @@ impl MilpPartitioner {
                     .max_by(|a, b| {
                         let fa = (a.1 - a.1.floor()).min(a.1.ceil() - a.1);
                         let fb = (b.1 - b.1.floor()).min(b.1.ceil() - b.1);
-                        fa.partial_cmp(&fb).unwrap()
+                        fa.total_cmp(&fb)
                     });
                 if let Some((i, d)) = frac_d {
                     let (lb, ub) = d_bounds[i];
@@ -480,11 +479,11 @@ impl MilpPartitioner {
                 };
                 Ok(MilpOutcome { alloc, makespan, cost, bound: best_bound, gap, nodes })
             }
-            None => Err(format!(
+            None => Err(CloudshapesError::solver(format!(
                 "MILP: no feasible allocation within budget {budget:?} \
                  (C_L = {:.4})",
                 lower_cost_bound(models).0
-            )),
+            ))),
         }
     }
 }
@@ -494,7 +493,7 @@ impl Partitioner for MilpPartitioner {
         "milp"
     }
 
-    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation, String> {
+    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation> {
         self.solve(models, budget).map(|o| o.alloc)
     }
 }

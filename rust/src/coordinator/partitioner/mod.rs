@@ -8,6 +8,8 @@ pub mod milp;
 pub use heuristic::HeuristicPartitioner;
 pub use milp::{MilpConfig, MilpPartitioner};
 
+use crate::api::error::Result;
+
 use super::allocation::Allocation;
 use super::objectives::ModelSet;
 
@@ -17,7 +19,7 @@ pub trait Partitioner {
 
     /// Produce an allocation. `budget` is the cost constraint C_k in $;
     /// `None` means unconstrained (the latency-optimal end of the curve).
-    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation, String>;
+    fn partition(&self, models: &ModelSet, budget: Option<f64>) -> Result<Allocation>;
 }
 
 /// Shared helper: the single platform that completes the whole workload at
@@ -26,10 +28,10 @@ pub fn cheapest_single_platform(models: &ModelSet) -> usize {
     (0..models.mu)
         .min_by(|&a, &b| {
             let (ca, cb) = (models.solo_cost(a), models.solo_cost(b));
-            // Tie-break on latency so the choice is deterministic.
-            ca.partial_cmp(&cb)
-                .unwrap()
-                .then(models.solo_latency(a).partial_cmp(&models.solo_latency(b)).unwrap())
+            // NaN-safe total order (degenerate model fits must not panic);
+            // tie-break on latency so the choice is deterministic.
+            ca.total_cmp(&cb)
+                .then(models.solo_latency(a).total_cmp(&models.solo_latency(b)))
         })
         .expect("non-empty model set")
 }

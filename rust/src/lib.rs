@@ -10,25 +10,56 @@
 //! solving a family of cost-constrained Mixed-ILP makespan problems
 //! (ε-constraint method) and comparing against heuristic partitioners.
 //!
+//! ## Start here: the [`api`] facade
+//!
+//! [`api`] is the single public surface. Build a [`api::TradeoffSession`]
+//! with the builder, then partition / sweep / execute through it:
+//!
+//! ```no_run
+//! use cloudshapes::api::SessionBuilder;
+//!
+//! let session = SessionBuilder::quick().partitioner("milp").build()?;
+//! let frontier = session.pareto_frontier()?;       // ε-constraint sweep
+//! let run = session.evaluate(Some(2.5))?;          // partition + execute
+//! # Ok::<(), cloudshapes::api::CloudshapesError>(())
+//! ```
+//!
+//! - Errors: every fallible API returns the typed
+//!   [`api::CloudshapesError`] (`Config` / `Workload` / `Solver` /
+//!   `Platform` / `Runtime` / `Protocol`) — no stringly-typed results.
+//! - Strategies: [`api::PartitionerRegistry`] maps names to factories;
+//!   custom strategies plug in without touching the coordinator.
+//! - Service mode: `cloudshapes serve` speaks the versioned
+//!   [`api::protocol`] (`{"v":1,"op":...}`) over newline-delimited
+//!   JSON/TCP, with structured error payloads.
+//!
+//! ## Layers
+//!
 //! Architecture (see DESIGN.md):
-//! - **L3** — this crate: benchmarking, model fitting, MILP + heuristic
-//!   partitioners, cluster execution;
+//! - **L3** — this crate: benchmarking ([`coordinator`]), model fitting
+//!   ([`models`]), MILP + heuristic partitioners ([`milp`],
+//!   [`coordinator::partitioner`]), cluster execution ([`platforms`]);
 //! - **L2/L1** — JAX/Pallas Monte Carlo pricing chunks, AOT-lowered to HLO
 //!   text at build time (`make artifacts`), executed via PJRT from
 //!   [`runtime`]. Python never runs on the request path.
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod milp;
-pub mod report;
 pub mod models;
 pub mod platforms;
 pub mod pricing;
+pub mod report;
 pub mod runtime;
 pub mod testing;
 pub mod util;
 pub mod workload;
+
+pub use api::{
+    CloudshapesError, PartitionerRegistry, Result, SessionBuilder, TradeoffSession,
+};
 
 /// Crate version (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

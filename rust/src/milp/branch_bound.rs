@@ -84,7 +84,7 @@ impl PartialOrd for Node {
 impl Ord for Node {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; we want the *smallest* bound first.
-        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+        other.bound.total_cmp(&self.bound)
     }
 }
 
@@ -169,7 +169,7 @@ pub fn solve(p: &Problem, limits: &BnbLimits) -> MilpSolution {
             .iter()
             .map(|&vi| (vi, (rel.x[vi] - rel.x[vi].round()).abs()))
             .filter(|(_, f)| *f > INT_TOL)
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            .max_by(|a, b| a.1.total_cmp(&b.1));
 
         match frac {
             None => {
@@ -216,7 +216,11 @@ pub fn solve(p: &Problem, limits: &BnbLimits) -> MilpSolution {
     match incumbent {
         Some((x, obj)) => {
             let gap = gap_of(obj, best_bound);
-            let status = if gap <= limits.rel_gap { MilpStatus::Optimal } else { MilpStatus::Feasible };
+            let status = if gap <= limits.rel_gap {
+                MilpStatus::Optimal
+            } else {
+                MilpStatus::Feasible
+            };
             MilpSolution { status, x, obj, bound: best_bound, gap, nodes }
         }
         None => {

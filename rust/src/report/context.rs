@@ -4,6 +4,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::config::{ClusterKind, ExperimentConfig};
 use crate::coordinator::{benchmark, BenchmarkReport, ModelSet};
 use crate::platforms::native::NativePlatform;
@@ -27,7 +28,7 @@ pub struct Experiment {
 impl Experiment {
     /// Build everything. Benchmarking runs here (simulated platforms make
     /// it cheap; the native platform, if enabled, costs real seconds).
-    pub fn build(config: ExperimentConfig) -> Result<Experiment, String> {
+    pub fn build(config: ExperimentConfig) -> Result<Experiment> {
         let specs = match config.cluster.kind {
             ClusterKind::Paper => paper_cluster(),
             ClusterKind::Small => small_cluster(),
@@ -35,7 +36,7 @@ impl Experiment {
         let mut cluster = Cluster::simulated(&specs, &config.cluster.sim, config.cluster.seed);
         if config.cluster.with_native {
             let engine = EngineHandle::spawn(Path::new(&config.artifact_dir))
-                .map_err(|e| format!("starting PJRT engine: {e:#}"))?;
+                .map_err(|e| CloudshapesError::platform(format!("starting PJRT engine: {e:#}")))?;
             cluster.push(Arc::new(NativePlatform::new(engine)));
         }
         let workload = generate(&config.workload);

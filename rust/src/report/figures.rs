@@ -1,5 +1,6 @@
 //! Regenerate the paper's Figures 1–3.
 
+use crate::api::error::Result;
 use crate::coordinator::executor::{execute, ExecutorConfig};
 use crate::coordinator::partitioner::Partitioner;
 use crate::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner, TradeoffCurve};
@@ -10,7 +11,7 @@ use super::context::Experiment;
 
 /// Figure 1: the latency-vs-cost trade-off for the full workload on the
 /// heterogeneous cluster (MILP curve, as the paper's headline figure).
-pub fn fig1(e: &Experiment) -> Result<(Plot, TradeoffCurve), String> {
+pub fn fig1(e: &Experiment) -> Result<(Plot, TradeoffCurve)> {
     let milp = MilpPartitioner::new(e.config.milp.clone());
     let curve = sweep(&milp, e.models(), &e.config.sweep)?;
     let mut plot = Plot::new(
@@ -98,7 +99,7 @@ pub struct Fig3Point {
 
 /// Figure 3: generate both partitioners' trade-off curves from model data,
 /// run every partition on the cluster, and report model vs measured.
-pub fn fig3(e: &Experiment) -> Result<(Plot, Vec<Fig3Point>), String> {
+pub fn fig3(e: &Experiment) -> Result<(Plot, Vec<Fig3Point>)> {
     let mut records = Vec::new();
     let heuristic = HeuristicPartitioner::default();
     let milp = MilpPartitioner::new(e.config.milp.clone());
@@ -187,7 +188,7 @@ mod tests {
         assert!(!points.is_empty());
         let median = {
             let mut errs: Vec<f64> = points.iter().map(|p| p.rel_error).collect();
-            errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            errs.sort_by(|a, b| a.total_cmp(b));
             errs[errs.len() / 2]
         };
         assert!(median < 0.10, "median error {median}");

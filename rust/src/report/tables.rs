@@ -1,5 +1,6 @@
 //! Regenerate the paper's Tables I–IV.
 
+use crate::api::error::Result;
 use crate::coordinator::partitioner::{lower_cost_bound, Partitioner};
 use crate::coordinator::{HeuristicPartitioner, MilpPartitioner, ModelSet};
 use crate::models::tco::{self, DatacentreModel};
@@ -65,10 +66,7 @@ pub fn table2(cluster: &Cluster, workload: &Workload, models: &ModelSet) -> Tabl
         // datasheet).
         let j = (0..workload.len())
             .max_by(|&a, &b| {
-                workload.tasks[a]
-                    .total_flops()
-                    .partial_cmp(&workload.tasks[b].total_flops())
-                    .unwrap()
+                workload.tasks[a].total_flops().total_cmp(&workload.tasks[b].total_flops())
             })
             .unwrap();
         let beta = models.model(i, j).beta;
@@ -140,7 +138,10 @@ pub struct Table4Row {
 
 /// Table IV: the latency-cost trade-off, heuristic vs MILP, at the three
 /// cost levels the paper reports (C_L, median C_k, C_U).
-pub fn table4_rows(models: &ModelSet, milp_cfg: &crate::coordinator::partitioner::MilpConfig) -> Result<Vec<Table4Row>, String> {
+pub fn table4_rows(
+    models: &ModelSet,
+    milp_cfg: &crate::coordinator::partitioner::MilpConfig,
+) -> Result<Vec<Table4Row>> {
     let heuristic = HeuristicPartitioner::default();
     let milp = MilpPartitioner::new(milp_cfg.clone());
 
@@ -188,7 +189,10 @@ pub fn table4_rows(models: &ModelSet, milp_cfg: &crate::coordinator::partitioner
 
 /// Render Table IV in the paper's layout (plus the honesty column: the
 /// MILP's proven optimality gap).
-pub fn table4(models: &ModelSet, milp_cfg: &crate::coordinator::partitioner::MilpConfig) -> Result<Table, String> {
+pub fn table4(
+    models: &ModelSet,
+    milp_cfg: &crate::coordinator::partitioner::MilpConfig,
+) -> Result<Table> {
     let rows = table4_rows(models, milp_cfg)?;
     let mut t = Table::new(&[
         "Cost Level",

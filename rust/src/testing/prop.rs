@@ -52,15 +52,44 @@ impl Gen {
     }
 }
 
+/// A property failure message. Converts from anything printable so bodies
+/// can use `?` on `format!(...)` strings and typed errors alike.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PropError(pub String);
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl From<String> for PropError {
+    fn from(s: String) -> Self {
+        PropError(s)
+    }
+}
+
+impl From<&str> for PropError {
+    fn from(s: &str) -> Self {
+        PropError(s.to_string())
+    }
+}
+
+impl From<crate::api::error::CloudshapesError> for PropError {
+    fn from(e: crate::api::error::CloudshapesError) -> Self {
+        PropError(e.to_string())
+    }
+}
+
 /// Outcome of one property evaluation.
-pub type PropResult = Result<(), String>;
+pub type PropResult = Result<(), PropError>;
 
 /// Assert inside a property body.
 pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
     if cond {
         Ok(())
     } else {
-        Err(msg.to_string())
+        Err(PropError(msg.to_string()))
     }
 }
 
@@ -69,7 +98,7 @@ pub fn prop_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
     if (a - b).abs() <= tol {
         Ok(())
     } else {
-        Err(format!("{msg}: |{a} - {b}| > {tol}"))
+        Err(PropError(format!("{msg}: |{a} - {b}| > {tol}")))
     }
 }
 

@@ -37,24 +37,26 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
             continue;
         }
         let err = |msg: &str| TomlError { msg: msg.to_string(), line: lineno + 1 };
+        // Helpers report line 0; pin the real line number here.
+        let at = |e: TomlError| TomlError { line: lineno + 1, ..e };
 
         if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
             let path = split_key(inner.trim());
-            push_array_table(&mut root, &path).map_err(|m| err(&m))?;
+            push_array_table(&mut root, &path).map_err(at)?;
             current = path;
         } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
             let path = split_key(inner.trim());
-            open_table(&mut root, &path).map_err(|m| err(&m))?;
+            open_table(&mut root, &path).map_err(at)?;
             current = path;
         } else if let Some(eq) = find_unquoted(line, '=') {
             let key = line[..eq].trim();
             if key.is_empty() {
                 return Err(err("empty key"));
             }
-            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let val = parse_value(line[eq + 1..].trim()).map_err(at)?;
             let mut path = current.clone();
             path.extend(split_key(key));
-            insert(&mut root, &path, val).map_err(|m| err(&m))?;
+            insert(&mut root, &path, val).map_err(at)?;
         } else {
             return Err(err("expected key = value or [table]"));
         }
@@ -90,11 +92,16 @@ fn split_key(key: &str) -> Vec<String> {
     key.split('.').map(|s| s.trim().trim_matches('"').to_string()).collect()
 }
 
+/// A helper-level error (line number pinned by the caller).
+fn terr(msg: String) -> TomlError {
+    TomlError { msg, line: 0 }
+}
+
 /// Navigate to (creating) the table at `path`; error on type conflicts.
 fn navigate<'a>(
     root: &'a mut BTreeMap<String, Json>,
     path: &[String],
-) -> Result<&'a mut BTreeMap<String, Json>, String> {
+) -> Result<&'a mut BTreeMap<String, Json>, TomlError> {
     let mut cur = root;
     for part in path {
         let entry = cur
@@ -104,20 +111,20 @@ fn navigate<'a>(
             Json::Obj(o) => o,
             Json::Arr(a) => match a.last_mut() {
                 Some(Json::Obj(o)) => o,
-                _ => return Err(format!("'{part}' is not a table")),
+                _ => return Err(terr(format!("'{part}' is not a table"))),
             },
-            _ => return Err(format!("'{part}' is not a table")),
+            _ => return Err(terr(format!("'{part}' is not a table"))),
         };
     }
     Ok(cur)
 }
 
-fn open_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+fn open_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), TomlError> {
     navigate(root, path).map(|_| ())
 }
 
-fn push_array_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
-    let (last, parents) = path.split_last().ok_or("empty table name")?;
+fn push_array_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), TomlError> {
+    let (last, parents) = path.split_last().ok_or_else(|| terr("empty table name".into()))?;
     let parent = navigate(root, parents)?;
     let entry = parent
         .entry(last.clone())
@@ -127,28 +134,28 @@ fn push_array_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Resul
             a.push(Json::Obj(BTreeMap::new()));
             Ok(())
         }
-        _ => Err(format!("'{last}' is not an array of tables")),
+        _ => Err(terr(format!("'{last}' is not an array of tables"))),
     }
 }
 
-fn insert(root: &mut BTreeMap<String, Json>, path: &[String], val: Json) -> Result<(), String> {
-    let (last, parents) = path.split_last().ok_or("empty key")?;
+fn insert(root: &mut BTreeMap<String, Json>, path: &[String], val: Json) -> Result<(), TomlError> {
+    let (last, parents) = path.split_last().ok_or_else(|| terr("empty key".into()))?;
     let parent = navigate(root, parents)?;
     if parent.contains_key(last) {
-        return Err(format!("duplicate key '{last}'"));
+        return Err(terr(format!("duplicate key '{last}'")));
     }
     parent.insert(last.clone(), val);
     Ok(())
 }
 
-fn parse_value(text: &str) -> Result<Json, String> {
+fn parse_value(text: &str) -> Result<Json, TomlError> {
     if text.is_empty() {
-        return Err("empty value".into());
+        return Err(terr("empty value".into()));
     }
     if let Some(s) = text.strip_prefix('"') {
-        let s = s.strip_suffix('"').ok_or("unterminated string")?;
+        let s = s.strip_suffix('"').ok_or_else(|| terr("unterminated string".into()))?;
         // Reuse the JSON string unescaper.
-        return Json::parse(&format!("\"{s}\"")).map_err(|e| e.msg);
+        return Json::parse(&format!("\"{s}\"")).map_err(|e| terr(e.msg));
     }
     if text == "true" {
         return Ok(Json::Bool(true));
@@ -157,7 +164,10 @@ fn parse_value(text: &str) -> Result<Json, String> {
         return Ok(Json::Bool(false));
     }
     if let Some(inner) = text.strip_prefix('[') {
-        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| terr("unterminated array".into()))?
+            .trim();
         if inner.is_empty() {
             return Ok(Json::Arr(vec![]));
         }
@@ -172,7 +182,7 @@ fn parse_value(text: &str) -> Result<Json, String> {
     cleaned
         .parse::<f64>()
         .map(Json::Num)
-        .map_err(|_| format!("cannot parse value '{text}'"))
+        .map_err(|_| terr(format!("cannot parse value '{text}'")))
 }
 
 /// Split on commas that are not inside strings or nested brackets.

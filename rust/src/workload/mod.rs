@@ -6,6 +6,8 @@ pub mod option;
 pub use kaiserslautern::{generate, GeneratorConfig};
 pub use option::{OptionTask, Payoff};
 
+use crate::api::error::{CloudshapesError, Result};
+
 /// An ordered set of tasks to partition across a cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
@@ -36,9 +38,9 @@ impl Workload {
     }
 
     /// Validate every task.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<()> {
         if self.tasks.is_empty() {
-            return Err("empty workload".to_string());
+            return Err(CloudshapesError::workload("empty workload"));
         }
         for t in &self.tasks {
             t.validate()?;
@@ -48,7 +50,7 @@ impl Workload {
         ids.sort();
         ids.dedup();
         if ids.len() != self.tasks.len() {
-            return Err("duplicate task ids".to_string());
+            return Err(CloudshapesError::workload("duplicate task ids"));
         }
         Ok(())
     }

@@ -4,6 +4,8 @@
 //! the L1 Pallas kernels (`python/compile/kernels/mc.py`): any change must
 //! be made in both places and re-AOT'd.
 
+use crate::api::error::CloudshapesError;
+
 /// Payoff family — one per AOT kernel variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Payoff {
@@ -113,7 +115,7 @@ impl OptionTask {
     }
 
     /// Validate economic sanity (positive prices, vol, maturity, ...).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> crate::api::error::Result<()> {
         let pos = [
             ("spot", self.spot),
             ("strike", self.strike),
@@ -122,23 +124,35 @@ impl OptionTask {
         ];
         for (name, v) in pos {
             if !(v > 0.0 && v.is_finite()) {
-                return Err(format!("task {}: {name} must be positive, got {v}", self.id));
+                return Err(CloudshapesError::workload(format!(
+                    "task {}: {name} must be positive, got {v}",
+                    self.id
+                )));
             }
         }
         if self.rate < 0.0 || self.rate > 0.5 {
-            return Err(format!("task {}: implausible rate {}", self.id, self.rate));
+            return Err(CloudshapesError::workload(format!(
+                "task {}: implausible rate {}",
+                self.id, self.rate
+            )));
         }
         if self.payoff == Payoff::Barrier && self.barrier <= self.spot {
-            return Err(format!(
+            return Err(CloudshapesError::workload(format!(
                 "task {}: up-and-out barrier {} must exceed spot {}",
                 self.id, self.barrier, self.spot
-            ));
+            )));
         }
         if self.n_sims == 0 {
-            return Err(format!("task {}: zero simulations", self.id));
+            return Err(CloudshapesError::workload(format!(
+                "task {}: zero simulations",
+                self.id
+            )));
         }
         if self.payoff != Payoff::European && self.steps == 0 {
-            return Err(format!("task {}: path-dependent payoff needs steps", self.id));
+            return Err(CloudshapesError::workload(format!(
+                "task {}: path-dependent payoff needs steps",
+                self.id
+            )));
         }
         Ok(())
     }

@@ -1,0 +1,128 @@
+//! `api::TradeoffSession` builder contract tests plus an end-to-end smoke
+//! `evaluate()` on the small simulated cluster.
+
+use cloudshapes::api::{CloudshapesError, PartitionerRegistry, SessionBuilder};
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::partitioner::{lower_cost_bound, MilpConfig};
+use cloudshapes::coordinator::{Allocation, ModelSet, Partitioner};
+use cloudshapes::workload::GeneratorConfig;
+
+#[test]
+fn build_requires_cluster_and_workload() {
+    let e = SessionBuilder::new().build().unwrap_err();
+    assert!(matches!(e, CloudshapesError::Config(_)), "{e}");
+    assert!(e.message().contains("cluster"), "{e}");
+
+    let e = SessionBuilder::new()
+        .cluster(ExperimentConfig::quick().cluster)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, CloudshapesError::Config(_)), "{e}");
+    assert!(e.message().contains("workload"), "{e}");
+}
+
+#[test]
+fn build_rejects_unregistered_partitioner_before_benchmarking() {
+    let cfg = ExperimentConfig::quick();
+    let e = SessionBuilder::new()
+        .cluster(cfg.cluster)
+        .workload(cfg.workload)
+        .partitioner("does-not-exist")
+        .build()
+        .unwrap_err();
+    assert_eq!(e.kind(), "config");
+    assert!(e.message().contains("does-not-exist"), "{e}");
+    // The error helps: it lists what IS registered.
+    assert!(e.message().contains("heuristic"), "{e}");
+}
+
+#[test]
+fn unknown_partitioner_at_call_time_is_config_error() {
+    let session = SessionBuilder::quick().build().unwrap();
+    let e = session.partition_with(Some("nope"), None).unwrap_err();
+    assert_eq!(e.kind(), "config");
+    let e = session.pareto_frontier_with(Some("nope")).unwrap_err();
+    assert_eq!(e.kind(), "config");
+}
+
+#[test]
+fn explicit_builder_matches_issue_shape_and_evaluates() {
+    // The ISSUE's canonical call shape: cluster + workload + partitioner +
+    // budget_sweep, then pareto_frontier / evaluate.
+    let cfg = ExperimentConfig::quick();
+    let session = SessionBuilder::new()
+        .cluster(cfg.cluster.clone())
+        .workload(GeneratorConfig::small(6, 0.03, 11))
+        .partitioner("heuristic")
+        .budget_sweep(4)
+        .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
+        .build()
+        .unwrap();
+
+    assert_eq!(session.default_partitioner(), "heuristic");
+    assert_eq!(session.workload().len(), 6);
+    assert_eq!(session.models().mu, 3);
+
+    // Smoke evaluate: unconstrained, then at a real midpoint budget.
+    let ev = session.evaluate(None).unwrap();
+    assert_eq!(ev.execution.failures, 0);
+    assert!(ev.execution.makespan_secs > 0.0);
+    assert!(ev.partition.alloc.validate().is_ok());
+    let rel = (ev.execution.makespan_secs - ev.partition.predicted_latency_s).abs()
+        / ev.partition.predicted_latency_s;
+    assert!(rel < 0.5, "prediction off by {rel}");
+
+    let (c_l, _) = lower_cost_bound(session.models());
+    let budget = c_l + (ev.partition.predicted_cost - c_l).max(0.0) / 2.0;
+    let constrained = session.evaluate(Some(budget)).unwrap();
+    assert!(constrained.partition.predicted_cost <= budget + 1e-9);
+
+    // The frontier brackets the budgets and stays valid.
+    let curve = session.pareto_frontier().unwrap();
+    assert!(curve.points.len() >= 2);
+    assert!(curve.c_lower <= curve.c_upper + 1e-9);
+    for p in &curve.points {
+        assert!(p.alloc.validate().is_ok());
+    }
+}
+
+#[test]
+fn custom_strategy_plugs_in_through_the_builder() {
+    // A strategy the coordinator has never heard of, registered by name.
+    struct CheapestOnly;
+    impl Partitioner for CheapestOnly {
+        fn name(&self) -> &str {
+            "cheapest-only"
+        }
+        fn partition(
+            &self,
+            models: &ModelSet,
+            _budget: Option<f64>,
+        ) -> cloudshapes::Result<Allocation> {
+            Ok(lower_cost_bound(models).1)
+        }
+    }
+
+    let session = SessionBuilder::quick()
+        .register("cheapest-only", |_| Box::new(CheapestOnly))
+        .partitioner("cheapest-only")
+        .build()
+        .unwrap();
+    let p = session.partition(None).unwrap();
+    assert_eq!(p.partitioner, "cheapest-only");
+    assert_eq!(p.alloc.used_platforms().len(), 1);
+}
+
+#[test]
+fn registry_is_replaceable() {
+    let mut registry = PartitionerRegistry::empty();
+    registry.register("only", |cfg| {
+        Box::new(cloudshapes::coordinator::MilpPartitioner::new(cfg.milp.clone()))
+    });
+    let e = SessionBuilder::quick()
+        .registry(registry)
+        .partitioner("milp") // not in the replacement registry
+        .build()
+        .unwrap_err();
+    assert_eq!(e.kind(), "config");
+}

@@ -63,10 +63,10 @@ fn prop_milp_never_worse_than_heuristic() {
     prop_check("milp <= heuristic at matched budgets", 25, |g| {
         let models = arb_models(g);
         let heuristic = HeuristicPartitioner::default();
-        let h_alloc = heuristic.partition(&models, None).map_err(|e| e)?;
+        let h_alloc = heuristic.partition(&models, None)?;
         let (h_lat, h_cost) = models.evaluate(&h_alloc);
         let milp = fast_milp();
-        let m = milp.solve(&models, Some(h_cost)).map_err(|e| e)?;
+        let m = milp.solve(&models, Some(h_cost))?;
         prop_assert(
             m.makespan <= h_lat * (1.0 + 1e-6),
             &format!("milp {} > heuristic {h_lat} at budget {h_cost}", m.makespan),
@@ -124,8 +124,7 @@ fn prop_pareto_fronts_are_monotone() {
             &HeuristicPartitioner::default(),
             &models,
             &SweepConfig { levels: g.usize(2, 6) },
-        )
-        .map_err(|e| e)?;
+        )?;
         let front = curve.pareto_front();
         for w in front.windows(2) {
             prop_assert(
@@ -146,8 +145,7 @@ fn prop_executor_preserves_simulation_totals() {
         let cluster = Cluster::simulated(&specs, &SimConfig::exact(), g.rng.next_u64());
         let models = ModelSet::from_specs(&specs, &workload);
         let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
-        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default())
-            .map_err(|e| e)?;
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default())?;
         let dispatched: u64 = rep.platforms.iter().map(|p| p.sims).sum();
         prop_assert(
             dispatched == workload.total_sims(),

@@ -6,11 +6,10 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
+use cloudshapes::api::SessionBuilder;
 use cloudshapes::cli;
 use cloudshapes::cli::serve::serve_until_shutdown;
 use cloudshapes::config::ExperimentConfig;
-use cloudshapes::coordinator::executor::execute;
-use cloudshapes::coordinator::{sweep, HeuristicPartitioner, MilpPartitioner, Partitioner};
 use cloudshapes::report::{self, Experiment};
 use cloudshapes::util::json::Json;
 
@@ -23,24 +22,25 @@ fn quick() -> ExperimentConfig {
 
 #[test]
 fn full_pipeline_quick() {
-    let cfg = quick();
-    let e = Experiment::build(cfg.clone()).unwrap();
+    let session = SessionBuilder::from_config(quick()).build().unwrap();
 
     // Fitted models are usable and close to nominal for heavyweight pairs.
-    let m = e.models();
+    let m = session.models();
     assert_eq!((m.mu, m.tau), (3, 8));
 
     // Partition with both approaches, execute both, compare predictions.
-    let milp = MilpPartitioner::new(cfg.milp.clone());
-    let heuristic = HeuristicPartitioner::default();
-    for part in [&milp as &dyn Partitioner, &heuristic as &dyn Partitioner] {
-        let alloc = part.partition(m, None).unwrap();
-        let (pred_lat, pred_cost) = m.evaluate(&alloc);
-        let rep = execute(&e.cluster, &e.workload, &alloc, &cfg.executor).unwrap();
+    for name in ["milp", "heuristic"] {
+        let ev = session.evaluate_with(Some(name), None).unwrap();
+        let (p, rep) = (&ev.partition, &ev.execution);
         assert_eq!(rep.failures, 0);
-        let lat_err = (rep.makespan_secs - pred_lat).abs() / pred_lat;
-        assert!(lat_err < 0.35, "{}: predicted {pred_lat} measured {}", part.name(), rep.makespan_secs);
-        assert!(rep.cost <= pred_cost * 1.5 + 0.1);
+        let lat_err = (rep.makespan_secs - p.predicted_latency_s).abs() / p.predicted_latency_s;
+        assert!(
+            lat_err < 0.35,
+            "{name}: predicted {} measured {}",
+            p.predicted_latency_s,
+            rep.makespan_secs
+        );
+        assert!(rep.cost <= p.predicted_cost * 1.5 + 0.1);
         // All tasks priced.
         assert!(rep.prices.iter().all(Option::is_some));
     }
@@ -48,18 +48,18 @@ fn full_pipeline_quick() {
 
 #[test]
 fn sweep_and_reports_quick() {
-    let cfg = quick();
-    let e = Experiment::build(cfg.clone()).unwrap();
-    let curve = sweep(&MilpPartitioner::new(cfg.milp.clone()), e.models(), &cfg.sweep).unwrap();
+    let session = SessionBuilder::from_config(quick()).build().unwrap();
+    let curve = session.pareto_frontier().unwrap();
     assert!(curve.points.len() >= 2);
     assert!(curve.c_lower <= curve.c_upper + 1e-9);
 
     // Table/figure generators run end to end on the same experiment.
-    let t2 = report::tables::table2_for(&e);
+    let e = session.experiment();
+    let t2 = report::tables::table2_for(e);
     assert_eq!(t2.n_rows(), 3);
-    let t4 = report::table4(e.models(), &cfg.milp).unwrap();
+    let t4 = report::table4(session.models(), &session.config().milp).unwrap();
     assert!(t4.render().contains("Cheapest (C_L)"));
-    let (plot, points) = report::fig2(&e, &[2.0, 5.0]);
+    let (plot, points) = report::fig2(e, &[2.0, 5.0]);
     assert!(!points.is_empty());
     assert!(plot.render().contains("Fig. 2"));
 }
@@ -87,10 +87,10 @@ fn cli_quick_commands() {
 
 #[test]
 fn serve_tcp_roundtrip() {
-    let experiment = Arc::new(Experiment::build(quick()).unwrap());
+    let session = Arc::new(SessionBuilder::from_config(quick()).build().unwrap());
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
-    let server = std::thread::spawn(move || serve_until_shutdown(listener, experiment));
+    let server = std::thread::spawn(move || serve_until_shutdown(listener, session));
 
     let ask = |line: &str| -> Json {
         let mut s = TcpStream::connect(addr).unwrap();
@@ -100,11 +100,14 @@ fn serve_tcp_roundtrip() {
         r.read_line(&mut resp).unwrap();
         Json::parse(resp.trim()).unwrap()
     };
-    let pong = ask(r#"{"op":"ping"}"#);
+    let pong = ask(r#"{"v":1,"op":"ping"}"#);
     assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
-    let part = ask(r#"{"op":"partition","partitioner":"heuristic","budget":100.0}"#);
+    let part = ask(r#"{"v":1,"op":"partition","partitioner":"heuristic","budget":100.0}"#);
     assert_eq!(part.get("ok"), Some(&Json::Bool(true)), "{}", part.to_string_compact());
-    let bye = ask(r#"{"op":"shutdown"}"#);
+    // Unversioned requests are rejected with a structured protocol error.
+    let legacy = ask(r#"{"op":"ping"}"#);
+    assert_eq!(legacy.get("ok"), Some(&Json::Bool(false)));
+    let bye = ask(r#"{"v":1,"op":"shutdown"}"#);
     assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
     server.join().unwrap().unwrap();
 }

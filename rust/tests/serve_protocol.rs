@@ -1,0 +1,163 @@
+//! Serve-protocol (v1) integration tests against an ephemeral-port
+//! listener: every malformed or unsatisfiable request must come back as a
+//! structured `{"v":1,"ok":false,"error":{...}}` payload on the SAME
+//! connection — never a dropped connection — and shutdown must answer the
+//! requester before the server exits.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use cloudshapes::api::SessionBuilder;
+use cloudshapes::cli::serve::serve_until_shutdown;
+use cloudshapes::coordinator::partitioner::MilpConfig;
+use cloudshapes::util::json::Json;
+
+struct Server {
+    addr: std::net::SocketAddr,
+    handle: Option<std::thread::JoinHandle<cloudshapes::Result<()>>>,
+}
+
+fn start_server() -> Server {
+    let session = SessionBuilder::quick()
+        .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
+        .budget_sweep(3)
+        .build()
+        .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let session = Arc::new(session);
+    let handle = std::thread::spawn(move || serve_until_shutdown(listener, session));
+    Server { addr, handle: Some(handle) }
+}
+
+impl Server {
+    /// One request on a fresh connection.
+    fn ask(&self, line: &str) -> Json {
+        let mut s = TcpStream::connect(self.addr).unwrap();
+        s.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut r = BufReader::new(s);
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response '{resp}': {e}"))
+    }
+
+    fn shutdown(mut self) {
+        let bye = self.ask(r#"{"v":1,"op":"shutdown"}"#);
+        assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+        self.handle.take().unwrap().join().unwrap().unwrap();
+    }
+}
+
+fn error_kind(resp: &Json) -> Option<&str> {
+    resp.get("error")?.get("kind")?.as_str()
+}
+
+#[test]
+fn bad_requests_get_structured_errors_not_dropped_connections() {
+    let server = start_server();
+
+    // All of these arrive on ONE connection, interleaved with a valid ping,
+    // proving the connection survives every error.
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut ask_same_conn = |line: &str| -> Json {
+        stream.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "connection dropped after: {line}");
+        Json::parse(resp.trim()).unwrap()
+    };
+
+    // Unknown op.
+    let r = ask_same_conn(r#"{"v":1,"op":"frobnicate"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(error_kind(&r), Some("protocol"));
+    assert!(
+        r.get("error").unwrap().get("message").unwrap().as_str().unwrap().contains("frobnicate")
+    );
+
+    // Malformed JSON.
+    let r = ask_same_conn("{not json at all");
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(error_kind(&r), Some("protocol"));
+
+    // Missing budget on partition/evaluate.
+    for op in ["partition", "evaluate"] {
+        let r = ask_same_conn(&format!(r#"{{"v":1,"op":"{op}"}}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{op}");
+        assert_eq!(error_kind(&r), Some("protocol"), "{op}");
+        assert!(
+            r.get("error").unwrap().get("message").unwrap().as_str().unwrap().contains("budget"),
+            "{op}"
+        );
+    }
+
+    // Missing / wrong protocol version.
+    let r = ask_same_conn(r#"{"op":"ping"}"#);
+    assert_eq!(error_kind(&r), Some("protocol"));
+    let r = ask_same_conn(r#"{"v":99,"op":"ping"}"#);
+    assert_eq!(error_kind(&r), Some("protocol"));
+
+    // Solver-level failure: impossibly tight budget is a typed solver
+    // error, still on the same connection.
+    let r = ask_same_conn(r#"{"v":1,"op":"partition","partitioner":"milp","budget":1e-9}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(error_kind(&r), Some("solver"));
+
+    // The connection still works after all that.
+    let r = ask_same_conn(r#"{"v":1,"op":"ping"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+
+    server.shutdown();
+}
+
+#[test]
+fn partition_and_pareto_roundtrip() {
+    let server = start_server();
+
+    let r = server.ask(r#"{"v":1,"op":"specs"}"#);
+    assert_eq!(r.get("specs").unwrap().as_arr().unwrap().len(), 3);
+
+    let r = server.ask(r#"{"v":1,"op":"partition","partitioner":"heuristic","budget":null}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+    assert_eq!(r.get("v").unwrap().as_u64(), Some(1));
+    assert!(r.get("predicted_latency_s").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(r.get("budget"), Some(&Json::Null));
+
+    let r = server.ask(r#"{"v":1,"op":"pareto","partitioner":"heuristic"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+    let points = r.get("points").unwrap().as_arr().unwrap();
+    assert!(points.len() >= 2);
+    for p in points {
+        assert!(p.get("latency_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_while_connected_answers_before_closing() {
+    let server = start_server();
+
+    // Hold an open connection, issue shutdown on it, and still read the
+    // structured acknowledgement from that same socket.
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\"}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(Json::parse(resp.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+
+    stream.write_all(b"{\"v\":1,\"op\":\"shutdown\"}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let bye = Json::parse(resp.trim()).unwrap();
+    assert_eq!(bye.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+
+    let mut server = server;
+    server.handle.take().unwrap().join().unwrap().unwrap();
+}
