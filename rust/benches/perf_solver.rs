@@ -1,12 +1,17 @@
-//! Perf: the MILP stack (simplex node LPs, full partitioner solves) — the
-//! L3 hot path that dominates Pareto-sweep wall-clock. Baselines + targets
-//! live in EXPERIMENTS.md §Perf.
+//! Perf: the MILP stack (simplex node LPs, full partitioner solves, and the
+//! 1-vs-N-worker parallel search) — the L3 hot path that dominates
+//! Pareto-sweep wall-clock. Baselines + targets live in EXPERIMENTS.md
+//! §Perf.
+//!
+//! Pass `--smoke` (the CI mode) to shrink instance sizes and run counts so
+//! the bench acts as a fast solver-regression gate rather than a
+//! measurement session.
 
 mod common;
 
 use cloudshapes::coordinator::partitioner::{MilpConfig, MilpPartitioner};
 use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet, Partitioner};
-use cloudshapes::milp::lp::{Cmp, Problem};
+use cloudshapes::milp::{self, BnbLimits, Cmp, MilpStatus, Problem};
 use cloudshapes::milp::simplex;
 use cloudshapes::platforms::spec::paper_cluster;
 use cloudshapes::util::rng::Rng;
@@ -41,31 +46,92 @@ fn node_shaped_lp(mu: usize, tau: usize, seed: u64) -> Problem {
     p
 }
 
+/// A knapsack whose tree is deep enough to keep several workers busy.
+fn knapsack(n: usize, seed: u64) -> Problem {
+    let mut rng = Rng::new(seed);
+    let mut p = Problem::new();
+    let vars: Vec<_> = (0..n).map(|i| p.bin(&format!("b{i}"))).collect();
+    let w: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 9.0)).collect();
+    let c: Vec<f64> = (0..n).map(|_| rng.range_f64(-9.0, 4.0)).collect();
+    let cap = w.iter().sum::<f64>() * 0.4;
+    p.constrain(vars.iter().zip(&w).map(|(b, w)| (*b, *w)).collect(), Cmp::Le, cap);
+    p.minimize(vars.iter().zip(&c).map(|(b, c)| (*b, *c)).collect());
+    p
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let runs = if smoke { 1 } else { 5 };
+
     println!("== perf: simplex ==");
-    for (mu, tau) in [(4, 16), (8, 64), (16, 128)] {
+    let simplex_cases: &[(usize, usize)] =
+        if smoke { &[(4, 16), (8, 64)] } else { &[(4, 16), (8, 64), (16, 128)] };
+    for &(mu, tau) in simplex_cases {
         let lp = node_shaped_lp(mu, tau, 7);
-        common::measure(&format!("simplex {mu}x{tau} node LP"), 5, || {
+        common::measure(&format!("simplex {mu}x{tau} node LP"), runs, || {
             let sol = simplex::solve(&lp);
             assert_eq!(sol.status, cloudshapes::milp::LpStatus::Optimal);
         });
     }
 
+    println!("\n== perf: parallel branch & bound (generic solver, 1 vs 4 workers) ==");
+    let kn = knapsack(if smoke { 14 } else { 20 }, 11);
+    let mut objs: Vec<f64> = Vec::new();
+    for workers in [1usize, 4] {
+        let lim = BnbLimits {
+            rel_gap: 0.0,
+            workers,
+            max_nodes: 5_000_000,
+            time_limit_secs: 300.0,
+        };
+        common::measure(&format!("bnb knapsack ({workers} workers)"), runs, || {
+            let sol = milp::solve_milp(&kn, &lim);
+            assert_eq!(sol.status, MilpStatus::Optimal);
+            objs.push(sol.obj);
+        });
+    }
+    // Regression gate: every run, at every worker count, must return the
+    // identical objective bits.
+    assert!(
+        objs.windows(2).all(|w| w[0].to_bits() == w[1].to_bits()),
+        "parallel objective drift: {objs:?}"
+    );
+
     println!("\n== perf: partitioners at paper scale (16x128) ==");
     let models = paper_models();
-    common::measure("heuristic partition (budgeted sweep)", 5, || {
+    common::measure("heuristic partition (budgeted sweep)", runs, || {
         let h = HeuristicPartitioner::default();
         h.partition(&models, Some(8.0)).unwrap();
     });
-    for nodes in [1usize, 50, 200] {
+    let node_budgets: &[usize] = if smoke { &[1, 10] } else { &[1, 50, 200] };
+    for &nodes in node_budgets {
         let cfg = MilpConfig { max_nodes: nodes, time_limit_secs: 120.0, ..Default::default() };
         let p = MilpPartitioner::new(cfg);
         let mut makespan = 0.0;
-        let med = common::measure(&format!("milp solve ({nodes} nodes budget)"), 3, || {
-            let out = p.solve(&models, Some(8.0)).unwrap();
-            makespan = out.makespan;
-        });
+        let med =
+            common::measure(&format!("milp solve ({nodes} nodes budget)"), runs.min(3), || {
+                let out = p.solve(&models, Some(8.0)).unwrap();
+                makespan = out.makespan;
+            });
         println!("        -> makespan {makespan:.0}s at {med:.2}s solve time");
     }
+
+    println!("\n== perf: milp partitioner 1 vs 4 workers (the 128x16 instance) ==");
+    // rel_gap 0 pins both searches to the same full node budget so the
+    // comparison measures the parallel node-LP rounds, not early gap exits.
+    let mk = |workers| MilpConfig {
+        max_nodes: if smoke { 6 } else { 60 },
+        rel_gap: 0.0,
+        time_limit_secs: 600.0,
+        workers,
+    };
+    let t1 = common::measure("milp partition (1 worker)", 1, || {
+        MilpPartitioner::new(mk(1)).solve(&models, Some(8.0)).unwrap();
+    });
+    let t4 = common::measure("milp partition (4 workers)", 1, || {
+        MilpPartitioner::new(mk(4)).solve(&models, Some(8.0)).unwrap();
+    });
+    println!("        -> multi-worker speedup on 128x16: {:.2}x (1 -> 4 workers)", t1 / t4);
+
     println!("perf_solver bench OK");
 }

@@ -20,4 +20,4 @@ pub mod session;
 pub use error::{CloudshapesError, Result};
 pub use protocol::PROTOCOL_VERSION;
 pub use registry::{PartitionerFactory, PartitionerRegistry};
-pub use session::{Evaluation, PartitionSummary, SessionBuilder, TradeoffSession};
+pub use session::{CacheStats, Evaluation, PartitionSummary, SessionBuilder, TradeoffSession};

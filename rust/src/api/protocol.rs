@@ -4,12 +4,13 @@
 //! version:
 //!
 //! ```text
-//! {"v":1,"op":"ping"}
+//! {"v":1,"op":"ping"}                               # liveness + cache stats
 //! {"v":1,"op":"specs"}
 //! {"v":1,"op":"partition","budget":2.5,"partitioner":"milp"}
 //! {"v":1,"op":"partition","budget":null}            # null = unconstrained
 //! {"v":1,"op":"evaluate","budget":2.5}              # partition + execute
 //! {"v":1,"op":"pareto","partitioner":"heuristic"}   # trade-off curve
+//! {"v":1,"op":"batch","budgets":[1.0,2.5,null]}     # one solve per budget
 //! {"v":1,"op":"shutdown"}
 //! ```
 //!
@@ -24,6 +25,20 @@
 //! instead of parsing messages. `partition`/`evaluate` require the `budget`
 //! key (JSON `null` for unconstrained) so a forgotten budget is a typed
 //! error, not a silent unconstrained solve.
+//!
+//! `batch` solves a list of budgets in one round trip (at most
+//! [`MAX_BATCH_BUDGETS`]) and answers with one `results` array entry per
+//! budget, in request order. Entries are independent: each is either
+//! `{"ok":true,...partition fields...}` or `{"ok":false,"error":{...}}`,
+//! so one infeasible budget never fails its neighbours:
+//!
+//! ```text
+//! -> {"v":1,"op":"batch","partitioner":"milp","budgets":[2.5,1e-9]}
+//! <- {"v":1,"ok":true,"results":[
+//!      {"ok":true,"partitioner":"milp","budget":2.5,
+//!       "predicted_latency_s":41.2,"predicted_cost":2.31,"platforms_used":3},
+//!      {"ok":false,"error":{"kind":"solver","message":"MILP: no feasible ..."}}]}
+//! ```
 
 use crate::util::json::{obj, Json};
 
@@ -31,6 +46,10 @@ use super::error::{CloudshapesError, Result};
 
 /// The protocol version this build speaks.
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Upper bound on the `budgets` array of a `batch` request — keeps one
+/// request line from monopolising the server with unbounded solve work.
+pub const MAX_BATCH_BUDGETS: usize = 1024;
 
 /// A parsed v1 request.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,6 +63,8 @@ pub enum Request {
     Evaluate { partitioner: Option<String>, budget: Option<f64> },
     /// Generate the ε-constraint trade-off curve.
     Pareto { partitioner: Option<String> },
+    /// Partition at every budget of a list; one result entry per budget.
+    Batch { partitioner: Option<String>, budgets: Vec<Option<f64>> },
     /// Stop the server (the in-flight response is still delivered).
     Shutdown,
 }
@@ -88,9 +109,15 @@ impl Request {
                 Ok(Request::Evaluate { partitioner, budget })
             }
             "pareto" => Ok(Request::Pareto { partitioner: partitioner_field(&req)? }),
+            "batch" => {
+                let partitioner = partitioner_field(&req)?;
+                let budgets = batch_budgets(&req)?;
+                Ok(Request::Batch { partitioner, budgets })
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(CloudshapesError::protocol(format!(
-                "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, shutdown)"
+                "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, batch, \
+                 shutdown)"
             ))),
         }
     }
@@ -104,6 +131,36 @@ fn partitioner_field(req: &Json) -> Result<Option<String>> {
             .map(|s| Some(s.to_string()))
             .ok_or_else(|| CloudshapesError::protocol("'partitioner' must be a string")),
     }
+}
+
+fn batch_budgets(req: &Json) -> Result<Vec<Option<f64>>> {
+    let arr = match req.get("budgets") {
+        None => {
+            return Err(CloudshapesError::protocol(
+                "op 'batch' requires 'budgets' (an array of numbers, null = unconstrained)",
+            ))
+        }
+        Some(v) => v.as_arr().ok_or_else(|| {
+            CloudshapesError::protocol("'budgets' must be an array of numbers/null")
+        })?,
+    };
+    if arr.is_empty() {
+        return Err(CloudshapesError::protocol("'budgets' must not be empty"));
+    }
+    if arr.len() > MAX_BATCH_BUDGETS {
+        return Err(CloudshapesError::protocol(format!(
+            "'budgets' has {} entries (max {MAX_BATCH_BUDGETS} per request)",
+            arr.len()
+        )));
+    }
+    arr.iter()
+        .map(|v| match v {
+            Json::Null => Ok(None),
+            other => other.as_f64().map(Some).ok_or_else(|| {
+                CloudshapesError::protocol("each batch budget must be a number or null")
+            }),
+        })
+        .collect()
 }
 
 fn partition_fields(req: &Json, op: &str) -> Result<(Option<String>, Option<f64>)> {
@@ -166,7 +223,35 @@ mod tests {
             Request::parse(r#"{"v":1,"op":"pareto"}"#).unwrap(),
             Request::Pareto { partitioner: None }
         );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"batch","budgets":[1.5,null,2],"partitioner":"milp"}"#)
+                .unwrap(),
+            Request::Batch {
+                partitioner: Some("milp".into()),
+                budgets: vec![Some(1.5), None, Some(2.0)],
+            }
+        );
         assert_eq!(Request::parse(r#"{"v":1,"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn batch_budget_validation() {
+        for bad in [
+            r#"{"v":1,"op":"batch"}"#,                      // missing budgets
+            r#"{"v":1,"op":"batch","budgets":[]}"#,         // empty
+            r#"{"v":1,"op":"batch","budgets":2.5}"#,        // not an array
+            r#"{"v":1,"op":"batch","budgets":["x"]}"#,      // bad element
+        ] {
+            let e = Request::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "protocol", "{bad} -> {e}");
+        }
+        let huge = format!(
+            r#"{{"v":1,"op":"batch","budgets":[{}]}}"#,
+            vec!["1"; MAX_BATCH_BUDGETS + 1].join(",")
+        );
+        let e = Request::parse(&huge).unwrap_err();
+        assert_eq!(e.kind(), "protocol");
+        assert!(e.message().contains("max"), "{e}");
     }
 
     #[test]

@@ -28,6 +28,10 @@
 //! this type; nothing else in the crate wires clusters to partitioners by
 //! hand.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use crate::config::{ClusterConfig, ExperimentConfig};
 use crate::coordinator::executor::{execute, ExecutionReport, ExecutorConfig};
 use crate::coordinator::partitioner::MilpConfig;
@@ -58,6 +62,81 @@ pub struct Evaluation {
     pub partition: PartitionSummary,
     /// What actually happened when the allocation ran.
     pub execution: ExecutionReport,
+}
+
+/// Counters of the session's solution cache (exposed by the serve
+/// protocol's `ping` op).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Partition/pareto requests answered from the cache.
+    pub hits: u64,
+    /// Requests that had to run the solver.
+    pub misses: u64,
+    /// Distinct (partitioner, quantized budget) partitions stored.
+    pub partition_entries: usize,
+    /// Distinct memoized trade-off curves.
+    pub pareto_entries: usize,
+}
+
+/// Cache keys quantize budgets to this resolution (dollars): budgets closer
+/// than a nano-dollar share an entry, so repeated float-level jitter of the
+/// same budget still hits.
+const BUDGET_QUANTUM: f64 = 1e-9;
+
+/// `(quantized, disambiguator)`. The second word is 0 for every budget in
+/// the quantizable range; budgets too large to quantize (≳ $9.2e9) carry
+/// their exact bit pattern instead, so distinct huge budgets never collide
+/// on the saturated first word.
+type BudgetKey = (i64, u64);
+
+fn quantize(budget: Option<f64>) -> Option<BudgetKey> {
+    budget.map(|b| {
+        let q = (b / BUDGET_QUANTUM).round();
+        if q.is_finite() && q.abs() < i64::MAX as f64 {
+            (q as i64, 0)
+        } else {
+            (i64::MAX, b.to_bits())
+        }
+    })
+}
+
+/// Hard cap on stored partitions. A long-running `serve` process fed
+/// ever-changing budgets (one `batch` request can carry 1024 of them) must
+/// not grow without bound: past the cap, fresh keys are solved but not
+/// stored, while existing entries keep hitting. The pareto map needs no cap
+/// — its keys are registry strategy names, a fixed set.
+const MAX_PARTITION_ENTRIES: usize = 4096;
+
+/// Concurrent solution cache: solved partitions keyed by
+/// `(strategy, quantized budget)` plus memoized trade-off curves per
+/// strategy. Solves run *outside* the map locks, so concurrent misses on
+/// the same key may each solve once — the partitioners are deterministic,
+/// so every caller still observes the same allocation (first insert wins).
+struct SolutionCache {
+    partitions: Mutex<HashMap<(String, Option<BudgetKey>), Arc<PartitionSummary>>>,
+    paretos: Mutex<HashMap<String, Arc<TradeoffCurve>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SolutionCache {
+    fn new() -> SolutionCache {
+        SolutionCache {
+            partitions: Mutex::new(HashMap::new()),
+            paretos: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            partition_entries: self.partitions.lock().unwrap().len(),
+            pareto_entries: self.paretos.lock().unwrap().len(),
+        }
+    }
 }
 
 /// Builder for [`TradeoffSession`]. `cluster` and `workload` are mandatory;
@@ -177,6 +256,7 @@ impl SessionBuilder {
             experiment,
             registry: self.registry,
             default_partitioner: self.partitioner,
+            cache: SolutionCache::new(),
         })
     }
 }
@@ -192,10 +272,19 @@ impl Default for SessionBuilder {
 /// Construction (via [`SessionBuilder`]) runs the benchmarking procedure
 /// once; afterwards partitioning, sweeping and executing are all cheap to
 /// repeat at different budgets — the intended long-running-service shape.
+///
+/// Repeated solves are cached: [`partition_with`](Self::partition_with)
+/// (and everything built on it, including `evaluate` and the serve ops)
+/// memoizes each `(strategy, quantized budget)` allocation, and
+/// [`pareto_frontier_with`](Self::pareto_frontier_with) memoizes each
+/// strategy's trade-off curve. The cache is safe to share across threads
+/// (`serve` handles every connection on its own thread against one
+/// session); [`cache_stats`](Self::cache_stats) reports hit/miss counters.
 pub struct TradeoffSession {
     experiment: Experiment,
     registry: PartitionerRegistry,
     default_partitioner: String,
+    cache: SolutionCache,
 }
 
 impl TradeoffSession {
@@ -241,22 +330,45 @@ impl TradeoffSession {
         self.partition_with(None, budget)
     }
 
-    /// Partition with a named strategy (`None` = session default).
+    /// Partition with a named strategy (`None` = session default). Solved
+    /// allocations are cached per `(strategy, quantized budget)`; repeat
+    /// requests — including through `evaluate` and the serve `partition` /
+    /// `evaluate` / `batch` ops — skip the solver entirely.
     pub fn partition_with(
         &self,
         name: Option<&str>,
         budget: Option<f64>,
     ) -> Result<PartitionSummary> {
-        let part = self.make_partitioner(name)?;
+        let strategy = name.unwrap_or(&self.default_partitioner).to_string();
+        let key = (strategy, quantize(budget));
+        if let Some(hit) = self.cache.partitions.lock().unwrap().get(&key) {
+            self.cache.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((**hit).clone());
+        }
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+        let part = self.registry.create(&key.0, &self.experiment.config)?;
         let alloc = part.partition(self.models(), budget)?;
         let (predicted_latency_s, predicted_cost) = self.models().evaluate(&alloc);
-        Ok(PartitionSummary {
+        let summary = PartitionSummary {
             partitioner: part.name().to_string(),
             budget,
             alloc,
             predicted_latency_s,
             predicted_cost,
-        })
+        };
+        // First insert wins so all readers observe one allocation even if
+        // concurrent misses raced on the solve; at capacity the result is
+        // served without being stored.
+        let summary = Arc::new(summary);
+        let cached = {
+            let mut map = self.cache.partitions.lock().unwrap();
+            if map.len() >= MAX_PARTITION_ENTRIES && !map.contains_key(&key) {
+                Arc::clone(&summary)
+            } else {
+                Arc::clone(map.entry(key).or_insert_with(|| Arc::clone(&summary)))
+            }
+        };
+        Ok((*cached).clone())
     }
 
     /// Generate the ε-constraint latency-cost trade-off curve with the
@@ -266,9 +378,31 @@ impl TradeoffSession {
     }
 
     /// Trade-off curve for a named strategy (`None` = session default).
+    /// Memoized per strategy: the sweep config is fixed at build time, so
+    /// the curve is solved at most once per strategy per session.
     pub fn pareto_frontier_with(&self, name: Option<&str>) -> Result<TradeoffCurve> {
-        let part = self.make_partitioner(name)?;
-        sweep(part.as_ref(), self.models(), &self.experiment.config.sweep)
+        let strategy = name.unwrap_or(&self.default_partitioner).to_string();
+        if let Some(hit) = self.cache.paretos.lock().unwrap().get(&strategy) {
+            self.cache.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((**hit).clone());
+        }
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+        let part = self.registry.create(&strategy, &self.experiment.config)?;
+        let curve = sweep(part.as_ref(), self.models(), &self.experiment.config.sweep)?;
+        let cached = Arc::clone(
+            self.cache
+                .paretos
+                .lock()
+                .unwrap()
+                .entry(strategy)
+                .or_insert_with(|| Arc::new(curve)),
+        );
+        Ok((*cached).clone())
+    }
+
+    /// Hit/miss counters and entry counts of the solution cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     /// Partition at `budget` AND execute the allocation on the cluster.
@@ -329,6 +463,66 @@ mod tests {
         let e = SessionBuilder::quick().partitioner("quantum-annealer").build().unwrap_err();
         assert_eq!(e.kind(), "config");
         assert!(e.message().contains("quantum-annealer"), "{e}");
+    }
+
+    #[test]
+    fn partition_cache_hits_on_repeat_budgets() {
+        let session = SessionBuilder::quick().partitioner("heuristic").build().unwrap();
+        assert_eq!(session.cache_stats(), CacheStats::default());
+        let a = session.partition(None).unwrap();
+        let s = session.cache_stats();
+        assert_eq!((s.hits, s.misses, s.partition_entries), (0, 1, 1));
+        // Same key again — including spelling the default strategy out.
+        let b = session.partition(None).unwrap();
+        let c = session.partition_with(Some("heuristic"), None).unwrap();
+        assert_eq!(session.cache_stats().hits, 2);
+        assert_eq!(session.cache_stats().misses, 1);
+        assert_eq!(a.alloc, b.alloc);
+        assert_eq!(a.alloc, c.alloc);
+        // A different quantized budget is a fresh entry.
+        let _ = session.partition(Some(1e6)).unwrap();
+        let s = session.cache_stats();
+        assert_eq!((s.misses, s.partition_entries), (2, 2));
+    }
+
+    #[test]
+    fn budget_cache_keys_quantize_but_never_collide() {
+        // Float jitter below the quantum folds to one key...
+        assert_eq!(quantize(Some(2.5)), quantize(Some(2.5 + 1e-12)));
+        // ...distinct budgets do not...
+        assert_ne!(quantize(Some(2.5)), quantize(Some(2.6)));
+        // ...and budgets beyond the quantizable range stay distinct instead
+        // of collapsing onto the saturated key.
+        assert_ne!(quantize(Some(1e10)), quantize(Some(2e10)));
+        assert_eq!(quantize(None), None);
+    }
+
+    #[test]
+    fn pareto_curve_is_memoized_per_strategy() {
+        let session = SessionBuilder::quick()
+            .partitioner("heuristic")
+            .budget_sweep(3)
+            .build()
+            .unwrap();
+        let a = session.pareto_frontier().unwrap();
+        let misses = session.cache_stats().misses;
+        let b = session.pareto_frontier().unwrap();
+        let s = session.cache_stats();
+        assert_eq!(s.misses, misses, "second sweep must not re-solve");
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.pareto_entries, 1);
+        assert_eq!(a.points.len(), b.points.len());
+    }
+
+    #[test]
+    fn failed_solves_are_not_cached() {
+        let session = SessionBuilder::quick().partitioner("milp").build().unwrap();
+        // An impossibly tight budget is a solver error; it must not poison
+        // the cache with an entry.
+        assert!(session.partition(Some(1e-9)).is_err());
+        let s = session.cache_stats();
+        assert_eq!(s.partition_entries, 0);
+        assert_eq!(s.misses, 1);
     }
 
     #[test]

@@ -69,6 +69,15 @@ impl Args {
             })
             .transpose()
     }
+
+    /// As [`flag_usize`](Self::flag_usize) but rejects 0 — for counts where
+    /// zero is meaningless (`--workers`, `--levels`).
+    pub fn flag_positive_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.flag_usize(name)? {
+            Some(0) => Err(CloudshapesError::config(format!("--{name} must be >= 1"))),
+            other => Ok(other),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -99,6 +108,16 @@ mod tests {
     fn bad_numbers_error() {
         let a = parse("run --budget lots");
         assert!(a.flag_f64("budget").is_err());
+    }
+
+    #[test]
+    fn positive_usize_rejects_zero() {
+        let a = parse("run --workers 0");
+        assert!(a.flag_positive_usize("workers").is_err());
+        let a = parse("run --workers 4");
+        assert_eq!(a.flag_positive_usize("workers").unwrap(), Some(4));
+        let a = parse("run");
+        assert_eq!(a.flag_positive_usize("workers").unwrap(), None);
     }
 
     #[test]

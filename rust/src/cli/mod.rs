@@ -45,6 +45,8 @@ COMMANDS
 COMMON OPTIONS
   --config PATH            TOML experiment config (configs/*.toml)
   --quick                  Small cluster + small workload preset
+  --workers N              MILP solver threads (node LPs per round; default
+                           from config, 1 = sequential)
 ";
 
 /// Entry point; returns the process exit code.
@@ -69,6 +71,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     };
     if let Some(levels) = args.flag_usize("levels")? {
         cfg.sweep.levels = levels;
+    }
+    if let Some(workers) = args.flag_positive_usize("workers")? {
+        cfg.milp.workers = workers;
     }
     if args.flag_bool("native") {
         cfg.cluster.with_native = true;
@@ -316,5 +321,11 @@ mod tests {
         assert_eq!(main(&argv("info --quick")), 0);
         assert_eq!(main(&argv("partition --quick --partitioner heuristic")), 0);
         assert_eq!(main(&argv("partition --quick --partitioner nope")), 1);
+    }
+
+    #[test]
+    fn workers_flag_is_wired_and_validated() {
+        assert_eq!(main(&argv("partition --quick --partitioner heuristic --workers 2")), 0);
+        assert_eq!(main(&argv("partition --quick --workers 0")), 1);
     }
 }

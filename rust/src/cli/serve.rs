@@ -4,12 +4,13 @@
 //! Newline-delimited JSON requests; one JSON response per line:
 //!
 //! ```text
-//! {"v":1,"op":"ping"}
+//! {"v":1,"op":"ping"}                          # liveness + cache stats
 //! {"v":1,"op":"specs"}
 //! {"v":1,"op":"partition","budget":2.5,"partitioner":"milp"}
 //! {"v":1,"op":"partition","budget":null}       # null = unconstrained
 //! {"v":1,"op":"evaluate","budget":2.5}         # partition + execute
 //! {"v":1,"op":"pareto"}                        # trade-off curve
+//! {"v":1,"op":"batch","budgets":[1,2.5,null]}  # one partition per budget
 //! {"v":1,"op":"shutdown"}
 //! ```
 //!
@@ -18,6 +19,10 @@
 //! payload. Used by `examples/cluster_serve.rs` (client mode) to demonstrate
 //! the coordinator as a long-running service: rust owns the event loop; each
 //! connection gets a worker thread.
+//!
+//! All connections share one [`TradeoffSession`], so its solution cache
+//! serves repeated and concurrent `partition`/`evaluate`/`pareto`/`batch`
+//! requests without re-solving; `ping` reports the cache counters.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -104,7 +109,21 @@ pub fn handle_request(line: &str, session: &TradeoffSession, stop: &AtomicBool) 
 
 fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Result<Json> {
     match req {
-        Request::Ping => Ok(ok_response(vec![("pong", true.into())])),
+        Request::Ping => {
+            let stats = session.cache_stats();
+            Ok(ok_response(vec![
+                ("pong", true.into()),
+                (
+                    "cache",
+                    obj(vec![
+                        ("hits", Json::Num(stats.hits as f64)),
+                        ("misses", Json::Num(stats.misses as f64)),
+                        ("partition_entries", stats.partition_entries.into()),
+                        ("pareto_entries", stats.pareto_entries.into()),
+                    ]),
+                ),
+            ]))
+        }
         Request::Specs => {
             let specs: Vec<Json> = session
                 .experiment()
@@ -157,6 +176,31 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
                 ("c_upper", curve.c_upper.into()),
                 ("points", Json::Arr(points)),
             ]))
+        }
+        Request::Batch { partitioner, budgets } => {
+            // Entries are independent: an infeasible budget yields an
+            // inline error object, never a failed batch.
+            let results: Vec<Json> = budgets
+                .iter()
+                .map(|&budget| match session.partition_with(partitioner.as_deref(), budget) {
+                    Ok(p) => {
+                        let mut fields = vec![("ok", Json::Bool(true))];
+                        fields.extend(partition_fields(&p));
+                        obj(fields)
+                    }
+                    Err(e) => obj(vec![
+                        ("ok", Json::Bool(false)),
+                        (
+                            "error",
+                            obj(vec![
+                                ("kind", e.kind().into()),
+                                ("message", e.message().into()),
+                            ]),
+                        ),
+                    ]),
+                })
+                .collect();
+            Ok(ok_response(vec![("results", Json::Arr(results))]))
         }
         Request::Shutdown => {
             stop.store(true, Ordering::SeqCst);
@@ -239,6 +283,52 @@ mod tests {
                 "{bad}"
             );
         }
+    }
+
+    #[test]
+    fn ping_reports_cache_stats() {
+        let s = session();
+        let stop = AtomicBool::new(false);
+        let r = handle_request(r#"{"v":1,"op":"ping"}"#, &s, &stop);
+        let cache = r.get("cache").unwrap();
+        assert_eq!(cache.get("hits").unwrap().as_u64(), Some(0));
+        assert_eq!(cache.get("misses").unwrap().as_u64(), Some(0));
+        // One solve, then a cached repeat, through the wire ops.
+        let req = r#"{"v":1,"op":"partition","partitioner":"heuristic","budget":null}"#;
+        let a = handle_request(req, &s, &stop);
+        let b = handle_request(req, &s, &stop);
+        assert_eq!(a, b, "cached repeat must serve the identical response");
+        let r = handle_request(r#"{"v":1,"op":"ping"}"#, &s, &stop);
+        let cache = r.get("cache").unwrap();
+        assert_eq!(cache.get("hits").unwrap().as_u64(), Some(1));
+        assert_eq!(cache.get("misses").unwrap().as_u64(), Some(1));
+        assert_eq!(cache.get("partition_entries").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn batch_partitions_per_budget_with_inline_errors() {
+        let s = session();
+        let stop = AtomicBool::new(false);
+        let r = handle_request(
+            r#"{"v":1,"op":"batch","partitioner":"milp","budgets":[null,1e-9]}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        let results = r.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("ok"), Some(&Json::Bool(true)));
+        assert!(results[0].get("predicted_latency_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(results[0].get("budget"), Some(&Json::Null));
+        // The impossible budget fails inline without failing the batch.
+        assert_eq!(results[1].get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            results[1].get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("solver")
+        );
+        // Malformed batches are protocol errors.
+        let r = handle_request(r#"{"v":1,"op":"batch","budgets":[]}"#, &s, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

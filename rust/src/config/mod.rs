@@ -165,6 +165,10 @@ impl ExperimentConfig {
             set_usize(m, "max_nodes", &mut cfg.milp.max_nodes)?;
             set_f64(m, "rel_gap", &mut cfg.milp.rel_gap)?;
             set_f64(m, "time_limit_secs", &mut cfg.milp.time_limit_secs)?;
+            set_usize(m, "workers", &mut cfg.milp.workers)?;
+            if cfg.milp.workers == 0 {
+                return Err(CloudshapesError::config("milp.workers must be >= 1"));
+            }
         }
         if let Some(e) = root.get("executor") {
             let mut seed64 = cfg.executor.seed as u64;
@@ -251,6 +255,7 @@ mod tests {
             max_nodes = 50
             rel_gap = 0.01
             time_limit_secs = 2.5
+            workers = 3
 
             [executor]
             seed = 3
@@ -266,6 +271,7 @@ mod tests {
         assert_eq!(c.sweep.levels, 7);
         assert_eq!(c.milp.max_nodes, 50);
         assert!((c.milp.time_limit_secs - 2.5).abs() < 1e-12);
+        assert_eq!(c.milp.workers, 3);
         assert_eq!(c.executor.threads, 4);
     }
 
@@ -281,5 +287,6 @@ mod tests {
         assert!(ExperimentConfig::parse("[cluster]\nkind = \"mainframe\"").is_err());
         assert!(ExperimentConfig::parse("[sweep]\nlevels = \"many\"").is_err());
         assert!(ExperimentConfig::parse("[workload]\npayoff_mix = [1.0]").is_err());
+        assert!(ExperimentConfig::parse("[milp]\nworkers = 0").is_err());
     }
 }

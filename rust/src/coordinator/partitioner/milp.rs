@@ -43,6 +43,7 @@ use crate::coordinator::allocation::{Allocation, ALLOC_TOL};
 use crate::coordinator::objectives::ModelSet;
 use crate::milp::lp::{Cmp, Problem};
 use crate::milp::simplex::{self, LpStatus};
+use crate::util::threadpool::parallel_map;
 
 use super::heuristic::HeuristicPartitioner;
 use super::{lower_cost_bound, Partitioner};
@@ -54,6 +55,11 @@ pub struct MilpConfig {
     pub max_nodes: usize,
     pub rel_gap: f64,
     pub time_limit_secs: f64,
+    /// Threads solving node LPs. Each best-first round pops up to `workers`
+    /// frontier nodes and solves their LPs concurrently; all search
+    /// bookkeeping (incumbents, pruning, branching) stays sequential in
+    /// node order, so results do not depend on thread scheduling.
+    pub workers: usize,
 }
 
 impl Default for MilpConfig {
@@ -63,7 +69,7 @@ impl Default for MilpConfig {
         // and 200 node budgets — EXPERIMENTS.md §Perf); the residual gap
         // reflects the weak B = A root bound, not a findable better
         // allocation. Budgets sized accordingly.
-        MilpConfig { max_nodes: 60, rel_gap: 5e-3, time_limit_secs: 5.0 }
+        MilpConfig { max_nodes: 60, rel_gap: 5e-3, time_limit_secs: 5.0, workers: 1 }
     }
 }
 
@@ -342,142 +348,189 @@ impl MilpPartitioner {
         heap.push(Node { bound: 0.0, entry_fixes: vec![], d_fixes: vec![], depth: 0 });
         let mut nodes = 0usize;
         let mut best_bound: f64 = 0.0;
-        let mut exhausted = true;
+        // Smallest bound of any subtree dropped on a node-LP solver failure
+        // (+inf when none): caps the reported bound so a drained frontier
+        // cannot claim optimality over unexplored mass.
+        let mut dropped_bound = f64::INFINITY;
 
-        while let Some(node) = heap.pop() {
-            best_bound = best_bound.max(node.bound);
+        let workers = self.cfg.workers.max(1);
+        loop {
+            // Stop rules run at round boundaries, against the frontier
+            // minimum. Every explored subtree is represented in the heap by
+            // its unexpanded children, so the heap top IS the provable
+            // lower bound at this point — unlike a running max of popped
+            // bounds, which a same-round sibling's children can undercut.
+            let Some(top) = heap.peek().map(|n| n.bound) else { break };
             if let Some((_, inc_lat, _)) = &incumbent {
-                if node.bound >= inc_lat * (1.0 - self.cfg.rel_gap) {
+                if top >= inc_lat * (1.0 - self.cfg.rel_gap) {
                     // Everything left is within tolerance of the incumbent.
+                    best_bound = top;
                     break;
                 }
             }
             if nodes >= self.cfg.max_nodes
                 || start.elapsed().as_secs_f64() > self.cfg.time_limit_secs
             {
-                exhausted = false;
+                best_bound = top;
                 break;
             }
-            nodes += 1;
 
-            // Materialise node state.
-            let mut entries = root_entries.clone();
-            for &(k, s) in &node.entry_fixes {
-                entries[k] = s;
-            }
-            let mut d_bounds = root_d.clone();
-            for &(i, lb, ub) in &node.d_fixes {
-                d_bounds[i] = (lb, ub);
-            }
+            // Collect a round: up to `workers` nodes, never overshooting
+            // the node budget (multi-worker runs explore exactly as many
+            // nodes as sequential ones before stopping).
+            let cap = workers.min(self.cfg.max_nodes - nodes);
+            let mut round = Vec::with_capacity(cap);
+            while round.len() < cap {
+                let Some(node) = heap.pop() else { break };
+                nodes += 1;
 
-            let lp = Self::build_lp(models, budget, &entries, &d_bounds);
-            let sol = simplex::solve(&lp);
-            match sol.status {
-                LpStatus::Optimal => {}
-                LpStatus::Infeasible => continue,
-                LpStatus::Unbounded | LpStatus::IterLimit => {
-                    // Solver failure on a node: drop it (bound-safe: we only
-                    // lose pruning power, not correctness of the incumbent).
-                    exhausted = false;
-                    continue;
+                // Materialise node state.
+                let mut entries = root_entries.clone();
+                for &(k, s) in &node.entry_fixes {
+                    entries[k] = s;
                 }
-            }
-            if let Some((_, inc_lat, _)) = &incumbent {
-                if sol.obj >= inc_lat * (1.0 - self.cfg.rel_gap) {
-                    continue; // dominated subtree
+                let mut d_bounds = root_d.clone();
+                for &(i, lb, ub) in &node.d_fixes {
+                    d_bounds[i] = (lb, ub);
                 }
+                round.push((node, entries, d_bounds));
             }
 
-            // True-semantics evaluation -> possible incumbent. If the LP
-            // point overshoots the budget through quantum ceilings, repair
-            // it (evict quantum-wasting platforms) before considering.
-            let alloc = Self::extract_alloc(models, &sol.x);
-            if let Some(b) = budget {
-                if models.total_cost(&alloc) > b + 1e-9 {
-                    if let Some(repaired) = Self::repair_to_budget(models, alloc.clone(), b) {
-                        consider(repaired, &mut incumbent);
+            // The round's node LPs are independent — solve them
+            // concurrently (they dominate wall-clock). Everything below
+            // stays sequential in node order, so the search is
+            // deterministic for a fixed `workers` count.
+            let lps: Vec<Problem> = round
+                .iter()
+                .map(|(_, entries, d_bounds)| {
+                    Self::build_lp(models, budget, entries, d_bounds)
+                })
+                .collect();
+            let sols = if workers == 1 {
+                lps.iter().map(simplex::solve).collect()
+            } else {
+                parallel_map(lps, workers, |lp| simplex::solve(&lp))
+            };
+
+            for ((node, entries, d_bounds), sol) in round.into_iter().zip(sols) {
+                match sol.status {
+                    LpStatus::Optimal => {}
+                    LpStatus::Infeasible => continue,
+                    LpStatus::Unbounded | LpStatus::IterLimit => {
+                        // Solver failure: the subtree is dropped unexplored,
+                        // so its inherited bound keeps capping the reported
+                        // bound (the incumbent stays correct regardless).
+                        dropped_bound = dropped_bound.min(node.bound);
+                        continue;
                     }
                 }
-            }
-            consider(alloc, &mut incumbent);
+                if let Some((_, inc_lat, _)) = &incumbent {
+                    if sol.obj >= inc_lat * (1.0 - self.cfg.rel_gap) {
+                        continue; // dominated subtree
+                    }
+                }
 
-            // Pick the branching decision.
-            // 1) Largest γ-undercharge among fractional Free entries.
-            let mut best_entry: Option<(usize, f64)> = None;
-            for i in 0..mu {
-                for j in 0..tau {
-                    let k = i * tau + j;
-                    if entries[k] == Entry::Free {
-                        let a = sol.x[k];
-                        if a > ALLOC_TOL && a < 1.0 - ALLOC_TOL {
-                            let undercharge = models.setup_secs(i, j) * (1.0 - a);
-                            if undercharge > best_entry.map(|(_, u)| u).unwrap_or(1e-9) {
-                                best_entry = Some((k, undercharge));
+                // True-semantics evaluation -> possible incumbent. If the LP
+                // point overshoots the budget through quantum ceilings,
+                // repair it (evict quantum-wasting platforms) before
+                // considering.
+                let alloc = Self::extract_alloc(models, &sol.x);
+                if let Some(b) = budget {
+                    if models.total_cost(&alloc) > b + 1e-9 {
+                        if let Some(repaired) =
+                            Self::repair_to_budget(models, alloc.clone(), b)
+                        {
+                            consider(repaired, &mut incumbent);
+                        }
+                    }
+                }
+                consider(alloc, &mut incumbent);
+
+                // Pick the branching decision.
+                // 1) Largest γ-undercharge among fractional Free entries.
+                let mut best_entry: Option<(usize, f64)> = None;
+                for i in 0..mu {
+                    for j in 0..tau {
+                        let k = i * tau + j;
+                        if entries[k] == Entry::Free {
+                            let a = sol.x[k];
+                            if a > ALLOC_TOL && a < 1.0 - ALLOC_TOL {
+                                let undercharge = models.setup_secs(i, j) * (1.0 - a);
+                                if undercharge > best_entry.map(|(_, u)| u).unwrap_or(1e-9) {
+                                    best_entry = Some((k, undercharge));
+                                }
                             }
                         }
                     }
                 }
-            }
-            if let Some((k, _)) = best_entry {
-                for state in [Entry::Off, Entry::On] {
-                    let mut fixes = node.entry_fixes.clone();
-                    fixes.push((k, state));
-                    heap.push(Node {
-                        bound: sol.obj,
-                        entry_fixes: fixes,
-                        d_fixes: node.d_fixes.clone(),
-                        depth: node.depth + 1,
-                    });
-                }
-                continue;
-            }
-            // 2) No γ-undercharge left: close the quantum gap if the budget
-            //    is the blocker (fractional D with binding cost).
-            if budget.is_some() {
-                let d_offset = mu * tau + 1;
-                let frac_d = (0..mu)
-                    .map(|i| (i, sol.x[d_offset + i]))
-                    .filter(|(_, d)| (d - d.round()).abs() > 1e-6)
-                    .max_by(|a, b| {
-                        let fa = (a.1 - a.1.floor()).min(a.1.ceil() - a.1);
-                        let fb = (b.1 - b.1.floor()).min(b.1.ceil() - b.1);
-                        fa.total_cmp(&fb)
-                    });
-                if let Some((i, d)) = frac_d {
-                    let (lb, ub) = d_bounds[i];
-                    for (nlb, nub) in [(lb, d.floor()), (d.ceil(), ub)] {
-                        if nlb <= nub {
-                            let mut d_fixes = node.d_fixes.clone();
-                            d_fixes.push((i, nlb, nub));
-                            heap.push(Node {
-                                bound: sol.obj,
-                                entry_fixes: node.entry_fixes.clone(),
-                                d_fixes,
-                                depth: node.depth + 1,
-                            });
-                        }
+                if let Some((k, _)) = best_entry {
+                    for state in [Entry::Off, Entry::On] {
+                        let mut fixes = node.entry_fixes.clone();
+                        fixes.push((k, state));
+                        heap.push(Node {
+                            bound: sol.obj,
+                            entry_fixes: fixes,
+                            d_fixes: node.d_fixes.clone(),
+                            depth: node.depth + 1,
+                        });
                     }
                     continue;
                 }
+                // 2) No γ-undercharge left: close the quantum gap if the
+                //    budget is the blocker (fractional D with binding cost).
+                if budget.is_some() {
+                    let d_offset = mu * tau + 1;
+                    let frac_d = (0..mu)
+                        .map(|i| (i, sol.x[d_offset + i]))
+                        .filter(|(_, d)| (d - d.round()).abs() > 1e-6)
+                        .max_by(|a, b| {
+                            let fa = (a.1 - a.1.floor()).min(a.1.ceil() - a.1);
+                            let fb = (b.1 - b.1.floor()).min(b.1.ceil() - b.1);
+                            fa.total_cmp(&fb)
+                        });
+                    if let Some((i, d)) = frac_d {
+                        let (lb, ub) = d_bounds[i];
+                        for (nlb, nub) in [(lb, d.floor()), (d.ceil(), ub)] {
+                            if nlb <= nub {
+                                let mut d_fixes = node.d_fixes.clone();
+                                d_fixes.push((i, nlb, nub));
+                                heap.push(Node {
+                                    bound: sol.obj,
+                                    entry_fixes: node.entry_fixes.clone(),
+                                    d_fixes,
+                                    depth: node.depth + 1,
+                                });
+                            }
+                        }
+                        continue;
+                    }
+                }
+                // Fully integral node: its LP obj is exact; nothing to do.
             }
-            // Fully integral node: its LP objective is exact; nothing to do.
         }
 
-        if heap.is_empty() && exhausted {
-            // Search space fully explored: the incumbent is optimal.
+        if heap.is_empty() {
+            // Frontier fully drained: the only unexplored mass sits in
+            // subtrees dropped on solver failure, so the bound closes onto
+            // the incumbent when the search truly exhausted.
             if let Some((_, lat, _)) = &incumbent {
-                best_bound = *lat;
+                best_bound = dropped_bound.min(*lat);
             }
         }
 
         match incumbent {
             Some((alloc, makespan, cost)) => {
+                // The incumbent proves the optimum <= makespan, and any
+                // solver-failure drop caps the bound from below — so the
+                // reported bound never exceeds either (a gap-stop's
+                // frontier top can).
+                let bound = best_bound.min(dropped_bound).min(makespan);
                 let gap = if makespan > 0.0 {
-                    ((makespan - best_bound) / makespan).max(0.0)
+                    ((makespan - bound) / makespan).max(0.0)
                 } else {
                     0.0
                 };
-                Ok(MilpOutcome { alloc, makespan, cost, bound: best_bound, gap, nodes })
+                Ok(MilpOutcome { alloc, makespan, cost, bound, gap, nodes })
             }
             None => Err(CloudshapesError::solver(format!(
                 "MILP: no feasible allocation within budget {budget:?} \
@@ -582,6 +635,29 @@ mod tests {
     fn impossible_budget_is_an_error() {
         let m = models();
         assert!(MilpPartitioner::default().solve(&m, Some(1e-9)).is_err());
+    }
+
+    #[test]
+    fn multi_worker_rounds_match_sequential_quality() {
+        let m = models();
+        let seq = MilpPartitioner::default();
+        let par = MilpPartitioner::new(MilpConfig { workers: 4, ..Default::default() });
+        for budget in [None, Some(0.6), Some(1.5)] {
+            let a = seq.solve(&m, budget).unwrap();
+            let b = par.solve(&m, budget).unwrap();
+            assert!(b.alloc.validate().is_ok());
+            if let Some(c) = budget {
+                assert!(b.cost <= c + 1e-9, "budget {c}: {b:?}");
+            }
+            // Rounds only widen exploration; on this small instance both
+            // searches close the same incumbent.
+            assert!(
+                (a.makespan - b.makespan).abs() <= 0.01 * a.makespan.max(1e-9),
+                "budget {budget:?}: seq {} vs par {}",
+                a.makespan,
+                b.makespan
+            );
+        }
     }
 
     #[test]

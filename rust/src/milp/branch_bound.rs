@@ -1,4 +1,5 @@
-//! Generic best-first branch & bound over [`Problem`]s with Int/Bin vars.
+//! Generic best-first branch & bound over [`Problem`]s with Int/Bin vars —
+//! sequential or multi-worker.
 //!
 //! This is the "SCIP as a black box" role from the paper (§III.B): LP
 //! relaxations from [`super::simplex`], most-fractional branching with bound
@@ -6,13 +7,48 @@
 //! on small/medium instances and *anytime* on large ones — it always returns
 //! the best incumbent plus the proven lower bound and gap.
 //!
+//! # Parallel search
+//!
+//! With [`BnbLimits::workers`] > 1 the search runs as a worker pool
+//! (over [`crate::util::threadpool::ThreadPool`]) sharing
+//!
+//! * a **mutex-guarded best-bound frontier** (binary heap ordered by LP
+//!   bound, ties broken by deterministic node id) plus per-worker in-flight
+//!   bookkeeping, so the global lower bound is always
+//!   `min(heap top, in-flight nodes)`;
+//! * an **atomic incumbent objective** (`AtomicU64` of the f64 bits) that
+//!   workers read lock-free when pruning — the full incumbent point sits
+//!   behind its own mutex and is only locked on improvement;
+//! * per-worker simplex solves: [`super::simplex`] state is built per node,
+//!   so the LP layer needs no locking, only `Send` data.
+//!
+//! **Determinism.** Node ids are heap-numbering paths (root 1, down-child
+//! `2·id`, up-child `2·id+1`), so a node's id depends only on its position
+//! in the branching tree, never on thread scheduling. Incumbents are
+//! accepted only when *strictly* better, with exact-tie acceptance going to
+//! the smaller node id. With `rel_gap == 0` and budgets that don't bind,
+//! every subtree that could hold a strictly better point has a bound below
+//! the optimum and is explored under any schedule — so parallel and
+//! sequential runs return **identical objectives (bit-for-bit)** and
+//! statuses (verified by `rust/tests/solver_properties.rs`). The node-id
+//! tie-break keeps the reported *point* stable across most schedules too,
+//! but when several distinct points attain the same objective the chosen
+//! one may vary; only the objective and status are guaranteed. With a
+//! nonzero gap or binding node/time budgets, runs agree within the
+//! configured tolerance but may differ in which within-gap incumbent they
+//! report.
+//!
 //! The full-size 128×16 partitioning MILP is solved by the structure-aware
 //! specialization in `coordinator::partitioner::milp`, which is validated
 //! against this generic solver on small instances.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, Ordering as AtOrd};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::threadpool::ThreadPool;
 
 use super::lp::{Problem, VarKind};
 use super::simplex::{self, LpStatus};
@@ -27,11 +63,14 @@ pub struct BnbLimits {
     /// Relative optimality gap at which the search stops.
     pub rel_gap: f64,
     pub time_limit_secs: f64,
+    /// Worker threads exploring the frontier (1 = in-thread sequential;
+    /// clamped to at least 1).
+    pub workers: usize,
 }
 
 impl Default for BnbLimits {
     fn default() -> Self {
-        BnbLimits { max_nodes: 100_000, rel_gap: 1e-6, time_limit_secs: 60.0 }
+        BnbLimits { max_nodes: 100_000, rel_gap: 1e-6, time_limit_secs: 60.0, workers: 1 }
     }
 }
 
@@ -65,14 +104,26 @@ pub struct MilpSolution {
 struct Node {
     /// Lower bound inherited from the parent LP (priority key).
     bound: f64,
+    /// Deterministic heap-numbering id: root 1, children `2id` / `2id+1`.
+    /// Depends only on the branching path, not on thread scheduling.
+    id: u128,
     /// (var index, new lb, new ub) deltas relative to the root problem.
     bounds: Vec<(usize, f64, f64)>,
     depth: usize,
 }
 
+impl Node {
+    /// Child id along branch direction `dir` (0 = down, 1 = up). Saturates
+    /// at the parent id beyond 127 levels — ties then lose their
+    /// deterministic order, but no real search goes that deep.
+    fn child_id(&self, dir: u128) -> u128 {
+        self.id.checked_mul(2).and_then(|i| i.checked_add(dir)).unwrap_or(self.id)
+    }
+}
+
 impl PartialEq for Node {
     fn eq(&self, other: &Self) -> bool {
-        self.bound == other.bound
+        self.bound == other.bound && self.id == other.id
     }
 }
 impl Eq for Node {}
@@ -83,17 +134,269 @@ impl PartialOrd for Node {
 }
 impl Ord for Node {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; we want the *smallest* bound first.
-        other.bound.total_cmp(&self.bound)
+        // BinaryHeap is a max-heap; we want the *smallest* bound first,
+        // ties broken toward the smallest node id (deterministic pops).
+        other.bound.total_cmp(&self.bound).then(other.id.cmp(&self.id))
     }
 }
 
-/// Solve a mixed-integer problem by branch & bound.
+/// Best integer-feasible point found so far.
+struct Incumbent {
+    x: Vec<f64>,
+    obj: f64,
+    /// Id of the node that produced it (deterministic tie-break).
+    id: u128,
+}
+
+/// Why the search stopped before draining the frontier.
+#[derive(Clone, Copy, PartialEq)]
+enum Stop {
+    /// Remaining frontier proven within `rel_gap` of the incumbent.
+    Proven,
+    /// Node/time budget exhausted.
+    Budget,
+}
+
+/// Frontier + termination bookkeeping, all behind one mutex. The lock is
+/// held only for heap operations — LP solves (the dominant cost) run
+/// outside it.
+struct Frontier {
+    heap: BinaryHeap<Node>,
+    /// Bound of the node each worker is currently expanding (`None` =
+    /// idle). The global lower bound is min(heap top, these).
+    in_flight: Vec<Option<f64>>,
+    /// Nodes handed to workers so far (the `max_nodes` meter).
+    nodes: usize,
+    stop: Option<Stop>,
+    /// Global lower bound captured at the moment the search stopped.
+    stop_bound: f64,
+    /// Smallest bound of any subtree dropped on a node-LP solver failure
+    /// (`+inf` when none). Caps the reported bound and blocks the
+    /// natural-drain paths from fabricating `Optimal` / `Infeasible` over
+    /// unexplored mass.
+    lost_bound: f64,
+}
+
+/// Everything the workers share.
+struct Search {
+    problem: Problem,
+    relaxed: Problem,
+    int_vars: Vec<usize>,
+    limits: BnbLimits,
+    start: Instant,
+    frontier: Mutex<Frontier>,
+    incumbent: Mutex<Option<Incumbent>>,
+    /// f64 bits of the incumbent objective (`+inf` when none): the
+    /// lock-free bound read workers prune against.
+    incumbent_obj: AtomicU64,
+}
+
+impl Search {
+    fn incumbent_obj(&self) -> f64 {
+        f64::from_bits(self.incumbent_obj.load(AtOrd::Acquire))
+    }
+
+    /// Offer a candidate incumbent. Accepts strictly better objectives;
+    /// exact ties go to the smaller node id so the chosen point is
+    /// schedule-independent.
+    fn offer_incumbent(&self, x: Vec<f64>, obj: f64, id: u128) {
+        let mut inc = self.incumbent.lock().unwrap();
+        let better = match &*inc {
+            None => true,
+            Some(cur) => obj < cur.obj || (obj == cur.obj && id < cur.id),
+        };
+        if better {
+            *inc = Some(Incumbent { x, obj, id });
+            self.incumbent_obj.store(obj.to_bits(), AtOrd::Release);
+        }
+    }
+
+    /// Expand one node: solve its LP, update the incumbent or push
+    /// children. Runs entirely outside the frontier lock.
+    fn expand(&self, node: Node) {
+        let mut sub = self.relaxed.clone();
+        for &(vi, lb, ub) in &node.bounds {
+            sub.vars[vi].lb = lb;
+            sub.vars[vi].ub = ub;
+        }
+        let rel = simplex::solve(&sub);
+        match rel.status {
+            LpStatus::Optimal => {}
+            LpStatus::Infeasible => return, // genuinely pruned subtree
+            LpStatus::Unbounded | LpStatus::IterLimit => {
+                // Solver failure: the subtree is dropped UNEXPLORED, so its
+                // inherited bound must keep capping the reported bound —
+                // otherwise a later natural drain would claim Optimal (or
+                // Infeasible) over mass that was never searched.
+                let mut f = self.frontier.lock().unwrap();
+                f.lost_bound = f.lost_bound.min(node.bound);
+                return;
+            }
+        }
+        let inc_obj = self.incumbent_obj();
+        if inc_obj.is_finite()
+            && rel.obj >= inc_obj - self.limits.rel_gap * inc_obj.abs().max(1.0)
+        {
+            return; // dominated
+        }
+
+        // Find the most fractional integer variable.
+        let frac = self
+            .int_vars
+            .iter()
+            .map(|&vi| (vi, (rel.x[vi] - rel.x[vi].round()).abs()))
+            .filter(|(_, f)| *f > INT_TOL)
+            .max_by(|a, b| a.1.total_cmp(&b.1));
+
+        match frac {
+            None => {
+                // Integer feasible: candidate incumbent.
+                self.offer_incumbent(rel.x, rel.obj, node.id);
+            }
+            Some((vi, _)) => {
+                // Rounding heuristic for an early incumbent: fix ints to the
+                // rounded LP values and re-solve the continuous rest. Only
+                // the root tries this, so it runs exactly once per solve.
+                if node.depth == 0 && !self.incumbent_obj().is_finite() {
+                    if let Some(cand) = round_and_repair(&self.problem, &rel.x, &self.int_vars) {
+                        let obj = self.problem.objective_value(&cand);
+                        self.offer_incumbent(cand, obj, node.id);
+                    }
+                }
+                let xv = rel.x[vi];
+                let (lb, ub) = (sub.vars[vi].lb, sub.vars[vi].ub);
+                let mut children = Vec::with_capacity(2);
+                // Down child: x <= floor.
+                if xv.floor() >= lb - INT_TOL {
+                    let mut bs = node.bounds.clone();
+                    bs.push((vi, lb, xv.floor()));
+                    children.push(Node {
+                        bound: rel.obj,
+                        id: node.child_id(0),
+                        bounds: bs,
+                        depth: node.depth + 1,
+                    });
+                }
+                // Up child: x >= ceil.
+                if xv.ceil() <= ub + INT_TOL {
+                    let mut bs = node.bounds.clone();
+                    bs.push((vi, xv.ceil(), ub));
+                    children.push(Node {
+                        bound: rel.obj,
+                        id: node.child_id(1),
+                        bounds: bs,
+                        depth: node.depth + 1,
+                    });
+                }
+                let mut f = self.frontier.lock().unwrap();
+                for c in children {
+                    f.heap.push(c);
+                }
+            }
+        }
+    }
+
+    /// One worker: pop best-bound nodes until the frontier drains or a
+    /// termination condition fires.
+    fn worker_loop(&self, w: usize) {
+        loop {
+            let node = {
+                let mut f = self.frontier.lock().unwrap();
+                if f.stop.is_some() {
+                    break;
+                }
+                let Some(node) = f.heap.pop() else {
+                    if f.in_flight.iter().all(Option::is_none) {
+                        break; // frontier fully drained: search exhausted
+                    }
+                    // Peer panics clear their marker (and stop the search)
+                    // via the InFlight guard; the time limit is a last
+                    // backstop so this wait can never spin forever even if
+                    // a marker somehow fails to retire.
+                    if self.start.elapsed().as_secs_f64() > self.limits.time_limit_secs {
+                        let global_bound = f
+                            .in_flight
+                            .iter()
+                            .flatten()
+                            .fold(f64::INFINITY, |acc, &b| acc.min(b));
+                        f.stop = Some(Stop::Budget);
+                        f.stop_bound = global_bound;
+                        break;
+                    }
+                    // Peers are still expanding nodes that may push new
+                    // children; wait off-lock.
+                    drop(f);
+                    std::thread::sleep(Duration::from_micros(50));
+                    continue;
+                };
+                // Global lower bound: the popped node (heap minimum) vs
+                // whatever peers are still expanding.
+                let global_bound = f
+                    .in_flight
+                    .iter()
+                    .flatten()
+                    .fold(node.bound, |acc, &b| acc.min(b));
+                let inc_obj = self.incumbent_obj();
+                if inc_obj.is_finite()
+                    && (global_bound >= inc_obj
+                        || gap_of(inc_obj, global_bound) <= self.limits.rel_gap)
+                {
+                    // Everything left is proven within tolerance.
+                    f.stop = Some(Stop::Proven);
+                    f.stop_bound = global_bound.min(inc_obj);
+                    break;
+                }
+                if f.nodes >= self.limits.max_nodes
+                    || self.start.elapsed().as_secs_f64() > self.limits.time_limit_secs
+                {
+                    f.stop = Some(Stop::Budget);
+                    f.stop_bound = global_bound;
+                    break;
+                }
+                f.nodes += 1;
+                f.in_flight[w] = Some(node.bound);
+                node
+            };
+            let _marker = InFlight { search: self, w };
+            self.expand(node);
+        }
+    }
+}
+
+/// Clears a worker's in-flight marker when expansion finishes — including
+/// by panic, so peers never wait on a bound that will not retire. A panic
+/// also marks the whole search as failed: the node's subtree is lost, so a
+/// clean "Optimal" from the natural-drain path would be a silent wrong
+/// answer (the pool's `catch_unwind` keeps the worker alive, so nothing
+/// else would surface it).
+struct InFlight<'a> {
+    search: &'a Search,
+    w: usize,
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        let panicked = std::thread::panicking();
+        if let Ok(mut f) = self.search.frontier.lock() {
+            f.in_flight[self.w] = None;
+            if panicked {
+                // An abandoned subtree leaves nothing provable below the
+                // incumbent: force a budget-style stop with a -inf bound so
+                // the result reports Feasible/Unknown, never Optimal.
+                f.stop = Some(Stop::Budget);
+                f.stop_bound = f64::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+/// Solve a mixed-integer problem by branch & bound (sequential or
+/// parallel per [`BnbLimits::workers`]).
 pub fn solve(p: &Problem, limits: &BnbLimits) -> MilpSolution {
     let start = Instant::now();
-    let int_vars = p.int_vars();
+    let workers = limits.workers.max(1);
 
-    // Root relaxation.
+    // Root relaxation (solved on the caller thread: cheap early exits).
     let root = simplex::solve(&p.relaxed());
     match root.status {
         LpStatus::Infeasible => {
@@ -129,107 +432,71 @@ pub fn solve(p: &Problem, limits: &BnbLimits) -> MilpSolution {
         LpStatus::Optimal => {}
     }
 
-    let mut incumbent: Option<(Vec<f64>, f64)> = None;
     let mut heap = BinaryHeap::new();
-    heap.push(Node { bound: root.obj, bounds: vec![], depth: 0 });
-    let mut nodes = 0usize;
-    let mut best_bound = root.obj;
+    heap.push(Node { bound: root.obj, id: 1, bounds: vec![], depth: 0 });
+    let search = Arc::new(Search {
+        problem: p.clone(),
+        relaxed: p.relaxed(),
+        int_vars: p.int_vars(),
+        limits: BnbLimits { workers, ..limits.clone() },
+        start,
+        frontier: Mutex::new(Frontier {
+            heap,
+            in_flight: vec![None; workers],
+            nodes: 0,
+            stop: None,
+            stop_bound: root.obj,
+            lost_bound: f64::INFINITY,
+        }),
+        incumbent: Mutex::new(None),
+        incumbent_obj: AtomicU64::new(f64::INFINITY.to_bits()),
+    });
 
-    while let Some(node) = heap.pop() {
-        nodes += 1;
-        best_bound = node.bound; // best-first: heap top is the global bound
-        if let Some((_, inc_obj)) = &incumbent {
-            if gap_of(*inc_obj, node.bound) <= limits.rel_gap {
-                break; // proven within tolerance
-            }
+    if workers == 1 {
+        search.worker_loop(0);
+    } else {
+        let pool = ThreadPool::new(workers);
+        for w in 0..workers {
+            let s = Arc::clone(&search);
+            pool.execute(move || s.worker_loop(w));
         }
-        if nodes > limits.max_nodes || start.elapsed().as_secs_f64() > limits.time_limit_secs {
-            break;
-        }
-
-        // Re-solve this node's LP (bounds applied to a clone of the root).
-        let mut sub = p.relaxed();
-        for &(vi, lb, ub) in &node.bounds {
-            sub.vars[vi].lb = lb;
-            sub.vars[vi].ub = ub;
-        }
-        let rel = simplex::solve(&sub);
-        if rel.status != LpStatus::Optimal {
-            continue; // infeasible subtree (or solver failure: safe to drop —
-                      // bound-wise we only ever *under*-report progress)
-        }
-        if let Some((_, inc_obj)) = &incumbent {
-            if rel.obj >= *inc_obj - limits.rel_gap * inc_obj.abs().max(1.0) {
-                continue; // dominated
-            }
-        }
-
-        // Find the most fractional integer variable.
-        let frac = int_vars
-            .iter()
-            .map(|&vi| (vi, (rel.x[vi] - rel.x[vi].round()).abs()))
-            .filter(|(_, f)| *f > INT_TOL)
-            .max_by(|a, b| a.1.total_cmp(&b.1));
-
-        match frac {
-            None => {
-                // Integer feasible: candidate incumbent.
-                if incumbent.as_ref().map(|(_, o)| rel.obj < *o).unwrap_or(true) {
-                    incumbent = Some((rel.x.clone(), rel.obj));
-                }
-            }
-            Some((vi, _)) => {
-                // Rounding heuristic for an early incumbent: fix ints to the
-                // rounded LP values and re-solve the continuous rest.
-                if incumbent.is_none() && node.depth == 0 {
-                    if let Some(cand) = round_and_repair(p, &rel.x, &int_vars) {
-                        let obj = p.objective_value(&cand);
-                        incumbent = Some((cand, obj));
-                    }
-                }
-                let xv = rel.x[vi];
-                let (lb, ub) = (sub.vars[vi].lb, sub.vars[vi].ub);
-                // Down child: x <= floor.
-                if xv.floor() >= lb - INT_TOL {
-                    let mut bs = node.bounds.clone();
-                    bs.push((vi, lb, xv.floor()));
-                    heap.push(Node { bound: rel.obj, bounds: bs, depth: node.depth + 1 });
-                }
-                // Up child: x >= ceil.
-                if xv.ceil() <= ub + INT_TOL {
-                    let mut bs = node.bounds.clone();
-                    bs.push((vi, xv.ceil(), ub));
-                    heap.push(Node { bound: rel.obj, bounds: bs, depth: node.depth + 1 });
-                }
-            }
-        }
+        drop(pool); // join all workers
     }
 
-    if heap.is_empty() {
-        // Search exhausted: the bound equals the incumbent (or the problem
-        // has no integer-feasible point).
-        if let Some((_, obj)) = &incumbent {
-            best_bound = *obj;
-        }
-    }
-
+    // Assemble the result from the final shared state.
+    let frontier = search.frontier.lock().unwrap();
+    let incumbent = search.incumbent.lock().unwrap().take();
+    let nodes = frontier.nodes;
     match incumbent {
-        Some((x, obj)) => {
-            let gap = gap_of(obj, best_bound);
-            let status = if gap <= limits.rel_gap {
+        Some(inc) => {
+            let bound = match frontier.stop {
+                // Natural drain: proven optimal, unless a subtree was lost.
+                None => inc.obj,
+                Some(_) => frontier.stop_bound.min(inc.obj),
+            };
+            let bound = bound.min(frontier.lost_bound);
+            let gap = gap_of(inc.obj, bound);
+            let status = if gap <= search.limits.rel_gap {
                 MilpStatus::Optimal
             } else {
                 MilpStatus::Feasible
             };
-            MilpSolution { status, x, obj, bound: best_bound, gap, nodes }
+            MilpSolution { status, x: inc.x, obj: inc.obj, bound, gap, nodes }
         }
         None => {
-            let exhausted = heap.is_empty() && nodes <= limits.max_nodes;
+            // Infeasibility is only proven by a drain with no lost subtrees.
+            let exhausted = frontier.stop.is_none() && frontier.lost_bound == f64::INFINITY;
             MilpSolution {
                 status: if exhausted { MilpStatus::Infeasible } else { MilpStatus::Unknown },
                 x: vec![],
                 obj: f64::INFINITY,
-                bound: best_bound,
+                bound: if exhausted {
+                    f64::INFINITY
+                } else if frontier.stop.is_none() {
+                    frontier.lost_bound
+                } else {
+                    frontier.stop_bound.min(frontier.lost_bound)
+                },
                 gap: f64::INFINITY,
                 nodes,
             }
@@ -300,6 +567,22 @@ mod tests {
     }
 
     #[test]
+    fn knapsack_small_parallel_matches() {
+        let mut p = Problem::new();
+        let a = p.bin("a");
+        let b = p.bin("b");
+        let c = p.bin("c");
+        p.constrain(vec![(a, 3.0), (b, 4.0), (c, 2.0)], Cmp::Le, 6.0);
+        p.minimize(vec![(a, -10.0), (b, -13.0), (c, -7.0)]);
+        let seq = solve(&p, &BnbLimits { rel_gap: 0.0, ..limits() });
+        let par = solve(&p, &BnbLimits { rel_gap: 0.0, workers: 4, ..limits() });
+        assert_eq!(seq.status, MilpStatus::Optimal);
+        assert_eq!(par.status, MilpStatus::Optimal);
+        assert_eq!(seq.obj.to_bits(), par.obj.to_bits(), "{} vs {}", seq.obj, par.obj);
+        assert!(p.is_feasible(&par.x, 1e-6));
+    }
+
+    #[test]
     fn integer_rounding_is_not_assumed() {
         // Classic: LP optimum fractional, IP optimum far from rounding.
         // max y s.t. -x + y <= 0.5, x + y <= 3.5, x,y int >= 0.
@@ -321,8 +604,10 @@ mod tests {
         let x = p.int("x", 0.0, 10.0);
         p.constrain(vec![(x, 2.0)], Cmp::Eq, 1.0);
         p.minimize(vec![(x, 1.0)]);
-        let sol = solve(&p, &limits());
-        assert_eq!(sol.status, MilpStatus::Infeasible);
+        for workers in [1, 4] {
+            let sol = solve(&p, &BnbLimits { workers, ..limits() });
+            assert_eq!(sol.status, MilpStatus::Infeasible, "workers={workers}");
+        }
     }
 
     #[test]
@@ -362,10 +647,12 @@ mod tests {
         let b = p.bin("b");
         p.constrain(vec![(x, 1.0), (b, -2.0)], Cmp::Le, 3.0);
         p.minimize(vec![(x, -1.0), (b, -10.0)]);
-        let sol = solve(&p, &limits());
-        assert_eq!(sol.status, MilpStatus::Optimal);
-        assert!((sol.obj + 15.0).abs() < 1e-6);
-        assert!((sol.x[0] - 5.0).abs() < 1e-6);
+        for workers in [1, 3] {
+            let sol = solve(&p, &BnbLimits { workers, ..limits() });
+            assert_eq!(sol.status, MilpStatus::Optimal, "workers={workers}");
+            assert!((sol.obj + 15.0).abs() < 1e-6);
+            assert!((sol.x[0] - 5.0).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //!
 //! * [`lp`] — problem model (variables, bounds, constraints, objective);
 //! * [`simplex`] — dense two-phase primal simplex for LP relaxations;
-//! * [`branch_bound`] — generic best-first branch & bound with budgets and
-//!   gap reporting.
+//! * [`branch_bound`] — generic best-first branch & bound with budgets,
+//!   gap reporting, and an optional worker pool (`BnbLimits::workers`)
+//!   sharing one frontier; parallel and sequential runs return identical
+//!   objectives at `rel_gap = 0`.
 //!
 //! The paper-specific Eq. 4 partitioning MILP is formulated in
 //! `coordinator::partitioner::milp` on top of these pieces (with a

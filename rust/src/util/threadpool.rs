@@ -2,12 +2,23 @@
 //! concurrency needs — dispatch one worker per platform, join all — are
 //! well served by scoped OS threads with a bounded pool).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Decrements the pool's pending counter on drop — so a job that panics
+/// still retires from `pending()` while its worker unwinds.
+struct PendingGuard(Arc<AtomicUsize>);
+
+impl Drop for PendingGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 /// A fixed pool of worker threads consuming a shared job queue.
 pub struct ThreadPool {
@@ -33,8 +44,12 @@ impl ThreadPool {
                         let job = rx.lock().unwrap().recv();
                         match job {
                             Ok(job) => {
-                                job();
-                                queued.fetch_sub(1, Ordering::SeqCst);
+                                // A panicking job must neither kill this
+                                // worker nor leak the pending counter: the
+                                // guard decrements on unwind, catch_unwind
+                                // keeps the worker alive for the next job.
+                                let _guard = PendingGuard(Arc::clone(&queued));
+                                let _ = catch_unwind(AssertUnwindSafe(job));
                             }
                             Err(_) => break, // channel closed: shut down
                         }
@@ -153,6 +168,28 @@ mod tests {
     fn zero_size_clamps_to_one() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.workers(), 1);
+    }
+
+    #[test]
+    fn panicking_job_neither_leaks_pending_nor_kills_worker() {
+        // One worker, so the follow-up job can only run if the worker
+        // survived the panic.
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("boom (expected panic in test)"));
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        for _ in 0..400 {
+            if pool.pending() == 0 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(pool.pending(), 0, "panicking job leaked the pending counter");
+        assert_eq!(done.load(Ordering::SeqCst), 1, "worker died after a panicking job");
+        drop(pool);
     }
 
     #[test]

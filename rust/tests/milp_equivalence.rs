@@ -67,7 +67,7 @@ fn random_models(rng: &mut Rng, mu: usize, tau: usize) -> ModelSet {
 }
 
 fn tight_cfg() -> MilpConfig {
-    MilpConfig { max_nodes: 20_000, rel_gap: 1e-6, time_limit_secs: 30.0 }
+    MilpConfig { max_nodes: 20_000, rel_gap: 1e-6, time_limit_secs: 30.0, workers: 1 }
 }
 
 #[test]
@@ -78,7 +78,7 @@ fn unconstrained_matches_generic_solver() {
         let spec = MilpPartitioner::new(tight_cfg()).solve(&models, None).unwrap();
         let generic = milp::solve_milp(
             &full_formulation(&models, None),
-            &BnbLimits { max_nodes: 200_000, rel_gap: 1e-6, time_limit_secs: 60.0 },
+            &BnbLimits { max_nodes: 200_000, rel_gap: 1e-6, time_limit_secs: 60.0, workers: 1 },
         );
         assert_eq!(generic.status, MilpStatus::Optimal, "trial {trial}");
         let rel = (spec.makespan - generic.obj).abs() / generic.obj;
@@ -111,7 +111,7 @@ fn budgeted_matches_generic_solver() {
         };
         let generic = milp::solve_milp(
             &full_formulation(&models, Some(budget)),
-            &BnbLimits { max_nodes: 200_000, rel_gap: 1e-6, time_limit_secs: 60.0 },
+            &BnbLimits { max_nodes: 200_000, rel_gap: 1e-6, time_limit_secs: 60.0, workers: 1 },
         );
         if generic.status != MilpStatus::Optimal {
             continue; // generic solver budget exceeded; skip, don't fail

@@ -1,0 +1,92 @@
+//! Golden-value pricing tests: the closed-form Black-Scholes oracle
+//! (`pricing/blackscholes.rs`) against the native Monte Carlo pricer
+//! (`pricing/mc.rs`) on the Kaiserslautern-style paper workload, within
+//! 3σ standard-error bounds.
+//!
+//! Everything is seed-pinned through `util::rng` (the generator draws the
+//! tasks from seed 2015 — the paper workload — and the MC kernels are
+//! counter-based), so these are deterministic golden tests, not flaky
+//! statistical ones: the realised z-scores are fixed by the seeds. A small
+//! absolute cushion (±$0.02) on top of 3σ absorbs the f32 payoff
+//! quantisation of the kernel-mirroring MC path.
+
+use cloudshapes::pricing::{blackscholes, mc};
+use cloudshapes::workload::{generate, GeneratorConfig, Payoff};
+
+/// Seed for the MC counter streams (distinct from the generator seed so the
+/// draws are independent of the task parameters).
+const MC_SEED: u32 = 2015;
+
+#[test]
+fn european_kaiserslautern_options_match_black_scholes_within_3_sigma() {
+    // The paper workload: 128 tasks drawn from the Kaiserslautern ranges.
+    let w = generate(&GeneratorConfig::default());
+    let mut checked = 0;
+    for t in w.tasks.iter().filter(|t| t.payoff == Payoff::European).take(12) {
+        let est = mc::price(t, MC_SEED, 1 << 16);
+        let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        let tol = 3.0 * est.std_error + 0.02;
+        assert!(
+            (est.price - bs).abs() <= tol,
+            "task {}: mc {} ± {} vs closed form {bs} (|Δ| > 3σ + 0.02)",
+            t.id,
+            est.price,
+            est.std_error
+        );
+        assert!(est.std_error > 0.0 && est.n == 1 << 16);
+        checked += 1;
+    }
+    assert!(checked >= 8, "paper workload should contain European tasks, saw {checked}");
+}
+
+#[test]
+fn asian_kaiserslautern_options_bracketed_by_closed_forms_within_3_sigma() {
+    // No closed form for the arithmetic Asian — but Kemna-Vorst's geometric
+    // call is a strict lower bound and the European call an upper bound.
+    let w = generate(&GeneratorConfig::default());
+    let mut checked = 0;
+    for t in w.tasks.iter().filter(|t| t.payoff == Payoff::Asian).take(3) {
+        let est = mc::price(t, MC_SEED, 1 << 12);
+        let geo = blackscholes::geometric_asian_call(
+            t.spot, t.strike, t.rate, t.sigma, t.maturity, t.steps,
+        );
+        let eur = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(
+            est.price >= geo - 3.0 * est.std_error - 0.02,
+            "task {}: arithmetic Asian {} ± {} below geometric bound {geo}",
+            t.id,
+            est.price,
+            est.std_error
+        );
+        assert!(
+            est.price <= eur + 3.0 * est.std_error + 0.02,
+            "task {}: Asian {} ± {} above European bound {eur}",
+            t.id,
+            est.price,
+            est.std_error
+        );
+        checked += 1;
+    }
+    assert!(checked >= 1, "paper workload should contain Asian tasks");
+}
+
+#[test]
+fn barrier_kaiserslautern_options_stay_below_european_within_3_sigma() {
+    // An up-and-out barrier call is dominated by the European call.
+    let w = generate(&GeneratorConfig::default());
+    let mut checked = 0;
+    for t in w.tasks.iter().filter(|t| t.payoff == Payoff::Barrier).take(3) {
+        let est = mc::price(t, MC_SEED, 1 << 12);
+        let eur = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(
+            est.price <= eur + 3.0 * est.std_error + 0.02,
+            "task {}: barrier {} ± {} above European {eur}",
+            t.id,
+            est.price,
+            est.std_error
+        );
+        assert!(est.price >= 0.0);
+        checked += 1;
+    }
+    assert!(checked >= 1, "paper workload should contain Barrier tasks");
+}

@@ -8,9 +8,11 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use cloudshapes::api::SessionBuilder;
+use cloudshapes::api::{SessionBuilder, TradeoffSession};
 use cloudshapes::cli::serve::serve_until_shutdown;
+use cloudshapes::config::ExperimentConfig;
 use cloudshapes::coordinator::partitioner::MilpConfig;
+use cloudshapes::platforms::sim::SimConfig;
 use cloudshapes::util::json::Json;
 
 struct Server {
@@ -18,17 +20,38 @@ struct Server {
     handle: Option<std::thread::JoinHandle<cloudshapes::Result<()>>>,
 }
 
-fn start_server() -> Server {
-    let session = SessionBuilder::quick()
-        .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
-        .budget_sweep(3)
-        .build()
-        .unwrap();
+fn serve_session(session: TradeoffSession) -> Server {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let session = Arc::new(session);
     let handle = std::thread::spawn(move || serve_until_shutdown(listener, session));
     Server { addr, handle: Some(handle) }
+}
+
+fn start_server() -> Server {
+    serve_session(
+        SessionBuilder::quick()
+            .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
+            .budget_sweep(3)
+            .build()
+            .unwrap(),
+    )
+}
+
+/// A server whose simulated cluster is noise-free, so measured execution
+/// results are byte-reproducible — required for the cache-coherence
+/// assertions of the concurrency stress test.
+fn start_exact_server() -> Server {
+    let mut cluster = ExperimentConfig::quick().cluster;
+    cluster.sim = SimConfig::exact();
+    serve_session(
+        SessionBuilder::quick()
+            .cluster(cluster)
+            .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
+            .budget_sweep(3)
+            .build()
+            .unwrap(),
+    )
 }
 
 impl Server {
@@ -133,6 +156,78 @@ fn partition_and_pareto_roundtrip() {
     for p in points {
         assert!(p.get("latency_s").unwrap().as_f64().unwrap() > 0.0);
     }
+
+    server.shutdown();
+}
+
+#[test]
+fn eight_concurrent_clients_see_coherent_cached_results() {
+    // Noise-free simulation: identical allocations must produce identical
+    // measured results, byte for byte.
+    let server = start_exact_server();
+    let addr = server.addr;
+
+    // Every client issues the same op sequence on its own connection,
+    // concurrently. The shared session cache must hand all of them
+    // identical allocations (coherence), with no deadlock and no dropped
+    // connection.
+    const CLIENTS: usize = 8;
+    const REQS: [&str; 4] = [
+        r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":null}"#,
+        // Repeat: guaranteed partition-cache hit for this client.
+        r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":null}"#,
+        r#"{"v":1,"op":"pareto","partitioner":"heuristic"}"#,
+        r#"{"v":1,"op":"batch","partitioner":"heuristic","budgets":[null,1000000.0]}"#,
+    ];
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|client| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                REQS.iter()
+                    .map(|req| {
+                        stream.write_all(format!("{req}\n").as_bytes()).unwrap();
+                        let mut resp = String::new();
+                        reader.read_line(&mut resp).unwrap();
+                        assert!(!resp.is_empty(), "client {client}: dropped on {req}");
+                        let parsed = Json::parse(resp.trim())
+                            .unwrap_or_else(|e| panic!("client {client}: bad json {resp}: {e}"));
+                        assert_eq!(
+                            parsed.get("ok"),
+                            Some(&Json::Bool(true)),
+                            "client {client}: {req} -> {resp}"
+                        );
+                        resp.trim().to_string()
+                    })
+                    .collect::<Vec<String>>()
+            })
+        })
+        .collect();
+    let all: Vec<Vec<String>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Cache coherence: all clients observed byte-identical responses
+    // (allocations, predictions, measured execution — the executor is
+    // seed-deterministic; JSON serialization is key-ordered).
+    for (i, client) in all.iter().enumerate() {
+        assert_eq!(client, &all[0], "client {i} observed different results");
+    }
+    // And a client's repeated evaluate is identical to its first.
+    assert_eq!(all[0][0], all[0][1]);
+
+    // The counters prove sharing. Guaranteed even under full contention:
+    // each client's repeat-evaluate and its batch `null` entry hit the key
+    // that client itself populated earlier on the same connection.
+    let r = server.ask(r#"{"v":1,"op":"ping"}"#);
+    let cache = r.get("cache").unwrap();
+    let hits = cache.get("hits").unwrap().as_u64().unwrap();
+    let misses = cache.get("misses").unwrap().as_u64().unwrap();
+    assert!(hits >= 2 * CLIENTS as u64, "expected >= {} hits, got {hits}", 2 * CLIENTS);
+    // At worst every client raced every miss: 8x the 3 distinct solves.
+    assert!(misses <= (3 * CLIENTS) as u64, "implausible miss count {misses}");
+    assert!(
+        cache.get("partition_entries").unwrap().as_u64().unwrap() >= 2,
+        "null + 1e6 budgets should both be cached"
+    );
 
     server.shutdown();
 }

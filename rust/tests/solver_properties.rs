@@ -1,0 +1,160 @@
+//! Property tests for the MILP substrate via the in-tree `testing::prop`
+//! harness (seed-replayable, size-ramped):
+//!
+//! * `milp/simplex.rs` — generated feasible LPs must come back `Optimal`
+//!   with a primal-feasible point within tolerance;
+//! * `milp/branch_bound.rs` — parallel (multi-worker) runs must match
+//!   sequential runs **bit-for-bit** on objective and status at
+//!   `rel_gap = 0`, and both must match brute force on binary instances.
+
+use cloudshapes::milp::{self, BnbLimits, Cmp, LpStatus, MilpStatus, Problem};
+use cloudshapes::testing::prop::{prop_assert, prop_check, Gen};
+
+/// Packing-style LP: `x = 0` is always feasible (non-negative rows, positive
+/// rhs) and every variable has a finite upper bound, so the LP is bounded —
+/// the simplex must always report `Optimal`.
+fn feasible_packing_lp(g: &mut Gen) -> Problem {
+    let n = g.len(10);
+    let m = g.usize(1, 6);
+    let mut p = Problem::new();
+    let vars: Vec<_> = (0..n)
+        .map(|i| {
+            let ub = g.f64(0.5, 8.0);
+            p.cont(&format!("x{i}"), 0.0, ub)
+        })
+        .collect();
+    for _ in 0..m {
+        let terms: Vec<_> = vars.iter().map(|v| (*v, g.f64(0.0, 4.0))).collect();
+        p.constrain(terms, Cmp::Le, g.f64(0.5, 25.0));
+    }
+    p.minimize(vars.iter().map(|v| (*v, g.f64(-5.0, 5.0))).collect());
+    p
+}
+
+#[test]
+fn simplex_returns_primal_feasible_optima_on_generated_lps() {
+    prop_check("simplex primal feasibility", 150, |g| {
+        let p = feasible_packing_lp(g);
+        let sol = milp::solve_lp(&p);
+        prop_assert(sol.status == LpStatus::Optimal, &format!("status {:?}", sol.status))?;
+        prop_assert(
+            p.is_feasible(&sol.x, 1e-6),
+            &format!("infeasible point {:?}", sol.x),
+        )?;
+        // x = 0 scores 0, so the minimum can't be positive.
+        prop_assert(sol.obj <= 1e-9, &format!("obj {} above the x=0 value", sol.obj))?;
+        prop_assert(
+            (sol.obj - p.objective_value(&sol.x)).abs() <= 1e-9,
+            "reported obj disagrees with the point",
+        )
+    });
+}
+
+/// Binary knapsack-style MILP with mixed-sign costs. Always feasible
+/// (empty selection) and bounded.
+fn random_binary_milp(g: &mut Gen) -> (Problem, Vec<f64>, Vec<f64>, f64) {
+    let n = g.usize(3, 9);
+    let mut p = Problem::new();
+    let vars: Vec<_> = (0..n).map(|i| p.bin(&format!("b{i}"))).collect();
+    let w: Vec<f64> = (0..n).map(|_| g.f64(1.0, 5.0)).collect();
+    let c: Vec<f64> = (0..n).map(|_| g.f64(-5.0, 5.0)).collect();
+    let cap = g.f64(2.0, 14.0);
+    p.constrain(vars.iter().zip(&w).map(|(b, w)| (*b, *w)).collect(), Cmp::Le, cap);
+    p.minimize(vars.iter().zip(&c).map(|(b, c)| (*b, *c)).collect());
+    (p, w, c, cap)
+}
+
+/// Bounded mixed-integer problem (ints with small ranges + continuous
+/// vars), packing-style so `x = 0` stays feasible.
+fn random_mixed_milp(g: &mut Gen) -> Problem {
+    let n_int = g.usize(2, 6);
+    let n_cont = g.usize(1, 3);
+    let mut p = Problem::new();
+    let mut vars = Vec::new();
+    for i in 0..n_int {
+        let ub = g.usize(1, 4) as f64;
+        vars.push(p.int(&format!("z{i}"), 0.0, ub));
+    }
+    for i in 0..n_cont {
+        let ub = g.f64(0.5, 6.0);
+        vars.push(p.cont(&format!("x{i}"), 0.0, ub));
+    }
+    for _ in 0..g.usize(1, 4) {
+        let terms: Vec<_> = vars.iter().map(|v| (*v, g.f64(0.0, 3.0))).collect();
+        p.constrain(terms, Cmp::Le, g.f64(1.0, 20.0));
+    }
+    p.minimize(vars.iter().map(|v| (*v, g.f64(-4.0, 4.0))).collect());
+    p
+}
+
+fn exact_limits(workers: usize) -> BnbLimits {
+    BnbLimits { max_nodes: 500_000, rel_gap: 0.0, time_limit_secs: 60.0, workers }
+}
+
+/// Parallel == sequential (bit-for-bit objective) and == brute force.
+#[test]
+fn parallel_branch_bound_matches_sequential_and_bruteforce_on_binaries() {
+    prop_check("bnb parallel == sequential (binary)", 30, |g| {
+        let (p, w, c, cap) = random_binary_milp(g);
+        let seq = milp::solve_milp(&p, &exact_limits(1));
+        let par = milp::solve_milp(&p, &exact_limits(4));
+        prop_assert(seq.status == MilpStatus::Optimal, &format!("seq {:?}", seq.status))?;
+        prop_assert(par.status == MilpStatus::Optimal, &format!("par {:?}", par.status))?;
+        prop_assert(
+            (seq.obj + 0.0).to_bits() == (par.obj + 0.0).to_bits(),
+            &format!("objective mismatch: seq {} vs par {}", seq.obj, par.obj),
+        )?;
+        prop_assert(p.is_feasible(&par.x, 1e-6), "parallel point infeasible")?;
+        prop_assert(p.is_feasible(&seq.x, 1e-6), "sequential point infeasible")?;
+        // Independent oracle: enumerate all subsets.
+        let n = w.len();
+        let mut best = f64::INFINITY;
+        for mask in 0..(1u32 << n) {
+            let weight: f64 = (0..n).filter(|i| mask >> i & 1 == 1).map(|i| w[i]).sum();
+            if weight <= cap {
+                let cost: f64 = (0..n).filter(|i| mask >> i & 1 == 1).map(|i| c[i]).sum();
+                best = best.min(cost);
+            }
+        }
+        prop_assert(
+            (seq.obj - best).abs() < 1e-6,
+            &format!("solver {} vs brute force {best}", seq.obj),
+        )
+    });
+}
+
+#[test]
+fn parallel_branch_bound_matches_sequential_on_mixed_integers() {
+    prop_check("bnb parallel == sequential (mixed)", 25, |g| {
+        let p = random_mixed_milp(g);
+        let seq = milp::solve_milp(&p, &exact_limits(1));
+        let par = milp::solve_milp(&p, &exact_limits(3));
+        prop_assert(
+            seq.status == par.status,
+            &format!("status mismatch: {:?} vs {:?}", seq.status, par.status),
+        )?;
+        prop_assert(seq.status == MilpStatus::Optimal, &format!("seq {:?}", seq.status))?;
+        prop_assert(
+            (seq.obj + 0.0).to_bits() == (par.obj + 0.0).to_bits(),
+            &format!("objective mismatch: seq {} vs par {}", seq.obj, par.obj),
+        )?;
+        prop_assert(p.is_feasible(&par.x, 1e-6), "parallel point infeasible")
+    });
+}
+
+/// The proven lower bound never exceeds the incumbent, sequential or not.
+#[test]
+fn bound_sandwiches_incumbent_across_worker_counts() {
+    prop_check("bnb bound <= obj", 25, |g| {
+        let (p, _, _, _) = random_binary_milp(g);
+        for workers in [1, 2, 4] {
+            let sol = milp::solve_milp(&p, &exact_limits(workers));
+            prop_assert(
+                sol.bound <= sol.obj + 1e-9,
+                &format!("workers {workers}: bound {} above obj {}", sol.bound, sol.obj),
+            )?;
+            prop_assert(sol.gap <= 1e-12, &format!("workers {workers}: gap {}", sol.gap))?;
+        }
+        Ok(())
+    });
+}
