@@ -1,37 +1,123 @@
-//! Perf: cluster executor + benchmarker throughput (virtual-clock dispatch),
-//! and the native-mirror Monte Carlo kernel's paths/second.
+//! Perf: the cluster executor — static (one-shot) vs chunked vs
+//! chunked+rebalance on the paper workload (noise-free sim), a straggler
+//! recovery scenario, and the native-mirror Monte Carlo kernel's
+//! paths/second. Emits `results/BENCH_executor.json` so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Pass `--smoke` (the CI mode) to shrink the workload so the bench acts as
+//! a fast equivalence/regression gate rather than a measurement session.
 
 mod common;
 
-use cloudshapes::coordinator::executor::{execute, ExecutorConfig};
-use cloudshapes::coordinator::{benchmark, BenchmarkConfig, HeuristicPartitioner, ModelSet};
-use cloudshapes::platforms::spec::paper_cluster;
-use cloudshapes::platforms::{Cluster, SimConfig};
+use std::sync::Arc;
+
+use cloudshapes::coordinator::executor::{
+    execute, execute_static, execute_with, ExecutorConfig, RebalanceConfig,
+};
+use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet};
+use cloudshapes::platforms::spec::{paper_cluster, small_cluster};
+use cloudshapes::platforms::{Cluster, Platform, SimConfig, SimPlatform};
 use cloudshapes::pricing::mc;
+use cloudshapes::util::json::{obj, Json};
 use cloudshapes::workload::{generate, GeneratorConfig, Payoff};
 
 fn main() {
-    let specs = paper_cluster();
-    let cfg = SimConfig { stats_cap: 2048, ..SimConfig::default() };
-    let cluster = Cluster::simulated(&specs, &cfg, 42);
-    let workload = generate(&GeneratorConfig::default());
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let runs = if smoke { 1 } else { 5 };
+    let specs = if smoke { small_cluster() } else { paper_cluster() };
+    let sim = SimConfig { stats_cap: 2048, ..SimConfig::exact() }; // noise-free
+    let cluster = Cluster::simulated(&specs, &sim, 42);
+    let workload = if smoke {
+        generate(&GeneratorConfig::small(16, 0.02, 7))
+    } else {
+        generate(&GeneratorConfig::default()) // the 128-task paper workload
+    };
     let models = ModelSet::from_specs(&specs, &workload);
     let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let chunk_sims = if smoke { 1 << 15 } else { 1 << 22 };
 
-    println!("== perf: executor (16 platforms x 128 tasks, virtual clock) ==");
-    let med = common::measure("execute full allocation", 5, || {
-        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+    let static_cfg = ExecutorConfig::default();
+    let chunked_cfg = ExecutorConfig {
+        chunk_sims,
+        rebalance: RebalanceConfig { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let rebalance_cfg = ExecutorConfig {
+        rebalance: RebalanceConfig { enabled: true, ..Default::default() },
+        ..chunked_cfg.clone()
+    };
+
+    println!(
+        "== perf: executor ({} platforms x {} tasks, virtual clock) ==",
+        cluster.len(),
+        workload.len()
+    );
+    let rs = execute_static(&cluster, &workload, &alloc, &static_cfg).unwrap();
+    let rc = execute(&cluster, &workload, &alloc, &chunked_cfg).unwrap();
+    // Regression gate: the chunked scheduler must reproduce the one-shot
+    // report under a noise-free simulator.
+    assert_eq!(rc.failures, 0);
+    assert!(
+        (rs.makespan_secs - rc.makespan_secs).abs() < 1e-9 * rs.makespan_secs.max(1.0),
+        "chunked makespan {} drifted from static {}",
+        rc.makespan_secs,
+        rs.makespan_secs
+    );
+    let wall_static = common::measure("execute: static (one-shot slices)", runs, || {
+        let rep = execute_static(&cluster, &workload, &alloc, &static_cfg).unwrap();
         assert_eq!(rep.failures, 0);
     });
-    let slices: usize = (0..workload.len())
-        .map(|j| (0..cluster.len()).filter(|&i| alloc.get(i, j) > 1e-6).count())
-        .sum();
-    println!("        -> {slices} slices, {:.0} slices/s", slices as f64 / med);
-
-    println!("\n== perf: benchmarker (16x128 ladder) ==");
-    common::measure("benchmark full cluster", 3, || {
-        benchmark(&cluster, &workload, &BenchmarkConfig::default());
+    let wall_chunked = common::measure("execute: chunked event loop", runs, || {
+        let rep = execute(&cluster, &workload, &alloc, &chunked_cfg).unwrap();
+        assert_eq!(rep.failures, 0);
     });
+    let wall_rebalance = common::measure("execute: chunked + rebalance checks", runs, || {
+        let rep = execute(&cluster, &workload, &alloc, &rebalance_cfg).unwrap();
+        assert_eq!(rep.failures, 0);
+    });
+    println!(
+        "        -> {} slices as {} chunks, {:.0} chunks/s",
+        rs.chunks,
+        rc.chunks,
+        rc.chunks as f64 / wall_chunked
+    );
+
+    // Straggler recovery: one platform secretly 5x slower than its model —
+    // the realised-makespan gap is the executor's adaptivity headline.
+    println!("\n== perf: straggler recovery (hidden 5x lane) ==");
+    let straggler = specs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.app_gflops.total_cmp(&b.1.app_gflops))
+        .map(|(i, _)| i)
+        .unwrap();
+    let slow_cluster = Cluster::new(
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| -> Arc<dyn Platform> {
+                if i == straggler {
+                    let seed = 42 + i as u64;
+                    Arc::new(SimPlatform::with_hidden_factor(s.clone(), sim.clone(), seed, 5.0))
+                } else {
+                    Arc::new(SimPlatform::new(s.clone(), sim.clone(), 42 + i as u64))
+                }
+            })
+            .collect(),
+    );
+    let slow_static = execute_static(&slow_cluster, &workload, &alloc, &static_cfg).unwrap();
+    let small_chunks = ExecutorConfig { chunk_sims: chunk_sims / 4, ..rebalance_cfg.clone() };
+    let slow_rebalanced =
+        execute_with(&slow_cluster, &workload, &alloc, &small_chunks, Some(&models), &mut |_| {})
+            .unwrap();
+    println!(
+        "[perf] straggler makespan: static {:.1}s -> rebalanced {:.1}s \
+         ({} migrations, {:.0}% of static)",
+        slow_static.makespan_secs,
+        slow_rebalanced.makespan_secs,
+        slow_rebalanced.migrations,
+        100.0 * slow_rebalanced.makespan_secs / slow_static.makespan_secs
+    );
 
     println!("\n== perf: native Threefry MC mirror ==");
     let task = workload
@@ -41,7 +127,7 @@ fn main() {
         .expect("european task")
         .clone();
     let n = 1 << 20;
-    let med = common::measure(&format!("simulate {n} european paths"), 5, || {
+    let med = common::measure(&format!("simulate {n} european paths"), runs, || {
         mc::simulate(&task, 1, 0, n);
     });
     println!("        -> {:.1} Mpaths/s", n as f64 / med / 1e6);
@@ -49,13 +135,34 @@ fn main() {
     let mut asian = task.clone();
     asian.payoff = Payoff::Asian;
     asian.steps = 64;
-    let n = 1 << 14;
-    let med = common::measure(&format!("simulate {n} asian-64 paths"), 5, || {
-        mc::simulate(&asian, 1, 0, n);
+    let n_asian = 1 << 14;
+    let med_asian = common::measure(&format!("simulate {n_asian} asian-64 paths"), runs, || {
+        mc::simulate(&asian, 1, 0, n_asian);
     });
     println!(
         "        -> {:.1} Mpath-steps/s",
-        n as f64 * 64.0 / med / 1e6
+        n_asian as f64 * 64.0 / med_asian / 1e6
     );
+
+    let json = obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("platforms", cluster.len().into()),
+        ("tasks", workload.len().into()),
+        ("slices", rs.chunks.into()),
+        ("chunks", rc.chunks.into()),
+        ("static_wall_s", wall_static.into()),
+        ("chunked_wall_s", wall_chunked.into()),
+        ("rebalance_wall_s", wall_rebalance.into()),
+        ("makespan_s", rs.makespan_secs.into()),
+        ("straggler_static_makespan_s", slow_static.makespan_secs.into()),
+        ("straggler_rebalanced_makespan_s", slow_rebalanced.makespan_secs.into()),
+        ("straggler_migrations", slow_rebalanced.migrations.into()),
+        ("mc_european_mpaths_per_s", (n as f64 / med / 1e6).into()),
+        (
+            "mc_asian64_mpath_steps_per_s",
+            (n_asian as f64 * 64.0 / med_asian / 1e6).into(),
+        ),
+    ]);
+    common::save("BENCH_executor.json", &json.to_string_pretty());
     println!("perf_executor bench OK");
 }

@@ -20,4 +20,7 @@ pub mod session;
 pub use error::{CloudshapesError, Result};
 pub use protocol::PROTOCOL_VERSION;
 pub use registry::{PartitionerFactory, PartitionerRegistry};
-pub use session::{CacheStats, Evaluation, PartitionSummary, SessionBuilder, TradeoffSession};
+pub use session::{
+    CacheStats, Evaluation, PartitionSummary, RunState, RunStatus, SessionBuilder,
+    TradeoffSession,
+};

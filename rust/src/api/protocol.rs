@@ -11,6 +11,9 @@
 //! {"v":1,"op":"evaluate","budget":2.5}              # partition + execute
 //! {"v":1,"op":"pareto","partitioner":"heuristic"}   # trade-off curve
 //! {"v":1,"op":"batch","budgets":[1.0,2.5,null]}     # one solve per budget
+//! {"v":1,"op":"run","budget":2.5}                   # background execution
+//! {"v":1,"op":"run","budget":2.5,"stream":true}     # inline event stream
+//! {"v":1,"op":"status","run_id":3}                  # poll a background run
 //! {"v":1,"op":"shutdown"}
 //! ```
 //!
@@ -39,6 +42,22 @@
 //!       "predicted_latency_s":41.2,"predicted_cost":2.31,"platforms_used":3},
 //!      {"ok":false,"error":{"kind":"solver","message":"MILP: no feasible ..."}}]}
 //! ```
+//!
+//! `run` starts a chunked execution. Without `stream` it returns
+//! immediately with a `run_id`; `status` polls the run's progress counters
+//! (chunks done, retries, straggler migrations, tasks priced) and, once
+//! done, its measured makespan/cost. With `"stream":true` the server
+//! instead writes interim event lines — each `{"v":1,"event":...}`, never
+//! carrying an `"ok"` key — on the same connection, terminated by the
+//! normal `{"v":1,"ok":true,...}` result:
+//!
+//! ```text
+//! -> {"v":1,"op":"run","budget":null,"stream":true}
+//! <- {"v":1,"event":"started","chunks":24,"tasks":8}
+//! <- {"v":1,"event":"progress","done":12,"total":24}
+//! <- {"v":1,"event":"task_priced","task":3,"price":7.81,"std_error":0.04,"partial":false}
+//! <- {"v":1,"ok":true,"measured_latency_s":41.2,"measured_cost":2.31,...}
+//! ```
 
 use crate::util::json::{obj, Json};
 
@@ -65,6 +84,11 @@ pub enum Request {
     Pareto { partitioner: Option<String> },
     /// Partition at every budget of a list; one result entry per budget.
     Batch { partitioner: Option<String>, budgets: Vec<Option<f64>> },
+    /// Start a chunked execution: background (poll with `Status`) or, with
+    /// `stream`, inline event lines on this connection.
+    Run { partitioner: Option<String>, budget: Option<f64>, stream: bool },
+    /// Poll a background run's progress / final result.
+    Status { run_id: u64 },
     /// Stop the server (the in-flight response is still delivered).
     Shutdown,
 }
@@ -114,10 +138,32 @@ impl Request {
                 let budgets = batch_budgets(&req)?;
                 Ok(Request::Batch { partitioner, budgets })
             }
+            "run" => {
+                let (partitioner, budget) = partition_fields(&req, op)?;
+                let stream = match req.get("stream") {
+                    None | Some(Json::Null) => false,
+                    Some(v) => v.as_bool().ok_or_else(|| {
+                        CloudshapesError::protocol("'stream' must be a boolean")
+                    })?,
+                };
+                Ok(Request::Run { partitioner, budget, stream })
+            }
+            "status" => {
+                let run_id = req
+                    .get("run_id")
+                    .ok_or_else(|| {
+                        CloudshapesError::protocol("op 'status' requires 'run_id' (an integer)")
+                    })?
+                    .as_u64()
+                    .ok_or_else(|| {
+                        CloudshapesError::protocol("'run_id' must be a non-negative integer")
+                    })?;
+                Ok(Request::Status { run_id })
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(CloudshapesError::protocol(format!(
                 "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, batch, \
-                 shutdown)"
+                 run, status, shutdown)"
             ))),
         }
     }
@@ -231,7 +277,32 @@ mod tests {
                 budgets: vec![Some(1.5), None, Some(2.0)],
             }
         );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"run","budget":2.5}"#).unwrap(),
+            Request::Run { partitioner: None, budget: Some(2.5), stream: false }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"run","budget":null,"stream":true}"#).unwrap(),
+            Request::Run { partitioner: None, budget: None, stream: true }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"status","run_id":7}"#).unwrap(),
+            Request::Status { run_id: 7 }
+        );
         assert_eq!(Request::parse(r#"{"v":1,"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn run_and_status_validation() {
+        for bad in [
+            r#"{"v":1,"op":"run"}"#,                        // missing budget
+            r#"{"v":1,"op":"run","budget":1,"stream":3}"#,  // bad stream type
+            r#"{"v":1,"op":"status"}"#,                     // missing run_id
+            r#"{"v":1,"op":"status","run_id":"x"}"#,        // bad run_id type
+        ] {
+            let e = Request::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "protocol", "{bad} -> {e}");
+        }
     }
 
     #[test]

@@ -33,7 +33,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{ClusterConfig, ExperimentConfig};
-use crate::coordinator::executor::{execute, ExecutionReport, ExecutorConfig};
+use crate::coordinator::executor::{
+    execute_with, ExecEvent, ExecutionReport, ExecutorConfig,
+};
 use crate::coordinator::partitioner::MilpConfig;
 use crate::coordinator::{sweep, Allocation, ModelSet, Partitioner, SweepConfig, TradeoffCurve};
 use crate::report::Experiment;
@@ -76,6 +78,90 @@ pub struct CacheStats {
     pub partition_entries: usize,
     /// Distinct memoized trade-off curves.
     pub pareto_entries: usize,
+}
+
+/// Lifecycle of a background run started with
+/// [`TradeoffSession::start_run`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunState {
+    Running,
+    Done,
+    /// The executor errored; the message is the typed error's display.
+    Failed(String),
+}
+
+/// Progress snapshot of a background run (the serve `status` op's payload).
+#[derive(Debug, Clone)]
+pub struct RunStatus {
+    pub id: u64,
+    pub state: RunState,
+    pub partitioner: String,
+    pub budget: Option<f64>,
+    pub chunks_done: usize,
+    pub chunks_total: usize,
+    pub tasks_priced: usize,
+    pub tasks_total: usize,
+    pub failures: usize,
+    pub retries: usize,
+    pub migrations: usize,
+    /// Final measurements, present once `state` is `Done`.
+    pub makespan_secs: Option<f64>,
+    pub cost: Option<f64>,
+}
+
+/// Mutable slot a background run's executor thread reports into.
+struct RunSlot {
+    status: RunStatus,
+}
+
+/// Background runs keyed by id. Finished runs are evicted oldest-first past
+/// [`MAX_TRACKED_RUNS`]; when the cap is reached with every tracked run
+/// still executing, new runs are refused — a serve client hammering `run`
+/// cannot grow the thread count or the map without bound.
+struct RunManager {
+    runs: Mutex<HashMap<u64, Arc<Mutex<RunSlot>>>>,
+    next_id: AtomicU64,
+}
+
+/// Upper bound on tracked runs (running ones are never evicted).
+const MAX_TRACKED_RUNS: usize = 64;
+
+impl RunManager {
+    fn new() -> RunManager {
+        RunManager { runs: Mutex::new(HashMap::new()), next_id: AtomicU64::new(1) }
+    }
+
+    fn insert(&self, slot: Arc<Mutex<RunSlot>>) -> Result<u64> {
+        let mut runs = self.runs.lock().unwrap();
+        if runs.len() >= MAX_TRACKED_RUNS {
+            // Evict the oldest finished run (ids are monotone); with
+            // nothing finished the cap is a hard concurrency limit.
+            let victim = runs
+                .iter()
+                .filter(|(_, s)| s.lock().unwrap().status.state != RunState::Running)
+                .map(|(id, _)| *id)
+                .min();
+            match victim {
+                Some(v) => {
+                    runs.remove(&v);
+                }
+                None => {
+                    return Err(CloudshapesError::runtime(format!(
+                        "too many concurrent runs (max {MAX_TRACKED_RUNS}): poll 'status' \
+                         and retry once one finishes"
+                    )))
+                }
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        slot.lock().unwrap().status.id = id;
+        runs.insert(id, slot);
+        Ok(id)
+    }
+
+    fn get(&self, id: u64) -> Option<Arc<Mutex<RunSlot>>> {
+        self.runs.lock().unwrap().get(&id).cloned()
+    }
 }
 
 /// Cache keys quantize budgets to this resolution (dollars): budgets closer
@@ -257,6 +343,7 @@ impl SessionBuilder {
             registry: self.registry,
             default_partitioner: self.partitioner,
             cache: SolutionCache::new(),
+            runs: RunManager::new(),
         })
     }
 }
@@ -285,6 +372,7 @@ pub struct TradeoffSession {
     registry: PartitionerRegistry,
     default_partitioner: String,
     cache: SolutionCache,
+    runs: RunManager,
 }
 
 impl TradeoffSession {
@@ -412,25 +500,120 @@ impl TradeoffSession {
 
     /// As [`evaluate`](TradeoffSession::evaluate) with a named strategy.
     pub fn evaluate_with(&self, name: Option<&str>, budget: Option<f64>) -> Result<Evaluation> {
+        self.evaluate_with_events(name, budget, &mut |_| {})
+    }
+
+    /// As [`evaluate_with`](TradeoffSession::evaluate_with), streaming the
+    /// chunked executor's [`ExecEvent`]s to `on_event` (called on the
+    /// caller's thread) — the CLI `--watch` view and the serve protocol's
+    /// streaming `run` op consume this.
+    pub fn evaluate_with_events(
+        &self,
+        name: Option<&str>,
+        budget: Option<f64>,
+        on_event: &mut dyn FnMut(&ExecEvent),
+    ) -> Result<Evaluation> {
         let partition = self.partition_with(name, budget)?;
-        let execution = execute(
-            &self.experiment.cluster,
-            &self.experiment.workload,
-            &partition.alloc,
-            &self.experiment.config.executor,
-        )?;
+        let execution = self.execute_allocation_with(&partition.alloc, on_event)?;
         Ok(Evaluation { partition, execution })
     }
 
     /// Execute an externally-produced allocation (report generators use
     /// this to measure sweep points).
     pub fn execute_allocation(&self, alloc: &Allocation) -> Result<ExecutionReport> {
-        execute(
+        self.execute_allocation_with(alloc, &mut |_| {})
+    }
+
+    /// As [`execute_allocation`](Self::execute_allocation) with an event
+    /// observer. The session's benchmark-fitted models guide the executor's
+    /// straggler detection.
+    pub fn execute_allocation_with(
+        &self,
+        alloc: &Allocation,
+        on_event: &mut dyn FnMut(&ExecEvent),
+    ) -> Result<ExecutionReport> {
+        execute_with(
             &self.experiment.cluster,
             &self.experiment.workload,
             alloc,
             &self.experiment.config.executor,
+            Some(self.models()),
+            on_event,
         )
+    }
+
+    /// Start a background execution: partition at `budget` (solved inline so
+    /// infeasible budgets fail fast), then execute on a detached thread.
+    /// Returns the run id to poll with [`run_status`](Self::run_status) —
+    /// the serve protocol's `run`/`status` op pair.
+    pub fn start_run(&self, name: Option<&str>, budget: Option<f64>) -> Result<u64> {
+        let partition = self.partition_with(name, budget)?;
+        let slot = Arc::new(Mutex::new(RunSlot {
+            status: RunStatus {
+                id: 0,
+                state: RunState::Running,
+                partitioner: partition.partitioner.clone(),
+                budget: partition.budget,
+                chunks_done: 0,
+                chunks_total: 0,
+                tasks_priced: 0,
+                tasks_total: self.experiment.workload.len(),
+                failures: 0,
+                retries: 0,
+                migrations: 0,
+                makespan_secs: None,
+                cost: None,
+            },
+        }));
+        let id = self.runs.insert(Arc::clone(&slot))?;
+        // The executor thread owns clones of everything it needs (platforms
+        // are `Arc`-shared inside the cluster), so the session itself need
+        // not be `'static`.
+        let cluster = self.experiment.cluster.clone();
+        let workload = self.experiment.workload.clone();
+        let models = self.models().clone();
+        let cfg = self.experiment.config.executor.clone();
+        let alloc = partition.alloc;
+        std::thread::Builder::new()
+            .name(format!("cloudshapes-run-{id}"))
+            .spawn(move || {
+                let on_event = &mut |ev: &ExecEvent| {
+                    let mut slot = slot.lock().unwrap();
+                    let s = &mut slot.status;
+                    match ev {
+                        ExecEvent::Started { chunks, .. } => s.chunks_total = *chunks,
+                        ExecEvent::ChunkDone { done, .. } => s.chunks_done = *done,
+                        ExecEvent::ChunkFailed { will_retry, .. } => {
+                            if *will_retry {
+                                s.retries += 1;
+                            } else {
+                                s.failures += 1;
+                            }
+                        }
+                        ExecEvent::ChunkMigrated { .. } => s.migrations += 1,
+                        ExecEvent::TaskPriced { .. } => s.tasks_priced += 1,
+                        ExecEvent::Finished { .. } => {}
+                    }
+                };
+                let result =
+                    execute_with(&cluster, &workload, &alloc, &cfg, Some(&models), on_event);
+                let mut slot = slot.lock().unwrap();
+                match result {
+                    Ok(rep) => {
+                        slot.status.state = RunState::Done;
+                        slot.status.makespan_secs = Some(rep.makespan_secs);
+                        slot.status.cost = Some(rep.cost);
+                    }
+                    Err(e) => slot.status.state = RunState::Failed(e.to_string()),
+                }
+            })
+            .map_err(|e| CloudshapesError::runtime(format!("spawning run thread: {e}")))?;
+        Ok(id)
+    }
+
+    /// Progress snapshot of a background run (None for unknown/evicted ids).
+    pub fn run_status(&self, id: u64) -> Option<RunStatus> {
+        self.runs.get(id).map(|slot| slot.lock().unwrap().status.clone())
     }
 }
 
@@ -523,6 +706,32 @@ mod tests {
         let s = session.cache_stats();
         assert_eq!(s.partition_entries, 0);
         assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn background_run_reports_progress_then_results() {
+        let session = SessionBuilder::quick().partitioner("heuristic").build().unwrap();
+        let id = session.start_run(None, None).unwrap();
+        let mut status = session.run_status(id).expect("run is tracked");
+        assert_eq!(status.partitioner, "heuristic");
+        assert_eq!(status.tasks_total, 8);
+        // Poll to completion (the quick workload executes in well under a
+        // second of wall-clock; the deadline only guards CI hiccups).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while status.state == RunState::Running {
+            assert!(std::time::Instant::now() < deadline, "run never finished");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            status = session.run_status(id).unwrap();
+        }
+        assert_eq!(status.state, RunState::Done);
+        assert!(status.chunks_total > 0);
+        assert_eq!(status.chunks_done, status.chunks_total);
+        assert_eq!(status.tasks_priced, 8);
+        assert!(status.makespan_secs.unwrap() > 0.0);
+        assert!(status.cost.unwrap() > 0.0);
+        // Unknown ids are None, infeasible budgets fail fast.
+        assert!(session.run_status(10_000).is_none());
+        assert!(session.start_run(Some("milp"), Some(1e-9)).is_err());
     }
 
     #[test]

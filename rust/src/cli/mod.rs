@@ -36,6 +36,8 @@ COMMANDS
   run                      Partition AND execute on the cluster
       --budget DOLLARS
       --partitioner NAME
+      --watch              Live progress view of the chunked executor
+                           (chunks done, retries, migrations, task prices)
   table <1|2|3|4>          Regenerate a paper table
   fig <1|2|3>              Regenerate a paper figure (ASCII + optional CSV)
       --csv PATH
@@ -45,8 +47,9 @@ COMMANDS
 COMMON OPTIONS
   --config PATH            TOML experiment config (configs/*.toml)
   --quick                  Small cluster + small workload preset
-  --workers N              MILP solver threads (node LPs per round; default
-                           from config, 1 = sequential)
+  --workers N              Worker threads for BOTH the MILP solver (node LPs
+                           per round) and the chunked executor (chunk
+                           dispatch); default from config, 1 = sequential
 ";
 
 /// Entry point; returns the process exit code.
@@ -73,7 +76,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.sweep.levels = levels;
     }
     if let Some(workers) = args.flag_positive_usize("workers")? {
+        // One knob governs solver and executor parallelism.
         cfg.milp.workers = workers;
+        cfg.executor.workers = workers;
     }
     if args.flag_bool("native") {
         cfg.cluster.with_native = true;
@@ -213,7 +218,13 @@ fn cmd_pareto(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let s = session(args)?;
-    let ev = s.evaluate(args.flag_f64("budget")?)?;
+    let budget = args.flag_f64("budget")?;
+    let ev = if args.flag_bool("watch") {
+        let mut watch = WatchView::default();
+        s.evaluate_with_events(None, budget, &mut |e| watch.on(e))?
+    } else {
+        s.evaluate(budget)?
+    };
     let (p, rep) = (&ev.partition, &ev.execution);
     println!("partitioner: {}  budget: {:?}", p.partitioner, p.budget);
     println!(
@@ -228,10 +239,67 @@ fn cmd_run(args: &Args) -> Result<()> {
         fnum(rep.cost, 3),
         (rep.cost / p.predicted_cost - 1.0) * 100.0
     );
-    println!("failures: {}", rep.failures);
+    println!(
+        "chunks: {}  retries: {}  migrations: {}  failures: {}",
+        rep.chunks, rep.retries, rep.migrations, rep.failures
+    );
     let priced = rep.prices.iter().flatten().count();
     println!("tasks priced: {priced}/{}", s.workload().len());
     Ok(())
+}
+
+/// `run --watch`: a line-oriented progress view over the executor's event
+/// stream (progress at ~10% strides; every failure, migration and task
+/// price as it lands).
+#[derive(Default)]
+struct WatchView {
+    next_pct: u64,
+}
+
+impl WatchView {
+    fn on(&mut self, ev: &crate::coordinator::ExecEvent) {
+        use crate::coordinator::ExecEvent as E;
+        match ev {
+            E::Started { chunks, tasks } => {
+                self.next_pct = 10;
+                println!("watch: {chunks} chunks across {tasks} tasks");
+            }
+            E::ChunkDone { done, total, .. } => {
+                let pct = (*done as u64 * 100) / (*total).max(1) as u64;
+                if pct >= self.next_pct || done == total {
+                    self.next_pct = pct + 10;
+                    println!("watch: {pct:>3}%  ({done}/{total} chunks)");
+                }
+            }
+            E::ChunkFailed { platform, task, attempt, will_retry, rehomed_to, .. } => {
+                let retry = match (will_retry, rehomed_to) {
+                    (false, _) => "giving up".to_string(),
+                    (true, Some(p)) => format!("retrying on platform {p}"),
+                    (true, None) => "retrying".to_string(),
+                };
+                println!(
+                    "watch: chunk of task {task} failed on platform {platform} \
+                     (attempt {attempt}) — {retry}"
+                );
+            }
+            E::ChunkMigrated { from, to, task, .. } => {
+                println!("watch: rebalanced a task-{task} chunk: platform {from} -> {to}");
+            }
+            E::TaskPriced { task, estimate, partial } => {
+                let tag = if *partial { " (partial)" } else { "" };
+                println!(
+                    "watch: task {task} priced {:.4} ± {:.4}{tag}",
+                    estimate.price, estimate.std_error
+                );
+            }
+            E::Finished { makespan_secs, cost, failures } => {
+                println!(
+                    "watch: finished — makespan {:.1}s, cost ${:.3}, {failures} failures",
+                    makespan_secs, cost
+                );
+            }
+        }
+    }
 }
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -327,5 +395,10 @@ mod tests {
     fn workers_flag_is_wired_and_validated() {
         assert_eq!(main(&argv("partition --quick --partitioner heuristic --workers 2")), 0);
         assert_eq!(main(&argv("partition --quick --workers 0")), 1);
+    }
+
+    #[test]
+    fn run_watch_streams_progress() {
+        assert_eq!(main(&argv("run --quick --partitioner heuristic --watch")), 0);
     }
 }

@@ -31,7 +31,9 @@ use std::sync::Arc;
 
 use crate::api::error::{CloudshapesError, Result};
 use crate::api::protocol::{error_response, ok_response, Request};
+use crate::api::session::{RunState, RunStatus};
 use crate::api::TradeoffSession;
+use crate::coordinator::ExecEvent;
 use crate::util::json::{obj, Json};
 
 use super::args::Args;
@@ -86,9 +88,22 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let response = handle_request(&line, session, stop);
-        writer.write_all(response.to_string_compact().as_bytes())?;
-        writer.write_all(b"\n")?;
+        // A streaming run writes interim event lines before its final
+        // response, so it needs the writer; everything else is one
+        // request, one response line.
+        match Request::parse(&line) {
+            Ok(Request::Run { partitioner, budget, stream: true }) => {
+                stream_run(&mut writer, session, partitioner.as_deref(), budget)?;
+            }
+            parsed => {
+                let response = match parsed.and_then(|req| dispatch(req, session, stop)) {
+                    Ok(response) => response,
+                    Err(e) => error_response(&e),
+                };
+                writer.write_all(response.to_string_compact().as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+        }
         if stop.load(Ordering::SeqCst) {
             // Poke the listener so the accept loop notices shutdown.
             let _ = TcpStream::connect(listener_addr);
@@ -149,10 +164,26 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
         Request::Evaluate { partitioner, budget } => {
             let ev = session.evaluate_with(partitioner.as_deref(), budget)?;
             let mut fields = partition_fields(&ev.partition);
-            fields.push(("measured_latency_s", ev.execution.makespan_secs.into()));
-            fields.push(("measured_cost", ev.execution.cost.into()));
-            fields.push(("failures", ev.execution.failures.into()));
+            fields.extend(execution_fields(&ev.execution));
             Ok(ok_response(fields))
+        }
+        Request::Run { partitioner, budget, .. } => {
+            // stream:true is intercepted at the connection layer; reaching
+            // here (including direct handle_request calls) means a
+            // background run polled via `status`.
+            let run_id = session.start_run(partitioner.as_deref(), budget)?;
+            Ok(ok_response(vec![
+                ("run_id", Json::Num(run_id as f64)),
+                ("status", "running".into()),
+            ]))
+        }
+        Request::Status { run_id } => {
+            let status = session.run_status(run_id).ok_or_else(|| {
+                CloudshapesError::protocol(format!(
+                    "unknown run_id {run_id} (finished runs are evicted eventually)"
+                ))
+            })?;
+            Ok(ok_response(status_fields(&status)))
         }
         Request::Pareto { partitioner } => {
             let curve = session.pareto_frontier_with(partitioner.as_deref())?;
@@ -220,6 +251,149 @@ fn partition_fields(p: &crate::api::PartitionSummary) -> Vec<(&'static str, Json
         ("predicted_cost", p.predicted_cost.into()),
         ("platforms_used", p.alloc.used_platforms().len().into()),
     ]
+}
+
+fn execution_fields(
+    rep: &crate::coordinator::ExecutionReport,
+) -> Vec<(&'static str, Json)> {
+    vec![
+        ("measured_latency_s", rep.makespan_secs.into()),
+        ("measured_cost", rep.cost.into()),
+        ("failures", rep.failures.into()),
+        ("chunks", rep.chunks.into()),
+        ("retries", rep.retries.into()),
+        ("migrations", rep.migrations.into()),
+    ]
+}
+
+fn status_fields(s: &RunStatus) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("run_id", Json::Num(s.id as f64)),
+        (
+            "status",
+            match &s.state {
+                RunState::Running => "running".into(),
+                RunState::Done => "done".into(),
+                RunState::Failed(_) => "failed".into(),
+            },
+        ),
+        ("partitioner", s.partitioner.as_str().into()),
+        ("budget", s.budget.map(Json::Num).unwrap_or(Json::Null)),
+        ("chunks_done", s.chunks_done.into()),
+        ("chunks_total", s.chunks_total.into()),
+        ("tasks_priced", s.tasks_priced.into()),
+        ("tasks_total", s.tasks_total.into()),
+        ("failures", s.failures.into()),
+        ("retries", s.retries.into()),
+        ("migrations", s.migrations.into()),
+    ];
+    if let Some(m) = s.makespan_secs {
+        fields.push(("measured_latency_s", m.into()));
+    }
+    if let Some(c) = s.cost {
+        fields.push(("measured_cost", c.into()));
+    }
+    if let RunState::Failed(msg) = &s.state {
+        fields.push(("error", msg.as_str().into()));
+    }
+    fields
+}
+
+/// Serve a `{"op":"run","stream":true}` request: interim `{"v":1,"event":
+/// ...}` lines (progress at ~5% strides, failures, migrations, task prices)
+/// followed by one final `{"v":1,"ok":...}` response line.
+fn stream_run(
+    writer: &mut impl Write,
+    session: &TradeoffSession,
+    partitioner: Option<&str>,
+    budget: Option<f64>,
+) -> std::io::Result<()> {
+    let mut io_err: Option<std::io::Error> = None;
+    let mut next_pct = 0u64;
+    let result = session.evaluate_with_events(partitioner, budget, &mut |ev| {
+        let Some(json) = stream_event_json(ev, &mut next_pct) else { return };
+        if io_err.is_none() {
+            let line = json.to_string_compact();
+            if let Err(e) = writer
+                .write_all(line.as_bytes())
+                .and_then(|()| writer.write_all(b"\n"))
+            {
+                io_err = Some(e);
+            }
+        }
+    });
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+    let response = match result {
+        Ok(ev) => {
+            let mut fields = partition_fields(&ev.partition);
+            fields.extend(execution_fields(&ev.execution));
+            ok_response(fields)
+        }
+        Err(e) => error_response(&e),
+    };
+    writer.write_all(response.to_string_compact().as_bytes())?;
+    writer.write_all(b"\n")
+}
+
+/// Wire form of one executor event; None for events the stream elides
+/// (per-chunk completions between progress strides, the final `Finished` —
+/// the response line carries those numbers).
+fn stream_event_json(ev: &ExecEvent, next_pct: &mut u64) -> Option<Json> {
+    let e = |name: &str, mut fields: Vec<(&str, Json)>| {
+        let mut all = vec![
+            ("v", Json::Num(crate::api::PROTOCOL_VERSION as f64)),
+            ("event", name.into()),
+        ];
+        all.append(&mut fields);
+        Some(obj(all))
+    };
+    match ev {
+        ExecEvent::Started { chunks, tasks } => {
+            *next_pct = 5;
+            e("started", vec![("chunks", (*chunks).into()), ("tasks", (*tasks).into())])
+        }
+        ExecEvent::ChunkDone { done, total, .. } => {
+            let pct = (*done as u64 * 100) / (*total).max(1) as u64;
+            if pct < *next_pct && *done != *total {
+                return None;
+            }
+            *next_pct = pct + 5;
+            e("progress", vec![("done", (*done).into()), ("total", (*total).into())])
+        }
+        ExecEvent::ChunkFailed { platform, task, attempt, will_retry, rehomed_to, error, .. } => {
+            e(
+                "chunk_failed",
+                vec![
+                    ("platform", (*platform).into()),
+                    ("task", (*task).into()),
+                    ("attempt", Json::Num(*attempt as f64)),
+                    ("will_retry", Json::Bool(*will_retry)),
+                    (
+                        "rehomed_to",
+                        rehomed_to.map(|p| p.into()).unwrap_or(Json::Null),
+                    ),
+                    ("error", error.as_str().into()),
+                ],
+            )
+        }
+        ExecEvent::ChunkMigrated { from, to, task, .. } => e(
+            "chunk_migrated",
+            vec![("from", (*from).into()), ("to", (*to).into()), ("task", (*task).into())],
+        ),
+        ExecEvent::TaskPriced { task, estimate, partial } => e(
+            "task_priced",
+            vec![
+                ("task", (*task).into()),
+                ("price", estimate.price.into()),
+                ("std_error", estimate.std_error.into()),
+                ("n", Json::Num(estimate.n as f64)),
+                ("partial", Json::Bool(*partial)),
+            ],
+        ),
+        ExecEvent::Finished { .. } => None,
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +502,53 @@ mod tests {
         );
         // Malformed batches are protocol errors.
         let r = handle_request(r#"{"v":1,"op":"batch","budgets":[]}"#, &s, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn run_then_status_roundtrip() {
+        let s = session();
+        let stop = AtomicBool::new(false);
+        let r = handle_request(
+            r#"{"v":1,"op":"run","partitioner":"heuristic","budget":null}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        assert_eq!(r.get("status").unwrap().as_str(), Some("running"));
+        let id = r.get("run_id").unwrap().as_u64().unwrap();
+
+        // Poll until the background executor finishes.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let st =
+                handle_request(&format!(r#"{{"v":1,"op":"status","run_id":{id}}}"#), &s, &stop);
+            assert_eq!(st.get("ok"), Some(&Json::Bool(true)));
+            match st.get("status").unwrap().as_str() {
+                Some("running") => {
+                    assert!(std::time::Instant::now() < deadline, "run never finished");
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Some("done") => {
+                    assert!(st.get("measured_latency_s").unwrap().as_f64().unwrap() > 0.0);
+                    assert_eq!(
+                        st.get("chunks_done").unwrap().as_u64(),
+                        st.get("chunks_total").unwrap().as_u64()
+                    );
+                    assert_eq!(st.get("tasks_priced").unwrap().as_u64(), Some(8));
+                    break;
+                }
+                other => panic!("unexpected run state {other:?}"),
+            }
+        }
+
+        // Unknown run ids are protocol errors; a run without budget is too.
+        let r = handle_request(r#"{"v":1,"op":"status","run_id":424242}"#, &s, &stop);
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("protocol")
+        );
+        let r = handle_request(r#"{"v":1,"op":"run"}"#, &s, &stop);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
     }
 

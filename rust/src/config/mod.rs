@@ -161,6 +161,18 @@ impl ExperimentConfig {
         if let Some(s) = root.get("sweep") {
             set_usize(s, "levels", &mut cfg.sweep.levels)?;
         }
+        // One shared `workers` knob governs solver AND executor parallelism;
+        // the `[milp]` / `[executor]` sections can still override it
+        // individually (they are parsed after this).
+        if root.get("workers").is_some() {
+            let mut workers = cfg.milp.workers as u64;
+            set_u64(&root, "workers", &mut workers)?;
+            if workers == 0 {
+                return Err(CloudshapesError::config("workers must be >= 1"));
+            }
+            cfg.milp.workers = workers as usize;
+            cfg.executor.workers = workers as usize;
+        }
         if let Some(m) = root.get("milp") {
             set_usize(m, "max_nodes", &mut cfg.milp.max_nodes)?;
             set_f64(m, "rel_gap", &mut cfg.milp.rel_gap)?;
@@ -174,7 +186,27 @@ impl ExperimentConfig {
             let mut seed64 = cfg.executor.seed as u64;
             set_u64(e, "seed", &mut seed64)?;
             cfg.executor.seed = seed64 as u32;
-            set_usize(e, "threads", &mut cfg.executor.threads)?;
+            // `threads` is the legacy spelling of `workers`.
+            set_usize(e, "threads", &mut cfg.executor.workers)?;
+            set_usize(e, "workers", &mut cfg.executor.workers)?;
+            if cfg.executor.workers == 0 {
+                return Err(CloudshapesError::config("executor.workers must be >= 1"));
+            }
+            set_u64(e, "chunk_sims", &mut cfg.executor.chunk_sims)?;
+            let mut attempts = cfg.executor.retry.max_attempts as u64;
+            set_u64(e, "max_attempts", &mut attempts)?;
+            if attempts == 0 {
+                return Err(CloudshapesError::config("executor.max_attempts must be >= 1"));
+            }
+            cfg.executor.retry.max_attempts = attempts as u32;
+            set_bool(e, "rehome", &mut cfg.executor.retry.rehome)?;
+            set_bool(e, "rebalance", &mut cfg.executor.rebalance.enabled)?;
+            set_f64(e, "rebalance_tolerance", &mut cfg.executor.rebalance.tolerance)?;
+            if cfg.executor.rebalance.tolerance <= 0.0 {
+                return Err(CloudshapesError::config(
+                    "executor.rebalance_tolerance must be positive",
+                ));
+            }
         }
         if let Some(a) = root.get("artifact_dir").and_then(Json::as_str) {
             cfg.artifact_dir = a.to_string();
@@ -259,7 +291,12 @@ mod tests {
 
             [executor]
             seed = 3
-            threads = 4
+            workers = 4
+            chunk_sims = 1048576
+            max_attempts = 5
+            rehome = false
+            rebalance = false
+            rebalance_tolerance = 0.5
         "#;
         let c = ExperimentConfig::parse(text).unwrap();
         assert_eq!(c.workload.n_tasks, 16);
@@ -272,7 +309,28 @@ mod tests {
         assert_eq!(c.milp.max_nodes, 50);
         assert!((c.milp.time_limit_secs - 2.5).abs() < 1e-12);
         assert_eq!(c.milp.workers, 3);
-        assert_eq!(c.executor.threads, 4);
+        assert_eq!(c.executor.workers, 4);
+        assert_eq!(c.executor.chunk_sims, 1 << 20);
+        assert_eq!(c.executor.retry.max_attempts, 5);
+        assert!(!c.executor.retry.rehome);
+        assert!(!c.executor.rebalance.enabled);
+        assert!((c.executor.rebalance.tolerance - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_workers_knob_governs_solver_and_executor() {
+        let c = ExperimentConfig::parse("workers = 6").unwrap();
+        assert_eq!(c.milp.workers, 6);
+        assert_eq!(c.executor.workers, 6);
+        // Section-level overrides still win.
+        let c = ExperimentConfig::parse("workers = 6\n[executor]\nworkers = 2").unwrap();
+        assert_eq!(c.milp.workers, 6);
+        assert_eq!(c.executor.workers, 2);
+        // Legacy spelling keeps parsing.
+        let c = ExperimentConfig::parse("[executor]\nthreads = 3").unwrap();
+        assert_eq!(c.executor.workers, 3);
+        assert!(ExperimentConfig::parse("workers = 0").is_err());
+        assert!(ExperimentConfig::parse("[executor]\nmax_attempts = 0").is_err());
     }
 
     #[test]

@@ -2,19 +2,41 @@
 //! the "we then ran the resulting partitions on our experimental hardware"
 //! step that produces the measured curves of Fig. 3.
 //!
-//! Each platform gets one worker thread and a private [`SimLane`] timeline:
-//! it processes its assigned task slices sequentially (latency accumulates
-//! on the lane), simulated platforms advancing virtual time and the native
-//! platform real time. The realised makespan is the max lane time; realised
-//! cost quantises each lane's total through the platform's billing terms.
+//! The executor is an **event-driven chunked scheduler**: every (platform,
+//! task) slice of the allocation is split into bounded chunks
+//! (counter-disjoint via u64 offsets), queued per platform, and driven by a
+//! central event loop that
+//!
+//! - **retries failed chunks** with capped attempts, optionally re-homing
+//!   them onto the platform with the earliest estimated finish — injected
+//!   failures degrade statistics instead of zeroing prices;
+//! - **rebalances stragglers**: when a lane's measured chunk latency drifts
+//!   beyond a tolerance from its (fitted or nominal) latency model, queued
+//!   chunks migrate from the lagging lane to the lane with the earliest
+//!   estimated finish (model-guided work stealing);
+//! - emits a typed [`ExecEvent`] stream (chunk done / failed / migrated,
+//!   per-task [`PriceEstimate`]s) consumed by the serve protocol's
+//!   `run`/`status` ops and the CLI `--watch` progress view.
+//!
+//! Each platform still executes its lane sequentially (latency accumulates
+//! per lane; the realised makespan is the max lane time, realised cost
+//! quantises each lane's total through the platform's billing terms).
+//! **Equivalence guarantee:** with a noise-free simulator
+//! ([`SimConfig::exact`](crate::platforms::SimConfig::exact)), rebalancing
+//! disabled (or simply never triggered) and no failures, chunked execution
+//! reproduces the one-shot path ([`execute_static`]) to ~1e-9: warm chunks
+//! skip setup, the simulator budgets statistics per (platform, task) stream,
+//! and per-task statistics merge in deterministic offset order.
 
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
 
 use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::allocation::{Allocation, ALLOC_TOL};
-use crate::platforms::Cluster;
+use crate::coordinator::objectives::ModelSet;
+use crate::platforms::{ChunkCtx, Cluster};
 use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
-use crate::util::sim_time::SimClock;
 use crate::util::threadpool::parallel_map;
 use crate::workload::Workload;
 
@@ -27,7 +49,7 @@ pub struct PlatformReport {
     /// Billed quanta and cost.
     pub quanta: u64,
     pub cost: f64,
-    /// Simulations actually dispatched here.
+    /// Simulations dispatched here (failed attempts and retries re-count).
     pub sims: u64,
     pub errors: Vec<String>,
 }
@@ -42,32 +64,201 @@ pub struct ExecutionReport {
     pub platforms: Vec<PlatformReport>,
     /// Discounted price estimate per task (None if every slice failed).
     pub prices: Vec<Option<PriceEstimate>>,
-    /// Total failed slices.
+    /// Chunks that exhausted their retry budget (permanently failed).
     pub failures: usize,
+    /// Chunk executions that completed successfully.
+    pub chunks: usize,
+    /// Failed chunk executions that were re-queued.
+    pub retries: usize,
+    /// Queued chunks migrated off straggling lanes.
+    pub migrations: usize,
+}
+
+/// Chunk retry policy.
+#[derive(Debug, Clone)]
+pub struct RetryConfig {
+    /// Total execution attempts per chunk (1 = today's no-retry reporting:
+    /// the first failure is final).
+    pub max_attempts: u32,
+    /// Re-home retried chunks onto the platform with the earliest estimated
+    /// finish instead of insisting on the platform that failed.
+    pub rehome: bool,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig { max_attempts: 3, rehome: true }
+    }
+}
+
+/// Straggler rebalancing policy (model-guided work stealing).
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    pub enabled: bool,
+    /// Relative drift of measured chunk latency over the model prediction
+    /// that marks a lane as straggling (0.25 = 25% slower than modelled).
+    pub tolerance: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { enabled: true, tolerance: 0.25 }
+    }
 }
 
 /// Execution controls.
 #[derive(Debug, Clone)]
 pub struct ExecutorConfig {
     pub seed: u32,
-    /// Worker threads (>= cluster size recommended; each platform runs its
-    /// queue sequentially regardless).
-    pub threads: usize,
+    /// Worker threads dispatching chunks (shared knob with the solver's
+    /// `workers`; clamped to the cluster size — each platform's lane is
+    /// sequential regardless).
+    pub workers: usize,
+    /// Max simulations per chunk (0 = unchunked: one chunk per slice).
+    pub chunk_sims: u64,
+    pub retry: RetryConfig,
+    pub rebalance: RebalanceConfig,
 }
 
 impl Default for ExecutorConfig {
     fn default() -> Self {
-        ExecutorConfig { seed: 1, threads: 16 }
+        ExecutorConfig {
+            seed: 1,
+            workers: 16,
+            chunk_sims: 1 << 24,
+            retry: RetryConfig::default(),
+            rebalance: RebalanceConfig::default(),
+        }
     }
 }
 
-/// Run `alloc` for `workload` on `cluster`.
-pub fn execute(
-    cluster: &Cluster,
-    workload: &Workload,
-    alloc: &Allocation,
-    cfg: &ExecutorConfig,
-) -> Result<ExecutionReport> {
+/// One event of a chunked execution, emitted by the scheduler's event loop
+/// (always on the caller's thread) as the run progresses.
+#[derive(Debug, Clone)]
+pub enum ExecEvent {
+    /// Scheduling is done; execution starts.
+    Started { chunks: usize, tasks: usize },
+    ChunkDone {
+        platform: usize,
+        task: usize,
+        offset: u64,
+        n: u64,
+        latency_secs: f64,
+        /// Chunks completed so far / total scheduled.
+        done: usize,
+        total: usize,
+    },
+    ChunkFailed {
+        platform: usize,
+        task: usize,
+        offset: u64,
+        n: u64,
+        /// 1-based attempt number that just failed.
+        attempt: u32,
+        error: String,
+        will_retry: bool,
+        /// Platform the retry was queued on, when different from `platform`.
+        rehomed_to: Option<usize>,
+    },
+    /// A queued chunk moved off a straggling lane.
+    ChunkMigrated { from: usize, to: usize, task: usize, offset: u64, n: u64 },
+    /// Every chunk of `task` has resolved; `partial` when some of its
+    /// chunks permanently failed (the estimate covers the surviving paths).
+    TaskPriced { task: usize, estimate: PriceEstimate, partial: bool },
+    Finished { makespan_secs: f64, cost: f64, failures: usize },
+}
+
+/// A unit of schedulable work: `n` simulations of `task` starting at the
+/// global path counter `offset`.
+#[derive(Debug, Clone, Copy)]
+struct Chunk {
+    task: usize,
+    offset: u64,
+    n: u64,
+    /// Completed attempts (0 on first dispatch).
+    attempt: u32,
+}
+
+/// One platform's scheduler lane.
+struct Lane {
+    queue: VecDeque<Chunk>,
+    busy: bool,
+    /// Accumulated lane latency, seconds (virtual for simulated platforms,
+    /// wall-clock for native ones).
+    time: f64,
+    sims: u64,
+    errors: Vec<String>,
+    /// Per-task simulations successfully completed on this lane — the
+    /// [`ChunkCtx::prior_sims`] hint.
+    done_sims: Vec<u64>,
+    /// Model-estimated seconds of queued work.
+    queued_secs: f64,
+    /// EWMA of measured/predicted chunk latency (1.0 = on-model).
+    drift: f64,
+    drift_obs: u64,
+}
+
+struct Sched {
+    lanes: Vec<Lane>,
+    /// Chunks not yet terminally resolved (done or permanently failed).
+    outstanding: usize,
+    done: bool,
+}
+
+/// Raw completion record a worker posts to the event loop.
+struct Completion {
+    platform: usize,
+    chunk: Chunk,
+    latency_secs: f64,
+    stats: Option<PayoffStats>,
+    error: Option<String>,
+}
+
+/// Per-(platform, task) latency coefficients the scheduler estimates with:
+/// fitted models when available, nominal spec-derived ones otherwise.
+struct Coeffs {
+    mu: usize,
+    tau: usize,
+    beta: Vec<f64>,
+    gamma: Vec<f64>,
+}
+
+impl Coeffs {
+    fn build(cluster: &Cluster, workload: &Workload, models: Option<&ModelSet>) -> Coeffs {
+        let (mu, tau) = (cluster.len(), workload.len());
+        let mut beta = Vec::with_capacity(mu * tau);
+        let mut gamma = Vec::with_capacity(mu * tau);
+        if let Some(m) = models {
+            for i in 0..mu {
+                for j in 0..tau {
+                    beta.push(m.model(i, j).beta);
+                    gamma.push(m.model(i, j).gamma);
+                }
+            }
+        } else {
+            for spec in cluster.specs() {
+                for t in &workload.tasks {
+                    beta.push(t.flops_per_path() / (spec.app_gflops.max(1e-9) * 1e9));
+                    gamma.push(spec.setup_secs);
+                }
+            }
+        }
+        Coeffs { mu, tau, beta, gamma }
+    }
+
+    /// Predicted seconds of a chunk on platform `i` (work only — setup is
+    /// charged per stream, not per chunk).
+    fn est(&self, i: usize, c: &Chunk) -> f64 {
+        debug_assert!(i < self.mu && c.task < self.tau);
+        self.beta[i * self.tau + c.task] * c.n as f64
+    }
+
+    fn predicted(&self, i: usize, c: &Chunk, cold: bool) -> f64 {
+        self.est(i, c) + if cold { self.gamma[i * self.tau + c.task] } else { 0.0 }
+    }
+}
+
+fn check_shapes(cluster: &Cluster, workload: &Workload, alloc: &Allocation) -> Result<()> {
     alloc.validate()?;
     workload.validate()?;
     if alloc.n_platforms() != cluster.len() || alloc.n_tasks() != workload.len() {
@@ -79,11 +270,14 @@ pub fn execute(
             workload.len()
         )));
     }
-    let tau = workload.len();
+    Ok(())
+}
 
-    // Integer-split every task's path space and compute per-slice counter
-    // offsets (prefix sums keep slices disjoint).
-    let splits: Vec<Vec<u64>> = (0..tau)
+/// Integer-split every task's path space across platforms and compute the
+/// per-slice u64 counter offsets (prefix sums keep slices disjoint; at
+/// `n_sims` up to `1 << 34` these must NOT be truncated to 32 bits).
+fn slice_layout(workload: &Workload, alloc: &Allocation) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+    let splits: Vec<Vec<u64>> = (0..workload.len())
         .map(|j| alloc.split_sims(j, workload.tasks[j].n_sims))
         .collect();
     let offsets: Vec<Vec<u64>> = splits
@@ -99,49 +293,470 @@ pub fn execute(
                 .collect()
         })
         .collect();
+    (splits, offsets)
+}
 
-    let clock = SimClock::new();
+/// Run `alloc` for `workload` on `cluster` with the chunked event-driven
+/// scheduler (no event observer, scheduler-estimated nominal models).
+pub fn execute(
+    cluster: &Cluster,
+    workload: &Workload,
+    alloc: &Allocation,
+    cfg: &ExecutorConfig,
+) -> Result<ExecutionReport> {
+    execute_with(cluster, workload, alloc, cfg, None, &mut |_| {})
+}
+
+/// As [`execute`], with fitted `models` guiding straggler detection and an
+/// `on_event` observer receiving the [`ExecEvent`] stream (called on the
+/// caller's thread).
+pub fn execute_with(
+    cluster: &Cluster,
+    workload: &Workload,
+    alloc: &Allocation,
+    cfg: &ExecutorConfig,
+    models: Option<&ModelSet>,
+    on_event: &mut dyn FnMut(&ExecEvent),
+) -> Result<ExecutionReport> {
+    check_shapes(cluster, workload, alloc)?;
+    let (mu, tau) = (cluster.len(), workload.len());
+    let (splits, offsets) = slice_layout(workload, alloc);
+    let coeffs = Coeffs::build(cluster, workload, models);
+
+    // Build per-platform chunk queues: slices in task order (matching the
+    // one-shot path), each split into at most `chunk_sims`-path chunks.
+    let chunk_cap = if cfg.chunk_sims == 0 { u64::MAX } else { cfg.chunk_sims };
+    let mut lanes: Vec<Lane> = (0..mu)
+        .map(|_| Lane {
+            queue: VecDeque::new(),
+            busy: false,
+            time: 0.0,
+            sims: 0,
+            errors: Vec::new(),
+            done_sims: vec![0; tau],
+            queued_secs: 0.0,
+            drift: 1.0,
+            drift_obs: 0,
+        })
+        .collect();
+    let mut total_chunks = 0usize;
+    let mut chunks_per_task = vec![0usize; tau];
+    for j in 0..tau {
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let n_slice = splits[j][i];
+            if n_slice == 0 || alloc.get(i, j) <= ALLOC_TOL {
+                continue;
+            }
+            let mut offset = offsets[j][i];
+            let mut remaining = n_slice;
+            while remaining > 0 {
+                let n = remaining.min(chunk_cap);
+                let chunk = Chunk { task: j, offset, n, attempt: 0 };
+                lane.queued_secs += coeffs.est(i, &chunk);
+                lane.queue.push_back(chunk);
+                offset += n;
+                remaining -= n;
+                total_chunks += 1;
+                chunks_per_task[j] += 1;
+            }
+        }
+    }
+    on_event(&ExecEvent::Started { chunks: total_chunks, tasks: tau });
+
+    let sched = Mutex::new(Sched { lanes, outstanding: total_chunks, done: total_chunks == 0 });
+    let available = Condvar::new();
+    let (tx, rx) = mpsc::channel::<Completion>();
+
+    // Per-task resolution state, owned by the event loop.
+    let mut chunk_stats: Vec<Vec<(u64, PayoffStats)>> = vec![Vec::new(); tau];
+    let mut remaining_chunks = chunks_per_task;
+    let mut task_failures = vec![0usize; tau];
+    let mut prices: Vec<Option<PriceEstimate>> = vec![None; tau];
+    let (mut done_count, mut failures, mut retries, mut migrations) = (0usize, 0usize, 0usize, 0);
+
+    let workers = cfg.workers.max(1).min(mu);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let (sched, available, tx) = (&sched, &available, tx.clone());
+            let (cluster, workload, coeffs, seed) = (cluster, workload, &coeffs, cfg.seed);
+            scope.spawn(move || loop {
+                // Claim the earliest-in-time idle lane with queued work —
+                // the event-driven dispatch order. The busy flag keeps each
+                // lane sequential no matter the worker count.
+                let claimed = {
+                    let mut g = sched.lock().unwrap();
+                    loop {
+                        if g.done {
+                            return;
+                        }
+                        let pick = (0..g.lanes.len())
+                            .filter(|&i| !g.lanes[i].busy && !g.lanes[i].queue.is_empty())
+                            .min_by(|&a, &b| g.lanes[a].time.total_cmp(&g.lanes[b].time));
+                        if let Some(i) = pick {
+                            let chunk = g.lanes[i].queue.pop_front().unwrap();
+                            g.lanes[i].busy = true;
+                            g.lanes[i].queued_secs =
+                                (g.lanes[i].queued_secs - coeffs.est(i, &chunk)).max(0.0);
+                            let prior = g.lanes[i].done_sims[chunk.task];
+                            break (i, chunk, prior);
+                        }
+                        g = available.wait(g).unwrap();
+                    }
+                };
+                let (i, chunk, prior) = claimed;
+                let task = &workload.tasks[chunk.task];
+                // A panicking platform must not wedge the scheduler (the
+                // lock is NOT held here, so no poisoning): surface the
+                // panic as a failed chunk and let the retry policy decide.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    cluster.platform(i).execute(
+                        task,
+                        chunk.n,
+                        seed,
+                        ChunkCtx { offset: chunk.offset, prior_sims: prior },
+                    )
+                }))
+                .unwrap_or_else(|_| crate::platforms::ExecOutcome {
+                    latency_secs: 0.0,
+                    stats: None,
+                    error: Some(format!("platform {i}: panicked executing a chunk")),
+                });
+                {
+                    let mut g = sched.lock().unwrap();
+                    let lane = &mut g.lanes[i];
+                    lane.time += out.latency_secs;
+                    lane.sims += chunk.n;
+                    lane.busy = false;
+                    if out.stats.is_some() {
+                        lane.done_sims[chunk.task] += chunk.n;
+                        // Straggler signal: measured vs modelled chunk
+                        // latency (failures carry no throughput signal —
+                        // their cheap setup-only latency would make a
+                        // broken lane look fast).
+                        let predicted = coeffs.predicted(i, &chunk, prior == 0).max(1e-12);
+                        let ratio = out.latency_secs / predicted;
+                        lane.drift = if lane.drift_obs == 0 {
+                            ratio
+                        } else {
+                            0.5 * lane.drift + 0.5 * ratio
+                        };
+                        lane.drift_obs += 1;
+                    } else if let Some(e) = &out.error {
+                        lane.errors.push(e.clone());
+                    }
+                }
+                available.notify_all();
+                let _ = tx.send(Completion {
+                    platform: i,
+                    chunk,
+                    latency_secs: out.latency_secs,
+                    stats: out.stats,
+                    error: out.error,
+                });
+            });
+        }
+        drop(tx);
+
+        // The central event loop: price tasks as they complete, retry and
+        // re-home failures, migrate queued work off stragglers.
+        while done_count + failures < total_chunks {
+            let ev = rx.recv().expect("all workers exited with chunks outstanding");
+            let Completion { platform, chunk, latency_secs, stats, error } = ev;
+            match (stats, error) {
+                (Some(s), _) => {
+                    done_count += 1;
+                    if s.n > 0 {
+                        chunk_stats[chunk.task].push((chunk.offset, s));
+                    }
+                    resolve_chunk(&sched, &available);
+                    on_event(&ExecEvent::ChunkDone {
+                        platform,
+                        task: chunk.task,
+                        offset: chunk.offset,
+                        n: chunk.n,
+                        latency_secs,
+                        done: done_count,
+                        total: total_chunks,
+                    });
+                    remaining_chunks[chunk.task] -= 1;
+                    if remaining_chunks[chunk.task] == 0 {
+                        price_task(
+                            chunk.task,
+                            workload,
+                            &mut chunk_stats,
+                            &task_failures,
+                            &mut prices,
+                            on_event,
+                        );
+                    }
+                    if cfg.rebalance.enabled {
+                        if let Some(mv) =
+                            try_rebalance(&sched, &coeffs, cfg.rebalance.tolerance)
+                        {
+                            migrations += 1;
+                            available.notify_all();
+                            on_event(&mv);
+                        }
+                    }
+                }
+                (None, error) => {
+                    let error = error.unwrap_or_else(|| "unknown".into());
+                    let attempt = chunk.attempt + 1;
+                    let will_retry = attempt < cfg.retry.max_attempts;
+                    let mut rehomed_to = None;
+                    if will_retry {
+                        retries += 1;
+                        let mut g = sched.lock().unwrap();
+                        let target = if cfg.retry.rehome {
+                            // Prefer any lane but the one that just failed.
+                            earliest_finish_lane(&g.lanes, &coeffs, &chunk, Some(platform))
+                        } else {
+                            platform
+                        };
+                        if target != platform {
+                            rehomed_to = Some(target);
+                        }
+                        let retry = Chunk { attempt, ..chunk };
+                        g.lanes[target].queued_secs += coeffs.est(target, &retry);
+                        g.lanes[target].queue.push_back(retry);
+                        drop(g);
+                        available.notify_all();
+                    } else {
+                        failures += 1;
+                        task_failures[chunk.task] += 1;
+                        resolve_chunk(&sched, &available);
+                    }
+                    on_event(&ExecEvent::ChunkFailed {
+                        platform,
+                        task: chunk.task,
+                        offset: chunk.offset,
+                        n: chunk.n,
+                        attempt,
+                        error,
+                        will_retry,
+                        rehomed_to,
+                    });
+                    if !will_retry {
+                        remaining_chunks[chunk.task] -= 1;
+                        if remaining_chunks[chunk.task] == 0 {
+                            price_task(
+                                chunk.task,
+                                workload,
+                                &mut chunk_stats,
+                                &task_failures,
+                                &mut prices,
+                                on_event,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // All chunks resolved (the last resolve_chunk set `done`); wake any
+        // still-waiting workers so the scope can join them.
+        available.notify_all();
+    });
+
+    let g = sched.into_inner().unwrap();
+    let specs = cluster.specs();
+    let mut platforms = Vec::with_capacity(mu);
+    for (i, lane) in g.lanes.iter().enumerate() {
+        let cm = specs[i].cost_model();
+        platforms.push(PlatformReport {
+            name: specs[i].name.clone(),
+            latency_secs: lane.time,
+            quanta: cm.quanta(lane.time),
+            cost: cm.cost(lane.time),
+            sims: lane.sims,
+            errors: lane.errors.clone(),
+        });
+    }
+    let makespan_secs = platforms.iter().map(|p| p.latency_secs).fold(0.0f64, f64::max);
+    let cost = platforms.iter().map(|p| p.cost).sum();
+    on_event(&ExecEvent::Finished { makespan_secs, cost, failures });
+    Ok(ExecutionReport {
+        makespan_secs,
+        cost,
+        platforms,
+        prices,
+        failures,
+        chunks: done_count,
+        retries,
+        migrations,
+    })
+}
+
+/// Mark one chunk terminally resolved; flips the scheduler to done (waking
+/// every worker) when it was the last.
+fn resolve_chunk(sched: &Mutex<Sched>, available: &Condvar) {
+    let mut g = sched.lock().unwrap();
+    g.outstanding -= 1;
+    if g.outstanding == 0 {
+        g.done = true;
+        drop(g);
+        available.notify_all();
+    }
+}
+
+/// Deterministic merge of one task's chunk statistics: sorted by offset
+/// (so scheduling order never changes the float association), fold-merged,
+/// discounted. None when no paths survived. BOTH executor paths price
+/// through this single kernel — the 1e-9 chunked-vs-static equivalence
+/// depends on them merging identically.
+fn merge_chunk_stats(
+    stats: &mut [(u64, PayoffStats)],
+    discount: f64,
+) -> Option<PriceEstimate> {
+    stats.sort_by_key(|(offset, _)| *offset);
+    let merged = stats
+        .iter()
+        .fold(PayoffStats::default(), |acc, (_, s)| acc.merge(s));
+    if merged.n > 0 {
+        Some(combine(&merged, discount))
+    } else {
+        None
+    }
+}
+
+/// Price a completed task and emit its [`ExecEvent::TaskPriced`] event.
+fn price_task(
+    task: usize,
+    workload: &Workload,
+    chunk_stats: &mut [Vec<(u64, PayoffStats)>],
+    task_failures: &[usize],
+    prices: &mut [Option<PriceEstimate>],
+    on_event: &mut dyn FnMut(&ExecEvent),
+) {
+    let Some(estimate) =
+        merge_chunk_stats(&mut chunk_stats[task], workload.tasks[task].discount())
+    else {
+        return; // every slice failed: no estimate
+    };
+    prices[task] = Some(estimate);
+    on_event(&ExecEvent::TaskPriced { task, estimate, partial: task_failures[task] > 0 });
+}
+
+/// Lane with the earliest drift-scaled estimated finish for `chunk`;
+/// `avoid` (the lane a failure was just observed on) is excluded whenever
+/// an alternative exists.
+fn earliest_finish_lane(
+    lanes: &[Lane],
+    coeffs: &Coeffs,
+    chunk: &Chunk,
+    avoid: Option<usize>,
+) -> usize {
+    let candidates: Vec<usize> = match avoid {
+        Some(a) if lanes.len() > 1 => (0..lanes.len()).filter(|&i| i != a).collect(),
+        _ => (0..lanes.len()).collect(),
+    };
+    candidates
+        .into_iter()
+        .min_by(|&a, &b| {
+            let fa = lane_finish(&lanes[a]) + coeffs.est(a, chunk) * lanes[a].drift;
+            let fb = lane_finish(&lanes[b]) + coeffs.est(b, chunk) * lanes[b].drift;
+            fa.total_cmp(&fb)
+        })
+        .expect("non-empty cluster")
+}
+
+fn lane_finish(lane: &Lane) -> f64 {
+    lane.time + lane.queued_secs * lane.drift
+}
+
+/// Model-guided work stealing: move the tail chunk of the worst straggling
+/// lane (measured drift beyond tolerance, work still queued) to the lane
+/// with the earliest estimated finish — but only when that actually helps.
+fn try_rebalance(
+    sched: &Mutex<Sched>,
+    coeffs: &Coeffs,
+    tolerance: f64,
+) -> Option<ExecEvent> {
+    let mut g = sched.lock().unwrap();
+    let laggard = (0..g.lanes.len())
+        .filter(|&i| {
+            let l = &g.lanes[i];
+            l.drift_obs > 0 && l.drift > 1.0 + tolerance && !l.queue.is_empty()
+        })
+        .max_by(|&a, &b| lane_finish(&g.lanes[a]).total_cmp(&lane_finish(&g.lanes[b])))?;
+    let target = (0..g.lanes.len())
+        .filter(|&i| i != laggard)
+        .min_by(|&a, &b| lane_finish(&g.lanes[a]).total_cmp(&lane_finish(&g.lanes[b])))?;
+    let chunk = *g.lanes[laggard].queue.back().unwrap();
+    let gain_ok = lane_finish(&g.lanes[target]) + coeffs.est(target, &chunk) * g.lanes[target].drift
+        < lane_finish(&g.lanes[laggard]);
+    if !gain_ok {
+        return None;
+    }
+    g.lanes[laggard].queue.pop_back();
+    g.lanes[laggard].queued_secs =
+        (g.lanes[laggard].queued_secs - coeffs.est(laggard, &chunk)).max(0.0);
+    g.lanes[target].queued_secs += coeffs.est(target, &chunk);
+    g.lanes[target].queue.push_back(chunk);
+    Some(ExecEvent::ChunkMigrated {
+        from: laggard,
+        to: target,
+        task: chunk.task,
+        offset: chunk.offset,
+        n: chunk.n,
+    })
+}
+
+/// The pre-chunking one-shot path: every (platform, task) slice executes as
+/// a single call, platforms run in parallel. Kept as the equivalence
+/// baseline (`benches/perf_executor.rs`, `tests/executor_chunked.rs`) — the
+/// chunked scheduler must reproduce this report under a noise-free
+/// simulator with rebalancing off.
+pub fn execute_static(
+    cluster: &Cluster,
+    workload: &Workload,
+    alloc: &Allocation,
+    cfg: &ExecutorConfig,
+) -> Result<ExecutionReport> {
+    check_shapes(cluster, workload, alloc)?;
+    let tau = workload.len();
+    let (splits, offsets) = slice_layout(workload, alloc);
+
     struct LaneOut {
         latency: f64,
         sims: u64,
         errors: Vec<String>,
-        stats: Vec<(usize, PayoffStats)>, // (task, slice stats)
+        stats: Vec<(usize, u64, PayoffStats)>, // (task, offset, slice stats)
     }
     let lane_outs: Vec<LaneOut> = parallel_map(
         (0..cluster.len()).collect(),
-        cfg.threads.max(1),
+        cfg.workers.max(1),
         |i| {
-            let platform: &Arc<_> = cluster.platform(i);
-            let mut lane = clock.lane();
-            let mut out =
-                LaneOut { latency: 0.0, sims: 0, errors: Vec::new(), stats: Vec::new() };
+            let platform = cluster.platform(i);
+            let mut out = LaneOut { latency: 0.0, sims: 0, errors: Vec::new(), stats: Vec::new() };
             for (j, task) in workload.tasks.iter().enumerate() {
                 let n = splits[j][i];
                 if n == 0 || alloc.get(i, j) <= ALLOC_TOL {
                     continue;
                 }
-                let offset = (offsets[j][i] % u32::MAX as u64) as u32;
-                let r = platform.execute(task, n, cfg.seed, offset);
-                lane.advance(r.latency_secs);
+                let offset = offsets[j][i];
+                let r = platform.execute(task, n, cfg.seed, ChunkCtx::cold(offset));
+                out.latency += r.latency_secs;
                 out.sims += n;
                 match (r.stats, r.error) {
-                    (Some(s), None) => out.stats.push((j, s)),
+                    (Some(s), None) => out.stats.push((j, offset, s)),
                     (_, err) => out.errors.push(err.unwrap_or_else(|| "unknown".into())),
                 }
             }
-            out.latency = lane.now_secs();
             out
         },
     );
 
-    // Merge per-task statistics across platforms.
-    let mut merged: Vec<PayoffStats> = vec![PayoffStats::default(); tau];
+    // Merge per-task statistics across platforms in offset order (the same
+    // deterministic order the chunked path uses).
+    let mut per_task: Vec<Vec<(u64, PayoffStats)>> = vec![Vec::new(); tau];
     let mut failures = 0usize;
+    let mut chunks = 0usize;
     let specs = cluster.specs();
     let mut platforms = Vec::with_capacity(cluster.len());
     for (i, lane) in lane_outs.iter().enumerate() {
-        for (j, s) in &lane.stats {
-            merged[*j] = merged[*j].merge(s);
+        for (j, offset, s) in &lane.stats {
+            per_task[*j].push((*offset, *s));
+            chunks += 1;
         }
         failures += lane.errors.len();
         let cm = specs[i].cost_model();
@@ -154,17 +769,20 @@ pub fn execute(
             errors: lane.errors.clone(),
         });
     }
-    let prices = merged
-        .iter()
+    let prices = per_task
+        .iter_mut()
         .zip(&workload.tasks)
-        .map(|(s, t)| if s.n > 0 { Some(combine(s, t.discount())) } else { None })
+        .map(|(stats, t)| merge_chunk_stats(stats, t.discount()))
         .collect();
     Ok(ExecutionReport {
-        makespan_secs: clock.high_water_secs(),
+        makespan_secs: platforms.iter().map(|p| p.latency_secs).fold(0.0f64, f64::max),
         cost: platforms.iter().map(|p| p.cost).sum(),
         platforms,
         prices,
         failures,
+        chunks,
+        retries: 0,
+        migrations: 0,
     })
 }
 
@@ -261,15 +879,109 @@ mod tests {
     }
 
     #[test]
-    fn failure_injection_is_reported() {
+    fn chunked_equals_static_under_exact_sim() {
+        // The refactor's core guarantee, at unit scale (the integration
+        // test covers the full matrix): small chunks + retries + the
+        // event loop reproduce the one-shot report.
+        let (cluster, workload, models) = setup();
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let base = ExecutorConfig::default();
+        let chunked = ExecutorConfig {
+            chunk_sims: 1 << 15,
+            rebalance: RebalanceConfig { enabled: false, ..Default::default() },
+            ..base.clone()
+        };
+        let rs = execute_static(&cluster, &workload, &alloc, &base).unwrap();
+        let rc = execute(&cluster, &workload, &alloc, &chunked).unwrap();
+        assert!(
+            (rs.makespan_secs - rc.makespan_secs).abs() < 1e-9,
+            "{} vs {}",
+            rs.makespan_secs,
+            rc.makespan_secs
+        );
+        assert!((rs.cost - rc.cost).abs() < 1e-9);
+        for (a, b) in rs.prices.iter().zip(&rc.prices) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert!((a.price - b.price).abs() < 1e-9);
+            assert_eq!(a.n, b.n);
+        }
+        assert!(rc.chunks > rs.chunks, "chunking must actually split slices");
+    }
+
+    #[test]
+    fn event_stream_reports_progress_and_prices() {
+        let (cluster, workload, models) = setup();
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let cfg = ExecutorConfig { chunk_sims: 1 << 16, ..Default::default() };
+        let mut started = 0usize;
+        let mut done = 0usize;
+        let mut priced = Vec::new();
+        let mut finished = false;
+        let rep = execute_with(&cluster, &workload, &alloc, &cfg, Some(&models), &mut |ev| {
+            match ev {
+                ExecEvent::Started { chunks, .. } => started = *chunks,
+                ExecEvent::ChunkDone { .. } => done += 1,
+                ExecEvent::TaskPriced { task, .. } => priced.push(*task),
+                ExecEvent::Finished { .. } => finished = true,
+                _ => {}
+            }
+        })
+        .unwrap();
+        assert!(started > 0);
+        assert_eq!(done, started);
+        assert_eq!(done, rep.chunks);
+        priced.sort();
+        assert_eq!(priced, (0..workload.len()).collect::<Vec<_>>());
+        assert!(finished);
+    }
+
+    #[test]
+    fn failure_injection_without_retries_matches_legacy_reporting() {
         let specs = small_cluster();
         let cluster =
             Cluster::simulated(&specs, &SimConfig { failure_rate: 1.0, ..SimConfig::exact() }, 3);
         let workload = generate(&GeneratorConfig::small(3, 0.05, 1));
         let alloc = Allocation::single_platform(3, 3, 1);
-        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        let cfg = ExecutorConfig {
+            chunk_sims: 0, // one chunk per slice, like the legacy path
+            retry: RetryConfig { max_attempts: 1, rehome: false },
+            ..Default::default()
+        };
+        let rep = execute(&cluster, &workload, &alloc, &cfg).unwrap();
         assert_eq!(rep.failures, 3);
+        assert_eq!(rep.retries, 0);
         assert!(rep.prices.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn retries_rehome_around_a_failing_platform() {
+        // One platform always fails; with re-homing retries every task
+        // still gets its price.
+        let specs = small_cluster();
+        use crate::platforms::sim::SimPlatform;
+        use crate::platforms::Platform;
+        use std::sync::Arc;
+        let mut platforms: Vec<Arc<dyn Platform>> = Vec::new();
+        for (i, s) in specs.iter().enumerate() {
+            let sim = if i == 0 {
+                SimConfig { failure_rate: 1.0, ..SimConfig::exact() }
+            } else {
+                SimConfig::exact()
+            };
+            platforms.push(Arc::new(SimPlatform::new(s.clone(), sim, 21 + i as u64)));
+        }
+        let cluster = Cluster::new(platforms);
+        let workload = generate(&GeneratorConfig::small(4, 0.05, 9));
+        let alloc = Allocation::proportional(3, 4, &[1.0, 1.0, 1.0]);
+        let cfg = ExecutorConfig {
+            chunk_sims: 1 << 16,
+            retry: RetryConfig { max_attempts: 4, rehome: true },
+            ..Default::default()
+        };
+        let rep = execute(&cluster, &workload, &alloc, &cfg).unwrap();
+        assert!(rep.retries > 0, "the failing platform must trigger retries");
+        assert_eq!(rep.failures, 0, "re-homed retries must land on healthy platforms");
+        assert!(rep.prices.iter().all(Option::is_some));
     }
 
     #[test]

@@ -11,7 +11,10 @@ pub mod partitioner;
 
 pub use allocation::Allocation;
 pub use benchmarker::{benchmark, BenchmarkConfig, BenchmarkReport};
-pub use executor::{execute, ExecutionReport, ExecutorConfig};
+pub use executor::{
+    execute, execute_static, execute_with, ExecEvent, ExecutionReport, ExecutorConfig,
+    RebalanceConfig, RetryConfig,
+};
 pub use objectives::ModelSet;
 pub use pareto::{sweep, SweepConfig, TradeoffCurve, TradeoffPoint};
 pub use partitioner::{HeuristicPartitioner, MilpConfig, MilpPartitioner, Partitioner};

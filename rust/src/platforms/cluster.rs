@@ -7,7 +7,7 @@ use crate::workload::option::OptionTask;
 
 use super::sim::{SimConfig, SimPlatform};
 use super::spec::PlatformSpec;
-use super::{ExecOutcome, Platform};
+use super::{ChunkCtx, ExecOutcome, Platform};
 
 /// A heterogeneous cluster. Platforms are shared (`Arc`) so executor worker
 /// threads can dispatch concurrently.
@@ -71,8 +71,15 @@ impl Cluster {
     }
 
     /// Execute on platform `i` (convenience passthrough).
-    pub fn execute(&self, i: usize, task: &OptionTask, n: u64, seed: u32, offset: u32) -> ExecOutcome {
-        self.platforms[i].execute(task, n, seed, offset)
+    pub fn execute(
+        &self,
+        i: usize,
+        task: &OptionTask,
+        n: u64,
+        seed: u32,
+        ctx: ChunkCtx,
+    ) -> ExecOutcome {
+        self.platforms[i].execute(task, n, seed, ctx)
     }
 }
 
@@ -92,7 +99,7 @@ mod tests {
     fn execute_passthrough_works() {
         let c = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 1);
         let w = generate(&GeneratorConfig::small(1, 0.1, 2));
-        let out = c.execute(0, &w.tasks[0], 10_000, 1, 0);
+        let out = c.execute(0, &w.tasks[0], 10_000, 1, ChunkCtx::cold(0));
         assert!(out.error.is_none());
         assert!(out.latency_secs > 0.0);
     }

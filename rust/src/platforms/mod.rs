@@ -25,19 +25,56 @@ pub struct ExecOutcome {
     pub error: Option<String>,
 }
 
-/// A compute platform the coordinator can dispatch Monte Carlo work to.
+/// Per-chunk execution context — how the chunked executor tells a platform
+/// *where* a chunk sits in a task's path space and *what came before it* on
+/// this platform.
 ///
-/// `offset` is the starting path counter of this platform's slice of the
-/// task's path space; disjoint slices compose to exactly the statistics of
-/// a single-platform run (counter-based RNG — see `pricing::mc`).
+/// `offset` is the starting path counter of the chunk in the task's global
+/// (u64) path space; disjoint chunks compose to exactly the statistics of a
+/// single-platform run (counter-based RNG — see `pricing::mc`). Offsets are
+/// 64-bit because tasks run up to `1 << 34` simulations: a 32-bit offset
+/// would wrap and overlap RNG counter ranges, biasing merged prices.
+///
+/// `prior_sims` is the number of this task's simulations this platform has
+/// already *successfully* executed before this chunk. Platforms use it as a
+/// chunk hint: a cold chunk (`prior_sims == 0`) pays the per-task setup
+/// cost, a warm continuation does not — which is what makes a chunked run
+/// latency-identical to a one-shot slice. The simulator also budgets its
+/// capped payoff statistics per (platform, task) stream rather than per
+/// call, so chunked and unchunked runs produce identical statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkCtx {
+    /// Start of this chunk in the task's global path-counter space.
+    pub offset: u64,
+    /// Simulations of this task already completed on this platform
+    /// (0 = cold start: the platform charges setup).
+    pub prior_sims: u64,
+}
+
+impl ChunkCtx {
+    /// A cold (first-dispatch) chunk starting at `offset`.
+    pub fn cold(offset: u64) -> ChunkCtx {
+        ChunkCtx { offset, prior_sims: 0 }
+    }
+
+    /// Whether this chunk pays the per-task setup cost.
+    pub fn is_cold(&self) -> bool {
+        self.prior_sims == 0
+    }
+}
+
+/// A compute platform the coordinator can dispatch Monte Carlo work to.
 pub trait Platform: Send + Sync {
     fn spec(&self) -> &PlatformSpec;
-    fn execute(&self, task: &OptionTask, n: u64, seed: u32, offset: u32) -> ExecOutcome;
+
+    /// Execute `n` simulations of `task` — one chunk of a (platform, task)
+    /// slice, located by `ctx` (see [`ChunkCtx`]).
+    fn execute(&self, task: &OptionTask, n: u64, seed: u32, ctx: ChunkCtx) -> ExecOutcome;
 
     /// Timing-only execution for the §III.A benchmarking procedure —
     /// platforms that can skip producing payoff statistics (the simulator)
     /// override this; the native platform's pricing IS its latency.
     fn benchmark_execute(&self, task: &OptionTask, n: u64, seed: u32) -> ExecOutcome {
-        self.execute(task, n, seed, 0)
+        self.execute(task, n, seed, ChunkCtx::cold(0))
     }
 }

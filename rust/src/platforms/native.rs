@@ -8,7 +8,7 @@ use crate::runtime::EngineHandle;
 use crate::workload::option::OptionTask;
 
 use super::spec::{Category, PlatformSpec};
-use super::{ExecOutcome, Platform};
+use super::{ChunkCtx, ExecOutcome, Platform};
 
 /// A platform backed by the local PJRT CPU client (via the engine service
 /// thread — the `xla` types themselves are not `Send`).
@@ -53,12 +53,14 @@ impl Platform for NativePlatform {
         &self.spec
     }
 
-    fn execute(&self, task: &OptionTask, n: u64, seed: u32, offset: u32) -> ExecOutcome {
+    fn execute(&self, task: &OptionTask, n: u64, seed: u32, ctx: ChunkCtx) -> ExecOutcome {
         // The engine's chunk loop starts counters at 0 within a (task, seed)
         // stream; disjoint platform slices are realised by folding `offset`
         // into the seed stream instead (each platform's slice becomes an
         // independent unbiased sample — statistically equivalent to counter
-        // slicing for merged estimates).
+        // slicing for merged estimates). The 64-bit offset is folded to 32
+        // bits first; offsets below 2^32 keep the historical seed stream.
+        let offset = (ctx.offset ^ (ctx.offset >> 32)) as u32;
         let slice_seed = seed.wrapping_add(offset.rotate_left(16) | (offset & 1));
         let start = Instant::now();
         match self.engine.price(task, n, slice_seed) {

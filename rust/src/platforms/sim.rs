@@ -13,23 +13,27 @@
 //!
 //! Payoff statistics are produced by really simulating up to `stats_cap`
 //! paths of the platform's assigned counter range with the native Threefry
-//! pricer — unbiased prices without burning hours on 1e9-path tasks.
+//! pricer — unbiased prices without burning hours on 1e9-path tasks. The
+//! cap is budgeted per (platform, task) *stream*, not per call: a chunked
+//! dispatch (see [`ChunkCtx`]) produces exactly the statistics of a
+//! one-shot slice.
 
 use std::sync::Mutex;
 
 use crate::pricing::mc::{simulate, PayoffStats};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SplitMix64};
 use crate::workload::option::OptionTask;
 
 use super::spec::PlatformSpec;
-use super::{ExecOutcome, Platform};
+use super::{ChunkCtx, ExecOutcome, Platform};
 
 /// Tuning knobs for the simulation substrate.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     /// Log-sigma of the multiplicative latency noise (0 = deterministic).
     pub noise_sigma: f64,
-    /// Max paths actually simulated per execute() call for statistics.
+    /// Max paths actually simulated per (platform, task) stream for
+    /// statistics.
     pub stats_cap: u32,
     /// Spread of the hidden throughput factor (0.12 = ±12%).
     pub hidden_spread: f64,
@@ -61,6 +65,8 @@ pub struct SimPlatform {
     /// Hidden setup-time factor.
     gamma_true: f64,
     noise_rng: Mutex<Rng>,
+    /// Per-platform salt for the stateless benchmark noise stream.
+    bench_salt: u64,
 }
 
 impl SimPlatform {
@@ -69,7 +75,23 @@ impl SimPlatform {
         let mut rng = Rng::new(seed ^ 0x5143_u64.wrapping_mul(0x9E37_79B9));
         let hidden_factor = 1.0 + cfg.hidden_spread * (2.0 * rng.f64() - 1.0);
         let gamma_true = spec.setup_secs * (1.0 + 0.2 * (2.0 * rng.f64() - 1.0));
-        SimPlatform { spec, cfg, hidden_factor, gamma_true, noise_rng: Mutex::new(rng) }
+        let bench_salt = rng.next_u64();
+        SimPlatform { spec, cfg, hidden_factor, gamma_true, noise_rng: Mutex::new(rng), bench_salt }
+    }
+
+    /// As [`new`](Self::new), but with the hidden throughput factor pinned —
+    /// straggler-injection harnesses use this to make one platform slower
+    /// than any model fitted before the drift appeared.
+    pub fn with_hidden_factor(
+        spec: PlatformSpec,
+        cfg: SimConfig,
+        seed: u64,
+        hidden_factor: f64,
+    ) -> SimPlatform {
+        assert!(hidden_factor > 0.0 && hidden_factor.is_finite());
+        let mut p = SimPlatform::new(spec, cfg, seed);
+        p.hidden_factor = hidden_factor;
+        p
     }
 
     /// Ground-truth β for a task on this platform, seconds per path.
@@ -82,6 +104,17 @@ impl SimPlatform {
     pub(crate) fn gamma_true(&self) -> f64 {
         self.gamma_true
     }
+
+    /// Per-task stream budget of really-simulated statistics paths. The cap
+    /// is in *path-steps*, not paths: a 512-step Asian slice simulates
+    /// proportionally fewer paths than a terminal-value European one, so
+    /// per-stream statistics cost is uniform regardless of payoff (§Perf:
+    /// this turned the 16×128 execution from step-count-bound to flat).
+    fn stats_budget(&self, task: &OptionTask) -> u64 {
+        let path_step_budget = self.cfg.stats_cap as u64 * 64;
+        let cap = (path_step_budget / task.steps.max(1) as u64).max(64);
+        cap.min(self.cfg.stats_cap as u64)
+    }
 }
 
 impl Platform for SimPlatform {
@@ -89,40 +122,53 @@ impl Platform for SimPlatform {
         &self.spec
     }
 
-    fn execute(&self, task: &OptionTask, n: u64, seed: u32, offset: u32) -> ExecOutcome {
+    fn execute(&self, task: &OptionTask, n: u64, seed: u32, ctx: ChunkCtx) -> ExecOutcome {
         let (noise, fail_draw) = {
             let mut rng = self.noise_rng.lock().unwrap();
             (rng.lognormal_noise(self.cfg.noise_sigma), rng.f64())
         };
+        // Setup is paid once per (platform, task) stream: cold chunks carry
+        // it, warm continuations do not — chunked latency therefore sums to
+        // exactly the one-shot slice latency.
+        let setup = if ctx.is_cold() { self.gamma_true } else { 0.0 };
         if fail_draw < self.cfg.failure_rate {
             return ExecOutcome {
-                latency_secs: self.gamma_true, // failed after setup
+                latency_secs: setup, // failed after (any) setup
                 stats: None,
                 error: Some(format!("{}: injected platform failure", self.spec.name)),
             };
         }
-        let latency = (self.gamma_true + self.beta_true(task) * n as f64) * noise;
-        // Real statistics on a capped prefix of this platform's counter
-        // range. The cap is in *path-steps*, not paths: a 512-step Asian
-        // slice simulates proportionally fewer paths than a terminal-value
-        // European one, so per-slice statistics cost is uniform regardless
-        // of payoff (§Perf: this turned the 16×128 execution from
-        // step-count-bound to flat).
-        let path_step_budget = self.cfg.stats_cap as u64 * 64;
-        let cap = (path_step_budget / task.steps.max(1) as u64).max(64);
-        let sim_n = n.min(cap).min(self.cfg.stats_cap as u64) as u32;
-        let stats = simulate(task, seed, offset, sim_n);
+        let latency = (setup + self.beta_true(task) * n as f64) * noise;
+        // Real statistics on a capped prefix of this (platform, task)
+        // stream: `prior_sims` chunk-hints how much of the budget earlier
+        // chunks already consumed, so successive chunks simulate a
+        // contiguous counter range identical to the one-shot path's.
+        let budget = self.stats_budget(task);
+        let done = ctx.prior_sims.min(budget);
+        let sim_n = n.min(budget - done) as u32;
+        let stats = if sim_n > 0 {
+            simulate(task, seed, ctx.offset, sim_n)
+        } else {
+            PayoffStats::default()
+        };
         ExecOutcome { latency_secs: latency, stats: Some(stats), error: None }
     }
 
     fn benchmark_execute(&self, task: &OptionTask, n: u64, seed: u32) -> ExecOutcome {
         // Benchmarking only observes latency; skip the payoff simulation
-        // (at paper scale the benchmarker makes ~30k calls).
-        let (noise, fail_draw) = {
-            let mut rng = self.noise_rng.lock().unwrap();
-            (rng.lognormal_noise(self.cfg.noise_sigma), rng.f64())
-        };
-        let _ = seed;
+        // (at paper scale the benchmarker makes ~30k calls). The noise and
+        // failure draws are a pure function of (platform, task, n, seed) —
+        // repetitions with distinct seeds are honestly independent, and a
+        // repeated (n, seed) observation reproduces exactly.
+        let mut mix = SplitMix64::new(
+            self.bench_salt
+                ^ (seed as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (task.id as u64).rotate_left(32)
+                ^ n,
+        );
+        let mut rng = Rng::new(mix.next_u64());
+        let noise = rng.lognormal_noise(self.cfg.noise_sigma);
+        let fail_draw = rng.f64();
         if fail_draw < self.cfg.failure_rate {
             return ExecOutcome {
                 latency_secs: self.gamma_true,
@@ -154,23 +200,66 @@ mod tests {
         paper_cluster().into_iter().find(|p| p.name == "gk104").unwrap()
     }
 
+    fn cold(offset: u64) -> ChunkCtx {
+        ChunkCtx::cold(offset)
+    }
+
     #[test]
     fn latency_is_affine_in_n_without_noise() {
         let p = SimPlatform::new(gpu_spec(), SimConfig::exact(), 7);
         let t = task();
-        let l1 = p.execute(&t, 1_000_000, 1, 0).latency_secs;
-        let l2 = p.execute(&t, 2_000_000, 1, 0).latency_secs;
-        let l3 = p.execute(&t, 3_000_000, 1, 0).latency_secs;
+        let l1 = p.execute(&t, 1_000_000, 1, cold(0)).latency_secs;
+        let l2 = p.execute(&t, 2_000_000, 1, cold(0)).latency_secs;
+        let l3 = p.execute(&t, 3_000_000, 1, cold(0)).latency_secs;
         // Equal increments: affine.
         assert!(((l2 - l1) - (l3 - l2)).abs() < 1e-9);
         assert!(l1 > p.gamma_true() - 1e-9);
     }
 
     #[test]
+    fn warm_chunks_skip_setup() {
+        let p = SimPlatform::new(gpu_spec(), SimConfig::exact(), 7);
+        let t = task();
+        let whole = p.execute(&t, 2_000_000, 1, cold(0)).latency_secs;
+        let a = p.execute(&t, 1_500_000, 1, cold(0)).latency_secs;
+        let b = p
+            .execute(&t, 500_000, 1, ChunkCtx { offset: 1_500_000, prior_sims: 1_500_000 })
+            .latency_secs;
+        assert!(
+            ((a + b) - whole).abs() < 1e-9 * whole,
+            "chunked {a}+{b} vs one-shot {whole}"
+        );
+    }
+
+    #[test]
+    fn chunked_stats_match_one_shot_slice() {
+        // The per-stream stats budget: chunk hints make a chunked dispatch
+        // produce exactly the one-shot statistics.
+        let cfg = SimConfig { stats_cap: 4096, ..SimConfig::exact() };
+        let p = SimPlatform::new(gpu_spec(), cfg, 5);
+        let t = task();
+        let whole = p.execute(&t, 1 << 20, 1, cold(0)).stats.unwrap();
+        let c1 = p.execute(&t, 1024, 1, cold(0)).stats.unwrap();
+        let c2 = p
+            .execute(&t, 4096, 1, ChunkCtx { offset: 1024, prior_sims: 1024 })
+            .stats
+            .unwrap();
+        let c3 = p
+            .execute(&t, (1 << 20) - 5120, 1, ChunkCtx { offset: 5120, prior_sims: 5120 })
+            .stats
+            .unwrap();
+        let merged = c1.merge(&c2).merge(&c3);
+        assert_eq!(whole.n, merged.n);
+        assert!((whole.sum - merged.sum).abs() < 1e-9 * whole.sum.abs().max(1.0));
+        assert!((whole.sum_sq - merged.sum_sq).abs() < 1e-9 * whole.sum_sq.abs().max(1.0));
+    }
+
+    #[test]
     fn noise_perturbs_but_preserves_scale() {
         let p = SimPlatform::new(gpu_spec(), SimConfig::default(), 7);
         let t = task();
-        let ls: Vec<f64> = (0..20).map(|_| p.execute(&t, 1 << 20, 1, 0).latency_secs).collect();
+        let ls: Vec<f64> =
+            (0..20).map(|_| p.execute(&t, 1 << 20, 1, cold(0)).latency_secs).collect();
         let mean = ls.iter().sum::<f64>() / ls.len() as f64;
         assert!(ls.iter().any(|l| (l - mean).abs() > 1e-12), "no noise observed");
         for l in &ls {
@@ -184,6 +273,14 @@ mod tests {
         let b = SimPlatform::new(gpu_spec(), SimConfig::default(), 2);
         let t = task();
         assert_ne!(a.beta_true(&t), b.beta_true(&t));
+    }
+
+    #[test]
+    fn hidden_factor_override_scales_latency() {
+        let base = SimPlatform::new(gpu_spec(), SimConfig::exact(), 3);
+        let slow = SimPlatform::with_hidden_factor(gpu_spec(), SimConfig::exact(), 3, 5.0);
+        let t = task();
+        assert!((slow.beta_true(&t) / base.beta_true(&t) - 5.0).abs() < 1e-9);
     }
 
     #[test]
@@ -202,7 +299,7 @@ mod tests {
         let p = SimPlatform::new(gpu_spec(), SimConfig::exact(), 5);
         let mut t = task();
         t.payoff = Payoff::European;
-        let out = p.execute(&t, 1 << 20, 42, 0);
+        let out = p.execute(&t, 1 << 20, 42, cold(0));
         let est = combine(&out.stats.unwrap(), t.discount());
         let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
         assert!((est.price - bs).abs() < 5.0 * est.std_error + 0.05, "{est:?} vs {bs}");
@@ -212,7 +309,7 @@ mod tests {
     fn stats_capped() {
         let cfg = SimConfig { stats_cap: 1024, ..SimConfig::exact() };
         let p = SimPlatform::new(gpu_spec(), cfg, 5);
-        let out = p.execute(&task(), 1 << 22, 1, 0);
+        let out = p.execute(&task(), 1 << 22, 1, cold(0));
         assert_eq!(out.stats.unwrap().n, 1024);
     }
 
@@ -220,8 +317,26 @@ mod tests {
     fn failure_injection_fires() {
         let cfg = SimConfig { failure_rate: 1.0, ..SimConfig::exact() };
         let p = SimPlatform::new(gpu_spec(), cfg, 5);
-        let out = p.execute(&task(), 1000, 1, 0);
+        let out = p.execute(&task(), 1000, 1, cold(0));
         assert!(out.error.is_some());
         assert!(out.stats.is_none());
+    }
+
+    #[test]
+    fn benchmark_noise_is_seed_reproducible_and_independent() {
+        let p = SimPlatform::new(gpu_spec(), SimConfig::default(), 11);
+        let t = task();
+        // Same (n, seed): identical observation.
+        let a = p.benchmark_execute(&t, 1 << 20, 42).latency_secs;
+        let b = p.benchmark_execute(&t, 1 << 20, 42).latency_secs;
+        assert_eq!(a, b, "benchmark draws must be a pure function of the seed");
+        // Distinct seeds: independent noise draws.
+        let c = p.benchmark_execute(&t, 1 << 20, 43).latency_secs;
+        assert_ne!(a, c, "distinct seeds must decorrelate repetitions");
+        // Noise-free: the ground-truth latency regardless of seed.
+        let q = SimPlatform::new(gpu_spec(), SimConfig::exact(), 11);
+        let d = q.benchmark_execute(&t, 1 << 20, 42).latency_secs;
+        let e = q.benchmark_execute(&t, 1 << 20, 7).latency_secs;
+        assert!((d - e).abs() < 1e-12);
     }
 }

@@ -51,12 +51,38 @@ pub fn combine(stats: &PayoffStats, discount: f64) -> PriceEstimate {
     }
 }
 
-/// Simulate `n` paths of `task` starting at path counter `offset` under
-/// `(task.id, seed)`. Matches the kernels' counter bijection, so chunked /
-/// partitioned execution composes to identical statistics.
-pub fn simulate(task: &OptionTask, seed: u32, offset: u32, n: u32) -> PayoffStats {
+/// How far the step counter reaches into the second Threefry word: the low
+/// [`STEP_BITS`] bits of `c1` carry the path step, the high bits carry the
+/// overflow (bits 32+) of the 64-bit path counter. For paths below `2^32`
+/// the layout is bit-identical to the original 32-bit scheme (`c1 = step`),
+/// so golden values and artifact cross-checks are unaffected; beyond it the
+/// counter space extends to `2^(32 + 32 - STEP_BITS)` paths without any
+/// (path, step) collision as long as `steps < 2^STEP_BITS`.
+pub const STEP_BITS: u32 = 20;
+
+/// Simulate `n` paths of `task` starting at (64-bit) path counter `offset`
+/// under `(task.id, seed)`. Matches the kernels' counter bijection, so
+/// chunked / partitioned execution composes to identical statistics.
+///
+/// `offset` is 64-bit because tasks are sized up to `1 << 34` simulations;
+/// a 32-bit offset would wrap and overlap slices (see [`STEP_BITS`] for how
+/// the extra bits are folded into the counter pair).
+pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStats {
     let k0 = task.id as u32;
     let k1 = seed;
+    debug_assert!(
+        task.steps < (1 << STEP_BITS),
+        "task {}: {} steps exceed the counter layout's 2^{STEP_BITS} budget",
+        task.id,
+        task.steps
+    );
+    // Split the 64-bit path index into the first counter word plus a c1
+    // high-bits overflow (zero for paths < 2^32 — bit-compatible with the
+    // original u32 layout).
+    let ctr = |p: u32| -> (u32, u32) {
+        let g = offset.wrapping_add(p as u64);
+        (g as u32, ((g >> 32) as u32) << STEP_BITS)
+    };
     let (s0, k, r, sigma, t) = (
         task.spot as f32,
         task.strike as f32,
@@ -71,7 +97,8 @@ pub fn simulate(task: &OptionTask, seed: u32, offset: u32, n: u32) -> PayoffStat
             let drift = (r - 0.5 * sigma * sigma) * t;
             let vol = sigma * t.sqrt();
             for p in 0..n {
-                let z = threefry_normal(k0, k1, offset.wrapping_add(p), 0);
+                let (c0, hi) = ctr(p);
+                let z = threefry_normal(k0, k1, c0, hi);
                 let st = s0 * (drift + vol * z).exp();
                 let payoff = (st - k).max(0.0) as f64;
                 sum += payoff;
@@ -84,11 +111,11 @@ pub fn simulate(task: &OptionTask, seed: u32, offset: u32, n: u32) -> PayoffStat
             let drift = (r - 0.5 * sigma * sigma) * dt;
             let vol = sigma * dt.sqrt();
             for p in 0..n {
-                let ctr0 = offset.wrapping_add(p);
+                let (c0, hi) = ctr(p);
                 let mut log_s = s0.ln();
                 let mut acc = 0.0f32;
                 for step in 0..steps {
-                    let z = threefry_normal(k0, k1, ctr0, step);
+                    let z = threefry_normal(k0, k1, c0, hi | step);
                     log_s += drift + vol * z;
                     acc += log_s.exp();
                 }
@@ -104,11 +131,11 @@ pub fn simulate(task: &OptionTask, seed: u32, offset: u32, n: u32) -> PayoffStat
             let drift = (r - 0.5 * sigma * sigma) * dt;
             let vol = sigma * dt.sqrt();
             for p in 0..n {
-                let ctr0 = offset.wrapping_add(p);
+                let (c0, hi) = ctr(p);
                 let mut log_s = s0.ln();
                 let mut alive = s0 < barrier;
                 for step in 0..steps {
-                    let z = threefry_normal(k0, k1, ctr0, step);
+                    let z = threefry_normal(k0, k1, c0, hi | step);
                     log_s += drift + vol * z;
                     alive = alive && log_s.exp() < barrier;
                 }
@@ -171,6 +198,50 @@ mod tests {
         assert!((whole.sum - merged.sum).abs() < 1e-9 * whole.sum.abs().max(1.0));
         assert!((whole.sum_sq - merged.sum_sq).abs() < 1e-9 * whole.sum_sq.abs().max(1.0));
         assert_eq!(whole.n, merged.n);
+    }
+
+    #[test]
+    fn chunking_is_additive_across_the_u32_boundary() {
+        // The offsets that used to wrap at 32 bits: a slice straddling
+        // 2^32 must merge exactly like any other contiguous pair.
+        let t = european();
+        let base = (1u64 << 32) - 1024;
+        let whole = simulate(&t, 1, base, 4096);
+        let lo = simulate(&t, 1, base, 1024);
+        let hi = simulate(&t, 1, base + 1024, 3072);
+        let merged = lo.merge(&hi);
+        assert!((whole.sum - merged.sum).abs() < 1e-9 * whole.sum.abs().max(1.0));
+        assert_eq!(whole.n, merged.n);
+    }
+
+    #[test]
+    fn high_offsets_are_fresh_unbiased_streams() {
+        // Slices above 2^32 must neither repeat the low-offset stream (the
+        // old truncation bug) nor drift from the true price.
+        let t = european();
+        let lo = simulate(&t, 1, 0, 1 << 14);
+        let hi = simulate(&t, 1, 1u64 << 33, 1 << 14);
+        assert_ne!(lo.sum, hi.sum, "high offsets replayed the low stream");
+        let pl = combine(&lo, t.discount());
+        let ph = combine(&hi, t.discount());
+        assert!(
+            (pl.price - ph.price).abs() < 4.0 * (pl.std_error + ph.std_error),
+            "{pl:?} vs {ph:?}"
+        );
+    }
+
+    #[test]
+    fn path_dependent_counters_survive_high_offsets() {
+        // Asian payoffs use the step word; the folded high bits must not
+        // collide with steps (and the estimate must stay sane).
+        let mut t = european();
+        t.payoff = Payoff::Asian;
+        t.steps = 32;
+        let a = simulate(&t, 9, 1u64 << 33, 1 << 12);
+        let b = simulate(&t, 9, 0, 1 << 12);
+        assert_ne!(a.sum, b.sum);
+        let est = combine(&a, t.discount());
+        assert!(est.price >= 0.0 && est.price < t.spot);
     }
 
     #[test]

@@ -1,12 +1,10 @@
 //! Support substrates: the offline build environment only provides the `xla`
-//! crate, so JSON/TOML parsing, RNG, statistics, tables/plots, a thread pool
-//! and a virtual clock are implemented here (see DESIGN.md §2, substitution
-//! ledger).
+//! crate, so JSON/TOML parsing, RNG, statistics, tables/plots and a thread
+//! pool are implemented here (see DESIGN.md §2, substitution ledger).
 
 pub mod json;
 pub mod plot;
 pub mod rng;
-pub mod sim_time;
 pub mod stats;
 pub mod table;
 pub mod threadpool;

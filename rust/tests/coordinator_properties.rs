@@ -167,7 +167,12 @@ fn partial_platform_failures_are_survivable() {
     let models = ModelSet::from_specs(&specs, &workload);
     let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
     let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
-    assert!(rep.failures > 0, "failure injection never fired at rate 0.5");
+    // With the chunked executor's default retries most injected failures
+    // are absorbed as retries; either way the injection must be visible.
+    assert!(
+        rep.failures + rep.retries > 0,
+        "failure injection never fired at rate 0.5"
+    );
     assert!(rep.failures < 30, "everything failed");
     // Some tasks should still be priced by surviving slices.
     assert!(rep.prices.iter().any(Option::is_some));

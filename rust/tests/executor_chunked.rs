@@ -1,0 +1,252 @@
+//! Recovery semantics of the event-driven chunked executor:
+//!
+//! - **equivalence**: with a noise-free simulator, rebalancing off and no
+//!   failures, the chunked scheduler reproduces the one-shot
+//!   (`execute_static`) report — makespan, cost and prices — to 1e-9;
+//! - **failure recovery**: with `failure_rate` in (0,1) and retries on,
+//!   every task keeps a price estimate within confidence bounds; with
+//!   retries off, failures zero out slices exactly like the legacy
+//!   executor reported them;
+//! - **straggler rebalancing**: a lane with a hidden 5× throughput factor
+//!   (invisible to the models) loses its queued chunks to healthy lanes,
+//!   cutting the realised makespan vs the static executor;
+//! - **u64 offsets**: tasks beyond 2^32 simulations keep counter-disjoint
+//!   slices (the old `% u32::MAX` truncation overlapped RNG ranges).
+
+use std::sync::Arc;
+
+use cloudshapes::coordinator::executor::{
+    execute, execute_static, execute_with, ExecutorConfig, RebalanceConfig, RetryConfig,
+};
+use cloudshapes::coordinator::{Allocation, HeuristicPartitioner, ModelSet};
+use cloudshapes::platforms::spec::small_cluster;
+use cloudshapes::platforms::{Cluster, Platform, SimConfig, SimPlatform};
+use cloudshapes::pricing::blackscholes;
+use cloudshapes::workload::option::{OptionTask, Payoff};
+use cloudshapes::workload::{generate, GeneratorConfig, Workload};
+
+fn exact_setup(n_tasks: usize) -> (Cluster, Workload, ModelSet) {
+    let specs = small_cluster();
+    let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21);
+    let workload = generate(&GeneratorConfig::small(n_tasks, 0.02, 13));
+    let models = ModelSet::from_specs(&specs, &workload);
+    (cluster, workload, models)
+}
+
+/// Chunk finely and disable rebalancing — the configuration the equivalence
+/// guarantee is stated for.
+fn chunked_cfg() -> ExecutorConfig {
+    ExecutorConfig {
+        chunk_sims: 1 << 15,
+        rebalance: RebalanceConfig { enabled: false, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn chunked_reproduces_static_execution_to_1e9() {
+    let (cluster, workload, models) = exact_setup(16);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let rs = execute_static(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+    let rc = execute(&cluster, &workload, &alloc, &chunked_cfg()).unwrap();
+
+    assert!(rc.chunks > rs.chunks, "chunking must split slices ({} vs {})", rc.chunks, rs.chunks);
+    assert_eq!((rc.failures, rc.retries, rc.migrations), (0, 0, 0));
+    let tol = |x: f64| 1e-9 * x.abs().max(1.0);
+    assert!(
+        (rs.makespan_secs - rc.makespan_secs).abs() < tol(rs.makespan_secs),
+        "makespan {} vs {}",
+        rs.makespan_secs,
+        rc.makespan_secs
+    );
+    assert!((rs.cost - rc.cost).abs() < tol(rs.cost), "cost {} vs {}", rs.cost, rc.cost);
+    for (i, (a, b)) in rs.platforms.iter().zip(&rc.platforms).enumerate() {
+        assert!(
+            (a.latency_secs - b.latency_secs).abs() < tol(a.latency_secs),
+            "platform {i} lane time {} vs {}",
+            a.latency_secs,
+            b.latency_secs
+        );
+        assert_eq!(a.sims, b.sims, "platform {i} sims");
+        assert_eq!(a.quanta, b.quanta, "platform {i} quanta");
+    }
+    for (j, (a, b)) in rs.prices.iter().zip(&rc.prices).enumerate() {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(a.n, b.n, "task {j} path count");
+        assert!((a.price - b.price).abs() < 1e-9, "task {j}: {} vs {}", a.price, b.price);
+        assert!((a.std_error - b.std_error).abs() < 1e-9, "task {j} std error");
+    }
+
+    // Rebalancing left on must be a no-op when nothing drifts from the
+    // model (exact simulator): still the same report.
+    let on = ExecutorConfig {
+        rebalance: RebalanceConfig { enabled: true, ..Default::default() },
+        ..chunked_cfg()
+    };
+    let rr = execute_with(&cluster, &workload, &alloc, &on, Some(&models), &mut |_| {}).unwrap();
+    assert_eq!(rr.migrations, 0, "exact sim must not trigger migrations");
+    assert!((rr.makespan_secs - rs.makespan_secs).abs() < tol(rs.makespan_secs));
+}
+
+#[test]
+fn failures_with_retries_never_lose_a_price() {
+    // The acceptance bar: failure_rate 0.3, retries on -> zero tasks lose
+    // their estimate, and surviving statistics stay unbiased.
+    let specs = small_cluster();
+    let cluster = Cluster::simulated(
+        &specs,
+        &SimConfig { failure_rate: 0.3, ..SimConfig::exact() },
+        77,
+    );
+    let workload = generate(&GeneratorConfig {
+        n_tasks: 8,
+        seed: 5,
+        accuracy: 0.02,
+        payoff_mix: (1.0, 0.0, 0.0), // closed-form checkable
+        step_choices: vec![64],
+    });
+    let models = ModelSet::from_specs(&specs, &workload);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let cfg = ExecutorConfig {
+        chunk_sims: 1 << 15,
+        retry: RetryConfig { max_attempts: 6, rehome: true },
+        ..Default::default()
+    };
+    let rep = execute(&cluster, &workload, &alloc, &cfg).unwrap();
+    assert!(rep.retries > 0, "a 30% failure rate must trigger retries");
+    for (t, price) in workload.tasks.iter().zip(&rep.prices) {
+        let est = price.as_ref().unwrap_or_else(|| panic!("task {} lost its price", t.id));
+        let bs = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(
+            (est.price - bs).abs() < 6.0 * est.std_error + 0.1,
+            "task {}: {est:?} vs bs {bs}",
+            t.id
+        );
+    }
+}
+
+#[test]
+fn failures_without_retries_match_legacy_reporting() {
+    // max_attempts 1 + one chunk per slice IS the legacy executor: each
+    // failed slice is one reported failure and its paths are gone.
+    let specs = small_cluster();
+    let cluster = Cluster::simulated(
+        &specs,
+        &SimConfig { failure_rate: 0.3, ..SimConfig::exact() },
+        77,
+    );
+    let workload = generate(&GeneratorConfig::small(8, 0.02, 5));
+    let models = ModelSet::from_specs(&specs, &workload);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let cfg = ExecutorConfig {
+        chunk_sims: 0, // one chunk per slice
+        retry: RetryConfig { max_attempts: 1, rehome: false },
+        rebalance: RebalanceConfig { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let rep = execute(&cluster, &workload, &alloc, &cfg).unwrap();
+    assert_eq!(rep.retries, 0);
+    let recorded_errors: usize = rep.platforms.iter().map(|p| p.errors.len()).sum();
+    assert_eq!(rep.failures, recorded_errors, "every failed slice reports exactly once");
+    assert!(rep.failures > 0, "0.3 failure rate across 24 slices should fail something");
+}
+
+#[test]
+fn straggler_rebalancing_cuts_makespan() {
+    // One platform is secretly 5x slower than every model believes. The
+    // static executor eats the full straggler lane; rebalancing migrates
+    // its queued chunks onto healthy lanes.
+    let specs = small_cluster();
+    let straggler = specs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.app_gflops.total_cmp(&b.1.app_gflops))
+        .map(|(i, _)| i)
+        .unwrap();
+    let platforms: Vec<Arc<dyn Platform>> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| -> Arc<dyn Platform> {
+            if i == straggler {
+                Arc::new(SimPlatform::with_hidden_factor(
+                    s.clone(),
+                    SimConfig::exact(),
+                    21 + i as u64,
+                    5.0,
+                ))
+            } else {
+                Arc::new(SimPlatform::new(s.clone(), SimConfig::exact(), 21 + i as u64))
+            }
+        })
+        .collect();
+    let cluster = Cluster::new(platforms);
+    let workload = generate(&GeneratorConfig::small(8, 0.02, 13));
+    // Nominal models: they still think the straggler is fast, so the
+    // allocation loads it heavily — exactly the Fig. 3 gap scenario.
+    let models = ModelSet::from_specs(&specs, &workload);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+
+    let chunked_off = ExecutorConfig {
+        chunk_sims: 1 << 14,
+        rebalance: RebalanceConfig { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let chunked_on = ExecutorConfig {
+        rebalance: RebalanceConfig { enabled: true, tolerance: 0.25 },
+        ..chunked_off.clone()
+    };
+    let stat = execute_static(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+    let off =
+        execute_with(&cluster, &workload, &alloc, &chunked_off, Some(&models), &mut |_| {})
+            .unwrap();
+    let on = execute_with(&cluster, &workload, &alloc, &chunked_on, Some(&models), &mut |_| {})
+        .unwrap();
+
+    // Without rebalancing, chunking alone does not save the makespan.
+    assert!((off.makespan_secs - stat.makespan_secs).abs() < 1e-6 * stat.makespan_secs);
+    assert!(on.migrations > 0, "the drifting lane must shed work");
+    assert!(
+        on.makespan_secs < 0.75 * stat.makespan_secs,
+        "rebalancing should cut the straggler makespan: {} vs static {}",
+        on.makespan_secs,
+        stat.makespan_secs
+    );
+    // Work conservation: every task still fully priced.
+    assert!(on.prices.iter().all(Option::is_some));
+    assert_eq!(on.failures, 0);
+}
+
+#[test]
+fn u64_offsets_keep_giant_tasks_unbiased() {
+    // A single task with 2^33 simulations split across two platforms: the
+    // second slice's offset (2^32) used to truncate into the first slice's
+    // counter range. Virtual latency makes this cheap to actually run.
+    let specs: Vec<_> = small_cluster().into_iter().take(2).collect();
+    let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 9);
+    let task = OptionTask {
+        id: 0,
+        payoff: Payoff::European,
+        spot: 100.0,
+        strike: 105.0,
+        rate: 0.05,
+        sigma: 0.2,
+        maturity: 1.0,
+        barrier: 0.0,
+        steps: 1,
+        target_accuracy: 1e-4,
+        n_sims: 1 << 33,
+    };
+    let workload = Workload::new(vec![task.clone()]);
+    let alloc = Allocation::proportional(2, 1, &[1.0, 1.0]);
+    let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+    assert_eq!(rep.failures, 0);
+    assert_eq!(rep.platforms[0].sims + rep.platforms[1].sims, 1 << 33);
+    let est = rep.prices[0].as_ref().unwrap();
+    let bs = blackscholes::call(task.spot, task.strike, task.rate, task.sigma, task.maturity);
+    assert!(
+        (est.price - bs).abs() < 6.0 * est.std_error + 0.05,
+        "{est:?} vs bs {bs}"
+    );
+    // Both platforms contributed statistics (disjoint high/low ranges).
+    assert!(est.n > (1 << 15), "both slices' stats should merge, got {}", est.n);
+}

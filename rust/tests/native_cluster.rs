@@ -8,7 +8,7 @@ use cloudshapes::coordinator::executor::{execute, ExecutorConfig};
 use cloudshapes::coordinator::{benchmark, BenchmarkConfig, HeuristicPartitioner, ModelSet};
 use cloudshapes::platforms::native::NativePlatform;
 use cloudshapes::platforms::spec::small_cluster;
-use cloudshapes::platforms::{Cluster, Platform, SimConfig};
+use cloudshapes::platforms::{ChunkCtx, Cluster, Platform, SimConfig};
 use cloudshapes::pricing::blackscholes;
 use cloudshapes::runtime::EngineHandle;
 use cloudshapes::workload::option::Payoff;
@@ -33,9 +33,9 @@ fn native_platform_measures_real_wallclock() {
     let mut t = w.tasks[0].clone();
     t.payoff = Payoff::European;
     t.steps = 1;
-    let _warmup = native.execute(&t, 1 << 12, 1, 0); // lazy compile happens here
-    let small = native.execute(&t, 1 << 12, 1, 0);
-    let big = native.execute(&t, 1 << 19, 1, 0);
+    let _warmup = native.execute(&t, 1 << 12, 1, ChunkCtx::cold(0)); // lazy compile happens here
+    let small = native.execute(&t, 1 << 12, 1, ChunkCtx::cold(0));
+    let big = native.execute(&t, 1 << 19, 1, ChunkCtx::cold(0));
     assert!(small.error.is_none() && big.error.is_none());
     assert!(big.latency_secs > small.latency_secs, "more paths must take longer");
     assert!(big.stats.unwrap().n >= 1 << 19);
@@ -83,7 +83,7 @@ fn native_failure_path_reports_not_panics() {
     let mut t = generate(&GeneratorConfig::small(1, 0.05, 1)).tasks[0].clone();
     t.payoff = Payoff::Asian;
     t.steps = 64;
-    let out = native.execute(&t, 4096, 1, 0);
+    let out = native.execute(&t, 4096, 1, ChunkCtx::cold(0));
     // Asian artifacts exist, so this succeeds — now a nonexistent dir:
     assert!(out.error.is_none());
     assert!(EngineHandle::spawn(std::path::Path::new("/nonexistent-artifacts")).is_err());

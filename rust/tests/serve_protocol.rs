@@ -256,3 +256,102 @@ fn shutdown_while_connected_answers_before_closing() {
     let mut server = server;
     server.handle.take().unwrap().join().unwrap().unwrap();
 }
+
+#[test]
+fn background_run_and_status_over_the_wire() {
+    let server = start_exact_server();
+
+    let r = server.ask(r#"{"v":1,"op":"run","partitioner":"heuristic","budget":null}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+    assert_eq!(r.get("status").unwrap().as_str(), Some("running"));
+    let id = r.get("run_id").unwrap().as_u64().unwrap();
+
+    // Poll (on fresh connections — runs are session state, not connection
+    // state) until the executor finishes.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let done = loop {
+        let st = server.ask(&format!(r#"{{"v":1,"op":"status","run_id":{id}}}"#));
+        assert_eq!(st.get("ok"), Some(&Json::Bool(true)), "{}", st.to_string_compact());
+        match st.get("status").unwrap().as_str() {
+            Some("running") => {
+                assert!(std::time::Instant::now() < deadline, "run never finished");
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Some("done") => break st,
+            other => panic!("unexpected state {other:?}"),
+        }
+    };
+    assert!(done.get("measured_latency_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(done.get("measured_cost").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        done.get("chunks_done").unwrap().as_u64(),
+        done.get("chunks_total").unwrap().as_u64()
+    );
+    assert_eq!(done.get("tasks_priced").unwrap().as_u64(), Some(8));
+    assert_eq!(done.get("failures").unwrap().as_u64(), Some(0));
+
+    // Unknown run id: structured protocol error.
+    let r = server.ask(r#"{"v":1,"op":"status","run_id":999999}"#);
+    assert_eq!(error_kind(&r), Some("protocol"));
+
+    server.shutdown();
+}
+
+#[test]
+fn streaming_run_emits_events_then_final_response() {
+    let server = start_exact_server();
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream
+        .write_all(b"{\"v\":1,\"op\":\"run\",\"partitioner\":\"heuristic\",\"budget\":null,\"stream\":true}\n")
+        .unwrap();
+
+    // Interim lines carry an "event" key and never "ok"; the final line is
+    // the normal success envelope.
+    let mut events: Vec<Json> = Vec::new();
+    let fin = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection dropped mid-stream");
+        let parsed = Json::parse(line.trim()).unwrap();
+        assert_eq!(parsed.get("v").unwrap().as_u64(), Some(1));
+        if parsed.get("event").is_some() {
+            assert!(parsed.get("ok").is_none(), "events must not look like responses");
+            events.push(parsed);
+        } else {
+            break parsed;
+        }
+    };
+    assert_eq!(fin.get("ok"), Some(&Json::Bool(true)), "{}", fin.to_string_compact());
+    assert!(fin.get("measured_latency_s").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(fin.get("failures").unwrap().as_u64(), Some(0));
+
+    let kinds: Vec<&str> =
+        events.iter().map(|e| e.get("event").unwrap().as_str().unwrap()).collect();
+    assert_eq!(kinds.first(), Some(&"started"), "{kinds:?}");
+    assert_eq!(
+        events.iter().filter(|e| e.get("event").unwrap().as_str() == Some("task_priced")).count(),
+        8,
+        "every quick-workload task must stream its price: {kinds:?}"
+    );
+
+    // The connection still serves normal requests after a stream.
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(line.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+
+    // A streaming run with an infeasible budget fails with a single
+    // structured error line (no interim garbage left unterminated).
+    stream
+        .write_all(b"{\"v\":1,\"op\":\"run\",\"partitioner\":\"milp\",\"budget\":1e-9,\"stream\":true}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let err = Json::parse(line.trim()).unwrap();
+    assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(error_kind(&err), Some("solver"));
+
+    server.shutdown();
+}
