@@ -26,7 +26,7 @@ fn main() {
     let runs = if smoke { 1 } else { 5 };
     let specs = if smoke { small_cluster() } else { paper_cluster() };
     let sim = SimConfig { stats_cap: 2048, ..SimConfig::exact() }; // noise-free
-    let cluster = Cluster::simulated(&specs, &sim, 42);
+    let cluster = Cluster::simulated(&specs, &sim, 42).unwrap();
     let workload = if smoke {
         generate(&GeneratorConfig::small(16, 0.02, 7))
     } else {
@@ -104,7 +104,8 @@ fn main() {
                 }
             })
             .collect(),
-    );
+    )
+    .unwrap();
     let slow_static = execute_static(&slow_cluster, &workload, &alloc, &static_cfg).unwrap();
     let small_chunks = ExecutorConfig { chunk_sims: chunk_sims / 4, ..rebalance_cfg.clone() };
     let slow_rebalanced =

@@ -1,0 +1,115 @@
+//! Perf: the cluster-shape optimiser — fixed Table II testbed vs an
+//! optimised composition at the SAME deadline (billed-cost comparison plus
+//! wall-clock of the outer search). Emits `results/BENCH_shape.json` so the
+//! perf trajectory accumulates data across PRs.
+//!
+//! Pass `--smoke` (the CI mode) to shrink the catalogue/workload so the
+//! bench acts as a fast regression gate: the optimised shape must never
+//! bill more than the fixed testbed at an equal deadline.
+
+mod common;
+
+use cloudshapes::coordinator::{
+    sweep, HeuristicPartitioner, ModelSet, ShapeObjective, ShapeSearch, SweepConfig,
+};
+use cloudshapes::milp::BnbLimits;
+use cloudshapes::platforms::catalogue::Catalogue;
+use cloudshapes::util::json::{obj, Json};
+use cloudshapes::workload::{generate, GeneratorConfig};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let catalogue = if smoke { Catalogue::small() } else { Catalogue::paper() };
+    let workload = if smoke {
+        generate(&GeneratorConfig::small(8, 0.02, 7))
+    } else {
+        generate(&GeneratorConfig { n_tasks: 64, ..GeneratorConfig::default() })
+    };
+    // Per-type nominal models: one row-set per catalogue offer.
+    let type_specs: Vec<_> = catalogue.offers().iter().map(|o| o.spec.clone()).collect();
+    let types = ModelSet::from_specs(&type_specs, &workload);
+    let avail = catalogue.availability();
+    let testbed_counts = catalogue.testbed_counts();
+
+    println!(
+        "== perf: shape search ({} offers, {} tasks, testbed {:?}) ==",
+        catalogue.len(),
+        workload.len(),
+        testbed_counts
+    );
+
+    // Fixed testbed: the paper heuristic's sweep over the pinned counts.
+    let heuristic = HeuristicPartitioner::default();
+    let testbed = types.replicate(&testbed_counts).expect("testbed instantiates");
+    let curve = sweep(&heuristic, &testbed, &SweepConfig { levels: 9 }).unwrap();
+    // Deadline: midway between the testbed's fastest point and 2x it —
+    // binding enough that compositions matter, loose enough to be feasible.
+    let fastest = curve
+        .points
+        .iter()
+        .map(|p| p.latency)
+        .fold(f64::INFINITY, f64::min);
+    let deadline = fastest * 1.5;
+    let fixed_cost = curve
+        .points
+        .iter()
+        .filter(|p| p.latency <= deadline + 1e-9)
+        .map(|p| p.cost)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "[perf] fixed testbed: fastest {fastest:.1}s, best cost within {deadline:.1}s \
+         deadline ${fixed_cost:.3}"
+    );
+
+    let limits = BnbLimits { time_limit_secs: 30.0, ..BnbLimits::default() };
+    let search = ShapeSearch::new(&types, &avail, &heuristic, limits)
+        .expect("valid catalogue")
+        .with_baseline(testbed_counts.clone())
+        .expect("testbed fits availability");
+    let runs = if smoke { 1 } else { 3 };
+    let mut out = None;
+    let wall = common::measure("optimize_shape(deadline)", runs, || {
+        out = Some(search.optimize(ShapeObjective::Deadline(deadline)).unwrap());
+    });
+    let out = out.unwrap();
+    println!(
+        "[perf] optimised shape {:?}: {:.1}s, ${:.3} (bound ${:.3}, {} outer nodes, \
+         {:.0}% of fixed cost)",
+        out.point.counts,
+        out.point.latency,
+        out.point.cost,
+        out.outer_bound,
+        out.nodes,
+        100.0 * out.point.cost / fixed_cost
+    );
+
+    // Regression gate: at an equal deadline the optimised composition must
+    // not bill materially more than the fixed testbed's best heuristic
+    // allocation (the testbed rides along as the search baseline; the small
+    // slack absorbs budget-grid differences between the two sweeps).
+    assert!(out.point.latency <= deadline + 1e-9, "shape missed the deadline");
+    assert!(
+        out.point.cost <= fixed_cost * 1.05 + 1e-9,
+        "optimised shape (${}) billed more than the fixed testbed (${fixed_cost})",
+        out.point.cost
+    );
+
+    let json = obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("offers", catalogue.len().into()),
+        ("tasks", workload.len().into()),
+        ("deadline_s", deadline.into()),
+        ("fixed_testbed_cost", fixed_cost.into()),
+        ("shape_cost", out.point.cost.into()),
+        ("shape_latency_s", out.point.latency.into()),
+        (
+            "shape_counts",
+            Json::Arr(out.point.counts.iter().map(|&c| c.into()).collect()),
+        ),
+        ("outer_bound", out.outer_bound.into()),
+        ("outer_nodes", out.nodes.into()),
+        ("search_wall_s", wall.into()),
+    ]);
+    common::save("BENCH_shape.json", &json.to_string_pretty());
+    println!("perf_shape bench OK");
+}

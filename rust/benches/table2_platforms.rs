@@ -19,7 +19,7 @@ fn main() {
     common::save("table2.csv", &table.to_csv());
 
     assert_eq!(table.n_rows(), 16, "Table II lists 16 platforms");
-    for needle in ["virtex6-0", "stratix5-gsd8-7", "gk104", "xeon-e5-2660", "xeon-gce"] {
+    for needle in ["virtex6#0", "stratix5-gsd8#7", "gk104", "xeon-e5-2660", "xeon-gce"] {
         assert!(rendered.contains(needle), "missing {needle}");
     }
     // Measured GFLOPS should be within the simulator's hidden spread (±12%)

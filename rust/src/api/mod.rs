@@ -22,5 +22,5 @@ pub use protocol::PROTOCOL_VERSION;
 pub use registry::{PartitionerFactory, PartitionerRegistry};
 pub use session::{
     CacheStats, Evaluation, PartitionSummary, RunState, RunStatus, SessionBuilder,
-    TradeoffSession,
+    ShapeSummary, TradeoffSession,
 };

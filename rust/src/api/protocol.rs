@@ -10,6 +10,8 @@
 //! {"v":1,"op":"partition","budget":null}            # null = unconstrained
 //! {"v":1,"op":"evaluate","budget":2.5}              # partition + execute
 //! {"v":1,"op":"pareto","partitioner":"heuristic"}   # trade-off curve
+//! {"v":1,"op":"shape","deadline":3600}              # optimise the composition
+//! {"v":1,"op":"shape","budget":2.5}                 # ...or for a budget
 //! {"v":1,"op":"batch","budgets":[1.0,2.5,null]}     # one solve per budget
 //! {"v":1,"op":"run","budget":2.5}                   # background execution
 //! {"v":1,"op":"run","budget":2.5,"stream":true}     # inline event stream
@@ -82,6 +84,9 @@ pub enum Request {
     Evaluate { partitioner: Option<String>, budget: Option<f64> },
     /// Generate the ε-constraint trade-off curve.
     Pareto { partitioner: Option<String> },
+    /// Optimise the cluster composition for a deadline (seconds) or a
+    /// budget ($) — exactly one of the two.
+    Shape { partitioner: Option<String>, deadline: Option<f64>, budget: Option<f64> },
     /// Partition at every budget of a list; one result entry per budget.
     Batch { partitioner: Option<String>, budgets: Vec<Option<f64>> },
     /// Start a chunked execution: background (poll with `Status`) or, with
@@ -133,6 +138,25 @@ impl Request {
                 Ok(Request::Evaluate { partitioner, budget })
             }
             "pareto" => Ok(Request::Pareto { partitioner: partitioner_field(&req)? }),
+            "shape" => {
+                let partitioner = partitioner_field(&req)?;
+                let num = |key: &str| -> Result<Option<f64>> {
+                    match req.get(key) {
+                        None | Some(Json::Null) => Ok(None),
+                        Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+                            CloudshapesError::protocol(format!("'{key}' must be a number"))
+                        }),
+                    }
+                };
+                let (deadline, budget) = (num("deadline")?, num("budget")?);
+                match (deadline, budget) {
+                    (Some(_), Some(_)) | (None, None) => Err(CloudshapesError::protocol(
+                        "op 'shape' requires exactly one of 'deadline' (seconds) or \
+                         'budget' ($)",
+                    )),
+                    _ => Ok(Request::Shape { partitioner, deadline, budget }),
+                }
+            }
             "batch" => {
                 let partitioner = partitioner_field(&req)?;
                 let budgets = batch_budgets(&req)?;
@@ -162,8 +186,8 @@ impl Request {
             }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(CloudshapesError::protocol(format!(
-                "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, batch, \
-                 run, status, shutdown)"
+                "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, shape, \
+                 batch, run, status, shutdown)"
             ))),
         }
     }
@@ -270,6 +294,19 @@ mod tests {
             Request::Pareto { partitioner: None }
         );
         assert_eq!(
+            Request::parse(r#"{"v":1,"op":"shape","deadline":3600}"#).unwrap(),
+            Request::Shape { partitioner: None, deadline: Some(3600.0), budget: None }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"shape","budget":2.5,"partitioner":"milp"}"#)
+                .unwrap(),
+            Request::Shape {
+                partitioner: Some("milp".into()),
+                deadline: None,
+                budget: Some(2.5),
+            }
+        );
+        assert_eq!(
             Request::parse(r#"{"v":1,"op":"batch","budgets":[1.5,null,2],"partitioner":"milp"}"#)
                 .unwrap(),
             Request::Batch {
@@ -290,6 +327,19 @@ mod tests {
             Request::Status { run_id: 7 }
         );
         assert_eq!(Request::parse(r#"{"v":1,"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn shape_requires_exactly_one_constraint() {
+        for bad in [
+            r#"{"v":1,"op":"shape"}"#,                               // neither
+            r#"{"v":1,"op":"shape","deadline":1,"budget":2}"#,       // both
+            r#"{"v":1,"op":"shape","deadline":"soon"}"#,             // bad type
+            r#"{"v":1,"op":"shape","budget":1,"partitioner":7}"#,    // bad name
+        ] {
+            let e = Request::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "protocol", "{bad} -> {e}");
+        }
     }
 
     #[test]

@@ -37,7 +37,9 @@ use crate::coordinator::executor::{
     execute_with, ExecEvent, ExecutionReport, ExecutorConfig,
 };
 use crate::coordinator::partitioner::MilpConfig;
+use crate::coordinator::shape::{ShapeObjective, ShapeOutcome, ShapeSearch};
 use crate::coordinator::{sweep, Allocation, ModelSet, Partitioner, SweepConfig, TradeoffCurve};
+use crate::milp::branch_bound::BnbLimits;
 use crate::report::Experiment;
 use crate::workload::{GeneratorConfig, Workload};
 
@@ -64,6 +66,33 @@ pub struct Evaluation {
     pub partition: PartitionSummary,
     /// What actually happened when the allocation ran.
     pub execution: ExecutionReport,
+}
+
+/// A shape-optimisation result: the winning composition plus its predicted
+/// objectives (see [`TradeoffSession::optimize_shape`]).
+#[derive(Debug, Clone)]
+pub struct ShapeSummary {
+    /// Strategy that solved the inner per-composition partitions.
+    pub partitioner: String,
+    /// The objective the shape was optimised for.
+    pub objective: ShapeObjective,
+    /// Catalogue type names, aligned with `counts`.
+    pub type_names: Vec<String>,
+    /// The full outcome (counts, instance names, allocation, objectives).
+    pub outcome: ShapeOutcome,
+}
+
+impl ShapeSummary {
+    /// (type name, count) pairs of the winning composition, rented types
+    /// only.
+    pub fn composition(&self) -> Vec<(String, usize)> {
+        self.type_names
+            .iter()
+            .zip(&self.outcome.point.counts)
+            .filter(|(_, &c)| c > 0)
+            .map(|(n, &c)| (n.clone(), c))
+            .collect()
+    }
 }
 
 /// Counters of the session's solution cache (exposed by the serve
@@ -104,6 +133,7 @@ pub struct RunStatus {
     pub failures: usize,
     pub retries: usize,
     pub migrations: usize,
+    pub preemptions: usize,
     /// Final measurements, present once `state` is `Done`.
     pub makespan_secs: Option<f64>,
     pub cost: Option<f64>,
@@ -493,6 +523,47 @@ impl TradeoffSession {
         self.cache.stats()
     }
 
+    /// The session cluster's composition: (type name, instance count).
+    pub fn composition(&self) -> Vec<(String, usize)> {
+        self.experiment.cluster.composition()
+    }
+
+    /// Optimise the *cluster shape* for `objective`: search instance-count
+    /// compositions of the session's catalogue (outer branch & bound over
+    /// per-type fitted models) around the named inner partitioner (`None`
+    /// = session default). The outer search reuses the `[milp]` budgets.
+    ///
+    /// Returns predictions only — the winning composition is a rental plan,
+    /// not this session's benchmarked cluster; re-build a session with
+    /// [`ClusterConfig::counts`] pinned to the returned shape to execute it.
+    pub fn optimize_shape(
+        &self,
+        name: Option<&str>,
+        objective: ShapeObjective,
+    ) -> Result<ShapeSummary> {
+        let inner = self.make_partitioner(name)?;
+        let types = self.experiment.type_models();
+        let avail = self.experiment.catalogue.availability();
+        // The `[milp]` budgets govern the outer search too — one knob caps
+        // all solver work. (Its branch & bound is anytime: node/time limits
+        // stop it on the best incumbent found, never on nothing.)
+        let milp = &self.experiment.config.milp;
+        let limits = BnbLimits {
+            max_nodes: milp.max_nodes,
+            rel_gap: milp.rel_gap,
+            time_limit_secs: milp.time_limit_secs,
+            workers: milp.workers,
+        };
+        let search = ShapeSearch::new(&types, &avail, inner.as_ref(), limits)?;
+        let outcome = search.optimize(objective)?;
+        Ok(ShapeSummary {
+            partitioner: inner.name().to_string(),
+            objective,
+            type_names: types.platform_names.clone(),
+            outcome,
+        })
+    }
+
     /// Partition at `budget` AND execute the allocation on the cluster.
     pub fn evaluate(&self, budget: Option<f64>) -> Result<Evaluation> {
         self.evaluate_with(None, budget)
@@ -561,6 +632,7 @@ impl TradeoffSession {
                 failures: 0,
                 retries: 0,
                 migrations: 0,
+                preemptions: 0,
                 makespan_secs: None,
                 cost: None,
             },
@@ -591,6 +663,7 @@ impl TradeoffSession {
                             }
                         }
                         ExecEvent::ChunkMigrated { .. } => s.migrations += 1,
+                        ExecEvent::LanePreempted { .. } => s.preemptions += 1,
                         ExecEvent::TaskPriced { .. } => s.tasks_priced += 1,
                         ExecEvent::Finished { .. } => {}
                     }
@@ -732,6 +805,28 @@ mod tests {
         // Unknown ids are None, infeasible budgets fail fast.
         assert!(session.run_status(10_000).is_none());
         assert!(session.start_run(Some("milp"), Some(1e-9)).is_err());
+    }
+
+    #[test]
+    fn optimize_shape_returns_a_composition() {
+        let session = SessionBuilder::quick().partitioner("heuristic").build().unwrap();
+        // A deadline twice the unconstrained testbed makespan is loose:
+        // every inner solve is cheap and the search must succeed.
+        let p = session.partition(None).unwrap();
+        let shape = session
+            .optimize_shape(None, ShapeObjective::Deadline(p.predicted_latency_s * 2.0))
+            .unwrap();
+        assert_eq!(shape.partitioner, "heuristic");
+        assert_eq!(shape.type_names.len(), 3);
+        let total: usize = shape.outcome.point.counts.iter().sum();
+        assert!(total >= 1);
+        assert!(!shape.composition().is_empty());
+        assert!(shape.outcome.point.latency <= p.predicted_latency_s * 2.0 + 1e-9);
+        assert!(shape.outcome.point.cost > 0.0);
+        // Unknown inner strategies fail fast.
+        assert!(session
+            .optimize_shape(Some("nope"), ShapeObjective::Deadline(1000.0))
+            .is_err());
     }
 
     #[test]

@@ -33,6 +33,12 @@ COMMANDS
       --partitioner NAME   (default milp)
       --levels N           Budget levels (default from config)
       --csv PATH           Also write the curve as CSV
+  shape                    Optimise the cluster COMPOSITION (catalogue ->
+                           instance counts -> allocation); prints the
+                           winning shape and its predicted objectives
+      --deadline SECS      Minimise billed cost within a deadline, or
+      --budget DOLLARS     minimise makespan within a budget (exactly one)
+      --partitioner NAME   Inner per-composition strategy (default milp)
   run                      Partition AND execute on the cluster
       --budget DOLLARS
       --partitioner NAME
@@ -108,6 +114,7 @@ fn run(args: &Args) -> Result<()> {
         "bench" => cmd_bench(args),
         "partition" => cmd_partition(args),
         "pareto" => cmd_pareto(args),
+        "shape" => cmd_shape(args),
         "run" => cmd_run(args),
         "table" => cmd_table(args),
         "fig" => cmd_fig(args),
@@ -125,6 +132,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     for (cat, n) in report::tables::category_counts(&e.cluster) {
         println!("  {:>4} x{}", cat.name(), n);
     }
+    println!("shape: {}", composition_str(&s.composition()));
     println!(
         "workload: {} tasks, {} total simulations, {:.3e} total FLOPs",
         e.workload.len(),
@@ -164,6 +172,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let p = s.partition(args.flag_f64("budget")?)?;
     let m = s.models();
     println!("partitioner: {}", p.partitioner);
+    println!("cluster shape: {}", composition_str(&s.composition()));
     println!("budget: {:?}", p.budget);
     println!("predicted makespan: {} s", fnum(p.predicted_latency_s, 1));
     println!("predicted cost:     ${}", fnum(p.predicted_cost, 3));
@@ -216,6 +225,63 @@ fn cmd_pareto(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `4x virtex6 + 8x stratix5-gsd8 + ...` — the human form of a composition.
+fn composition_str(composition: &[(String, usize)]) -> String {
+    composition
+        .iter()
+        .map(|(name, count)| format!("{count}x {name}"))
+        .collect::<Vec<_>>()
+        .join(" + ")
+}
+
+fn cmd_shape(args: &Args) -> Result<()> {
+    use crate::coordinator::ShapeObjective;
+    let s = session(args)?;
+    let objective = match (args.flag_f64("deadline")?, args.flag_f64("budget")?) {
+        (Some(d), None) => ShapeObjective::Deadline(d),
+        (None, Some(b)) => ShapeObjective::Budget(b),
+        _ => {
+            return Err(CloudshapesError::config(
+                "shape needs exactly one of --deadline SECS or --budget DOLLARS",
+            ))
+        }
+    };
+    let shape = s.optimize_shape(None, objective)?;
+    println!("inner partitioner: {}", shape.partitioner);
+    match shape.objective {
+        ShapeObjective::Deadline(d) => println!("objective: min cost, deadline {d} s"),
+        ShapeObjective::Budget(b) => println!("objective: min makespan, budget ${b}"),
+    }
+    let point = &shape.outcome.point;
+    println!("winning shape: {}", composition_str(&shape.composition()));
+    println!(
+        "  {} instances, predicted makespan {} s, predicted cost ${}",
+        point.counts.iter().sum::<usize>(),
+        fnum(point.latency, 1),
+        fnum(point.cost, 3)
+    );
+    println!(
+        "  outer bound ${} ({} outer nodes)",
+        fnum(shape.outcome.outer_bound, 3),
+        shape.outcome.nodes
+    );
+    let m = s.experiment().type_models().replicate(&point.counts)?;
+    for i in point.alloc.used_platforms() {
+        println!(
+            "  {:>20}: latency {:>10.1}s  cost ${:.3}",
+            point.instance_names[i],
+            m.platform_latency(&point.alloc, i),
+            m.platform_cost(&point.alloc, i),
+        );
+    }
+    println!(
+        "(current session shape: {} — rebuild with [catalogue] counts to rent the \
+         winning one)",
+        composition_str(&s.composition())
+    );
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let s = session(args)?;
     let budget = args.flag_f64("budget")?;
@@ -240,8 +306,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         (rep.cost / p.predicted_cost - 1.0) * 100.0
     );
     println!(
-        "chunks: {}  retries: {}  migrations: {}  failures: {}",
-        rep.chunks, rep.retries, rep.migrations, rep.failures
+        "chunks: {}  retries: {}  migrations: {}  preemptions: {}  failures: {}",
+        rep.chunks, rep.retries, rep.migrations, rep.preemptions, rep.failures
     );
     let priced = rep.prices.iter().flatten().count();
     println!("tasks priced: {priced}/{}", s.workload().len());
@@ -284,6 +350,12 @@ impl WatchView {
             }
             E::ChunkMigrated { from, to, task, .. } => {
                 println!("watch: rebalanced a task-{task} chunk: platform {from} -> {to}");
+            }
+            E::LanePreempted { platform, at_secs, drained } => {
+                println!(
+                    "watch: spot lane {platform} preempted at {at_secs:.1}s — \
+                     {drained} queued chunks re-homed"
+                );
             }
             E::TaskPriced { task, estimate, partial } => {
                 let tag = if *partial { " (partial)" } else { "" };
@@ -400,5 +472,16 @@ mod tests {
     #[test]
     fn run_watch_streams_progress() {
         assert_eq!(main(&argv("run --quick --partitioner heuristic --watch")), 0);
+    }
+
+    #[test]
+    fn shape_command_optimises_composition() {
+        assert_eq!(
+            main(&argv("shape --quick --partitioner heuristic --deadline 36000")),
+            0
+        );
+        // Exactly one constraint is required.
+        assert_eq!(main(&argv("shape --quick")), 1);
+        assert_eq!(main(&argv("shape --quick --deadline 10 --budget 1")), 1);
     }
 }

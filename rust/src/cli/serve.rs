@@ -31,9 +31,9 @@ use std::sync::Arc;
 
 use crate::api::error::{CloudshapesError, Result};
 use crate::api::protocol::{error_response, ok_response, Request};
-use crate::api::session::{RunState, RunStatus};
+use crate::api::session::{RunState, RunStatus, ShapeSummary};
 use crate::api::TradeoffSession;
-use crate::coordinator::ExecEvent;
+use crate::coordinator::{ExecEvent, ShapeObjective};
 use crate::util::json::{obj, Json};
 
 use super::args::Args;
@@ -165,7 +165,17 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
             let ev = session.evaluate_with(partitioner.as_deref(), budget)?;
             let mut fields = partition_fields(&ev.partition);
             fields.extend(execution_fields(&ev.execution));
+            fields.push(("shape", composition_json(session.composition())));
             Ok(ok_response(fields))
+        }
+        Request::Shape { partitioner, deadline, budget } => {
+            let objective = match (deadline, budget) {
+                (Some(d), None) => ShapeObjective::Deadline(d),
+                (None, Some(b)) => ShapeObjective::Budget(b),
+                _ => unreachable!("protocol parse enforces exactly one"),
+            };
+            let s = session.optimize_shape(partitioner.as_deref(), objective)?;
+            Ok(ok_response(shape_fields(&s)))
         }
         Request::Run { partitioner, budget, .. } => {
             // stream:true is intercepted at the connection layer; reaching
@@ -205,6 +215,7 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
                 ("partitioner", curve.partitioner.as_str().into()),
                 ("c_lower", curve.c_lower.into()),
                 ("c_upper", curve.c_upper.into()),
+                ("shape", composition_json(session.composition())),
                 ("points", Json::Arr(points)),
             ]))
         }
@@ -263,7 +274,39 @@ fn execution_fields(
         ("chunks", rep.chunks.into()),
         ("retries", rep.retries.into()),
         ("migrations", rep.migrations.into()),
+        ("preemptions", rep.preemptions.into()),
     ]
+}
+
+/// `{"type": count, ...}` — the wire form of a cluster composition.
+fn composition_json(composition: Vec<(String, usize)>) -> Json {
+    Json::Obj(
+        composition
+            .into_iter()
+            .map(|(name, count)| (name, Json::Num(count as f64)))
+            .collect(),
+    )
+}
+
+fn shape_fields(s: &ShapeSummary) -> Vec<(&'static str, Json)> {
+    let point = &s.outcome.point;
+    let mut fields = vec![
+        ("partitioner", s.partitioner.as_str().into()),
+        (
+            "shape",
+            composition_json(s.composition()),
+        ),
+        ("instances", point.counts.iter().sum::<usize>().into()),
+        ("predicted_latency_s", point.latency.into()),
+        ("predicted_cost", point.cost.into()),
+        ("outer_bound", s.outcome.outer_bound.into()),
+        ("nodes", s.outcome.nodes.into()),
+    ];
+    match s.objective {
+        ShapeObjective::Deadline(d) => fields.push(("deadline", d.into())),
+        ShapeObjective::Budget(b) => fields.push(("budget", b.into())),
+    }
+    fields
 }
 
 fn status_fields(s: &RunStatus) -> Vec<(&'static str, Json)> {
@@ -286,6 +329,7 @@ fn status_fields(s: &RunStatus) -> Vec<(&'static str, Json)> {
         ("failures", s.failures.into()),
         ("retries", s.retries.into()),
         ("migrations", s.migrations.into()),
+        ("preemptions", s.preemptions.into()),
     ];
     if let Some(m) = s.makespan_secs {
         fields.push(("measured_latency_s", m.into()));
@@ -381,6 +425,14 @@ fn stream_event_json(ev: &ExecEvent, next_pct: &mut u64) -> Option<Json> {
         ExecEvent::ChunkMigrated { from, to, task, .. } => e(
             "chunk_migrated",
             vec![("from", (*from).into()), ("to", (*to).into()), ("task", (*task).into())],
+        ),
+        ExecEvent::LanePreempted { platform, at_secs, drained } => e(
+            "lane_preempted",
+            vec![
+                ("platform", (*platform).into()),
+                ("at_secs", (*at_secs).into()),
+                ("drained", (*drained).into()),
+            ],
         ),
         ExecEvent::TaskPriced { task, estimate, partial } => e(
             "task_priced",
@@ -550,6 +602,45 @@ mod tests {
         );
         let r = handle_request(r#"{"v":1,"op":"run"}"#, &s, &stop);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn shape_op_reports_the_winning_composition() {
+        let s = session();
+        let stop = AtomicBool::new(false);
+        // A generous deadline (an hour of virtual time) is trivially
+        // satisfiable on the quick cluster.
+        let r = handle_request(
+            r#"{"v":1,"op":"shape","deadline":3600,"partitioner":"heuristic"}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        assert!(r.get("instances").unwrap().as_u64().unwrap() >= 1);
+        assert!(r.get("predicted_cost").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(r.get("deadline").unwrap().as_f64(), Some(3600.0));
+        let shape = r.get("shape").unwrap().as_obj().unwrap();
+        assert!(!shape.is_empty());
+        // Malformed shape requests are protocol errors.
+        let r = handle_request(r#"{"v":1,"op":"shape"}"#, &s, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn evaluate_and_pareto_report_the_session_composition() {
+        let s = session();
+        let stop = AtomicBool::new(false);
+        let r = handle_request(
+            r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":null}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        let shape = r.get("shape").unwrap().as_obj().unwrap();
+        assert_eq!(shape.len(), 3, "quick cluster has one instance per type");
+        assert!(r.get("preemptions").unwrap().as_u64().is_some());
+        let r = handle_request(r#"{"v":1,"op":"pareto","partitioner":"heuristic"}"#, &s, &stop);
+        assert!(r.get("shape").unwrap().as_obj().is_some());
     }
 
     #[test]

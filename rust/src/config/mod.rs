@@ -30,6 +30,13 @@ pub struct ClusterConfig {
     pub sim: SimConfig,
     /// Append the native PJRT platform (needs `make artifacts`).
     pub with_native: bool,
+    /// Composition override: instances rented per catalogue offer (`None` =
+    /// the pinned paper-testbed counts). Arity is validated against the
+    /// kind's catalogue when the experiment is built.
+    pub counts: Option<Vec<usize>>,
+    /// Rent spot variants (discounted rate + preemption hazard) of offers
+    /// that have spot terms.
+    pub spot: bool,
 }
 
 impl Default for ClusterConfig {
@@ -43,6 +50,8 @@ impl Default for ClusterConfig {
             // presets raise the cap).
             sim: SimConfig { stats_cap: 2048, ..SimConfig::default() },
             with_native: false,
+            counts: None,
+            spot: false,
         }
     }
 }
@@ -131,6 +140,9 @@ impl ExperimentConfig {
                 };
                 cfg.workload.payoff_mix = (g(0)?, g(1)?, g(2)?);
             }
+            // Reject bad generator parameters (negative/all-zero payoff
+            // mixes) at parse time, before they flow into sampling.
+            cfg.workload.validate()?;
         }
         if let Some(c) = root.get("cluster") {
             if let Some(kind) = c.get("kind").and_then(Json::as_str) {
@@ -152,6 +164,27 @@ impl ExperimentConfig {
             let mut cap = cfg.cluster.sim.stats_cap as u64;
             set_u64(c, "stats_cap", &mut cap)?;
             cfg.cluster.sim.stats_cap = cap as u32;
+        }
+        if let Some(cat) = root.get("catalogue") {
+            if let Some(counts) = cat.get("counts") {
+                let arr = counts.as_arr().ok_or_else(|| {
+                    CloudshapesError::config(
+                        "catalogue.counts must be an array of instance counts",
+                    )
+                })?;
+                cfg.cluster.counts = Some(
+                    arr.iter()
+                        .map(|v| {
+                            v.as_u64().map(|u| u as usize).ok_or_else(|| {
+                                CloudshapesError::config(
+                                    "catalogue.counts entries must be non-negative integers",
+                                )
+                            })
+                        })
+                        .collect::<Result<_>>()?,
+                );
+            }
+            set_bool(cat, "spot", &mut cfg.cluster.spot)?;
         }
         if let Some(b) = root.get("benchmark") {
             set_usize(b, "reps", &mut cfg.benchmark.reps)?;
@@ -338,6 +371,21 @@ mod tests {
         let c = ExperimentConfig::parse("[sweep]\nlevels = 3").unwrap();
         assert_eq!(c.sweep.levels, 3);
         assert_eq!(c.workload.n_tasks, 128);
+        assert_eq!(c.cluster.counts, None);
+        assert!(!c.cluster.spot);
+    }
+
+    #[test]
+    fn catalogue_section_pins_composition_and_spot() {
+        let c = ExperimentConfig::parse(
+            "[catalogue]\ncounts = [4, 8, 1, 1, 1, 1]\nspot = true",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.counts, Some(vec![4, 8, 1, 1, 1, 1]));
+        assert!(c.cluster.spot);
+        assert!(ExperimentConfig::parse("[catalogue]\ncounts = 3").is_err());
+        assert!(ExperimentConfig::parse("[catalogue]\ncounts = [1, -2]").is_err());
+        assert!(ExperimentConfig::parse("[catalogue]\nspot = \"yes\"").is_err());
     }
 
     #[test]
@@ -346,5 +394,10 @@ mod tests {
         assert!(ExperimentConfig::parse("[sweep]\nlevels = \"many\"").is_err());
         assert!(ExperimentConfig::parse("[workload]\npayoff_mix = [1.0]").is_err());
         assert!(ExperimentConfig::parse("[milp]\nworkers = 0").is_err());
+        // Generator-level validation runs at parse time too.
+        let e = ExperimentConfig::parse("[workload]\npayoff_mix = [0.0, 0.0, 0.0]")
+            .unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        assert!(ExperimentConfig::parse("[workload]\npayoff_mix = [1.0, -0.5, 0.5]").is_err());
     }
 }

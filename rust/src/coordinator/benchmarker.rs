@@ -139,7 +139,7 @@ mod tests {
     use crate::workload::{generate, GeneratorConfig};
 
     fn setup() -> (Cluster, Workload) {
-        let cluster = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 42);
+        let cluster = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 42).unwrap();
         let workload = generate(&GeneratorConfig::small(4, 0.01, 7));
         (cluster, workload)
     }
@@ -168,7 +168,7 @@ mod tests {
     fn noisy_benchmarks_still_within_10pct() {
         // Fig. 2's claim, against a noisy simulator.
         let specs = small_cluster();
-        let cluster = Cluster::simulated(&specs, &SimConfig::default(), 9);
+        let cluster = Cluster::simulated(&specs, &SimConfig::default(), 9).unwrap();
         let workload = generate(&GeneratorConfig::small(3, 0.01, 5));
         let cfg = BenchmarkConfig { reps: 3, ..BenchmarkConfig::default() };
         let report = benchmark(&cluster, &workload, &cfg);
@@ -212,7 +212,7 @@ mod tests {
     fn failed_platform_gets_pessimistic_model() {
         let specs = small_cluster();
         let sim_cfg = SimConfig { failure_rate: 1.0, ..SimConfig::exact() };
-        let cluster = Cluster::simulated(&specs, &sim_cfg, 3);
+        let cluster = Cluster::simulated(&specs, &sim_cfg, 3).unwrap();
         let workload = generate(&GeneratorConfig::small(2, 0.05, 5));
         let report = benchmark(&cluster, &workload, &BenchmarkConfig::default());
         // Pessimistic fallback: enormous beta/gamma.

@@ -14,9 +14,16 @@
 //!   beyond a tolerance from its (fitted or nominal) latency model, queued
 //!   chunks migrate from the lagging lane to the lane with the earliest
 //!   estimated finish (model-guided work stealing);
+//! - **survives spot preemption**: lanes whose spec carries a
+//!   [`preemptible`](crate::platforms::PlatformSpec::preemptible) hazard
+//!   draw a preemption time from it (seeded, deterministic); when a lane's
+//!   virtual clock crosses it the lane dies — the in-flight chunk surfaces
+//!   as a failed chunk for the retry machinery, queued chunks re-home onto
+//!   live lanes, and the lane's bill covers only the quanta actually used
+//!   up to the preemption;
 //! - emits a typed [`ExecEvent`] stream (chunk done / failed / migrated,
-//!   per-task [`PriceEstimate`]s) consumed by the serve protocol's
-//!   `run`/`status` ops and the CLI `--watch` progress view.
+//!   lane preempted, per-task [`PriceEstimate`]s) consumed by the serve
+//!   protocol's `run`/`status` ops and the CLI `--watch` progress view.
 //!
 //! Each platform still executes its lane sequentially (latency accumulates
 //! per lane; the realised makespan is the max lane time, realised cost
@@ -37,6 +44,7 @@ use crate::coordinator::allocation::{Allocation, ALLOC_TOL};
 use crate::coordinator::objectives::ModelSet;
 use crate::platforms::{ChunkCtx, Cluster};
 use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
+use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
 use crate::workload::Workload;
 
@@ -70,8 +78,11 @@ pub struct ExecutionReport {
     pub chunks: usize,
     /// Failed chunk executions that were re-queued.
     pub retries: usize,
-    /// Queued chunks migrated off straggling lanes.
+    /// Queued chunks migrated off straggling lanes (including off preempted
+    /// ones).
     pub migrations: usize,
+    /// Spot lanes that were preempted mid-run.
+    pub preemptions: usize,
 }
 
 /// Chunk retry policy.
@@ -162,6 +173,10 @@ pub enum ExecEvent {
     },
     /// A queued chunk moved off a straggling lane.
     ChunkMigrated { from: usize, to: usize, task: usize, offset: u64, n: u64 },
+    /// A spot lane crossed its preemption time and died. Its in-flight
+    /// chunk fails (retry machinery applies), `drained` queued chunks were
+    /// re-homed onto live lanes, and the lane bills only up to `at_secs`.
+    LanePreempted { platform: usize, at_secs: f64, drained: usize },
     /// Every chunk of `task` has resolved; `partial` when some of its
     /// chunks permanently failed (the estimate covers the surviving paths).
     TaskPriced { task: usize, estimate: PriceEstimate, partial: bool },
@@ -183,6 +198,8 @@ struct Chunk {
 struct Lane {
     queue: VecDeque<Chunk>,
     busy: bool,
+    /// Preempted spot lane: never claimed again, queue drained at death.
+    dead: bool,
     /// Accumulated lane latency, seconds (virtual for simulated platforms,
     /// wall-clock for native ones).
     time: f64,
@@ -212,6 +229,18 @@ struct Completion {
     latency_secs: f64,
     stats: Option<PayoffStats>,
     error: Option<String>,
+    /// This completion crossed the lane's preemption time: the lane is now
+    /// dead and billed only up to `at_secs`.
+    preempted: Option<PreemptionNotice>,
+}
+
+/// What a preemption did to the dying lane's queue.
+struct PreemptionNotice {
+    at_secs: f64,
+    /// Queued chunks re-homed onto live lanes: (destination, chunk).
+    moved: Vec<(usize, Chunk)>,
+    /// Queued chunks with no live lane left — permanently failed.
+    orphaned: Vec<Chunk>,
 }
 
 /// Per-(platform, task) latency coefficients the scheduler estimates with:
@@ -330,6 +359,7 @@ pub fn execute_with(
         .map(|_| Lane {
             queue: VecDeque::new(),
             busy: false,
+            dead: false,
             time: 0.0,
             sims: 0,
             errors: Vec::new(),
@@ -337,6 +367,24 @@ pub fn execute_with(
             queued_secs: 0.0,
             drift: 1.0,
             drift_obs: 0,
+        })
+        .collect();
+    // Spot scenario: each preemptible lane draws its preemption time (in
+    // lane-virtual seconds) from the spec's exponential hazard — a pure
+    // function of (seed, lane), so runs are reproducible.
+    let specs = cluster.specs();
+    let preempt_at: Vec<Option<f64>> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            s.preemptible.map(|per_hour| {
+                let mut rng = Rng::new(
+                    (cfg.seed as u64 ^ ((i as u64) << 32))
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ 0x5057,
+                );
+                3600.0 * -(1.0 - rng.f64()).ln() / per_hour
+            })
         })
         .collect();
     let mut total_chunks = 0usize;
@@ -373,16 +421,19 @@ pub fn execute_with(
     let mut task_failures = vec![0usize; tau];
     let mut prices: Vec<Option<PriceEstimate>> = vec![None; tau];
     let (mut done_count, mut failures, mut retries, mut migrations) = (0usize, 0usize, 0usize, 0);
+    let mut preemptions = 0usize;
 
     let workers = cfg.workers.max(1).min(mu);
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let (sched, available, tx) = (&sched, &available, tx.clone());
             let (cluster, workload, coeffs, seed) = (cluster, workload, &coeffs, cfg.seed);
+            let (preempt_at, specs) = (&preempt_at, &specs);
             scope.spawn(move || loop {
                 // Claim the earliest-in-time idle lane with queued work —
                 // the event-driven dispatch order. The busy flag keeps each
-                // lane sequential no matter the worker count.
+                // lane sequential no matter the worker count; dead (spot
+                // preempted) lanes are never claimed.
                 let claimed = {
                     let mut g = sched.lock().unwrap();
                     loop {
@@ -390,7 +441,10 @@ pub fn execute_with(
                             return;
                         }
                         let pick = (0..g.lanes.len())
-                            .filter(|&i| !g.lanes[i].busy && !g.lanes[i].queue.is_empty())
+                            .filter(|&i| {
+                                let l = &g.lanes[i];
+                                !l.busy && !l.dead && !l.queue.is_empty()
+                            })
                             .min_by(|&a, &b| g.lanes[a].time.total_cmp(&g.lanes[b].time));
                         if let Some(i) = pick {
                             let chunk = g.lanes[i].queue.pop_front().unwrap();
@@ -421,28 +475,70 @@ pub fn execute_with(
                     stats: None,
                     error: Some(format!("platform {i}: panicked executing a chunk")),
                 });
+                let mut out = out;
+                let mut preempted = None;
                 {
                     let mut g = sched.lock().unwrap();
-                    let lane = &mut g.lanes[i];
-                    lane.time += out.latency_secs;
-                    lane.sims += chunk.n;
-                    lane.busy = false;
-                    if out.stats.is_some() {
-                        lane.done_sims[chunk.task] += chunk.n;
-                        // Straggler signal: measured vs modelled chunk
-                        // latency (failures carry no throughput signal —
-                        // their cheap setup-only latency would make a
-                        // broken lane look fast).
-                        let predicted = coeffs.predicted(i, &chunk, prior == 0).max(1e-12);
-                        let ratio = out.latency_secs / predicted;
-                        lane.drift = if lane.drift_obs == 0 {
-                            ratio
-                        } else {
-                            0.5 * lane.drift + 0.5 * ratio
-                        };
-                        lane.drift_obs += 1;
-                    } else if let Some(e) = &out.error {
-                        lane.errors.push(e.clone());
+                    // Spot preemption: the lane's virtual clock crossing its
+                    // drawn preemption time kills the lane. The crossing
+                    // chunk's work is lost (failure), the bill stops at the
+                    // preemption time, and queued chunks re-home now —
+                    // under this same lock, so no worker can claim them in
+                    // between.
+                    let crossed = preempt_at[i]
+                        .map(|p| !g.lanes[i].dead && g.lanes[i].time + out.latency_secs > p)
+                        .unwrap_or(false);
+                    if crossed {
+                        let at = preempt_at[i].unwrap();
+                        let lane = &mut g.lanes[i];
+                        lane.dead = true;
+                        lane.time = at;
+                        lane.sims += chunk.n;
+                        lane.busy = false;
+                        lane.queued_secs = 0.0;
+                        let err = format!(
+                            "{}: spot instance preempted after {at:.1}s",
+                            specs[i].name
+                        );
+                        lane.errors.push(err.clone());
+                        out.stats = None;
+                        out.error = Some(err);
+                        let queued: Vec<Chunk> = lane.queue.drain(..).collect();
+                        let mut moved = Vec::new();
+                        let mut orphaned = Vec::new();
+                        for c in queued {
+                            match earliest_finish_lane(&g.lanes, coeffs, &c, Some(i)) {
+                                Some(t) => {
+                                    g.lanes[t].queued_secs += coeffs.est(t, &c);
+                                    g.lanes[t].queue.push_back(c);
+                                    moved.push((t, c));
+                                }
+                                None => orphaned.push(c),
+                            }
+                        }
+                        preempted = Some(PreemptionNotice { at_secs: at, moved, orphaned });
+                    } else {
+                        let lane = &mut g.lanes[i];
+                        lane.time += out.latency_secs;
+                        lane.sims += chunk.n;
+                        lane.busy = false;
+                        if out.stats.is_some() {
+                            lane.done_sims[chunk.task] += chunk.n;
+                            // Straggler signal: measured vs modelled chunk
+                            // latency (failures carry no throughput signal —
+                            // their cheap setup-only latency would make a
+                            // broken lane look fast).
+                            let predicted = coeffs.predicted(i, &chunk, prior == 0).max(1e-12);
+                            let ratio = out.latency_secs / predicted;
+                            lane.drift = if lane.drift_obs == 0 {
+                                ratio
+                            } else {
+                                0.5 * lane.drift + 0.5 * ratio
+                            };
+                            lane.drift_obs += 1;
+                        } else if let Some(e) = &out.error {
+                            lane.errors.push(e.clone());
+                        }
                     }
                 }
                 available.notify_all();
@@ -452,6 +548,7 @@ pub fn execute_with(
                     latency_secs: out.latency_secs,
                     stats: out.stats,
                     error: out.error,
+                    preempted,
                 });
             });
         }
@@ -461,7 +558,57 @@ pub fn execute_with(
         // re-home failures, migrate queued work off stragglers.
         while done_count + failures < total_chunks {
             let ev = rx.recv().expect("all workers exited with chunks outstanding");
-            let Completion { platform, chunk, latency_secs, stats, error } = ev;
+            let Completion { platform, chunk, latency_secs, stats, error, preempted } = ev;
+            if let Some(notice) = preempted {
+                preemptions += 1;
+                on_event(&ExecEvent::LanePreempted {
+                    platform,
+                    at_secs: notice.at_secs,
+                    // Only chunks that actually found a live lane: orphaned
+                    // ones surface as the ChunkFailed events below, so a
+                    // stream consumer never mistakes lost work for saved.
+                    drained: notice.moved.len(),
+                });
+                for (to, c) in &notice.moved {
+                    migrations += 1;
+                    on_event(&ExecEvent::ChunkMigrated {
+                        from: platform,
+                        to: *to,
+                        task: c.task,
+                        offset: c.offset,
+                        n: c.n,
+                    });
+                }
+                // Queued chunks with no live lane left fail permanently.
+                for c in notice.orphaned {
+                    failures += 1;
+                    task_failures[c.task] += 1;
+                    resolve_chunk(&sched, &available);
+                    on_event(&ExecEvent::ChunkFailed {
+                        platform,
+                        task: c.task,
+                        offset: c.offset,
+                        n: c.n,
+                        // 1-based like every ChunkFailed: the orphaning
+                        // counts as the attempt that failed (it never ran).
+                        attempt: c.attempt + 1,
+                        error: "spot preemption: no live lanes left".to_string(),
+                        will_retry: false,
+                        rehomed_to: None,
+                    });
+                    remaining_chunks[c.task] -= 1;
+                    if remaining_chunks[c.task] == 0 {
+                        price_task(
+                            c.task,
+                            workload,
+                            &mut chunk_stats,
+                            &task_failures,
+                            &mut prices,
+                            on_event,
+                        );
+                    }
+                }
+            }
             match (stats, error) {
                 (Some(s), _) => {
                     done_count += 1;
@@ -502,26 +649,35 @@ pub fn execute_with(
                 (None, error) => {
                     let error = error.unwrap_or_else(|| "unknown".into());
                     let attempt = chunk.attempt + 1;
-                    let will_retry = attempt < cfg.retry.max_attempts;
+                    let mut will_retry = attempt < cfg.retry.max_attempts;
                     let mut rehomed_to = None;
                     if will_retry {
-                        retries += 1;
                         let mut g = sched.lock().unwrap();
-                        let target = if cfg.retry.rehome {
-                            // Prefer any lane but the one that just failed.
+                        // A dead (preempted) lane can never run the retry:
+                        // re-home regardless of the rehome flag. With no
+                        // live lane left the chunk fails permanently.
+                        let target = if cfg.retry.rehome || g.lanes[platform].dead {
+                            // Prefer any live lane but the one that failed.
                             earliest_finish_lane(&g.lanes, &coeffs, &chunk, Some(platform))
                         } else {
-                            platform
+                            Some(platform)
                         };
-                        if target != platform {
-                            rehomed_to = Some(target);
+                        match target {
+                            Some(t) => {
+                                retries += 1;
+                                if t != platform {
+                                    rehomed_to = Some(t);
+                                }
+                                let retry = Chunk { attempt, ..chunk };
+                                g.lanes[t].queued_secs += coeffs.est(t, &retry);
+                                g.lanes[t].queue.push_back(retry);
+                                drop(g);
+                                available.notify_all();
+                            }
+                            None => will_retry = false,
                         }
-                        let retry = Chunk { attempt, ..chunk };
-                        g.lanes[target].queued_secs += coeffs.est(target, &retry);
-                        g.lanes[target].queue.push_back(retry);
-                        drop(g);
-                        available.notify_all();
-                    } else {
+                    }
+                    if !will_retry {
                         failures += 1;
                         task_failures[chunk.task] += 1;
                         resolve_chunk(&sched, &available);
@@ -558,7 +714,6 @@ pub fn execute_with(
     });
 
     let g = sched.into_inner().unwrap();
-    let specs = cluster.specs();
     let mut platforms = Vec::with_capacity(mu);
     for (i, lane) in g.lanes.iter().enumerate() {
         let cm = specs[i].cost_model();
@@ -583,6 +738,7 @@ pub fn execute_with(
         chunks: done_count,
         retries,
         migrations,
+        preemptions,
     })
 }
 
@@ -636,27 +792,27 @@ fn price_task(
     on_event(&ExecEvent::TaskPriced { task, estimate, partial: task_failures[task] > 0 });
 }
 
-/// Lane with the earliest drift-scaled estimated finish for `chunk`;
-/// `avoid` (the lane a failure was just observed on) is excluded whenever
-/// an alternative exists.
+/// Live lane with the earliest drift-scaled estimated finish for `chunk`;
+/// `avoid` (the lane a failure was just observed on) is excluded whenever a
+/// live alternative exists. `None` when every lane is dead.
 fn earliest_finish_lane(
     lanes: &[Lane],
     coeffs: &Coeffs,
     chunk: &Chunk,
     avoid: Option<usize>,
-) -> usize {
+) -> Option<usize> {
+    let live: Vec<usize> = (0..lanes.len()).filter(|&i| !lanes[i].dead).collect();
     let candidates: Vec<usize> = match avoid {
-        Some(a) if lanes.len() > 1 => (0..lanes.len()).filter(|&i| i != a).collect(),
-        _ => (0..lanes.len()).collect(),
+        Some(a) if live.iter().any(|&i| i != a) => {
+            live.into_iter().filter(|&i| i != a).collect()
+        }
+        _ => live,
     };
-    candidates
-        .into_iter()
-        .min_by(|&a, &b| {
-            let fa = lane_finish(&lanes[a]) + coeffs.est(a, chunk) * lanes[a].drift;
-            let fb = lane_finish(&lanes[b]) + coeffs.est(b, chunk) * lanes[b].drift;
-            fa.total_cmp(&fb)
-        })
-        .expect("non-empty cluster")
+    candidates.into_iter().min_by(|&a, &b| {
+        let fa = lane_finish(&lanes[a]) + coeffs.est(a, chunk) * lanes[a].drift;
+        let fb = lane_finish(&lanes[b]) + coeffs.est(b, chunk) * lanes[b].drift;
+        fa.total_cmp(&fb)
+    })
 }
 
 fn lane_finish(lane: &Lane) -> f64 {
@@ -679,7 +835,7 @@ fn try_rebalance(
         })
         .max_by(|&a, &b| lane_finish(&g.lanes[a]).total_cmp(&lane_finish(&g.lanes[b])))?;
     let target = (0..g.lanes.len())
-        .filter(|&i| i != laggard)
+        .filter(|&i| i != laggard && !g.lanes[i].dead)
         .min_by(|&a, &b| lane_finish(&g.lanes[a]).total_cmp(&lane_finish(&g.lanes[b])))?;
     let chunk = *g.lanes[laggard].queue.back().unwrap();
     let gain_ok = lane_finish(&g.lanes[target]) + coeffs.est(target, &chunk) * g.lanes[target].drift
@@ -705,7 +861,8 @@ fn try_rebalance(
 /// a single call, platforms run in parallel. Kept as the equivalence
 /// baseline (`benches/perf_executor.rs`, `tests/executor_chunked.rs`) — the
 /// chunked scheduler must reproduce this report under a noise-free
-/// simulator with rebalancing off.
+/// simulator with rebalancing off. The spot-preemption scenario exists only
+/// on the chunked path (one-shot slices have no lane clock to cross).
 pub fn execute_static(
     cluster: &Cluster,
     workload: &Workload,
@@ -783,6 +940,7 @@ pub fn execute_static(
         chunks,
         retries: 0,
         migrations: 0,
+        preemptions: 0,
     })
 }
 
@@ -799,7 +957,7 @@ mod tests {
 
     fn setup() -> (Cluster, Workload, ModelSet) {
         let specs = small_cluster();
-        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21);
+        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21).unwrap();
         let workload = generate(&GeneratorConfig::small(5, 0.02, 13));
         let models = ModelSet::from_specs(&specs, &workload);
         (cluster, workload, models)
@@ -939,7 +1097,8 @@ mod tests {
     fn failure_injection_without_retries_matches_legacy_reporting() {
         let specs = small_cluster();
         let cluster =
-            Cluster::simulated(&specs, &SimConfig { failure_rate: 1.0, ..SimConfig::exact() }, 3);
+            Cluster::simulated(&specs, &SimConfig { failure_rate: 1.0, ..SimConfig::exact() }, 3)
+                .unwrap();
         let workload = generate(&GeneratorConfig::small(3, 0.05, 1));
         let alloc = Allocation::single_platform(3, 3, 1);
         let cfg = ExecutorConfig {
@@ -970,7 +1129,7 @@ mod tests {
             };
             platforms.push(Arc::new(SimPlatform::new(s.clone(), sim, 21 + i as u64)));
         }
-        let cluster = Cluster::new(platforms);
+        let cluster = Cluster::new(platforms).unwrap();
         let workload = generate(&GeneratorConfig::small(4, 0.05, 9));
         let alloc = Allocation::proportional(3, 4, &[1.0, 1.0, 1.0]);
         let cfg = ExecutorConfig {
@@ -989,5 +1148,75 @@ mod tests {
         let (cluster, workload, _) = setup();
         let alloc = Allocation::single_platform(2, 5, 0); // wrong mu
         assert!(execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).is_err());
+    }
+
+    #[test]
+    fn spot_preemption_rehomes_and_bills_quanta_actually_used() {
+        // Platform 0 is a spot instance with an enormous preemption hazard:
+        // it dies on its first chunk. With retries + re-homing every task
+        // still prices, and the dead lane's bill stops at the preemption.
+        let mut specs = small_cluster();
+        specs[0].preemptible = Some(1e7); // preempts within milliseconds
+        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21).unwrap();
+        let workload = generate(&GeneratorConfig::small(4, 0.05, 9));
+        let alloc = Allocation::proportional(3, 4, &[1.0, 1.0, 1.0]);
+        let cfg = ExecutorConfig {
+            chunk_sims: 1 << 16,
+            retry: RetryConfig { max_attempts: 4, rehome: true },
+            ..Default::default()
+        };
+        let mut preempt_events = 0usize;
+        let rep = execute_with(&cluster, &workload, &alloc, &cfg, None, &mut |ev| {
+            if let ExecEvent::LanePreempted { platform, at_secs, .. } = ev {
+                assert_eq!(*platform, 0);
+                assert!(*at_secs >= 0.0);
+                preempt_events += 1;
+            }
+        })
+        .unwrap();
+        assert_eq!(rep.preemptions, 1, "the spot lane must die exactly once");
+        assert_eq!(preempt_events, 1);
+        assert_eq!(rep.failures, 0, "re-homed work must survive the preemption");
+        assert!(rep.prices.iter().all(Option::is_some));
+        // The bill covers only the quanta used before the preemption: the
+        // lane time is capped at the drawn preemption point, which at this
+        // hazard is far below one quantum of any small-cluster platform.
+        let dead = &rep.platforms[0];
+        assert!(dead.latency_secs < 10.0, "lane time not capped: {}", dead.latency_secs);
+        assert!(dead.quanta <= 1, "billed past the preemption: {} quanta", dead.quanta);
+        assert!(!dead.errors.is_empty());
+    }
+
+    #[test]
+    fn all_lanes_preempted_fails_chunks_without_wedging() {
+        // Every lane is a doomed spot instance: the run must terminate with
+        // permanent failures (no prices), never deadlock.
+        let mut specs = small_cluster();
+        for s in &mut specs {
+            s.preemptible = Some(1e7);
+        }
+        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 5).unwrap();
+        let workload = generate(&GeneratorConfig::small(2, 0.05, 3));
+        let alloc = Allocation::proportional(3, 2, &[1.0, 1.0, 1.0]);
+        let cfg = ExecutorConfig {
+            chunk_sims: 1 << 16,
+            retry: RetryConfig { max_attempts: 3, rehome: true },
+            ..Default::default()
+        };
+        let rep = execute(&cluster, &workload, &alloc, &cfg).unwrap();
+        assert_eq!(rep.preemptions, 3);
+        assert!(rep.failures > 0);
+        assert!(rep.prices.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn on_demand_runs_are_untouched_by_the_spot_machinery() {
+        // No preemptible spec -> bit-identical reports with the scenario
+        // code compiled in (the chunked/static equivalence depends on it).
+        let (cluster, workload, _) = setup();
+        let alloc = Allocation::single_platform(3, 5, 1);
+        let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default()).unwrap();
+        assert_eq!(rep.preemptions, 0);
+        assert_eq!(rep.failures, 0);
     }
 }

@@ -8,6 +8,7 @@ pub mod executor;
 pub mod objectives;
 pub mod pareto;
 pub mod partitioner;
+pub mod shape;
 
 pub use allocation::Allocation;
 pub use benchmarker::{benchmark, BenchmarkConfig, BenchmarkReport};
@@ -18,3 +19,4 @@ pub use executor::{
 pub use objectives::ModelSet;
 pub use pareto::{sweep, SweepConfig, TradeoffCurve, TradeoffPoint};
 pub use partitioner::{HeuristicPartitioner, MilpConfig, MilpPartitioner, Partitioner};
+pub use shape::{ShapeObjective, ShapeOutcome, ShapePoint, ShapeSearch};

@@ -11,6 +11,7 @@
 //! consume — built either from fitted benchmark models (the paper's method)
 //! or directly from platform specs (nominal models, for tests/ablations).
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::models::{CostModel, LatencyModel};
 use crate::platforms::spec::PlatformSpec;
 use crate::workload::Workload;
@@ -67,6 +68,41 @@ impl ModelSet {
             workload.tasks.iter().map(|t| t.n_sims).collect(),
             specs.iter().map(|s| s.name.clone()).collect(),
         )
+    }
+
+    /// Expand a *per-type* model set into a *per-instance* one: `counts[t]`
+    /// copies of type `t`'s latency rows and billing terms, instances named
+    /// `type#k` (bare type name for a single instance). This is how the
+    /// shape optimiser turns per-type fitted models into the per-instance
+    /// rows the inner partitioners consume.
+    pub fn replicate(&self, counts: &[usize]) -> Result<ModelSet> {
+        if counts.len() != self.mu {
+            return Err(CloudshapesError::config(format!(
+                "composition has {} counts for {} platform types",
+                counts.len(),
+                self.mu
+            )));
+        }
+        if counts.iter().all(|&c| c == 0) {
+            return Err(CloudshapesError::config("composition rents no instances"));
+        }
+        let mut latency = Vec::new();
+        let mut cost = Vec::new();
+        let mut names = Vec::new();
+        for (t, &count) in counts.iter().enumerate() {
+            for k in 0..count {
+                for j in 0..self.tau {
+                    latency.push(*self.model(t, j));
+                }
+                cost.push(self.cost[t]);
+                names.push(crate::platforms::spec::instance_name(
+                    &self.platform_names[t],
+                    k,
+                    count,
+                ));
+            }
+        }
+        Ok(ModelSet::new(latency, cost, self.n_sims.clone(), names))
     }
 
     pub fn model(&self, i: usize, j: usize) -> &LatencyModel {
@@ -157,10 +193,33 @@ mod tests {
                 l(4e-3, 1.0),  // p1, t0
                 l(4e-3, 1.0),  // p1, t1
             ],
-            vec![CostModel::new(3600.0, 0.65), CostModel::new(60.0, 0.48)],
+            vec![CostModel::new(3600.0, 0.65).unwrap(), CostModel::new(60.0, 0.48).unwrap()],
             vec![100_000, 200_000],
             vec!["fast".into(), "cheapish".into()],
         )
+    }
+
+    #[test]
+    fn replicate_expands_types_into_instances() {
+        let types = toy_models();
+        let m = types.replicate(&[2, 1]).unwrap();
+        assert_eq!(m.mu, 3);
+        assert_eq!(m.tau, 2);
+        assert_eq!(m.platform_names, vec!["fast#0", "fast#1", "cheapish"]);
+        for i in [0usize, 1] {
+            for j in 0..2 {
+                assert_eq!(m.model(i, j), types.model(0, j));
+            }
+            assert_eq!(m.cost[i], types.cost[0]);
+        }
+        assert_eq!(m.model(2, 0), types.model(1, 0));
+        // Two instances halve the solo makespan's work term (setup repeats).
+        let split = Allocation::proportional(3, 2, &[1.0, 1.0, 0.0]);
+        let solo = Allocation::single_platform(3, 2, 0);
+        assert!(m.makespan(&split) < m.makespan(&solo));
+        // Degenerate compositions are typed errors.
+        assert!(types.replicate(&[1]).is_err());
+        assert!(types.replicate(&[0, 0]).is_err());
     }
 
     #[test]

@@ -141,9 +141,9 @@ mod tests {
                 l(5e-3, 0.2),
             ],
             vec![
-                CostModel::new(3600.0, 1.0),
-                CostModel::new(600.0, 0.4),
-                CostModel::new(60.0, 0.3),
+                CostModel::new(3600.0, 1.0).unwrap(),
+                CostModel::new(600.0, 0.4).unwrap(),
+                CostModel::new(60.0, 0.3).unwrap(),
             ],
             vec![5_000_000, 2_000_000],
             vec!["p0".into(), "p1".into(), "p2".into()],

@@ -178,9 +178,9 @@ mod tests {
         ModelSet::new(
             latency,
             vec![
-                CostModel::new(3600.0, 1.0),
-                CostModel::new(3600.0, 0.5),
-                CostModel::new(60.0, 0.3),
+                CostModel::new(3600.0, 1.0).unwrap(),
+                CostModel::new(3600.0, 0.5).unwrap(),
+                CostModel::new(60.0, 0.3).unwrap(),
             ],
             n,
             vec!["a".into(), "b".into(), "c".into()],

@@ -126,9 +126,9 @@ mod tests {
                 l(1e-2, 0.5),
             ],
             vec![
-                CostModel::new(3600.0, 2.0),
-                CostModel::new(3600.0, 0.6),
-                CostModel::new(60.0, 0.3),
+                CostModel::new(3600.0, 2.0).unwrap(),
+                CostModel::new(3600.0, 0.6).unwrap(),
+                CostModel::new(60.0, 0.3).unwrap(),
             ],
             vec![1_000_000, 2_000_000],
             vec!["fast".into(), "mid".into(), "cheap".into()],

@@ -566,7 +566,7 @@ mod tests {
                 l(1e-3, 0.5),
                 l(1e-3, 0.5),
             ],
-            vec![CostModel::new(3600.0, 1.0), CostModel::new(60.0, 0.5)],
+            vec![CostModel::new(3600.0, 1.0).unwrap(), CostModel::new(60.0, 0.5).unwrap()],
             vec![2_000_000, 1_000_000],
             vec!["fast-hourly".into(), "slow-minutely".into()],
         )
@@ -621,7 +621,7 @@ mod tests {
         let l = LatencyModel::new(1e-3, 1.0);
         let m = ModelSet::new(
             vec![l, l],
-            vec![CostModel::new(60.0, 0.5)],
+            vec![CostModel::new(60.0, 0.5).unwrap()],
             vec![10_000, 20_000],
             vec!["only".into()],
         );

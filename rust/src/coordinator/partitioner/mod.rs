@@ -52,7 +52,7 @@ mod tests {
         let l = |b, g| LatencyModel::new(b, g);
         ModelSet::new(
             vec![l(1e-3, 10.0), l(1e-3, 10.0), l(4e-3, 1.0), l(4e-3, 1.0)],
-            vec![CostModel::new(3600.0, 0.65), CostModel::new(60.0, 0.48)],
+            vec![CostModel::new(3600.0, 0.65).unwrap(), CostModel::new(60.0, 0.48).unwrap()],
             vec![100_000, 200_000],
             vec!["fast".into(), "cheapish".into()],
         )

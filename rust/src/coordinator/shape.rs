@@ -1,0 +1,730 @@
+//! Cluster-shape optimisation: catalogue → composition → allocation.
+//!
+//! The paper froze the cluster at the Table II testbed; this module makes
+//! the *composition* — how many instances of each catalogue type to rent —
+//! an optimisation variable. The search is a two-level decomposition:
+//!
+//! * **Outer**: a branch & bound over per-type instance-count vectors,
+//!   solved with the generic worker-pool search in
+//!   [`crate::milp::branch_bound`]. The outer MILP is a sharp relaxation of
+//!   the true problem: work is fluid across instances (the LP-relaxed
+//!   per-type throughput bound that prunes the count space), setup γ is
+//!   ignored, and billing quanta are aggregated per type —
+//!
+//!   ```text
+//!   min  Σ_t π_ρ,t · q_t                      (per-quantum rates)
+//!   s.t. Σ_t x_tj = 1                          ∀j   (coverage)
+//!        Σ_j β_tj N_j x_tj ≤ ρ_t · q_t         ∀t   (quanta cover work)
+//!        Σ_j β_tj N_j x_tj ≤ D · c_t           ∀t   (deadline capacity)
+//!        q_t ≤ ⌈D/ρ_t⌉ · c_t                   ∀t   (quanta within deadline)
+//!        c_t ∈ {0..available_t},  q_t ∈ ℤ₊
+//!   ```
+//!
+//!   so its optimum is a valid lower bound on any composition's true billed
+//!   cost at deadline `D`, and its incumbent counts already anticipate
+//!   quantum-boundary effects (renting a second instance to finish inside
+//!   one billed hour instead of spilling into two).
+//!
+//! * **Inner**: the incumbent composition is instantiated
+//!   ([`ModelSet::replicate`]) and handed to an ordinary [`Partitioner`]
+//!   (MILP or heuristic) under a small ε-constraint budget sweep; the true
+//!   ceiling-semantics evaluation picks the best (shape, allocation) pair.
+//!   A greedy escalation (add the fastest type) repairs compositions whose
+//!   true makespan overshoots the fluid deadline, and a trim pass drops
+//!   instances the inner sweep left idle.
+//!
+//! [`ShapeSearch::frontier`] sweeps deadlines to produce a Pareto frontier
+//! over (shape, allocation) pairs instead of allocations alone.
+
+use crate::api::error::{CloudshapesError, Result};
+use crate::milp::branch_bound::{self, BnbLimits, MilpStatus};
+use crate::milp::lp::{Cmp, Problem};
+
+use super::allocation::Allocation;
+use super::objectives::ModelSet;
+use super::partitioner::{lower_cost_bound, Partitioner};
+
+/// What to optimise the composition for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShapeObjective {
+    /// Minimise total billed cost subject to makespan ≤ deadline (seconds).
+    Deadline(f64),
+    /// Minimise makespan subject to total billed cost ≤ budget ($).
+    Budget(f64),
+}
+
+/// One (shape, allocation) pair with its true ceiling-semantics objectives.
+#[derive(Debug, Clone)]
+pub struct ShapePoint {
+    /// Instances rented per catalogue type.
+    pub counts: Vec<usize>,
+    /// Instantiated instance names (`type#k`).
+    pub instance_names: Vec<String>,
+    /// Per-instance allocation over the instantiated shape.
+    pub alloc: Allocation,
+    /// Predicted makespan of the pair, seconds.
+    pub latency: f64,
+    /// Predicted total billed cost, $.
+    pub cost: f64,
+}
+
+/// A completed shape optimisation.
+#[derive(Debug, Clone)]
+pub struct ShapeOutcome {
+    pub point: ShapePoint,
+    /// The outer MILP's bound: within the ε count tie-break of a true lower
+    /// bound on any composition's billed cost at the solved deadline (setup
+    /// and per-instance packing relaxed away).
+    pub outer_bound: f64,
+    /// Outer branch & bound nodes explored (summed over probes in budget
+    /// mode).
+    pub nodes: usize,
+}
+
+/// Shape search over a catalogue of platform types.
+///
+/// `types` is a *per-type* [`ModelSet`] (one row-set per catalogue offer,
+/// fitted or nominal); `avail` caps the instances per type; `inner` solves
+/// each instantiated composition.
+pub struct ShapeSearch<'a> {
+    types: &'a ModelSet,
+    avail: Vec<usize>,
+    inner: &'a dyn Partitioner,
+    limits: BnbLimits,
+    /// Budget levels of the inner ε-constraint sweep per composition.
+    pub sweep_levels: usize,
+    /// Known-good composition evaluated alongside the searched ones (e.g.
+    /// the pinned paper testbed): the result is then never worse than the
+    /// best pair this composition admits under the same inner sweep.
+    baseline: Option<Vec<usize>>,
+}
+
+/// Bisection iterations for budget mode.
+const BUDGET_PROBES: usize = 20;
+/// Relative deadline gap at which budget-mode bisection stops.
+const BUDGET_REL_TOL: f64 = 0.01;
+/// Cap on trim-pass improvement rounds.
+const TRIM_ROUNDS: usize = 8;
+/// Cost-floor bisection probes on the winning composition.
+const REFINE_PROBES: usize = 16;
+
+impl<'a> ShapeSearch<'a> {
+    pub fn new(
+        types: &'a ModelSet,
+        avail: &[usize],
+        inner: &'a dyn Partitioner,
+        limits: BnbLimits,
+    ) -> Result<ShapeSearch<'a>> {
+        if avail.len() != types.mu {
+            return Err(CloudshapesError::config(format!(
+                "availability has {} entries for {} platform types",
+                avail.len(),
+                types.mu
+            )));
+        }
+        if avail.iter().all(|&a| a == 0) {
+            return Err(CloudshapesError::config("catalogue has no available instances"));
+        }
+        Ok(ShapeSearch {
+            types,
+            avail: avail.to_vec(),
+            inner,
+            limits,
+            sweep_levels: 7,
+            baseline: None,
+        })
+    }
+
+    /// Register a baseline composition (must fit the availability caps).
+    pub fn with_baseline(mut self, counts: Vec<usize>) -> Result<ShapeSearch<'a>> {
+        if counts.len() != self.types.mu {
+            return Err(CloudshapesError::config(format!(
+                "baseline has {} counts for {} platform types",
+                counts.len(),
+                self.types.mu
+            )));
+        }
+        if counts.iter().zip(&self.avail).any(|(c, a)| c > a) {
+            return Err(CloudshapesError::config(
+                "baseline composition exceeds availability",
+            ));
+        }
+        self.baseline = Some(counts);
+        Ok(self)
+    }
+
+    /// Fluid lower bound on any composition's makespan: every simulation on
+    /// its fastest type, all available instances busy.
+    pub fn fluid_min_makespan(&self) -> f64 {
+        let m = self.types;
+        let total_avail: usize = self.avail.iter().sum();
+        let min_work: f64 = (0..m.tau)
+            .map(|j| {
+                (0..m.mu)
+                    .filter(|&t| self.avail[t] > 0)
+                    .map(|t| m.work_secs(t, j))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum();
+        min_work / total_avail.max(1) as f64
+    }
+
+    /// Slowest single-instance composition — a generous upper deadline.
+    fn max_solo_latency(&self) -> f64 {
+        (0..self.types.mu)
+            .filter(|&t| self.avail[t] > 0)
+            .map(|t| self.types.solo_latency(t))
+            .fold(0.0, f64::max)
+    }
+
+    /// Solve the outer composition MILP at `deadline`; returns the
+    /// incumbent counts, the cost lower bound, and nodes explored.
+    fn outer_milp(&self, deadline: f64) -> Result<(Vec<usize>, f64, usize)> {
+        let m = self.types;
+        let (mu, tau) = (m.mu, m.tau);
+        let mut p = Problem::new();
+        // Instance counts first (extraction below indexes on this layout).
+        let c_vars: Vec<_> = (0..mu)
+            .map(|t| p.int(&format!("c_{t}"), 0.0, self.avail[t] as f64))
+            .collect();
+        // Per-type aggregated billed quanta within the deadline.
+        let quanta_cap: Vec<f64> =
+            (0..mu).map(|t| (deadline / m.cost[t].quantum_secs).ceil().max(1.0)).collect();
+        let q_vars: Vec<_> = (0..mu)
+            .map(|t| {
+                p.int(&format!("q_{t}"), 0.0, quanta_cap[t] * self.avail[t] as f64)
+            })
+            .collect();
+        let x_vars: Vec<_> = (0..mu * tau)
+            .map(|k| p.cont(&format!("x_{}_{}", k / tau, k % tau), 0.0, 1.0))
+            .collect();
+        // Coverage rows.
+        for j in 0..tau {
+            let terms: Vec<_> = (0..mu).map(|t| (x_vars[t * tau + j], 1.0)).collect();
+            p.constrain(terms, Cmp::Eq, 1.0);
+        }
+        for t in 0..mu {
+            let work_terms: Vec<_> =
+                (0..tau).map(|j| (x_vars[t * tau + j], m.work_secs(t, j))).collect();
+            // Work covered by billed quanta: w_t - rho_t q_t <= 0.
+            let mut q_row = work_terms.clone();
+            q_row.push((q_vars[t], -m.cost[t].quantum_secs));
+            p.constrain(q_row, Cmp::Le, 0.0);
+            // Fluid deadline capacity: w_t - D c_t <= 0.
+            let mut d_row = work_terms;
+            d_row.push((c_vars[t], -deadline));
+            p.constrain(d_row, Cmp::Le, 0.0);
+            // Quanta rentable within the deadline: q_t - ceil(D/rho) c_t <= 0.
+            p.constrain(
+                vec![(q_vars[t], 1.0), (c_vars[t], -quanta_cap[t])],
+                Cmp::Le,
+                0.0,
+            );
+        }
+        // Objective: billed quanta at per-quantum rates, plus an ε count
+        // tie-break — counts have no cost of their own, so without it the
+        // LP vertex may rent idle instances the trim pass then has to shed.
+        let mut obj: Vec<_> =
+            (0..mu).map(|t| (q_vars[t], m.cost[t].rate_per_quantum())).collect();
+        obj.extend((0..mu).map(|t| (c_vars[t], m.cost[t].rate_per_quantum() * 1e-6)));
+        p.minimize(obj);
+
+        let sol = branch_bound::solve(&p, &self.limits);
+        match sol.status {
+            MilpStatus::Optimal | MilpStatus::Feasible => {
+                let counts: Vec<usize> = (0..mu)
+                    .map(|t| (sol.x[t].round().max(0.0) as usize).min(self.avail[t]))
+                    .collect();
+                Ok((counts, sol.bound.max(0.0), sol.nodes))
+            }
+            // Node/time budget exhausted with no incumbent: fall back to a
+            // *small* known composition — the baseline if registered, else
+            // a minimal single-type rental (escalation repairs any
+            // under-shoot). Renting full availability here would make the
+            // budget-miss path the most expensive composition to evaluate,
+            // breaking the `[milp]`-budgets-cap-solver-work contract.
+            MilpStatus::Unknown => {
+                let counts = self
+                    .baseline
+                    .clone()
+                    .unwrap_or_else(|| self.fallback_counts(deadline));
+                Ok((counts, sol.bound.max(0.0), sol.nodes))
+            }
+            MilpStatus::Infeasible | MilpStatus::Unbounded => {
+                Err(CloudshapesError::solver(format!(
+                    "shape: no composition meets deadline {deadline:.1}s within availability \
+                     {:?} (outer MILP {:?})",
+                    self.avail, sol.status
+                )))
+            }
+        }
+    }
+
+    /// Minimal single-type fallback composition when the outer MILP ran out
+    /// of budget without an incumbent: enough instances of the cheapest
+    /// (fluid-rate) type to cover the deadline capacity, clamped to
+    /// availability.
+    fn fallback_counts(&self, deadline: f64) -> Vec<usize> {
+        let m = self.types;
+        let pick = (0..m.mu)
+            .filter(|&t| self.avail[t] > 0)
+            .min_by(|&a, &b| {
+                let ca: f64 =
+                    (0..m.tau).map(|j| m.work_secs(a, j)).sum::<f64>() * m.cost[a].rate_per_hour;
+                let cb: f64 =
+                    (0..m.tau).map(|j| m.work_secs(b, j)).sum::<f64>() * m.cost[b].rate_per_hour;
+                ca.total_cmp(&cb).then(a.cmp(&b))
+            })
+            .expect("constructor guarantees some availability");
+        let work: f64 = (0..m.tau).map(|j| m.work_secs(pick, j)).sum();
+        let mut counts = vec![0; m.mu];
+        counts[pick] = ((work / deadline).ceil().max(1.0) as usize).min(self.avail[pick]);
+        counts
+    }
+
+    /// Inner evaluation of one composition: instantiate, run the inner
+    /// partitioner unconstrained plus a small budget sweep (and any
+    /// `extra_budgets`, e.g. the exact budget of a budget-mode probe), and
+    /// return all true-semantics points found.
+    ///
+    /// The sweep's lower anchor is the *relaxed* minimum cost, not the
+    /// cheapest-single-platform C_L: with heterogeneous billing quanta a
+    /// multi-instance allocation can undercut every solo run (finishing a
+    /// big-quantum instance exactly at its boundary and pushing the
+    /// residual onto a fine-quantum one), so C_L is not a cost floor here.
+    fn composition_points(
+        &self,
+        counts: &[usize],
+        extra_budgets: &[f64],
+    ) -> Result<Vec<ShapePoint>> {
+        let replica = self.types.replicate(counts)?;
+        let names = replica.platform_names.clone();
+        let mut points = Vec::new();
+        let mut push = |alloc: Allocation, replica: &ModelSet| {
+            if alloc.validate().is_ok() {
+                let (latency, cost) = replica.evaluate(&alloc);
+                points.push(ShapePoint {
+                    counts: counts.to_vec(),
+                    instance_names: names.clone(),
+                    alloc,
+                    latency,
+                    cost,
+                });
+            }
+        };
+        let fast = self.inner.partition(&replica, None)?;
+        let (_, c_upper) = replica.evaluate(&fast);
+        push(fast, &replica);
+        push(lower_cost_bound(&replica).1, &replica);
+        let c_floor = relaxed_min_cost(&replica);
+        let levels = self.sweep_levels.max(2);
+        let budgets = (0..levels)
+            .map(|k| c_floor + (c_upper - c_floor) * k as f64 / (levels - 1) as f64)
+            .chain(extra_budgets.iter().copied());
+        for budget in budgets {
+            if let Ok(alloc) = self.inner.partition(&replica, Some(budget)) {
+                push(alloc, &replica);
+            }
+        }
+        Ok(points)
+    }
+
+    /// Bisect the cost floor of `counts` at `deadline`: the smallest budget
+    /// whose budget-constrained inner solve still makes the deadline. This
+    /// is what actually lands on quantum boundaries (e.g. the exact budget
+    /// where a big-quantum instance bills one quantum, not two).
+    fn refine_cheapest(
+        &self,
+        best: ShapePoint,
+        deadline: f64,
+    ) -> Result<ShapePoint> {
+        let replica = self.types.replicate(&best.counts)?;
+        let names = replica.platform_names.clone();
+        let counts = best.counts.clone();
+        let mut lo = relaxed_min_cost(&replica);
+        let mut best = best;
+        for _ in 0..REFINE_PROBES {
+            if best.cost - lo <= 1e-6 * best.cost.max(1e-9) {
+                break;
+            }
+            let mid = 0.5 * (lo + best.cost);
+            let feasible = self
+                .inner
+                .partition(&replica, Some(mid))
+                .ok()
+                .filter(|a| a.validate().is_ok())
+                .map(|alloc| {
+                    let (latency, cost) = replica.evaluate(&alloc);
+                    ShapePoint {
+                        counts: counts.clone(),
+                        instance_names: names.clone(),
+                        alloc,
+                        latency,
+                        cost,
+                    }
+                })
+                .filter(|p| p.latency <= deadline + 1e-9);
+            match feasible {
+                Some(p) if p.cost < best.cost => best = p,
+                // Feasible but no cheaper: the floor is above mid too.
+                _ => lo = mid,
+            }
+        }
+        Ok(best)
+    }
+
+    /// The fastest type (smallest mean work seconds) with headroom left —
+    /// the escalation step when a composition misses its deadline.
+    fn escalation_type(&self, counts: &[usize]) -> Option<usize> {
+        (0..self.types.mu)
+            .filter(|&t| counts[t] < self.avail[t])
+            .min_by(|&a, &b| {
+                let wa: f64 = (0..self.types.tau).map(|j| self.types.work_secs(a, j)).sum();
+                let wb: f64 = (0..self.types.tau).map(|j| self.types.work_secs(b, j)).sum();
+                wa.total_cmp(&wb).then(a.cmp(&b))
+            })
+    }
+
+    /// All (shape, allocation) points meeting `deadline`, starting from the
+    /// outer MILP's incumbent composition and escalating while the true
+    /// makespan overshoots the fluid relaxation.
+    fn deadline_candidates(
+        &self,
+        deadline: f64,
+        extra_budgets: &[f64],
+    ) -> Result<(Vec<ShapePoint>, f64, usize)> {
+        if !(deadline > 0.0 && deadline.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "deadline must be positive and finite, got {deadline}"
+            )));
+        }
+        let (mut counts, bound, nodes) = self.outer_milp(deadline)?;
+        let baseline_points: Vec<ShapePoint> = match &self.baseline {
+            Some(b) => self
+                .composition_points(b, extra_budgets)?
+                .into_iter()
+                .filter(|pt| pt.latency <= deadline + 1e-9)
+                .collect(),
+            None => Vec::new(),
+        };
+        loop {
+            let mut feasible: Vec<ShapePoint> = self
+                .composition_points(&counts, extra_budgets)?
+                .into_iter()
+                .filter(|pt| pt.latency <= deadline + 1e-9)
+                .collect();
+            if !feasible.is_empty() {
+                feasible.extend(baseline_points);
+                return Ok((feasible, bound, nodes));
+            }
+            // True makespan (setup, integrality) overshot the fluid bound:
+            // rent one more of the fastest type and retry.
+            match self.escalation_type(&counts) {
+                Some(t) => counts[t] += 1,
+                None if !baseline_points.is_empty() => {
+                    return Ok((baseline_points, bound, nodes))
+                }
+                None => {
+                    return Err(CloudshapesError::solver(format!(
+                        "shape: deadline {deadline:.1}s unreachable even at full \
+                         availability {:?}",
+                        self.avail
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Minimise billed cost subject to the deadline.
+    fn optimize_deadline(&self, deadline: f64) -> Result<ShapeOutcome> {
+        let (points, outer_bound, nodes) = self.deadline_candidates(deadline, &[])?;
+        let mut best = cheapest(points).expect("deadline_candidates returns non-empty");
+        // Trim pass: drop instances whose removal still meets the deadline
+        // at strictly lower cost (the inner sweep may leave rentals idle).
+        // Evaluated compositions are memoized — successive rounds revisit
+        // the same trimmed vectors, and inner sweeps are not free.
+        let mut seen: std::collections::HashMap<Vec<usize>, Option<ShapePoint>> =
+            std::collections::HashMap::new();
+        for _ in 0..TRIM_ROUNDS {
+            let mut improved = false;
+            for t in 0..self.types.mu {
+                if best.counts[t] == 0 {
+                    continue;
+                }
+                let mut trimmed = best.counts.clone();
+                trimmed[t] -= 1;
+                if trimmed.iter().all(|&c| c == 0) {
+                    continue;
+                }
+                let cand = seen
+                    .entry(trimmed.clone())
+                    .or_insert_with(|| {
+                        let points = self.composition_points(&trimmed, &[]).ok()?;
+                        cheapest(
+                            points
+                                .into_iter()
+                                .filter(|p| p.latency <= deadline + 1e-9)
+                                .collect(),
+                        )
+                    })
+                    .clone();
+                if let Some(cand) = cand {
+                    if cand.cost < best.cost - 1e-12 {
+                        best = cand;
+                        improved = true;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        let best = self.refine_cheapest(best, deadline)?;
+        Ok(ShapeOutcome { point: best, outer_bound, nodes })
+    }
+
+    /// Minimise makespan subject to the budget, by bisecting deadlines.
+    fn optimize_budget(&self, budget: f64) -> Result<ShapeOutcome> {
+        if !(budget > 0.0 && budget.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "budget must be positive and finite, got {budget}"
+            )));
+        }
+        let mut nodes = 0usize;
+        let mut best: Option<(ShapePoint, f64)> = None; // (point, outer bound)
+        let mut take = |points: Vec<ShapePoint>, bound: f64| -> Option<ShapePoint> {
+            let within: Vec<ShapePoint> =
+                points.into_iter().filter(|p| p.cost <= budget + 1e-9).collect();
+            let pt = within.into_iter().min_by(|a, b| {
+                a.latency.total_cmp(&b.latency).then(a.cost.total_cmp(&b.cost))
+            })?;
+            if best.as_ref().map(|(b, _)| pt.latency < b.latency).unwrap_or(true) {
+                best = Some((pt.clone(), bound));
+            }
+            Some(pt)
+        };
+
+        // The initial probe at the loosest deadline propagates genuine
+        // failures (bad inputs, outer-MILP limits) instead of blaming the
+        // budget; only a truly-too-small budget maps to the solver error.
+        let mut hi = self.max_solo_latency();
+        let (points, bound, n) = self.deadline_candidates(hi, &[budget])?;
+        nodes += n;
+        if take(points, bound).is_none() {
+            return Err(CloudshapesError::solver(format!(
+                "shape: no composition within budget ${budget:.3} \
+                 (cheapest achievable exceeds it)"
+            )));
+        }
+        // Bisection probes at tighter deadlines may legitimately fail —
+        // treat any failure there as "deadline too tight".
+        let mut probe = |deadline: f64, nodes: &mut usize| -> Option<ShapePoint> {
+            let (points, bound, n) = self.deadline_candidates(deadline, &[budget]).ok()?;
+            *nodes += n;
+            take(points, bound)
+        };
+        let mut lo = self.fluid_min_makespan().max(hi * 1e-6).min(hi);
+        for _ in 0..BUDGET_PROBES {
+            if hi - lo <= BUDGET_REL_TOL * hi {
+                break;
+            }
+            let mid = (lo * hi).sqrt();
+            match probe(mid, &mut nodes) {
+                Some(_) => hi = mid,
+                None => lo = mid,
+            }
+        }
+        let (point, outer_bound) = best.expect("initial probe succeeded");
+        Ok(ShapeOutcome { point, outer_bound, nodes })
+    }
+
+    /// Optimise the composition for `objective`.
+    pub fn optimize(&self, objective: ShapeObjective) -> Result<ShapeOutcome> {
+        match objective {
+            ShapeObjective::Deadline(d) => self.optimize_deadline(d),
+            ShapeObjective::Budget(b) => self.optimize_budget(b),
+        }
+    }
+
+    /// Pareto frontier over (shape, allocation) pairs: optimise a geometric
+    /// grid of `levels` deadlines between the fluid minimum and the slowest
+    /// solo composition, then keep the non-dominated points cheapest-first.
+    pub fn frontier(&self, levels: usize) -> Result<Vec<ShapeOutcome>> {
+        let levels = levels.max(2);
+        let hi = self.max_solo_latency();
+        let lo = self.fluid_min_makespan().max(hi * 1e-4).min(hi);
+        let mut outcomes: Vec<ShapeOutcome> = Vec::new();
+        for k in 0..levels {
+            let d = lo * (hi / lo).powf(k as f64 / (levels - 1) as f64);
+            if let Ok(out) = self.optimize_deadline(d) {
+                outcomes.push(out);
+            }
+        }
+        if outcomes.is_empty() {
+            return Err(CloudshapesError::solver(
+                "shape: no deadline level produced a composition",
+            ));
+        }
+        // Non-dominated filter, cheapest first.
+        outcomes.sort_by(|a, b| {
+            a.point
+                .cost
+                .total_cmp(&b.point.cost)
+                .then(a.point.latency.total_cmp(&b.point.latency))
+        });
+        let mut front: Vec<ShapeOutcome> = Vec::new();
+        let mut best_latency = f64::INFINITY;
+        for o in outcomes {
+            if o.point.latency < best_latency - 1e-12 {
+                best_latency = o.point.latency;
+                front.push(o);
+            }
+        }
+        Ok(front)
+    }
+}
+
+/// Cheapest point, ties broken toward the lower latency.
+fn cheapest(points: Vec<ShapePoint>) -> Option<ShapePoint> {
+    points
+        .into_iter()
+        .min_by(|a, b| a.cost.total_cmp(&b.cost).then(a.latency.total_cmp(&b.latency)))
+}
+
+/// Relaxed (un-quantised, setup-free) minimum cost of a model set: every
+/// task billed at its cheapest per-second rate. A true lower bound on any
+/// allocation's billed cost — unlike the cheapest-single-platform C_L.
+fn relaxed_min_cost(m: &ModelSet) -> f64 {
+    (0..m.tau)
+        .map(|j| {
+            (0..m.mu)
+                .map(|i| m.work_secs(i, j) * m.cost[i].rate_per_hour / 3600.0)
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::{HeuristicPartitioner, MilpPartitioner};
+    use crate::models::{CostModel, LatencyModel};
+
+    /// Two rentable types sized so quantum boundaries matter: `hourly` is a
+    /// fast device billed in 3600-s quanta, `minutely` prices the same
+    /// throughput at a 60-s quantum and a slightly higher rate. The single
+    /// task is 4500 s of work on either type.
+    fn quantum_types() -> ModelSet {
+        ModelSet::new(
+            vec![LatencyModel::new(1.0, 0.0), LatencyModel::new(1.0, 0.0)],
+            vec![
+                CostModel::new(3600.0, 1.0).unwrap(),
+                CostModel::new(60.0, 1.2).unwrap(),
+            ],
+            vec![4500],
+            vec!["hourly".into(), "minutely".into()],
+        )
+    }
+
+    #[test]
+    fn golden_quantum_boundary_rents_a_second_instance() {
+        // One hourly instance takes 4500 s: it misses a 3600-s deadline and
+        // would spill into a second billed hour ($2). Renting a second
+        // (minutely) instance for the 900-s residual finishes inside one
+        // billed hour: $1 + 15 minutely quanta = $1.30.
+        let types = quantum_types();
+        let inner = MilpPartitioner::default();
+        let search = ShapeSearch::new(&types, &[2, 2], &inner, BnbLimits::default()).unwrap();
+        let out = search.optimize(ShapeObjective::Deadline(3600.0)).unwrap();
+        assert!(out.point.latency <= 3600.0 + 1e-9, "{:?}", out.point);
+        assert!(
+            out.point.counts.iter().sum::<usize>() >= 2,
+            "must rent a second instance: {:?}",
+            out.point.counts
+        );
+        assert!(
+            out.point.cost <= 1.30 + 1e-9,
+            "expected the $1.30 quantum-boundary composition, got ${}",
+            out.point.cost
+        );
+        // Strictly cheaper than one instance across two billed hours.
+        assert!(out.point.cost < 2.0 - 1e-9);
+        // The outer MILP bound stays below the billed cost (up to the ε
+        // count tie-break in its objective).
+        assert!(out.outer_bound <= out.point.cost + 1e-3);
+        assert!(out.nodes >= 1);
+    }
+
+    #[test]
+    fn budget_mode_minimises_latency_within_budget() {
+        let types = quantum_types();
+        let inner = MilpPartitioner::default();
+        let search = ShapeSearch::new(&types, &[2, 2], &inner, BnbLimits::default()).unwrap();
+        let out = search.optimize(ShapeObjective::Budget(1.31)).unwrap();
+        assert!(out.point.cost <= 1.31 + 1e-9, "{:?}", out.point);
+        // $1.31 affords the two-instance composition, so the makespan must
+        // beat the 4500-s solo runs.
+        assert!(out.point.latency <= 3600.0 + 1e-6, "{:?}", out.point);
+        // An impossible budget is a typed solver error.
+        let e = search.optimize(ShapeObjective::Budget(1e-6)).unwrap_err();
+        assert_eq!(e.kind(), "solver");
+    }
+
+    #[test]
+    fn loose_deadline_rents_the_cheapest_single_instance() {
+        let types = quantum_types();
+        let inner = HeuristicPartitioner::default();
+        let search = ShapeSearch::new(&types, &[2, 2], &inner, BnbLimits::default()).unwrap();
+        // At a 2-hour deadline the solo hourly run (2 quanta, $2) fits, but
+        // 75 minutely quanta at $1.2/h ($1.50) and the hourly+minutely mix
+        // ($1.30) are cheaper — any of the multi-quantum shapes wins over $2.
+        let out = search.optimize(ShapeObjective::Deadline(7200.0)).unwrap();
+        assert!(out.point.latency <= 7200.0 + 1e-9);
+        assert!(out.point.cost <= 1.5 + 1e-9, "{:?}", out.point);
+    }
+
+    #[test]
+    fn unreachable_deadline_is_a_solver_error() {
+        let types = quantum_types();
+        let inner = HeuristicPartitioner::default();
+        let search = ShapeSearch::new(&types, &[1, 1], &inner, BnbLimits::default()).unwrap();
+        // 4500 s of fluid work over 2 instances needs >= 2250 s.
+        let e = search.optimize(ShapeObjective::Deadline(100.0)).unwrap_err();
+        assert_eq!(e.kind(), "solver");
+        // Bad inputs are config errors.
+        assert_eq!(
+            search.optimize(ShapeObjective::Deadline(-1.0)).unwrap_err().kind(),
+            "config"
+        );
+        assert!(ShapeSearch::new(&types, &[1], &inner, BnbLimits::default()).is_err());
+        assert!(ShapeSearch::new(&types, &[0, 0], &inner, BnbLimits::default()).is_err());
+    }
+
+    #[test]
+    fn frontier_is_pareto_and_spans_shapes() {
+        let types = quantum_types();
+        let inner = HeuristicPartitioner::default();
+        let search = ShapeSearch::new(&types, &[3, 3], &inner, BnbLimits::default()).unwrap();
+        let front = search.frontier(6).unwrap();
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[0].point.cost <= w[1].point.cost + 1e-12);
+            assert!(w[0].point.latency >= w[1].point.latency - 1e-12);
+        }
+        // Tight deadlines must rent more instances than loose ones.
+        let max_instances =
+            front.iter().map(|o| o.point.counts.iter().sum::<usize>()).max().unwrap();
+        assert!(max_instances >= 2, "frontier never scaled the shape");
+    }
+
+    #[test]
+    fn fluid_bound_is_below_any_outcome() {
+        let types = quantum_types();
+        let inner = HeuristicPartitioner::default();
+        let search = ShapeSearch::new(&types, &[2, 2], &inner, BnbLimits::default()).unwrap();
+        let lb = search.fluid_min_makespan();
+        assert!((lb - 4500.0 / 4.0).abs() < 1e-9);
+        let out = search.optimize(ShapeObjective::Deadline(3600.0)).unwrap();
+        assert!(out.point.latency >= lb - 1e-9);
+    }
+}

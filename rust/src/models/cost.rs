@@ -6,6 +6,8 @@
 //! of the two effects (with γ setup time) that the paper's MILP exploits and
 //! the heuristic misses (§IV.C.2).
 
+use crate::api::error::{CloudshapesError, Result};
+
 /// Billing terms of one platform.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CostModel {
@@ -16,10 +18,20 @@ pub struct CostModel {
 }
 
 impl CostModel {
-    pub fn new(quantum_secs: f64, rate_per_hour: f64) -> CostModel {
-        assert!(quantum_secs > 0.0, "quantum must be positive");
-        assert!(rate_per_hour >= 0.0, "rate must be non-negative");
-        CostModel { quantum_secs, rate_per_hour }
+    /// Build billing terms; bad user config (non-positive quantum, negative
+    /// or non-finite rate) is a typed error, never a panic.
+    pub fn new(quantum_secs: f64, rate_per_hour: f64) -> Result<CostModel> {
+        if !(quantum_secs > 0.0 && quantum_secs.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "billing quantum must be positive and finite, got {quantum_secs}"
+            )));
+        }
+        if !(rate_per_hour >= 0.0 && rate_per_hour.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "billing rate must be non-negative and finite, got {rate_per_hour}"
+            )));
+        }
+        Ok(CostModel { quantum_secs, rate_per_hour })
     }
 
     /// Number of quanta billed for a latency (the integer `D` of Eq. 4).
@@ -55,7 +67,7 @@ mod tests {
     #[test]
     fn billing_rounds_up() {
         // AWS-style 60-min quantum at $0.65/h.
-        let m = CostModel::new(3600.0, 0.65);
+        let m = CostModel::new(3600.0, 0.65).unwrap();
         assert_eq!(m.quanta(1.0), 1);
         assert_eq!(m.quanta(3600.0), 1);
         assert_eq!(m.quanta(3601.0), 2);
@@ -64,8 +76,23 @@ mod tests {
     }
 
     #[test]
+    fn bad_billing_terms_are_typed_errors() {
+        for (quantum, rate) in [
+            (0.0, 0.5),
+            (-60.0, 0.5),
+            (f64::NAN, 0.5),
+            (f64::INFINITY, 0.5),
+            (60.0, -0.1),
+            (60.0, f64::NAN),
+        ] {
+            let e = CostModel::new(quantum, rate).unwrap_err();
+            assert_eq!(e.kind(), "config", "({quantum}, {rate}) -> {e}");
+        }
+    }
+
+    #[test]
     fn zero_latency_costs_nothing() {
-        let m = CostModel::new(60.0, 0.592);
+        let m = CostModel::new(60.0, 0.592).unwrap();
         assert_eq!(m.quanta(0.0), 0);
         assert_eq!(m.cost(0.0), 0.0);
     }
@@ -74,8 +101,8 @@ mod tests {
     fn short_quantum_bills_finer() {
         // Azure 1-min vs AWS 60-min quantum, same hourly rate: for a 5-min
         // job Azure bills 5 minutes, AWS bills the full hour.
-        let azure = CostModel::new(60.0, 0.60);
-        let aws = CostModel::new(3600.0, 0.60);
+        let azure = CostModel::new(60.0, 0.60).unwrap();
+        let aws = CostModel::new(3600.0, 0.60).unwrap();
         let latency = 300.0;
         assert!((azure.cost(latency) - 0.05).abs() < 1e-12);
         assert!((aws.cost(latency) - 0.60).abs() < 1e-12);
@@ -84,7 +111,7 @@ mod tests {
     #[test]
     fn relaxed_cost_is_a_lower_bound() {
         prop_check("relaxed cost <= billed cost", 300, |g| {
-            let m = CostModel::new(g.f64(1.0, 7200.0), g.f64(0.0, 5.0));
+            let m = CostModel::new(g.f64(1.0, 7200.0), g.f64(0.0, 5.0)).unwrap();
             let latency = g.f64(0.0, 100_000.0);
             prop_assert(
                 m.cost_relaxed(latency) <= m.cost(latency) + 1e-9,
@@ -94,9 +121,42 @@ mod tests {
     }
 
     #[test]
+    fn cost_is_a_step_function_dominating_the_relaxation() {
+        // The billing staircase: cost is piecewise constant on quantum
+        // intervals (flat between a latency and its quantum ceiling),
+        // monotone non-decreasing, and everywhere >= the relaxed cost.
+        prop_check("billed cost is a quantum staircase", 300, |g| {
+            let m = CostModel::new(g.f64(1.0, 7200.0), g.f64(0.01, 5.0)).unwrap();
+            let latency = g.f64(0.001, 100_000.0);
+            let k = m.quanta(latency) as f64;
+            // Flat within the quantum: the interval's midpoint bills the
+            // same k quanta as `latency` itself.
+            prop_assert(
+                (m.cost(latency) - m.cost((k - 0.5) * m.quantum_secs)).abs() < 1e-9,
+                "cost not constant within a quantum interval",
+            )?;
+            // One full step up in the next interval.
+            prop_assert(
+                (m.cost((k + 0.5) * m.quantum_secs) - m.cost(latency) - m.rate_per_quantum())
+                    .abs()
+                    < 1e-9,
+                "no step at the quantum boundary",
+            )?;
+            // Monotone: more latency never bills less.
+            let later = latency + g.f64(0.0, 10_000.0);
+            prop_assert(m.cost(later) >= m.cost(latency) - 1e-12, "cost not monotone")?;
+            // Dominates the relaxation.
+            prop_assert(
+                m.cost(latency) >= m.cost_relaxed(latency) - 1e-12,
+                "staircase dipped below the relaxation",
+            )
+        });
+    }
+
+    #[test]
     fn billed_cost_within_one_quantum_of_relaxed() {
         prop_check("billed - relaxed <= one quantum", 300, |g| {
-            let m = CostModel::new(g.f64(1.0, 7200.0), g.f64(0.01, 5.0));
+            let m = CostModel::new(g.f64(1.0, 7200.0), g.f64(0.01, 5.0)).unwrap();
             let latency = g.f64(0.001, 100_000.0);
             prop_assert(
                 m.cost(latency) - m.cost_relaxed(latency) <= m.rate_per_quantum() + 1e-9,
@@ -107,7 +167,7 @@ mod tests {
 
     #[test]
     fn rate_per_quantum_scales_with_quantum() {
-        let m = CostModel::new(600.0, 0.352); // GCE: 10-min quantum
+        let m = CostModel::new(600.0, 0.352).unwrap(); // GCE: 10-min quantum
         assert!((m.rate_per_quantum() - 0.352 / 6.0).abs() < 1e-12);
     }
 }

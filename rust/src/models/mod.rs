@@ -38,7 +38,7 @@ mod tests {
     fn task_platform_model_composes() {
         let m = TaskPlatformModel {
             latency: LatencyModel::new(1e-3, 10.0),
-            cost: CostModel::new(60.0, 3.6),
+            cost: CostModel::new(60.0, 3.6).unwrap(),
         };
         // 50_000 sims -> 60 s -> 1 quantum -> $0.06.
         assert!((m.latency_secs(50_000) - 60.0).abs() < 1e-9);

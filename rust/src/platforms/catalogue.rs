@@ -1,0 +1,414 @@
+//! The rentable-platform catalogue — cluster *shape* as data.
+//!
+//! The paper's testbed (Table II) froze the cluster at fixed instance
+//! counts; this module turns those rows into per-type [`PlatformOffer`]s —
+//! billing terms, an availability cap, and optional spot terms with a
+//! preemption hazard — from which any composition within availability can be
+//! instantiated. The Table II testbed is just one pinned instantiation
+//! ([`Catalogue::testbed_counts`]); `coordinator::shape` searches over the
+//! others.
+
+use crate::api::error::{CloudshapesError, Result};
+
+use super::spec::{instance_name, Category, FpgaResources, PlatformSpec};
+
+/// Spot rental terms of an offer: a discounted rate bought at the risk of
+/// preemption. The hazard is expressed per hour of lane uptime; the chunked
+/// executor draws each spot lane's preemption time from it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpotTerms {
+    /// Discounted $/hour rate.
+    pub rate_per_hour: f64,
+    /// Expected preemptions per hour of uptime (exponential hazard).
+    pub preemptions_per_hour: f64,
+}
+
+/// One rentable platform type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformOffer {
+    /// Template spec of a single on-demand instance. Its `name` is the
+    /// offer's type name; instantiated instances get `name#k` suffixes.
+    pub spec: PlatformSpec,
+    /// Cap on rentable instances of this type (the IaaS quota).
+    pub available: usize,
+    /// Instances in the paper's Table II testbed.
+    pub testbed_count: usize,
+    /// Optional spot market for this type.
+    pub spot: Option<SpotTerms>,
+}
+
+/// A set of platform offers the shape optimiser composes clusters from.
+#[derive(Debug, Clone)]
+pub struct Catalogue {
+    offers: Vec<PlatformOffer>,
+}
+
+/// Availability cap for the built-in catalogues: a generous per-type cloud
+/// quota well above the Table II testbed counts, so shape search has room.
+const DEFAULT_AVAILABLE: usize = 16;
+
+impl Catalogue {
+    /// Build a catalogue from offers, validating every template spec.
+    pub fn new(offers: Vec<PlatformOffer>) -> Result<Catalogue> {
+        if offers.is_empty() {
+            return Err(CloudshapesError::config("catalogue has no offers"));
+        }
+        for o in &offers {
+            o.spec.validate()?;
+            if o.available == 0 {
+                return Err(CloudshapesError::config(format!(
+                    "offer '{}' has zero availability",
+                    o.spec.name
+                )));
+            }
+            if o.testbed_count > o.available {
+                return Err(CloudshapesError::config(format!(
+                    "offer '{}': testbed count {} exceeds availability {}",
+                    o.spec.name, o.testbed_count, o.available
+                )));
+            }
+            if let Some(s) = o.spot {
+                if !(s.rate_per_hour >= 0.0 && s.rate_per_hour.is_finite())
+                    || !(s.preemptions_per_hour > 0.0 && s.preemptions_per_hour.is_finite())
+                {
+                    return Err(CloudshapesError::config(format!(
+                        "offer '{}': bad spot terms {s:?}",
+                        o.spec.name
+                    )));
+                }
+            }
+        }
+        Ok(Catalogue { offers })
+    }
+
+    /// The paper's Table II offers (April-2015 prices), with availability
+    /// opened up to a cloud-style quota and spot terms on the IaaS-provided
+    /// types (roughly the historical ~70% spot discount, with an hourly-ish
+    /// preemption hazard).
+    pub fn paper() -> Catalogue {
+        Catalogue::new(table2_offers()).expect("paper catalogue is valid")
+    }
+
+    /// A reduced catalogue for fast tests: one offer per category (the same
+    /// types `small_cluster` picks).
+    pub fn small() -> Catalogue {
+        let all = table2_offers();
+        let mut offers = Vec::new();
+        for cat in [Category::Fpga, Category::Gpu, Category::Cpu] {
+            let mut o = all.iter().find(|o| o.spec.category == cat).unwrap().clone();
+            o.testbed_count = 1;
+            offers.push(o);
+        }
+        Catalogue::new(offers).expect("small catalogue is valid")
+    }
+
+    pub fn len(&self) -> usize {
+        self.offers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offers.is_empty()
+    }
+
+    pub fn offers(&self) -> &[PlatformOffer] {
+        &self.offers
+    }
+
+    pub fn offer(&self, t: usize) -> &PlatformOffer {
+        &self.offers[t]
+    }
+
+    /// Per-offer availability caps.
+    pub fn availability(&self) -> Vec<usize> {
+        self.offers.iter().map(|o| o.available).collect()
+    }
+
+    /// The pinned paper-testbed composition (Table II counts).
+    pub fn testbed_counts(&self) -> Vec<usize> {
+        self.offers.iter().map(|o| o.testbed_count).collect()
+    }
+
+    /// Offer index by type name.
+    pub fn find(&self, type_name: &str) -> Option<usize> {
+        self.offers.iter().position(|o| o.spec.name == type_name)
+    }
+
+    /// Instantiate a composition: `counts[t]` instances of offer `t`, named
+    /// `type#k` (bare type name when a single instance is rented). With
+    /// `spot` set, offers that have spot terms are rented at the spot rate
+    /// and carry the preemption hazard in [`PlatformSpec::preemptible`].
+    pub fn instantiate(&self, counts: &[usize], spot: bool) -> Result<Vec<PlatformSpec>> {
+        if counts.len() != self.offers.len() {
+            return Err(CloudshapesError::config(format!(
+                "composition has {} counts for {} catalogue offers",
+                counts.len(),
+                self.offers.len()
+            )));
+        }
+        if counts.iter().all(|&c| c == 0) {
+            return Err(CloudshapesError::config("composition rents no instances"));
+        }
+        let mut specs = Vec::new();
+        for (o, &count) in self.offers.iter().zip(counts) {
+            if count > o.available {
+                return Err(CloudshapesError::config(format!(
+                    "composition rents {count} x '{}' but only {} are available",
+                    o.spec.name, o.available
+                )));
+            }
+            for k in 0..count {
+                let mut spec = o.spec.clone();
+                spec.name = instance_name(&o.spec.name, k, count);
+                if spot {
+                    if let Some(s) = o.spot {
+                        spec.rate_per_hour = s.rate_per_hour;
+                        spec.preemptible = Some(s.preemptions_per_hour);
+                    }
+                }
+                specs.push(spec);
+            }
+        }
+        Ok(specs)
+    }
+
+    /// Instance index → offer index map for a composition (the layout
+    /// [`instantiate`](Self::instantiate) produces).
+    pub fn instance_offers(&self, counts: &[usize]) -> Vec<usize> {
+        counts
+            .iter()
+            .enumerate()
+            .flat_map(|(t, &c)| std::iter::repeat(t).take(c))
+            .collect()
+    }
+}
+
+/// One device-type row of Table II as a catalogue offer.
+struct Row {
+    count: usize,
+    provider: Option<&'static str>,
+    device: &'static str,
+    short: &'static str,
+    standard: &'static str,
+    category: Category,
+    resources: Option<FpgaResources>,
+    clock_ghz: f64,
+    app_gflops: f64,
+    rate_per_hour: f64,
+    quantum_secs: f64,
+    setup_secs: f64,
+    /// Spot discount factor on the on-demand rate (None = no spot market).
+    spot_discount: Option<f64>,
+}
+
+fn table2_offers() -> Vec<PlatformOffer> {
+    let rows = vec![
+        Row {
+            count: 4,
+            provider: None,
+            device: "Xilinx Virtex 6 475T",
+            short: "virtex6",
+            standard: "OpenSPL (MaxCompiler 2013.2.2)",
+            category: Category::Fpga,
+            resources: Some(FpgaResources { luts_k: 298, flipflops_k: 595, brams: 1064, dsps: 2016 }),
+            clock_ghz: 0.2,
+            app_gflops: 111.978,
+            rate_per_hour: 0.438,
+            // Hypothetical FPGA IaaS billed hourly (DESIGN.md §2).
+            quantum_secs: 3600.0,
+            setup_secs: 40.0, // full-chip bitstream configuration
+            spot_discount: None,
+        },
+        Row {
+            count: 8,
+            provider: None,
+            device: "Altera Stratix V GSD8",
+            short: "stratix5-gsd8",
+            standard: "OpenSPL (MaxCompiler 2013.2.2)",
+            category: Category::Fpga,
+            resources: Some(FpgaResources { luts_k: 695, flipflops_k: 1050, brams: 2567, dsps: 3926 }),
+            clock_ghz: 0.18,
+            app_gflops: 112.949,
+            rate_per_hour: 0.442,
+            quantum_secs: 3600.0,
+            setup_secs: 40.0,
+            spot_discount: None,
+        },
+        Row {
+            count: 1,
+            provider: None,
+            device: "Altera Stratix V GSD5",
+            short: "stratix5-gsd5",
+            standard: "OpenCL (Altera SDK 14.0)",
+            category: Category::Fpga,
+            resources: Some(FpgaResources { luts_k: 457, flipflops_k: 690, brams: 2014, dsps: 3180 }),
+            clock_ghz: 0.25,
+            app_gflops: 176.871,
+            rate_per_hour: 0.692,
+            quantum_secs: 3600.0,
+            setup_secs: 25.0, // OpenCL runtime reconfiguration
+            spot_discount: None,
+        },
+        Row {
+            count: 1,
+            provider: Some("AWS"),
+            device: "Nvidia Grid GK104",
+            short: "gk104",
+            standard: "OpenCL (Nvidia SDK 6.0)",
+            category: Category::Gpu,
+            resources: None,
+            clock_ghz: 0.8,
+            app_gflops: 556.085,
+            rate_per_hour: 0.650,
+            quantum_secs: 3600.0, // AWS hourly billing (Table I)
+            setup_secs: 2.0,      // context + JIT + transfer
+            spot_discount: Some(0.3), // the AWS spot market
+        },
+        Row {
+            count: 1,
+            provider: Some("MA"),
+            device: "Intel Xeon E5-2660",
+            short: "xeon-e5-2660",
+            standard: "POSIX (GCC 4.8)",
+            category: Category::Cpu,
+            resources: None,
+            clock_ghz: 2.2,
+            app_gflops: 4.160,
+            rate_per_hour: 0.480,
+            quantum_secs: 60.0, // Azure 1-minute quantum (Table I)
+            setup_secs: 0.5,
+            spot_discount: Some(0.35),
+        },
+        Row {
+            count: 1,
+            provider: Some("GCE"),
+            device: "Intel Xeon",
+            short: "xeon-gce",
+            standard: "POSIX (GCC 4.8)",
+            category: Category::Cpu,
+            resources: None,
+            clock_ghz: 2.0,
+            app_gflops: 6.022,
+            rate_per_hour: 0.352,
+            quantum_secs: 600.0, // GCE 10-minute quantum (Table I)
+            setup_secs: 0.5,
+            spot_discount: Some(0.3),
+        },
+    ];
+    rows.into_iter()
+        .map(|r| PlatformOffer {
+            spec: PlatformSpec {
+                name: r.short.to_string(),
+                provider: r.provider,
+                device: r.device,
+                standard: r.standard,
+                category: r.category,
+                resources: r.resources,
+                clock_ghz: r.clock_ghz,
+                app_gflops: r.app_gflops,
+                rate_per_hour: r.rate_per_hour,
+                quantum_secs: r.quantum_secs,
+                setup_secs: r.setup_secs,
+                preemptible: None,
+            },
+            available: DEFAULT_AVAILABLE.max(r.count),
+            testbed_count: r.count,
+            spot: r.spot_discount.map(|d| SpotTerms {
+                rate_per_hour: r.rate_per_hour * d,
+                preemptions_per_hour: 0.5,
+            }),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_catalogue_pins_the_testbed() {
+        let c = Catalogue::paper();
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.testbed_counts(), vec![4, 8, 1, 1, 1, 1]);
+        let specs = c.instantiate(&c.testbed_counts(), false).unwrap();
+        assert_eq!(specs.len(), 16);
+        // Instance-suffixed names for multi-instance types, bare otherwise.
+        assert_eq!(specs[0].name, "virtex6#0");
+        assert_eq!(specs[3].name, "virtex6#3");
+        assert_eq!(specs[4].name, "stratix5-gsd8#0");
+        assert_eq!(specs[12].name, "stratix5-gsd5");
+        assert_eq!(specs[13].name, "gk104");
+        // Duplicated specs differ only in name.
+        let mut a = specs[0].clone();
+        a.name = specs[1].name.clone();
+        assert_eq!(a, specs[1]);
+    }
+
+    #[test]
+    fn composition_respects_availability() {
+        let c = Catalogue::paper();
+        let mut counts = c.testbed_counts();
+        counts[0] = c.offer(0).available + 1;
+        let e = c.instantiate(&counts, false).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("available"), "{e}");
+        // Wrong arity and the empty composition are config errors too.
+        assert!(c.instantiate(&[1, 2], false).is_err());
+        assert!(c.instantiate(&[0; 6], false).is_err());
+    }
+
+    #[test]
+    fn spot_instances_carry_discount_and_hazard() {
+        let c = Catalogue::paper();
+        let gpu = c.find("gk104").unwrap();
+        let mut counts = vec![0; c.len()];
+        counts[gpu] = 2;
+        let on_demand = c.instantiate(&counts, false).unwrap();
+        let spot = c.instantiate(&counts, true).unwrap();
+        assert_eq!(spot.len(), 2);
+        assert_eq!(spot[0].name, "gk104#0");
+        assert!(spot[0].rate_per_hour < on_demand[0].rate_per_hour);
+        assert!(spot[0].preemptible.is_some());
+        assert_eq!(on_demand[0].preemptible, None);
+        // Types without a spot market are unaffected by the flag.
+        let fpga_counts: Vec<usize> =
+            (0..c.len()).map(|t| usize::from(t == 0)).collect();
+        let fpga = c.instantiate(&fpga_counts, true).unwrap();
+        assert_eq!(fpga[0].preemptible, None);
+        assert_eq!(fpga[0].rate_per_hour, c.offer(0).spec.rate_per_hour);
+    }
+
+    #[test]
+    fn instance_offer_map_matches_layout() {
+        let c = Catalogue::small();
+        assert_eq!(c.instance_offers(&[2, 0, 1]), vec![0, 0, 2]);
+        let specs = c.instantiate(&[2, 0, 1], false).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].name, "virtex6#0");
+        assert_eq!(specs[2].name, "xeon-e5-2660");
+    }
+
+    #[test]
+    fn small_catalogue_is_heterogeneous() {
+        let c = Catalogue::small();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.testbed_counts(), vec![1, 1, 1]);
+        let cats: Vec<Category> = c.offers().iter().map(|o| o.spec.category).collect();
+        assert!(cats.contains(&Category::Fpga));
+        assert!(cats.contains(&Category::Gpu));
+        assert!(cats.contains(&Category::Cpu));
+    }
+
+    #[test]
+    fn bad_offers_are_rejected() {
+        assert!(Catalogue::new(vec![]).is_err());
+        let mut bad = table2_offers();
+        bad[0].available = 0;
+        assert!(Catalogue::new(bad).is_err());
+        let mut bad = table2_offers();
+        bad[0].spec.quantum_secs = 0.0;
+        assert!(Catalogue::new(bad).is_err());
+        let mut bad = table2_offers();
+        bad[3].spot = Some(SpotTerms { rate_per_hour: 0.2, preemptions_per_hour: 0.0 });
+        assert!(Catalogue::new(bad).is_err());
+    }
+}

@@ -1,8 +1,14 @@
 //! Cluster assembly: a named collection of [`Platform`] trait objects the
 //! coordinator partitions work across.
+//!
+//! Clusters are *instantiations* of catalogue compositions: several
+//! instances of one platform type are distinct platforms (instance-suffixed
+//! names such as `stratix5-gsd8#3`), so names need not be unique and the
+//! executor schedules one lane per instance.
 
 use std::sync::Arc;
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::workload::option::OptionTask;
 
 use super::sim::{SimConfig, SimPlatform};
@@ -17,18 +23,21 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    pub fn new(platforms: Vec<Arc<dyn Platform>>) -> Cluster {
-        assert!(!platforms.is_empty(), "empty cluster");
-        let mut names: Vec<String> =
-            platforms.iter().map(|p| p.spec().name.clone()).collect();
-        names.sort();
-        names.dedup();
-        assert_eq!(names.len(), platforms.len(), "duplicate platform names");
-        Cluster { platforms }
+    /// Assemble a cluster, validating every platform's spec. Bad user
+    /// config (empty cluster, invalid billing terms) is a typed error.
+    pub fn new(platforms: Vec<Arc<dyn Platform>>) -> Result<Cluster> {
+        if platforms.is_empty() {
+            return Err(CloudshapesError::platform("empty cluster"));
+        }
+        for p in &platforms {
+            p.spec().validate()?;
+        }
+        Ok(Cluster { platforms })
     }
 
-    /// Build a fully simulated cluster from specs (the Table II testbed).
-    pub fn simulated(specs: &[PlatformSpec], cfg: &SimConfig, seed: u64) -> Cluster {
+    /// Build a fully simulated cluster from specs (e.g. a catalogue
+    /// composition or the Table II testbed).
+    pub fn simulated(specs: &[PlatformSpec], cfg: &SimConfig, seed: u64) -> Result<Cluster> {
         let platforms = specs
             .iter()
             .enumerate()
@@ -41,13 +50,10 @@ impl Cluster {
     }
 
     /// Append a platform (e.g. the native PJRT one).
-    pub fn push(&mut self, p: Arc<dyn Platform>) {
-        assert!(
-            self.platforms.iter().all(|q| q.spec().name != p.spec().name),
-            "duplicate platform name {}",
-            p.spec().name
-        );
+    pub fn push(&mut self, p: Arc<dyn Platform>) -> Result<()> {
+        p.spec().validate()?;
         self.platforms.push(p);
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -68,6 +74,20 @@ impl Cluster {
 
     pub fn specs(&self) -> Vec<PlatformSpec> {
         self.platforms.iter().map(|p| p.spec().clone()).collect()
+    }
+
+    /// The cluster's composition: (type name, instance count) pairs in
+    /// first-appearance order — what reports and serve responses print.
+    pub fn composition(&self) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> = Vec::new();
+        for p in &self.platforms {
+            let t = p.spec().type_name().to_string();
+            match out.iter_mut().find(|(name, _)| *name == t) {
+                Some((_, n)) => *n += 1,
+                None => out.push((t, 1)),
+            }
+        }
+        out
     }
 
     /// Execute on platform `i` (convenience passthrough).
@@ -91,13 +111,24 @@ mod tests {
 
     #[test]
     fn builds_paper_testbed() {
-        let c = Cluster::simulated(&paper_cluster(), &SimConfig::exact(), 1);
+        let c = Cluster::simulated(&paper_cluster(), &SimConfig::exact(), 1).unwrap();
         assert_eq!(c.len(), 16);
+        assert_eq!(
+            c.composition(),
+            vec![
+                ("virtex6".to_string(), 4),
+                ("stratix5-gsd8".to_string(), 8),
+                ("stratix5-gsd5".to_string(), 1),
+                ("gk104".to_string(), 1),
+                ("xeon-e5-2660".to_string(), 1),
+                ("xeon-gce".to_string(), 1),
+            ]
+        );
     }
 
     #[test]
     fn execute_passthrough_works() {
-        let c = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 1);
+        let c = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 1).unwrap();
         let w = generate(&GeneratorConfig::small(1, 0.1, 2));
         let out = c.execute(0, &w.tasks[0], 10_000, 1, ChunkCtx::cold(0));
         assert!(out.error.is_none());
@@ -105,17 +136,28 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "duplicate platform names")]
-    fn duplicate_names_rejected() {
+    fn duplicate_instances_of_a_type_are_allowed() {
+        // Two instances of the same offer are two platforms — shape search
+        // depends on renting several of a type.
         let spec = small_cluster()[0].clone();
         let a = Arc::new(SimPlatform::new(spec.clone(), SimConfig::exact(), 1)) as Arc<dyn Platform>;
         let b = Arc::new(SimPlatform::new(spec, SimConfig::exact(), 2)) as Arc<dyn Platform>;
-        Cluster::new(vec![a, b]);
+        let c = Cluster::new(vec![a, b]).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.composition(), vec![("virtex6".to_string(), 2)]);
     }
 
     #[test]
-    #[should_panic(expected = "empty cluster")]
-    fn empty_cluster_rejected() {
-        Cluster::new(vec![]);
+    fn empty_cluster_is_a_typed_error() {
+        let e = Cluster::new(vec![]).unwrap_err();
+        assert_eq!(e.kind(), "platform");
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_at_assembly() {
+        let mut spec = small_cluster()[0].clone();
+        spec.quantum_secs = 0.0;
+        let e = Cluster::simulated(&[spec], &SimConfig::exact(), 1).unwrap_err();
+        assert_eq!(e.kind(), "config");
     }
 }

@@ -2,11 +2,13 @@
 //! work across — simulated (Table II testbed stand-ins) and native (real
 //! PJRT execution of the AOT artifacts).
 
+pub mod catalogue;
 pub mod cluster;
 pub mod native;
 pub mod sim;
 pub mod spec;
 
+pub use catalogue::{Catalogue, PlatformOffer, SpotTerms};
 pub use cluster::Cluster;
 pub use sim::{SimConfig, SimPlatform};
 pub use spec::{paper_cluster, small_cluster, Category, PlatformSpec};

@@ -34,6 +34,7 @@ impl NativePlatform {
                 rate_per_hour: 0.480,
                 quantum_secs: 60.0,
                 setup_secs: 0.1,
+                preemptible: None,
             },
             engine,
         }

@@ -1,7 +1,14 @@
 //! Platform specification database — Tables I and II of the paper, embedded
 //! verbatim (April-2015 prices).
+//!
+//! The per-type offer data (rates, quanta, availability, spot terms) lives
+//! in [`super::catalogue`]; this module keeps the instance-level
+//! [`PlatformSpec`] plus the pinned paper-testbed instantiations.
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::models::CostModel;
+
+use super::catalogue::Catalogue;
 
 /// Device category. Pricing correlates with performance *within* a category
 /// but not across categories — the market inefficiency the paper exploits.
@@ -31,10 +38,10 @@ pub struct FpgaResources {
     pub dsps: u32,
 }
 
-/// One concrete platform instance of the experimental cluster.
+/// One concrete platform instance of a rented cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlatformSpec {
-    /// Unique instance name, e.g. `virtex6-475t-2`.
+    /// Instance name, e.g. `stratix5-gsd8#3` (type name + instance suffix).
     pub name: String,
     /// IaaS provider, if offered by one today ("-" in Table II otherwise).
     pub provider: Option<&'static str>,
@@ -46,163 +53,89 @@ pub struct PlatformSpec {
     pub clock_ghz: f64,
     /// Application performance on the option-pricing benchmark, GFLOPS.
     pub app_gflops: f64,
-    /// IaaS rate, $/hour (market rate or Eq. 2-derived for FPGAs).
+    /// IaaS rate, $/hour (market rate or Eq. 2-derived for FPGAs; the spot
+    /// rate for spot instances).
     pub rate_per_hour: f64,
     /// Billing time quantum, seconds.
     pub quantum_secs: f64,
     /// Nominal task-setup overhead γ, seconds (device configuration,
     /// communication; dominated by bitstream load on FPGAs).
     pub setup_secs: f64,
+    /// Spot-instance preemption hazard, preemptions per hour of uptime
+    /// (`None` = on-demand, never preempted).
+    pub preemptible: Option<f64>,
+}
+
+/// The canonical instance name of the `k`-th of `count` rented instances of
+/// a type: `type#k`, or the bare type name when a single instance is
+/// rented. [`Catalogue::instantiate`] and `ModelSet::replicate` both name
+/// through this, so searched compositions always match the names of the
+/// cluster the user actually rents.
+pub fn instance_name(type_name: &str, k: usize, count: usize) -> String {
+    if count > 1 {
+        format!("{type_name}#{k}")
+    } else {
+        type_name.to_string()
+    }
 }
 
 impl PlatformSpec {
-    pub fn cost_model(&self) -> CostModel {
-        CostModel::new(self.quantum_secs, self.rate_per_hour)
+    /// The type name this instance was rented as (the part of `name` before
+    /// the `#` instance suffix).
+    pub fn type_name(&self) -> &str {
+        self.name.split('#').next().unwrap_or(&self.name)
     }
-}
 
-/// One device-type row of Table II plus its instance count.
-struct Row {
-    count: usize,
-    provider: Option<&'static str>,
-    device: &'static str,
-    short: &'static str,
-    standard: &'static str,
-    category: Category,
-    resources: Option<FpgaResources>,
-    clock_ghz: f64,
-    app_gflops: f64,
-    rate_per_hour: f64,
-    quantum_secs: f64,
-    setup_secs: f64,
-}
-
-fn table2_rows() -> Vec<Row> {
-    vec![
-        Row {
-            count: 4,
-            provider: None,
-            device: "Xilinx Virtex 6 475T",
-            short: "virtex6",
-            standard: "OpenSPL (MaxCompiler 2013.2.2)",
-            category: Category::Fpga,
-            resources: Some(FpgaResources { luts_k: 298, flipflops_k: 595, brams: 1064, dsps: 2016 }),
-            clock_ghz: 0.2,
-            app_gflops: 111.978,
-            rate_per_hour: 0.438,
-            // Hypothetical FPGA IaaS billed hourly (DESIGN.md §2).
-            quantum_secs: 3600.0,
-            setup_secs: 40.0, // full-chip bitstream configuration
-        },
-        Row {
-            count: 8,
-            provider: None,
-            device: "Altera Stratix V GSD8",
-            short: "stratix5-gsd8",
-            standard: "OpenSPL (MaxCompiler 2013.2.2)",
-            category: Category::Fpga,
-            resources: Some(FpgaResources { luts_k: 695, flipflops_k: 1050, brams: 2567, dsps: 3926 }),
-            clock_ghz: 0.18,
-            app_gflops: 112.949,
-            rate_per_hour: 0.442,
-            quantum_secs: 3600.0,
-            setup_secs: 40.0,
-        },
-        Row {
-            count: 1,
-            provider: None,
-            device: "Altera Stratix V GSD5",
-            short: "stratix5-gsd5",
-            standard: "OpenCL (Altera SDK 14.0)",
-            category: Category::Fpga,
-            resources: Some(FpgaResources { luts_k: 457, flipflops_k: 690, brams: 2014, dsps: 3180 }),
-            clock_ghz: 0.25,
-            app_gflops: 176.871,
-            rate_per_hour: 0.692,
-            quantum_secs: 3600.0,
-            setup_secs: 25.0, // OpenCL runtime reconfiguration
-        },
-        Row {
-            count: 1,
-            provider: Some("AWS"),
-            device: "Nvidia Grid GK104",
-            short: "gk104",
-            standard: "OpenCL (Nvidia SDK 6.0)",
-            category: Category::Gpu,
-            resources: None,
-            clock_ghz: 0.8,
-            app_gflops: 556.085,
-            rate_per_hour: 0.650,
-            quantum_secs: 3600.0, // AWS hourly billing (Table I)
-            setup_secs: 2.0,      // context + JIT + transfer
-        },
-        Row {
-            count: 1,
-            provider: Some("MA"),
-            device: "Intel Xeon E5-2660",
-            short: "xeon-e5-2660",
-            standard: "POSIX (GCC 4.8)",
-            category: Category::Cpu,
-            resources: None,
-            clock_ghz: 2.2,
-            app_gflops: 4.160,
-            rate_per_hour: 0.480,
-            quantum_secs: 60.0, // Azure 1-minute quantum (Table I)
-            setup_secs: 0.5,
-        },
-        Row {
-            count: 1,
-            provider: Some("GCE"),
-            device: "Intel Xeon",
-            short: "xeon-gce",
-            standard: "POSIX (GCC 4.8)",
-            category: Category::Cpu,
-            resources: None,
-            clock_ghz: 2.0,
-            app_gflops: 6.022,
-            rate_per_hour: 0.352,
-            quantum_secs: 600.0, // GCE 10-minute quantum (Table I)
-            setup_secs: 0.5,
-        },
-    ]
-}
-
-/// The paper's 16-platform experimental cluster (Table II), with instance
-/// counts expanded (4× Virtex-6, 8× GSD8, 1× GSD5, 1× GPU, 2× CPU).
-pub fn paper_cluster() -> Vec<PlatformSpec> {
-    let mut out = Vec::new();
-    for row in table2_rows() {
-        for i in 0..row.count {
-            out.push(PlatformSpec {
-                name: if row.count > 1 {
-                    format!("{}-{}", row.short, i)
-                } else {
-                    row.short.to_string()
-                },
-                provider: row.provider,
-                device: row.device,
-                standard: row.standard,
-                category: row.category,
-                resources: row.resources,
-                clock_ghz: row.clock_ghz,
-                app_gflops: row.app_gflops,
-                rate_per_hour: row.rate_per_hour,
-                quantum_secs: row.quantum_secs,
-                setup_secs: row.setup_secs,
-            });
+    /// Validate the numeric terms; clusters and catalogues call this so bad
+    /// user config surfaces as a typed error instead of a downstream panic.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |what: &str, v: f64| {
+            Err(CloudshapesError::config(format!(
+                "platform '{}': {what} is {v}",
+                self.name
+            )))
+        };
+        if !(self.quantum_secs > 0.0 && self.quantum_secs.is_finite()) {
+            return bad("billing quantum", self.quantum_secs);
         }
+        if !(self.rate_per_hour >= 0.0 && self.rate_per_hour.is_finite()) {
+            return bad("rate", self.rate_per_hour);
+        }
+        // Zero is allowed: the native platform measures latency instead of
+        // deriving it from published GFLOPS.
+        if !(self.app_gflops >= 0.0 && self.app_gflops.is_finite()) {
+            return bad("app GFLOPS", self.app_gflops);
+        }
+        if !(self.setup_secs >= 0.0 && self.setup_secs.is_finite()) {
+            return bad("setup time", self.setup_secs);
+        }
+        if let Some(h) = self.preemptible {
+            if !(h > 0.0 && h.is_finite()) {
+                return bad("preemption hazard", h);
+            }
+        }
+        Ok(())
     }
-    out
+
+    /// Billing terms. Specs are validated at cluster/catalogue construction,
+    /// so this is infallible.
+    pub fn cost_model(&self) -> CostModel {
+        CostModel { quantum_secs: self.quantum_secs, rate_per_hour: self.rate_per_hour }
+    }
+}
+
+/// The paper's 16-platform experimental cluster: the Table II testbed
+/// composition of [`Catalogue::paper`] (4× Virtex-6, 8× GSD8, 1× GSD5,
+/// 1× GPU, 2× CPU).
+pub fn paper_cluster() -> Vec<PlatformSpec> {
+    let c = Catalogue::paper();
+    c.instantiate(&c.testbed_counts(), false).expect("paper testbed is instantiable")
 }
 
 /// A reduced heterogeneous cluster for fast tests: one of each category.
 pub fn small_cluster() -> Vec<PlatformSpec> {
-    let all = paper_cluster();
-    let mut out = Vec::new();
-    for cat in [Category::Fpga, Category::Gpu, Category::Cpu] {
-        out.push(all.iter().find(|s| s.category == cat).unwrap().clone());
-    }
-    out
+    let c = Catalogue::small();
+    c.instantiate(&c.testbed_counts(), false).expect("small testbed is instantiable")
 }
 
 /// One row of Table I: IaaS offerings comparison.
@@ -277,6 +210,15 @@ mod tests {
     }
 
     #[test]
+    fn type_names_strip_instance_suffixes() {
+        let c = paper_cluster();
+        assert_eq!(c[0].name, "virtex6#0");
+        assert_eq!(c[0].type_name(), "virtex6");
+        assert_eq!(c[13].name, "gk104");
+        assert_eq!(c[13].type_name(), "gk104");
+    }
+
+    #[test]
     fn fpga_rates_follow_eq2() {
         // rate = 0.46 x RDP with count-weighted mean performance (tco.rs).
         use crate::models::tco::relative_device_performance;
@@ -329,5 +271,16 @@ mod tests {
         assert!(s.iter().any(|p| p.category == Category::Fpga));
         assert!(s.iter().any(|p| p.category == Category::Gpu));
         assert!(s.iter().any(|p| p.category == Category::Cpu));
+    }
+
+    #[test]
+    fn bad_specs_fail_validation() {
+        let mut s = small_cluster()[0].clone();
+        s.quantum_secs = -1.0;
+        assert_eq!(s.validate().unwrap_err().kind(), "config");
+        let mut s = small_cluster()[0].clone();
+        s.preemptible = Some(f64::NAN);
+        assert!(s.validate().is_err());
+        assert!(small_cluster()[0].validate().is_ok());
     }
 }

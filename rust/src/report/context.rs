@@ -7,11 +7,11 @@ use std::sync::Arc;
 use crate::api::error::{CloudshapesError, Result};
 use crate::config::{ClusterKind, ExperimentConfig};
 use crate::coordinator::{benchmark, BenchmarkReport, ModelSet};
+use crate::platforms::catalogue::Catalogue;
 use crate::platforms::native::NativePlatform;
-use crate::platforms::spec::{paper_cluster, small_cluster};
 use crate::platforms::Cluster;
 use crate::runtime::EngineHandle;
-use crate::workload::{generate, Workload};
+use crate::workload::{try_generate, Workload};
 
 /// A fully-materialised experiment: cluster, workload, benchmark-fitted
 /// models (plus raw samples) and the nominal spec-derived models.
@@ -23,33 +23,114 @@ pub struct Experiment {
     pub bench: BenchmarkReport,
     /// Nominal models straight from the specs (ablation reference).
     pub nominal: ModelSet,
+    /// The catalogue the cluster was instantiated from.
+    pub catalogue: Catalogue,
+    /// Instances rented per catalogue offer.
+    pub counts: Vec<usize>,
+    /// Cluster index → catalogue offer index (`None` for appended
+    /// out-of-catalogue platforms such as the native one).
+    pub instance_offer: Vec<Option<usize>>,
 }
 
 impl Experiment {
     /// Build everything. Benchmarking runs here (simulated platforms make
     /// it cheap; the native platform, if enabled, costs real seconds).
     pub fn build(config: ExperimentConfig) -> Result<Experiment> {
-        let specs = match config.cluster.kind {
-            ClusterKind::Paper => paper_cluster(),
-            ClusterKind::Small => small_cluster(),
+        let catalogue = match config.cluster.kind {
+            ClusterKind::Paper => Catalogue::paper(),
+            ClusterKind::Small => Catalogue::small(),
         };
-        let mut cluster = Cluster::simulated(&specs, &config.cluster.sim, config.cluster.seed);
+        let counts = config
+            .cluster
+            .counts
+            .clone()
+            .unwrap_or_else(|| catalogue.testbed_counts());
+        let specs = catalogue.instantiate(&counts, config.cluster.spot)?;
+        let mut cluster = Cluster::simulated(&specs, &config.cluster.sim, config.cluster.seed)?;
+        let mut instance_offer: Vec<Option<usize>> =
+            catalogue.instance_offers(&counts).into_iter().map(Some).collect();
         if config.cluster.with_native {
             let engine = EngineHandle::spawn(Path::new(&config.artifact_dir))
                 .map_err(|e| CloudshapesError::platform(format!("starting PJRT engine: {e:#}")))?;
-            cluster.push(Arc::new(NativePlatform::new(engine)));
+            cluster.push(Arc::new(NativePlatform::new(engine)))?;
+            instance_offer.push(None);
         }
-        let workload = generate(&config.workload);
+        let workload = try_generate(&config.workload)?;
         workload.validate()?;
         let bench = benchmark(&cluster, &workload, &config.benchmark);
         let specs_all = cluster.specs();
         let nominal = ModelSet::from_specs(&specs_all, &workload);
-        Ok(Experiment { config, cluster, workload, bench, nominal })
+        Ok(Experiment {
+            config,
+            cluster,
+            workload,
+            bench,
+            nominal,
+            catalogue,
+            counts,
+            instance_offer,
+        })
     }
 
     /// The fitted models (what the partitioners should consume).
     pub fn models(&self) -> &ModelSet {
         &self.bench.models
+    }
+
+    /// Per-*type* models derived from the benchmark fits: each catalogue
+    /// offer's β/γ rows are the mean over its instances in the cluster;
+    /// offers with no rented instance fall back to nominal spec-derived
+    /// models. Billing terms match how this session rents: spot rates when
+    /// the session is a spot one (so shape predictions agree with
+    /// `evaluate` billing), on-demand rates otherwise. This is the input
+    /// the shape optimiser searches over.
+    pub fn type_models(&self) -> ModelSet {
+        use crate::models::LatencyModel;
+        let fitted = self.models();
+        let tau = self.workload.len();
+        let mut latency = Vec::with_capacity(self.catalogue.len() * tau);
+        for (t, offer) in self.catalogue.offers().iter().enumerate() {
+            let members: Vec<usize> = self
+                .instance_offer
+                .iter()
+                .enumerate()
+                .filter(|(_, o)| **o == Some(t))
+                .map(|(i, _)| i)
+                .collect();
+            for j in 0..tau {
+                if members.is_empty() {
+                    // Nominal fallback for un-rented types.
+                    let beta = self.workload.tasks[j].flops_per_path()
+                        / (offer.spec.app_gflops.max(1e-9) * 1e9);
+                    latency.push(LatencyModel::new(beta, offer.spec.setup_secs));
+                } else {
+                    let n = members.len() as f64;
+                    let beta =
+                        members.iter().map(|&i| fitted.model(i, j).beta).sum::<f64>() / n;
+                    let gamma =
+                        members.iter().map(|&i| fitted.model(i, j).gamma).sum::<f64>() / n;
+                    latency.push(LatencyModel::new(beta.max(1e-15), gamma.max(0.0)));
+                }
+            }
+        }
+        ModelSet::new(
+            latency,
+            self.catalogue
+                .offers()
+                .iter()
+                .map(|o| {
+                    let mut cm = o.spec.cost_model();
+                    if self.config.cluster.spot {
+                        if let Some(s) = o.spot {
+                            cm.rate_per_hour = s.rate_per_hour;
+                        }
+                    }
+                    cm
+                })
+                .collect(),
+            self.workload.tasks.iter().map(|t| t.n_sims).collect(),
+            self.catalogue.offers().iter().map(|o| o.spec.name.clone()).collect(),
+        )
     }
 }
 
@@ -65,5 +146,54 @@ mod tests {
         assert_eq!(e.models().mu, 3);
         assert_eq!(e.models().tau, 8);
         assert_eq!(e.nominal.mu, 3);
+        assert_eq!(e.counts, vec![1, 1, 1]);
+        assert_eq!(e.instance_offer, vec![Some(0), Some(1), Some(2)]);
+    }
+
+    #[test]
+    fn catalogue_counts_override_composition() {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.cluster.counts = Some(vec![2, 1, 0]);
+        let e = Experiment::build(cfg).unwrap();
+        assert_eq!(e.cluster.len(), 3);
+        assert_eq!(e.instance_offer, vec![Some(0), Some(0), Some(1)]);
+        let names: Vec<String> =
+            e.cluster.specs().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, vec!["virtex6#0", "virtex6#1", "gk104"]);
+        // Wrong arity is a config error.
+        let mut cfg = ExperimentConfig::quick();
+        cfg.cluster.counts = Some(vec![1, 1]);
+        assert!(Experiment::build(cfg).is_err());
+    }
+
+    #[test]
+    fn type_models_cover_every_offer() {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.cluster.counts = Some(vec![2, 1, 0]);
+        let e = Experiment::build(cfg).unwrap();
+        let types = e.type_models();
+        assert_eq!(types.mu, 3);
+        assert_eq!(types.tau, 8);
+        // Rented types average their instances' fits; the un-rented CPU
+        // falls back to nominal (positive, finite coefficients either way).
+        for t in 0..types.mu {
+            for j in 0..types.tau {
+                let m = types.model(t, j);
+                assert!(m.beta > 0.0 && m.beta.is_finite());
+                assert!(m.gamma >= 0.0 && m.gamma.is_finite());
+            }
+        }
+        assert_eq!(types.platform_names, vec!["virtex6", "gk104", "xeon-e5-2660"]);
+    }
+
+    #[test]
+    fn spot_sessions_price_types_at_spot_rates() {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.cluster.spot = true;
+        let e = Experiment::build(cfg).unwrap();
+        let types = e.type_models();
+        // gk104 (offer 1) has spot terms; virtex6 (offer 0) does not.
+        assert!(types.cost[1].rate_per_hour < e.catalogue.offer(1).spec.rate_per_hour);
+        assert_eq!(types.cost[0].rate_per_hour, e.catalogue.offer(0).spec.rate_per_hour);
     }
 }

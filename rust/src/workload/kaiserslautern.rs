@@ -7,6 +7,7 @@
 //! accuracy target that sizes each task's N. This generator reproduces those
 //! properties deterministically from a seed — see DESIGN.md §2.
 
+use crate::api::error::{CloudshapesError, Result};
 use crate::util::rng::Rng;
 
 use super::option::{OptionTask, Payoff};
@@ -50,14 +51,55 @@ impl GeneratorConfig {
             ..GeneratorConfig::default()
         }
     }
+
+    /// Validate the generation parameters. Negative or non-finite payoff
+    /// weights, and an all-zero mix, would silently skew (or wedge) the
+    /// sampling below — reject them as typed workload errors instead.
+    pub fn validate(&self) -> Result<()> {
+        let (we, wa, wb) = self.payoff_mix;
+        for (name, w) in [("european", we), ("asian", wa), ("barrier", wb)] {
+            if !(w >= 0.0 && w.is_finite()) {
+                return Err(CloudshapesError::workload(format!(
+                    "payoff_mix: {name} weight must be a non-negative finite number, got {w}"
+                )));
+            }
+        }
+        if we + wa + wb <= 0.0 {
+            return Err(CloudshapesError::workload(
+                "payoff_mix must have positive total weight (all three weights are zero)",
+            ));
+        }
+        if self.step_choices.is_empty() {
+            return Err(CloudshapesError::workload(
+                "step_choices must offer at least one fixing grid",
+            ));
+        }
+        if !(self.accuracy > 0.0 && self.accuracy.is_finite()) {
+            return Err(CloudshapesError::workload(format!(
+                "accuracy must be a positive CI half-width, got {}",
+                self.accuracy
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// As [`generate`], validating the config first — the library-boundary
+/// entry point ([`Experiment::build`](crate::report::Experiment) and the
+/// config parser route through the same validation).
+pub fn try_generate(cfg: &GeneratorConfig) -> Result<Workload> {
+    cfg.validate()?;
+    Ok(generate(cfg))
 }
 
 /// Generate a workload. Deterministic in the config (same seed, same tasks).
+/// Panics on invalid configs — use [`try_generate`] (or
+/// [`GeneratorConfig::validate`]) on untrusted input.
 pub fn generate(cfg: &GeneratorConfig) -> Workload {
+    cfg.validate().expect("invalid generator config");
     let mut rng = Rng::new(cfg.seed);
     let (we, wa, wb) = cfg.payoff_mix;
     let total_w = we + wa + wb;
-    assert!(total_w > 0.0, "payoff mix must have positive weight");
     let mut tasks = Vec::with_capacity(cfg.n_tasks);
     for id in 0..cfg.n_tasks {
         let draw = rng.f64() * total_w;
@@ -148,5 +190,19 @@ mod tests {
         };
         let w = generate(&cfg);
         assert!(w.tasks.iter().all(|t| t.payoff == Payoff::European));
+    }
+
+    #[test]
+    fn bad_payoff_mixes_are_workload_errors() {
+        for mix in [(0.0, 0.0, 0.0), (-1.0, 0.5, 0.5), (f64::NAN, 1.0, 1.0)] {
+            let cfg = GeneratorConfig { payoff_mix: mix, ..GeneratorConfig::default() };
+            let e = try_generate(&cfg).unwrap_err();
+            assert_eq!(e.kind(), "workload", "{mix:?} -> {e}");
+        }
+        let cfg = GeneratorConfig { step_choices: vec![], ..GeneratorConfig::default() };
+        assert_eq!(try_generate(&cfg).unwrap_err().kind(), "workload");
+        let cfg = GeneratorConfig { accuracy: 0.0, ..GeneratorConfig::default() };
+        assert_eq!(try_generate(&cfg).unwrap_err().kind(), "workload");
+        assert!(try_generate(&GeneratorConfig::default()).is_ok());
     }
 }

@@ -3,7 +3,7 @@
 pub mod kaiserslautern;
 pub mod option;
 
-pub use kaiserslautern::{generate, GeneratorConfig};
+pub use kaiserslautern::{generate, try_generate, GeneratorConfig};
 pub use option::{OptionTask, Payoff};
 
 use crate::api::error::{CloudshapesError, Result};

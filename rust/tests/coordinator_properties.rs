@@ -25,7 +25,7 @@ fn arb_models(g: &mut Gen) -> ModelSet {
         }
     }
     let cost: Vec<CostModel> = (0..mu)
-        .map(|_| CostModel::new(*g.rng.choose(&quanta), g.f64(0.05, 2.0)))
+        .map(|_| CostModel::new(*g.rng.choose(&quanta), g.f64(0.05, 2.0)).unwrap())
         .collect();
     let n: Vec<u64> = (0..tau).map(|_| g.rng.range_u64(10_000, 50_000_000)).collect();
     ModelSet::new(latency, cost, n, (0..mu).map(|i| format!("p{i}")).collect())
@@ -142,7 +142,7 @@ fn prop_executor_preserves_simulation_totals() {
         let n_tasks = g.usize(1, 6);
         let workload = generate(&GeneratorConfig::small(n_tasks, 0.1, g.rng.next_u64()));
         let specs = cloudshapes::platforms::spec::small_cluster();
-        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), g.rng.next_u64());
+        let cluster = Cluster::simulated(&specs, &SimConfig::exact(), g.rng.next_u64())?;
         let models = ModelSet::from_specs(&specs, &workload);
         let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
         let rep = execute(&cluster, &workload, &alloc, &ExecutorConfig::default())?;
@@ -162,7 +162,7 @@ fn partial_platform_failures_are_survivable() {
     // completes, reports failures, and the other platforms' prices arrive.
     let specs = cloudshapes::platforms::spec::small_cluster();
     let flaky = SimConfig { failure_rate: 0.5, ..SimConfig::exact() };
-    let cluster = Cluster::simulated(&specs, &flaky, 11);
+    let cluster = Cluster::simulated(&specs, &flaky, 11).unwrap();
     let workload = generate(&GeneratorConfig::small(10, 0.1, 3));
     let models = ModelSet::from_specs(&specs, &workload);
     let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
@@ -184,7 +184,7 @@ fn benchmarking_under_failures_keeps_partitioning_usable() {
     // from the surviving reps; end-to-end partitioning succeeds.
     let specs = cloudshapes::platforms::spec::small_cluster();
     let flaky = SimConfig { failure_rate: 0.3, ..SimConfig::default() };
-    let cluster = Cluster::simulated(&specs, &flaky, 5);
+    let cluster = Cluster::simulated(&specs, &flaky, 5).unwrap();
     let workload = generate(&GeneratorConfig::small(5, 0.05, 9));
     let report = cloudshapes::coordinator::benchmark(
         &cluster,

@@ -27,7 +27,7 @@ use cloudshapes::workload::{generate, GeneratorConfig, Workload};
 
 fn exact_setup(n_tasks: usize) -> (Cluster, Workload, ModelSet) {
     let specs = small_cluster();
-    let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21);
+    let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21).unwrap();
     let workload = generate(&GeneratorConfig::small(n_tasks, 0.02, 13));
     let models = ModelSet::from_specs(&specs, &workload);
     (cluster, workload, models)
@@ -97,7 +97,7 @@ fn failures_with_retries_never_lose_a_price() {
         &specs,
         &SimConfig { failure_rate: 0.3, ..SimConfig::exact() },
         77,
-    );
+    ).unwrap();
     let workload = generate(&GeneratorConfig {
         n_tasks: 8,
         seed: 5,
@@ -134,7 +134,7 @@ fn failures_without_retries_match_legacy_reporting() {
         &specs,
         &SimConfig { failure_rate: 0.3, ..SimConfig::exact() },
         77,
-    );
+    ).unwrap();
     let workload = generate(&GeneratorConfig::small(8, 0.02, 5));
     let models = ModelSet::from_specs(&specs, &workload);
     let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
@@ -179,7 +179,7 @@ fn straggler_rebalancing_cuts_makespan() {
             }
         })
         .collect();
-    let cluster = Cluster::new(platforms);
+    let cluster = Cluster::new(platforms).unwrap();
     let workload = generate(&GeneratorConfig::small(8, 0.02, 13));
     // Nominal models: they still think the straggler is fast, so the
     // allocation loads it heavily — exactly the Fig. 3 gap scenario.
@@ -222,7 +222,7 @@ fn u64_offsets_keep_giant_tasks_unbiased() {
     // second slice's offset (2^32) used to truncate into the first slice's
     // counter range. Virtual latency makes this cheap to actually run.
     let specs: Vec<_> = small_cluster().into_iter().take(2).collect();
-    let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 9);
+    let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 9).unwrap();
     let task = OptionTask {
         id: 0,
         payoff: Payoff::European,

@@ -60,7 +60,7 @@ fn random_models(rng: &mut Rng, mu: usize, tau: usize) -> ModelSet {
         }
     }
     let cost: Vec<CostModel> = (0..mu)
-        .map(|_| CostModel::new(*rng.choose(&quanta), rng.range_f64(0.1, 1.0)))
+        .map(|_| CostModel::new(*rng.choose(&quanta), rng.range_f64(0.1, 1.0)).unwrap())
         .collect();
     let n: Vec<u64> = (0..tau).map(|_| rng.range_u64(100_000, 5_000_000)).collect();
     ModelSet::new(latency, cost, n, (0..mu).map(|i| format!("p{i}")).collect())

@@ -19,9 +19,9 @@ fn artifact_dir() -> PathBuf {
 }
 
 fn hybrid_cluster() -> Cluster {
-    let mut cluster = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 3);
+    let mut cluster = Cluster::simulated(&small_cluster(), &SimConfig::exact(), 3).unwrap();
     let engine = EngineHandle::spawn(&artifact_dir()).expect("make artifacts first");
-    cluster.push(Arc::new(NativePlatform::new(engine)));
+    cluster.push(Arc::new(NativePlatform::new(engine))).unwrap();
     cluster
 }
 
