@@ -4,13 +4,18 @@
 //! - [`CloudshapesError`] / [`Result`] — the crate-wide typed error every
 //!   fallible API returns;
 //! - [`SessionBuilder`] → [`TradeoffSession`] — the builder-style front door
-//!   that owns benchmarking, model fitting, partitioning and execution;
+//!   that owns benchmarking, model fitting, partitioning, execution, and
+//!   (when enabled) the online job scheduler
+//!   ([`submit_job`](TradeoffSession::submit_job) /
+//!   [`job_status`](TradeoffSession::job_status) /
+//!   [`cancel_job`](TradeoffSession::cancel_job));
 //! - [`PartitionerRegistry`] — pluggable name → strategy factories;
 //! - [`protocol`] — the versioned (`{"v":1,...}`) serve wire protocol.
 //!
 //! The CLI (`cloudshapes <cmd>`), the TCP coordinator (`cloudshapes serve`)
 //! and every example route through this module; see `rust/README.md` for a
-//! quickstart.
+//! quickstart and `docs/` for the architecture, protocol and config
+//! references.
 
 pub mod error;
 pub mod protocol;

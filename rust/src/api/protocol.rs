@@ -16,6 +16,11 @@
 //! {"v":1,"op":"run","budget":2.5}                   # background execution
 //! {"v":1,"op":"run","budget":2.5,"stream":true}     # inline event stream
 //! {"v":1,"op":"status","run_id":3}                  # poll a background run
+//! {"v":1,"op":"submit","tasks":4,"deadline":3600}   # online scheduler job
+//! {"v":1,"op":"submit","tasks":1,"budget":2.5,"payoff":"asian"}
+//! {"v":1,"op":"jobs"}                               # every tracked job
+//! {"v":1,"op":"jobs","job_id":3}                    # one job's status
+//! {"v":1,"op":"cancel","job_id":3}
 //! {"v":1,"op":"shutdown"}
 //! ```
 //!
@@ -45,6 +50,17 @@
 //!      {"ok":false,"error":{"kind":"solver","message":"MILP: no feasible ..."}}]}
 //! ```
 //!
+//! `submit` enqueues a pricing job on the online scheduler (`serve
+//! --scheduler`): `tasks` options (1..=[`MAX_JOB_TASKS`]) at `accuracy`,
+//! optionally restricted to one `payoff` family, under exactly one of
+//! `deadline` (cluster-virtual seconds) or `budget` ($). `jobs` snapshots
+//! all jobs (or one with `job_id`); `cancel` releases a job's remaining
+//! work back to the queue at the next epoch boundary. A `submit` with
+//! `"stream":true` holds the connection and writes `{"v":1,"event":"job",
+//! ...}` lines as the job progresses, terminated by the usual final
+//! response. On sessions without the scheduler these ops answer a typed
+//! `config` error.
+//!
 //! `run` starts a chunked execution. Without `stream` it returns
 //! immediately with a `run_id`; `status` polls the run's progress counters
 //! (chunks done, retries, straggler migrations, tasks priced) and, once
@@ -72,6 +88,11 @@ pub const PROTOCOL_VERSION: u64 = 1;
 /// request line from monopolising the server with unbounded solve work.
 pub const MAX_BATCH_BUDGETS: usize = 1024;
 
+/// Upper bound on a `submit` request's `tasks` count — the scheduler's
+/// [`JobSpec::MAX_TASKS`](crate::coordinator::scheduler::JobSpec::MAX_TASKS),
+/// re-exported at the wire layer so the two can never diverge.
+pub const MAX_JOB_TASKS: usize = crate::coordinator::scheduler::JobSpec::MAX_TASKS;
+
 /// A parsed v1 request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -94,6 +115,22 @@ pub enum Request {
     Run { partitioner: Option<String>, budget: Option<f64>, stream: bool },
     /// Poll a background run's progress / final result.
     Status { run_id: u64 },
+    /// Submit a job to the online scheduler: `tasks` generated options at
+    /// `accuracy` under exactly one of `deadline`/`budget`; with `stream`,
+    /// job-progress event lines on this connection until terminal.
+    Submit {
+        tasks: usize,
+        payoff: Option<String>,
+        accuracy: Option<f64>,
+        seed: Option<u64>,
+        deadline: Option<f64>,
+        budget: Option<f64>,
+        stream: bool,
+    },
+    /// Snapshot every scheduler job, or one when `job_id` is given.
+    Jobs { job_id: Option<u64> },
+    /// Cancel a scheduler job.
+    Cancel { job_id: u64 },
     /// Stop the server (the in-flight response is still delivered).
     Shutdown,
 }
@@ -184,10 +221,86 @@ impl Request {
                     })?;
                 Ok(Request::Status { run_id })
             }
+            "submit" => {
+                let tasks = match req.get("tasks") {
+                    None | Some(Json::Null) => 1,
+                    Some(v) => v.as_u64().ok_or_else(|| {
+                        CloudshapesError::protocol("'tasks' must be a positive integer")
+                    })? as usize,
+                };
+                if tasks == 0 || tasks > MAX_JOB_TASKS {
+                    return Err(CloudshapesError::protocol(format!(
+                        "'tasks' must be 1..={MAX_JOB_TASKS}, got {tasks}"
+                    )));
+                }
+                let payoff = match req.get("payoff") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                CloudshapesError::protocol("'payoff' must be a string")
+                            })?
+                            .to_string(),
+                    ),
+                };
+                let num = |key: &str| -> Result<Option<f64>> {
+                    match req.get(key) {
+                        None | Some(Json::Null) => Ok(None),
+                        Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+                            CloudshapesError::protocol(format!("'{key}' must be a number"))
+                        }),
+                    }
+                };
+                let accuracy = num("accuracy")?;
+                let seed = match req.get("seed") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_u64().ok_or_else(|| {
+                        CloudshapesError::protocol("'seed' must be a non-negative integer")
+                    })?),
+                };
+                let (deadline, budget) = (num("deadline")?, num("budget")?);
+                if matches!(
+                    (deadline, budget),
+                    (Some(_), Some(_)) | (None, None)
+                ) {
+                    return Err(CloudshapesError::protocol(
+                        "op 'submit' requires exactly one of 'deadline' (virtual seconds) \
+                         or 'budget' ($) as the job's SLO",
+                    ));
+                }
+                let stream = match req.get("stream") {
+                    None | Some(Json::Null) => false,
+                    Some(v) => v.as_bool().ok_or_else(|| {
+                        CloudshapesError::protocol("'stream' must be a boolean")
+                    })?,
+                };
+                Ok(Request::Submit { tasks, payoff, accuracy, seed, deadline, budget, stream })
+            }
+            "jobs" => {
+                let job_id = match req.get("job_id") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_u64().ok_or_else(|| {
+                        CloudshapesError::protocol("'job_id' must be a non-negative integer")
+                    })?),
+                };
+                Ok(Request::Jobs { job_id })
+            }
+            "cancel" => {
+                let job_id = req
+                    .get("job_id")
+                    .ok_or_else(|| {
+                        CloudshapesError::protocol("op 'cancel' requires 'job_id' (an integer)")
+                    })?
+                    .as_u64()
+                    .ok_or_else(|| {
+                        CloudshapesError::protocol("'job_id' must be a non-negative integer")
+                    })?;
+                Ok(Request::Cancel { job_id })
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(CloudshapesError::protocol(format!(
                 "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, shape, \
-                 batch, run, status, shutdown)"
+                 batch, run, status, submit, jobs, cancel, shutdown)"
             ))),
         }
     }
@@ -340,6 +453,74 @@ mod tests {
             let e = Request::parse(bad).unwrap_err();
             assert_eq!(e.kind(), "protocol", "{bad} -> {e}");
         }
+    }
+
+    #[test]
+    fn parses_scheduler_ops() {
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"submit","tasks":4,"deadline":3600}"#).unwrap(),
+            Request::Submit {
+                tasks: 4,
+                payoff: None,
+                accuracy: None,
+                seed: None,
+                deadline: Some(3600.0),
+                budget: None,
+                stream: false,
+            }
+        );
+        assert_eq!(
+            Request::parse(
+                r#"{"v":1,"op":"submit","budget":2.5,"payoff":"asian","accuracy":0.05,"seed":9,"stream":true}"#
+            )
+            .unwrap(),
+            Request::Submit {
+                tasks: 1,
+                payoff: Some("asian".into()),
+                accuracy: Some(0.05),
+                seed: Some(9),
+                deadline: None,
+                budget: Some(2.5),
+                stream: true,
+            }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"jobs"}"#).unwrap(),
+            Request::Jobs { job_id: None }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"jobs","job_id":3}"#).unwrap(),
+            Request::Jobs { job_id: Some(3) }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"cancel","job_id":3}"#).unwrap(),
+            Request::Cancel { job_id: 3 }
+        );
+    }
+
+    #[test]
+    fn submit_and_cancel_validation() {
+        for bad in [
+            r#"{"v":1,"op":"submit"}"#,                           // no SLO
+            r#"{"v":1,"op":"submit","deadline":1,"budget":2}"#,   // both SLOs
+            r#"{"v":1,"op":"submit","deadline":"soon"}"#,         // bad type
+            r#"{"v":1,"op":"submit","budget":1,"tasks":0}"#,      // zero tasks
+            r#"{"v":1,"op":"submit","budget":1,"tasks":100000}"#, // too many
+            r#"{"v":1,"op":"submit","budget":1,"payoff":7}"#,     // bad payoff type
+            r#"{"v":1,"op":"submit","budget":1,"stream":3}"#,     // bad stream
+            r#"{"v":1,"op":"submit","budget":1,"seed":-1}"#,      // bad seed
+            r#"{"v":1,"op":"jobs","job_id":"x"}"#,                // bad job_id
+            r#"{"v":1,"op":"cancel"}"#,                           // missing job_id
+            r#"{"v":1,"op":"cancel","job_id":"x"}"#,              // bad job_id
+        ] {
+            let e = Request::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "protocol", "{bad} -> {e}");
+        }
+        // An unknown payoff NAME parses at the protocol layer — it becomes
+        // a typed workload error at dispatch, where the valid families are
+        // known.
+        assert!(Request::parse(r#"{"v":1,"op":"submit","budget":1,"payoff":"swaption"}"#)
+            .is_ok());
     }
 
     #[test]

@@ -37,9 +37,13 @@ use crate::coordinator::executor::{
     execute_with, ExecEvent, ExecutionReport, ExecutorConfig,
 };
 use crate::coordinator::partitioner::MilpConfig;
+use crate::coordinator::scheduler::{
+    JobSpec, JobStatus, OnlineScheduler, SchedulerConfig, SchedulerStats,
+};
 use crate::coordinator::shape::{ShapeObjective, ShapeOutcome, ShapeSearch};
 use crate::coordinator::{sweep, Allocation, ModelSet, Partitioner, SweepConfig, TradeoffCurve};
 use crate::milp::branch_bound::BnbLimits;
+use crate::models::online::PlatformPrior;
 use crate::report::Experiment;
 use crate::workload::{GeneratorConfig, Workload};
 
@@ -334,6 +338,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Configure (and usually enable) the online job scheduler — the
+    /// `[scheduler]` TOML section's programmatic twin. The scheduler thread
+    /// starts lazily on the first [`TradeoffSession::submit_job`].
+    pub fn scheduler(mut self, cfg: SchedulerConfig) -> SessionBuilder {
+        self.base.scheduler = cfg;
+        self
+    }
+
     /// Replace the whole strategy registry.
     pub fn registry(mut self, registry: PartitionerRegistry) -> SessionBuilder {
         self.registry = registry;
@@ -365,15 +377,17 @@ impl SessionBuilder {
             )
         })?;
         self.registry.ensure(&self.partitioner)?;
+        self.base.scheduler.validate()?;
         let sweep = self.sweep.unwrap_or_else(|| self.base.sweep.clone());
         let config = ExperimentConfig { cluster, workload, sweep, ..self.base };
         let experiment = Experiment::build(config)?;
         Ok(TradeoffSession {
             experiment,
-            registry: self.registry,
+            registry: Arc::new(self.registry),
             default_partitioner: self.partitioner,
             cache: SolutionCache::new(),
             runs: RunManager::new(),
+            scheduler: Mutex::new(None),
         })
     }
 }
@@ -399,10 +413,22 @@ impl Default for SessionBuilder {
 /// session); [`cache_stats`](Self::cache_stats) reports hit/miss counters.
 pub struct TradeoffSession {
     experiment: Experiment,
-    registry: PartitionerRegistry,
+    registry: Arc<PartitionerRegistry>,
     default_partitioner: String,
     cache: SolutionCache,
     runs: RunManager,
+    /// The online job scheduler, started lazily on the first
+    /// [`submit_job`](Self::submit_job) (and only when `[scheduler]`
+    /// enables it).
+    scheduler: Mutex<Option<Arc<OnlineScheduler>>>,
+}
+
+impl Drop for TradeoffSession {
+    fn drop(&mut self) {
+        if let Some(s) = self.scheduler.lock().unwrap().take() {
+            s.shutdown();
+        }
+    }
 }
 
 impl TradeoffSession {
@@ -688,11 +714,175 @@ impl TradeoffSession {
     pub fn run_status(&self, id: u64) -> Option<RunStatus> {
         self.runs.get(id).map(|slot| slot.lock().unwrap().status.clone())
     }
+
+    /// Submit a pricing job to the online scheduler (started lazily on the
+    /// first submit). Requires the scheduler to be enabled — via
+    /// `[scheduler] enabled = true`, [`SessionBuilder::scheduler`], or
+    /// `serve --scheduler`; disabled sessions answer with a typed config
+    /// error. Returns the job id to poll with
+    /// [`job_status`](Self::job_status):
+    ///
+    /// ```no_run
+    /// use cloudshapes::api::SessionBuilder;
+    /// use cloudshapes::coordinator::scheduler::{JobSpec, SchedulerConfig, Slo};
+    ///
+    /// let session = SessionBuilder::quick()
+    ///     .partitioner("heuristic")
+    ///     .scheduler(SchedulerConfig { enabled: true, ..Default::default() })
+    ///     .build()?;
+    /// let id = session.submit_job(JobSpec::generate(
+    ///     None,                  // any payoff family
+    ///     4,                     // tasks
+    ///     0.05,                  // accuracy, $
+    ///     7,                     // seed
+    ///     Slo::Deadline(3600.0), // finish within an hour of virtual time
+    /// )?)?;
+    /// let status = session.job_status(id)?.expect("job is tracked");
+    /// println!("job {id} is {}", status.state.name());
+    /// # Ok::<(), cloudshapes::api::CloudshapesError>(())
+    /// ```
+    pub fn submit_job(&self, spec: JobSpec) -> Result<u64> {
+        self.scheduler()?.submit(spec)
+    }
+
+    /// Snapshot one job (`Ok(None)` for unknown ids; an error when the
+    /// scheduler is disabled).
+    pub fn job_status(&self, id: u64) -> Result<Option<JobStatus>> {
+        Ok(self.try_scheduler()?.and_then(|s| s.job_status(id)))
+    }
+
+    /// Snapshot every tracked job, in submission order.
+    pub fn jobs(&self) -> Result<Vec<JobStatus>> {
+        Ok(self.try_scheduler()?.map(|s| s.jobs()).unwrap_or_default())
+    }
+
+    /// Cancel a job: `Some(true)` if it transitioned to cancelled (its
+    /// capacity returns to the queue at the next epoch boundary),
+    /// `Some(false)` if already terminal, `None` for unknown ids.
+    pub fn cancel_job(&self, id: u64) -> Result<Option<bool>> {
+        Ok(self.try_scheduler()?.and_then(|s| s.cancel(id)))
+    }
+
+    /// Scheduler counters (defaults before the first submit). The
+    /// epoch-record ring is left empty here — it exists for diagnostics
+    /// and tests on [`OnlineScheduler::stats`] directly; cloning it on
+    /// every `ping` would tax a liveness probe.
+    pub fn scheduler_stats(&self) -> Result<SchedulerStats> {
+        Ok(self.try_scheduler()?.map(|s| s.counters()).unwrap_or_default())
+    }
+
+    /// The started scheduler when one exists; a typed config error when the
+    /// session has job scheduling disabled. Query paths use this so they
+    /// never spin the thread up as a side effect.
+    fn try_scheduler(&self) -> Result<Option<Arc<OnlineScheduler>>> {
+        if !self.experiment.config.scheduler.enabled {
+            return Err(CloudshapesError::config(
+                "the online scheduler is disabled: set [scheduler] enabled = true \
+                 (or start `serve --scheduler`) before using job ops",
+            ));
+        }
+        Ok(self.scheduler.lock().unwrap().clone())
+    }
+
+    /// Get-or-start the scheduler (submit path).
+    fn scheduler(&self) -> Result<Arc<OnlineScheduler>> {
+        if let Some(s) = self.try_scheduler()? {
+            return Ok(s);
+        }
+        let mut guard = self.scheduler.lock().unwrap();
+        if let Some(s) = &*guard {
+            return Ok(Arc::clone(s));
+        }
+        // Priors: per-platform effective throughput and setup, averaged
+        // over the benchmark-fitted (platform, task) models — the best
+        // estimate of each platform the session owns.
+        let m = self.models();
+        let tasks = &self.experiment.workload.tasks;
+        let priors: Vec<PlatformPrior> = (0..m.mu)
+            .map(|i| {
+                let n = m.tau as f64;
+                let throughput = (0..m.tau)
+                    .map(|j| tasks[j].flops_per_path() / m.model(i, j).beta)
+                    .sum::<f64>()
+                    / n;
+                let setup =
+                    (0..m.tau).map(|j| m.model(i, j).gamma).sum::<f64>() / n;
+                PlatformPrior {
+                    throughput_flops: throughput.max(1e-9),
+                    setup_secs: setup.max(0.0),
+                }
+            })
+            .collect();
+        let registry = Arc::clone(&self.registry);
+        let config = self.experiment.config.clone();
+        let name = self.default_partitioner.clone();
+        let scheduler = OnlineScheduler::start(
+            self.experiment.cluster.clone(),
+            priors,
+            self.experiment.config.executor.clone(),
+            self.experiment.config.scheduler.clone(),
+            move || registry.create(&name, &config),
+        )?;
+        let scheduler = Arc::new(scheduler);
+        *guard = Some(Arc::clone(&scheduler));
+        Ok(scheduler)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::{JobState, Slo};
+    use crate::workload::Payoff;
+
+    #[test]
+    fn job_ops_require_the_scheduler_enabled() {
+        let session = SessionBuilder::quick().partitioner("heuristic").build().unwrap();
+        let spec = JobSpec::generate(None, 1, 0.05, 1, Slo::Deadline(10.0)).unwrap();
+        let e = session.submit_job(spec).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("scheduler"), "{e}");
+        assert!(session.jobs().is_err());
+        assert!(session.job_status(1).is_err());
+        assert!(session.cancel_job(1).is_err());
+        assert!(session.scheduler_stats().is_err());
+    }
+
+    #[test]
+    fn submitted_job_runs_to_completion_through_the_session() {
+        let session = SessionBuilder::quick()
+            .partitioner("heuristic")
+            .scheduler(SchedulerConfig { enabled: true, ..Default::default() })
+            .build()
+            .unwrap();
+        // Enabled but not yet started: queries answer empties, not errors.
+        assert!(session.jobs().unwrap().is_empty());
+        assert!(session.job_status(1).unwrap().is_none());
+        assert_eq!(session.scheduler_stats().unwrap().epochs, 0);
+        let spec = JobSpec::generate(
+            Some(Payoff::European),
+            2,
+            0.05,
+            3,
+            Slo::Budget(1000.0),
+        )
+        .unwrap();
+        let id = session.submit_job(spec).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let status = loop {
+            let s = session.job_status(id).unwrap().expect("job tracked");
+            if s.state.is_terminal() {
+                break s;
+            }
+            assert!(std::time::Instant::now() < deadline, "job never finished");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert_eq!(status.state, JobState::Done);
+        assert_eq!(status.slo_met, Some(true));
+        assert!(status.cost > 0.0);
+        assert!(session.scheduler_stats().unwrap().epochs >= 1);
+        assert_eq!(session.jobs().unwrap().len(), 1);
+    }
 
     #[test]
     fn missing_cluster_is_a_config_error() {

@@ -44,11 +44,21 @@ COMMANDS
       --partitioner NAME
       --watch              Live progress view of the chunked executor
                            (chunks done, retries, migrations, task prices)
+  jobs                     Online-scheduler demo: submit jobs with SLOs to
+                           this session's scheduler and watch them complete
+      --count N            Jobs to submit (default 4; SLOs alternate
+                           deadline/budget, payoff families rotate)
+      --deadline SECS      Deadline SLO value (virtual secs, default 1e6)
+      --job-budget DOLLARS Budget SLO value (default 1000)
+      --tasks N            Tasks per job (default 2)
+      --accuracy DOLLARS   Per-task CI half-width (default 0.05)
   table <1|2|3|4>          Regenerate a paper table
   fig <1|2|3>              Regenerate a paper figure (ASCII + optional CSV)
       --csv PATH
   serve                    JSON-over-TCP coordinator, protocol v1 (see --port)
       --port PORT          (default 7741)
+      --scheduler          Accept online pricing jobs (submit/jobs/cancel
+                           ops; see docs/PROTOCOL.md)
 
 COMMON OPTIONS
   --config PATH            TOML experiment config (configs/*.toml)
@@ -89,6 +99,10 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if args.flag_bool("native") {
         cfg.cluster.with_native = true;
     }
+    if args.flag_bool("scheduler") {
+        // `serve --scheduler` (and anything else that wants job ops).
+        cfg.scheduler.enabled = true;
+    }
     Ok(cfg)
 }
 
@@ -116,6 +130,7 @@ fn run(args: &Args) -> Result<()> {
         "pareto" => cmd_pareto(args),
         "shape" => cmd_shape(args),
         "run" => cmd_run(args),
+        "jobs" => cmd_jobs(args),
         "table" => cmd_table(args),
         "fig" => cmd_fig(args),
         "serve" => serve::cmd_serve(args, || session(args)),
@@ -314,6 +329,92 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cloudshapes jobs`: the online-scheduler demo. Submits `--count` jobs
+/// with alternating deadline/budget SLOs (payoff families rotating) to this
+/// session's scheduler, then watches them to completion, printing state
+/// transitions and the re-fit trajectory.
+fn cmd_jobs(args: &Args) -> Result<()> {
+    use crate::coordinator::scheduler::{JobSpec, JobState, Slo};
+    use crate::workload::Payoff;
+
+    let mut cfg = load_config(args)?;
+    cfg.scheduler.enabled = true;
+    let name = args.flag("partitioner").unwrap_or("milp").to_string();
+    let s = SessionBuilder::from_config(cfg).partitioner(&name).build()?;
+
+    let count = args.flag_positive_usize("count")?.unwrap_or(4);
+    let tasks = args.flag_positive_usize("tasks")?.unwrap_or(2);
+    let accuracy = args.flag_f64("accuracy")?.unwrap_or(0.05);
+    let deadline = args.flag_f64("deadline")?.unwrap_or(1e6);
+    let job_budget = args.flag_f64("job-budget")?.unwrap_or(1000.0);
+    let families = [None, Some(Payoff::European), Some(Payoff::Asian), Some(Payoff::Barrier)];
+
+    let mut ids = Vec::with_capacity(count);
+    for k in 0..count {
+        let slo = if k % 2 == 0 { Slo::Deadline(deadline) } else { Slo::Budget(job_budget) };
+        let spec =
+            JobSpec::generate(families[k % families.len()], tasks, accuracy, 1 + k as u64, slo)?;
+        let id = s.submit_job(spec)?;
+        println!("submitted job {id}: {tasks} tasks, SLO {slo:?}");
+        ids.push(id);
+    }
+
+    let mut last: Vec<Option<String>> = vec![None; ids.len()];
+    loop {
+        let mut all_terminal = true;
+        for (k, &id) in ids.iter().enumerate() {
+            let Some(st) = s.job_status(id)? else { continue };
+            let line = format!(
+                "job {id}: {:<9} {:>3}% of {} sims, {} epochs, ${:.3}",
+                st.state.name(),
+                if st.sims_total > 0 { st.sims_done * 100 / st.sims_total } else { 0 },
+                st.sims_total,
+                st.epochs,
+                st.cost
+            );
+            if last[k].as_deref() != Some(line.as_str()) {
+                println!("{line}");
+                last[k] = Some(line);
+            }
+            all_terminal &= st.state.is_terminal();
+        }
+        if all_terminal {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    println!("--- summary ---");
+    for &id in &ids {
+        let st = s.job_status(id)?.expect("job tracked");
+        let met = match st.slo_met {
+            Some(true) => "SLO met",
+            Some(false) => "SLO MISSED",
+            None => "SLO unknown",
+        };
+        let failed = match &st.state {
+            JobState::Failed(msg) => format!(" ({msg})"),
+            _ => String::new(),
+        };
+        println!(
+            "job {id}: {} — {met}, finished at {:.1}s virtual, ${:.3} attributed{failed}",
+            st.state.name(),
+            st.finished_s.unwrap_or(f64::NAN),
+            st.cost
+        );
+    }
+    let stats = s.scheduler_stats()?;
+    println!(
+        "scheduler: {} epochs ({} solves, {} warm reuses), model error {} -> {}",
+        stats.epochs,
+        stats.resolves,
+        stats.warm_reuses,
+        stats.first_model_error.map(|e| format!("{e:.3}")).unwrap_or_else(|| "-".into()),
+        stats.last_model_error.map(|e| format!("{e:.3}")).unwrap_or_else(|| "-".into()),
+    );
+    Ok(())
+}
+
 /// `run --watch`: a line-oriented progress view over the executor's event
 /// stream (progress at ~10% strides; every failure, migration and task
 /// price as it lands).
@@ -472,6 +573,15 @@ mod tests {
     #[test]
     fn run_watch_streams_progress() {
         assert_eq!(main(&argv("run --quick --partitioner heuristic --watch")), 0);
+    }
+
+    #[test]
+    fn jobs_command_submits_and_completes() {
+        assert_eq!(
+            main(&argv("jobs --quick --partitioner heuristic --count 2 --tasks 1")),
+            0
+        );
+        assert_eq!(main(&argv("jobs --quick --count 0")), 1);
     }
 
     #[test]

@@ -1,16 +1,23 @@
 //! JSON-over-TCP coordinator service speaking protocol **v1**
-//! (see [`crate::api::protocol`] for the wire format).
+//! (see [`crate::api::protocol`] for the wire format and `docs/PROTOCOL.md`
+//! for the complete op reference).
 //!
 //! Newline-delimited JSON requests; one JSON response per line:
 //!
 //! ```text
-//! {"v":1,"op":"ping"}                          # liveness + cache stats
+//! {"v":1,"op":"ping"}                          # liveness + cache/scheduler stats
 //! {"v":1,"op":"specs"}
 //! {"v":1,"op":"partition","budget":2.5,"partitioner":"milp"}
 //! {"v":1,"op":"partition","budget":null}       # null = unconstrained
 //! {"v":1,"op":"evaluate","budget":2.5}         # partition + execute
 //! {"v":1,"op":"pareto"}                        # trade-off curve
+//! {"v":1,"op":"shape","deadline":3600}         # optimise the composition
 //! {"v":1,"op":"batch","budgets":[1,2.5,null]}  # one partition per budget
+//! {"v":1,"op":"run","budget":2.5}              # background execution
+//! {"v":1,"op":"status","run_id":3}             # poll a background run
+//! {"v":1,"op":"submit","tasks":4,"deadline":3600}  # scheduler job
+//! {"v":1,"op":"jobs"}                          # job statuses
+//! {"v":1,"op":"cancel","job_id":3}
 //! {"v":1,"op":"shutdown"}
 //! ```
 //!
@@ -22,7 +29,11 @@
 //!
 //! All connections share one [`TradeoffSession`], so its solution cache
 //! serves repeated and concurrent `partition`/`evaluate`/`pareto`/`batch`
-//! requests without re-solving; `ping` reports the cache counters.
+//! requests without re-solving; `ping` reports the cache counters. With
+//! `serve --scheduler` the session also runs the online job scheduler:
+//! `submit`/`jobs`/`cancel` manage continuously-arriving pricing jobs, and
+//! a `submit` with `"stream":true` holds the connection, emitting
+//! `{"v":1,"event":"job",...}` lines until the job is terminal.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -33,8 +44,10 @@ use crate::api::error::{CloudshapesError, Result};
 use crate::api::protocol::{error_response, ok_response, Request};
 use crate::api::session::{RunState, RunStatus, ShapeSummary};
 use crate::api::TradeoffSession;
+use crate::coordinator::scheduler::{JobSpec, JobState, JobStatus, Slo};
 use crate::coordinator::{ExecEvent, ShapeObjective};
 use crate::util::json::{obj, Json};
+use crate::workload::Payoff;
 
 use super::args::Args;
 
@@ -95,6 +108,26 @@ fn handle_connection(
             Ok(Request::Run { partitioner, budget, stream: true }) => {
                 stream_run(&mut writer, session, partitioner.as_deref(), budget)?;
             }
+            Ok(Request::Submit {
+                tasks,
+                payoff,
+                accuracy,
+                seed,
+                deadline,
+                budget,
+                stream: true,
+            }) => {
+                stream_job(
+                    &mut writer,
+                    session,
+                    tasks,
+                    payoff.as_deref(),
+                    accuracy,
+                    seed,
+                    deadline,
+                    budget,
+                )?;
+            }
             parsed => {
                 let response = match parsed.and_then(|req| dispatch(req, session, stop)) {
                     Ok(response) => response,
@@ -126,7 +159,7 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
     match req {
         Request::Ping => {
             let stats = session.cache_stats();
-            Ok(ok_response(vec![
+            let mut fields = vec![
                 ("pong", true.into()),
                 (
                     "cache",
@@ -137,7 +170,31 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
                         ("pareto_entries", stats.pareto_entries.into()),
                     ]),
                 ),
-            ]))
+            ];
+            // Scheduler counters when the session runs one.
+            if let Ok(s) = session.scheduler_stats() {
+                fields.push((
+                    "scheduler",
+                    obj(vec![
+                        ("submitted", Json::Num(s.submitted as f64)),
+                        ("completed", Json::Num(s.completed as f64)),
+                        ("cancelled", Json::Num(s.cancelled as f64)),
+                        ("failed", Json::Num(s.failed as f64)),
+                        ("epochs", s.epochs.into()),
+                        ("resolves", s.resolves.into()),
+                        ("warm_reuses", s.warm_reuses.into()),
+                        (
+                            "model_error_first",
+                            s.first_model_error.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "model_error_last",
+                            s.last_model_error.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                    ]),
+                ));
+            }
+            Ok(ok_response(fields))
         }
         Request::Specs => {
             let specs: Vec<Json> = session
@@ -194,6 +251,36 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
                 ))
             })?;
             Ok(ok_response(status_fields(&status)))
+        }
+        Request::Submit { tasks, payoff, accuracy, seed, deadline, budget, .. } => {
+            // stream:true is intercepted at the connection layer (like
+            // `run`); reaching here means a plain background submit.
+            let spec = build_job_spec(tasks, payoff.as_deref(), accuracy, seed, deadline, budget)?;
+            let job_id = session.submit_job(spec)?;
+            Ok(ok_response(vec![
+                ("job_id", Json::Num(job_id as f64)),
+                ("status", "queued".into()),
+            ]))
+        }
+        Request::Jobs { job_id: None } => {
+            let jobs: Vec<Json> =
+                session.jobs()?.iter().map(|j| obj(job_fields(j))).collect();
+            Ok(ok_response(vec![("jobs", Json::Arr(jobs))]))
+        }
+        Request::Jobs { job_id: Some(id) } => {
+            let status = session.job_status(id)?.ok_or_else(|| {
+                CloudshapesError::protocol(format!("unknown job_id {id}"))
+            })?;
+            Ok(ok_response(job_fields(&status)))
+        }
+        Request::Cancel { job_id } => {
+            let cancelled = session.cancel_job(job_id)?.ok_or_else(|| {
+                CloudshapesError::protocol(format!("unknown job_id {job_id}"))
+            })?;
+            Ok(ok_response(vec![
+                ("job_id", Json::Num(job_id as f64)),
+                ("cancelled", Json::Bool(cancelled)),
+            ]))
         }
         Request::Pareto { partitioner } => {
             let curve = session.pareto_frontier_with(partitioner.as_deref())?;
@@ -341,6 +428,124 @@ fn status_fields(s: &RunStatus) -> Vec<(&'static str, Json)> {
         fields.push(("error", msg.as_str().into()));
     }
     fields
+}
+
+/// Build a scheduler [`JobSpec`] from the `submit` op's wire fields. The
+/// payoff name resolves through [`Payoff::parse`], so an unknown family is
+/// a typed workload error listing the valid names.
+fn build_job_spec(
+    tasks: usize,
+    payoff: Option<&str>,
+    accuracy: Option<f64>,
+    seed: Option<u64>,
+    deadline: Option<f64>,
+    budget: Option<f64>,
+) -> Result<JobSpec> {
+    let payoff = payoff.map(Payoff::parse).transpose()?;
+    let slo = match (deadline, budget) {
+        (Some(d), None) => Slo::Deadline(d),
+        (None, Some(b)) => Slo::Budget(b),
+        _ => unreachable!("protocol parse enforces exactly one SLO"),
+    };
+    // A service-friendly default accuracy: coarse enough that a job is
+    // seconds of virtual work, not hours (clients price tighter on demand).
+    JobSpec::generate(payoff, tasks, accuracy.unwrap_or(0.05), seed.unwrap_or(1), slo)
+}
+
+/// Wire form of one job status (the `jobs` op and job event lines).
+fn job_fields(j: &JobStatus) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("job_id", Json::Num(j.id as f64)),
+        ("status", j.state.name().into()),
+        ("tasks", j.tasks_total.into()),
+        ("sims_total", Json::Num(j.sims_total as f64)),
+        ("sims_done", Json::Num(j.sims_done as f64)),
+        ("epochs", j.epochs.into()),
+        ("cost", j.cost.into()),
+        ("arrival_s", j.arrival_s.into()),
+        ("prices", j.prices.iter().flatten().count().into()),
+    ];
+    match j.slo {
+        Slo::Deadline(d) => fields.push(("deadline", d.into())),
+        Slo::Budget(b) => fields.push(("slo_budget", b.into())),
+    }
+    if let Some(f) = j.finished_s {
+        fields.push(("finished_s", f.into()));
+    }
+    if let Some(p) = j.predicted_finish_s {
+        fields.push(("predicted_finish_s", p.into()));
+    }
+    fields.push((
+        "slo_met",
+        j.slo_met.map(Json::Bool).unwrap_or(Json::Null),
+    ));
+    if let JobState::Failed(msg) = &j.state {
+        fields.push(("error", msg.as_str().into()));
+    }
+    fields
+}
+
+/// Serve a `{"op":"submit","stream":true}` request: submit, then emit one
+/// `{"v":1,"event":"job",...}` line per observed progress change until the
+/// job is terminal, followed by the final `{"v":1,"ok":...}` line carrying
+/// the job's full status.
+#[allow(clippy::too_many_arguments)]
+fn stream_job(
+    writer: &mut impl Write,
+    session: &TradeoffSession,
+    tasks: usize,
+    payoff: Option<&str>,
+    accuracy: Option<f64>,
+    seed: Option<u64>,
+    deadline: Option<f64>,
+    budget: Option<f64>,
+) -> std::io::Result<()> {
+    let submitted = build_job_spec(tasks, payoff, accuracy, seed, deadline, budget)
+        .and_then(|spec| session.submit_job(spec));
+    let job_id = match submitted {
+        Ok(id) => id,
+        Err(e) => {
+            writer.write_all(error_response(&e).to_string_compact().as_bytes())?;
+            return writer.write_all(b"\n");
+        }
+    };
+    let mut last: Option<(JobState, u64, usize)> = None;
+    loop {
+        let status = match session.job_status(job_id) {
+            Ok(Some(s)) => s,
+            // Only *terminal* jobs are ever evicted (under submission
+            // pressure at the tracked-jobs cap), so a vanished id means
+            // the job finished between polls but its final snapshot was
+            // lost to eviction — rare, and worth an honest error over a
+            // fabricated result.
+            Ok(None) | Err(_) => {
+                let e = CloudshapesError::runtime(format!(
+                    "job {job_id} finished but was evicted under submission pressure \
+                     before its final status could be streamed (poll `jobs` sooner, \
+                     or submit less aggressively)"
+                ));
+                writer.write_all(error_response(&e).to_string_compact().as_bytes())?;
+                return writer.write_all(b"\n");
+            }
+        };
+        if status.state.is_terminal() {
+            let response = ok_response(job_fields(&status));
+            writer.write_all(response.to_string_compact().as_bytes())?;
+            return writer.write_all(b"\n");
+        }
+        let key = (status.state.clone(), status.sims_done, status.epochs);
+        if last.as_ref() != Some(&key) {
+            let mut fields = vec![
+                ("v", Json::Num(crate::api::PROTOCOL_VERSION as f64)),
+                ("event", "job".into()),
+            ];
+            fields.extend(job_fields(&status));
+            writer.write_all(obj(fields).to_string_compact().as_bytes())?;
+            writer.write_all(b"\n")?;
+            last = Some(key);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
 }
 
 /// Serve a `{"op":"run","stream":true}` request: interim `{"v":1,"event":
@@ -641,6 +846,99 @@ mod tests {
         assert!(r.get("preemptions").unwrap().as_u64().is_some());
         let r = handle_request(r#"{"v":1,"op":"pareto","partitioner":"heuristic"}"#, &s, &stop);
         assert!(r.get("shape").unwrap().as_obj().is_some());
+    }
+
+    #[test]
+    fn job_ops_error_without_the_scheduler() {
+        let s = session();
+        let stop = AtomicBool::new(false);
+        for req in [
+            r#"{"v":1,"op":"submit","tasks":1,"budget":5}"#,
+            r#"{"v":1,"op":"jobs"}"#,
+            r#"{"v":1,"op":"cancel","job_id":1}"#,
+        ] {
+            let r = handle_request(req, &s, &stop);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{req}");
+            assert_eq!(
+                r.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+                Some("config"),
+                "{req}"
+            );
+        }
+        // Without the scheduler, ping carries no scheduler block.
+        let r = handle_request(r#"{"v":1,"op":"ping"}"#, &s, &stop);
+        assert!(r.get("scheduler").is_none());
+    }
+
+    #[test]
+    fn submit_jobs_cancel_roundtrip() {
+        use crate::coordinator::scheduler::SchedulerConfig;
+        let s = SessionBuilder::quick()
+            .partitioner("heuristic")
+            .scheduler(SchedulerConfig { enabled: true, ..Default::default() })
+            .build()
+            .unwrap();
+        let stop = AtomicBool::new(false);
+        // Unknown payoff names are typed workload errors listing families.
+        let r = handle_request(
+            r#"{"v":1,"op":"submit","tasks":1,"budget":5,"payoff":"swaption"}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("workload")
+        );
+        assert!(r
+            .get("error")
+            .and_then(|e| e.get("message"))
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("asian"));
+        // A good submit is accepted and tracked.
+        let r = handle_request(
+            r#"{"v":1,"op":"submit","tasks":2,"payoff":"european","budget":1000}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        let id = r.get("job_id").unwrap().as_u64().unwrap();
+        // Poll the jobs op until terminal.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            let r =
+                handle_request(&format!(r#"{{"v":1,"op":"jobs","job_id":{id}}}"#), &s, &stop);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+            match r.get("status").unwrap().as_str() {
+                Some("queued") | Some("running") => {
+                    assert!(std::time::Instant::now() < deadline, "job never finished");
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Some("done") => {
+                    assert_eq!(r.get("slo_met"), Some(&Json::Bool(true)));
+                    assert!(r.get("cost").unwrap().as_f64().unwrap() > 0.0);
+                    assert_eq!(r.get("prices").unwrap().as_u64(), Some(2));
+                    break;
+                }
+                other => panic!("unexpected job state {other:?}"),
+            }
+        }
+        // The jobs listing covers it; cancelling a done job reports false.
+        let r = handle_request(r#"{"v":1,"op":"jobs"}"#, &s, &stop);
+        assert_eq!(r.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+        let r = handle_request(&format!(r#"{{"v":1,"op":"cancel","job_id":{id}}}"#), &s, &stop);
+        assert_eq!(r.get("cancelled"), Some(&Json::Bool(false)));
+        // Unknown ids are protocol errors; ping now reports scheduler stats.
+        let r = handle_request(r#"{"v":1,"op":"cancel","job_id":424242}"#, &s, &stop);
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("protocol")
+        );
+        let r = handle_request(r#"{"v":1,"op":"ping"}"#, &s, &stop);
+        let sched = r.get("scheduler").unwrap();
+        assert_eq!(sched.get("submitted").unwrap().as_u64(), Some(1));
+        assert_eq!(sched.get("completed").unwrap().as_u64(), Some(1));
+        assert!(sched.get("epochs").unwrap().as_u64().unwrap() >= 1);
     }
 
     #[test]

@@ -7,11 +7,12 @@ use std::path::Path;
 use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::executor::ExecutorConfig;
 use crate::coordinator::partitioner::MilpConfig;
+use crate::coordinator::scheduler::SchedulerConfig;
 use crate::coordinator::{BenchmarkConfig, SweepConfig};
 use crate::platforms::sim::SimConfig;
 use crate::util::json::Json;
 use crate::util::toml;
-use crate::workload::GeneratorConfig;
+use crate::workload::{GeneratorConfig, Payoff};
 
 /// Which spec set the cluster uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,6 +66,8 @@ pub struct ExperimentConfig {
     pub sweep: SweepConfig,
     pub milp: MilpConfig,
     pub executor: ExecutorConfig,
+    /// Online job scheduler knobs (`[scheduler]`; disabled by default).
+    pub scheduler: SchedulerConfig,
     /// Directory holding the AOT artifacts (manifest.json).
     pub artifact_dir: String,
 }
@@ -78,6 +81,7 @@ impl Default for ExperimentConfig {
             sweep: SweepConfig::default(),
             milp: MilpConfig::default(),
             executor: ExecutorConfig::default(),
+            scheduler: SchedulerConfig::default(),
             artifact_dir: "artifacts".to_string(),
         }
     }
@@ -139,6 +143,15 @@ impl ExperimentConfig {
                     arr[k].as_f64().ok_or_else(|| CloudshapesError::config("bad mix weight"))
                 };
                 cfg.workload.payoff_mix = (g(0)?, g(1)?, g(2)?);
+            }
+            // A single payoff family by name overrides the mix weights;
+            // unknown names are typed workload errors listing the valid
+            // families (never a silent None).
+            if let Some(p) = w.get("payoff") {
+                let name = p.as_str().ok_or_else(|| {
+                    CloudshapesError::config("workload.payoff must be a string")
+                })?;
+                cfg.workload.payoff_mix = Payoff::parse(name)?.one_hot_mix();
             }
             // Reject bad generator parameters (negative/all-zero payoff
             // mixes) at parse time, before they flow into sampling.
@@ -240,6 +253,14 @@ impl ExperimentConfig {
                     "executor.rebalance_tolerance must be positive",
                 ));
             }
+        }
+        if let Some(s) = root.get("scheduler") {
+            set_bool(s, "enabled", &mut cfg.scheduler.enabled)?;
+            set_f64(s, "epoch_secs", &mut cfg.scheduler.epoch_secs)?;
+            set_usize(s, "max_in_flight", &mut cfg.scheduler.max_in_flight)?;
+            set_usize(s, "refit_window", &mut cfg.scheduler.refit_window)?;
+            set_f64(s, "resolve_drift", &mut cfg.scheduler.resolve_drift)?;
+            cfg.scheduler.validate()?;
         }
         if let Some(a) = root.get("artifact_dir").and_then(Json::as_str) {
             cfg.artifact_dir = a.to_string();
@@ -386,6 +407,44 @@ mod tests {
         assert!(ExperimentConfig::parse("[catalogue]\ncounts = 3").is_err());
         assert!(ExperimentConfig::parse("[catalogue]\ncounts = [1, -2]").is_err());
         assert!(ExperimentConfig::parse("[catalogue]\nspot = \"yes\"").is_err());
+    }
+
+    #[test]
+    fn scheduler_section_parses_and_validates() {
+        let c = ExperimentConfig::parse(
+            "[scheduler]\nenabled = true\nepoch_secs = 120.0\nmax_in_flight = 4\n\
+             refit_window = 32\nresolve_drift = 0.2",
+        )
+        .unwrap();
+        assert!(c.scheduler.enabled);
+        assert!((c.scheduler.epoch_secs - 120.0).abs() < 1e-12);
+        assert_eq!(c.scheduler.max_in_flight, 4);
+        assert_eq!(c.scheduler.refit_window, 32);
+        assert!((c.scheduler.resolve_drift - 0.2).abs() < 1e-12);
+        // Defaults: present but disabled.
+        let c = ExperimentConfig::parse("").unwrap();
+        assert!(!c.scheduler.enabled);
+        assert_eq!(c.scheduler.max_in_flight, 8);
+        // Bad values are config errors.
+        assert!(ExperimentConfig::parse("[scheduler]\nepoch_secs = 0").is_err());
+        assert!(ExperimentConfig::parse("[scheduler]\nmax_in_flight = 0").is_err());
+        assert!(ExperimentConfig::parse("[scheduler]\nresolve_drift = -0.5").is_err());
+    }
+
+    #[test]
+    fn workload_payoff_key_picks_one_family_or_errors_with_names() {
+        let c = ExperimentConfig::parse("[workload]\npayoff = \"asian\"").unwrap();
+        assert_eq!(c.workload.payoff_mix, (0.0, 1.0, 0.0));
+        let c = ExperimentConfig::parse("[workload]\npayoff = \"barrier\"").unwrap();
+        assert_eq!(c.workload.payoff_mix, (0.0, 0.0, 1.0));
+        // The unknown-name bugfix: a typed workload error listing the
+        // valid families, not a silent default.
+        let e = ExperimentConfig::parse("[workload]\npayoff = \"swaption\"").unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        assert!(e.message().contains("european"), "{e}");
+        assert!(e.message().contains("asian"), "{e}");
+        assert!(e.message().contains("barrier"), "{e}");
+        assert!(ExperimentConfig::parse("[workload]\npayoff = 3").is_err());
     }
 
     #[test]

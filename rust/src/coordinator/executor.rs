@@ -23,7 +23,12 @@
 //!   up to the preemption;
 //! - emits a typed [`ExecEvent`] stream (chunk done / failed / migrated,
 //!   lane preempted, per-task [`PriceEstimate`]s) consumed by the serve
-//!   protocol's `run`/`status` ops and the CLI `--watch` progress view.
+//!   protocol's `run`/`status` ops and the CLI `--watch` progress view;
+//! - supports **epoch-bounded runs** ([`execute_epoch`]): dispatch halts
+//!   once a lane's virtual clock crosses the epoch boundary, still-queued
+//!   chunks are *deferred* (returned, not failed) and per-task path-counter
+//!   bases keep successive epochs counter-disjoint — the hook the online
+//!   scheduler ([`crate::coordinator::scheduler`]) re-plans allocations at.
 //!
 //! Each platform still executes its lane sequentially (latency accumulates
 //! per lane; the realised makespan is the max lane time, realised cost
@@ -155,6 +160,9 @@ pub enum ExecEvent {
         offset: u64,
         n: u64,
         latency_secs: f64,
+        /// First chunk of this (platform, task) stream: its latency includes
+        /// the per-stream setup γ (re-fit consumers subtract it).
+        cold: bool,
         /// Chunks completed so far / total scheduled.
         done: usize,
         total: usize,
@@ -227,6 +235,8 @@ struct Completion {
     platform: usize,
     chunk: Chunk,
     latency_secs: f64,
+    /// The chunk ran with `prior_sims == 0` (setup was paid).
+    cold: bool,
     stats: Option<PayoffStats>,
     error: Option<String>,
     /// This completion crossed the lane's preemption time: the lane is now
@@ -305,14 +315,21 @@ fn check_shapes(cluster: &Cluster, workload: &Workload, alloc: &Allocation) -> R
 /// Integer-split every task's path space across platforms and compute the
 /// per-slice u64 counter offsets (prefix sums keep slices disjoint; at
 /// `n_sims` up to `1 << 34` these must NOT be truncated to 32 bits).
-fn slice_layout(workload: &Workload, alloc: &Allocation) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+/// `bases` shifts each task's offsets — epoch runs pass the task's global
+/// path-counter cursor so successive epochs never overlap counter ranges.
+fn slice_layout(
+    workload: &Workload,
+    alloc: &Allocation,
+    bases: Option<&[u64]>,
+) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
     let splits: Vec<Vec<u64>> = (0..workload.len())
         .map(|j| alloc.split_sims(j, workload.tasks[j].n_sims))
         .collect();
     let offsets: Vec<Vec<u64>> = splits
         .iter()
-        .map(|row| {
-            let mut acc = 0u64;
+        .enumerate()
+        .map(|(j, row)| {
+            let mut acc = bases.map_or(0, |b| b[j]);
             row.iter()
                 .map(|n| {
                     let o = acc;
@@ -347,9 +364,112 @@ pub fn execute_with(
     models: Option<&ModelSet>,
     on_event: &mut dyn FnMut(&ExecEvent),
 ) -> Result<ExecutionReport> {
+    run_chunked(cluster, workload, alloc, cfg, models, None, None, on_event).map(|o| o.report)
+}
+
+/// One epoch boundary of an online run — the knobs [`execute_epoch`] adds
+/// on top of [`execute_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct EpochCtx<'a> {
+    /// Lane-virtual seconds after which no further chunk is dispatched.
+    /// In-flight chunks still finish, so the boundary is soft by at most
+    /// one chunk per lane.
+    pub halt_secs: f64,
+    /// Per-task global path-counter bases: this epoch's slices start at
+    /// `base_offsets[j]`, keeping successive epochs counter-disjoint.
+    pub base_offsets: &'a [u64],
+}
+
+/// What one epoch of chunked execution accomplished.
+#[derive(Debug)]
+pub struct EpochReport {
+    /// The epoch's execution record. Its `prices` cover only the paths that
+    /// completed *this epoch* — merge [`stats`](Self::stats) across epochs
+    /// for whole-job estimates.
+    pub exec: ExecutionReport,
+    /// Per-task simulations successfully completed this epoch.
+    pub done_sims: Vec<u64>,
+    /// Per-task merged raw payoff statistics of this epoch's completed
+    /// chunks (offset-ordered, so deterministic) — mergeable across epochs.
+    pub stats: Vec<PayoffStats>,
+    /// Per-task simulations still queued when the boundary hit: never
+    /// dispatched, never failed — re-plan them next epoch.
+    pub deferred_sims: Vec<u64>,
+}
+
+/// Run one *epoch* of `alloc`: chunked execution that stops dispatching
+/// once a lane's virtual clock crosses [`EpochCtx::halt_secs`]. Queued
+/// chunks left behind are **deferred** (reported per task, not failed), and
+/// [`EpochCtx::base_offsets`] shifts every task's path counters so repeated
+/// epochs draw disjoint Monte Carlo paths. This is the epoch-boundary
+/// reallocation hook the online scheduler
+/// ([`crate::coordinator::scheduler::OnlineScheduler`]) is built on: plan →
+/// run an epoch → observe → re-plan.
+pub fn execute_epoch(
+    cluster: &Cluster,
+    workload: &Workload,
+    alloc: &Allocation,
+    cfg: &ExecutorConfig,
+    models: Option<&ModelSet>,
+    epoch: EpochCtx<'_>,
+    on_event: &mut dyn FnMut(&ExecEvent),
+) -> Result<EpochReport> {
+    if !(epoch.halt_secs > 0.0 && epoch.halt_secs.is_finite()) {
+        return Err(CloudshapesError::runtime(format!(
+            "epoch halt_secs must be positive and finite, got {}",
+            epoch.halt_secs
+        )));
+    }
+    if epoch.base_offsets.len() != workload.len() {
+        return Err(CloudshapesError::runtime(format!(
+            "epoch base_offsets has {} entries for {} tasks",
+            epoch.base_offsets.len(),
+            workload.len()
+        )));
+    }
+    run_chunked(
+        cluster,
+        workload,
+        alloc,
+        cfg,
+        models,
+        Some(epoch.halt_secs),
+        Some(epoch.base_offsets),
+        on_event,
+    )
+    .map(|o| EpochReport {
+        exec: o.report,
+        done_sims: o.done_sims,
+        stats: o.merged_stats,
+        deferred_sims: o.deferred_sims,
+    })
+}
+
+/// Everything one chunked run produces; the epoch path consumes the extra
+/// per-task accounting, the plain path keeps only the report.
+struct ChunkedOutcome {
+    report: ExecutionReport,
+    done_sims: Vec<u64>,
+    merged_stats: Vec<PayoffStats>,
+    deferred_sims: Vec<u64>,
+}
+
+/// The shared chunked event loop behind [`execute_with`] (no halt, zero
+/// bases) and [`execute_epoch`] (halt + counter bases).
+#[allow(clippy::too_many_arguments)]
+fn run_chunked(
+    cluster: &Cluster,
+    workload: &Workload,
+    alloc: &Allocation,
+    cfg: &ExecutorConfig,
+    models: Option<&ModelSet>,
+    halt_secs: Option<f64>,
+    base_offsets: Option<&[u64]>,
+    on_event: &mut dyn FnMut(&ExecEvent),
+) -> Result<ChunkedOutcome> {
     check_shapes(cluster, workload, alloc)?;
     let (mu, tau) = (cluster.len(), workload.len());
-    let (splits, offsets) = slice_layout(workload, alloc);
+    let (splits, offsets) = slice_layout(workload, alloc, base_offsets);
     let coeffs = Coeffs::build(cluster, workload, models);
 
     // Build per-platform chunk queues: slices in task order (matching the
@@ -422,6 +542,10 @@ pub fn execute_with(
     let mut prices: Vec<Option<PriceEstimate>> = vec![None; tau];
     let (mut done_count, mut failures, mut retries, mut migrations) = (0usize, 0usize, 0usize, 0);
     let mut preemptions = 0usize;
+    // Epoch runs: chunks still queued once no lane can dispatch any more
+    // (every lane idle and past the boundary, dead, or empty) are deferred
+    // to the next epoch instead of executed.
+    let mut deferred: Vec<Chunk> = Vec::new();
 
     let workers = cfg.workers.max(1).min(mu);
     std::thread::scope(|scope| {
@@ -433,7 +557,8 @@ pub fn execute_with(
                 // Claim the earliest-in-time idle lane with queued work —
                 // the event-driven dispatch order. The busy flag keeps each
                 // lane sequential no matter the worker count; dead (spot
-                // preempted) lanes are never claimed.
+                // preempted) lanes are never claimed, nor — in epoch runs —
+                // are lanes whose clock crossed the epoch boundary.
                 let claimed = {
                     let mut g = sched.lock().unwrap();
                     loop {
@@ -443,7 +568,10 @@ pub fn execute_with(
                         let pick = (0..g.lanes.len())
                             .filter(|&i| {
                                 let l = &g.lanes[i];
-                                !l.busy && !l.dead && !l.queue.is_empty()
+                                !l.busy
+                                    && !l.dead
+                                    && !l.queue.is_empty()
+                                    && halt_secs.map_or(true, |h| l.time < h)
                             })
                             .min_by(|&a, &b| g.lanes[a].time.total_cmp(&g.lanes[b].time));
                         if let Some(i) = pick {
@@ -546,6 +674,7 @@ pub fn execute_with(
                     platform: i,
                     chunk,
                     latency_secs: out.latency_secs,
+                    cold: prior == 0,
                     stats: out.stats,
                     error: out.error,
                     preempted,
@@ -555,10 +684,14 @@ pub fn execute_with(
         drop(tx);
 
         // The central event loop: price tasks as they complete, retry and
-        // re-home failures, migrate queued work off stragglers.
-        while done_count + failures < total_chunks {
+        // re-home failures, migrate queued work off stragglers, defer
+        // work stranded behind an epoch boundary. (No upfront drain is
+        // needed: halt_secs is validated positive and every lane starts at
+        // time 0, so work can only strand after a completion — where the
+        // per-iteration drain below runs.)
+        while done_count + failures + deferred.len() < total_chunks {
             let ev = rx.recv().expect("all workers exited with chunks outstanding");
-            let Completion { platform, chunk, latency_secs, stats, error, preempted } = ev;
+            let Completion { platform, chunk, latency_secs, cold, stats, error, preempted } = ev;
             if let Some(notice) = preempted {
                 preemptions += 1;
                 on_event(&ExecEvent::LanePreempted {
@@ -622,6 +755,7 @@ pub fn execute_with(
                         offset: chunk.offset,
                         n: chunk.n,
                         latency_secs,
+                        cold,
                         done: done_count,
                         total: total_chunks,
                     });
@@ -707,6 +841,11 @@ pub fn execute_with(
                     }
                 }
             }
+            if let Some(h) = halt_secs {
+                // Epoch boundary: once nothing is in flight and no lane can
+                // dispatch, everything still queued is deferred.
+                drain_stranded(&sched, &available, h, &mut deferred);
+            }
         }
         // All chunks resolved (the last resolve_chunk set `done`); wake any
         // still-waiting workers so the scope can join them.
@@ -715,6 +854,7 @@ pub fn execute_with(
 
     let g = sched.into_inner().unwrap();
     let mut platforms = Vec::with_capacity(mu);
+    let mut done_sims = vec![0u64; tau];
     for (i, lane) in g.lanes.iter().enumerate() {
         let cm = specs[i].cost_model();
         platforms.push(PlatformReport {
@@ -725,21 +865,77 @@ pub fn execute_with(
             sims: lane.sims,
             errors: lane.errors.clone(),
         });
+        for j in 0..tau {
+            done_sims[j] += lane.done_sims[j];
+        }
+    }
+    // Deterministic per-task merges over everything that completed: used
+    // both for the epoch accounting and to price tasks the epoch boundary
+    // (or permanent failures) left partially done.
+    let mut merged_stats = Vec::with_capacity(tau);
+    for (j, t) in workload.tasks.iter().enumerate() {
+        let merged = fold_chunk_stats(&mut chunk_stats[j]);
+        if merged.n > 0 && prices[j].is_none() {
+            prices[j] = Some(combine(&merged, t.discount()));
+        }
+        merged_stats.push(merged);
+    }
+    let mut deferred_sims = vec![0u64; tau];
+    for c in &deferred {
+        deferred_sims[c.task] += c.n;
     }
     let makespan_secs = platforms.iter().map(|p| p.latency_secs).fold(0.0f64, f64::max);
     let cost = platforms.iter().map(|p| p.cost).sum();
     on_event(&ExecEvent::Finished { makespan_secs, cost, failures });
-    Ok(ExecutionReport {
-        makespan_secs,
-        cost,
-        platforms,
-        prices,
-        failures,
-        chunks: done_count,
-        retries,
-        migrations,
-        preemptions,
+    Ok(ChunkedOutcome {
+        report: ExecutionReport {
+            makespan_secs,
+            cost,
+            platforms,
+            prices,
+            failures,
+            chunks: done_count,
+            retries,
+            migrations,
+            preemptions,
+        },
+        done_sims,
+        merged_stats,
+        deferred_sims,
     })
+}
+
+/// Epoch-boundary drain: when no chunk is in flight and no lane can
+/// dispatch (each is dead, past `halt`, or out of work), move everything
+/// still queued into `deferred` and resolve the run.
+fn drain_stranded(
+    sched: &Mutex<Sched>,
+    available: &Condvar,
+    halt: f64,
+    deferred: &mut Vec<Chunk>,
+) {
+    let mut g = sched.lock().unwrap();
+    if g.done || g.lanes.iter().any(|l| l.busy) {
+        return;
+    }
+    if g.lanes.iter().any(|l| !l.dead && l.time < halt && !l.queue.is_empty()) {
+        return;
+    }
+    let mut n = 0usize;
+    for lane in g.lanes.iter_mut() {
+        n += lane.queue.len();
+        deferred.extend(lane.queue.drain(..));
+        lane.queued_secs = 0.0;
+    }
+    if n == 0 {
+        return;
+    }
+    g.outstanding -= n;
+    if g.outstanding == 0 {
+        g.done = true;
+        drop(g);
+        available.notify_all();
+    }
 }
 
 /// Mark one chunk terminally resolved; flips the scheduler to done (waking
@@ -763,15 +959,19 @@ fn merge_chunk_stats(
     stats: &mut [(u64, PayoffStats)],
     discount: f64,
 ) -> Option<PriceEstimate> {
-    stats.sort_by_key(|(offset, _)| *offset);
-    let merged = stats
-        .iter()
-        .fold(PayoffStats::default(), |acc, (_, s)| acc.merge(s));
+    let merged = fold_chunk_stats(stats);
     if merged.n > 0 {
         Some(combine(&merged, discount))
     } else {
         None
     }
+}
+
+/// Offset-ordered fold of one task's chunk statistics — the deterministic
+/// merge both pricing and the epoch accounting share.
+fn fold_chunk_stats(stats: &mut [(u64, PayoffStats)]) -> PayoffStats {
+    stats.sort_by_key(|(offset, _)| *offset);
+    stats.iter().fold(PayoffStats::default(), |acc, (_, s)| acc.merge(s))
 }
 
 /// Price a completed task and emit its [`ExecEvent::TaskPriced`] event.
@@ -871,7 +1071,7 @@ pub fn execute_static(
 ) -> Result<ExecutionReport> {
     check_shapes(cluster, workload, alloc)?;
     let tau = workload.len();
-    let (splits, offsets) = slice_layout(workload, alloc);
+    let (splits, offsets) = slice_layout(workload, alloc, None);
 
     struct LaneOut {
         latency: f64,
@@ -1207,6 +1407,118 @@ mod tests {
         assert_eq!(rep.preemptions, 3);
         assert!(rep.failures > 0);
         assert!(rep.prices.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn epoch_with_loose_boundary_matches_full_run() {
+        // A boundary beyond the whole run is a no-op: nothing deferred,
+        // identical report to the plain chunked path.
+        let (cluster, workload, models) = setup();
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let cfg = ExecutorConfig { chunk_sims: 1 << 16, ..Default::default() };
+        let full = execute(&cluster, &workload, &alloc, &cfg).unwrap();
+        let bases = vec![0u64; workload.len()];
+        let ep = execute_epoch(
+            &cluster,
+            &workload,
+            &alloc,
+            &cfg,
+            Some(&models),
+            EpochCtx { halt_secs: 1e12, base_offsets: &bases },
+            &mut |_| {},
+        )
+        .unwrap();
+        assert!((ep.exec.makespan_secs - full.makespan_secs).abs() < 1e-9);
+        assert!(ep.deferred_sims.iter().all(|&d| d == 0));
+        for (j, t) in workload.tasks.iter().enumerate() {
+            assert_eq!(ep.done_sims[j], t.n_sims);
+            assert!(ep.stats[j].n > 0);
+            let (a, b) = (
+                ep.exec.prices[j].as_ref().unwrap(),
+                full.prices[j].as_ref().unwrap(),
+            );
+            assert!((a.price - b.price).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn epoch_boundary_defers_work_and_epochs_compose() {
+        // A tight boundary leaves work queued (deferred, not failed); a
+        // second epoch over the remainder at shifted counter bases finishes
+        // the job, and the merged statistics cover every requested path.
+        let (cluster, workload, models) = setup();
+        let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+        let cfg = ExecutorConfig { chunk_sims: 1 << 14, ..Default::default() };
+        let bases = vec![0u64; workload.len()];
+        // The boundary sits well inside the run: the full makespan of this
+        // allocation is far larger than one chunk's latency.
+        let full = execute(&cluster, &workload, &alloc, &cfg).unwrap();
+        let halt = full.makespan_secs / 4.0;
+        let ep1 = execute_epoch(
+            &cluster,
+            &workload,
+            &alloc,
+            &cfg,
+            Some(&models),
+            EpochCtx { halt_secs: halt, base_offsets: &bases },
+            &mut |_| {},
+        )
+        .unwrap();
+        assert_eq!(ep1.exec.failures, 0);
+        let total_deferred: u64 = ep1.deferred_sims.iter().sum();
+        assert!(total_deferred > 0, "tight boundary must strand work");
+        for (j, t) in workload.tasks.iter().enumerate() {
+            assert_eq!(ep1.done_sims[j] + ep1.deferred_sims[j], t.n_sims);
+        }
+        // Dispatch stopped at the boundary: the epoch is strictly shorter
+        // than the uninterrupted run.
+        assert!(ep1.exec.makespan_secs < full.makespan_secs);
+        // Epoch 2: remaining work at fresh counter bases.
+        let mut rest = workload.clone();
+        let bases2: Vec<u64> = workload.tasks.iter().map(|t| t.n_sims).collect();
+        for (j, t) in rest.tasks.iter_mut().enumerate() {
+            t.n_sims = (t.n_sims - ep1.done_sims[j]).max(1);
+        }
+        let ep2 = execute_epoch(
+            &cluster,
+            &rest,
+            &alloc,
+            &cfg,
+            Some(&models),
+            EpochCtx { halt_secs: 1e12, base_offsets: &bases2 },
+            &mut |_| {},
+        )
+        .unwrap();
+        assert!(ep2.deferred_sims.iter().all(|&d| d == 0));
+        for j in 0..workload.len() {
+            // The sim caps *statistics* per stream, so compare structure,
+            // not raw path counts: merging epochs accumulates stats.
+            let merged = ep1.stats[j].merge(&ep2.stats[j]);
+            assert!(merged.n >= ep1.stats[j].n.max(ep2.stats[j].n));
+            assert!(merged.n > 0);
+            assert_eq!(ep2.done_sims[j], rest.tasks[j].n_sims);
+        }
+        // Degenerate epochs are rejected.
+        assert!(execute_epoch(
+            &cluster,
+            &workload,
+            &alloc,
+            &cfg,
+            None,
+            EpochCtx { halt_secs: 0.0, base_offsets: &bases },
+            &mut |_| {},
+        )
+        .is_err());
+        assert!(execute_epoch(
+            &cluster,
+            &workload,
+            &alloc,
+            &cfg,
+            None,
+            EpochCtx { halt_secs: 1.0, base_offsets: &bases[..2] },
+            &mut |_| {},
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The coordinator — the paper's L3 contribution: benchmark the cluster,
 //! fit predictive models, partition the workload (heuristics vs MILP),
-//! generate the ε-constraint Pareto trade-off, and execute allocations.
+//! generate the ε-constraint Pareto trade-off, execute allocations, and
+//! keep doing all of it online as jobs arrive ([`scheduler`]).
 
 pub mod allocation;
 pub mod benchmarker;
@@ -8,15 +9,20 @@ pub mod executor;
 pub mod objectives;
 pub mod pareto;
 pub mod partitioner;
+pub mod scheduler;
 pub mod shape;
 
 pub use allocation::Allocation;
 pub use benchmarker::{benchmark, BenchmarkConfig, BenchmarkReport};
 pub use executor::{
-    execute, execute_static, execute_with, ExecEvent, ExecutionReport, ExecutorConfig,
-    RebalanceConfig, RetryConfig,
+    execute, execute_epoch, execute_static, execute_with, EpochCtx, EpochReport, ExecEvent,
+    ExecutionReport, ExecutorConfig, RebalanceConfig, RetryConfig,
 };
 pub use objectives::ModelSet;
 pub use pareto::{sweep, SweepConfig, TradeoffCurve, TradeoffPoint};
 pub use partitioner::{HeuristicPartitioner, MilpConfig, MilpPartitioner, Partitioner};
+pub use scheduler::{
+    EpochRecord, JobSpec, JobState, JobStatus, OnlineScheduler, SchedulerConfig,
+    SchedulerStats, Slo,
+};
 pub use shape::{ShapeObjective, ShapeOutcome, ShapePoint, ShapeSearch};

@@ -13,8 +13,10 @@ use crate::api::error::Result;
 use super::allocation::Allocation;
 use super::objectives::ModelSet;
 
-/// A workload partitioning strategy (§III.C).
-pub trait Partitioner {
+/// A workload partitioning strategy (§III.C). `Send` so a boxed strategy
+/// can move onto a background solver thread (the online scheduler re-solves
+/// on its epoch thread); strategies are plain data, so this costs nothing.
+pub trait Partitioner: Send {
     fn name(&self) -> &str;
 
     /// Produce an allocation. `budget` is the cost constraint C_k in $;

@@ -1,0 +1,1190 @@
+//! Online multi-tenant pricing scheduler: continuous job arrivals,
+//! epoch-based incremental re-optimisation, SLO tracking.
+//!
+//! The paper prices one batch of 128 options once. Its own pitch — FPGAs
+//! "available by the hour" as IaaS — implies a *service*: clients keep
+//! submitting pricing jobs, each with a service-level objective (a deadline
+//! in cluster-virtual seconds or a dollar budget), and the task→platform
+//! allocation must stay Pareto-optimal as the mix of in-flight work
+//! changes. [`OnlineScheduler`] is that layer:
+//!
+//! 1. **Admit** — arrivals queue; at each epoch boundary up to
+//!    `max_in_flight` jobs are admitted and batched into one combined
+//!    workload of their *remaining* work.
+//! 2. **Plan** — the batch is partitioned by an ordinary [`Partitioner`]
+//!    over models rebuilt from the current per-platform throughput
+//!    estimates. The previous epoch's incumbent allocation is reused
+//!    verbatim while the job set is unchanged and the models have drifted
+//!    less than `resolve_drift` (the same quantize-and-reuse discipline as
+//!    the session solution cache); otherwise the solver runs again.
+//!    Deadline jobs buy speed (tight slack forces the unconstrained
+//!    minimum-makespan solve); an all-budget batch is solved under the sum
+//!    of remaining budgets.
+//! 3. **Execute one epoch** — [`execute_epoch`] runs the allocation until
+//!    lane clocks cross `epoch_secs`; still-queued chunks are deferred, so
+//!    a re-plan at the boundary effectively preempts and re-homes them
+//!    under the refreshed allocation. Per-task path-counter cursors keep
+//!    epochs Monte-Carlo-disjoint.
+//! 4. **Observe** — measured chunk latencies feed the
+//!    [`OnlineLatencyFit`] re-fit (window `refit_window`), so the next
+//!    epoch solves against refreshed models; each epoch's mean relative
+//!    model error is recorded in [`EpochRecord`].
+//!
+//! Jobs complete when every task has simulated its required paths; prices
+//! merge the per-epoch payoff statistics in epoch order (deterministic).
+//! [`JobStatus::slo_met`] reports whether the deadline (virtual time from
+//! submission) or budget (attributed cost) held.
+//!
+//! The serve protocol's `submit`/`jobs`/`cancel` ops and the CLI `jobs`
+//! command drive this through
+//! [`TradeoffSession::submit_job`](crate::api::TradeoffSession::submit_job):
+//!
+//! ```no_run
+//! use cloudshapes::api::SessionBuilder;
+//! use cloudshapes::coordinator::scheduler::{JobSpec, SchedulerConfig, Slo};
+//!
+//! let session = SessionBuilder::quick()
+//!     .partitioner("heuristic")
+//!     .scheduler(SchedulerConfig { enabled: true, ..Default::default() })
+//!     .build()?;
+//! let job = JobSpec::generate(None, 2, 0.05, 7, Slo::Deadline(3600.0))?;
+//! let id = session.submit_job(job)?;
+//! while let Some(status) = session.job_status(id)? {
+//!     if status.state.is_terminal() {
+//!         println!("job {id}: {} (SLO met: {:?})", status.state.name(), status.slo_met);
+//!         break;
+//!     }
+//! }
+//! # Ok::<(), cloudshapes::api::CloudshapesError>(())
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::error::{CloudshapesError, Result};
+use crate::coordinator::executor::{execute_epoch, EpochCtx, ExecEvent, ExecutorConfig};
+use crate::coordinator::objectives::ModelSet;
+use crate::coordinator::partitioner::Partitioner;
+use crate::coordinator::Allocation;
+use crate::models::online::{OnlineLatencyFit, PlatformPrior};
+use crate::models::CostModel;
+use crate::platforms::Cluster;
+use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
+use crate::workload::{try_generate, GeneratorConfig, OptionTask, Payoff, Workload};
+
+/// `[scheduler]` configuration keys (see `docs/CONFIG.md`).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Whether the session accepts jobs at all (`serve --scheduler` or
+    /// `[scheduler] enabled = true`). Disabled sessions answer job ops with
+    /// a typed config error instead of silently spawning a thread.
+    pub enabled: bool,
+    /// Cluster-virtual seconds per scheduling epoch — the re-plan cadence.
+    pub epoch_secs: f64,
+    /// Jobs optimised concurrently; arrivals beyond this wait queued.
+    pub max_in_flight: usize,
+    /// Observed chunk-latency samples kept per platform for the
+    /// incremental re-fit; 0 disables re-fitting.
+    pub refit_window: usize,
+    /// Relative throughput drift (vs the models of the last solve) that
+    /// forces a re-solve at the next epoch boundary.
+    pub resolve_drift: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            enabled: false,
+            epoch_secs: 600.0,
+            max_in_flight: 8,
+            refit_window: 64,
+            resolve_drift: 0.15,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Validate the knobs (the config parser and [`OnlineScheduler::start`]
+    /// both route through this).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.epoch_secs > 0.0 && self.epoch_secs.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "scheduler.epoch_secs must be positive and finite, got {}",
+                self.epoch_secs
+            )));
+        }
+        if self.max_in_flight == 0 {
+            return Err(CloudshapesError::config("scheduler.max_in_flight must be >= 1"));
+        }
+        if !(self.resolve_drift > 0.0 && self.resolve_drift.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "scheduler.resolve_drift must be positive, got {}",
+                self.resolve_drift
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A job's service-level objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Slo {
+    /// Finish within this many cluster-virtual seconds of submission.
+    Deadline(f64),
+    /// Finish within this attributed spend, $.
+    Budget(f64),
+}
+
+impl Slo {
+    fn validate(&self) -> Result<()> {
+        let (name, v) = match self {
+            Slo::Deadline(v) => ("deadline", *v),
+            Slo::Budget(v) => ("budget", *v),
+        };
+        if !(v > 0.0 && v.is_finite()) {
+            return Err(CloudshapesError::workload(format!(
+                "job {name} must be positive and finite, got {v}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A pricing job: tasks to price plus the SLO to price them under.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub tasks: Vec<OptionTask>,
+    pub slo: Slo,
+}
+
+impl JobSpec {
+    /// Most tasks one job may carry (also the task-id stride that keeps
+    /// every job's RNG streams disjoint from every other job's).
+    pub const MAX_TASKS: usize = 256;
+
+    /// Validate and build a job from explicit tasks.
+    pub fn new(tasks: Vec<OptionTask>, slo: Slo) -> Result<JobSpec> {
+        if tasks.is_empty() {
+            return Err(CloudshapesError::workload("job has no tasks"));
+        }
+        if tasks.len() > JobSpec::MAX_TASKS {
+            return Err(CloudshapesError::workload(format!(
+                "job has {} tasks (max {})",
+                tasks.len(),
+                JobSpec::MAX_TASKS
+            )));
+        }
+        for t in &tasks {
+            t.validate()?;
+        }
+        slo.validate()?;
+        Ok(JobSpec { tasks, slo })
+    }
+
+    /// Generate a job's tasks Kaiserslautern-style: `n_tasks` options at
+    /// `accuracy`, drawn from `seed`, restricted to one payoff family when
+    /// `payoff` is given (the serve `submit` op's path).
+    pub fn generate(
+        payoff: Option<Payoff>,
+        n_tasks: usize,
+        accuracy: f64,
+        seed: u64,
+        slo: Slo,
+    ) -> Result<JobSpec> {
+        let payoff_mix = match payoff {
+            None => GeneratorConfig::default().payoff_mix,
+            Some(p) => p.one_hot_mix(),
+        };
+        let cfg = GeneratorConfig {
+            n_tasks,
+            seed,
+            accuracy,
+            payoff_mix,
+            step_choices: vec![64],
+        };
+        let workload = try_generate(&cfg)?;
+        JobSpec::new(workload.tasks, slo)
+    }
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    /// Waiting for an in-flight slot.
+    Queued,
+    /// Admitted: participating in epochs.
+    Running,
+    /// Every task priced.
+    Done,
+    /// Cancelled by the client; capacity returned to the queue.
+    Cancelled,
+    /// The scheduler gave up on it; the message says why.
+    Failed(String),
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+
+    /// Stable lowercase tag (the wire `status` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Snapshot of one job (the serve `jobs` op's payload).
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    pub id: u64,
+    pub state: JobState,
+    pub slo: Slo,
+    pub tasks_total: usize,
+    pub sims_total: u64,
+    pub sims_done: u64,
+    /// Epochs this job participated in.
+    pub epochs: usize,
+    /// Cost attributed to this job so far (epoch cost split by executed
+    /// work), $.
+    pub cost: f64,
+    /// Cluster-virtual clock at submission.
+    pub arrival_s: f64,
+    /// Cluster-virtual clock when the job reached a terminal state.
+    pub finished_s: Option<f64>,
+    /// Conservative predicted completion (virtual): the latest epoch
+    /// plan's full-remaining-work makespan from the clock at that plan.
+    pub predicted_finish_s: Option<f64>,
+    /// Whether the SLO held, known once terminal (`None` while running;
+    /// cancelled/failed jobs report `Some(false)`).
+    pub slo_met: Option<bool>,
+    /// Per-task discounted price estimates (populated as tasks finish).
+    pub prices: Vec<Option<PriceEstimate>>,
+}
+
+/// One epoch's planning/execution record (diagnostics + tests).
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Jobs and tasks in this epoch's batch.
+    pub jobs: usize,
+    pub tasks: usize,
+    /// Whether the solver ran (false = the warm incumbent was reused).
+    pub resolved: bool,
+    /// Budget the solve ran under (None = unconstrained).
+    pub budget: Option<f64>,
+    /// Predicted full-remaining makespan of the *previous* incumbent under
+    /// this epoch's refreshed models (present whenever one existed).
+    pub warm_makespan_s: Option<f64>,
+    /// Predicted full-remaining makespan of the chosen allocation.
+    pub predicted_makespan_s: f64,
+    /// Measured virtual seconds this epoch actually ran.
+    pub measured_epoch_s: f64,
+    pub epoch_cost: f64,
+    /// Mean relative |predicted − measured| over this epoch's chunks.
+    pub model_error: f64,
+}
+
+/// Aggregate scheduler counters (the serve `ping` op reports a summary).
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    pub epochs: usize,
+    /// Epochs that ran the solver.
+    pub resolves: usize,
+    /// Epochs that reused the warm incumbent.
+    pub warm_reuses: usize,
+    /// Model error of the first / most recent epoch — the re-fit
+    /// tightening metric.
+    pub first_model_error: Option<f64>,
+    pub last_model_error: Option<f64>,
+    /// Recent epoch records (oldest evicted past a cap; the first/last
+    /// error fields above survive eviction).
+    pub records: Vec<EpochRecord>,
+}
+
+/// Records kept in [`SchedulerStats::records`].
+const MAX_EPOCH_RECORDS: usize = 1024;
+
+/// Upper bound on tracked jobs (queued/running ones are never evicted). A
+/// continuously-admitting service must not grow without bound: past the
+/// cap, the oldest *terminal* job is evicted on submit; with every tracked
+/// job still live, new submits are refused — the same backpressure
+/// discipline as the session's run registry.
+const MAX_TRACKED_JOBS: usize = 1024;
+
+/// Give up on jobs after this many consecutive epochs of zero progress
+/// (every lane failing/preempted): keeps a doomed cluster from spinning.
+const MAX_STALLED_EPOCHS: usize = 3;
+
+/// Per-task state inside a job.
+#[derive(Debug, Clone)]
+struct JobTask {
+    /// The task with its id remapped into the job's private id range
+    /// (stable across epochs: it keys the RNG streams).
+    task: OptionTask,
+    /// Simulations still needed.
+    remaining: u64,
+    /// Next fresh path-counter base; advances by the *requested* sims each
+    /// epoch so ranges never overlap even when chunks fail or defer.
+    cursor: u64,
+    /// Payoff statistics accumulated across epochs.
+    stats: PayoffStats,
+}
+
+#[derive(Debug)]
+struct Job {
+    id: u64,
+    state: JobState,
+    slo: Slo,
+    tasks: Vec<JobTask>,
+    sims_total: u64,
+    sims_done: u64,
+    epochs: usize,
+    cost: f64,
+    arrival_s: f64,
+    finished_s: Option<f64>,
+    predicted_finish_s: Option<f64>,
+    slo_met: Option<bool>,
+}
+
+impl Job {
+    fn status(&self) -> JobStatus {
+        JobStatus {
+            id: self.id,
+            state: self.state.clone(),
+            slo: self.slo,
+            tasks_total: self.tasks.len(),
+            sims_total: self.sims_total,
+            sims_done: self.sims_done,
+            epochs: self.epochs,
+            cost: self.cost,
+            arrival_s: self.arrival_s,
+            finished_s: self.finished_s,
+            predicted_finish_s: self.predicted_finish_s,
+            slo_met: self.slo_met,
+            prices: self
+                .tasks
+                .iter()
+                .map(|t| {
+                    if t.remaining == 0 && t.stats.n > 0 {
+                        Some(combine(&t.stats, t.task.discount()))
+                    } else {
+                        None
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+struct SchedState {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    /// Cluster-virtual clock: the sum of epoch makespans so far.
+    clock: f64,
+    shutdown: bool,
+    stats: SchedulerStats,
+    /// Set when the partitioner factory failed on the epoch thread.
+    fatal: Option<CloudshapesError>,
+}
+
+struct Inner {
+    cluster: Cluster,
+    exec: ExecutorConfig,
+    cfg: SchedulerConfig,
+    priors: Vec<PlatformPrior>,
+    state: Mutex<SchedState>,
+    wake: Condvar,
+}
+
+/// The online scheduler: submit jobs, poll their status, cancel them. One
+/// background thread runs the epoch loop; dropping the handle (or calling
+/// [`shutdown`](Self::shutdown)) stops it at the next boundary.
+pub struct OnlineScheduler {
+    inner: Arc<Inner>,
+}
+
+impl Drop for OnlineScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl OnlineScheduler {
+    /// Start the epoch thread over `cluster`. `priors` seed the per-platform
+    /// throughput estimates (one per platform, usually from benchmark
+    /// fits); `make_partitioner` builds the per-epoch solver on the
+    /// scheduler thread.
+    pub fn start<F>(
+        cluster: Cluster,
+        priors: Vec<PlatformPrior>,
+        exec: ExecutorConfig,
+        cfg: SchedulerConfig,
+        make_partitioner: F,
+    ) -> Result<OnlineScheduler>
+    where
+        F: FnOnce() -> Result<Box<dyn Partitioner>> + Send + 'static,
+    {
+        cfg.validate()?;
+        if cluster.is_empty() {
+            return Err(CloudshapesError::config("scheduler needs a non-empty cluster"));
+        }
+        if priors.len() != cluster.len() {
+            return Err(CloudshapesError::config(format!(
+                "scheduler has {} platform priors for {} platforms",
+                priors.len(),
+                cluster.len()
+            )));
+        }
+        let inner = Arc::new(Inner {
+            cluster,
+            exec,
+            cfg,
+            priors,
+            state: Mutex::new(SchedState {
+                jobs: BTreeMap::new(),
+                next_id: 1,
+                clock: 0.0,
+                shutdown: false,
+                stats: SchedulerStats::default(),
+                fatal: None,
+            }),
+            wake: Condvar::new(),
+        });
+        let thread_inner = Arc::clone(&inner);
+        std::thread::Builder::new()
+            .name("cloudshapes-scheduler".to_string())
+            .spawn(move || epoch_loop(thread_inner, make_partitioner))
+            .map_err(|e| {
+                CloudshapesError::runtime(format!("spawning scheduler thread: {e}"))
+            })?;
+        Ok(OnlineScheduler { inner })
+    }
+
+    /// Submit a job; returns its id. The job starts `Queued` and is
+    /// admitted at the next epoch boundary with a free in-flight slot.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        // Re-validate: specs can be hand-built.
+        let spec = JobSpec::new(spec.tasks, spec.slo)?;
+        let mut st = self.inner.state.lock().unwrap();
+        if st.shutdown {
+            return Err(CloudshapesError::runtime("scheduler is shut down"));
+        }
+        if let Some(e) = &st.fatal {
+            return Err(e.clone());
+        }
+        if st.jobs.len() >= MAX_TRACKED_JOBS {
+            // Evict the oldest finished job (ids are monotone); with
+            // nothing terminal the cap is a hard admission limit.
+            let victim = st
+                .jobs
+                .iter()
+                .filter(|(_, j)| j.state.is_terminal())
+                .map(|(id, _)| *id)
+                .min();
+            match victim {
+                Some(v) => {
+                    st.jobs.remove(&v);
+                }
+                None => {
+                    return Err(CloudshapesError::runtime(format!(
+                        "too many live jobs (max {MAX_TRACKED_JOBS}): wait for completions \
+                         or cancel before submitting more"
+                    )))
+                }
+            }
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        let tasks: Vec<JobTask> = spec
+            .tasks
+            .into_iter()
+            .enumerate()
+            .map(|(k, mut task)| {
+                // Remap into the job's private id range so RNG streams never
+                // collide across tenants (ids key the counter-based RNG).
+                task.id = (id as usize) * JobSpec::MAX_TASKS + k;
+                JobTask {
+                    remaining: task.n_sims,
+                    cursor: 0,
+                    stats: PayoffStats::default(),
+                    task,
+                }
+            })
+            .collect();
+        let sims_total = tasks.iter().map(|t| t.task.n_sims).sum();
+        let arrival_s = st.clock;
+        st.jobs.insert(
+            id,
+            Job {
+                id,
+                state: JobState::Queued,
+                slo: spec.slo,
+                tasks,
+                sims_total,
+                sims_done: 0,
+                epochs: 0,
+                cost: 0.0,
+                arrival_s,
+                finished_s: None,
+                predicted_finish_s: None,
+                slo_met: None,
+            },
+        );
+        st.stats.submitted += 1;
+        drop(st);
+        self.inner.wake.notify_all();
+        Ok(id)
+    }
+
+    /// Cancel a job: `Some(true)` if it transitioned to `Cancelled` (its
+    /// remaining work is dropped at the next boundary and the in-flight
+    /// slot returns to the queue), `Some(false)` if it was already
+    /// terminal, `None` for unknown ids.
+    pub fn cancel(&self, id: u64) -> Option<bool> {
+        let mut st = self.inner.state.lock().unwrap();
+        let clock = st.clock;
+        let job = st.jobs.get_mut(&id)?;
+        if job.state.is_terminal() {
+            return Some(false);
+        }
+        job.state = JobState::Cancelled;
+        job.finished_s = Some(clock);
+        job.slo_met = Some(false);
+        st.stats.cancelled += 1;
+        drop(st);
+        self.inner.wake.notify_all();
+        Some(true)
+    }
+
+    /// Snapshot one job.
+    pub fn job_status(&self, id: u64) -> Option<JobStatus> {
+        self.inner.state.lock().unwrap().jobs.get(&id).map(Job::status)
+    }
+
+    /// Snapshot every tracked job, in submission order.
+    pub fn jobs(&self) -> Vec<JobStatus> {
+        self.inner.state.lock().unwrap().jobs.values().map(Job::status).collect()
+    }
+
+    /// Aggregate counters and recent epoch records (clones the full record
+    /// ring — use [`counters`](Self::counters) on hot paths).
+    pub fn stats(&self) -> SchedulerStats {
+        self.inner.state.lock().unwrap().stats.clone()
+    }
+
+    /// The counters alone, with the epoch-record ring left empty — what
+    /// liveness probes (the serve `ping` op) need, without cloning up to
+    /// 1024 records under the scheduler lock per call.
+    pub fn counters(&self) -> SchedulerStats {
+        let st = self.inner.state.lock().unwrap();
+        let s = &st.stats;
+        SchedulerStats {
+            submitted: s.submitted,
+            completed: s.completed,
+            cancelled: s.cancelled,
+            failed: s.failed,
+            epochs: s.epochs,
+            resolves: s.resolves,
+            warm_reuses: s.warm_reuses,
+            first_model_error: s.first_model_error,
+            last_model_error: s.last_model_error,
+            records: Vec::new(),
+        }
+    }
+
+    /// The cluster-virtual clock (sum of epoch makespans so far).
+    pub fn clock(&self) -> f64 {
+        self.inner.state.lock().unwrap().clock
+    }
+
+    /// Stop the epoch thread at the next boundary. Queued/running jobs stay
+    /// in their current state; further submits fail.
+    pub fn shutdown(&self) {
+        self.inner.state.lock().unwrap().shutdown = true;
+        self.inner.wake.notify_all();
+    }
+}
+
+/// What the epoch thread pulls out of the shared state to plan one epoch.
+struct PlanInput {
+    /// `(job id, task index)` aligned with `tasks`/`bases`.
+    keys: Vec<(u64, usize)>,
+    /// Remaining work as a workload (n_sims = remaining per task).
+    tasks: Vec<OptionTask>,
+    bases: Vec<u64>,
+    /// Tightest remaining deadline slack across admitted deadline jobs.
+    deadline_slack: Option<f64>,
+    /// Sum of remaining budgets when EVERY admitted job is budget-SLO'd.
+    budget_cap: Option<f64>,
+}
+
+/// The warm incumbent carried across epochs.
+struct Warm {
+    keys: Vec<(u64, usize)>,
+    alloc: Allocation,
+    /// Throughput snapshot of the solve that produced `alloc`.
+    throughput: Vec<f64>,
+    /// The batch budget cap the solve saw (None = unconstrained batch).
+    budget_cap: Option<f64>,
+}
+
+/// Whether the warm incumbent's budget context still covers the batch:
+/// unconstrained stays unconstrained, and a depleting all-budget cap may
+/// shrink by at most `tolerance` (relative) before a re-solve under the
+/// current remaining budgets is forced.
+fn budget_still_covered(warm: Option<f64>, current: Option<f64>, tolerance: f64) -> bool {
+    match (warm, current) {
+        (None, None) => true,
+        (Some(w), Some(c)) => c >= w * (1.0 - tolerance),
+        _ => false,
+    }
+}
+
+fn epoch_loop<F>(inner: Arc<Inner>, make_partitioner: F)
+where
+    F: FnOnce() -> Result<Box<dyn Partitioner>>,
+{
+    let partitioner = match make_partitioner() {
+        Ok(p) => p,
+        Err(e) => {
+            // Record the fatal error for future submits AND fail any job
+            // that slipped in while the factory was still running — nothing
+            // will ever execute them, so leaving them Queued would hang
+            // every status poller.
+            let msg = format!("scheduler partitioner failed to build: {e}");
+            let mut st = inner.state.lock().unwrap();
+            let clock = st.clock;
+            let mut failed = 0u64;
+            for job in st.jobs.values_mut() {
+                if !job.state.is_terminal() {
+                    job.state = JobState::Failed(msg.clone());
+                    job.finished_s = Some(clock);
+                    job.slo_met = Some(false);
+                    failed += 1;
+                }
+            }
+            st.stats.failed += failed;
+            st.fatal = Some(e);
+            return;
+        }
+    };
+    let specs = inner.cluster.specs();
+    let cost_models: Vec<CostModel> = specs.iter().map(|s| s.cost_model()).collect();
+    let platform_names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+    let mut fit = OnlineLatencyFit::new(inner.priors.clone(), inner.cfg.refit_window);
+    let mut warm: Option<Warm> = None;
+    let mut stalled = 0usize;
+
+    loop {
+        // ── Phase 1: wait for runnable work, admit arrivals. ────────────
+        let input = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                admit(&mut st, inner.cfg.max_in_flight);
+                let runnable = st.jobs.values().any(|j| {
+                    j.state == JobState::Running && j.tasks.iter().any(|t| t.remaining > 0)
+                });
+                if runnable {
+                    break;
+                }
+                st = inner.wake.wait(st).unwrap();
+            }
+            collect_plan_input(&st)
+        };
+        if input.tasks.is_empty() {
+            continue;
+        }
+
+        // ── Phase 2: refreshed models for the batch. ────────────────────
+        let tau = input.tasks.len();
+        let mu = inner.cluster.len();
+        let mut latency = Vec::with_capacity(mu * tau);
+        for i in 0..mu {
+            for t in &input.tasks {
+                latency.push(fit.model(i, t.flops_per_path()));
+            }
+        }
+        let models = ModelSet::new(
+            latency,
+            cost_models.clone(),
+            input.tasks.iter().map(|t| t.n_sims).collect(),
+            platform_names.clone(),
+        );
+
+        // ── Phase 3: warm-reuse or re-solve. ────────────────────────────
+        let snapshot = fit.snapshot();
+        // The incumbent survives task completions (its columns project
+        // onto the surviving keys) but not new arrivals.
+        let projected = warm.as_ref().and_then(|w| project_warm(w, &input.keys));
+        let warm_pred = projected.as_ref().map(|a| models.makespan(a));
+        let reuse_ok = warm
+            .as_ref()
+            .map(|w| {
+                fit.drift(&w.throughput) <= inner.cfg.resolve_drift
+                    && budget_still_covered(
+                        w.budget_cap,
+                        input.budget_cap,
+                        inner.cfg.resolve_drift,
+                    )
+            })
+            .unwrap_or(false);
+        let (alloc, budget, resolved, predicted) = match (projected, warm_pred, reuse_ok) {
+            (Some(a), Some(pred), true) => {
+                let budget = warm.as_ref().and_then(|w| w.budget_cap);
+                (a, budget, false, pred)
+            }
+            _ => match plan_allocation(partitioner.as_ref(), &models, &input) {
+                Ok((alloc, budget)) => {
+                    let pred = models.makespan(&alloc);
+                    warm = Some(Warm {
+                        keys: input.keys.clone(),
+                        alloc: alloc.clone(),
+                        throughput: snapshot,
+                        budget_cap: input.budget_cap,
+                    });
+                    (alloc, budget, true, pred)
+                }
+                Err(e) => {
+                    fail_running_jobs(&inner, &format!("epoch solve failed: {e}"));
+                    warm = None;
+                    continue;
+                }
+            },
+        };
+
+        // ── Phase 4: execute one epoch. ─────────────────────────────────
+        let workload = Workload::new(input.tasks.clone());
+        let mut exec_cfg = inner.exec.clone();
+        exec_cfg.chunk_sims = epoch_chunk_cap(&inner.exec, &models, inner.cfg.epoch_secs);
+        let mut err_sum = 0.0f64;
+        let mut err_n = 0usize;
+        let outcome = {
+            let fit = &mut fit;
+            let models_ref = &models;
+            let workload_ref = &workload;
+            execute_epoch(
+                &inner.cluster,
+                workload_ref,
+                &alloc,
+                &exec_cfg,
+                Some(models_ref),
+                EpochCtx { halt_secs: inner.cfg.epoch_secs, base_offsets: &input.bases },
+                &mut |ev| {
+                    if let ExecEvent::ChunkDone {
+                        platform, task, n, latency_secs, cold, ..
+                    } = ev
+                    {
+                        let m = models_ref.model(*platform, *task);
+                        let setup = if *cold { m.gamma } else { 0.0 };
+                        let predicted = m.beta * *n as f64 + setup;
+                        if *latency_secs > 0.0 {
+                            err_sum += (predicted - latency_secs).abs() / latency_secs;
+                            err_n += 1;
+                        }
+                        // Work-only throughput sample. A cold chunk whose
+                        // measured latency is below the *modelled* setup
+                        // carries no usable work signal (the true setup is
+                        // itself noisy) — observe() drops the non-positive
+                        // sample instead of us clamping it into a bogus
+                        // near-infinite throughput.
+                        let flops = workload_ref.tasks[*task].flops_per_path() * *n as f64;
+                        fit.observe(*platform, flops, latency_secs - setup);
+                    }
+                },
+            )
+        };
+        let outcome = match outcome {
+            Ok(o) => o,
+            Err(e) => {
+                fail_running_jobs(&inner, &format!("epoch execution failed: {e}"));
+                warm = None;
+                continue;
+            }
+        };
+
+        // ── Phase 5: apply the epoch's results. ─────────────────────────
+        let epoch_done: u64 = outcome.done_sims.iter().sum();
+        let model_error = if err_n > 0 { err_sum / err_n as f64 } else { 0.0 };
+        let mut st = inner.state.lock().unwrap();
+        let clock_before = st.clock;
+        st.clock += outcome.exec.makespan_secs;
+        let clock_after = st.clock;
+
+        // Attribute the epoch's bill by executed work.
+        let total_flops: f64 = outcome
+            .done_sims
+            .iter()
+            .zip(&input.tasks)
+            .map(|(&d, t)| d as f64 * t.flops_per_path())
+            .sum();
+        for (slot, (&(job_id, task_idx), &done)) in
+            input.keys.iter().zip(&outcome.done_sims).enumerate()
+        {
+            let requested = input.tasks[slot].n_sims;
+            let share = if total_flops > 0.0 {
+                done as f64 * input.tasks[slot].flops_per_path() / total_flops
+            } else {
+                0.0
+            };
+            let Some(job) = st.jobs.get_mut(&job_id) else { continue };
+            if job.state != JobState::Running {
+                continue; // cancelled (or failed) mid-epoch: drop the results
+            }
+            let jt = &mut job.tasks[task_idx];
+            jt.remaining = jt.remaining.saturating_sub(done);
+            jt.cursor += requested;
+            jt.stats = jt.stats.merge(&outcome.stats[slot]);
+            job.sims_done += done;
+            job.cost += outcome.exec.cost * share;
+        }
+        // Per-job bookkeeping: epochs, predictions, completion, SLOs.
+        // Keys are grouped per job (collect_plan_input walks jobs in id
+        // order), so dedup over the consecutive run is exact.
+        let mut participant_ids: Vec<u64> =
+            input.keys.iter().map(|&(id, _)| id).collect();
+        participant_ids.dedup();
+        for id in &participant_ids {
+            let Some(job) = st.jobs.get_mut(id) else { continue };
+            if job.state != JobState::Running {
+                continue;
+            }
+            job.epochs += 1;
+            job.predicted_finish_s = Some(clock_before + predicted);
+            if job.tasks.iter().all(|t| t.remaining == 0) {
+                job.state = JobState::Done;
+                job.finished_s = Some(clock_after);
+                job.slo_met = Some(match job.slo {
+                    Slo::Deadline(d) => clock_after - job.arrival_s <= d + 1e-9,
+                    Slo::Budget(b) => job.cost <= b + 1e-9,
+                });
+                st.stats.completed += 1;
+            }
+        }
+        // Stall guard: epochs that complete nothing, repeatedly, mean the
+        // cluster cannot make progress (e.g. everything preempted).
+        if epoch_done == 0 {
+            stalled += 1;
+        } else {
+            stalled = 0;
+        }
+        if stalled >= MAX_STALLED_EPOCHS {
+            let msg = format!("no progress in {MAX_STALLED_EPOCHS} consecutive epochs");
+            let clock = st.clock;
+            let mut failed = 0u64;
+            for job in st.jobs.values_mut() {
+                if job.state == JobState::Running {
+                    job.state = JobState::Failed(msg.clone());
+                    job.finished_s = Some(clock);
+                    job.slo_met = Some(false);
+                    failed += 1;
+                }
+            }
+            st.stats.failed += failed;
+            stalled = 0;
+            warm = None;
+        }
+        // Epoch record + counters.
+        st.stats.epochs += 1;
+        if resolved {
+            st.stats.resolves += 1;
+        } else {
+            st.stats.warm_reuses += 1;
+        }
+        if st.stats.first_model_error.is_none() && err_n > 0 {
+            st.stats.first_model_error = Some(model_error);
+        }
+        if err_n > 0 {
+            st.stats.last_model_error = Some(model_error);
+        }
+        let record = EpochRecord {
+            epoch: st.stats.epochs,
+            jobs: participant_ids.len(),
+            tasks: tau,
+            resolved,
+            budget,
+            warm_makespan_s: warm_pred,
+            predicted_makespan_s: predicted,
+            measured_epoch_s: outcome.exec.makespan_secs,
+            epoch_cost: outcome.exec.cost,
+            model_error,
+        };
+        st.stats.records.push(record);
+        if st.stats.records.len() > MAX_EPOCH_RECORDS {
+            st.stats.records.remove(0);
+        }
+    }
+}
+
+/// Admit queued jobs while in-flight slots are free (submission order).
+fn admit(st: &mut SchedState, max_in_flight: usize) {
+    let mut running =
+        st.jobs.values().filter(|j| j.state == JobState::Running).count();
+    let queued: Vec<u64> = st
+        .jobs
+        .values()
+        .filter(|j| j.state == JobState::Queued)
+        .map(|j| j.id)
+        .collect();
+    for id in queued {
+        if running >= max_in_flight {
+            break;
+        }
+        st.jobs.get_mut(&id).unwrap().state = JobState::Running;
+        running += 1;
+    }
+}
+
+/// Gather the epoch batch: every running job's remaining tasks, plus the
+/// SLO aggregates the budget policy needs.
+fn collect_plan_input(st: &SchedState) -> PlanInput {
+    let mut keys = Vec::new();
+    let mut tasks = Vec::new();
+    let mut bases = Vec::new();
+    let mut deadline_slack: Option<f64> = None;
+    let mut budget_cap = Some(0.0f64);
+    for job in st.jobs.values() {
+        if job.state != JobState::Running {
+            continue;
+        }
+        match job.slo {
+            Slo::Deadline(d) => {
+                let slack = d - (st.clock - job.arrival_s);
+                deadline_slack =
+                    Some(deadline_slack.map_or(slack, |s: f64| s.min(slack)));
+                budget_cap = None; // mixed batch: budgets no longer cover it
+            }
+            Slo::Budget(b) => {
+                if let Some(cap) = budget_cap.as_mut() {
+                    *cap += (b - job.cost).max(0.0);
+                }
+            }
+        }
+        for (k, jt) in job.tasks.iter().enumerate() {
+            if jt.remaining == 0 {
+                continue;
+            }
+            let mut task = jt.task.clone();
+            task.n_sims = jt.remaining;
+            keys.push((job.id, k));
+            tasks.push(task);
+            bases.push(jt.cursor);
+        }
+    }
+    PlanInput { keys, tasks, bases, deadline_slack, budget_cap }
+}
+
+/// Project the warm incumbent onto the current key set: identical key
+/// lists reuse the allocation verbatim; a *shrunken* set (tasks completed)
+/// keeps the surviving columns (each still sums to 1); any new key means
+/// the incumbent cannot cover the batch (`None` ⇒ re-solve).
+fn project_warm(w: &Warm, keys: &[(u64, usize)]) -> Option<Allocation> {
+    if w.keys == keys {
+        return Some(w.alloc.clone());
+    }
+    let cols: Option<Vec<usize>> = keys
+        .iter()
+        .map(|k| w.keys.iter().position(|wk| wk == k))
+        .collect();
+    let cols = cols?;
+    let mu = w.alloc.n_platforms();
+    let mut a = Allocation::zero(mu, cols.len());
+    for (j_new, &j_old) in cols.iter().enumerate() {
+        for i in 0..mu {
+            a.set(i, j_new, w.alloc.get(i, j_old));
+        }
+    }
+    Some(a)
+}
+
+/// The epoch budget policy: deadline jobs buy speed, budget jobs buy
+/// thrift.
+///
+/// - Any deadline job with slack under twice the unconstrained remaining
+///   makespan ⇒ run unconstrained (minimum makespan);
+/// - an all-budget batch ⇒ solve under the sum of remaining budgets
+///   (falling back to unconstrained when that is infeasible);
+/// - otherwise unconstrained.
+fn plan_allocation(
+    partitioner: &dyn Partitioner,
+    models: &ModelSet,
+    input: &PlanInput,
+) -> Result<(Allocation, Option<f64>)> {
+    let alloc_u = partitioner.partition(models, None)?;
+    let makespan_u = models.makespan(&alloc_u);
+    let tight = input
+        .deadline_slack
+        .map(|s| s < 2.0 * makespan_u)
+        .unwrap_or(false);
+    if !tight {
+        if let Some(cap) = input.budget_cap {
+            if cap > 0.0 {
+                if let Ok(a) = partitioner.partition(models, Some(cap)) {
+                    return Ok((a, Some(cap)));
+                }
+            }
+        }
+    }
+    Ok((alloc_u, None))
+}
+
+/// Mark every running job failed (epoch-level solver/executor breakdowns).
+fn fail_running_jobs(inner: &Inner, msg: &str) {
+    let mut st = inner.state.lock().unwrap();
+    let clock = st.clock;
+    let mut failed = 0u64;
+    for job in st.jobs.values_mut() {
+        if job.state == JobState::Running {
+            job.state = JobState::Failed(msg.to_string());
+            job.finished_s = Some(clock);
+            job.slo_met = Some(false);
+            failed += 1;
+        }
+    }
+    st.stats.failed += failed;
+}
+
+/// Chunks must be fine enough for the epoch boundary to bite on EVERY
+/// lane: cap one chunk at ~1/8 of the epoch on the *slowest* (platform,
+/// task) pairing, inside the configured `chunk_sims`. Sizing from the
+/// fastest pairing instead would let a single chunk occupy a slow lane for
+/// many whole epochs (Table II throughputs span two orders of magnitude),
+/// making the boundary — and with it cancellation and re-planning —
+/// unenforceable on exactly the lanes that need it most.
+fn epoch_chunk_cap(exec: &ExecutorConfig, models: &ModelSet, epoch_secs: f64) -> u64 {
+    let mut max_beta = 0.0f64;
+    for i in 0..models.mu {
+        for j in 0..models.tau {
+            max_beta = max_beta.max(models.model(i, j).beta);
+        }
+    }
+    let cap = if max_beta.is_finite() && max_beta > 0.0 {
+        ((epoch_secs / 8.0) / max_beta).max(1.0).min(u64::MAX as f64) as u64
+    } else {
+        u64::MAX
+    };
+    let base = if exec.chunk_sims == 0 { u64::MAX } else { exec.chunk_sims };
+    base.min(cap).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::HeuristicPartitioner;
+    use crate::models::online::PlatformPrior;
+    use crate::platforms::sim::SimConfig;
+    use crate::platforms::spec::small_cluster;
+    use std::time::{Duration, Instant};
+
+    fn cluster() -> Cluster {
+        Cluster::simulated(&small_cluster(), &SimConfig::exact(), 21).unwrap()
+    }
+
+    fn priors(cluster: &Cluster) -> Vec<PlatformPrior> {
+        cluster
+            .specs()
+            .iter()
+            .map(|s| PlatformPrior {
+                throughput_flops: s.app_gflops.max(1e-9) * 1e9,
+                setup_secs: s.setup_secs,
+            })
+            .collect()
+    }
+
+    fn start(cfg: SchedulerConfig) -> OnlineScheduler {
+        let c = cluster();
+        let p = priors(&c);
+        OnlineScheduler::start(c, p, ExecutorConfig::default(), cfg, || {
+            Ok(Box::new(HeuristicPartitioner::default()))
+        })
+        .unwrap()
+    }
+
+    fn wait_terminal(s: &OnlineScheduler, id: u64) -> JobStatus {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let st = s.job_status(id).expect("job tracked");
+            if st.state.is_terminal() {
+                return st;
+            }
+            assert!(Instant::now() < deadline, "job {id} never finished: {st:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn job_spec_validation() {
+        assert!(JobSpec::new(vec![], Slo::Deadline(10.0)).is_err());
+        let ok = JobSpec::generate(Some(Payoff::Asian), 2, 0.05, 3, Slo::Budget(5.0)).unwrap();
+        assert_eq!(ok.tasks.len(), 2);
+        assert!(ok.tasks.iter().all(|t| t.payoff == Payoff::Asian));
+        // Bad SLOs are workload errors.
+        let e = JobSpec::generate(None, 1, 0.05, 3, Slo::Deadline(-1.0)).unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        let e = JobSpec::generate(None, 1, 0.05, 3, Slo::Budget(f64::NAN)).unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        // Bad generator parameters surface too.
+        assert!(JobSpec::generate(None, 0, 0.05, 3, Slo::Budget(1.0)).is_err());
+    }
+
+    #[test]
+    fn scheduler_config_validation() {
+        assert!(SchedulerConfig::default().validate().is_ok());
+        let bad = SchedulerConfig { epoch_secs: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SchedulerConfig { max_in_flight: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SchedulerConfig { resolve_drift: -1.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn single_job_completes_and_prices() {
+        let s = start(SchedulerConfig { enabled: true, ..Default::default() });
+        let job = JobSpec::generate(None, 3, 0.05, 11, Slo::Deadline(1e9)).unwrap();
+        let id = s.submit(job).unwrap();
+        let st = wait_terminal(&s, id);
+        assert_eq!(st.state, JobState::Done);
+        assert_eq!(st.slo_met, Some(true));
+        assert_eq!(st.sims_done, st.sims_total);
+        assert!(st.cost > 0.0);
+        assert!(st.finished_s.unwrap() > 0.0);
+        assert!(st.prices.iter().all(Option::is_some));
+        let stats = s.stats();
+        assert!(stats.epochs >= 1);
+        assert_eq!(stats.completed, 1);
+        // Unknown ids are None; cancel after completion is Some(false).
+        assert!(s.job_status(999).is_none());
+        assert_eq!(s.cancel(id), Some(false));
+        assert_eq!(s.cancel(999), None);
+        s.shutdown();
+        assert!(s.submit(JobSpec::generate(None, 1, 0.05, 1, Slo::Budget(1.0)).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn epoch_chunk_cap_scales_with_models() {
+        let c = cluster();
+        let w = crate::workload::generate(&crate::workload::GeneratorConfig::small(2, 0.05, 1));
+        let m = crate::coordinator::ModelSet::from_specs(&c.specs(), &w);
+        let exec = ExecutorConfig::default();
+        let cap = epoch_chunk_cap(&exec, &m, 100.0);
+        assert!(cap >= 1);
+        assert!(cap <= exec.chunk_sims);
+        // A tiny epoch forces tiny chunks.
+        let tiny = epoch_chunk_cap(&exec, &m, 1e-6);
+        assert!(tiny < cap);
+    }
+}

@@ -32,6 +32,14 @@
 //! - Service mode: `cloudshapes serve` speaks the versioned
 //!   [`api::protocol`] (`{"v":1,"op":...}`) over newline-delimited
 //!   JSON/TCP, with structured error payloads.
+//! - Online mode: `serve --scheduler` admits pricing jobs continuously —
+//!   the [`coordinator::scheduler`] re-optimises the allocation every
+//!   epoch and re-fits latency models from measured chunk latencies
+//!   ([`models::online`]).
+//!
+//! Prose documentation lives in `docs/`: `ARCHITECTURE.md` (module map +
+//! paper cross-reference), `PROTOCOL.md` (the full wire reference) and
+//! `CONFIG.md` (every TOML key).
 //!
 //! ## Layers
 //!

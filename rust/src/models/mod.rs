@@ -1,13 +1,17 @@
 //! Predictive runtime-characteristic models (§III.A of the paper):
-//! latency `L(N) = βN + γ`, quantised IaaS cost `C = ⌈L/ρ⌉π`, and the
-//! TCO-based rate derivation for devices without market prices (Eq. 2).
+//! latency `L(N) = βN + γ`, quantised IaaS cost `C = ⌈L/ρ⌉π`, the
+//! TCO-based rate derivation for devices without market prices (Eq. 2),
+//! and [`online`] incremental re-fitting of the latency models from
+//! latencies measured while a long-running scheduler executes.
 
 pub mod cost;
 pub mod latency;
+pub mod online;
 pub mod tco;
 
 pub use cost::CostModel;
 pub use latency::LatencyModel;
+pub use online::{OnlineLatencyFit, PlatformPrior};
 pub use tco::{DatacentreModel, TcoInputs};
 
 /// The latency + cost models of one (task, platform) pairing, the unit the

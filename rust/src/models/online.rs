@@ -1,0 +1,214 @@
+//! Incremental latency-model re-fitting from observed chunk latencies.
+//!
+//! The §III.A benchmark fits latency models once, up front. A long-running
+//! scheduler keeps receiving *measured* chunk latencies from the executor's
+//! event stream; this module folds them into per-platform throughput
+//! estimates so the next epoch solves against what the platforms are
+//! actually doing (a hidden straggler, a noisy neighbour) rather than what
+//! the benchmark saw.
+//!
+//! [`OnlineLatencyFit`] keeps a bounded window of work samples per
+//! platform. The throughput estimate is total work over total time across
+//! the window — the work-weighted harmonic mean, which is robust to mixed
+//! chunk sizes — and it degrades gracefully to the prior while a platform
+//! has produced too few samples to trust.
+
+use std::collections::VecDeque;
+
+use crate::models::LatencyModel;
+
+/// Per-platform prior the fit falls back to before observations arrive:
+/// effective throughput (FLOP/s) and per-stream setup seconds, usually
+/// derived from the benchmark-fitted models.
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformPrior {
+    /// Effective application throughput, FLOP/s.
+    pub throughput_flops: f64,
+    /// Per-(platform, task)-stream setup seconds (the γ term).
+    pub setup_secs: f64,
+}
+
+/// Fewest window samples before the windowed estimate replaces the prior.
+const MIN_SAMPLES: usize = 2;
+
+/// Windowed per-platform throughput re-fit.
+#[derive(Debug, Clone)]
+pub struct OnlineLatencyFit {
+    /// Samples kept per platform; 0 disables re-fitting entirely (the
+    /// priors are then authoritative forever).
+    window: usize,
+    priors: Vec<PlatformPrior>,
+    /// Per-platform ring of `(work_flops, work_secs)` observations.
+    samples: Vec<VecDeque<(f64, f64)>>,
+}
+
+impl OnlineLatencyFit {
+    /// A fit seeded with one prior per platform. Priors must carry positive
+    /// finite throughput (asserted: they come from fitted or nominal
+    /// models, both of which guarantee it).
+    pub fn new(priors: Vec<PlatformPrior>, window: usize) -> OnlineLatencyFit {
+        for (i, p) in priors.iter().enumerate() {
+            assert!(
+                p.throughput_flops > 0.0 && p.throughput_flops.is_finite(),
+                "platform {i}: non-positive prior throughput {}",
+                p.throughput_flops
+            );
+            assert!(
+                p.setup_secs >= 0.0 && p.setup_secs.is_finite(),
+                "platform {i}: invalid prior setup {}",
+                p.setup_secs
+            );
+        }
+        let samples = priors.iter().map(|_| VecDeque::new()).collect();
+        OnlineLatencyFit { window, priors, samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.priors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.priors.is_empty()
+    }
+
+    /// Record one successful chunk: `flops` of work observed to take `secs`
+    /// of *work time* (callers subtract the setup γ from cold chunks).
+    /// Non-positive or non-finite samples are ignored rather than poisoning
+    /// the window.
+    pub fn observe(&mut self, platform: usize, flops: f64, secs: f64) {
+        if self.window == 0 {
+            return;
+        }
+        if !(flops > 0.0 && flops.is_finite() && secs > 0.0 && secs.is_finite()) {
+            return;
+        }
+        let ring = &mut self.samples[platform];
+        ring.push_back((flops, secs));
+        while ring.len() > self.window {
+            ring.pop_front();
+        }
+    }
+
+    /// Current throughput estimate for `platform`, FLOP/s: windowed when
+    /// enough samples exist, the prior otherwise.
+    pub fn throughput(&self, platform: usize) -> f64 {
+        let ring = &self.samples[platform];
+        if ring.len() < MIN_SAMPLES {
+            return self.priors[platform].throughput_flops;
+        }
+        let (flops, secs) = ring
+            .iter()
+            .fold((0.0f64, 0.0f64), |(f, s), (df, ds)| (f + df, s + ds));
+        if secs > 0.0 {
+            flops / secs
+        } else {
+            self.priors[platform].throughput_flops
+        }
+    }
+
+    /// The (prior) per-stream setup estimate for `platform`, seconds.
+    pub fn setup_secs(&self, platform: usize) -> f64 {
+        self.priors[platform].setup_secs
+    }
+
+    /// Latency model for a task with `flops_per_path` FLOPs per simulated
+    /// path on `platform`, under the current throughput estimate.
+    pub fn model(&self, platform: usize, flops_per_path: f64) -> LatencyModel {
+        let beta = (flops_per_path / self.throughput(platform)).max(1e-15);
+        LatencyModel::new(beta, self.setup_secs(platform))
+    }
+
+    /// All current throughputs — snapshot this at solve time, then compare
+    /// with [`drift`](Self::drift) to decide when a re-solve is due.
+    pub fn snapshot(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| self.throughput(i)).collect()
+    }
+
+    /// Largest relative throughput shift of any platform vs a prior
+    /// [`snapshot`](Self::snapshot) (0.0 = models unchanged).
+    pub fn drift(&self, snapshot: &[f64]) -> f64 {
+        debug_assert_eq!(snapshot.len(), self.len());
+        (0..self.len())
+            .map(|i| {
+                let then = snapshot[i].max(1e-15);
+                (self.throughput(i) / then - 1.0).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn priors() -> Vec<PlatformPrior> {
+        vec![
+            PlatformPrior { throughput_flops: 1e9, setup_secs: 2.0 },
+            PlatformPrior { throughput_flops: 4e9, setup_secs: 0.5 },
+        ]
+    }
+
+    #[test]
+    fn falls_back_to_prior_until_samples_arrive() {
+        let mut fit = OnlineLatencyFit::new(priors(), 8);
+        assert_eq!(fit.throughput(0), 1e9);
+        fit.observe(0, 1e9, 2.0); // one sample is not enough
+        assert_eq!(fit.throughput(0), 1e9);
+        fit.observe(0, 1e9, 2.0);
+        assert!((fit.throughput(0) - 5e8).abs() / 5e8 < 1e-12);
+        // Platform 1 untouched.
+        assert_eq!(fit.throughput(1), 4e9);
+    }
+
+    #[test]
+    fn window_bounds_memory_and_tracks_drift() {
+        let mut fit = OnlineLatencyFit::new(priors(), 4);
+        // Fill with on-prior samples, then shift to half speed: the window
+        // forgets the old regime.
+        for _ in 0..4 {
+            fit.observe(0, 1e9, 1.0);
+        }
+        let snap = fit.snapshot();
+        assert!((fit.throughput(0) - 1e9).abs() < 1.0);
+        for _ in 0..4 {
+            fit.observe(0, 1e9, 2.0);
+        }
+        assert!((fit.throughput(0) - 5e8).abs() < 1.0);
+        assert!((fit.drift(&snap) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_zero_disables_refit() {
+        let mut fit = OnlineLatencyFit::new(priors(), 0);
+        for _ in 0..10 {
+            fit.observe(0, 1e9, 10.0);
+        }
+        assert_eq!(fit.throughput(0), 1e9);
+        assert_eq!(fit.drift(&fit.snapshot()), 0.0);
+    }
+
+    #[test]
+    fn bad_samples_are_ignored() {
+        let mut fit = OnlineLatencyFit::new(priors(), 4);
+        fit.observe(0, -1.0, 1.0);
+        fit.observe(0, 1.0, 0.0);
+        fit.observe(0, f64::NAN, 1.0);
+        fit.observe(0, 1.0, f64::INFINITY);
+        assert_eq!(fit.throughput(0), 1e9);
+    }
+
+    #[test]
+    fn models_scale_with_observed_throughput() {
+        let mut fit = OnlineLatencyFit::new(priors(), 4);
+        let before = fit.model(0, 1000.0);
+        assert!((before.beta - 1e-6).abs() < 1e-15);
+        assert_eq!(before.gamma, 2.0);
+        // A 5x straggler doubles nothing but beta.
+        for _ in 0..4 {
+            fit.observe(0, 1e9, 5.0);
+        }
+        let after = fit.model(0, 1000.0);
+        assert!((after.beta - 5e-6).abs() < 1e-12);
+        assert_eq!(after.gamma, 2.0);
+    }
+}

@@ -68,8 +68,9 @@ impl Manifest {
             let get_u64 =
                 |k: &str| v.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("variant missing '{k}'"));
             let payoff_name = get_str("payoff")?;
-            let payoff = Payoff::from_name(&payoff_name)
-                .ok_or_else(|| anyhow!("unknown payoff '{payoff_name}'"))?;
+            let payoff = Payoff::from_name(&payoff_name).ok_or_else(|| {
+                anyhow!("unknown payoff '{payoff_name}' (valid: {})", Payoff::NAMES.join(", "))
+            })?;
             variants.push(Variant {
                 name: get_str("name")?,
                 payoff,

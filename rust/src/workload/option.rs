@@ -23,12 +23,39 @@ impl Payoff {
         }
     }
 
+    /// Every payoff family name, in declaration order.
+    pub const NAMES: [&'static str; 3] = ["european", "asian", "barrier"];
+
     pub fn from_name(s: &str) -> Option<Payoff> {
         match s {
             "european" => Some(Payoff::European),
             "asian" => Some(Payoff::Asian),
             "barrier" => Some(Payoff::Barrier),
             _ => None,
+        }
+    }
+
+    /// As [`from_name`](Payoff::from_name), but unknown names surface as a
+    /// typed [`CloudshapesError::Workload`] listing the valid families —
+    /// use this at config-parse and wire boundaries instead of silently
+    /// dropping the `None`.
+    pub fn parse(s: &str) -> crate::api::error::Result<Payoff> {
+        Payoff::from_name(s).ok_or_else(|| {
+            CloudshapesError::workload(format!(
+                "unknown payoff '{s}' (valid: {})",
+                Payoff::NAMES.join(", ")
+            ))
+        })
+    }
+
+    /// The generator mix weights that select exactly this family — shared
+    /// by every "single-payoff workload" surface (`[workload] payoff`, the
+    /// serve `submit` op) so the mapping lives in one place.
+    pub fn one_hot_mix(&self) -> (f64, f64, f64) {
+        match self {
+            Payoff::European => (1.0, 0.0, 0.0),
+            Payoff::Asian => (0.0, 1.0, 0.0),
+            Payoff::Barrier => (0.0, 0.0, 1.0),
         }
     }
 
@@ -182,8 +209,20 @@ mod tests {
     fn payoff_names_roundtrip() {
         for p in [Payoff::European, Payoff::Asian, Payoff::Barrier] {
             assert_eq!(Payoff::from_name(p.name()), Some(p));
+            assert_eq!(Payoff::parse(p.name()).unwrap(), p);
+            assert!(Payoff::NAMES.contains(&p.name()));
         }
         assert_eq!(Payoff::from_name("swaption"), None);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names_with_a_typed_error() {
+        let e = Payoff::parse("swaption").unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        for name in Payoff::NAMES {
+            assert!(e.message().contains(name), "error must list '{name}': {e}");
+        }
+        assert!(e.message().contains("swaption"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the markdown docs.
+
+Scans the given markdown files (default: docs/*.md and rust/README.md) for
+inline links/images `[text](target)` and verifies that every RELATIVE
+target resolves to an existing file or directory, relative to the file the
+link appears in. External links (scheme://, mailto:) and pure in-page
+anchors (#...) are skipped; `path#anchor` targets are checked for the path
+part only. Exits non-zero listing every broken link, so docs rot fails CI.
+"""
+
+import glob
+import os
+import re
+import sys
+
+# Inline markdown links/images, excluding ``` fenced blocks handled below.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_RE = re.compile(r"^(?:[a-zA-Z][a-zA-Z0-9+.-]*:|#)")
+
+
+def iter_links(path):
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for match in LINK_RE.finditer(line):
+                yield lineno, match.group(1)
+
+
+def check(paths):
+    broken = []
+    checked = 0
+    for path in paths:
+        base = os.path.dirname(os.path.abspath(path))
+        for lineno, target in iter_links(path):
+            if SKIP_RE.match(target):
+                continue
+            checked += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                broken.append(f"{path}:{lineno}: broken link '{target}' -> {resolved}")
+    return checked, broken
+
+
+def main(argv):
+    paths = argv[1:] or sorted(glob.glob("docs/*.md")) + ["rust/README.md"]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        for p in missing:
+            print(f"missing input file: {p}", file=sys.stderr)
+        return 2
+    checked, broken = check(paths)
+    for b in broken:
+        print(b, file=sys.stderr)
+    print(f"checked {checked} relative links across {len(paths)} files: "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
