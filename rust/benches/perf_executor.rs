@@ -12,9 +12,10 @@ mod common;
 use std::sync::Arc;
 
 use cloudshapes::coordinator::executor::{
-    execute, execute_static, execute_with, ExecutorConfig, RebalanceConfig,
+    execute, execute_static, execute_with, ExecEvent, ExecutorConfig, RebalanceConfig,
 };
 use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet};
+use cloudshapes::obs::{self, MetricsRegistry};
 use cloudshapes::platforms::spec::{paper_cluster, small_cluster};
 use cloudshapes::platforms::{Cluster, Platform, SimConfig, SimPlatform};
 use cloudshapes::pricing::mc;
@@ -81,6 +82,32 @@ fn main() {
         rc.chunks,
         rc.chunks as f64 / wall_chunked
     );
+
+    // Telemetry overhead gate: the same chunked run with every profiling
+    // hook live (per-chunk latency + model-error histograms into an enabled
+    // registry) must stay within 2% of the bare event loop, modulo a small
+    // absolute floor for timer noise. Runs in --smoke too, so CI enforces
+    // the budget on every push.
+    println!("\n== perf: telemetry overhead gate ==");
+    let gate_runs = runs.max(3);
+    let wall_base = common::measure("execute: chunked, hooks off", gate_runs, || {
+        let rep = execute(&cluster, &workload, &alloc, &chunked_cfg).unwrap();
+        assert_eq!(rep.failures, 0);
+    });
+    let reg = Arc::new(MetricsRegistry::default());
+    let wall_instr = common::measure("execute: chunked, hooks on", gate_runs, || {
+        let hooks = &mut |ev: &ExecEvent| obs::record_exec_event(&reg, Some(&models), ev);
+        let rep = execute_with(&cluster, &workload, &alloc, &chunked_cfg, Some(&models), hooks)
+            .unwrap();
+        assert_eq!(rep.failures, 0);
+    });
+    let overhead_pct = (wall_instr / wall_base - 1.0) * 100.0;
+    println!("[perf] telemetry overhead: {overhead_pct:+.2}%");
+    assert!(
+        wall_instr <= wall_base * 1.02 + 0.005,
+        "telemetry hooks cost {wall_instr:.4}s vs {wall_base:.4}s bare (> 2% + 5ms)"
+    );
+    common::save("BENCH_metrics.json", &reg.snapshot(None).to_string_pretty());
 
     // Straggler recovery: one platform secretly 5x slower than its model —
     // the realised-makespan gap is the executor's adaptivity headline.
@@ -155,6 +182,9 @@ fn main() {
         ("chunked_wall_s", wall_chunked.into()),
         ("rebalance_wall_s", wall_rebalance.into()),
         ("makespan_s", rs.makespan_secs.into()),
+        ("telemetry_base_wall_s", wall_base.into()),
+        ("telemetry_instrumented_wall_s", wall_instr.into()),
+        ("telemetry_overhead_pct", overhead_pct.into()),
         ("straggler_static_makespan_s", slow_static.makespan_secs.into()),
         ("straggler_rebalanced_makespan_s", slow_rebalanced.makespan_secs.into()),
         ("straggler_migrations", slow_rebalanced.migrations.into()),

@@ -21,6 +21,8 @@
 //! {"v":1,"op":"jobs"}                               # every tracked job
 //! {"v":1,"op":"jobs","job_id":3}                    # one job's status
 //! {"v":1,"op":"cancel","job_id":3}
+//! {"v":1,"op":"metrics"}                            # full telemetry snapshot
+//! {"v":1,"op":"metrics","filter":"exec_"}           # substring-filtered
 //! {"v":1,"op":"shutdown"}
 //! ```
 //!
@@ -131,11 +133,35 @@ pub enum Request {
     Jobs { job_id: Option<u64> },
     /// Cancel a scheduler job.
     Cancel { job_id: u64 },
+    /// Snapshot the session's metrics registry, optionally restricted to
+    /// names containing `filter`.
+    Metrics { filter: Option<String> },
     /// Stop the server (the in-flight response is still delivered).
     Shutdown,
 }
 
 impl Request {
+    /// The wire name of this request's op — the label used for per-op serve
+    /// metrics, so every dispatch site agrees on the spelling.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Specs => "specs",
+            Request::Partition { .. } => "partition",
+            Request::Evaluate { .. } => "evaluate",
+            Request::Pareto { .. } => "pareto",
+            Request::Shape { .. } => "shape",
+            Request::Batch { .. } => "batch",
+            Request::Run { .. } => "run",
+            Request::Status { .. } => "status",
+            Request::Submit { .. } => "submit",
+            Request::Jobs { .. } => "jobs",
+            Request::Cancel { .. } => "cancel",
+            Request::Metrics { .. } => "metrics",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
     /// Parse one request line. All failures are
     /// [`CloudshapesError::Protocol`] with context.
     pub fn parse(line: &str) -> Result<Request> {
@@ -297,10 +323,23 @@ impl Request {
                     })?;
                 Ok(Request::Cancel { job_id })
             }
+            "metrics" => {
+                let filter = match req.get("filter") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                CloudshapesError::protocol("'filter' must be a string")
+                            })?
+                            .to_string(),
+                    ),
+                };
+                Ok(Request::Metrics { filter })
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(CloudshapesError::protocol(format!(
                 "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, shape, \
-                 batch, run, status, submit, jobs, cancel, shutdown)"
+                 batch, run, status, submit, jobs, cancel, metrics, shutdown)"
             ))),
         }
     }
@@ -439,7 +478,38 @@ mod tests {
             Request::parse(r#"{"v":1,"op":"status","run_id":7}"#).unwrap(),
             Request::Status { run_id: 7 }
         );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"metrics"}"#).unwrap(),
+            Request::Metrics { filter: None }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"metrics","filter":"exec_"}"#).unwrap(),
+            Request::Metrics { filter: Some("exec_".into()) }
+        );
         assert_eq!(Request::parse(r#"{"v":1,"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn metrics_filter_validation() {
+        let e = Request::parse(r#"{"v":1,"op":"metrics","filter":7}"#).unwrap_err();
+        assert_eq!(e.kind(), "protocol", "{e}");
+        // Explicit null behaves like an absent filter.
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"metrics","filter":null}"#).unwrap(),
+            Request::Metrics { filter: None }
+        );
+    }
+
+    #[test]
+    fn op_names_round_trip() {
+        for (line, name) in [
+            (r#"{"v":1,"op":"ping"}"#, "ping"),
+            (r#"{"v":1,"op":"evaluate","budget":null}"#, "evaluate"),
+            (r#"{"v":1,"op":"metrics"}"#, "metrics"),
+            (r#"{"v":1,"op":"shutdown"}"#, "shutdown"),
+        ] {
+            assert_eq!(Request::parse(line).unwrap().op(), name);
+        }
     }
 
     #[test]

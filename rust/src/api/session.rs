@@ -28,13 +28,14 @@
 //! this type; nothing else in the crate wires clusters to partitioners by
 //! hand.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::config::{ClusterConfig, ExperimentConfig};
 use crate::coordinator::executor::{
-    execute_with, ExecEvent, ExecutionReport, ExecutorConfig,
+    execute_shared, execute_with, ExecEvent, ExecutionReport, ExecutorConfig,
 };
 use crate::coordinator::partitioner::MilpConfig;
 use crate::coordinator::scheduler::{
@@ -44,7 +45,9 @@ use crate::coordinator::shape::{ShapeObjective, ShapeOutcome, ShapeSearch};
 use crate::coordinator::{sweep, Allocation, ModelSet, Partitioner, SweepConfig, TradeoffCurve};
 use crate::milp::branch_bound::BnbLimits;
 use crate::models::online::PlatformPrior;
+use crate::obs::{self, Counter, ExecCounters, MetricsRegistry};
 use crate::report::Experiment;
+use crate::util::json::Json;
 use crate::workload::{GeneratorConfig, Workload};
 
 use super::error::{CloudshapesError, Result};
@@ -143,9 +146,14 @@ pub struct RunStatus {
     pub cost: Option<f64>,
 }
 
-/// Mutable slot a background run's executor thread reports into.
+/// Mutable slot a background run's executor thread reports into. The
+/// retry/migration/preemption/failure and chunks-done numbers are NOT stored
+/// here — they live in the run's shared [`ExecCounters`] (the same tally the
+/// executor increments and the final report reads), so a `status` poll and
+/// the finished report can never disagree.
 struct RunSlot {
     status: RunStatus,
+    counters: Arc<ExecCounters>,
 }
 
 /// Background runs keyed by id. Finished runs are evicted oldest-first past
@@ -235,24 +243,29 @@ const MAX_PARTITION_ENTRIES: usize = 4096;
 struct SolutionCache {
     partitions: Mutex<HashMap<(String, Option<BudgetKey>), Arc<PartitionSummary>>>,
     paretos: Mutex<HashMap<String, Arc<TradeoffCurve>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    /// Registry-backed tallies (`cache_hits_total` / `cache_misses_total`) —
+    /// the single source both [`TradeoffSession::cache_stats`] (hence the
+    /// serve `ping` op) and the `metrics` op read, so the two can never
+    /// disagree. Handle-addressed counters count even when `[obs]` is
+    /// disabled, keeping `ping` complete either way.
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
 }
 
 impl SolutionCache {
-    fn new() -> SolutionCache {
+    fn new(reg: &MetricsRegistry) -> SolutionCache {
         SolutionCache {
             partitions: Mutex::new(HashMap::new()),
             paretos: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            hits: reg.counter("cache_hits_total", ""),
+            misses: reg.counter("cache_misses_total", ""),
         }
     }
 
     fn stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+            hits: self.hits.value(),
+            misses: self.misses.value(),
             partition_entries: self.partitions.lock().unwrap().len(),
             pareto_entries: self.paretos.lock().unwrap().len(),
         }
@@ -380,12 +393,15 @@ impl SessionBuilder {
         self.base.scheduler.validate()?;
         let sweep = self.sweep.unwrap_or_else(|| self.base.sweep.clone());
         let config = ExperimentConfig { cluster, workload, sweep, ..self.base };
+        config.obs.validate()?;
         let experiment = Experiment::build(config)?;
+        let obs = experiment.config.obs.build_registry();
         Ok(TradeoffSession {
+            cache: SolutionCache::new(&obs),
+            obs,
             experiment,
             registry: Arc::new(self.registry),
             default_partitioner: self.partitioner,
-            cache: SolutionCache::new(),
             runs: RunManager::new(),
             scheduler: Mutex::new(None),
         })
@@ -416,6 +432,9 @@ pub struct TradeoffSession {
     registry: Arc<PartitionerRegistry>,
     default_partitioner: String,
     cache: SolutionCache,
+    /// The session's private metrics registry (`[obs]`-configured); merged
+    /// with the process-global one by [`metrics`](Self::metrics).
+    obs: Arc<MetricsRegistry>,
     runs: RunManager,
     /// The online job scheduler, started lazily on the first
     /// [`submit_job`](Self::submit_job) (and only when `[scheduler]`
@@ -486,12 +505,19 @@ impl TradeoffSession {
         let strategy = name.unwrap_or(&self.default_partitioner).to_string();
         let key = (strategy, quantize(budget));
         if let Some(hit) = self.cache.partitions.lock().unwrap().get(&key) {
-            self.cache.hits.fetch_add(1, Ordering::Relaxed);
+            self.cache.hits.inc();
             return Ok((**hit).clone());
         }
-        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+        self.cache.misses.inc();
+        let _span = crate::span!("solve", key.0);
+        let started = Instant::now();
         let part = self.registry.create(&key.0, &self.experiment.config)?;
         let alloc = part.partition(self.models(), budget)?;
+        self.obs.observe(
+            "solve_latency_secs",
+            &format!("strategy={}", key.0),
+            started.elapsed().as_secs_f64(),
+        );
         let (predicted_latency_s, predicted_cost) = self.models().evaluate(&alloc);
         let summary = PartitionSummary {
             partitioner: part.name().to_string(),
@@ -527,10 +553,11 @@ impl TradeoffSession {
     pub fn pareto_frontier_with(&self, name: Option<&str>) -> Result<TradeoffCurve> {
         let strategy = name.unwrap_or(&self.default_partitioner).to_string();
         if let Some(hit) = self.cache.paretos.lock().unwrap().get(&strategy) {
-            self.cache.hits.fetch_add(1, Ordering::Relaxed);
+            self.cache.hits.inc();
             return Ok((**hit).clone());
         }
-        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+        self.cache.misses.inc();
+        let _span = crate::span!("pareto_sweep", strategy);
         let part = self.registry.create(&strategy, &self.experiment.config)?;
         let curve = sweep(part.as_ref(), self.models(), &self.experiment.config.sweep)?;
         let cached = Arc::clone(
@@ -580,8 +607,12 @@ impl TradeoffSession {
             time_limit_secs: milp.time_limit_secs,
             workers: milp.workers,
         };
+        let _span = crate::span!("shape_solve", inner.name());
+        let started = Instant::now();
         let search = ShapeSearch::new(&types, &avail, inner.as_ref(), limits)?;
         let outcome = search.optimize(objective)?;
+        self.obs.observe("shape_solve_secs", "", started.elapsed().as_secs_f64());
+        self.obs.inc("shape_nodes_total", "", outcome.nodes as u64);
         Ok(ShapeSummary {
             partitioner: inner.name().to_string(),
             objective,
@@ -629,13 +660,22 @@ impl TradeoffSession {
         alloc: &Allocation,
         on_event: &mut dyn FnMut(&ExecEvent),
     ) -> Result<ExecutionReport> {
+        let _span = crate::span!("execute");
+        let models = self.models();
+        // Tee the event stream through the registry bridge: chunk latency,
+        // queue depth and model error land in the session metrics without
+        // the executor knowing telemetry exists.
+        let mut tee = |ev: &ExecEvent| {
+            obs::record_exec_event(&self.obs, Some(models), ev);
+            on_event(ev);
+        };
         execute_with(
             &self.experiment.cluster,
             &self.experiment.workload,
             alloc,
             &self.experiment.config.executor,
-            Some(self.models()),
-            on_event,
+            Some(models),
+            &mut tee,
         )
     }
 
@@ -645,6 +685,9 @@ impl TradeoffSession {
     /// the serve protocol's `run`/`status` op pair.
     pub fn start_run(&self, name: Option<&str>, budget: Option<f64>) -> Result<u64> {
         let partition = self.partition_with(name, budget)?;
+        // One tally for the whole run: the executor increments it, the final
+        // report is derived from it, and `run_status` reads it live.
+        let counters = Arc::new(ExecCounters::default());
         let slot = Arc::new(Mutex::new(RunSlot {
             status: RunStatus {
                 id: 0,
@@ -662,6 +705,7 @@ impl TradeoffSession {
                 makespan_secs: None,
                 cost: None,
             },
+            counters: Arc::clone(&counters),
         }));
         let id = self.runs.insert(Arc::clone(&slot))?;
         // The executor thread owns clones of everything it needs (platforms
@@ -672,30 +716,31 @@ impl TradeoffSession {
         let models = self.models().clone();
         let cfg = self.experiment.config.executor.clone();
         let alloc = partition.alloc;
+        let reg = Arc::clone(&self.obs);
         std::thread::Builder::new()
             .name(format!("cloudshapes-run-{id}"))
             .spawn(move || {
                 let on_event = &mut |ev: &ExecEvent| {
+                    obs::record_exec_event(&reg, Some(&models), ev);
                     let mut slot = slot.lock().unwrap();
                     let s = &mut slot.status;
                     match ev {
                         ExecEvent::Started { chunks, .. } => s.chunks_total = *chunks,
-                        ExecEvent::ChunkDone { done, .. } => s.chunks_done = *done,
-                        ExecEvent::ChunkFailed { will_retry, .. } => {
-                            if *will_retry {
-                                s.retries += 1;
-                            } else {
-                                s.failures += 1;
-                            }
-                        }
-                        ExecEvent::ChunkMigrated { .. } => s.migrations += 1,
-                        ExecEvent::LanePreempted { .. } => s.preemptions += 1,
                         ExecEvent::TaskPriced { .. } => s.tasks_priced += 1,
-                        ExecEvent::Finished { .. } => {}
+                        // Chunk/retry/migration/preemption/failure tallies
+                        // come from the shared counters, not re-counted here.
+                        _ => {}
                     }
                 };
-                let result =
-                    execute_with(&cluster, &workload, &alloc, &cfg, Some(&models), on_event);
+                let result = execute_shared(
+                    &cluster,
+                    &workload,
+                    &alloc,
+                    &cfg,
+                    Some(&models),
+                    &counters,
+                    on_event,
+                );
                 let mut slot = slot.lock().unwrap();
                 match result {
                     Ok(rep) => {
@@ -711,8 +756,37 @@ impl TradeoffSession {
     }
 
     /// Progress snapshot of a background run (None for unknown/evicted ids).
+    /// The chunk/retry/migration/preemption/failure numbers are read from
+    /// the run's shared executor tally, so they always agree with the
+    /// eventual [`ExecutionReport`].
     pub fn run_status(&self, id: u64) -> Option<RunStatus> {
-        self.runs.get(id).map(|slot| slot.lock().unwrap().status.clone())
+        self.runs.get(id).map(|slot| {
+            let slot = slot.lock().unwrap();
+            let mut status = slot.status.clone();
+            status.chunks_done = slot.counters.chunks();
+            status.retries = slot.counters.retries();
+            status.migrations = slot.counters.migrations();
+            status.preemptions = slot.counters.preemptions();
+            status.failures = slot.counters.failures();
+            status
+        })
+    }
+
+    /// Merged metrics snapshot (optionally filtered to names containing
+    /// `filter`): the process-global registry (solver-level metrics)
+    /// overlaid with this session's. Backs the serve protocol's `metrics`
+    /// op and the `cloudshapes metrics` command.
+    pub fn metrics(&self, filter: Option<&str>) -> Json {
+        let mut out = BTreeMap::new();
+        obs::global().snapshot_into(&mut out, filter);
+        self.obs.snapshot_into(&mut out, filter);
+        Json::Obj(out)
+    }
+
+    /// The session's private metrics registry (profiling hooks and the
+    /// serve loop record into it).
+    pub fn metrics_registry(&self) -> &Arc<MetricsRegistry> {
+        &self.obs
     }
 
     /// Submit a pricing job to the online scheduler (started lazily on the
@@ -816,11 +890,12 @@ impl TradeoffSession {
         let registry = Arc::clone(&self.registry);
         let config = self.experiment.config.clone();
         let name = self.default_partitioner.clone();
-        let scheduler = OnlineScheduler::start(
+        let scheduler = OnlineScheduler::start_instrumented(
             self.experiment.cluster.clone(),
             priors,
             self.experiment.config.executor.clone(),
             self.experiment.config.scheduler.clone(),
+            Some(Arc::clone(&self.obs)),
             move || registry.create(&name, &config),
         )?;
         let scheduler = Arc::new(scheduler);

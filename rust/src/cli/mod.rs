@@ -59,6 +59,17 @@ COMMANDS
       --port PORT          (default 7741)
       --scheduler          Accept online pricing jobs (submit/jobs/cancel
                            ops; see docs/PROTOCOL.md)
+  metrics                  Print the telemetry snapshot as pretty JSON
+                           (metric catalogue: docs/OBSERVABILITY.md)
+      --evaluate           Partition + execute first, so the snapshot holds
+                           solve/chunk latency histograms, not just zeros
+      --budget DOLLARS     Budget for that evaluate (omit for unconstrained)
+      --filter SUB         Only metrics whose name contains SUB
+  trace                    Record one partition + execute as tracing spans
+                           and export them as Chrome-trace JSON (loadable
+                           in about://tracing or Perfetto)
+      --out PATH           Write the trace there (default: print to stdout)
+      --budget DOLLARS
 
 COMMON OPTIONS
   --config PATH            TOML experiment config (configs/*.toml)
@@ -133,6 +144,8 @@ fn run(args: &Args) -> Result<()> {
         "jobs" => cmd_jobs(args),
         "table" => cmd_table(args),
         "fig" => cmd_fig(args),
+        "metrics" => cmd_metrics(args),
+        "trace" => cmd_trace(args),
         "serve" => serve::cmd_serve(args, || session(args)),
         other => Err(CloudshapesError::config(format!(
             "unknown command '{other}' (try `cloudshapes help`)"
@@ -475,6 +488,39 @@ impl WatchView {
     }
 }
 
+/// `cloudshapes metrics`: snapshot the session's metrics registry (merged
+/// over the process-global one) as pretty JSON. With `--evaluate` a
+/// partition + execute runs first so the histograms carry real samples.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let s = session(args)?;
+    if args.flag_bool("evaluate") {
+        s.evaluate(args.flag_f64("budget")?)?;
+    }
+    println!("{}", s.metrics(args.flag("filter")).to_string_pretty());
+    Ok(())
+}
+
+/// `cloudshapes trace --out PATH`: clear the span rings, run one partition
+/// + execute, and export exactly that run's spans as Chrome-trace JSON.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use crate::obs::trace;
+    let s = session(args)?;
+    trace::clear();
+    s.evaluate(args.flag_f64("budget")?)?;
+    let trace_json = trace::chrome_trace();
+    let spans =
+        trace_json.get("traceEvents").and_then(|e| e.as_arr()).map(Vec::len).unwrap_or(0);
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, trace_json.to_string_pretty())
+                .map_err(|e| CloudshapesError::config(format!("writing {path}: {e}")))?;
+            println!("wrote {path} ({spans} spans)");
+        }
+        None => println!("{}", trace_json.to_string_pretty()),
+    }
+    Ok(())
+}
+
 fn cmd_table(args: &Args) -> Result<()> {
     let which = args
         .positionals
@@ -582,6 +628,35 @@ mod tests {
             0
         );
         assert_eq!(main(&argv("jobs --quick --count 0")), 1);
+    }
+
+    #[test]
+    fn metrics_command_prints_snapshot() {
+        assert_eq!(main(&argv("metrics --quick --partitioner heuristic --evaluate")), 0);
+        assert_eq!(main(&argv("metrics --quick --partitioner heuristic --filter cache_")), 0);
+    }
+
+    #[test]
+    fn trace_command_writes_chrome_json() {
+        use crate::util::json::Json;
+        // cmd_trace clears the process-global span rings — serialise with
+        // the trace unit tests, which assert on their own buffered spans.
+        let _g = crate::obs::trace::test_guard();
+        let path = std::env::temp_dir().join("cloudshapes_cli_trace.json");
+        let arg = format!("trace --quick --partitioner heuristic --out {}", path.display());
+        assert_eq!(main(&argv(&arg)), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let trace = Json::parse(&text).expect("well-formed chrome trace");
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("solve")),
+            "traced run exports its solve span"
+        );
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("execute")),
+            "traced run exports its execute span"
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

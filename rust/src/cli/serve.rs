@@ -18,6 +18,8 @@
 //! {"v":1,"op":"submit","tasks":4,"deadline":3600}  # scheduler job
 //! {"v":1,"op":"jobs"}                          # job statuses
 //! {"v":1,"op":"cancel","job_id":3}
+//! {"v":1,"op":"metrics"}                       # telemetry snapshot
+//! {"v":1,"op":"metrics","filter":"exec_"}      # name-filtered subset
 //! {"v":1,"op":"shutdown"}
 //! ```
 //!
@@ -39,6 +41,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::api::error::{CloudshapesError, Result};
 use crate::api::protocol::{error_response, ok_response, Request};
@@ -106,7 +109,9 @@ fn handle_connection(
         // request, one response line.
         match Request::parse(&line) {
             Ok(Request::Run { partitioner, budget, stream: true }) => {
+                let timer = OpTimer::start(session, "run");
                 stream_run(&mut writer, session, partitioner.as_deref(), budget)?;
+                drop(timer);
             }
             Ok(Request::Submit {
                 tasks,
@@ -117,6 +122,7 @@ fn handle_connection(
                 budget,
                 stream: true,
             }) => {
+                let timer = OpTimer::start(session, "submit");
                 stream_job(
                     &mut writer,
                     session,
@@ -127,6 +133,7 @@ fn handle_connection(
                     deadline,
                     budget,
                 )?;
+                drop(timer);
             }
             parsed => {
                 let response = match parsed.and_then(|req| dispatch(req, session, stop)) {
@@ -155,7 +162,46 @@ pub fn handle_request(line: &str, session: &TradeoffSession, stop: &AtomicBool) 
     }
 }
 
+/// Counts one request into `serve_requests_total{op=}` immediately and, on
+/// drop, its wall-clock latency into `serve_op_latency_secs{op=}` — so
+/// error paths and streaming ops are measured exactly like successes. Also
+/// holds the request's tracing span open for its whole lifetime.
+struct OpTimer<'a> {
+    session: &'a TradeoffSession,
+    label: String,
+    started: Instant,
+    _span: crate::obs::Span,
+}
+
+impl<'a> OpTimer<'a> {
+    fn start(session: &'a TradeoffSession, op: &str) -> Self {
+        let label = format!("op={op}");
+        session.metrics_registry().inc("serve_requests_total", &label, 1);
+        OpTimer {
+            session,
+            label,
+            started: Instant::now(),
+            _span: crate::span!("serve_request", op),
+        }
+    }
+}
+
+impl Drop for OpTimer<'_> {
+    fn drop(&mut self) {
+        self.session.metrics_registry().observe(
+            "serve_op_latency_secs",
+            &self.label,
+            self.started.elapsed().as_secs_f64(),
+        );
+    }
+}
+
 fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Result<Json> {
+    let _timer = OpTimer::start(session, req.op());
+    dispatch_inner(req, session, stop)
+}
+
+fn dispatch_inner(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Result<Json> {
     match req {
         Request::Ping => {
             let stats = session.cache_stats();
@@ -171,26 +217,30 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
                     ]),
                 ),
             ];
-            // Scheduler counters when the session runs one.
-            if let Ok(s) = session.scheduler_stats() {
+            // Scheduler counters when the session runs one. The values come
+            // from the metrics registry — the scheduler mirrors every stats
+            // update into it at the same site — so `ping` and the `metrics`
+            // op can never disagree. The response shape is unchanged.
+            if session.scheduler_stats().is_ok() {
+                let reg = session.metrics_registry();
+                let c = |name: &str| Json::Num(reg.counter_value(name, "") as f64);
+                let g = |label: &str| {
+                    reg.gauge_value("scheduler_model_error", label)
+                        .map(Json::Num)
+                        .unwrap_or(Json::Null)
+                };
                 fields.push((
                     "scheduler",
                     obj(vec![
-                        ("submitted", Json::Num(s.submitted as f64)),
-                        ("completed", Json::Num(s.completed as f64)),
-                        ("cancelled", Json::Num(s.cancelled as f64)),
-                        ("failed", Json::Num(s.failed as f64)),
-                        ("epochs", s.epochs.into()),
-                        ("resolves", s.resolves.into()),
-                        ("warm_reuses", s.warm_reuses.into()),
-                        (
-                            "model_error_first",
-                            s.first_model_error.map(Json::Num).unwrap_or(Json::Null),
-                        ),
-                        (
-                            "model_error_last",
-                            s.last_model_error.map(Json::Num).unwrap_or(Json::Null),
-                        ),
+                        ("submitted", c("scheduler_submitted_total")),
+                        ("completed", c("scheduler_completed_total")),
+                        ("cancelled", c("scheduler_cancelled_total")),
+                        ("failed", c("scheduler_failed_total")),
+                        ("epochs", c("scheduler_epochs_total")),
+                        ("resolves", c("scheduler_resolves_total")),
+                        ("warm_reuses", c("scheduler_warm_reuses_total")),
+                        ("model_error_first", g("stage=first")),
+                        ("model_error_last", g("stage=last")),
                     ]),
                 ));
             }
@@ -330,6 +380,9 @@ fn dispatch(req: Request, session: &TradeoffSession, stop: &AtomicBool) -> Resul
                 })
                 .collect();
             Ok(ok_response(vec![("results", Json::Arr(results))]))
+        }
+        Request::Metrics { filter } => {
+            Ok(ok_response(vec![("metrics", session.metrics(filter.as_deref()))]))
         }
         Request::Shutdown => {
             stop.store(true, Ordering::SeqCst);
@@ -939,6 +992,37 @@ mod tests {
         assert_eq!(sched.get("submitted").unwrap().as_u64(), Some(1));
         assert_eq!(sched.get("completed").unwrap().as_u64(), Some(1));
         assert!(sched.get("epochs").unwrap().as_u64().unwrap() >= 1);
+    }
+
+    #[test]
+    fn metrics_op_snapshots_the_session_registry() {
+        let s = session();
+        let stop = AtomicBool::new(false);
+        // One solve populates the solve-latency histogram + cache counters.
+        let r = handle_request(
+            r#"{"v":1,"op":"partition","partitioner":"heuristic","budget":null}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        let r = handle_request(r#"{"v":1,"op":"metrics"}"#, &s, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        let m = r.get("metrics").unwrap();
+        let solve = m.get("solve_latency_secs").unwrap();
+        assert_eq!(solve.get("type").unwrap().as_str(), Some("histogram"));
+        assert!(solve.get("values").unwrap().get("strategy=heuristic").is_some());
+        // Serve's own per-op counters ride the same snapshot.
+        let reqs = m.get("serve_requests_total").unwrap().get("values").unwrap();
+        assert!(reqs.get("op=partition").unwrap().as_u64().unwrap() >= 1);
+        // A filter restricts by name substring; cache counters mirror ping's.
+        let r = handle_request(r#"{"v":1,"op":"metrics","filter":"cache_"}"#, &s, &stop);
+        let m = r.get("metrics").unwrap().as_obj().unwrap();
+        assert!(!m.is_empty() && m.keys().all(|k| k.contains("cache_")));
+        let misses = m["cache_misses_total"].get("values").unwrap();
+        assert_eq!(misses.get("").unwrap().as_u64(), Some(1));
+        // Bad filter types are protocol errors.
+        let r = handle_request(r#"{"v":1,"op":"metrics","filter":7}"#, &s, &stop);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::coordinator::executor::ExecutorConfig;
 use crate::coordinator::partitioner::MilpConfig;
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::coordinator::{BenchmarkConfig, SweepConfig};
+use crate::obs::ObsConfig;
 use crate::platforms::sim::SimConfig;
 use crate::util::json::Json;
 use crate::util::toml;
@@ -68,6 +69,8 @@ pub struct ExperimentConfig {
     pub executor: ExecutorConfig,
     /// Online job scheduler knobs (`[scheduler]`; disabled by default).
     pub scheduler: SchedulerConfig,
+    /// Telemetry knobs (`[obs]`; enabled by default).
+    pub obs: ObsConfig,
     /// Directory holding the AOT artifacts (manifest.json).
     pub artifact_dir: String,
 }
@@ -82,6 +85,7 @@ impl Default for ExperimentConfig {
             milp: MilpConfig::default(),
             executor: ExecutorConfig::default(),
             scheduler: SchedulerConfig::default(),
+            obs: ObsConfig::default(),
             artifact_dir: "artifacts".to_string(),
         }
     }
@@ -262,6 +266,12 @@ impl ExperimentConfig {
             set_f64(s, "resolve_drift", &mut cfg.scheduler.resolve_drift)?;
             cfg.scheduler.validate()?;
         }
+        if let Some(o) = root.get("obs") {
+            set_bool(o, "enabled", &mut cfg.obs.enabled)?;
+            set_usize(o, "hist_buckets", &mut cfg.obs.hist_buckets)?;
+            set_usize(o, "trace_ring", &mut cfg.obs.trace_ring)?;
+            cfg.obs.validate()?;
+        }
         if let Some(a) = root.get("artifact_dir").and_then(Json::as_str) {
             cfg.artifact_dir = a.to_string();
         }
@@ -429,6 +439,25 @@ mod tests {
         assert!(ExperimentConfig::parse("[scheduler]\nepoch_secs = 0").is_err());
         assert!(ExperimentConfig::parse("[scheduler]\nmax_in_flight = 0").is_err());
         assert!(ExperimentConfig::parse("[scheduler]\nresolve_drift = -0.5").is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let c = ExperimentConfig::parse(
+            "[obs]\nenabled = false\nhist_buckets = 12\ntrace_ring = 256",
+        )
+        .unwrap();
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.hist_buckets, 12);
+        assert_eq!(c.obs.trace_ring, 256);
+        // Defaults: on, with the registry's standard bucket count.
+        let c = ExperimentConfig::parse("").unwrap();
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.hist_buckets, crate::obs::DEFAULT_HIST_BUCKETS);
+        // Bad values are config errors.
+        assert!(ExperimentConfig::parse("[obs]\nhist_buckets = 1").is_err());
+        assert!(ExperimentConfig::parse("[obs]\ntrace_ring = 2").is_err());
+        assert!(ExperimentConfig::parse("[obs]\nenabled = \"on\"").is_err());
     }
 
     #[test]

@@ -47,6 +47,7 @@ use std::sync::{Condvar, Mutex};
 use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::allocation::{Allocation, ALLOC_TOL};
 use crate::coordinator::objectives::ModelSet;
+use crate::obs::ExecCounters;
 use crate::platforms::{ChunkCtx, Cluster};
 use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
 use crate::util::rng::Rng;
@@ -364,7 +365,26 @@ pub fn execute_with(
     models: Option<&ModelSet>,
     on_event: &mut dyn FnMut(&ExecEvent),
 ) -> Result<ExecutionReport> {
-    run_chunked(cluster, workload, alloc, cfg, models, None, None, on_event).map(|o| o.report)
+    let counters = ExecCounters::default();
+    execute_shared(cluster, workload, alloc, cfg, models, &counters, on_event)
+}
+
+/// As [`execute_with`], tallying into a caller-owned [`ExecCounters`] —
+/// the ONE retry/migration/preemption count of the run. The returned
+/// report's counter fields are deltas over `counters`' entry values, so a
+/// live view holding the same counters (the session's `status` op) and the
+/// final report always agree.
+pub fn execute_shared(
+    cluster: &Cluster,
+    workload: &Workload,
+    alloc: &Allocation,
+    cfg: &ExecutorConfig,
+    models: Option<&ModelSet>,
+    counters: &ExecCounters,
+    on_event: &mut dyn FnMut(&ExecEvent),
+) -> Result<ExecutionReport> {
+    run_chunked(cluster, workload, alloc, cfg, models, None, None, counters, on_event)
+        .map(|o| o.report)
 }
 
 /// One epoch boundary of an online run — the knobs [`execute_epoch`] adds
@@ -427,6 +447,7 @@ pub fn execute_epoch(
             workload.len()
         )));
     }
+    let counters = ExecCounters::default();
     run_chunked(
         cluster,
         workload,
@@ -435,6 +456,7 @@ pub fn execute_epoch(
         models,
         Some(epoch.halt_secs),
         Some(epoch.base_offsets),
+        &counters,
         on_event,
     )
     .map(|o| EpochReport {
@@ -465,8 +487,18 @@ fn run_chunked(
     models: Option<&ModelSet>,
     halt_secs: Option<f64>,
     base_offsets: Option<&[u64]>,
+    counters: &ExecCounters,
     on_event: &mut dyn FnMut(&ExecEvent),
 ) -> Result<ChunkedOutcome> {
+    // Entry snapshot: the report covers this run even if the caller reuses
+    // one counters tally across runs.
+    let base = (
+        counters.chunks(),
+        counters.retries(),
+        counters.migrations(),
+        counters.preemptions(),
+        counters.failures(),
+    );
     check_shapes(cluster, workload, alloc)?;
     let (mu, tau) = (cluster.len(), workload.len());
     let (splits, offsets) = slice_layout(workload, alloc, base_offsets);
@@ -540,8 +572,11 @@ fn run_chunked(
     let mut remaining_chunks = chunks_per_task;
     let mut task_failures = vec![0usize; tau];
     let mut prices: Vec<Option<PriceEstimate>> = vec![None; tau];
-    let (mut done_count, mut failures, mut retries, mut migrations) = (0usize, 0usize, 0usize, 0);
-    let mut preemptions = 0usize;
+    // done_count/failures stay local because the loop's termination
+    // condition reads them; every externally visible tally goes through the
+    // shared `counters` (the single source the report and any live status
+    // view both read).
+    let (mut done_count, mut failures) = (0usize, 0usize);
     // Epoch runs: chunks still queued once no lane can dispatch any more
     // (every lane idle and past the boundary, dead, or empty) are deferred
     // to the next epoch instead of executed.
@@ -693,7 +728,7 @@ fn run_chunked(
             let ev = rx.recv().expect("all workers exited with chunks outstanding");
             let Completion { platform, chunk, latency_secs, cold, stats, error, preempted } = ev;
             if let Some(notice) = preempted {
-                preemptions += 1;
+                counters.add_preemption();
                 on_event(&ExecEvent::LanePreempted {
                     platform,
                     at_secs: notice.at_secs,
@@ -703,7 +738,7 @@ fn run_chunked(
                     drained: notice.moved.len(),
                 });
                 for (to, c) in &notice.moved {
-                    migrations += 1;
+                    counters.add_migration();
                     on_event(&ExecEvent::ChunkMigrated {
                         from: platform,
                         to: *to,
@@ -715,6 +750,7 @@ fn run_chunked(
                 // Queued chunks with no live lane left fail permanently.
                 for c in notice.orphaned {
                     failures += 1;
+                    counters.add_failure();
                     task_failures[c.task] += 1;
                     resolve_chunk(&sched, &available);
                     on_event(&ExecEvent::ChunkFailed {
@@ -745,6 +781,7 @@ fn run_chunked(
             match (stats, error) {
                 (Some(s), _) => {
                     done_count += 1;
+                    counters.add_chunk();
                     if s.n > 0 {
                         chunk_stats[chunk.task].push((chunk.offset, s));
                     }
@@ -774,7 +811,7 @@ fn run_chunked(
                         if let Some(mv) =
                             try_rebalance(&sched, &coeffs, cfg.rebalance.tolerance)
                         {
-                            migrations += 1;
+                            counters.add_migration();
                             available.notify_all();
                             on_event(&mv);
                         }
@@ -798,7 +835,7 @@ fn run_chunked(
                         };
                         match target {
                             Some(t) => {
-                                retries += 1;
+                                counters.add_retry();
                                 if t != platform {
                                     rehomed_to = Some(t);
                                 }
@@ -813,6 +850,7 @@ fn run_chunked(
                     }
                     if !will_retry {
                         failures += 1;
+                        counters.add_failure();
                         task_failures[chunk.task] += 1;
                         resolve_chunk(&sched, &available);
                     }
@@ -893,11 +931,11 @@ fn run_chunked(
             cost,
             platforms,
             prices,
-            failures,
-            chunks: done_count,
-            retries,
-            migrations,
-            preemptions,
+            failures: counters.failures() - base.4,
+            chunks: counters.chunks() - base.0,
+            retries: counters.retries() - base.1,
+            migrations: counters.migrations() - base.2,
+            preemptions: counters.preemptions() - base.3,
         },
         done_sims,
         merged_stats,

@@ -15,8 +15,8 @@ pub mod shape;
 pub use allocation::Allocation;
 pub use benchmarker::{benchmark, BenchmarkConfig, BenchmarkReport};
 pub use executor::{
-    execute, execute_epoch, execute_static, execute_with, EpochCtx, EpochReport, ExecEvent,
-    ExecutionReport, ExecutorConfig, RebalanceConfig, RetryConfig,
+    execute, execute_epoch, execute_shared, execute_static, execute_with, EpochCtx, EpochReport,
+    ExecEvent, ExecutionReport, ExecutorConfig, RebalanceConfig, RetryConfig,
 };
 pub use objectives::ModelSet;
 pub use pareto::{sweep, SweepConfig, TradeoffCurve, TradeoffPoint};

@@ -68,6 +68,7 @@ use crate::coordinator::partitioner::Partitioner;
 use crate::coordinator::Allocation;
 use crate::models::online::{OnlineLatencyFit, PlatformPrior};
 use crate::models::CostModel;
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::platforms::Cluster;
 use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
 use crate::workload::{try_generate, GeneratorConfig, OptionTask, Payoff, Workload};
@@ -397,11 +398,52 @@ struct SchedState {
     fatal: Option<CloudshapesError>,
 }
 
+/// Registry handles the scheduler updates at the very same sites as its own
+/// [`SchedulerStats`] fields (under the same lock), so the serve `ping` op —
+/// which reads these registry cells — and [`OnlineScheduler::stats`] can
+/// never disagree. Handle-addressed metrics count even when `[obs]` is
+/// disabled, mirroring the session cache-stats discipline; only the
+/// name-addressed per-chunk observations respect the enabled flag.
+struct SchedMetrics {
+    submitted: Arc<Counter>,
+    completed: Arc<Counter>,
+    cancelled: Arc<Counter>,
+    failed: Arc<Counter>,
+    epochs: Arc<Counter>,
+    resolves: Arc<Counter>,
+    warm_reuses: Arc<Counter>,
+    model_error_first: Arc<Gauge>,
+    model_error_last: Arc<Gauge>,
+    epoch_model_error: Arc<Histogram>,
+}
+
+impl SchedMetrics {
+    fn new(reg: &MetricsRegistry) -> SchedMetrics {
+        SchedMetrics {
+            submitted: reg.counter("scheduler_submitted_total", ""),
+            completed: reg.counter("scheduler_completed_total", ""),
+            cancelled: reg.counter("scheduler_cancelled_total", ""),
+            failed: reg.counter("scheduler_failed_total", ""),
+            epochs: reg.counter("scheduler_epochs_total", ""),
+            resolves: reg.counter("scheduler_resolves_total", ""),
+            warm_reuses: reg.counter("scheduler_warm_reuses_total", ""),
+            model_error_first: reg.gauge("scheduler_model_error", "stage=first"),
+            model_error_last: reg.gauge("scheduler_model_error", "stage=last"),
+            epoch_model_error: reg.histogram("scheduler_epoch_model_error", ""),
+        }
+    }
+}
+
 struct Inner {
     cluster: Cluster,
     exec: ExecutorConfig,
     cfg: SchedulerConfig,
     priors: Vec<PlatformPrior>,
+    /// Counter/gauge handles into `reg` (see [`SchedMetrics`]).
+    metrics: Option<SchedMetrics>,
+    /// The owning session's registry, for per-chunk latency/model-error
+    /// observations on the epoch thread.
+    reg: Option<Arc<MetricsRegistry>>,
     state: Mutex<SchedState>,
     wake: Condvar,
 }
@@ -434,6 +476,24 @@ impl OnlineScheduler {
     where
         F: FnOnce() -> Result<Box<dyn Partitioner>> + Send + 'static,
     {
+        Self::start_instrumented(cluster, priors, exec, cfg, None, make_partitioner)
+    }
+
+    /// As [`start`](Self::start), additionally recording scheduler counters,
+    /// model-error gauges and per-chunk observations into `registry` (the
+    /// owning session's) — the path
+    /// [`TradeoffSession`](crate::api::TradeoffSession) takes.
+    pub fn start_instrumented<F>(
+        cluster: Cluster,
+        priors: Vec<PlatformPrior>,
+        exec: ExecutorConfig,
+        cfg: SchedulerConfig,
+        registry: Option<Arc<MetricsRegistry>>,
+        make_partitioner: F,
+    ) -> Result<OnlineScheduler>
+    where
+        F: FnOnce() -> Result<Box<dyn Partitioner>> + Send + 'static,
+    {
         cfg.validate()?;
         if cluster.is_empty() {
             return Err(CloudshapesError::config("scheduler needs a non-empty cluster"));
@@ -450,6 +510,8 @@ impl OnlineScheduler {
             exec,
             cfg,
             priors,
+            metrics: registry.as_deref().map(SchedMetrics::new),
+            reg: registry,
             state: Mutex::new(SchedState {
                 jobs: BTreeMap::new(),
                 next_id: 1,
@@ -541,6 +603,9 @@ impl OnlineScheduler {
             },
         );
         st.stats.submitted += 1;
+        if let Some(m) = &self.inner.metrics {
+            m.submitted.inc();
+        }
         drop(st);
         self.inner.wake.notify_all();
         Ok(id)
@@ -561,6 +626,9 @@ impl OnlineScheduler {
         job.finished_s = Some(clock);
         job.slo_met = Some(false);
         st.stats.cancelled += 1;
+        if let Some(m) = &self.inner.metrics {
+            m.cancelled.inc();
+        }
         drop(st);
         self.inner.wake.notify_all();
         Some(true)
@@ -674,6 +742,9 @@ where
                 }
             }
             st.stats.failed += failed;
+            if let Some(m) = &inner.metrics {
+                m.failed.add(failed);
+            }
             st.fatal = Some(e);
             return;
         }
@@ -707,6 +778,8 @@ where
         if input.tasks.is_empty() {
             continue;
         }
+        // One span per epoch: plan → execute → apply.
+        let _span = crate::span!("scheduler_epoch");
 
         // ── Phase 2: refreshed models for the batch. ────────────────────
         let tau = input.tasks.len();
@@ -775,6 +848,8 @@ where
             let fit = &mut fit;
             let models_ref = &models;
             let workload_ref = &workload;
+            let reg = &inner.reg;
+            let platform_names = &platform_names;
             execute_epoch(
                 &inner.cluster,
                 workload_ref,
@@ -802,6 +877,23 @@ where
                         // near-infinite throughput.
                         let flops = workload_ref.tasks[*task].flops_per_path() * *n as f64;
                         fit.observe(*platform, flops, latency_secs - setup);
+                        if let Some(reg) = reg {
+                            reg.observe(
+                                "exec_chunk_latency_secs",
+                                &format!("platform={}", platform_names[*platform]),
+                                *latency_secs,
+                            );
+                            if *latency_secs > 0.0 {
+                                reg.observe(
+                                    "exec_model_error_rel",
+                                    &format!(
+                                        "platform={},task={task}",
+                                        platform_names[*platform]
+                                    ),
+                                    (predicted - latency_secs).abs() / latency_secs,
+                                );
+                            }
+                        }
                     }
                 },
             )
@@ -871,6 +963,9 @@ where
                     Slo::Budget(b) => job.cost <= b + 1e-9,
                 });
                 st.stats.completed += 1;
+                if let Some(m) = &inner.metrics {
+                    m.completed.inc();
+                }
             }
         }
         // Stall guard: epochs that complete nothing, repeatedly, mean the
@@ -893,6 +988,9 @@ where
                 }
             }
             st.stats.failed += failed;
+            if let Some(m) = &inner.metrics {
+                m.failed.add(failed);
+            }
             stalled = 0;
             warm = None;
         }
@@ -903,11 +1001,27 @@ where
         } else {
             st.stats.warm_reuses += 1;
         }
-        if st.stats.first_model_error.is_none() && err_n > 0 {
+        let first_error = st.stats.first_model_error.is_none() && err_n > 0;
+        if first_error {
             st.stats.first_model_error = Some(model_error);
         }
         if err_n > 0 {
             st.stats.last_model_error = Some(model_error);
+        }
+        if let Some(m) = &inner.metrics {
+            m.epochs.inc();
+            if resolved {
+                m.resolves.inc();
+            } else {
+                m.warm_reuses.inc();
+            }
+            if first_error {
+                m.model_error_first.set(model_error);
+            }
+            if err_n > 0 {
+                m.model_error_last.set(model_error);
+                m.epoch_model_error.observe(model_error);
+            }
         }
         let record = EpochRecord {
             epoch: st.stats.epochs,
@@ -1054,6 +1168,9 @@ fn fail_running_jobs(inner: &Inner, msg: &str) {
         }
     }
     st.stats.failed += failed;
+    if let Some(m) = &inner.metrics {
+        m.failed.add(failed);
+    }
 }
 
 /// Chunks must be fine enough for the epoch boundary to bite on EVERY

@@ -38,8 +38,9 @@
 //!   ([`models::online`]).
 //!
 //! Prose documentation lives in `docs/`: `ARCHITECTURE.md` (module map +
-//! paper cross-reference), `PROTOCOL.md` (the full wire reference) and
-//! `CONFIG.md` (every TOML key).
+//! paper cross-reference), `PROTOCOL.md` (the full wire reference),
+//! `CONFIG.md` (every TOML key) and `OBSERVABILITY.md` (the [`obs`] metric
+//! catalogue and span taxonomy).
 //!
 //! ## Layers
 //!
@@ -57,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod milp;
 pub mod models;
+pub mod obs;
 pub mod platforms;
 pub mod pricing;
 pub mod report;

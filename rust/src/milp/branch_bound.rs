@@ -201,13 +201,24 @@ impl Search {
     /// schedule-independent.
     fn offer_incumbent(&self, x: Vec<f64>, obj: f64, id: u128) {
         let mut inc = self.incumbent.lock().unwrap();
-        let better = match &*inc {
-            None => true,
-            Some(cur) => obj < cur.obj || (obj == cur.obj && id < cur.id),
+        let (better, improved) = match &*inc {
+            None => (true, true),
+            Some(cur) => (obj < cur.obj || (obj == cur.obj && id < cur.id), obj < cur.obj),
         };
         if better {
             *inc = Some(Incumbent { x, obj, id });
             self.incumbent_obj.store(obj.to_bits(), AtOrd::Release);
+            if improved {
+                // Time-to-incumbent-improvement from solve start — the
+                // anytime profile of the search. Recorded via the
+                // process-global registry (the solver has no session in
+                // reach); purely observational, never steers the search.
+                crate::obs::global().observe(
+                    "bnb_incumbent_improvement_secs",
+                    "",
+                    self.start.elapsed().as_secs_f64(),
+                );
+            }
         }
     }
 
@@ -393,7 +404,16 @@ impl Drop for InFlight<'_> {
 /// Solve a mixed-integer problem by branch & bound (sequential or
 /// parallel per [`BnbLimits::workers`]).
 pub fn solve(p: &Problem, limits: &BnbLimits) -> MilpSolution {
+    let _span = crate::span!("bnb_solve");
     let start = Instant::now();
+    let sol = solve_from(p, limits, start);
+    let reg = crate::obs::global();
+    reg.inc("bnb_nodes_total", "", sol.nodes as u64);
+    reg.observe("bnb_solve_secs", "", start.elapsed().as_secs_f64());
+    sol
+}
+
+fn solve_from(p: &Problem, limits: &BnbLimits, start: Instant) -> MilpSolution {
     let workers = limits.workers.max(1);
 
     // Root relaxation (solved on the caller thread: cheap early exits).

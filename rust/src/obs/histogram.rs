@@ -1,0 +1,145 @@
+//! Fixed-bucket histograms with a lock-free observe path.
+//!
+//! A [`Histogram`] owns an immutable ladder of upper-bound buckets (shared
+//! across every histogram of a registry) plus one atomic counter per bucket,
+//! an overflow counter, a total count, and a CAS-maintained f64 sum. The
+//! observe path is a binary search over the bounds and two relaxed atomic
+//! adds — cheap enough to sit on the executor's per-chunk event path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::{obj, Json};
+
+/// Add `v` to an f64 stored as atomic bits (relaxed CAS loop).
+fn f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = f64::from_bits(cur) + v;
+        match cell.compare_exchange_weak(
+            cur,
+            next.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// A fixed-bucket histogram: `bounds[k]` is the inclusive upper bound of
+/// bucket `k`; one extra overflow bucket catches everything above the last
+/// bound. Negative observations land in bucket 0; non-finite observations
+/// are dropped (they would poison the sum and can never serialise).
+pub struct Histogram {
+    bounds: Arc<Vec<f64>>,
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Arc<Vec<f64>>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts, count: AtomicU64::new(0), sum: AtomicU64::new(0) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        // First bucket whose upper bound admits v; everything beyond the
+        // last bound goes to the overflow slot.
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        f64_add(&self.sum, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum.load(Ordering::Relaxed))
+    }
+
+    /// Serialise as `{count, sum, le: [bounds...], n: [counts...]}` where
+    /// `n` has one more entry than `le` (the trailing overflow bucket).
+    pub fn to_json(&self) -> Json {
+        let le: Vec<Json> = self.bounds.iter().map(|b| Json::Num(*b)).collect();
+        let n: Vec<Json> = self
+            .counts
+            .iter()
+            .map(|c| Json::Num(c.load(Ordering::Relaxed) as f64))
+            .collect();
+        obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum", Json::Num(self.sum())),
+            ("le", Json::Arr(le)),
+            ("n", Json::Arr(n)),
+        ])
+    }
+}
+
+/// `n` log-spaced bucket bounds covering 1e-6 .. 1e6 (microseconds to ~11
+/// days when observing seconds; also a serviceable ladder for dimensionless
+/// ratios like relative model error).
+pub fn default_bounds(n: usize) -> Vec<f64> {
+    let n = n.max(2);
+    let (lo, hi) = (1e-6f64, 1e6f64);
+    (0..n)
+        .map(|k| lo * (hi / lo).powf(k as f64 / (n - 1) as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_inclusive_upper_bounds() {
+        let h = Histogram::new(Arc::new(vec![1.0, 10.0, 100.0]));
+        h.observe(0.5); // bucket 0
+        h.observe(1.0); // bucket 0 (inclusive)
+        h.observe(5.0); // bucket 1
+        h.observe(1000.0); // overflow
+        h.observe(-3.0); // clamps to bucket 0
+        assert_eq!(h.count(), 5);
+        let counts: Vec<u64> =
+            h.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        assert_eq!(counts, vec![3, 1, 0, 1]);
+        assert!((h.sum() - 1003.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_finite_observations_are_dropped() {
+        let h = Histogram::new(Arc::new(vec![1.0]));
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        h.observe(f64::NEG_INFINITY);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+    }
+
+    #[test]
+    fn default_bounds_are_log_spaced_and_sorted() {
+        let b = default_bounds(24);
+        assert_eq!(b.len(), 24);
+        assert!((b[0] - 1e-6).abs() < 1e-18);
+        assert!((b[23] - 1e6).abs() < 1e-3);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let h = Histogram::new(Arc::new(vec![1.0, 2.0]));
+        h.observe(1.5);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(1));
+        assert_eq!(j.get("le").and_then(Json::as_arr).map(Vec::len), Some(2));
+        assert_eq!(j.get("n").and_then(Json::as_arr).map(Vec::len), Some(3));
+    }
+}

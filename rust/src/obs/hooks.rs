@@ -1,0 +1,215 @@
+//! Profiling hooks at the seams the engine already has.
+//!
+//! Two pieces live here:
+//!
+//! - [`ExecCounters`] — the single tally of one chunked run's
+//!   retry/migration/preemption/failure counts. The executor's event loop
+//!   increments it, the final [`ExecutionReport`] reads it, and the
+//!   session's run tracker holds the same `Arc` so live `status` queries
+//!   and the finished report can never disagree (previously each re-counted
+//!   independently from the event stream).
+//! - [`record_exec_event`] — the [`ExecEvent`] → registry bridge. Session
+//!   entry points tee their event observers through it, so chunk latency
+//!   per platform, queue depth, predicted-vs-measured latency error,
+//!   retries/migrations/preemptions and task pricing all land in the
+//!   session's [`MetricsRegistry`] without the executor knowing telemetry
+//!   exists.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::objectives::ModelSet;
+use crate::coordinator::ExecEvent;
+use crate::obs::registry::MetricsRegistry;
+
+/// Atomic per-run execution counters; see the module docs.
+#[derive(Debug, Default)]
+pub struct ExecCounters {
+    chunks: AtomicU64,
+    retries: AtomicU64,
+    migrations: AtomicU64,
+    preemptions: AtomicU64,
+    failures: AtomicU64,
+}
+
+impl ExecCounters {
+    pub fn add_chunk(&self) {
+        self.chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_migration(&self) {
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn chunks(&self) -> usize {
+        self.chunks.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn retries(&self) -> usize {
+        self.retries.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn migrations(&self) -> usize {
+        self.migrations.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn preemptions(&self) -> usize {
+        self.preemptions.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn failures(&self) -> usize {
+        self.failures.load(Ordering::Relaxed) as usize
+    }
+}
+
+/// `platform=<name>` when the model set knows the platform, `platform=<i>`
+/// otherwise — kept consistent with the `specs` op ordering.
+fn platform_label(models: Option<&ModelSet>, i: usize) -> String {
+    match models.and_then(|m| m.platform_names.get(i)) {
+        Some(name) => format!("platform={name}"),
+        None => format!("platform={i}"),
+    }
+}
+
+/// Fold one executor event into `reg`. Purely additive: it never touches
+/// the event, so instrumented runs stay bit-identical to uninstrumented
+/// ones. No-op when the registry is disabled.
+pub fn record_exec_event(reg: &MetricsRegistry, models: Option<&ModelSet>, ev: &ExecEvent) {
+    if !reg.enabled() {
+        return;
+    }
+    match ev {
+        ExecEvent::Started { chunks, .. } => {
+            reg.inc("exec_runs_total", "", 1);
+            reg.set_gauge("exec_chunks_outstanding", "", *chunks as f64);
+        }
+        ExecEvent::ChunkDone { platform, task, n, latency_secs, cold, done, total, .. } => {
+            reg.observe(
+                "exec_chunk_latency_secs",
+                &platform_label(models, *platform),
+                *latency_secs,
+            );
+            reg.set_gauge("exec_chunks_outstanding", "", (*total - *done) as f64);
+            if let Some(m) = models {
+                // The predicted-vs-measured loop as a first-class
+                // histogram: relative error of the fitted latency model on
+                // this (platform, task) chunk.
+                let lm = m.model(*platform, *task);
+                let predicted =
+                    lm.beta * *n as f64 + if *cold { lm.gamma } else { 0.0 };
+                if *latency_secs > 0.0 {
+                    reg.observe(
+                        "exec_model_error_rel",
+                        &format!(
+                            "{},task={task}",
+                            platform_label(models, *platform)
+                        ),
+                        (predicted - latency_secs).abs() / latency_secs,
+                    );
+                }
+            }
+        }
+        ExecEvent::ChunkFailed { will_retry, .. } => {
+            if *will_retry {
+                reg.inc("exec_retries_total", "", 1);
+            } else {
+                reg.inc("exec_failures_total", "", 1);
+            }
+        }
+        ExecEvent::ChunkMigrated { .. } => {
+            reg.inc("exec_migrations_total", "", 1);
+        }
+        ExecEvent::LanePreempted { .. } => {
+            reg.inc("exec_preemptions_total", "", 1);
+        }
+        ExecEvent::TaskPriced { .. } => {
+            reg.inc("exec_tasks_priced_total", "", 1);
+        }
+        ExecEvent::Finished { makespan_secs, .. } => {
+            reg.observe("exec_makespan_secs", "", *makespan_secs);
+            reg.set_gauge("exec_chunks_outstanding", "", 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_atomically() {
+        let c = ExecCounters::default();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        c.add_chunk();
+                        c.add_retry();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.chunks(), 400);
+        assert_eq!(c.retries(), 400);
+        assert_eq!(c.failures(), 0);
+    }
+
+    #[test]
+    fn events_land_in_the_registry() {
+        let reg = MetricsRegistry::default();
+        record_exec_event(&reg, None, &ExecEvent::Started { chunks: 4, tasks: 2 });
+        record_exec_event(
+            &reg,
+            None,
+            &ExecEvent::ChunkDone {
+                platform: 1,
+                task: 0,
+                offset: 0,
+                n: 100,
+                latency_secs: 0.5,
+                cold: true,
+                done: 1,
+                total: 4,
+            },
+        );
+        record_exec_event(
+            &reg,
+            None,
+            &ExecEvent::ChunkFailed {
+                platform: 0,
+                task: 0,
+                offset: 0,
+                n: 10,
+                attempt: 1,
+                error: "boom".into(),
+                will_retry: true,
+                rehomed_to: None,
+            },
+        );
+        record_exec_event(
+            &reg,
+            None,
+            &ExecEvent::Finished { makespan_secs: 1.0, cost: 2.0, failures: 0 },
+        );
+        assert_eq!(reg.counter_value("exec_runs_total", ""), 1);
+        assert_eq!(reg.counter_value("exec_retries_total", ""), 1);
+        let snap = reg.snapshot(Some("exec_chunk_latency_secs"));
+        let values = snap.get("exec_chunk_latency_secs").unwrap().get("values").unwrap();
+        assert_eq!(
+            values.get("platform=1").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(reg.gauge_value("exec_chunks_outstanding", ""), Some(0.0));
+    }
+}

@@ -1,0 +1,137 @@
+//! The telemetry plane: metrics, tracing spans, and profiling hooks.
+//!
+//! Dependency-free observability for the whole solve → execute → schedule →
+//! serve pipeline (see `docs/OBSERVABILITY.md` for the metric catalogue and
+//! span taxonomy):
+//!
+//! - [`MetricsRegistry`] — typed counters, gauges and fixed-bucket
+//!   histograms keyed by `(name, label)`, lock-striped with an atomic fast
+//!   path, serialised through [`util::json`](crate::util::json). One
+//!   registry is process-global ([`global`]) for code with no session in
+//!   reach (the B&B solver); every
+//!   [`TradeoffSession`](crate::api::TradeoffSession) owns a private one so
+//!   concurrent sessions never mix counts. The serve `metrics` op and the
+//!   `cloudshapes metrics` command snapshot both, merged.
+//! - [`span!`](crate::span) / [`trace`] — RAII tracing spans with parent
+//!   ids, ring-buffered per thread and exportable as a Chrome-trace JSON
+//!   timeline (`cloudshapes trace --out trace.json`).
+//! - [`hooks`] — the [`ExecEvent`](crate::coordinator::ExecEvent) → registry
+//!   bridge and the shared per-run [`ExecCounters`] tally.
+//!
+//! Everything here is observational: hooks read values the engine already
+//! computes and never alter control flow, so with `[obs] enabled = false`
+//! (or `true`) instrumented paths produce bit-identical results.
+
+pub mod histogram;
+pub mod hooks;
+pub mod registry;
+pub mod trace;
+
+use std::sync::{Arc, Mutex};
+
+use crate::api::error::{CloudshapesError, Result};
+
+pub use histogram::{default_bounds, Histogram};
+pub use hooks::{record_exec_event, ExecCounters};
+pub use registry::{Counter, Gauge, MetricsRegistry, DEFAULT_HIST_BUCKETS};
+pub use trace::Span;
+
+/// `[obs]` config table: session-scoped telemetry controls.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Master switch for the session registry and span tracing. Off, every
+    /// instrumented path still runs identically — it just records nothing.
+    pub enabled: bool,
+    /// Log-spaced histogram bucket count (bounds span 1e-6..1e6).
+    pub hist_buckets: usize,
+    /// Per-thread completed-span ring capacity.
+    pub trace_ring: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: true, hist_buckets: DEFAULT_HIST_BUCKETS, trace_ring: 4096 }
+    }
+}
+
+impl ObsConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(2..=512).contains(&self.hist_buckets) {
+            return Err(CloudshapesError::config(format!(
+                "[obs] hist_buckets must be in 2..=512, got {}",
+                self.hist_buckets
+            )));
+        }
+        if !(16..=1_048_576).contains(&self.trace_ring) {
+            return Err(CloudshapesError::config(format!(
+                "[obs] trace_ring must be in 16..=1048576, got {}",
+                self.trace_ring
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build this config's session registry and apply the process-global
+    /// knobs (trace enablement + ring capacity; last session built wins).
+    pub fn build_registry(&self) -> Arc<MetricsRegistry> {
+        trace::set_enabled(self.enabled);
+        trace::set_ring_capacity(self.trace_ring);
+        Arc::new(MetricsRegistry::new(self.enabled, default_bounds(self.hist_buckets)))
+    }
+}
+
+static GLOBAL: Mutex<Option<Arc<MetricsRegistry>>> = Mutex::new(None);
+
+/// The process-global registry — the home of metrics recorded where no
+/// session is in reach (e.g. the B&B solver). Enabled by default.
+pub fn global() -> Arc<MetricsRegistry> {
+    let mut g = GLOBAL.lock().unwrap();
+    g.get_or_insert_with(|| Arc::new(MetricsRegistry::default())).clone()
+}
+
+/// Open a tracing span: `span!("solve")` or `span!("solve", strategy)`.
+/// Returns a [`Span`] guard; the span closes (and is buffered for export)
+/// when the guard drops. The argument form stringifies its second operand
+/// only when tracing is enabled.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::trace::Span::enter($name, None)
+    };
+    ($name:expr, $arg:expr) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::Span::enter(
+                $name,
+                Some(::std::string::ToString::to_string(&$arg)),
+            )
+        } else {
+            $crate::obs::trace::Span::disabled()
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validates_ranges() {
+        assert!(ObsConfig::default().validate().is_ok());
+        assert!(ObsConfig { hist_buckets: 1, ..Default::default() }.validate().is_err());
+        assert!(ObsConfig { hist_buckets: 513, ..Default::default() }.validate().is_err());
+        assert!(ObsConfig { trace_ring: 4, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let a = global();
+        a.counter("obs_mod_test_total", "").add(2);
+        assert_eq!(global().counter_value("obs_mod_test_total", ""), 2);
+    }
+
+    #[test]
+    fn span_macro_compiles_in_both_forms() {
+        let _a = crate::span!("obs_mod_test_span");
+        let _b = crate::span!("obs_mod_test_span_arg", 42);
+    }
+}

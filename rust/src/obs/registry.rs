@@ -1,0 +1,348 @@
+//! The typed metrics registry: counters, gauges and fixed-bucket
+//! histograms, keyed by `(name, label)`.
+//!
+//! Layout follows the "lock-striped map of atomic cells" pattern: the
+//! registry holds a small fixed number of shards, each a mutex over a
+//! `BTreeMap` from key to metric cell. The mutex is only taken to *resolve*
+//! a cell (first use per key, or a snapshot); every update after that is a
+//! relaxed atomic on the cell itself, so hot paths — per-chunk events, per
+//! serve request — never serialise against each other beyond one cache
+//! line. Callers that own a key for its lifetime (e.g. the session's
+//! solution cache) resolve the `Arc` handle once and skip the map entirely.
+//!
+//! Labels are a single pre-formatted string (`platform=cpu-sim`,
+//! `strategy=milp`, `op=evaluate`); `docs/OBSERVABILITY.md` catalogues the
+//! names and label schemes in use.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::histogram::{default_bounds, Histogram};
+use crate::util::json::{obj, Json};
+
+const SHARDS: usize = 8;
+
+/// Bucket count for registries built without an `[obs]` config.
+pub const DEFAULT_HIST_BUCKETS: usize = 24;
+
+/// A monotonically increasing u64. Counting is unconditional — views like
+/// the session's cache stats depend on it even when telemetry is disabled;
+/// the registry's `enabled` flag gates only the name-addressed record
+/// helpers.
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.value.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins f64 cell; `value()` is `None` until first set.
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+    set: AtomicBool,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+        self.set.store(true, Ordering::Release);
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        if self.set.load(Ordering::Acquire) {
+            Some(f64::from_bits(self.bits.load(Ordering::Relaxed)))
+        } else {
+            None
+        }
+    }
+}
+
+enum Cell {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Cell {
+    fn kind(&self) -> &'static str {
+        match self {
+            Cell::Counter(_) => "counter",
+            Cell::Gauge(_) => "gauge",
+            Cell::Histogram(_) => "histogram",
+        }
+    }
+
+    fn value_json(&self) -> Json {
+        match self {
+            Cell::Counter(c) => Json::Num(c.value() as f64),
+            Cell::Gauge(g) => g.value().map(Json::Num).unwrap_or(Json::Null),
+            Cell::Histogram(h) => h.to_json(),
+        }
+    }
+}
+
+type Shard = Mutex<BTreeMap<(String, String), Cell>>;
+
+/// See the module docs. One registry is process-global ([`super::global`]);
+/// each [`TradeoffSession`](crate::api::TradeoffSession) additionally owns
+/// a private one so concurrent sessions never mix their counts.
+pub struct MetricsRegistry {
+    enabled: AtomicBool,
+    bounds: Arc<Vec<f64>>,
+    shards: Vec<Shard>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new(true, default_bounds(DEFAULT_HIST_BUCKETS))
+    }
+}
+
+impl MetricsRegistry {
+    /// A registry whose histograms all share the `bounds` ladder. `enabled`
+    /// gates the name-addressed record helpers ([`inc`](Self::inc),
+    /// [`observe`](Self::observe), [`set_gauge`](Self::set_gauge)); handle
+    /// reads and snapshots work regardless.
+    pub fn new(enabled: bool, bounds: Vec<f64>) -> MetricsRegistry {
+        assert!(!bounds.is_empty(), "registry needs at least one histogram bound");
+        MetricsRegistry {
+            enabled: AtomicBool::new(enabled),
+            bounds: Arc::new(bounds),
+            shards: (0..SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, enabled: bool) {
+        self.enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    fn shard(&self, name: &str, label: &str) -> &Shard {
+        let mut h = DefaultHasher::new();
+        name.hash(&mut h);
+        label.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Resolve (or create) the counter cell for `(name, label)`. Panics if
+    /// the key is already registered as a different metric type — metric
+    /// names are static program text, so a clash is a programming error.
+    pub fn counter(&self, name: &str, label: &str) -> Arc<Counter> {
+        let mut g = self.shard(name, label).lock().unwrap();
+        let cell = g
+            .entry((name.to_string(), label.to_string()))
+            .or_insert_with(|| Cell::Counter(Arc::new(Counter::default())));
+        match cell {
+            Cell::Counter(c) => c.clone(),
+            other => panic!("metric '{name}' is a {}, not a counter", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, label: &str) -> Arc<Gauge> {
+        let mut g = self.shard(name, label).lock().unwrap();
+        let cell = g
+            .entry((name.to_string(), label.to_string()))
+            .or_insert_with(|| Cell::Gauge(Arc::new(Gauge::default())));
+        match cell {
+            Cell::Gauge(c) => c.clone(),
+            other => panic!("metric '{name}' is a {}, not a gauge", other.kind()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, label: &str) -> Arc<Histogram> {
+        let mut g = self.shard(name, label).lock().unwrap();
+        let bounds = self.bounds.clone();
+        let cell = g
+            .entry((name.to_string(), label.to_string()))
+            .or_insert_with(|| Cell::Histogram(Arc::new(Histogram::new(bounds))));
+        match cell {
+            Cell::Histogram(c) => c.clone(),
+            other => panic!("metric '{name}' is a {}, not a histogram", other.kind()),
+        }
+    }
+
+    // -- name-addressed record helpers (no-ops when disabled) ---------------
+
+    pub fn inc(&self, name: &str, label: &str, v: u64) {
+        if self.enabled() {
+            self.counter(name, label).add(v);
+        }
+    }
+
+    pub fn set_gauge(&self, name: &str, label: &str, v: f64) {
+        if self.enabled() {
+            self.gauge(name, label).set(v);
+        }
+    }
+
+    pub fn observe(&self, name: &str, label: &str, v: f64) {
+        if self.enabled() {
+            self.histogram(name, label).observe(v);
+        }
+    }
+
+    // -- reads --------------------------------------------------------------
+
+    /// Current value of a counter; 0 when the key was never registered.
+    pub fn counter_value(&self, name: &str, label: &str) -> u64 {
+        let g = self.shard(name, label).lock().unwrap();
+        match g.get(&(name.to_string(), label.to_string())) {
+            Some(Cell::Counter(c)) => c.value(),
+            _ => 0,
+        }
+    }
+
+    /// Current value of a gauge; `None` when never registered or never set.
+    pub fn gauge_value(&self, name: &str, label: &str) -> Option<f64> {
+        let g = self.shard(name, label).lock().unwrap();
+        match g.get(&(name.to_string(), label.to_string())) {
+            Some(Cell::Gauge(c)) => c.value(),
+            _ => None,
+        }
+    }
+
+    /// Serialise every metric (optionally only names containing `filter`)
+    /// as `{name: {type, values: {label: value}}}` — deterministic order
+    /// via `BTreeMap`, numbers guarded finite by the cells themselves.
+    pub fn snapshot(&self, filter: Option<&str>) -> Json {
+        let mut out: BTreeMap<String, Json> = BTreeMap::new();
+        self.snapshot_into(&mut out, filter);
+        Json::Obj(out)
+    }
+
+    /// As [`snapshot`](Self::snapshot), merging into `out` (the session
+    /// snapshot overlays the process-global one this way).
+    pub fn snapshot_into(&self, out: &mut BTreeMap<String, Json>, filter: Option<&str>) {
+        // Group shard entries by name first so each name serialises with a
+        // complete label map even though labels stripe across shards.
+        let mut grouped: BTreeMap<String, (&'static str, BTreeMap<String, Json>)> =
+            BTreeMap::new();
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            for ((name, label), cell) in g.iter() {
+                if let Some(f) = filter {
+                    if !name.contains(f) {
+                        continue;
+                    }
+                }
+                let entry = grouped
+                    .entry(name.clone())
+                    .or_insert_with(|| (cell.kind(), BTreeMap::new()));
+                entry.1.insert(label.clone(), cell.value_json());
+            }
+        }
+        for (name, (kind, values)) in grouped {
+            out.insert(
+                name,
+                obj(vec![("type", kind.into()), ("values", Json::Obj(values))]),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_record_and_snapshot() {
+        let r = MetricsRegistry::default();
+        r.inc("requests_total", "op=ping", 2);
+        r.inc("requests_total", "op=evaluate", 1);
+        r.set_gauge("depth", "", 3.5);
+        r.observe("latency_secs", "op=ping", 0.25);
+        let snap = r.snapshot(None);
+        let reqs = snap.get("requests_total").unwrap();
+        assert_eq!(reqs.get("type").unwrap().as_str(), Some("counter"));
+        assert_eq!(
+            reqs.get("values").unwrap().get("op=ping").unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(
+            reqs.get("values").unwrap().get("op=evaluate").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(snap.get("depth").unwrap().get("type").unwrap().as_str(), Some("gauge"));
+        let hist = snap.get("latency_secs").unwrap().get("values").unwrap();
+        assert_eq!(hist.get("op=ping").unwrap().get("count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing_by_name() {
+        let r = MetricsRegistry::new(false, vec![1.0]);
+        r.inc("c", "", 5);
+        r.observe("h", "", 1.0);
+        r.set_gauge("g", "", 1.0);
+        assert_eq!(r.snapshot(None), Json::Obj(BTreeMap::new()));
+        assert_eq!(r.counter_value("c", ""), 0);
+        // Handle-addressed counters keep working (cache stats path).
+        let c = r.counter("always", "");
+        c.inc();
+        assert_eq!(r.counter_value("always", ""), 1);
+    }
+
+    #[test]
+    fn filter_selects_by_name_substring() {
+        let r = MetricsRegistry::default();
+        r.inc("exec_retries_total", "", 1);
+        r.inc("serve_requests_total", "op=ping", 1);
+        let snap = r.snapshot(Some("exec_"));
+        assert!(snap.get("exec_retries_total").is_some());
+        assert!(snap.get("serve_requests_total").is_none());
+    }
+
+    #[test]
+    fn handles_are_shared_across_lookups_and_threads() {
+        let r = Arc::new(MetricsRegistry::default());
+        let c = r.counter("n", "x=1");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        r.counter("n", "x=1").inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), 4000);
+        assert_eq!(r.counter_value("n", "x=1"), 4000);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn type_clash_panics() {
+        let r = MetricsRegistry::default();
+        r.counter("dual", "");
+        r.gauge("dual", "");
+    }
+
+    #[test]
+    fn snapshot_serialises_through_util_json() {
+        let r = MetricsRegistry::default();
+        r.observe("h", "platform=a", 3.0);
+        r.inc("c", "", u64::MAX / 2);
+        let text = r.snapshot(None).to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).expect("valid json");
+        assert!(back.get("h").is_some());
+    }
+}

@@ -1,0 +1,277 @@
+//! Lightweight tracing spans with Chrome-trace export.
+//!
+//! A [`Span`] is an RAII guard created by the [`span!`](crate::span) macro:
+//! entering records the start time and pushes the span onto a per-thread
+//! parent stack (so nested spans carry parent ids); dropping computes the
+//! duration and appends one completed-span event to the thread's ring
+//! buffer. Rings are bounded (oldest events evicted), registered globally
+//! on first use per thread, and drained by [`chrome_trace`] into the Chrome
+//! `about://tracing` / Perfetto JSON object format — one `"ph": "X"`
+//! complete event per span, microsecond timestamps relative to the first
+//! span of the process.
+//!
+//! Tracing is process-global and cheap: a disabled check is one relaxed
+//! atomic load, and span frequency in this codebase is per solve / per
+//! epoch / per request, never per chunk.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static RING_CAP: AtomicUsize = AtomicUsize::new(4096);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+/// All per-thread rings ever registered (threads may exit; their events
+/// remain exportable).
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+/// Lazily pinned process epoch all timestamps are relative to.
+static EPOCH: Mutex<Option<Instant>> = Mutex::new(None);
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Cap each thread's ring at `cap` completed spans (oldest evicted).
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAP.store(cap.max(1), Ordering::Relaxed);
+}
+
+fn now_us() -> u64 {
+    let mut g = EPOCH.lock().unwrap();
+    let t0 = g.get_or_insert_with(Instant::now);
+    t0.elapsed().as_micros() as u64
+}
+
+#[derive(Clone)]
+struct SpanEvent {
+    name: &'static str,
+    arg: Option<String>,
+    id: u64,
+    parent: Option<u64>,
+    tid: u64,
+    start_us: u64,
+    dur_us: u64,
+}
+
+struct Ring {
+    events: Mutex<VecDeque<SpanEvent>>,
+}
+
+struct ThreadCtx {
+    tid: u64,
+    ring: Arc<Ring>,
+    /// Open span ids, innermost last — the parent chain.
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+fn with_ctx<T>(f: impl FnOnce(&mut ThreadCtx) -> T) -> T {
+    LOCAL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let ctx = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Ring { events: Mutex::new(VecDeque::new()) });
+            RINGS.lock().unwrap().push(ring.clone());
+            ThreadCtx { tid: NEXT_TID.fetch_add(1, Ordering::Relaxed), ring, stack: Vec::new() }
+        });
+        f(ctx)
+    })
+}
+
+/// An open span; dropping it records the completed event. Created through
+/// the [`span!`](crate::span) macro.
+pub struct Span(Option<ActiveSpan>);
+
+struct ActiveSpan {
+    name: &'static str,
+    arg: Option<String>,
+    id: u64,
+    parent: Option<u64>,
+    tid: u64,
+    start_us: u64,
+}
+
+impl Span {
+    /// A no-op span (tracing disabled).
+    pub fn disabled() -> Span {
+        Span(None)
+    }
+
+    pub fn enter(name: &'static str, arg: Option<String>) -> Span {
+        if !enabled() {
+            return Span(None);
+        }
+        let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+        let start_us = now_us();
+        let (tid, parent) = with_ctx(|ctx| {
+            let parent = ctx.stack.last().copied();
+            ctx.stack.push(id);
+            (ctx.tid, parent)
+        });
+        Span(Some(ActiveSpan { name, arg, id, parent, tid, start_us }))
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(active) = self.0.take() else { return };
+        let dur_us = now_us().saturating_sub(active.start_us);
+        with_ctx(|ctx| {
+            // Spans are scope-bound, so the innermost open span closes
+            // first; tolerate a mismatch anyway (a span moved across a
+            // thread boundary) rather than corrupt the stack.
+            if ctx.stack.last() == Some(&active.id) {
+                ctx.stack.pop();
+            } else if let Some(pos) = ctx.stack.iter().rposition(|&id| id == active.id) {
+                ctx.stack.remove(pos);
+            }
+            let mut events = ctx.ring.events.lock().unwrap();
+            let cap = RING_CAP.load(Ordering::Relaxed);
+            while events.len() >= cap {
+                events.pop_front();
+            }
+            events.push_back(SpanEvent {
+                name: active.name,
+                arg: active.arg,
+                id: active.id,
+                parent: active.parent,
+                tid: active.tid,
+                start_us: active.start_us,
+                dur_us,
+            });
+        });
+    }
+}
+
+/// Drop every buffered span (the CLI clears before a traced run so the
+/// export covers exactly that run).
+pub fn clear() {
+    for ring in RINGS.lock().unwrap().iter() {
+        ring.events.lock().unwrap().clear();
+    }
+}
+
+/// Export everything buffered as a Chrome-trace JSON object
+/// (`{"traceEvents": [...]}`, loadable in `about://tracing` / Perfetto).
+pub fn chrome_trace() -> Json {
+    let mut all: Vec<SpanEvent> = Vec::new();
+    for ring in RINGS.lock().unwrap().iter() {
+        all.extend(ring.events.lock().unwrap().iter().cloned());
+    }
+    all.sort_by_key(|e| (e.start_us, e.id));
+    let events: Vec<Json> = all
+        .into_iter()
+        .map(|e| {
+            let mut args = vec![("id", Json::Num(e.id as f64))];
+            if let Some(p) = e.parent {
+                args.push(("parent", Json::Num(p as f64)));
+            }
+            if let Some(a) = e.arg {
+                args.push(("arg", Json::Str(a)));
+            }
+            obj(vec![
+                ("name", e.name.into()),
+                ("cat", "cloudshapes".into()),
+                ("ph", "X".into()),
+                ("ts", Json::Num(e.start_us as f64)),
+                ("dur", Json::Num(e.dur_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+                ("args", obj(args)),
+            ])
+        })
+        .collect();
+    obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// Serialises tests that mutate process-global trace state (the enabled
+/// flag or ring contents, via [`set_enabled`]/[`clear`]) — without it a
+/// concurrent test's spans could be torn down mid-assertion.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Trace state is process-global; these tests run in one process with
+    // the rest of the suite, so they assert on their OWN spans (found by
+    // name) rather than on global emptiness — and serialise against each
+    // other (and the CLI `trace` test, which clears the rings) through
+    // [`test_guard`] because they toggle the global enabled flag.
+
+    #[test]
+    fn spans_nest_with_parent_ids() {
+        let _g = test_guard();
+        set_enabled(true);
+        let (outer_id, inner_id);
+        {
+            let outer = Span::enter("trace_test_outer", None);
+            outer_id = outer.0.as_ref().unwrap().id;
+            {
+                let inner = Span::enter("trace_test_inner", Some("k=v".into()));
+                inner_id = inner.0.as_ref().unwrap().id;
+                assert_eq!(inner.0.as_ref().unwrap().parent, Some(outer_id));
+            }
+        }
+        let trace = chrome_trace();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let inner = events
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(Json::as_str) == Some("trace_test_inner")
+                    && e.get("args").and_then(|a| a.get("id")).and_then(Json::as_u64)
+                        == Some(inner_id)
+            })
+            .expect("inner span exported");
+        assert_eq!(
+            inner.get("args").unwrap().get("parent").and_then(Json::as_u64),
+            Some(outer_id)
+        );
+        assert_eq!(
+            inner.get("args").unwrap().get("arg").and_then(Json::as_str),
+            Some("k=v")
+        );
+        assert_eq!(inner.get("ph").and_then(Json::as_str), Some("X"));
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = test_guard();
+        set_enabled(false);
+        {
+            let _s = Span::enter("trace_test_disabled", None);
+        }
+        set_enabled(true);
+        let trace = chrome_trace();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("trace_test_disabled")));
+    }
+
+    #[test]
+    fn export_is_valid_json() {
+        let _g = test_guard();
+        set_enabled(true);
+        {
+            let _s = Span::enter("trace_test_json", Some("quote \"q\"".into()));
+        }
+        let text = chrome_trace().to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

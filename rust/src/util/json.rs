@@ -166,7 +166,12 @@ fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
 }
 
 fn write_num(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+    if !n.is_finite() {
+        // NaN/Inf have no JSON representation (RFC 8259 §6); emit null
+        // rather than corrupt the document. Metric snapshots guard their
+        // inputs, but a defence here keeps every writer safe.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
         out.push_str(&format!("{}", n as i64));
     } else {
         out.push_str(&format!("{}", n));
@@ -482,5 +487,72 @@ mod tests {
     fn error_offsets_are_reported() {
         let e = Json::parse("[1, x]").unwrap_err();
         assert_eq!(e.offset, 4);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // The metrics snapshot path must never emit `NaN`/`inf` tokens —
+        // they are not JSON. Non-finite values degrade to null.
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string_compact(), "null");
+        let v = obj(vec![("x", Json::Num(f64::NAN))]);
+        assert_eq!(Json::parse(&v.to_string_compact()).unwrap().get("x"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn nan_and_infinity_tokens_are_rejected_on_parse() {
+        assert!(Json::parse("NaN").is_err());
+        assert!(Json::parse("Infinity").is_err());
+        assert!(Json::parse("-Infinity").is_err());
+        assert!(Json::parse("{\"x\": NaN}").is_err());
+    }
+
+    #[test]
+    fn u64_counters_above_2_pow_53_stay_valid_json() {
+        // Counter cells are u64; above 2^53 the f64 carrier loses exactness
+        // but serialization must stay a plain decimal JSON number that
+        // round-trips through the parser.
+        let big = (1u64 << 60) as f64;
+        let s = Json::Num(big).to_string_compact();
+        assert!(!s.contains('e') && !s.contains('E'), "no exponent form: {s}");
+        assert!(s.chars().all(|c| c.is_ascii_digit()), "plain decimal: {s}");
+        assert_eq!(Json::parse(&s).unwrap(), Json::Num(big));
+        // The checked accessor refuses values past exact-integer range...
+        assert_eq!(Json::Num(big).as_u64(), None);
+        // ...and admits the boundary itself.
+        assert_eq!(Json::Num(2f64.powi(53)).as_u64(), Some(1u64 << 53));
+    }
+
+    #[test]
+    fn empty_containers_roundtrip() {
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(Vec::new()));
+        assert_eq!(Json::Obj(BTreeMap::new()).to_string_compact(), "{}");
+        assert_eq!(Json::Obj(BTreeMap::new()).to_string_pretty(), "{}");
+        assert_eq!(Json::Arr(Vec::new()).to_string_compact(), "[]");
+        let v = Json::parse(r#"{"empty": {}, "arr": []}"#).unwrap();
+        assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn deeply_nested_objects_roundtrip() {
+        // A labelled registry snapshot nests name -> labels -> histogram
+        // fields; make sure depth is limited only by input, not the writer.
+        let mut v = Json::Num(1.0);
+        for i in 0..64 {
+            let mut m = BTreeMap::new();
+            m.insert(format!("k{i}"), v);
+            v = Json::Obj(m);
+        }
+        let compact = v.to_string_compact();
+        assert_eq!(Json::parse(&compact).unwrap(), v);
+        let pretty = v.to_string_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        let mut cur = &v;
+        for i in (0..64).rev() {
+            cur = cur.get(&format!("k{i}")).expect("nesting level present");
+        }
+        assert_eq!(cur, &Json::Num(1.0));
     }
 }

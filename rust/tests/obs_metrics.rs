@@ -1,0 +1,242 @@
+//! End-to-end telemetry-plane coverage: one `evaluate` populates solver,
+//! executor, and cache metrics in the session registry; background runs and
+//! the final report agree with the single event-loop tally; the Chrome-trace
+//! export is well-formed; and `[obs] enabled = false` leaves every computed
+//! result bit-identical while the always-on tallies (cache, run counters)
+//! keep serving `ping`.
+//!
+//! Trace state and the B&B metrics are process-global, so every test here
+//! takes one lock — a disabled session build flips the global trace flag,
+//! which must not race the trace-export test.
+
+use std::sync::{Mutex, MutexGuard};
+
+use cloudshapes::api::{SessionBuilder, TradeoffSession};
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::executor::{execute_with, ExecutorConfig, RebalanceConfig};
+use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet};
+use cloudshapes::obs::{self, trace, MetricsRegistry};
+use cloudshapes::platforms::spec::small_cluster;
+use cloudshapes::platforms::{Cluster, SimConfig};
+use cloudshapes::util::json::Json;
+use cloudshapes::workload::{generate, GeneratorConfig};
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn quick_session(obs_enabled: bool) -> TradeoffSession {
+    let mut cfg = ExperimentConfig::quick();
+    cfg.obs.enabled = obs_enabled;
+    SessionBuilder::from_config(cfg).partitioner("heuristic").build().unwrap()
+}
+
+#[test]
+fn evaluate_populates_solver_executor_and_cache_metrics() {
+    let _g = guard();
+    let s = quick_session(true);
+    let ev = s.evaluate_with(Some("heuristic"), None).unwrap();
+    let m = s.metrics(None);
+
+    // Solve latency lands as a per-strategy histogram.
+    let solve = m.get("solve_latency_secs").expect("solve histogram");
+    assert_eq!(solve.get("type").and_then(Json::as_str), Some("histogram"));
+    let per_strategy = solve.get("values").unwrap().get("strategy=heuristic").unwrap();
+    assert_eq!(per_strategy.get("count").unwrap().as_u64(), Some(1));
+
+    // Per-platform chunk latency: one observation per completed chunk.
+    let chunk = m.get("exec_chunk_latency_secs").expect("chunk histogram");
+    let values = chunk.get("values").unwrap().as_obj().unwrap();
+    assert!(!values.is_empty() && values.keys().all(|k| k.starts_with("platform=")));
+    let observed: u64 =
+        values.values().map(|v| v.get("count").unwrap().as_u64().unwrap()).sum();
+    assert_eq!(observed, ev.execution.chunks as u64);
+
+    // Predicted-vs-measured error is labelled by platform AND task.
+    let err = m.get("exec_model_error_rel").expect("model error histogram");
+    let labels = err.get("values").unwrap().as_obj().unwrap();
+    assert!(!labels.is_empty());
+    assert!(labels.keys().all(|k| k.contains("platform=") && k.contains("task=")));
+
+    // The registry counters ARE the report's counters — one tally, two
+    // views, so they can never disagree.
+    let reg = s.metrics_registry();
+    assert_eq!(reg.counter_value("exec_retries_total", ""), ev.execution.retries as u64);
+    assert_eq!(
+        reg.counter_value("exec_migrations_total", ""),
+        ev.execution.migrations as u64
+    );
+    assert_eq!(
+        reg.counter_value("exec_preemptions_total", ""),
+        ev.execution.preemptions as u64
+    );
+    assert_eq!(reg.counter_value("exec_failures_total", ""), ev.execution.failures as u64);
+    assert_eq!(reg.counter_value("exec_runs_total", ""), 1);
+    assert_eq!(reg.gauge_value("exec_chunks_outstanding", ""), Some(0.0));
+
+    // One makespan observation for the run.
+    let makespan = m.get("exec_makespan_secs").unwrap().get("values").unwrap();
+    assert_eq!(makespan.get("").unwrap().get("count").unwrap().as_u64(), Some(1));
+
+    // Cache stats and registry read the same counters.
+    let stats = s.cache_stats();
+    assert_eq!(reg.counter_value("cache_hits_total", ""), stats.hits);
+    assert_eq!(reg.counter_value("cache_misses_total", ""), stats.misses);
+    assert_eq!(stats.misses, 1);
+
+    // A name filter narrows the snapshot.
+    let filtered = s.metrics(Some("exec_"));
+    let names = filtered.as_obj().unwrap();
+    assert!(!names.is_empty() && names.keys().all(|k| k.contains("exec_")));
+}
+
+#[test]
+fn milp_solve_merges_global_bnb_metrics_into_the_snapshot() {
+    let _g = guard();
+    let mut cfg = ExperimentConfig::quick();
+    cfg.milp.time_limit_secs = 2.0;
+    let s = SessionBuilder::from_config(cfg).partitioner("milp").build().unwrap();
+    s.partition(None).unwrap();
+    // B&B records into the process-global registry; the session snapshot
+    // overlays it, so both appear in one `metrics` response.
+    let m = s.metrics(None);
+    let nodes = m.get("bnb_nodes_total").expect("global B&B counter in merged snapshot");
+    assert!(nodes.get("values").unwrap().get("").unwrap().as_u64().unwrap() >= 1);
+    let solves = m.get("bnb_solve_secs").expect("global B&B histogram");
+    let solve_count =
+        solves.get("values").unwrap().get("").unwrap().get("count").unwrap().as_u64();
+    assert!(solve_count.unwrap() >= 1);
+    assert!(m.get("solve_latency_secs").is_some(), "session metrics ride along");
+}
+
+#[test]
+fn background_run_status_matches_the_registry_tally() {
+    use cloudshapes::api::session::RunState;
+    let _g = guard();
+    let s = quick_session(true);
+    let id = s.start_run(Some("heuristic"), None).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let status = loop {
+        let st = s.run_status(id).expect("run tracked");
+        match &st.state {
+            RunState::Running => {
+                assert!(std::time::Instant::now() < deadline, "run never finished");
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            RunState::Done => break st,
+            RunState::Failed(msg) => panic!("run failed: {msg}"),
+        }
+    };
+    // The status view and the metrics registry derive from the same event
+    // stream — the executor's one tally.
+    let reg = s.metrics_registry();
+    assert_eq!(status.chunks_done, status.chunks_total);
+    assert_eq!(reg.counter_value("exec_runs_total", ""), 1);
+    assert_eq!(reg.counter_value("exec_retries_total", ""), status.retries as u64);
+    assert_eq!(reg.counter_value("exec_failures_total", ""), status.failures as u64);
+    assert_eq!(reg.gauge_value("exec_chunks_outstanding", ""), Some(0.0));
+    let m = s.metrics(Some("exec_chunk_latency_secs"));
+    let observed: u64 = m
+        .get("exec_chunk_latency_secs")
+        .unwrap()
+        .get("values")
+        .unwrap()
+        .as_obj()
+        .unwrap()
+        .values()
+        .map(|v| v.get("count").unwrap().as_u64().unwrap())
+        .sum();
+    assert_eq!(observed, status.chunks_done as u64);
+}
+
+#[test]
+fn trace_export_is_wellformed_chrome_json() {
+    let _g = guard();
+    trace::set_enabled(true);
+    trace::clear();
+    let s = quick_session(true);
+    s.partition(None).unwrap();
+    let text = trace::chrome_trace().to_string_pretty();
+    let parsed = Json::parse(&text).expect("chrome trace is valid JSON");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("solve")),
+        "solve span exported"
+    );
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(e.get("cat").and_then(Json::as_str), Some("cloudshapes"));
+        assert!(e.get("ts").unwrap().as_f64().is_some());
+        assert!(e.get("dur").unwrap().as_f64().is_some());
+        assert!(e.get("tid").unwrap().as_u64().is_some());
+        assert!(e.get("args").unwrap().get("id").unwrap().as_u64().is_some());
+    }
+}
+
+#[test]
+fn disabled_obs_is_bit_identical_and_keeps_ping_tallies() {
+    let _g = guard();
+    let on = quick_session(true);
+    let off = quick_session(false);
+
+    // Identical configs (modulo the obs flag) must partition identically —
+    // the hooks only read values the engine already computes.
+    let p_on = on.partition(None).unwrap();
+    let p_off = off.partition(None).unwrap();
+    assert_eq!(p_on.predicted_latency_s.to_bits(), p_off.predicted_latency_s.to_bits());
+    assert_eq!(p_on.predicted_cost.to_bits(), p_off.predicted_cost.to_bits());
+    let m = on.models();
+    for i in 0..m.mu {
+        for j in 0..m.tau {
+            assert_eq!(
+                p_on.alloc.get(i, j).to_bits(),
+                p_off.alloc.get(i, j).to_bits(),
+                "allocation differs at ({i},{j})"
+            );
+        }
+    }
+
+    // The disabled registry records no name-addressed telemetry...
+    assert!(off.metrics(None).get("solve_latency_secs").is_none());
+    // ...but the handle-backed tallies `ping` reads still count.
+    assert_eq!(off.cache_stats().misses, 1);
+    assert_eq!(off.metrics_registry().counter_value("cache_misses_total", ""), 1);
+
+    // Restore the global trace flag for the rest of the suite: the
+    // disabled session's build turned it off process-wide.
+    trace::set_enabled(true);
+
+    // Executor path, noise-free simulator: hooks-on vs hooks-off reports
+    // are bit-identical (rebalance off keeps the schedule deterministic).
+    let specs = small_cluster();
+    let sim = SimConfig::exact();
+    let workload = generate(&GeneratorConfig::small(8, 0.02, 7));
+    let models = ModelSet::from_specs(&specs, &workload);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let cfg = ExecutorConfig {
+        chunk_sims: 1 << 15,
+        rebalance: RebalanceConfig { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let bare_cluster = Cluster::simulated(&specs, &sim, 42).unwrap();
+    let bare =
+        execute_with(&bare_cluster, &workload, &alloc, &cfg, Some(&models), &mut |_| {})
+            .unwrap();
+    let reg = MetricsRegistry::default();
+    let hooked_cluster = Cluster::simulated(&specs, &sim, 42).unwrap();
+    let hooked =
+        execute_with(&hooked_cluster, &workload, &alloc, &cfg, Some(&models), &mut |ev| {
+            obs::record_exec_event(&reg, Some(&models), ev);
+        })
+        .unwrap();
+    assert_eq!(bare.makespan_secs.to_bits(), hooked.makespan_secs.to_bits());
+    assert_eq!(bare.cost.to_bits(), hooked.cost.to_bits());
+    assert_eq!(
+        (bare.chunks, bare.retries, bare.migrations, bare.preemptions, bare.failures),
+        (hooked.chunks, hooked.retries, hooked.migrations, hooked.preemptions, hooked.failures)
+    );
+    assert_eq!(reg.counter_value("exec_runs_total", ""), 1);
+}
