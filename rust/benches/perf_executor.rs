@@ -1,8 +1,9 @@
 //! Perf: the cluster executor — static (one-shot) vs chunked vs
 //! chunked+rebalance on the paper workload (noise-free sim), a straggler
-//! recovery scenario, and the native-mirror Monte Carlo kernel's
-//! paths/second. Emits `results/BENCH_executor.json` so the perf
-//! trajectory is tracked across PRs.
+//! recovery scenario, and the Monte Carlo kernel's paths/second, scalar
+//! vs batched per payoff family. Emits `results/BENCH_executor.json`
+//! (executor trajectory) and `results/BENCH_kernel.json` (kernel
+//! throughput gate) so the perf trajectory is tracked across PRs.
 //!
 //! Pass `--smoke` (the CI mode) to shrink the workload so the bench acts as
 //! a fast equivalence/regression gate rather than a measurement session.
@@ -18,7 +19,7 @@ use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet};
 use cloudshapes::obs::{self, MetricsRegistry};
 use cloudshapes::platforms::spec::{paper_cluster, small_cluster};
 use cloudshapes::platforms::{Cluster, Platform, SimConfig, SimPlatform};
-use cloudshapes::pricing::mc;
+use cloudshapes::pricing::{batch, mc};
 use cloudshapes::util::json::{obj, Json};
 use cloudshapes::workload::{generate, GeneratorConfig, Payoff};
 
@@ -147,30 +148,90 @@ fn main() {
         100.0 * slow_rebalanced.makespan_secs / slow_static.makespan_secs
     );
 
-    println!("\n== perf: native Threefry MC mirror ==");
+    // MC kernel throughput gate: scalar oracle vs the batched
+    // (vectorisation-ready) kernel, per payoff family. One bit-parity
+    // check guards the measurement (mismatch = the numbers are about
+    // different computations); the smoke gate enforces batched >= scalar
+    // on European in CI, and the full bench targets the 1.5x headline.
+    println!("\n== perf: MC kernel — scalar vs batched ({} lanes) ==", batch::LANES);
     let task = workload
         .tasks
         .iter()
         .find(|t| t.payoff == Payoff::European)
         .expect("european task")
         .clone();
+    let mut asian = task.clone();
+    asian.payoff = Payoff::Asian;
+    asian.steps = 64;
+    let mut barrier = task.clone();
+    barrier.payoff = Payoff::Barrier;
+    barrier.barrier = task.spot * 1.4;
+    barrier.steps = 64;
+    let kernel_runs = runs.max(3);
+    let mut kernel_rows: Vec<(&str, Json)> = vec![
+        ("smoke", Json::Bool(smoke)),
+        ("lanes", batch::LANES.into()),
+    ];
+    let mut euro_speedup = 0.0;
+    for (family, t, n) in [
+        ("european", &task, if smoke { 1u32 << 18 } else { 1 << 22 }),
+        ("asian64", &asian, if smoke { 1 << 12 } else { 1 << 16 }),
+        ("barrier64", &barrier, if smoke { 1 << 12 } else { 1 << 16 }),
+    ] {
+        assert_eq!(
+            mc::simulate(t, 1, 0, 4099), // odd n: the ragged tail too
+            batch::simulate_batch(t, 1, 0, 4099),
+            "{family}: batched kernel drifted from the scalar oracle"
+        );
+        let med_s = common::measure(&format!("{family}: scalar {n} paths"), kernel_runs, || {
+            mc::simulate(t, 1, 0, n);
+        });
+        let med_b = common::measure(&format!("{family}: batched {n} paths"), kernel_runs, || {
+            batch::simulate_batch(t, 1, 0, n);
+        });
+        let (scalar_mps, batched_mps) = (n as f64 / med_s / 1e6, n as f64 / med_b / 1e6);
+        let speedup = med_s / med_b;
+        println!(
+            "        -> {family}: scalar {scalar_mps:.1} Mpaths/s, \
+             batched {batched_mps:.1} Mpaths/s ({speedup:.2}x)"
+        );
+        if family == "european" {
+            euro_speedup = speedup;
+        }
+        kernel_rows.push((family, obj(vec![
+            ("paths", (n as usize).into()),
+            ("scalar_mpaths_per_s", scalar_mps.into()),
+            ("batched_mpaths_per_s", batched_mps.into()),
+            ("speedup", speedup.into()),
+        ])));
+    }
+    if smoke {
+        // CI sizes are too small for a stable 1.5x bar; regressing below
+        // the scalar oracle is the hard failure.
+        assert!(
+            euro_speedup >= 1.0,
+            "batched European kernel slower than scalar ({euro_speedup:.2}x) — \
+             the batch formulation stopped vectorising"
+        );
+    } else if euro_speedup < 1.5 {
+        println!(
+            "[perf] WARNING: batched European speedup {euro_speedup:.2}x is below \
+             the 1.5x bench-size target"
+        );
+    }
+    common::save("BENCH_kernel.json", &obj(kernel_rows).to_string_pretty());
+
+    // Re-measure the scalar mirror at the legacy sizes so the
+    // BENCH_executor.json throughput trajectory stays comparable across
+    // PRs (the batched numbers live in BENCH_kernel.json).
     let n = 1 << 20;
     let med = common::measure(&format!("simulate {n} european paths"), runs, || {
         mc::simulate(&task, 1, 0, n);
     });
-    println!("        -> {:.1} Mpaths/s", n as f64 / med / 1e6);
-
-    let mut asian = task.clone();
-    asian.payoff = Payoff::Asian;
-    asian.steps = 64;
     let n_asian = 1 << 14;
     let med_asian = common::measure(&format!("simulate {n_asian} asian-64 paths"), runs, || {
         mc::simulate(&asian, 1, 0, n_asian);
     });
-    println!(
-        "        -> {:.1} Mpath-steps/s",
-        n_asian as f64 * 64.0 / med_asian / 1e6
-    );
 
     let json = obj(vec![
         ("smoke", Json::Bool(smoke)),

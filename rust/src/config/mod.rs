@@ -182,6 +182,13 @@ impl ExperimentConfig {
             set_u64(c, "stats_cap", &mut cap)?;
             cfg.cluster.sim.stats_cap = cap as u32;
         }
+        if let Some(k) = root.get("kernel") {
+            set_bool(k, "batch", &mut cfg.cluster.sim.kernel.batch)?;
+            set_usize(k, "lanes", &mut cfg.cluster.sim.kernel.lanes)?;
+            // Unsupported lane widths are config errors at parse time, not
+            // a silent scalar fallback at execution time.
+            cfg.cluster.sim.kernel.validate()?;
+        }
         if let Some(cat) = root.get("catalogue") {
             if let Some(counts) = cat.get("counts") {
                 let arr = counts.as_arr().ok_or_else(|| {
@@ -404,6 +411,28 @@ mod tests {
         assert_eq!(c.workload.n_tasks, 128);
         assert_eq!(c.cluster.counts, None);
         assert!(!c.cluster.spot);
+    }
+
+    #[test]
+    fn kernel_section_parses_and_validates() {
+        use crate::pricing::{KernelConfig, LANES, SUPPORTED_LANES};
+        let c = ExperimentConfig::parse("[kernel]\nbatch = false\nlanes = 16").unwrap();
+        assert_eq!(c.cluster.sim.kernel, KernelConfig { batch: false, lanes: 16 });
+        // Defaults: batched at the default lane width.
+        let c = ExperimentConfig::parse("").unwrap();
+        assert!(c.cluster.sim.kernel.batch);
+        assert_eq!(c.cluster.sim.kernel.lanes, LANES);
+        // Every supported width parses; anything else is a config error
+        // naming the valid set.
+        for lanes in SUPPORTED_LANES {
+            let text = format!("[kernel]\nlanes = {lanes}");
+            assert_eq!(ExperimentConfig::parse(&text).unwrap().cluster.sim.kernel.lanes, lanes);
+        }
+        let e = ExperimentConfig::parse("[kernel]\nlanes = 7").unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("lanes"), "{e}");
+        assert!(ExperimentConfig::parse("[kernel]\nlanes = 0").is_err());
+        assert!(ExperimentConfig::parse("[kernel]\nbatch = \"fast\"").is_err());
     }
 
     #[test]

@@ -20,7 +20,8 @@
 
 use std::sync::Mutex;
 
-use crate::pricing::mc::{simulate, PayoffStats};
+use crate::pricing::batch::KernelConfig;
+use crate::pricing::mc::PayoffStats;
 use crate::util::rng::{Rng, SplitMix64};
 use crate::workload::option::OptionTask;
 
@@ -39,11 +40,20 @@ pub struct SimConfig {
     pub hidden_spread: f64,
     /// Optional failure injection: probability an execute() call fails.
     pub failure_rate: f64,
+    /// Which Monte Carlo kernel produces the payoff statistics (batched by
+    /// default; bit-identical to the scalar oracle either way).
+    pub kernel: KernelConfig,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { noise_sigma: 0.04, stats_cap: 1 << 15, hidden_spread: 0.12, failure_rate: 0.0 }
+        SimConfig {
+            noise_sigma: 0.04,
+            stats_cap: 1 << 15,
+            hidden_spread: 0.12,
+            failure_rate: 0.0,
+            kernel: KernelConfig::default(),
+        }
     }
 }
 
@@ -147,7 +157,7 @@ impl Platform for SimPlatform {
         let done = ctx.prior_sims.min(budget);
         let sim_n = n.min(budget - done) as u32;
         let stats = if sim_n > 0 {
-            simulate(task, seed, ctx.offset, sim_n)
+            self.cfg.kernel.simulate(task, seed, ctx.offset, sim_n)
         } else {
             PayoffStats::default()
         };
@@ -311,6 +321,20 @@ mod tests {
         let p = SimPlatform::new(gpu_spec(), cfg, 5);
         let out = p.execute(&task(), 1 << 22, 1, cold(0));
         assert_eq!(out.stats.unwrap().n, 1024);
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_statistics() {
+        // The batched kernel is bit-identical to the scalar oracle, so the
+        // platform's payoff statistics must not depend on the [kernel]
+        // escape hatch.
+        let scalar = SimConfig { kernel: KernelConfig::scalar(), ..SimConfig::exact() };
+        let batched = SimConfig::exact();
+        let t = task();
+        let a = SimPlatform::new(gpu_spec(), scalar, 5).execute(&t, 1 << 14, 9, cold(3));
+        let b = SimPlatform::new(gpu_spec(), batched, 5).execute(&t, 1 << 14, 9, cold(3));
+        assert_eq!(a.stats.unwrap(), b.stats.unwrap());
+        assert_eq!(a.latency_secs, b.latency_secs);
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Batched, vectorisation-ready Monte Carlo kernel.
+//!
+//! The scalar pricer ([`mc::simulate`]) advances one path at a time through
+//! one [`threefry_normal`](crate::util::rng::threefry_normal) call per step
+//! — correct, but the hot loop the whole performance-cost trade-off is
+//! forecast against (paper §IV: the kernel *is* the unit of work whose
+//! per-platform throughput the models predict). This module restructures
+//! the same computation around the Pallas kernels' batched formulation
+//! (`python/compile/kernels/mc.py`): a block of `N` independent paths
+//! advances through the step loop together, with the Threefry counters,
+//! Box-Muller normals and payoff state (log-spot, Asian accumulator,
+//! Barrier alive-mask) held in fixed-size per-lane arrays the compiler can
+//! autovectorise. Randomness dominates the work (§IV.A.1), and Threefry is
+//! embarrassingly SIMD-friendly — lanes share a key and differ only in
+//! counters.
+//!
+//! **Bit-parity contract.** Batched results are *bit-identical* to the
+//! scalar path, not merely close:
+//!
+//! * same counter bijection — lane `i` of the block at `base` uses the
+//!   global path index `base + i`, split into `(c0, c1-high-bits)` exactly
+//!   as [`mc::simulate`] does (see [`STEP_BITS`]);
+//! * same per-path f32 rounding — each lane applies the identical sequence
+//!   of f32 operations the scalar loop applies to that path;
+//! * same merge order — block payoffs reduce into the f64
+//!   [`PayoffStats`] accumulators in ascending path order, so the f64
+//!   additions happen in exactly the scalar loop's sequence.
+//!
+//! A ragged tail (`n` not a multiple of the lane width) computes a full
+//! block but folds only the live lanes into the sums; the dead lanes'
+//! counters belong to neighbouring chunks, and their discarded samples
+//! cannot bias anything (counter-based RNG carries no state).
+//!
+//! The scalar path is kept as the differential oracle:
+//! `rust/tests/pricing_batch.rs` holds `simulate_batch == simulate`
+//! bit-for-bit across every payoff family, ragged tails, offsets
+//! straddling `2^32` and `steps` at the counter-layout boundary, and
+//! `perf_executor`'s kernel bench gates batched throughput ≥ scalar in CI
+//! (`BENCH_kernel.json`).
+
+use crate::api::error::{CloudshapesError, Result};
+use crate::util::rng::threefry_normal_lanes;
+use crate::workload::option::{OptionTask, Payoff};
+
+use super::mc::{self, PayoffStats, STEP_BITS};
+
+/// Default lane width. 8 × u32 fills a 256-bit vector register — wide
+/// enough to saturate AVX2-class VPUs while the per-block payoff state
+/// (≤ 4 live f32 arrays) stays register-resident; narrower/wider targets
+/// pick another [`SUPPORTED_LANES`] width via `[kernel] lanes`.
+pub const LANES: usize = 8;
+
+/// Lane widths the runtime dispatcher monomorphises. Powers of two only:
+/// they map onto 128/256/512-bit vector registers (and multiples), and the
+/// config parser rejects anything else at load time.
+pub const SUPPORTED_LANES: [usize; 4] = [4, 8, 16, 32];
+
+/// Kernel selection knobs (`[kernel]` in the TOML schema).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Route simulation through the batched kernel (`false` is the escape
+    /// hatch back to the scalar oracle — results are bit-identical either
+    /// way, so this only trades speed).
+    pub batch: bool,
+    /// Paths per block; must be one of [`SUPPORTED_LANES`].
+    pub lanes: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig { batch: true, lanes: LANES }
+    }
+}
+
+impl KernelConfig {
+    /// The scalar-oracle configuration (the pre-batching behaviour).
+    pub fn scalar() -> KernelConfig {
+        KernelConfig { batch: false, ..Default::default() }
+    }
+
+    /// Reject unsupported lane widths with a typed config error.
+    pub fn validate(&self) -> Result<()> {
+        if !SUPPORTED_LANES.contains(&self.lanes) {
+            return Err(CloudshapesError::config(format!(
+                "kernel.lanes must be one of {SUPPORTED_LANES:?}, got {}",
+                self.lanes
+            )));
+        }
+        Ok(())
+    }
+
+    /// Simulate through the configured kernel: the batched path at the
+    /// configured lane width, or the scalar oracle when `batch = false`.
+    /// Bit-identical results either way — this is purely a speed knob.
+    pub fn simulate(&self, task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStats {
+        if !self.batch {
+            return mc::simulate(task, seed, offset, n);
+        }
+        match self.lanes {
+            4 => simulate_lanes::<4>(task, seed, offset, n),
+            8 => simulate_lanes::<8>(task, seed, offset, n),
+            16 => simulate_lanes::<16>(task, seed, offset, n),
+            32 => simulate_lanes::<32>(task, seed, offset, n),
+            // validate() rejects other widths; tolerate a hand-built
+            // config by falling back to the oracle rather than panicking.
+            _ => mc::simulate(task, seed, offset, n),
+        }
+    }
+}
+
+/// Batched [`mc::simulate`] at the default lane width — same signature,
+/// same counter bijection, bit-identical [`PayoffStats`].
+pub fn simulate_batch(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStats {
+    simulate_lanes::<LANES>(task, seed, offset, n)
+}
+
+/// Lane counters for the block whose first global path index is `base`:
+/// the scalar pricer's `(c0, c1-high-bits)` split applied per lane.
+fn lane_counters<const N: usize>(base: u64) -> ([u32; N], [u32; N]) {
+    let mut c0 = [0u32; N];
+    let mut hi = [0u32; N];
+    for i in 0..N {
+        let g = base.wrapping_add(i as u64);
+        c0[i] = g as u32;
+        hi[i] = ((g >> 32) as u32) << STEP_BITS;
+    }
+    (c0, hi)
+}
+
+/// Fold the first `live` lanes of a block's payoffs into the f64 sums in
+/// ascending path order — the exact addition sequence of the scalar loop.
+#[inline]
+fn reduce(pay: &[f32], live: usize, sum: &mut f64, sum_sq: &mut f64) {
+    for &p in &pay[..live] {
+        let x = p as f64;
+        *sum += x;
+        *sum_sq += x * x;
+    }
+}
+
+/// Simulate `n` paths of `task` at counter `offset` in blocks of `N`
+/// lanes. See the module docs for the bit-parity contract with
+/// [`mc::simulate`].
+pub fn simulate_lanes<const N: usize>(
+    task: &OptionTask,
+    seed: u32,
+    offset: u64,
+    n: u32,
+) -> PayoffStats {
+    let k0 = task.id as u32;
+    let k1 = seed;
+    // Same hard counter-layout check as the scalar oracle (workload
+    // validation rejects such tasks long before execution; this is the
+    // kernel-level backstop).
+    assert!(
+        task.steps < (1 << STEP_BITS),
+        "task {}: {} steps exceed the counter layout's 2^{STEP_BITS} budget",
+        task.id,
+        task.steps
+    );
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let mut sum = 0.0f64;
+    let mut sum_sq = 0.0f64;
+    let mut done: u32 = 0;
+    match task.payoff {
+        Payoff::European => {
+            let drift = (r - 0.5 * sigma * sigma) * t;
+            let vol = sigma * t.sqrt();
+            while done < n {
+                let live = ((n - done) as usize).min(N);
+                let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
+                let z = threefry_normal_lanes(k0, k1, c0, hi);
+                let mut pay = [0.0f32; N];
+                for i in 0..N {
+                    let st = s0 * (drift + vol * z[i]).exp();
+                    pay[i] = (st - k).max(0.0);
+                }
+                reduce(&pay, live, &mut sum, &mut sum_sq);
+                done += live as u32;
+            }
+        }
+        Payoff::Asian => {
+            let steps = task.steps;
+            let dt = t / steps as f32;
+            let drift = (r - 0.5 * sigma * sigma) * dt;
+            let vol = sigma * dt.sqrt();
+            while done < n {
+                let live = ((n - done) as usize).min(N);
+                let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
+                let mut log_s = [s0.ln(); N];
+                let mut acc = [0.0f32; N];
+                for step in 0..steps {
+                    let mut c1 = [0u32; N];
+                    for i in 0..N {
+                        c1[i] = hi[i] | step;
+                    }
+                    let z = threefry_normal_lanes(k0, k1, c0, c1);
+                    for i in 0..N {
+                        log_s[i] += drift + vol * z[i];
+                        acc[i] += log_s[i].exp();
+                    }
+                }
+                let mut pay = [0.0f32; N];
+                for i in 0..N {
+                    pay[i] = ((acc[i] / steps as f32) - k).max(0.0);
+                }
+                reduce(&pay, live, &mut sum, &mut sum_sq);
+                done += live as u32;
+            }
+        }
+        Payoff::Barrier => {
+            let steps = task.steps;
+            let barrier = task.barrier as f32;
+            let dt = t / steps as f32;
+            let drift = (r - 0.5 * sigma * sigma) * dt;
+            let vol = sigma * dt.sqrt();
+            while done < n {
+                let live = ((n - done) as usize).min(N);
+                let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
+                let mut log_s = [s0.ln(); N];
+                let mut alive = [s0 < barrier; N];
+                for step in 0..steps {
+                    let mut c1 = [0u32; N];
+                    for i in 0..N {
+                        c1[i] = hi[i] | step;
+                    }
+                    let z = threefry_normal_lanes(k0, k1, c0, c1);
+                    for i in 0..N {
+                        log_s[i] += drift + vol * z[i];
+                        // `&` (not `&&`): branch-free per lane; value-equal
+                        // to the scalar short-circuit since exp() is pure.
+                        alive[i] &= log_s[i].exp() < barrier;
+                    }
+                }
+                let mut pay = [0.0f32; N];
+                for i in 0..N {
+                    pay[i] = if alive[i] { (log_s[i].exp() - k).max(0.0) } else { 0.0 };
+                }
+                reduce(&pay, live, &mut sum, &mut sum_sq);
+                done += live as u32;
+            }
+        }
+    }
+    PayoffStats { sum, sum_sq, n: n as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, GeneratorConfig};
+
+    fn task(payoff: Payoff) -> OptionTask {
+        OptionTask {
+            id: 7,
+            payoff,
+            spot: 100.0,
+            strike: 105.0,
+            rate: 0.05,
+            sigma: 0.2,
+            maturity: 1.0,
+            barrier: 140.0,
+            steps: if payoff == Payoff::European { 1 } else { 16 },
+            target_accuracy: 0.01,
+            n_sims: 1 << 18,
+        }
+    }
+
+    #[test]
+    fn batch_is_bitwise_scalar_per_family() {
+        for payoff in [Payoff::European, Payoff::Asian, Payoff::Barrier] {
+            let t = task(payoff);
+            let a = mc::simulate(&t, 42, 0, 4096);
+            let b = simulate_batch(&t, 42, 0, 4096);
+            assert_eq!(a, b, "{payoff:?}");
+        }
+    }
+
+    #[test]
+    fn ragged_tails_are_bitwise_scalar() {
+        let t = task(Payoff::Asian);
+        for n in [1u32, 3, 7, 8, 9, 100, 1023] {
+            assert_eq!(mc::simulate(&t, 1, 5, n), simulate_batch(&t, 1, 5, n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn every_supported_lane_width_agrees() {
+        let t = task(Payoff::Barrier);
+        let oracle = mc::simulate(&t, 9, 100, 333);
+        assert_eq!(simulate_lanes::<4>(&t, 9, 100, 333), oracle);
+        assert_eq!(simulate_lanes::<8>(&t, 9, 100, 333), oracle);
+        assert_eq!(simulate_lanes::<16>(&t, 9, 100, 333), oracle);
+        assert_eq!(simulate_lanes::<32>(&t, 9, 100, 333), oracle);
+    }
+
+    #[test]
+    fn config_routes_and_validates() {
+        let t = task(Payoff::European);
+        let oracle = mc::simulate(&t, 3, 0, 1000);
+        assert_eq!(KernelConfig::default().simulate(&t, 3, 0, 1000), oracle);
+        assert_eq!(KernelConfig::scalar().simulate(&t, 3, 0, 1000), oracle);
+        let wide = KernelConfig { lanes: 32, ..Default::default() };
+        assert_eq!(wide.simulate(&t, 3, 0, 1000), oracle);
+        assert!(KernelConfig::default().validate().is_ok());
+        let bad = KernelConfig { lanes: 7, ..Default::default() };
+        let e = bad.validate().unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains('7'), "{e}");
+        // Unvalidated odd widths still price correctly via the fallback.
+        assert_eq!(bad.simulate(&t, 3, 0, 1000), oracle);
+    }
+
+    #[test]
+    fn zero_paths_is_empty_stats() {
+        let t = task(Payoff::European);
+        assert_eq!(simulate_batch(&t, 1, 0, 0), PayoffStats::default());
+    }
+
+    #[test]
+    fn generated_workload_is_bitwise_scalar() {
+        for t in &generate(&GeneratorConfig::small(6, 0.1, 11)).tasks {
+            assert_eq!(mc::simulate(t, 1, 0, 2048), simulate_batch(t, 1, 0, 2048), "{t:?}");
+        }
+    }
+}

@@ -70,7 +70,12 @@ pub const STEP_BITS: u32 = 20;
 pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStats {
     let k0 = task.id as u32;
     let k1 = seed;
-    debug_assert!(
+    // A hard check, not a debug_assert: in release builds a `steps` beyond
+    // the layout would silently alias (path, step) counter pairs and bias
+    // every merged price. Workload validation rejects such tasks with a
+    // typed error long before execution (`OptionTask::validate`); this is
+    // the kernel-level backstop for callers that skip it.
+    assert!(
         task.steps < (1 << STEP_BITS),
         "task {}: {} steps exceed the counter layout's 2^{STEP_BITS} budget",
         task.id,

@@ -1,7 +1,10 @@
 //! Option pricing: closed-form oracles and the native Monte Carlo mirror of
-//! the L1 kernels.
+//! the L1 kernels — scalar ([`mc`], the differential oracle) and batched
+//! ([`batch`], the vectorisation-ready hot path; bit-identical results).
 
+pub mod batch;
 pub mod blackscholes;
 pub mod mc;
 
+pub use batch::{simulate_batch, KernelConfig, LANES, SUPPORTED_LANES};
 pub use mc::{combine, simulate, PayoffStats, PriceEstimate};

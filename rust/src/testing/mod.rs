@@ -1,5 +1,9 @@
 //! Test-support code compiled into the library so integration tests and
 //! benches can share it (the mini property harness replaces `proptest`,
-//! which is unavailable offline).
+//! which is unavailable offline; the golden RNG vectors pin the kernel
+//! contract shared with the Python side).
 
+pub mod golden_rng;
 pub mod prop;
+
+pub use golden_rng::{GoldenRng, GOLDEN_RNG, GROUPS, Z_TOL};

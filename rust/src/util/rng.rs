@@ -144,6 +144,84 @@ pub fn threefry_normal(k0: u32, k1: u32, c0: u32, c1: u32) -> f32 {
     (-2.0 * u0.ln()).sqrt() * (2.0 * std::f32::consts::PI * u1).cos()
 }
 
+/// Lane-batched Threefry-2x32: `N` independent counter pairs under one key,
+/// advanced through the 20 rounds together. Every arithmetic step is a
+/// fixed-size-array loop over the lanes (no data dependence between lanes),
+/// which is the shape the autovectoriser turns into SIMD `add`/`rot`/`xor`
+/// chains — the generator dominates the Monte Carlo hot loop (paper
+/// §IV.A.1), so this is where the batched kernel's speed comes from.
+///
+/// Each lane is bit-identical to [`threefry2x32`] on the same `(c0, c1)`
+/// pair: integer ops are exact, so batching cannot change a single sample.
+pub fn threefry2x32_lanes<const N: usize>(
+    k0: u32,
+    k1: u32,
+    x0: [u32; N],
+    x1: [u32; N],
+) -> ([u32; N], [u32; N]) {
+    const ROT: [u32; 8] = [13, 15, 26, 6, 17, 29, 16, 24];
+    let ks = [k0, k1, k0 ^ k1 ^ 0x1BD1_1BDA];
+    let (mut a, mut b) = (x0, x1);
+    for i in 0..N {
+        a[i] = a[i].wrapping_add(ks[0]);
+        b[i] = b[i].wrapping_add(ks[1]);
+    }
+    for block in 0..5u32 {
+        for r in 0..4 {
+            let rot = ROT[((4 * block + r) % 8) as usize];
+            for i in 0..N {
+                a[i] = a[i].wrapping_add(b[i]);
+                b[i] = b[i].rotate_left(rot);
+                b[i] ^= a[i];
+            }
+        }
+        let (ka, kb) = (ks[((block + 1) % 3) as usize], ks[((block + 2) % 3) as usize]);
+        for i in 0..N {
+            a[i] = a[i].wrapping_add(ka);
+            b[i] = b[i].wrapping_add(kb).wrapping_add(block + 1);
+        }
+    }
+    (a, b)
+}
+
+/// Lane-batched [`threefry_uniforms`]: `N` U(0,1] pairs from one batched
+/// Threefry call, each lane bit-identical to the scalar mapping (the
+/// top-24-bit scaling is a single exact multiply-add per word).
+pub fn threefry_uniforms_lanes<const N: usize>(
+    k0: u32,
+    k1: u32,
+    c0: [u32; N],
+    c1: [u32; N],
+) -> ([f32; N], [f32; N]) {
+    let (r0, r1) = threefry2x32_lanes(k0, k1, c0, c1);
+    let scale = 1.0f32 / (1 << 24) as f32;
+    let half = 0.5f32 / (1 << 24) as f32;
+    let (mut u0, mut u1) = ([0.0f32; N], [0.0f32; N]);
+    for i in 0..N {
+        u0[i] = (r0[i] >> 8) as f32 * scale + half;
+        u1[i] = (r1[i] >> 8) as f32 * scale + half;
+    }
+    (u0, u1)
+}
+
+/// Lane-batched [`threefry_normal`]: one N(0,1) sample per lane. The
+/// Box-Muller transform applies the same scalar f32 `ln`/`sqrt`/`cos`
+/// operations per lane, so every sample is bit-identical to the scalar
+/// path; the win is the vectorised Threefry chain feeding it.
+pub fn threefry_normal_lanes<const N: usize>(
+    k0: u32,
+    k1: u32,
+    c0: [u32; N],
+    c1: [u32; N],
+) -> [f32; N] {
+    let (u0, u1) = threefry_uniforms_lanes(k0, k1, c0, c1);
+    let mut z = [0.0f32; N];
+    for i in 0..N {
+        z[i] = (-2.0 * u0[i].ln()).sqrt() * (2.0 * std::f32::consts::PI * u1[i]).cos();
+    }
+    z
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,14 +317,74 @@ mod tests {
 
     #[test]
     fn threefry_matches_python_kernel() {
-        // Golden values produced by python/compile/kernels/rng.py (which is
-        // itself tested bit-for-bit against jax._src.prng.threefry_2x32):
-        //   threefry2x32(123, 456, [0..3], [7..10])
-        let expect0 = [3069288025u32, 1452899760, 590541640, 4160568667];
-        for (i, e0) in expect0.iter().enumerate() {
-            let (r0, _) = threefry2x32(123, 456, i as u32, i as u32 + 7);
-            assert_eq!(r0, *e0, "lane {i}");
+        // The shared golden table (scripts/gen_rng_golden.py mirrors
+        // python/compile/kernels/rng.py, which is itself tested bit-for-bit
+        // against jax._src.prng.threefry_2x32). Output words and uniforms
+        // are exact; normals are a float64 reference (libm `ln`/`cos` are
+        // not bit-pinned across languages).
+        use crate::testing::golden_rng::{GOLDEN_RNG, Z_TOL};
+        for (i, g) in GOLDEN_RNG.iter().enumerate() {
+            let (r0, r1) = threefry2x32(g.k0, g.k1, g.c0, g.c1);
+            assert_eq!((r0, r1), (g.r0, g.r1), "row {i}: threefry words");
+            let (u0, u1) = threefry_uniforms(g.k0, g.k1, g.c0, g.c1);
+            assert_eq!(u0.to_bits(), g.u0_bits, "row {i}: u0");
+            assert_eq!(u1.to_bits(), g.u1_bits, "row {i}: u1");
+            let z = threefry_normal(g.k0, g.k1, g.c0, g.c1) as f64;
+            assert!((z - g.z_ref).abs() < Z_TOL, "row {i}: z {z} vs {}", g.z_ref);
         }
+    }
+
+    #[test]
+    fn threefry_lanes_match_golden_groups() {
+        // Whole table groups pushed through the lane-batched generator at
+        // once: the batch path must reproduce the pinned words exactly for
+        // the lane patterns the kernels actually emit (consecutive path
+        // counters, folded high offsets, the step word at its boundary).
+        use crate::testing::golden_rng::{GOLDEN_RNG, GROUPS};
+        for (name, start, end) in GROUPS {
+            let rows = &GOLDEN_RNG[start..end];
+            assert_eq!(rows.len() % 4, 0, "{name}: groups tile into 4-lane batches");
+            for chunk in rows.chunks_exact(4) {
+                let (k0, k1) = (chunk[0].k0, chunk[0].k1);
+                let c0 = std::array::from_fn::<u32, 4, _>(|i| chunk[i].c0);
+                let c1 = std::array::from_fn::<u32, 4, _>(|i| chunk[i].c1);
+                let (r0, r1) = threefry2x32_lanes(k0, k1, c0, c1);
+                let (u0, u1) = threefry_uniforms_lanes(k0, k1, c0, c1);
+                for i in 0..4 {
+                    assert_eq!((r0[i], r1[i]), (chunk[i].r0, chunk[i].r1), "{name} lane {i}");
+                    assert_eq!(u0[i].to_bits(), chunk[i].u0_bits, "{name} lane {i}");
+                    assert_eq!(u1[i].to_bits(), chunk[i].u1_bits, "{name} lane {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threefry_lanes_are_bitwise_scalar() {
+        // Every lane width the batched kernel dispatches must agree with
+        // the scalar generator bit-for-bit on arbitrary counters.
+        fn check<const N: usize>(seed: u64) {
+            let mut r = Rng::new(seed);
+            for _ in 0..50 {
+                let (k0, k1) = (r.next_u64() as u32, r.next_u64() as u32);
+                let c0 = std::array::from_fn::<u32, N, _>(|_| r.next_u64() as u32);
+                let c1 = std::array::from_fn::<u32, N, _>(|_| r.next_u64() as u32);
+                let (b0, b1) = threefry2x32_lanes(k0, k1, c0, c1);
+                let z = threefry_normal_lanes(k0, k1, c0, c1);
+                for i in 0..N {
+                    assert_eq!((b0[i], b1[i]), threefry2x32(k0, k1, c0[i], c1[i]));
+                    assert_eq!(
+                        z[i].to_bits(),
+                        threefry_normal(k0, k1, c0[i], c1[i]).to_bits(),
+                        "lane {i} of {N}"
+                    );
+                }
+            }
+        }
+        check::<4>(1);
+        check::<8>(2);
+        check::<16>(3);
+        check::<32>(4);
     }
 
     #[test]

@@ -181,6 +181,21 @@ impl OptionTask {
                 self.id
             )));
         }
+        // The RNG counter layout reserves STEP_BITS of the second Threefry
+        // word for the step index; more steps than that would alias
+        // (path, step) counter pairs and bias every merged price. Checked
+        // here — at workload validation time — so the kernels' hard assert
+        // is never the first thing to notice.
+        let step_cap = 1u32 << crate::pricing::mc::STEP_BITS;
+        if self.steps >= step_cap {
+            return Err(CloudshapesError::workload(format!(
+                "task {}: {} steps exceed the RNG counter layout's budget of {step_cap} \
+                 (2^{} — see pricing::mc::STEP_BITS)",
+                self.id,
+                self.steps,
+                crate::pricing::mc::STEP_BITS
+            )));
+        }
         Ok(())
     }
 }
@@ -280,6 +295,22 @@ mod tests {
         assert!(t.validate().is_err());
 
         assert!(task().validate().is_ok());
+    }
+
+    #[test]
+    fn steps_beyond_the_counter_layout_are_a_typed_workload_error() {
+        // Regression: this used to be a debug_assert deep in the pricer —
+        // release builds silently allowed (path, step) counter collisions.
+        use crate::pricing::mc::STEP_BITS;
+        let mut t = task();
+        t.payoff = Payoff::Asian;
+        t.steps = 1 << STEP_BITS;
+        let e = t.validate().unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        assert!(e.message().contains("steps"), "{e}");
+        // The boundary itself is the last valid value.
+        t.steps = (1 << STEP_BITS) - 1;
+        assert!(t.validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Differential suite for the batched Monte Carlo kernel: the scalar
+//! pricer (`pricing::mc::simulate`) is the oracle and the batched kernel
+//! (`pricing::batch`) must reproduce it **bit-for-bit** — same counter
+//! bijection, same per-lane f32 rounding, same f64 merge order — across
+//! every payoff family, ragged tails, offsets straddling `2^32` and
+//! `steps` at the counter-layout boundary. The suite closes with the
+//! executor-level check: chunked evaluation reports are unchanged (1e-9)
+//! when the simulated cluster swaps the batched kernel in.
+
+use cloudshapes::coordinator::executor::{execute, ExecutorConfig, RebalanceConfig};
+use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet};
+use cloudshapes::platforms::spec::small_cluster;
+use cloudshapes::platforms::{Cluster, SimConfig};
+use cloudshapes::pricing::batch::{simulate_batch, simulate_lanes, KernelConfig, LANES};
+use cloudshapes::pricing::mc::{simulate, STEP_BITS};
+use cloudshapes::testing::golden_rng::{GOLDEN_RNG, GROUPS, Z_TOL};
+use cloudshapes::workload::option::{OptionTask, Payoff};
+use cloudshapes::workload::{generate, GeneratorConfig};
+
+fn task(payoff: Payoff, steps: u32) -> OptionTask {
+    OptionTask {
+        id: 7,
+        payoff,
+        spot: 100.0,
+        strike: 105.0,
+        rate: 0.05,
+        sigma: 0.2,
+        maturity: 1.0,
+        barrier: 140.0,
+        steps,
+        target_accuracy: 0.01,
+        n_sims: 1 << 20,
+    }
+}
+
+fn families() -> [OptionTask; 3] {
+    [
+        task(Payoff::European, 1),
+        task(Payoff::Asian, 16),
+        task(Payoff::Barrier, 16),
+    ]
+}
+
+#[test]
+fn batched_is_bitwise_scalar_across_families_seeds_and_offsets() {
+    for t in families() {
+        for seed in [0u32, 1, 42, u32::MAX] {
+            for offset in [0u64, 1, 1000, (1u64 << 31) + 5] {
+                let a = simulate(&t, seed, offset, 4096);
+                let b = simulate_batch(&t, seed, offset, 4096);
+                assert_eq!(a, b, "{:?} seed {seed} offset {offset}", t.payoff);
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_tails_are_bitwise_scalar() {
+    // Every residue class modulo the lane width, including n < LANES.
+    for t in families() {
+        for n in 1..=(2 * LANES as u32 + 1) {
+            assert_eq!(
+                simulate(&t, 3, 17, n),
+                simulate_batch(&t, 3, 17, n),
+                "{:?} n={n}",
+                t.payoff
+            );
+        }
+    }
+}
+
+#[test]
+fn offsets_straddling_2_pow_32_are_bitwise_scalar() {
+    // The block crosses the c0 wrap mid-lane: low lanes keep c1's high
+    // bits at 0, high lanes carry the folded overflow — both must match
+    // the scalar counter split exactly.
+    for t in families() {
+        for base in [
+            (1u64 << 32) - 3,
+            (1u64 << 32) - LANES as u64,
+            (1u64 << 32) + 1,
+            (1u64 << 33) - 1,
+        ] {
+            let a = simulate(&t, 9, base, 2 * LANES as u32 + 3);
+            let b = simulate_batch(&t, 9, base, 2 * LANES as u32 + 3);
+            assert_eq!(a, b, "{:?} base={base}", t.payoff);
+        }
+    }
+}
+
+#[test]
+fn steps_at_the_counter_layout_boundary_are_bitwise_scalar() {
+    // The largest step count the layout admits: the step word fills all
+    // STEP_BITS low bits, adjacent to the folded-offset high bits. Few
+    // paths — the point is the counter arithmetic, not the statistics.
+    let boundary = (1u32 << STEP_BITS) - 1;
+    for payoff in [Payoff::Asian, Payoff::Barrier] {
+        let t = task(payoff, boundary);
+        assert_eq!(
+            simulate(&t, 5, (1u64 << 32) + 2, 3),
+            simulate_batch(&t, 5, (1u64 << 32) + 2, 3),
+            "{payoff:?}"
+        );
+    }
+}
+
+#[test]
+fn every_lane_width_is_bitwise_scalar_on_a_generated_workload() {
+    for t in &generate(&GeneratorConfig::small(6, 0.05, 23)).tasks {
+        let oracle = simulate(t, 11, 101, 1000);
+        assert_eq!(simulate_lanes::<4>(t, 11, 101, 1000), oracle, "{t:?}");
+        assert_eq!(simulate_lanes::<8>(t, 11, 101, 1000), oracle, "{t:?}");
+        assert_eq!(simulate_lanes::<16>(t, 11, 101, 1000), oracle, "{t:?}");
+        assert_eq!(simulate_lanes::<32>(t, 11, 101, 1000), oracle, "{t:?}");
+    }
+}
+
+#[test]
+fn kernel_consumes_the_golden_counter_stream() {
+    // The "european-lane-block" golden group pins key (7, 42), counters
+    // (0..8, 0) — exactly what a European task with id 7 under seed 42
+    // consumes for its first 8 paths. Rebuilding the payoff sum from the
+    // pinned Box-Muller references must reproduce the kernel's sum (to the
+    // f32-vs-f64 reference tolerance), proving the batch kernel feeds the
+    // table's counter stream through the table's transform.
+    let (name, start, end) = GROUPS[1];
+    assert_eq!(name, "european-lane-block");
+    let rows = &GOLDEN_RNG[start..end];
+    assert_eq!((rows[0].k0, rows[0].k1), (7, 42), "group key drifted from the task");
+
+    let t = task(Payoff::European, 1);
+    let stats = simulate_batch(&t, 42, 0, rows.len() as u32);
+    assert_eq!(stats, simulate(&t, 42, 0, rows.len() as u32));
+
+    let (s0, k, r, sigma, mat) = (100.0f64, 105.0, 0.05, 0.2, 1.0);
+    let drift = (r - 0.5 * sigma * sigma) * mat;
+    let vol = sigma * mat.sqrt();
+    let expected: f64 = rows
+        .iter()
+        .map(|g| (s0 * (drift + vol * g.z_ref).exp() - k).max(0.0))
+        .sum();
+    // Per-path f32 rounding vs the f64 reference, amplified through exp():
+    // a loose absolute bound still collapses to zero if the counter stream
+    // or key were wrong (samples would be unrelated draws).
+    assert!(
+        (stats.sum - expected).abs() < 1e-3 * expected.abs().max(1.0) + 8.0 * Z_TOL * 100.0,
+        "kernel sum {} vs golden reconstruction {expected}",
+        stats.sum
+    );
+}
+
+#[test]
+fn chunked_executor_report_is_unchanged_by_the_batched_kernel() {
+    // Executor-level differential: the same allocation executed on two
+    // noise-free clusters that differ only in kernel routing must produce
+    // the same report to 1e-9 (stats are bit-identical, so in practice the
+    // prices agree exactly and latencies are untouched by construction).
+    let specs = small_cluster();
+    let workload = generate(&GeneratorConfig::small(12, 0.02, 13));
+    let models = ModelSet::from_specs(&specs, &workload);
+    let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
+    let cfg = ExecutorConfig {
+        chunk_sims: 1 << 14,
+        rebalance: RebalanceConfig { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+
+    let sim_scalar = SimConfig { kernel: KernelConfig::scalar(), ..SimConfig::exact() };
+    let sim_batched = SimConfig::exact(); // batched is the default routing
+    assert!(sim_batched.kernel.batch);
+    let scalar_cluster = Cluster::simulated(&specs, &sim_scalar, 21).unwrap();
+    let batched_cluster = Cluster::simulated(&specs, &sim_batched, 21).unwrap();
+
+    let rs = execute(&scalar_cluster, &workload, &alloc, &cfg).unwrap();
+    let rb = execute(&batched_cluster, &workload, &alloc, &cfg).unwrap();
+
+    assert_eq!((rs.failures, rb.failures), (0, 0));
+    assert_eq!(rs.chunks, rb.chunks);
+    let tol = |x: f64| 1e-9 * x.abs().max(1.0);
+    assert!(
+        (rs.makespan_secs - rb.makespan_secs).abs() < tol(rs.makespan_secs),
+        "makespan {} vs {}",
+        rs.makespan_secs,
+        rb.makespan_secs
+    );
+    assert!((rs.cost - rb.cost).abs() < tol(rs.cost));
+    for (j, (a, b)) in rs.prices.iter().zip(&rb.prices).enumerate() {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(a.n, b.n, "task {j} path count");
+        assert!((a.price - b.price).abs() < 1e-9, "task {j}: {} vs {}", a.price, b.price);
+        assert!((a.std_error - b.std_error).abs() < 1e-9, "task {j} std error");
+    }
+}

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Regenerate the shared Threefry/Box-Muller golden vector table.
+
+The table lives in ``rust/src/testing/golden_rng.rs`` and is asserted by
+both the `util::rng` unit tests (scalar AND lane-batched generators) and
+the batched-kernel differential suite (`rust/tests/pricing_batch.rs`).
+The reference implementation here is a dependency-free transliteration of
+``python/compile/kernels/rng.py`` (which is itself tested bit-for-bit
+against ``jax._src.prng.threefry_2x32``): pure-int Threefry-2x32 plus an
+IEEE-binary32 emulation of the uniform mapping, so every ``r``/``u`` value
+is exact on any conforming platform. The Box-Muller normals are float64
+references — transcendental libm calls (`ln`, `cos`) are not bit-pinned
+across languages, so the rust side asserts them to 1e-5 and separately
+asserts scalar == batched bit-for-bit within rust.
+
+Usage: python3 scripts/gen_rng_golden.py   # prints the rust table body
+"""
+
+import math
+import struct
+
+MASK = 0xFFFFFFFF
+ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+PARITY = 0x1BD11BDA
+STEP_BITS = 20  # rust/src/pricing/mc.rs::STEP_BITS
+
+
+def rotl(x, d):
+    return ((x << d) | (x >> (32 - d))) & MASK
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Threefry-2x32, 20 rounds — mirrors kernels/rng.py::threefry2x32."""
+    ks = (k0, k1, k0 ^ k1 ^ PARITY)
+    x0 = (x0 + ks[0]) & MASK
+    x1 = (x1 + ks[1]) & MASK
+    for block in range(5):
+        for r in range(4):
+            x0 = (x0 + x1) & MASK
+            x1 = rotl(x1, ROTATIONS[(4 * block + r) % 8])
+            x1 ^= x0
+        x0 = (x0 + ks[(block + 1) % 3]) & MASK
+        x1 = (x1 + ks[(block + 2) % 3] + block + 1) & MASK
+    return x0, x1
+
+
+def f32(x):
+    """Round a python float to IEEE binary32 (one rounding step)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+def uniform(r):
+    """kernels/rng.py::uniforms for one output word, exact binary32.
+
+    ``(r >> 8) * 2^-24 + 2^-25`` is exact in float64 (25 significant bits),
+    so a single terminal rounding reproduces the binary32 result of the
+    f32 expression ``(r >> 8) as f32 * scale + half`` bit-for-bit.
+    """
+    return f32((r >> 8) * 2.0**-24 + 2.0**-25)
+
+
+def normal_ref(u0, u1):
+    """Box-Muller (cosine branch) in float64 on the binary32 uniforms."""
+    two_pi_f32 = f32(2.0 * f32(math.pi))
+    return math.sqrt(-2.0 * math.log(u0)) * math.cos(two_pi_f32 * u1)
+
+
+def rows():
+    cases = []
+    # Group A — the legacy `threefry_matches_python_kernel` constants.
+    for i in range(4):
+        cases.append((123, 456, i, i + 7))
+    # Group B — one European lane block: consecutive path counters, step 0.
+    for i in range(8):
+        cases.append((7, 42, i, 0))
+    # Group C — paths above 2^32: the overflow folds into c1's high bits.
+    for i in range(4):
+        cases.append((9, 1, i, 1 << STEP_BITS))
+    # Group D — the step word, up to the STEP_BITS boundary.
+    for step in (0, 1, 255, (1 << STEP_BITS) - 1):
+        cases.append((3, 2015, 5, (1 << STEP_BITS) | step))
+    out = []
+    for k0, k1, c0, c1 in cases:
+        r0, r1 = threefry2x32(k0, k1, c0, c1)
+        u0, u1 = uniform(r0), uniform(r1)
+        out.append((k0, k1, c0, c1, r0, r1, f32_bits(u0), f32_bits(u1), normal_ref(u0, u1)))
+    return out
+
+
+def main():
+    for k0, k1, c0, c1, r0, r1, u0b, u1b, z in rows():
+        print(
+            f"    GoldenRng {{ k0: {k0}, k1: {k1}, c0: {c0:#010x}, c1: {c1:#010x}, "
+            f"r0: {r0:#010x}, r1: {r1:#010x}, u0_bits: {u0b:#010x}, u1_bits: {u1b:#010x}, "
+            f"z_ref: {z!r} }},"
+        )
+
+
+if __name__ == "__main__":
+    main()
