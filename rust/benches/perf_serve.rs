@@ -1,0 +1,358 @@
+//! Perf: the serve plane under a connection soak. Opens up to 10k
+//! concurrent connections (bounded by RLIMIT_NOFILE — the bench raises the
+//! soft cap to the hard cap first), drives a pipelined ping/evaluate/batch
+//! mix over both framings (half the connections negotiate `lp1`), and
+//! gates on:
+//!
+//! - zero lost responses (every request answered on its connection, in
+//!   order),
+//! - zero corrupted responses (every line parses and has its op's shape —
+//!   an `overload` shed is a *valid* response, counted separately),
+//! - a shed-rate bound and a generous P99 accept-to-response bound.
+//!
+//! Emits `results/BENCH_serve.json`. Pass `--smoke` (the CI mode) for a
+//! 512-connection soak; `--canary` seeds one corrupted response copy into
+//! the checker and must therefore FAIL — CI asserts the nonzero exit, so a
+//! checker that rots into a no-op is caught.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cloudshapes::api::SessionBuilder;
+use cloudshapes::cli::serve::serve_until_shutdown;
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::partitioner::MilpConfig;
+use cloudshapes::platforms::sim::SimConfig;
+use cloudshapes::serve::{lp1_frame, lp1_read, ServeConfig};
+use cloudshapes::util::json::{obj, Json};
+
+/// Raise RLIMIT_NOFILE's soft cap to its hard cap; returns the resulting
+/// soft cap. The syscalls are declared directly (no libc crate, per the
+/// repo's no-deps idiom).
+#[cfg(unix)]
+fn raise_and_get_nofile() -> usize {
+    use std::os::raw::c_int;
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    }
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: c_int = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: c_int = 8;
+
+    let mut lim = RLimit { cur: 1024, max: 1024 };
+    // SAFETY: plain struct-out syscalls on the current process.
+    unsafe {
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 1024;
+        }
+        if lim.cur < lim.max {
+            let want = RLimit { cur: lim.max, max: lim.max };
+            if setrlimit(RLIMIT_NOFILE, &want) == 0 {
+                lim.cur = lim.max;
+            }
+        }
+    }
+    lim.cur.min(1 << 20) as usize
+}
+
+#[cfg(not(unix))]
+fn raise_and_get_nofile() -> usize {
+    1024
+}
+
+/// The request mix, one per (connection, round). Cached solves: the cache
+/// is prewarmed, so the soak measures the serve plane, not the solver.
+fn request_for(conn: usize, round: usize) -> (&'static str, &'static str) {
+    match (conn + round) % 3 {
+        0 => ("ping", r#""op":"ping""#),
+        1 => ("evaluate", r#""op":"evaluate","partitioner":"heuristic","budget":null"#),
+        _ => ("batch", r#""op":"batch","partitioner":"heuristic","budgets":[null,1000000.0]"#),
+    }
+}
+
+/// Classify one response line: `Ok(true)` = valid success, `Ok(false)` =
+/// valid overload shed, `Err` = corrupted.
+fn check_response(op: &str, line: &str) -> Result<bool, String> {
+    let json = Json::parse(line).map_err(|e| format!("{op}: unparseable ({e}): {line}"))?;
+    if json.get("v").and_then(Json::as_u64) != Some(1) {
+        return Err(format!("{op}: missing v:1: {line}"));
+    }
+    if let Some(err) = json.get("error") {
+        return match err.get("kind").and_then(Json::as_str) {
+            Some("overload") => Ok(false),
+            other => Err(format!("{op}: unexpected error kind {other:?}: {line}")),
+        };
+    }
+    let shaped = match op {
+        "ping" => json.get("pong") == Some(&Json::Bool(true)),
+        "evaluate" => json.get("predicted_latency_s").is_some(),
+        "batch" => json.get("results").is_some(),
+        _ => false,
+    };
+    if !shaped {
+        return Err(format!("{op}: malformed success payload: {line}"));
+    }
+    Ok(true)
+}
+
+struct ThreadReport {
+    /// (op, response line) per request, in issue order.
+    responses: Vec<(&'static str, String)>,
+    /// Seconds from write to read-back per request.
+    latencies: Vec<f64>,
+    lost: usize,
+}
+
+/// Drive `conns` connections for `rounds` rounds: each round writes one
+/// request on every connection (pipelining across the fleet), then reads
+/// every response back in order. Odd-indexed connections negotiate lp1 on
+/// their first request.
+fn drive(
+    addr: std::net::SocketAddr,
+    first_conn: usize,
+    conns: usize,
+    rounds: usize,
+) -> ThreadReport {
+    let mut sockets = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let mut attempts = 0;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    attempts += 1;
+                    assert!(attempts < 50, "connect {}/{conns} failed: {e}", i + 1);
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let lp1 = (first_conn + i) % 2 == 1;
+        sockets.push((stream, lp1, false)); // (socket, wants_lp1, negotiated)
+    }
+
+    let mut report = ThreadReport {
+        responses: Vec::with_capacity(conns * rounds),
+        latencies: Vec::with_capacity(conns * rounds),
+        lost: 0,
+    };
+    let mut readers: Vec<BufReader<TcpStream>> =
+        sockets.iter().map(|(s, _, _)| BufReader::new(s.try_clone().unwrap())).collect();
+
+    for round in 0..rounds {
+        let mut sent: Vec<(&'static str, Instant)> = Vec::with_capacity(conns);
+        for (i, (stream, wants_lp1, negotiated)) in sockets.iter_mut().enumerate() {
+            let (op, body) = request_for(first_conn + i, round);
+            let negotiate = *wants_lp1 && !*negotiated;
+            let framing = if negotiate { r#","framing":"lp1""# } else { "" };
+            let line = format!("{{\"v\":1,{body}{framing}}}");
+            let wire = if *wants_lp1 && *negotiated {
+                lp1_frame(&line)
+            } else {
+                format!("{line}\n").into_bytes()
+            };
+            let t = Instant::now();
+            if stream.write_all(&wire).is_err() {
+                report.lost += 1;
+                sent.push(("", t));
+                continue;
+            }
+            if negotiate {
+                *negotiated = true;
+            }
+            sent.push((op, t));
+        }
+        for (i, &(op, started)) in sent.iter().enumerate() {
+            if op.is_empty() {
+                continue; // write already counted as lost
+            }
+            let lp1 = sockets[i].1;
+            let line = if lp1 {
+                lp1_read(&mut readers[i]).unwrap_or_default()
+            } else {
+                let mut buf = String::new();
+                match readers[i].read_line(&mut buf) {
+                    Ok(n) if n > 0 => {}
+                    _ => buf.clear(),
+                }
+                buf.trim().to_string()
+            };
+            if line.is_empty() {
+                report.lost += 1;
+                continue;
+            }
+            report.latencies.push(started.elapsed().as_secs_f64());
+            report.responses.push((op, line));
+        }
+    }
+    report
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let canary = args.iter().any(|a| a == "--canary");
+    if cfg!(not(unix)) {
+        println!("perf_serve: serve plane requires unix; skipping");
+        return;
+    }
+
+    let nofile = raise_and_get_nofile();
+    // One client fd + one server fd per connection, both in this process;
+    // leave headroom for the session's own threads and files.
+    let fd_cap = nofile.saturating_sub(256) / 2;
+    let target = if smoke { 512 } else { 10_000 };
+    let connections = target.min(fd_cap).max(16);
+    let rounds = 3;
+    let threads = if smoke { 8 } else { 16 };
+
+    println!(
+        "== perf: serve plane soak ({connections} connections x {rounds} rounds, \
+         nofile {nofile}) =="
+    );
+
+    // Noise-free session so repeated solves are cache hits with
+    // byte-identical payloads; an in-flight budget sized for the fleet.
+    let serve_cfg = ServeConfig { max_inflight: 4096, ..ServeConfig::default() };
+    let mut cluster = ExperimentConfig::quick().cluster;
+    cluster.sim = SimConfig::exact();
+    let (session, build_secs) = common::timed("session build (benchmark + models)", || {
+        SessionBuilder::quick()
+            .cluster(cluster)
+            .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
+            .budget_sweep(3)
+            .serve(serve_cfg)
+            .build()
+            .unwrap()
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let session = Arc::new(session);
+    let server = std::thread::spawn(move || serve_until_shutdown(listener, session));
+
+    // Prewarm the cache so the soak exercises the serve plane, not the
+    // solver: one connection issues each solve in the mix once.
+    for round in 0..3 {
+        let (op, body) = request_for(0, round);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!("{{\"v\":1,{body}}}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).unwrap();
+        check_response(op, line.trim()).unwrap_or_else(|e| panic!("prewarm {e}"));
+    }
+
+    let (reports, soak_secs) = common::timed("soak", || {
+        let per = connections / threads;
+        let extra = connections % threads;
+        let mut first = 0usize;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let count = per + usize::from(t < extra);
+                let start = first;
+                first += count;
+                std::thread::spawn(move || drive(addr, start, count, rounds))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<ThreadReport>>()
+    });
+
+    let mut responses: Vec<(&'static str, String)> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut lost = 0usize;
+    for mut r in reports {
+        responses.append(&mut r.responses);
+        latencies.append(&mut r.latencies);
+        lost += r.lost;
+    }
+
+    if canary {
+        // Deterministically corrupt one response before verification; the
+        // checker MUST flag it (CI asserts this run exits nonzero).
+        let idx = 0xC0FFEE % responses.len().max(1);
+        println!("[canary] corrupting response #{idx}");
+        responses[idx].1 = responses[idx].1.replace(':', ";");
+    }
+
+    let mut shed = 0usize;
+    let mut corrupted: Vec<String> = Vec::new();
+    for (op, line) in &responses {
+        match check_response(op, line) {
+            Ok(true) => {}
+            Ok(false) => shed += 1,
+            Err(e) => corrupted.push(e),
+        }
+    }
+
+    let total = connections * rounds;
+    let answered = responses.len();
+    let shed_rate = shed as f64 / answered.max(1) as f64;
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        latencies[((latencies.len() - 1) as f64 * p) as usize]
+    };
+    let (p50, p99) = (pct(0.50), pct(0.99));
+
+    println!(
+        "[perf] serve soak: {answered}/{total} answered, {lost} lost, {} corrupted, \
+         {shed} shed ({:.2}%), p50 {:.1}ms, p99 {:.1}ms",
+        corrupted.len(),
+        shed_rate * 100.0,
+        p50 * 1e3,
+        p99 * 1e3
+    );
+
+    common::save(
+        "BENCH_serve.json",
+        &obj(vec![
+            ("bench", "serve_soak".into()),
+            ("smoke", Json::Bool(smoke)),
+            ("connections", connections.into()),
+            ("rounds", rounds.into()),
+            ("requests", total.into()),
+            ("answered", answered.into()),
+            ("lost", lost.into()),
+            ("corrupted", corrupted.len().into()),
+            ("shed", shed.into()),
+            ("shed_rate", shed_rate.into()),
+            ("p50_secs", p50.into()),
+            ("p99_secs", p99.into()),
+            ("session_build_secs", build_secs.into()),
+            ("soak_secs", soak_secs.into()),
+        ])
+        .to_string_pretty(),
+    );
+
+    // Shut the plane down cleanly before judging the gates, so a gate
+    // failure doesn't leak the server thread into the panic backtrace.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"{\"v\":1,\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    server.join().unwrap().unwrap();
+
+    // Gates.
+    for c in corrupted.iter().take(5) {
+        eprintln!("[gate] corrupted: {c}");
+    }
+    assert!(corrupted.is_empty(), "{} corrupted responses", corrupted.len());
+    assert_eq!(lost, 0, "lost {lost} responses");
+    assert_eq!(answered, total, "answered {answered} of {total}");
+    assert!(shed_rate <= 0.05, "shed rate {shed_rate:.3} exceeds the 5% bound");
+    assert!(p99 <= 10.0, "p99 {p99:.2}s exceeds the 10s bound");
+    println!("[gate] serve soak: all gates passed");
+}

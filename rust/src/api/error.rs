@@ -23,7 +23,10 @@ use crate::util::toml::TomlError;
 /// - [`Runtime`](CloudshapesError::Runtime) — execution of an allocation on
 ///   a cluster;
 /// - [`Protocol`](CloudshapesError::Protocol) — the versioned serve wire
-///   protocol (malformed JSON, unsupported versions, bad requests).
+///   protocol (malformed JSON, unsupported versions, bad requests);
+/// - [`Overload`](CloudshapesError::Overload) — the serve plane shed a
+///   well-formed request under admission control (in-flight budget or a
+///   shard queue at its depth cap); retryable with backoff.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CloudshapesError {
     Config(String),
@@ -32,6 +35,7 @@ pub enum CloudshapesError {
     Platform(String),
     Runtime(String),
     Protocol(String),
+    Overload(String),
 }
 
 /// Crate-wide result alias.
@@ -62,6 +66,10 @@ impl CloudshapesError {
         CloudshapesError::Protocol(msg.into())
     }
 
+    pub fn overload(msg: impl Into<String>) -> CloudshapesError {
+        CloudshapesError::Overload(msg.into())
+    }
+
     /// Stable lowercase kind tag — the `error.kind` field of serve error
     /// payloads; also useful for metrics.
     pub fn kind(&self) -> &'static str {
@@ -72,6 +80,7 @@ impl CloudshapesError {
             CloudshapesError::Platform(_) => "platform",
             CloudshapesError::Runtime(_) => "runtime",
             CloudshapesError::Protocol(_) => "protocol",
+            CloudshapesError::Overload(_) => "overload",
         }
     }
 
@@ -83,7 +92,8 @@ impl CloudshapesError {
             | CloudshapesError::Solver(m)
             | CloudshapesError::Platform(m)
             | CloudshapesError::Runtime(m)
-            | CloudshapesError::Protocol(m) => m,
+            | CloudshapesError::Protocol(m)
+            | CloudshapesError::Overload(m) => m,
         }
     }
 }

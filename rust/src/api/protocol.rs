@@ -38,6 +38,18 @@
 //! key (JSON `null` for unconstrained) so a forgotten budget is a typed
 //! error, not a silent unconstrained solve.
 //!
+//! Two transport-level concerns ride the same envelope (both are handled
+//! by the serve plane, [`crate::serve`], before op dispatch):
+//!
+//! - **Framing**: requests are newline-delimited by default; any request
+//!   may carry `"framing":"lp1"` to switch its connection to 4-byte
+//!   big-endian length-prefixed frames (see `docs/PROTOCOL.md`). The key is
+//!   ignored by op decoding.
+//! - **Overload**: under admission-control pressure a well-formed request
+//!   may be shed with `{"ok":false,"error":{"kind":"overload",...}}` —
+//!   retryable with backoff, and never interleaved out of order with the
+//!   connection's other responses.
+//!
 //! `batch` solves a list of budgets in one round trip (at most
 //! [`MAX_BATCH_BUDGETS`]) and answers with one `results` array entry per
 //! budget, in request order. Entries are independent: each is either
@@ -165,7 +177,14 @@ impl Request {
     /// Parse one request line. All failures are
     /// [`CloudshapesError::Protocol`] with context.
     pub fn parse(line: &str) -> Result<Request> {
-        let req = Json::parse(line)?;
+        Request::from_json(&Json::parse(line)?)
+    }
+
+    /// Decode an already-parsed JSON value into a request. Split out from
+    /// [`Request::parse`] so the serve event loop parses each frame exactly
+    /// once — inspecting transport fields like `"framing"` on the same
+    /// value it then decodes the op from.
+    pub fn from_json(req: &Json) -> Result<Request> {
         if req.as_obj().is_none() {
             return Err(CloudshapesError::protocol("request must be a JSON object"));
         }

@@ -47,6 +47,7 @@ use crate::milp::branch_bound::BnbLimits;
 use crate::models::online::PlatformPrior;
 use crate::obs::{self, Counter, ExecCounters, MetricsRegistry};
 use crate::report::Experiment;
+use crate::serve::shard::{quantize, BudgetKey, ShardMap};
 use crate::util::json::Json;
 use crate::workload::{GeneratorConfig, Workload};
 
@@ -206,43 +207,30 @@ impl RunManager {
     }
 }
 
-/// Cache keys quantize budgets to this resolution (dollars): budgets closer
-/// than a nano-dollar share an entry, so repeated float-level jitter of the
-/// same budget still hits.
-const BUDGET_QUANTUM: f64 = 1e-9;
-
-/// `(quantized, disambiguator)`. The second word is 0 for every budget in
-/// the quantizable range; budgets too large to quantize (≳ $9.2e9) carry
-/// their exact bit pattern instead, so distinct huge budgets never collide
-/// on the saturated first word.
-type BudgetKey = (i64, u64);
-
-fn quantize(budget: Option<f64>) -> Option<BudgetKey> {
-    budget.map(|b| {
-        let q = (b / BUDGET_QUANTUM).round();
-        if q.is_finite() && q.abs() < i64::MAX as f64 {
-            (q as i64, 0)
-        } else {
-            (i64::MAX, b.to_bits())
-        }
-    })
-}
-
-/// Hard cap on stored partitions. A long-running `serve` process fed
+/// Hard cap on stored partitions, summed across every cache shard (each
+/// shard caps at its share). A long-running `serve` process fed
 /// ever-changing budgets (one `batch` request can carry 1024 of them) must
 /// not grow without bound: past the cap, fresh keys are solved but not
-/// stored, while existing entries keep hitting. The pareto map needs no cap
-/// — its keys are registry strategy names, a fixed set.
+/// stored, while existing entries keep hitting. The pareto maps need no cap
+/// — their keys are registry strategy names, a fixed set.
 const MAX_PARTITION_ENTRIES: usize = 4096;
 
 /// Concurrent solution cache: solved partitions keyed by
 /// `(strategy, quantized budget)` plus memoized trade-off curves per
-/// strategy. Solves run *outside* the map locks, so concurrent misses on
-/// the same key may each solve once — the partitioners are deterministic,
-/// so every caller still observes the same allocation (first insert wins).
+/// strategy, partitioned into `[serve] shards` slices by the same
+/// consistent-hash [`ShardMap`] the serve plane routes requests with — so
+/// on the serve hot path each slice is only ever locked by the one worker
+/// shard that owns it. Solves run *outside* the slice locks, so concurrent
+/// misses on the same key may each solve once — the partitioners are
+/// deterministic, so every caller still observes the same allocation
+/// (first insert wins per slice). With one shard this is exactly the
+/// legacy single-map cache.
 struct SolutionCache {
-    partitions: Mutex<HashMap<(String, Option<BudgetKey>), Arc<PartitionSummary>>>,
-    paretos: Mutex<HashMap<String, Arc<TradeoffCurve>>>,
+    map: ShardMap,
+    partitions: Vec<Mutex<HashMap<(String, Option<BudgetKey>), Arc<PartitionSummary>>>>,
+    paretos: Vec<Mutex<HashMap<String, Arc<TradeoffCurve>>>>,
+    /// Per-slice entry cap: the global bound split across shards.
+    per_shard_cap: usize,
     /// Registry-backed tallies (`cache_hits_total` / `cache_misses_total`) —
     /// the single source both [`TradeoffSession::cache_stats`] (hence the
     /// serve `ping` op) and the `metrics` op read, so the two can never
@@ -253,21 +241,38 @@ struct SolutionCache {
 }
 
 impl SolutionCache {
-    fn new(reg: &MetricsRegistry) -> SolutionCache {
+    fn new(reg: &MetricsRegistry, shards: usize) -> SolutionCache {
+        let map = ShardMap::new(shards.max(1));
         SolutionCache {
-            partitions: Mutex::new(HashMap::new()),
-            paretos: Mutex::new(HashMap::new()),
+            partitions: (0..map.shards()).map(|_| Mutex::new(HashMap::new())).collect(),
+            paretos: (0..map.shards()).map(|_| Mutex::new(HashMap::new())).collect(),
+            per_shard_cap: (MAX_PARTITION_ENTRIES / map.shards()).max(1),
+            map,
             hits: reg.counter("cache_hits_total", ""),
             misses: reg.counter("cache_misses_total", ""),
         }
+    }
+
+    /// The partition slice owning `(strategy, quantized budget)`.
+    fn partition_shard(
+        &self,
+        strategy: &str,
+        budget: Option<BudgetKey>,
+    ) -> &Mutex<HashMap<(String, Option<BudgetKey>), Arc<PartitionSummary>>> {
+        &self.partitions[self.map.shard_for(strategy, budget)]
+    }
+
+    /// The pareto slice owning `strategy` (curves key on strategy alone).
+    fn pareto_shard(&self, strategy: &str) -> &Mutex<HashMap<String, Arc<TradeoffCurve>>> {
+        &self.paretos[self.map.shard_for(strategy, None)]
     }
 
     fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.value(),
             misses: self.misses.value(),
-            partition_entries: self.partitions.lock().unwrap().len(),
-            pareto_entries: self.paretos.lock().unwrap().len(),
+            partition_entries: self.partitions.iter().map(|m| m.lock().unwrap().len()).sum(),
+            pareto_entries: self.paretos.iter().map(|m| m.lock().unwrap().len()).sum(),
         }
     }
 }
@@ -359,6 +364,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Configure the serve plane (shard count, admission limits, framing
+    /// timeouts) — the `[serve]` TOML section's programmatic twin. The
+    /// shard count also fixes the solution-cache partitioning, so it takes
+    /// effect even when the session is used purely as a library.
+    pub fn serve(mut self, cfg: crate::serve::ServeConfig) -> SessionBuilder {
+        self.base.serve = cfg;
+        self
+    }
+
     /// Replace the whole strategy registry.
     pub fn registry(mut self, registry: PartitionerRegistry) -> SessionBuilder {
         self.registry = registry;
@@ -394,10 +408,11 @@ impl SessionBuilder {
         let sweep = self.sweep.unwrap_or_else(|| self.base.sweep.clone());
         let config = ExperimentConfig { cluster, workload, sweep, ..self.base };
         config.obs.validate()?;
+        config.serve.validate()?;
         let experiment = Experiment::build(config)?;
         let obs = experiment.config.obs.build_registry();
         Ok(TradeoffSession {
-            cache: SolutionCache::new(&obs),
+            cache: SolutionCache::new(&obs, experiment.config.serve.shards),
             obs,
             experiment,
             registry: Arc::new(self.registry),
@@ -504,7 +519,8 @@ impl TradeoffSession {
     ) -> Result<PartitionSummary> {
         let strategy = name.unwrap_or(&self.default_partitioner).to_string();
         let key = (strategy, quantize(budget));
-        if let Some(hit) = self.cache.partitions.lock().unwrap().get(&key) {
+        let shard = self.cache.partition_shard(&key.0, key.1);
+        if let Some(hit) = shard.lock().unwrap().get(&key) {
             self.cache.hits.inc();
             return Ok((**hit).clone());
         }
@@ -531,8 +547,8 @@ impl TradeoffSession {
         // served without being stored.
         let summary = Arc::new(summary);
         let cached = {
-            let mut map = self.cache.partitions.lock().unwrap();
-            if map.len() >= MAX_PARTITION_ENTRIES && !map.contains_key(&key) {
+            let mut map = shard.lock().unwrap();
+            if map.len() >= self.cache.per_shard_cap && !map.contains_key(&key) {
                 Arc::clone(&summary)
             } else {
                 Arc::clone(map.entry(key).or_insert_with(|| Arc::clone(&summary)))
@@ -552,7 +568,8 @@ impl TradeoffSession {
     /// the curve is solved at most once per strategy per session.
     pub fn pareto_frontier_with(&self, name: Option<&str>) -> Result<TradeoffCurve> {
         let strategy = name.unwrap_or(&self.default_partitioner).to_string();
-        if let Some(hit) = self.cache.paretos.lock().unwrap().get(&strategy) {
+        let shard = self.cache.pareto_shard(&strategy);
+        if let Some(hit) = shard.lock().unwrap().get(&strategy) {
             self.cache.hits.inc();
             return Ok((**hit).clone());
         }
@@ -561,12 +578,7 @@ impl TradeoffSession {
         let part = self.registry.create(&strategy, &self.experiment.config)?;
         let curve = sweep(part.as_ref(), self.models(), &self.experiment.config.sweep)?;
         let cached = Arc::clone(
-            self.cache
-                .paretos
-                .lock()
-                .unwrap()
-                .entry(strategy)
-                .or_insert_with(|| Arc::new(curve)),
+            shard.lock().unwrap().entry(strategy).or_insert_with(|| Arc::new(curve)),
         );
         Ok((*cached).clone())
     }

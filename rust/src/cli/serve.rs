@@ -2,7 +2,9 @@
 //! (see [`crate::api::protocol`] for the wire format and `docs/PROTOCOL.md`
 //! for the complete op reference).
 //!
-//! Newline-delimited JSON requests; one JSON response per line:
+//! Newline-delimited JSON requests by default (length-prefixed `lp1`
+//! framing is negotiable per connection — see [`crate::serve`]); one JSON
+//! response per request:
 //!
 //! ```text
 //! {"v":1,"op":"ping"}                          # liveness + cache/scheduler stats
@@ -26,8 +28,14 @@
 //! Malformed requests never drop the connection: every failure maps to a
 //! structured `{"v":1,"ok":false,"error":{"kind":...,"message":...}}`
 //! payload. Used by `examples/cluster_serve.rs` (client mode) to demonstrate
-//! the coordinator as a long-running service: rust owns the event loop; each
-//! connection gets a worker thread.
+//! the coordinator as a long-running service.
+//!
+//! Connection handling lives in [`crate::serve`]: one readiness-driven
+//! event loop owns every socket, and decoded requests are dispatched to
+//! worker shards aligned with the session's solution-cache slices. This
+//! module owns the *semantics* of each op — [`execute_request`] is the
+//! single entry point the shard workers call, and [`handle_request`] is
+//! its line-oriented twin for tests and embedding.
 //!
 //! All connections share one [`TradeoffSession`], so its solution cache
 //! serves repeated and concurrent `partition`/`evaluate`/`pareto`/`batch`
@@ -37,8 +45,7 @@
 //! a `submit` with `"stream":true` holds the connection, emitting
 //! `{"v":1,"event":"job",...}` lines until the job is terminal.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -69,88 +76,49 @@ pub fn cmd_serve(
     serve_until_shutdown(listener, session)
 }
 
-/// Serve an already-bound listener (test/entry-point shared path).
+/// Serve an already-bound listener (test/entry-point shared path) on the
+/// event loop configured by the session's `[serve]` section. Blocks until
+/// a `shutdown` request arrives and every in-flight response has flushed.
 pub fn serve_until_shutdown(listener: TcpListener, session: Arc<TradeoffSession>) -> Result<()> {
-    let stop = Arc::new(AtomicBool::new(false));
-    for stream in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let Ok(stream) = stream else { continue };
-        let s = Arc::clone(&session);
-        let stop_conn = Arc::clone(&stop);
-        std::thread::spawn(move || {
-            let _ = handle_connection(stream, &s, &stop_conn);
-        });
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-    }
-    Ok(())
+    let cfg = session.config().serve.clone();
+    crate::serve::serve(listener, session, &cfg)
 }
 
-fn handle_connection(
-    stream: TcpStream,
+/// Execute one decoded request, emitting any interim streaming lines
+/// through `emit` and returning the final response object. This is the
+/// single semantic entry point: the serve plane's shard workers call it
+/// for every dispatched request, and the event loop calls it inline for
+/// `shutdown` (emit is then a no-op — shutdown never streams).
+pub(crate) fn execute_request(
     session: &TradeoffSession,
+    req: Request,
     stop: &AtomicBool,
-) -> std::io::Result<()> {
-    // The accepted socket's local address IS the listener's address — used
-    // to poke the blocked accept loop after a shutdown request.
-    let listener_addr = stream.local_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    emit: &mut dyn FnMut(String),
+) -> Json {
+    match req {
+        Request::Run { partitioner, budget, stream: true } => {
+            let _timer = OpTimer::start(session, "run");
+            stream_run_lines(session, partitioner.as_deref(), budget, emit)
         }
-        // A streaming run writes interim event lines before its final
-        // response, so it needs the writer; everything else is one
-        // request, one response line.
-        match Request::parse(&line) {
-            Ok(Request::Run { partitioner, budget, stream: true }) => {
-                let timer = OpTimer::start(session, "run");
-                stream_run(&mut writer, session, partitioner.as_deref(), budget)?;
-                drop(timer);
-            }
-            Ok(Request::Submit {
+        Request::Submit { tasks, payoff, accuracy, seed, deadline, budget, stream: true } => {
+            let _timer = OpTimer::start(session, "submit");
+            stream_job_lines(
+                session,
                 tasks,
-                payoff,
+                payoff.as_deref(),
                 accuracy,
                 seed,
                 deadline,
                 budget,
-                stream: true,
-            }) => {
-                let timer = OpTimer::start(session, "submit");
-                stream_job(
-                    &mut writer,
-                    session,
-                    tasks,
-                    payoff.as_deref(),
-                    accuracy,
-                    seed,
-                    deadline,
-                    budget,
-                )?;
-                drop(timer);
-            }
-            parsed => {
-                let response = match parsed.and_then(|req| dispatch(req, session, stop)) {
-                    Ok(response) => response,
-                    Err(e) => error_response(&e),
-                };
-                writer.write_all(response.to_string_compact().as_bytes())?;
-                writer.write_all(b"\n")?;
-            }
+                stop,
+                emit,
+            )
         }
-        if stop.load(Ordering::SeqCst) {
-            // Poke the listener so the accept loop notices shutdown.
-            let _ = TcpStream::connect(listener_addr);
-            break;
-        }
+        req => match dispatch(req, session, stop) {
+            Ok(response) => response,
+            Err(e) => error_response(&e),
+        },
     }
-    Ok(())
 }
 
 /// Handle one request line; always returns a JSON object (success envelope
@@ -540,11 +508,13 @@ fn job_fields(j: &JobStatus) -> Vec<(&'static str, Json)> {
 
 /// Serve a `{"op":"submit","stream":true}` request: submit, then emit one
 /// `{"v":1,"event":"job",...}` line per observed progress change until the
-/// job is terminal, followed by the final `{"v":1,"ok":...}` line carrying
-/// the job's full status.
+/// job is terminal, then return the final `{"v":1,"ok":...}` response
+/// carrying the job's full status. Polls the shutdown flag between
+/// progress checks so a draining server answers a typed error instead of
+/// holding the stream open forever (the job itself keeps running in the
+/// scheduler and stays pollable via `jobs`).
 #[allow(clippy::too_many_arguments)]
-fn stream_job(
-    writer: &mut impl Write,
+fn stream_job_lines(
     session: &TradeoffSession,
     tasks: usize,
     payoff: Option<&str>,
@@ -552,18 +522,23 @@ fn stream_job(
     seed: Option<u64>,
     deadline: Option<f64>,
     budget: Option<f64>,
-) -> std::io::Result<()> {
+    stop: &AtomicBool,
+    emit: &mut dyn FnMut(String),
+) -> Json {
     let submitted = build_job_spec(tasks, payoff, accuracy, seed, deadline, budget)
         .and_then(|spec| session.submit_job(spec));
     let job_id = match submitted {
         Ok(id) => id,
-        Err(e) => {
-            writer.write_all(error_response(&e).to_string_compact().as_bytes())?;
-            return writer.write_all(b"\n");
-        }
+        Err(e) => return error_response(&e),
     };
     let mut last: Option<(JobState, u64, usize)> = None;
     loop {
+        if stop.load(Ordering::SeqCst) {
+            return error_response(&CloudshapesError::runtime(format!(
+                "server shutting down while streaming job {job_id}; the job keeps \
+                 running — poll it with the `jobs` op"
+            )));
+        }
         let status = match session.job_status(job_id) {
             Ok(Some(s)) => s,
             // Only *terminal* jobs are ever evicted (under submission
@@ -572,19 +547,15 @@ fn stream_job(
             // lost to eviction — rare, and worth an honest error over a
             // fabricated result.
             Ok(None) | Err(_) => {
-                let e = CloudshapesError::runtime(format!(
+                return error_response(&CloudshapesError::runtime(format!(
                     "job {job_id} finished but was evicted under submission pressure \
                      before its final status could be streamed (poll `jobs` sooner, \
                      or submit less aggressively)"
-                ));
-                writer.write_all(error_response(&e).to_string_compact().as_bytes())?;
-                return writer.write_all(b"\n");
+                )));
             }
         };
         if status.state.is_terminal() {
-            let response = ok_response(job_fields(&status));
-            writer.write_all(response.to_string_compact().as_bytes())?;
-            return writer.write_all(b"\n");
+            return ok_response(job_fields(&status));
         }
         let key = (status.state.clone(), status.sims_done, status.epochs);
         if last.as_ref() != Some(&key) {
@@ -593,8 +564,7 @@ fn stream_job(
                 ("event", "job".into()),
             ];
             fields.extend(job_fields(&status));
-            writer.write_all(obj(fields).to_string_compact().as_bytes())?;
-            writer.write_all(b"\n")?;
+            emit(obj(fields).to_string_compact());
             last = Some(key);
         }
         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -603,40 +573,27 @@ fn stream_job(
 
 /// Serve a `{"op":"run","stream":true}` request: interim `{"v":1,"event":
 /// ...}` lines (progress at ~5% strides, failures, migrations, task prices)
-/// followed by one final `{"v":1,"ok":...}` response line.
-fn stream_run(
-    writer: &mut impl Write,
+/// through `emit`, then return the final `{"v":1,"ok":...}` response.
+fn stream_run_lines(
     session: &TradeoffSession,
     partitioner: Option<&str>,
     budget: Option<f64>,
-) -> std::io::Result<()> {
-    let mut io_err: Option<std::io::Error> = None;
+    emit: &mut dyn FnMut(String),
+) -> Json {
     let mut next_pct = 0u64;
     let result = session.evaluate_with_events(partitioner, budget, &mut |ev| {
-        let Some(json) = stream_event_json(ev, &mut next_pct) else { return };
-        if io_err.is_none() {
-            let line = json.to_string_compact();
-            if let Err(e) = writer
-                .write_all(line.as_bytes())
-                .and_then(|()| writer.write_all(b"\n"))
-            {
-                io_err = Some(e);
-            }
+        if let Some(json) = stream_event_json(ev, &mut next_pct) {
+            emit(json.to_string_compact());
         }
     });
-    if let Some(e) = io_err {
-        return Err(e);
-    }
-    let response = match result {
+    match result {
         Ok(ev) => {
             let mut fields = partition_fields(&ev.partition);
             fields.extend(execution_fields(&ev.execution));
             ok_response(fields)
         }
         Err(e) => error_response(&e),
-    };
-    writer.write_all(response.to_string_compact().as_bytes())?;
-    writer.write_all(b"\n")
+    }
 }
 
 /// Wire form of one executor event; None for events the stream elides

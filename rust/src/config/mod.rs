@@ -11,6 +11,7 @@ use crate::coordinator::scheduler::SchedulerConfig;
 use crate::coordinator::{BenchmarkConfig, SweepConfig};
 use crate::obs::ObsConfig;
 use crate::platforms::sim::SimConfig;
+use crate::serve::ServeConfig;
 use crate::util::json::Json;
 use crate::util::toml;
 use crate::workload::{GeneratorConfig, Payoff};
@@ -71,6 +72,9 @@ pub struct ExperimentConfig {
     pub scheduler: SchedulerConfig,
     /// Telemetry knobs (`[obs]`; enabled by default).
     pub obs: ObsConfig,
+    /// Serve-plane knobs (`[serve]`: worker/cache shards, read deadline,
+    /// request size limit, in-flight budget).
+    pub serve: ServeConfig,
     /// Directory holding the AOT artifacts (manifest.json).
     pub artifact_dir: String,
 }
@@ -86,6 +90,7 @@ impl Default for ExperimentConfig {
             executor: ExecutorConfig::default(),
             scheduler: SchedulerConfig::default(),
             obs: ObsConfig::default(),
+            serve: ServeConfig::default(),
             artifact_dir: "artifacts".to_string(),
         }
     }
@@ -278,6 +283,13 @@ impl ExperimentConfig {
             set_usize(o, "hist_buckets", &mut cfg.obs.hist_buckets)?;
             set_usize(o, "trace_ring", &mut cfg.obs.trace_ring)?;
             cfg.obs.validate()?;
+        }
+        if let Some(s) = root.get("serve") {
+            set_usize(s, "shards", &mut cfg.serve.shards)?;
+            set_f64(s, "read_timeout_secs", &mut cfg.serve.read_timeout_secs)?;
+            set_usize(s, "max_request_bytes", &mut cfg.serve.max_request_bytes)?;
+            set_usize(s, "max_inflight", &mut cfg.serve.max_inflight)?;
+            cfg.serve.validate()?;
         }
         if let Some(a) = root.get("artifact_dir").and_then(Json::as_str) {
             cfg.artifact_dir = a.to_string();
@@ -487,6 +499,33 @@ mod tests {
         assert!(ExperimentConfig::parse("[obs]\nhist_buckets = 1").is_err());
         assert!(ExperimentConfig::parse("[obs]\ntrace_ring = 2").is_err());
         assert!(ExperimentConfig::parse("[obs]\nenabled = \"on\"").is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let c = ExperimentConfig::parse(
+            "[serve]\nshards = 8\nread_timeout_secs = 2.5\n\
+             max_request_bytes = 65536\nmax_inflight = 512",
+        )
+        .unwrap();
+        assert_eq!(c.serve.shards, 8);
+        assert!((c.serve.read_timeout_secs - 2.5).abs() < 1e-12);
+        assert_eq!(c.serve.max_request_bytes, 65536);
+        assert_eq!(c.serve.max_inflight, 512);
+        // The per-shard queue cap splits the in-flight budget.
+        assert_eq!(c.serve.queue_cap(), 64);
+        // Defaults: 4 shards, 30s deadline, 1 MiB frames, 256 in flight.
+        let c = ExperimentConfig::parse("").unwrap();
+        assert_eq!(c.serve.shards, 4);
+        assert!((c.serve.read_timeout_secs - 30.0).abs() < 1e-12);
+        assert_eq!(c.serve.max_request_bytes, 1 << 20);
+        assert_eq!(c.serve.max_inflight, 256);
+        // Bad values are config errors.
+        assert!(ExperimentConfig::parse("[serve]\nshards = 0").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nshards = 1000").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nread_timeout_secs = 0").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nmax_request_bytes = 8").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nmax_inflight = 0").is_err());
     }
 
     #[test]

@@ -31,7 +31,10 @@
 //!   custom strategies plug in without touching the coordinator.
 //! - Service mode: `cloudshapes serve` speaks the versioned
 //!   [`api::protocol`] (`{"v":1,"op":...}`) over newline-delimited
-//!   JSON/TCP, with structured error payloads.
+//!   JSON/TCP (or negotiated length-prefixed `lp1` framing), with
+//!   structured error payloads. The [`serve`] plane runs one
+//!   readiness-driven event loop with consistent-hash worker shards and
+//!   admission control.
 //! - Online mode: `serve --scheduler` admits pricing jobs continuously —
 //!   the [`coordinator::scheduler`] re-optimises the allocation every
 //!   epoch and re-fits latency models from measured chunk latencies
@@ -63,6 +66,7 @@ pub mod platforms;
 pub mod pricing;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;
 pub mod workload;

@@ -1,0 +1,384 @@
+//! Per-connection state for the serve event loop: frame extraction (newline
+//! and `lp1` length-prefixed modes), the sequence-ordered response slots
+//! that keep pipelined responses in request order even when requests fan
+//! out across shards, and the bounded non-blocking write queue.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Wire framing of one connection direction (reads and writes switch
+/// together at the `"framing":"lp1"` negotiation point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framing {
+    /// Newline-delimited JSON — the protocol v1 default, byte-compatible
+    /// with every pre-lp1 client.
+    Newline,
+    /// `lp1`: a 4-byte big-endian u32 payload length, then exactly that
+    /// many bytes of JSON. No trailing newline.
+    Lp1,
+}
+
+/// Encode one JSON text as an `lp1` frame (client helpers and the write
+/// path share this so the wire layout has a single definition).
+pub fn lp1_frame(json_text: &str) -> Vec<u8> {
+    let payload = json_text.as_bytes();
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    frame.extend_from_slice(payload);
+    frame
+}
+
+/// Read one `lp1` frame from a blocking reader — the client-side twin of
+/// [`lp1_frame`], used by tests and the `perf_serve` bench.
+pub fn lp1_read(reader: &mut impl Read) -> io::Result<String> {
+    let mut len = [0u8; 4];
+    reader.read_exact(&mut len)?;
+    let len = u32::from_be_bytes(len) as usize;
+    let mut payload = vec![0u8; len];
+    reader.read_exact(&mut payload)?;
+    String::from_utf8(payload)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("lp1 payload: {e}")))
+}
+
+/// Why frame extraction failed; both cases answer with a typed protocol
+/// error and close the connection after the error flushes.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The accumulated request exceeds `[serve] max_request_bytes`.
+    TooLarge { limit: usize },
+    /// An `lp1` header announced a zero or over-limit length.
+    BadLength { len: usize, limit: usize },
+}
+
+/// One response slot: wire-ready bytes accumulate here until the slot is
+/// both finished and at the front of the connection's sequence order.
+struct Slot {
+    framing: Framing,
+    bytes: Vec<u8>,
+    done: bool,
+}
+
+/// Cap on a connection's total buffered output (slots + flush buffer). A
+/// client that streams a run but never reads would otherwise buffer without
+/// bound; past the cap the connection is dropped as a slow consumer.
+pub const MAX_CONN_BUFFER: usize = 4 << 20;
+
+/// Read chunk size per readiness event.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// One live connection owned by the event loop.
+pub struct Conn {
+    pub stream: TcpStream,
+    pub token: u64,
+    /// Read-side framing for the *next* frame (negotiation switches it
+    /// mid-buffer; already-buffered bytes are re-interpreted in the new
+    /// mode, which is exactly what a pipelining negotiator wants).
+    pub framing: Framing,
+    read_buf: Vec<u8>,
+    /// Sequence number assigned to the next decoded request.
+    next_seq: u64,
+    /// Sequence currently (or next) being written out.
+    next_write: u64,
+    slots: BTreeMap<u64, Slot>,
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Requests decoded but not yet answered (streamers count until their
+    /// final line).
+    pub inflight: usize,
+    /// When the connection last completed a frame or finished flushing all
+    /// output — the idle-timeout clock.
+    pub idle_since: Instant,
+    /// Set while `read_buf` holds an incomplete frame: the slow-loris
+    /// deadline measures from the first byte of the partial frame, so a
+    /// byte-per-second drip never resets it.
+    pub frame_started: Option<Instant>,
+    /// Peer half-closed its write side; serve remaining responses, then
+    /// drop.
+    pub eof: bool,
+    /// Close as soon as every queued response byte has flushed (set after
+    /// fatal protocol errors and timeouts).
+    pub closing: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, token: u64, now: Instant) -> Conn {
+        Conn {
+            stream,
+            token,
+            framing: Framing::Newline,
+            read_buf: Vec::new(),
+            next_seq: 0,
+            next_write: 0,
+            slots: BTreeMap::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            inflight: 0,
+            idle_since: now,
+            frame_started: None,
+            eof: false,
+            closing: false,
+        }
+    }
+
+    /// Non-blocking read until `WouldBlock`/EOF. Returns `Ok(true)` if any
+    /// bytes arrived; EOF sets `self.eof`. Errors mean the connection is
+    /// gone.
+    pub fn fill(&mut self) -> io::Result<bool> {
+        let mut any = false;
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    if self.read_buf.is_empty() {
+                        self.frame_started = Some(Instant::now());
+                    }
+                    self.read_buf.extend_from_slice(&chunk[..n]);
+                    any = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(any)
+    }
+
+    /// Extract the next complete frame as JSON text, in the current
+    /// framing. `Ok(None)` = need more bytes.
+    pub fn next_frame(&mut self, max_request_bytes: usize) -> Result<Option<String>, FrameError> {
+        let frame = match self.framing {
+            Framing::Newline => {
+                match self.read_buf.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        let mut line: Vec<u8> = self.read_buf.drain(..=pos).collect();
+                        line.pop(); // the newline
+                        if line.last() == Some(&b'\r') {
+                            line.pop();
+                        }
+                        Some(line)
+                    }
+                    None if self.read_buf.len() > max_request_bytes => {
+                        return Err(FrameError::TooLarge { limit: max_request_bytes });
+                    }
+                    None => None,
+                }
+            }
+            Framing::Lp1 => {
+                if self.read_buf.len() < 4 {
+                    None
+                } else {
+                    let len = u32::from_be_bytes([
+                        self.read_buf[0],
+                        self.read_buf[1],
+                        self.read_buf[2],
+                        self.read_buf[3],
+                    ]) as usize;
+                    if len == 0 || len > max_request_bytes {
+                        return Err(FrameError::BadLength { len, limit: max_request_bytes });
+                    }
+                    if self.read_buf.len() < 4 + len {
+                        None
+                    } else {
+                        self.read_buf.drain(..4);
+                        let payload: Vec<u8> = self.read_buf.drain(..len).collect();
+                        Some(payload)
+                    }
+                }
+            }
+        };
+        match frame {
+            Some(bytes) => {
+                let now = Instant::now();
+                self.idle_since = now;
+                self.frame_started = if self.read_buf.is_empty() { None } else { Some(now) };
+                // Lossy decode: invalid UTF-8 becomes a JSON parse error at
+                // the request layer, not a dropped connection.
+                Ok(Some(String::from_utf8_lossy(&bytes).into_owned()))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Whether a partial frame is pending (the slow-loris clock is armed).
+    pub fn has_partial_frame(&self) -> bool {
+        !self.read_buf.is_empty()
+    }
+
+    /// Open the next response slot, recording the framing its bytes must be
+    /// encoded with. Returns the slot's sequence number.
+    pub fn open_slot(&mut self, framing: Framing) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.slots.insert(seq, Slot { framing, bytes: Vec::new(), done: false });
+        seq
+    }
+
+    /// Append one JSON line to a slot (interim streaming event lines use
+    /// this repeatedly before `finish`). Unknown seqs are ignored — the
+    /// connection may have been reset while a streamer was still running.
+    pub fn append(&mut self, seq: u64, json_text: &str) {
+        if let Some(slot) = self.slots.get_mut(&seq) {
+            match slot.framing {
+                Framing::Newline => {
+                    slot.bytes.extend_from_slice(json_text.as_bytes());
+                    slot.bytes.push(b'\n');
+                }
+                Framing::Lp1 => slot.bytes.extend_from_slice(&lp1_frame(json_text)),
+            }
+        }
+    }
+
+    /// Append the slot's final line and mark it complete.
+    pub fn finish(&mut self, seq: u64, json_text: &str) {
+        self.append(seq, json_text);
+        if let Some(slot) = self.slots.get_mut(&seq) {
+            slot.done = true;
+        }
+    }
+
+    /// Move ready bytes from in-order slots into the flush buffer. A slot
+    /// releases bytes as they arrive (streaming), but the cursor only
+    /// advances past a slot once it is done — later sequences wait.
+    pub fn pump(&mut self) {
+        loop {
+            let Some(slot) = self.slots.get_mut(&self.next_write) else { break };
+            self.out.append(&mut slot.bytes);
+            if !slot.done {
+                break;
+            }
+            self.slots.remove(&self.next_write);
+            self.next_write += 1;
+        }
+    }
+
+    /// Non-blocking flush. Returns `Ok(true)` while bytes remain queued
+    /// (write interest should stay registered). Errors mean the connection
+    /// is gone.
+    pub fn flush(&mut self) -> io::Result<bool> {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(io::ErrorKind::WriteZero, "socket write of 0"))
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(true),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.out.clear();
+        self.out_pos = 0;
+        if self.inflight == 0 {
+            self.idle_since = Instant::now();
+        }
+        Ok(false)
+    }
+
+    /// Bytes queued anywhere on the write side (unflushed buffer or slots
+    /// still waiting their turn).
+    pub fn has_pending_output(&self) -> bool {
+        self.out_pos < self.out.len() || self.slots.values().any(|s| !s.bytes.is_empty() || s.done)
+    }
+
+    /// Total buffered output, for the slow-consumer cap.
+    pub fn buffered_bytes(&self) -> usize {
+        (self.out.len() - self.out_pos) + self.slots.values().map(|s| s.bytes.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn conn_pair() -> (Conn, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (Conn::new(server, 2, Instant::now()), client)
+    }
+
+    #[test]
+    fn newline_frames_split_and_strip_cr() {
+        let (mut conn, mut client) = conn_pair();
+        client.write_all(b"{\"a\":1}\r\n{\"b\":2}\npartial").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(conn.fill().unwrap());
+        assert_eq!(conn.next_frame(1024).unwrap().as_deref(), Some("{\"a\":1}"));
+        assert_eq!(conn.next_frame(1024).unwrap().as_deref(), Some("{\"b\":2}"));
+        assert_eq!(conn.next_frame(1024).unwrap(), None);
+        assert!(conn.has_partial_frame());
+    }
+
+    #[test]
+    fn oversized_newline_request_is_a_frame_error() {
+        let (mut conn, mut client) = conn_pair();
+        client.write_all(&vec![b'x'; 200]).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        conn.fill().unwrap();
+        assert!(matches!(conn.next_frame(100), Err(FrameError::TooLarge { limit: 100 })));
+    }
+
+    #[test]
+    fn lp1_frames_roundtrip_and_validate_length() {
+        let (mut conn, mut client) = conn_pair();
+        conn.framing = Framing::Lp1;
+        client.write_all(&lp1_frame("{\"op\":\"ping\"}")).unwrap();
+        client.write_all(&[0, 0, 0, 0]).unwrap(); // zero-length header
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        conn.fill().unwrap();
+        assert_eq!(conn.next_frame(1024).unwrap().as_deref(), Some("{\"op\":\"ping\"}"));
+        assert!(matches!(conn.next_frame(1024), Err(FrameError::BadLength { len: 0, .. })));
+    }
+
+    #[test]
+    fn slots_reorder_responses_into_sequence_order() {
+        let (mut conn, _client) = conn_pair();
+        let a = conn.open_slot(Framing::Newline);
+        let b = conn.open_slot(Framing::Newline);
+        // Finish out of order: b first.
+        conn.finish(b, "{\"second\":true}");
+        conn.pump();
+        assert!(conn.out.is_empty(), "b must wait for a");
+        assert!(conn.has_pending_output(), "b's bytes are queued behind a");
+        conn.finish(a, "{\"first\":true}");
+        conn.pump();
+        let queued = String::from_utf8(conn.out.clone()).unwrap();
+        assert_eq!(queued, "{\"first\":true}\n{\"second\":true}\n");
+    }
+
+    #[test]
+    fn streaming_slot_releases_interim_lines_before_done() {
+        let (mut conn, _client) = conn_pair();
+        let a = conn.open_slot(Framing::Newline);
+        conn.append(a, "{\"event\":\"started\"}");
+        conn.pump();
+        let queued = String::from_utf8(conn.out.clone()).unwrap();
+        assert_eq!(queued, "{\"event\":\"started\"}\n");
+        // Not done yet: a later slot must not jump the queue.
+        let b = conn.open_slot(Framing::Newline);
+        conn.finish(b, "{\"b\":1}");
+        conn.pump();
+        assert!(!String::from_utf8(conn.out.clone()).unwrap().contains("\"b\""));
+        conn.finish(a, "{\"ok\":true}");
+        conn.pump();
+        let queued = String::from_utf8(conn.out.clone()).unwrap();
+        assert_eq!(queued, "{\"event\":\"started\"}\n{\"ok\":true}\n{\"b\":1}\n");
+    }
+
+    #[test]
+    fn lp1_encode_decode_roundtrip() {
+        let frame = lp1_frame("{\"v\":1}");
+        assert_eq!(&frame[..4], &[0, 0, 0, 7]);
+        let mut cursor = std::io::Cursor::new(frame);
+        assert_eq!(lp1_read(&mut cursor).unwrap(), "{\"v\":1}");
+    }
+}

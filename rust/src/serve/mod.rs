@@ -1,0 +1,557 @@
+//! The async sharded serve plane.
+//!
+//! One readiness-driven event loop (hand-rolled epoll on Linux, poll(2) on
+//! other unix — no external deps) owns accept, read/write readiness and
+//! frame decoding for every connection; decoded requests are dispatched to
+//! N worker shards selected by a consistent hash of `(strategy, quantized
+//! budget)` — the same [`ShardMap`] that partitions the session's solution
+//! cache, so each cache slice is written by exactly one worker and the
+//! global cache mutex leaves the hot path. Responses flow back through
+//! per-connection bounded write queues that preserve request order even
+//! when requests fan out across shards.
+//!
+//! Two wire framings per connection, switchable mid-stream:
+//!
+//! - newline-delimited JSON (the protocol v1 default — byte-compatible with
+//!   every pre-existing client);
+//! - `lp1` length-prefixed framing (4-byte big-endian u32 payload length,
+//!   then the JSON payload), negotiated by sending `"framing":"lp1"` on any
+//!   request. The negotiating request's own response is already lp1-framed.
+//!
+//! Admission control sheds rather than stalls: a global in-flight budget
+//! (`[serve] max_inflight`) plus per-shard queue depth caps answer
+//! `{"ok":false,"error":{"kind":"overload",...}}` when exceeded, keeping
+//! reads (and `shutdown`) responsive under load. Slow-loris and oversized
+//! requests are bounded by `[serve] read_timeout_secs` and
+//! `[serve] max_request_bytes`. Everything is observable through the
+//! metrics registry: `serve_connections`, `serve_shard_queue_depth`,
+//! `serve_shed_total{reason=}` and `serve_request_latency_secs{op=}`.
+//!
+//! With `[serve] shards = 1` the plane degenerates to a single worker and
+//! one cache slice — byte-for-byte the legacy single-cache behaviour.
+
+mod conn;
+#[cfg(unix)]
+mod poller;
+#[cfg(unix)]
+pub(crate) mod pool;
+pub mod shard;
+
+pub use conn::{lp1_frame, lp1_read, Framing};
+pub use shard::{fnv1a, quantize, BudgetKey, ShardMap, BUDGET_QUANTUM};
+
+use crate::api::error::{CloudshapesError, Result};
+
+/// `[serve]` section of the experiment config: the serve plane's knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker shards (and solution-cache slices). 1 reproduces the legacy
+    /// single-cache behaviour bit-for-bit.
+    pub shards: usize,
+    /// Per-connection read deadline, seconds: an incomplete request frame
+    /// older than this is answered with a typed protocol error and the
+    /// connection closed; a fully idle connection is closed silently.
+    pub read_timeout_secs: f64,
+    /// Maximum bytes of one request frame, in both framing modes.
+    pub max_request_bytes: usize,
+    /// Global in-flight request budget; excess requests are shed with an
+    /// `overload` error instead of queueing without bound.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 4,
+            read_timeout_secs: 30.0,
+            max_request_bytes: 1 << 20,
+            max_inflight: 256,
+        }
+    }
+}
+
+/// Most shards a serve plane may run (each is a worker thread + cache
+/// slice; past this, coordination costs dwarf any concurrency win).
+pub const MAX_SHARDS: usize = 64;
+
+impl ServeConfig {
+    /// Validate the knobs; called by the config parser and the session
+    /// builder so a bad `[serve]` section fails before a socket is bound.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 || self.shards > MAX_SHARDS {
+            return Err(CloudshapesError::config(format!(
+                "serve.shards must be 1..={MAX_SHARDS}, got {}",
+                self.shards
+            )));
+        }
+        if !self.read_timeout_secs.is_finite() || self.read_timeout_secs <= 0.0 {
+            return Err(CloudshapesError::config(
+                "serve.read_timeout_secs must be a positive number of seconds",
+            ));
+        }
+        if self.max_request_bytes < 64 {
+            return Err(CloudshapesError::config(
+                "serve.max_request_bytes must be at least 64",
+            ));
+        }
+        if self.max_inflight == 0 {
+            return Err(CloudshapesError::config("serve.max_inflight must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Depth cap of each shard's job queue: the in-flight budget split
+    /// across shards, floored so a many-shard config still queues a little.
+    pub fn queue_cap(&self) -> usize {
+        (self.max_inflight / self.shards).max(4)
+    }
+}
+
+#[cfg(unix)]
+pub use event_loop::serve;
+
+/// Non-unix targets have no readiness backend; the serve plane is a typed
+/// runtime error there instead of a compile failure.
+#[cfg(not(unix))]
+pub fn serve(
+    _listener: std::net::TcpListener,
+    _session: std::sync::Arc<crate::api::TradeoffSession>,
+    _cfg: &ServeConfig,
+) -> Result<()> {
+    Err(CloudshapesError::runtime(
+        "the serve event loop requires a unix platform (epoll/poll backend)",
+    ))
+}
+
+#[cfg(unix)]
+mod event_loop {
+    use std::collections::{BTreeSet, HashMap};
+    use std::net::TcpListener;
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use crate::api::error::{CloudshapesError, Result};
+    use crate::api::protocol::{error_response, Request};
+    use crate::api::TradeoffSession;
+    use crate::obs::{Counter, MetricsRegistry};
+    use crate::util::json::Json;
+
+    use super::conn::{Conn, FrameError, Framing, MAX_CONN_BUFFER};
+    use super::poller::Poller;
+    use super::pool::{Completion, CompletionQueue, Job, ShardPool};
+    use super::shard::ShardMap;
+    use super::ServeConfig;
+
+    /// Token of the listening socket; connection tokens start above it and
+    /// are never reused (a late completion can never land on a new
+    /// connection that recycled the token).
+    const LISTENER_TOKEN: u64 = 0;
+    const FIRST_CONN_TOKEN: u64 = 2;
+
+    /// Hard ceiling on the post-shutdown drain: in-flight responses get
+    /// this long to finish and flush before the loop gives up on them.
+    const DRAIN_DEADLINE_SECS: u64 = 10;
+
+    /// Everything the frame/admission path needs besides the connection
+    /// table and the poller (which the loop keeps separate so `&mut Conn`
+    /// and `&mut Ctx` can coexist).
+    struct Ctx<'a> {
+        cfg: &'a ServeConfig,
+        session: &'a Arc<TradeoffSession>,
+        stop: &'a Arc<AtomicBool>,
+        pool: &'a ShardPool,
+        map: &'a ShardMap,
+        default_strategy: &'a str,
+        registry: &'a MetricsRegistry,
+        shed_inflight: Arc<Counter>,
+        shed_queue: Arc<Counter>,
+        /// Requests dispatched to shards and not yet answered, across all
+        /// connections (the event loop is single-threaded, so a plain
+        /// counter suffices).
+        inflight: usize,
+        /// Shutdown observed: no new accepts, no new frames; drain only.
+        draining: bool,
+    }
+
+    /// Run the serve plane on an already-bound listener until a `shutdown`
+    /// request arrives, then drain in-flight responses and join the shard
+    /// workers before returning.
+    pub fn serve(
+        listener: TcpListener,
+        session: Arc<TradeoffSession>,
+        cfg: &ServeConfig,
+    ) -> Result<()> {
+        cfg.validate()?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| CloudshapesError::runtime(format!("listener nonblocking: {e}")))?;
+        let mut poller = Poller::new()
+            .map_err(|e| CloudshapesError::runtime(format!("readiness poller: {e}")))?;
+        poller
+            .register(listener.as_raw_fd(), LISTENER_TOKEN, true, false)
+            .map_err(|e| CloudshapesError::runtime(format!("registering listener: {e}")))?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let completions = Arc::new(CompletionQueue::new(poller.waker()));
+        let registry = Arc::clone(session.metrics_registry());
+        let pool = ShardPool::start(
+            cfg.shards,
+            cfg.queue_cap(),
+            Arc::clone(&session),
+            Arc::clone(&stop),
+            Arc::clone(&completions),
+            &registry,
+        );
+        let map = ShardMap::new(cfg.shards);
+        let default_strategy = session.default_partitioner().to_string();
+        let connections_gauge = registry.gauge("serve_connections", "");
+        let mut ctx = Ctx {
+            cfg,
+            session: &session,
+            stop: &stop,
+            pool: &pool,
+            map: &map,
+            default_strategy: &default_strategy,
+            registry: &registry,
+            shed_inflight: registry.counter("serve_shed_total", "reason=inflight"),
+            shed_queue: registry.counter("serve_shed_total", "reason=shard_queue"),
+            inflight: 0,
+            draining: false,
+        };
+
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token = FIRST_CONN_TOKEN;
+        let mut events = Vec::new();
+        let mut batch: Vec<Completion> = Vec::new();
+        // Sweep timeouts at least twice per deadline, but never busier than
+        // every 10ms (tests run with sub-second deadlines).
+        let sweep_every =
+            Duration::from_secs_f64((cfg.read_timeout_secs / 2.0).clamp(0.01, 0.1));
+        let tick = sweep_every.min(Duration::from_millis(250));
+        let mut last_sweep = Instant::now();
+        let mut drain_deadline: Option<Instant> = None;
+
+        loop {
+            events.clear();
+            poller
+                .wait(Some(tick), &mut events)
+                .map_err(|e| CloudshapesError::runtime(format!("poll wait: {e}")))?;
+            // Connections that changed this iteration and need their output
+            // pumped/flushed and their poller interest refreshed.
+            let mut dirty: BTreeSet<u64> = BTreeSet::new();
+
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.token == LISTENER_TOKEN {
+                    if !ctx.draining {
+                        accept_all(&listener, &mut poller, &mut conns, &mut next_token);
+                        connections_gauge.set(conns.len() as f64);
+                    }
+                    continue;
+                }
+                let Some(conn) = conns.get_mut(&ev.token) else { continue };
+                if (ev.readable || ev.hangup) && !ctx.draining {
+                    if conn.fill().is_err() {
+                        conn.closing = true;
+                        conn.eof = true;
+                    }
+                    process_frames(conn, &mut ctx);
+                } else if ev.hangup {
+                    conn.eof = true;
+                }
+                dirty.insert(ev.token);
+            }
+
+            // Shard workers report in: interim stream lines and finals.
+            completions.drain_into(&mut batch);
+            for c in batch.drain(..) {
+                match c {
+                    Completion::Event { conn: token, seq, line } => {
+                        if let Some(conn) = conns.get_mut(&token) {
+                            conn.append(seq, &line);
+                            dirty.insert(token);
+                        }
+                    }
+                    Completion::Done { conn: token, seq, line, op, started } => {
+                        ctx.inflight = ctx.inflight.saturating_sub(1);
+                        ctx.registry.observe(
+                            "serve_request_latency_secs",
+                            &format!("op={op}"),
+                            started.elapsed().as_secs_f64(),
+                        );
+                        if let Some(conn) = conns.get_mut(&token) {
+                            conn.finish(seq, &line);
+                            conn.inflight = conn.inflight.saturating_sub(1);
+                            dirty.insert(token);
+                        }
+                    }
+                }
+            }
+
+            // Shutdown is a first-class wakeup: the flag is set inline by
+            // the `shutdown` dispatch above (or by a shard worker, whose
+            // completion wakes this loop through the self-pipe), so it is
+            // observed here on the same iteration — no poke connection, no
+            // accept race.
+            if ctx.stop.load(Ordering::SeqCst) && !ctx.draining {
+                ctx.draining = true;
+                drain_deadline =
+                    Some(Instant::now() + Duration::from_secs(DRAIN_DEADLINE_SECS));
+                let _ = poller.deregister(listener.as_raw_fd());
+                // Stop reading everywhere; remaining responses still flush.
+                dirty.extend(conns.keys().copied());
+            }
+
+            // Deadline sweep: slow-loris partial frames and idle timeouts.
+            if last_sweep.elapsed() >= sweep_every {
+                last_sweep = Instant::now();
+                sweep_deadlines(&mut conns, &mut ctx, &mut dirty);
+            }
+
+            // Pump slots, flush sockets, refresh interest, close what's done.
+            for token in dirty {
+                finalize(token, &mut conns, &mut poller, &mut ctx);
+            }
+            connections_gauge.set(conns.len() as f64);
+
+            if ctx.draining {
+                let flushed =
+                    ctx.inflight == 0 && conns.values().all(|c| !c.has_pending_output());
+                let expired = drain_deadline.is_some_and(|d| Instant::now() >= d);
+                if flushed || expired {
+                    break;
+                }
+            }
+        }
+
+        // In-flight responses have flushed (or the drain deadline passed):
+        // only now does the listener close and the pool join its workers.
+        drop(listener);
+        drop(conns);
+        pool.shutdown();
+        Ok(())
+    }
+
+    fn accept_all(
+        listener: &TcpListener,
+        poller: &mut Poller,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+    ) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // drop the connection; accept the rest
+                    }
+                    let token = *next_token;
+                    *next_token += 1;
+                    if poller.register(stream.as_raw_fd(), token, true, false).is_ok() {
+                        conns.insert(token, Conn::new(stream, token, Instant::now()));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // Transient per-connection accept failures (ECONNABORTED,
+                // EMFILE...): skip this round, the next readiness retries.
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Decode every complete frame buffered on `conn` and admit each one.
+    fn process_frames(conn: &mut Conn, ctx: &mut Ctx<'_>) {
+        while !conn.closing && !ctx.draining {
+            match conn.next_frame(ctx.cfg.max_request_bytes) {
+                Ok(Some(text)) => process_request(conn, &text, ctx),
+                Ok(None) => break,
+                Err(FrameError::TooLarge { limit }) => {
+                    frame_fatal(
+                        conn,
+                        format!(
+                            "request exceeds the {limit}-byte limit \
+                             ([serve] max_request_bytes)"
+                        ),
+                    );
+                }
+                Err(FrameError::BadLength { len, limit }) => {
+                    frame_fatal(
+                        conn,
+                        format!(
+                            "lp1 frame length {len} out of range (must be \
+                             1..={limit}, [serve] max_request_bytes)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Answer a fatal framing error in-order, then close once it flushes.
+    fn frame_fatal(conn: &mut Conn, message: String) {
+        let framing = conn.framing;
+        let seq = conn.open_slot(framing);
+        let e = CloudshapesError::protocol(message);
+        conn.finish(seq, &error_response(&e).to_string_compact());
+        conn.closing = true;
+    }
+
+    fn process_request(conn: &mut Conn, text: &str, ctx: &mut Ctx<'_>) {
+        if text.trim().is_empty() {
+            return; // blank keep-alive lines, as the legacy reader allowed
+        }
+        let json = match Json::parse(text).map_err(CloudshapesError::from) {
+            Ok(j) => j,
+            Err(e) => {
+                let framing = conn.framing;
+                let seq = conn.open_slot(framing);
+                conn.finish(seq, &error_response(&e).to_string_compact());
+                return;
+            }
+        };
+        // Framing negotiation rides any request: `"framing":"lp1"` switches
+        // this connection's reads AND this response (idempotent). Unknown
+        // values answer a typed error without changing modes.
+        match json.get("framing") {
+            None | Some(Json::Null) => {}
+            Some(v) => match v.as_str() {
+                Some("lp1") => conn.framing = Framing::Lp1,
+                _ => {
+                    let framing = conn.framing;
+                    let seq = conn.open_slot(framing);
+                    let e = CloudshapesError::protocol(format!(
+                        "unknown framing {} (supported: \"lp1\"; omit the key for \
+                         newline-delimited JSON)",
+                        v.to_string_compact()
+                    ));
+                    conn.finish(seq, &error_response(&e).to_string_compact());
+                    return;
+                }
+            },
+        }
+        let framing = conn.framing;
+        let seq = conn.open_slot(framing);
+        let req = match Request::from_json(&json) {
+            Ok(r) => r,
+            Err(e) => {
+                conn.finish(seq, &error_response(&e).to_string_compact());
+                return;
+            }
+        };
+        if matches!(req, Request::Shutdown) {
+            // Always admitted and answered inline: shutdown must never be
+            // shed by the very overload it is sent to resolve.
+            let resp =
+                crate::cli::serve::execute_request(ctx.session, req, ctx.stop, &mut |_| {});
+            conn.finish(seq, &resp.to_string_compact());
+            return;
+        }
+        if ctx.inflight >= ctx.cfg.max_inflight {
+            ctx.shed_inflight.inc();
+            let e = CloudshapesError::overload(format!(
+                "server at its in-flight budget ({} requests); retry with backoff",
+                ctx.cfg.max_inflight
+            ));
+            conn.finish(seq, &error_response(&e).to_string_compact());
+            return;
+        }
+        let shard = ctx.pool.route(&req, ctx.map, ctx.default_strategy);
+        let job = Job { conn: conn.token, seq, req, started: Instant::now() };
+        match ctx.pool.try_dispatch(shard, job) {
+            Ok(()) => {
+                ctx.inflight += 1;
+                conn.inflight += 1;
+            }
+            Err(_job) => {
+                ctx.shed_queue.inc();
+                let e = CloudshapesError::overload(format!(
+                    "shard {shard} queue full ({} deep); retry with backoff",
+                    ctx.cfg.queue_cap()
+                ));
+                conn.finish(seq, &error_response(&e).to_string_compact());
+            }
+        }
+    }
+
+    /// Enforce `[serve] read_timeout_secs`: an incomplete frame older than
+    /// the deadline gets a typed error then close (slow-loris — the clock
+    /// starts at the frame's FIRST byte, so a trickle never resets it); a
+    /// fully idle connection past the deadline closes silently.
+    fn sweep_deadlines(
+        conns: &mut HashMap<u64, Conn>,
+        ctx: &mut Ctx<'_>,
+        dirty: &mut BTreeSet<u64>,
+    ) {
+        let now = Instant::now();
+        let deadline = Duration::from_secs_f64(ctx.cfg.read_timeout_secs);
+        for (&token, conn) in conns.iter_mut() {
+            if conn.closing {
+                continue;
+            }
+            if let Some(started) = conn.frame_started {
+                if now.duration_since(started) >= deadline {
+                    frame_fatal(
+                        conn,
+                        format!(
+                            "read timed out after {}s with an incomplete request \
+                             frame ([serve] read_timeout_secs)",
+                            ctx.cfg.read_timeout_secs
+                        ),
+                    );
+                    dirty.insert(token);
+                    continue;
+                }
+            }
+            let idle = conn.inflight == 0
+                && !conn.has_partial_frame()
+                && !conn.has_pending_output();
+            if idle && now.duration_since(conn.idle_since) >= deadline {
+                conn.closing = true; // nothing queued: closes immediately
+                dirty.insert(token);
+            }
+        }
+    }
+
+    /// Pump/flush one connection, refresh its poller interest, and close it
+    /// when its lifecycle says so. Deregistration before drop makes
+    /// teardown deterministic — no fd survives its entry in the table.
+    fn finalize(
+        token: u64,
+        conns: &mut HashMap<u64, Conn>,
+        poller: &mut Poller,
+        ctx: &mut Ctx<'_>,
+    ) {
+        let Some(conn) = conns.get_mut(&token) else { return };
+        conn.pump();
+        let write_pending = match conn.flush() {
+            Ok(pending) => pending,
+            Err(_) => {
+                close_conn(token, conns, poller);
+                return;
+            }
+        };
+        // A peer that stops reading while responses accumulate is a slow
+        // consumer; past the cap the connection is dropped, not buffered.
+        if conn.buffered_bytes() > MAX_CONN_BUFFER {
+            close_conn(token, conns, poller);
+            return;
+        }
+        let done_closing = conn.closing && !write_pending;
+        let done_eof = conn.eof && conn.inflight == 0 && !conn.has_pending_output();
+        if done_closing || done_eof {
+            close_conn(token, conns, poller);
+            return;
+        }
+        let readable = !conn.closing && !conn.eof && !ctx.draining;
+        let _ = poller.modify(conn.stream.as_raw_fd(), token, readable, write_pending);
+    }
+
+    fn close_conn(token: u64, conns: &mut HashMap<u64, Conn>, poller: &mut Poller) {
+        if let Some(conn) = conns.remove(&token) {
+            let _ = poller.deregister(conn.stream.as_raw_fd());
+            // `conn.stream` drops here, closing the fd.
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! The serve plane's worker shard pool (unix-only, like the event loop).
+//!
+//! Each shard owns a bounded job queue and a worker thread; decoded
+//! requests are routed to the shard that owns their cache slice (see
+//! [`ShardMap`](super::shard::ShardMap)), so cache writes on the hot path
+//! are single-writer. Workers push results back through the
+//! [`CompletionQueue`], whose waker turns "a result is ready" into a
+//! first-class event-loop wakeup.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::api::protocol::Request;
+use crate::obs::{Gauge, MetricsRegistry};
+
+use super::shard::{quantize, ShardMap};
+
+/// One decoded request in flight: which connection/sequence slot its
+/// response must land in, and when it was decoded (for the
+/// accept-to-response latency histogram).
+pub(crate) struct Job {
+    pub conn: u64,
+    pub seq: u64,
+    pub req: Request,
+    pub started: Instant,
+}
+
+/// What a shard worker reports back to the event loop.
+pub(crate) enum Completion {
+    /// An interim streaming line (`{"v":1,"event":...}`) for slot
+    /// `(conn, seq)`; more lines (or `Done`) follow.
+    Event { conn: u64, seq: u64, line: String },
+    /// The final response line for slot `(conn, seq)`.
+    Done { conn: u64, seq: u64, line: String, op: &'static str, started: Instant },
+}
+
+/// The worker→event-loop channel: a mutex-guarded batch plus the poller
+/// waker, so the loop wakes exactly when results are ready instead of
+/// polling.
+pub(crate) struct CompletionQueue {
+    items: Mutex<Vec<Completion>>,
+    waker: super::poller::Waker,
+}
+
+impl CompletionQueue {
+    pub fn new(waker: super::poller::Waker) -> CompletionQueue {
+        CompletionQueue { items: Mutex::new(Vec::new()), waker }
+    }
+
+    pub fn push(&self, c: Completion) {
+        self.items.lock().unwrap().push(c);
+        self.waker.wake();
+    }
+
+    /// Move all pending completions into `out` (the event loop's drain).
+    pub fn drain_into(&self, out: &mut Vec<Completion>) {
+        out.append(&mut self.items.lock().unwrap());
+    }
+}
+
+struct ShardQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+/// N worker shards, each popping jobs from its own bounded queue and
+/// pushing completions back through the [`CompletionQueue`]. Streaming ops
+/// (`run`/`submit` with `"stream":true`) move to a dedicated thread so a
+/// long execution never blocks the shard's cache-hot traffic; the slot's
+/// in-flight accounting covers the streamer until its final line.
+pub(crate) struct ShardPool {
+    queues: Vec<Arc<ShardQueue>>,
+    depth_gauges: Vec<Arc<Gauge>>,
+    queue_cap: usize,
+    /// Round-robin cursor for requests without a cache affinity.
+    rr: AtomicUsize,
+    closed: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ShardPool {
+    pub fn start(
+        shards: usize,
+        queue_cap: usize,
+        session: Arc<crate::api::TradeoffSession>,
+        stop: Arc<AtomicBool>,
+        completions: Arc<CompletionQueue>,
+        registry: &MetricsRegistry,
+    ) -> ShardPool {
+        let closed = Arc::new(AtomicBool::new(false));
+        let queues: Vec<Arc<ShardQueue>> = (0..shards)
+            .map(|_| {
+                Arc::new(ShardQueue {
+                    jobs: Mutex::new(VecDeque::new()),
+                    ready: Condvar::new(),
+                })
+            })
+            .collect();
+        let depth_gauges: Vec<Arc<Gauge>> = (0..shards)
+            .map(|i| registry.gauge("serve_shard_queue_depth", &format!("shard={i}")))
+            .collect();
+        let handles = (0..shards)
+            .map(|i| {
+                let queue = Arc::clone(&queues[i]);
+                let gauge = Arc::clone(&depth_gauges[i]);
+                let session = Arc::clone(&session);
+                let stop = Arc::clone(&stop);
+                let completions = Arc::clone(&completions);
+                let closed = Arc::clone(&closed);
+                std::thread::Builder::new()
+                    .name(format!("cloudshapes-shard-{i}"))
+                    .spawn(move || {
+                        shard_worker(&queue, &gauge, &session, &stop, &completions, &closed)
+                    })
+                    .expect("spawning shard worker thread")
+            })
+            .collect();
+        ShardPool { queues, depth_gauges, queue_cap, rr: AtomicUsize::new(0), closed, handles }
+    }
+
+    /// Which shard a request belongs on: solve ops go to the owner of their
+    /// cache key (single-writer cache slices), everything else round-robins.
+    pub fn route(&self, req: &Request, map: &ShardMap, default_strategy: &str) -> usize {
+        let strategy =
+            |name: &Option<String>| -> &str { name.as_deref().unwrap_or(default_strategy) };
+        match req {
+            Request::Partition { partitioner, budget }
+            | Request::Evaluate { partitioner, budget } => {
+                map.shard_for(strategy(partitioner), quantize(*budget))
+            }
+            // Pareto curves and whole batches key on the strategy alone:
+            // the curve cache is per-strategy, and a batch's entries all
+            // land in the strategy's cache slices via the same map.
+            Request::Pareto { partitioner } | Request::Batch { partitioner, .. } => {
+                map.shard_for(strategy(partitioner), None)
+            }
+            _ => self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len(),
+        }
+    }
+
+    /// Enqueue a job on `shard`, or hand it back when the shard's queue is
+    /// at its depth cap (the caller sheds it with an `overload` error).
+    pub fn try_dispatch(&self, shard: usize, job: Job) -> Result<(), Job> {
+        let mut q = self.queues[shard].jobs.lock().unwrap();
+        if q.len() >= self.queue_cap {
+            return Err(job);
+        }
+        q.push_back(job);
+        self.depth_gauges[shard].set(q.len() as f64);
+        drop(q);
+        self.queues[shard].ready.notify_one();
+        Ok(())
+    }
+
+    /// Ask every worker to exit once its queue drains, then join them.
+    pub fn shutdown(mut self) {
+        self.closed.store(true, Ordering::SeqCst);
+        for q in &self.queues {
+            q.ready.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn shard_worker(
+    queue: &ShardQueue,
+    gauge: &Gauge,
+    session: &Arc<crate::api::TradeoffSession>,
+    stop: &Arc<AtomicBool>,
+    completions: &Arc<CompletionQueue>,
+    closed: &AtomicBool,
+) {
+    loop {
+        let job = {
+            let mut jobs = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = jobs.pop_front() {
+                    gauge.set(jobs.len() as f64);
+                    break job;
+                }
+                if closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                jobs = queue.ready.wait(jobs).unwrap();
+            }
+        };
+        let Job { conn, seq, req, started } = job;
+        let op = req.op();
+        if is_streaming(&req) {
+            // Dedicated thread per stream: the shard stays responsive while
+            // the execution emits event lines. The (conn, seq) slot keeps
+            // the stream's place in the connection's response order, and
+            // admission control bounds how many can exist at once.
+            let fallback = req.clone();
+            let session_c = Arc::clone(session);
+            let stop_c = Arc::clone(stop);
+            let completions_c = Arc::clone(completions);
+            let spawned = std::thread::Builder::new()
+                .name(format!("cloudshapes-stream-{conn}-{seq}"))
+                .spawn(move || {
+                    run_one(&session_c, req, &stop_c, &completions_c, conn, seq, op, started)
+                });
+            if spawned.is_err() {
+                // Thread exhaustion: degrade to inline execution rather
+                // than dropping the request.
+                run_one(session, fallback, stop, completions, conn, seq, op, started);
+            }
+        } else {
+            run_one(session, req, stop, completions, conn, seq, op, started);
+        }
+    }
+}
+
+/// `run`/`submit` with `"stream":true` hold their slot open across interim
+/// event lines.
+fn is_streaming(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Run { stream: true, .. } | Request::Submit { stream: true, .. }
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    session: &crate::api::TradeoffSession,
+    req: Request,
+    stop: &AtomicBool,
+    completions: &CompletionQueue,
+    conn: u64,
+    seq: u64,
+    op: &'static str,
+    started: Instant,
+) {
+    let mut emit = |line: String| {
+        completions.push(Completion::Event { conn, seq, line });
+    };
+    let response = crate::cli::serve::execute_request(session, req, stop, &mut emit);
+    completions.push(Completion::Done {
+        conn,
+        seq,
+        line: response.to_string_compact(),
+        op,
+        started,
+    });
+}

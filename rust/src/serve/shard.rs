@@ -1,0 +1,166 @@
+//! Consistent-hash shard map for the serve plane.
+//!
+//! The shard map assigns `(strategy, quantized budget)` keys to one of N
+//! shards via a consistent-hash ring (64 virtual nodes per shard, FNV-1a
+//! points). Two independent consumers share the same map so their notions
+//! of ownership can never drift:
+//!
+//! - the `SolutionCache` inside [`TradeoffSession`](crate::api::TradeoffSession)
+//!   partitions its stored solutions by it, making each cache slice
+//!   single-writer on the serve hot path;
+//! - the serve event loop routes decoded `partition`/`evaluate`/`pareto`/
+//!   `batch` requests to the worker shard that owns the same slice, so a
+//!   cache line is only ever touched from one worker.
+//!
+//! Consistent hashing (rather than `hash % N`) keeps resharding cheap: when
+//! `[serve] shards` grows from N to N+1, only ~1/(N+1) of the keys move —
+//! the property test in `rust/tests/serve_plane.rs` pins this down.
+
+/// Cache keys quantize budgets to this resolution (dollars): budgets closer
+/// than a nano-dollar share an entry, so repeated float-level jitter of the
+/// same budget still hits.
+pub const BUDGET_QUANTUM: f64 = 1e-9;
+
+/// `(quantized, disambiguator)`. The second word is 0 for every budget in
+/// the quantizable range; budgets too large to quantize (≳ $9.2e9) carry
+/// their exact bit pattern instead, so distinct huge budgets never collide
+/// on the saturated first word.
+pub type BudgetKey = (i64, u64);
+
+/// Quantize a budget for cache keying and shard routing. `None` (an
+/// unconstrained solve) stays `None` — it is its own key.
+pub fn quantize(budget: Option<f64>) -> Option<BudgetKey> {
+    budget.map(|b| {
+        let q = (b / BUDGET_QUANTUM).round();
+        if q.is_finite() && q.abs() < i64::MAX as f64 {
+            (q as i64, 0)
+        } else {
+            (i64::MAX, b.to_bits())
+        }
+    })
+}
+
+/// 64-bit FNV-1a — the repo-idiomatic no-deps hash; good avalanche for ring
+/// points and stable across platforms and sessions (routing must be
+/// deterministic for the differential tests to hold).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Virtual nodes per shard. 64 points keeps the per-shard key share within
+/// a few percent of 1/N while the ring stays tiny (N*64 u64 pairs).
+const VNODES: usize = 64;
+
+/// A consistent-hash ring mapping solve keys to shard indices `0..shards`.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    shards: usize,
+    /// Sorted `(ring point, shard)` pairs, VNODES per shard.
+    ring: Vec<(u64, usize)>,
+}
+
+impl ShardMap {
+    /// Build the ring for `shards` shards (>= 1; the config layer enforces
+    /// the bound, this asserts it).
+    pub fn new(shards: usize) -> ShardMap {
+        assert!(shards >= 1, "ShardMap requires at least one shard");
+        let mut ring = Vec::with_capacity(shards * VNODES);
+        for shard in 0..shards {
+            for vnode in 0..VNODES {
+                let mut key = [0u8; 16];
+                key[..8].copy_from_slice(&(shard as u64).to_le_bytes());
+                key[8..].copy_from_slice(&(vnode as u64).to_le_bytes());
+                ring.push((fnv1a(&key), shard));
+            }
+        }
+        ring.sort_unstable();
+        ShardMap { shards, ring }
+    }
+
+    /// Number of shards this map distributes over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard owning a raw key hash: the first ring point at or clockwise of
+    /// the hash, wrapping at the top.
+    pub fn shard_of_hash(&self, hash: u64) -> usize {
+        match self.ring.binary_search_by(|probe| probe.0.cmp(&hash)) {
+            Ok(i) => self.ring[i].1,
+            Err(i) => self.ring[i % self.ring.len()].1,
+        }
+    }
+
+    /// Shard owning a `(strategy, quantized budget)` solve key — the cache
+    /// slice and worker that request must land on.
+    pub fn shard_for(&self, strategy: &str, budget: Option<BudgetKey>) -> usize {
+        let mut bytes = Vec::with_capacity(strategy.len() + 18);
+        bytes.extend_from_slice(strategy.as_bytes());
+        match budget {
+            // A distinct marker byte keeps (s, None) from colliding with
+            // (s, Some(0)) on identical byte strings.
+            None => bytes.push(0xfe),
+            Some((q, d)) => {
+                bytes.push(0x01);
+                bytes.extend_from_slice(&q.to_le_bytes());
+                bytes.extend_from_slice(&d.to_le_bytes());
+            }
+        }
+        self.shard_of_hash(fnv1a(&bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_key_maps_to_one_valid_shard() {
+        for shards in [1usize, 2, 3, 8] {
+            let map = ShardMap::new(shards);
+            for i in 0..500 {
+                let s = map.shard_for("milp", quantize(Some(i as f64 * 0.37)));
+                assert!(s < shards, "{s} out of range for {shards} shards");
+                // Deterministic: the same key always routes identically.
+                assert_eq!(s, map.shard_for("milp", quantize(Some(i as f64 * 0.37))));
+            }
+            assert!(map.shard_for("heuristic", None) < shards);
+        }
+    }
+
+    #[test]
+    fn single_shard_maps_everything_to_zero() {
+        let map = ShardMap::new(1);
+        for i in 0..100 {
+            assert_eq!(map.shard_for("x", quantize(Some(i as f64))), 0);
+        }
+    }
+
+    #[test]
+    fn quantize_folds_jitter_but_never_collides() {
+        assert_eq!(quantize(Some(2.5)), quantize(Some(2.5 + 1e-12)));
+        assert_ne!(quantize(Some(2.5)), quantize(Some(2.6)));
+        assert_ne!(quantize(Some(1e10)), quantize(Some(2e10)));
+        assert_eq!(quantize(None), None);
+    }
+
+    #[test]
+    fn distinct_budget_and_none_keys_do_not_alias() {
+        // The marker byte separates (s, None) from (s, Some(0)) even though
+        // a zero budget's key bytes are all zeros.
+        let map = ShardMap::new(7);
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(("milp", quantize(None)));
+        seen.insert(("milp", quantize(Some(0.0))));
+        assert_eq!(seen.len(), 2);
+        // Both still route deterministically (possibly to the same shard —
+        // that is allowed, aliasing of the *keys* is not).
+        let _ = map.shard_for("milp", quantize(None));
+        let _ = map.shard_for("milp", quantize(Some(0.0)));
+    }
+}

@@ -1,0 +1,433 @@
+//! Serve-plane integration tests: the epoll/poll event loop, lp1 framing,
+//! consistent-hash cache sharding, admission control, read deadlines and
+//! deterministic teardown. Complements `serve_protocol.rs` (which pins the
+//! request/response *semantics*); this file pins the *transport* behaviour
+//! the async sharded rewrite introduced — and proves `[serve] shards = 1`
+//! reproduces the legacy single-cache path byte for byte.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cloudshapes::api::{SessionBuilder, TradeoffSession};
+use cloudshapes::cli::serve::serve_until_shutdown;
+use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::partitioner::MilpConfig;
+use cloudshapes::platforms::sim::SimConfig;
+use cloudshapes::serve::{lp1_frame, lp1_read, quantize, ServeConfig, ShardMap};
+use cloudshapes::util::json::Json;
+
+struct Server {
+    addr: std::net::SocketAddr,
+    handle: Option<std::thread::JoinHandle<cloudshapes::Result<()>>>,
+}
+
+fn serve_session(session: TradeoffSession) -> Server {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let session = Arc::new(session);
+    let handle = std::thread::spawn(move || serve_until_shutdown(listener, session));
+    Server { addr, handle: Some(handle) }
+}
+
+/// A noise-free (byte-reproducible) session with the given serve config.
+fn exact_server(serve: ServeConfig) -> Server {
+    let mut cluster = ExperimentConfig::quick().cluster;
+    cluster.sim = SimConfig::exact();
+    serve_session(
+        SessionBuilder::quick()
+            .cluster(cluster)
+            .milp(MilpConfig { time_limit_secs: 2.0, ..Default::default() })
+            .budget_sweep(3)
+            .serve(serve)
+            .build()
+            .unwrap(),
+    )
+}
+
+impl Server {
+    /// One newline-framed request on a fresh connection.
+    fn ask(&self, line: &str) -> Json {
+        let mut s = TcpStream::connect(self.addr).unwrap();
+        s.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut r = BufReader::new(s);
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response '{resp}': {e}"))
+    }
+
+    fn shutdown(mut self) {
+        let bye = self.ask(r#"{"v":1,"op":"shutdown"}"#);
+        assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+        self.handle.take().unwrap().join().unwrap().unwrap();
+    }
+}
+
+fn error_kind(resp: &Json) -> Option<&str> {
+    resp.get("error")?.get("kind")?.as_str()
+}
+
+fn error_message(resp: &Json) -> &str {
+    resp.get("error").unwrap().get("message").unwrap().as_str().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Consistent-hash shard map (pure, no server needed)
+// ---------------------------------------------------------------------------
+
+/// A spread of (strategy, budget) keys shaped like real serve traffic.
+fn traffic_keys() -> Vec<(String, Option<f64>)> {
+    let mut keys = Vec::new();
+    for strategy in ["milp", "heuristic", "proportional", "random"] {
+        keys.push((strategy.to_string(), None));
+        for i in 0..2_500u32 {
+            keys.push((strategy.to_string(), Some(0.37 + f64::from(i) * 13.91)));
+        }
+    }
+    keys
+}
+
+#[test]
+fn every_key_routes_to_exactly_one_stable_shard() {
+    let map = ShardMap::new(4);
+    let again = ShardMap::new(4);
+    let mut seen = vec![0usize; 4];
+    for (strategy, budget) in traffic_keys() {
+        let shard = map.shard_for(&strategy, quantize(budget));
+        assert!(shard < 4, "shard {shard} out of range for ({strategy}, {budget:?})");
+        // Routing is a pure function of the key and the shard count.
+        assert_eq!(shard, map.shard_for(&strategy, quantize(budget)));
+        assert_eq!(shard, again.shard_for(&strategy, quantize(budget)));
+        seen[shard] += 1;
+    }
+    // The ring spreads load: no shard is starved or hot-spotted to nothing.
+    for (i, n) in seen.iter().enumerate() {
+        assert!(*n > 0, "shard {i} owns no keys: {seen:?}");
+    }
+}
+
+#[test]
+fn resharding_moves_a_bounded_fraction_of_keys() {
+    let before = ShardMap::new(4);
+    let after = ShardMap::new(5);
+    let keys = traffic_keys();
+    let moved = keys
+        .iter()
+        .filter(|(s, b)| before.shard_for(s, quantize(*b)) != after.shard_for(s, quantize(*b)))
+        .count();
+    let fraction = moved as f64 / keys.len() as f64;
+    // Consistent hashing: growing 4 -> 5 shards should remap ~1/5 of the
+    // keyspace; modulo hashing would remap ~4/5. Allow vnode variance.
+    assert!(
+        fraction <= 0.35,
+        "{moved}/{} keys moved ({fraction:.2}) — ring is not consistent",
+        keys.len()
+    );
+    assert!(fraction > 0.0, "no keys moved; the new shard is unreachable");
+}
+
+// ---------------------------------------------------------------------------
+// Sharded cache vs the legacy single-cache path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_cache_is_byte_identical_to_single_cache_path() {
+    // Same noise-free experiment served twice: shards = 1 is the legacy
+    // single-cache layout, shards = 4 the sharded one. Every response must
+    // match byte for byte (JSON is key-ordered, the executor is
+    // seed-deterministic, so any divergence is a cache-routing bug).
+    let single = exact_server(ServeConfig { shards: 1, ..ServeConfig::default() });
+    let sharded = exact_server(ServeConfig { shards: 4, ..ServeConfig::default() });
+
+    let requests = [
+        r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":null}"#,
+        r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":null}"#,
+        r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":1000000.0}"#,
+        r#"{"v":1,"op":"pareto","partitioner":"heuristic"}"#,
+        r#"{"v":1,"op":"batch","partitioner":"heuristic","budgets":[null,1000000.0]}"#,
+        r#"{"v":1,"op":"partition","partitioner":"heuristic","budget":null}"#,
+    ];
+    for req in requests {
+        let a = single.ask(req).to_string_compact();
+        let b = sharded.ask(req).to_string_compact();
+        assert_eq!(a, b, "sharded response diverged for {req}");
+        assert!(a.contains("\"ok\":true"), "{req} -> {a}");
+    }
+
+    // Both planes served everything from coherent caches: the repeat
+    // evaluate and the batch nulls are hits in both layouts.
+    for server in [&single, &sharded] {
+        let cache = server.ask(r#"{"v":1,"op":"ping"}"#);
+        let hits = cache.get("cache").unwrap().get("hits").unwrap().as_u64().unwrap();
+        assert!(hits >= 2, "expected cache hits, got {hits}");
+    }
+
+    single.shutdown();
+    sharded.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// lp1 framing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lp1_negotiation_roundtrip_matches_newline_payloads() {
+    let server = exact_server(ServeConfig::default());
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    // The negotiating request is still newline-framed; its response (and
+    // everything after) is length-prefixed.
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\",\"framing\":\"lp1\"}\n").unwrap();
+    let pong = lp1_read(&mut stream).unwrap();
+    let pong = Json::parse(&pong).unwrap();
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+
+    // Subsequent requests are lp1 in both directions; the payload bytes
+    // must equal what a newline-framed client sees.
+    let req = r#"{"v":1,"op":"evaluate","partitioner":"heuristic","budget":null}"#;
+    stream.write_all(&lp1_frame(req)).unwrap();
+    let via_lp1 = lp1_read(&mut stream).unwrap();
+    let via_newline = server.ask(req).to_string_compact();
+    assert_eq!(Json::parse(&via_lp1).unwrap().to_string_compact(), via_newline);
+
+    // Pipelined lp1 frames come back in order on one connection.
+    stream.write_all(&lp1_frame(r#"{"v":1,"op":"ping"}"#)).unwrap();
+    stream.write_all(&lp1_frame(r#"{"v":1,"op":"specs"}"#)).unwrap();
+    let first = Json::parse(&lp1_read(&mut stream).unwrap()).unwrap();
+    let second = Json::parse(&lp1_read(&mut stream).unwrap()).unwrap();
+    assert_eq!(first.get("pong"), Some(&Json::Bool(true)));
+    assert!(second.get("specs").is_some());
+
+    server.shutdown();
+}
+
+#[test]
+fn unknown_framing_value_is_a_typed_error_and_mode_is_unchanged() {
+    let server = exact_server(ServeConfig::default());
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\",\"framing\":\"lp2\"}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let resp = Json::parse(resp.trim()).unwrap();
+    assert_eq!(error_kind(&resp), Some("protocol"));
+    assert!(error_message(&resp).contains("framing"), "{resp:?}");
+
+    // The connection survives, still newline-framed.
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\"}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(Json::parse(resp.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Read deadlines and request-size limits (slow-loris defence)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_loris_partial_request_times_out_with_typed_error() {
+    let server = exact_server(ServeConfig { read_timeout_secs: 0.3, ..ServeConfig::default() });
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    // A request that never completes: bytes arrive, the newline never does.
+    stream.write_all(b"{\"v\":1,\"op\":\"pi").unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let start = Instant::now();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let err = Json::parse(resp.trim()).unwrap();
+    assert_eq!(error_kind(&err), Some("protocol"));
+    assert!(error_message(&err).contains("timed out"), "{err:?}");
+    assert!(
+        start.elapsed() >= Duration::from_millis(250),
+        "timed out suspiciously early: {:?}",
+        start.elapsed()
+    );
+    // ... and the server hangs up afterwards.
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF, got {rest:?}");
+
+    server.shutdown();
+}
+
+#[test]
+fn oversized_requests_are_rejected_in_both_framings() {
+    let server = exact_server(ServeConfig { max_request_bytes: 256, ..ServeConfig::default() });
+
+    // Newline mode: the buffer blows the limit before any newline shows up.
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let huge = format!("{{\"v\":1,\"op\":\"ping\",\"pad\":\"{}\"}}\n", "x".repeat(512));
+    stream.write_all(huge.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let err = Json::parse(resp.trim()).unwrap();
+    assert_eq!(error_kind(&err), Some("protocol"));
+    assert!(error_message(&err).contains("max_request_bytes"), "{err:?}");
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF after oversize");
+
+    // lp1 mode: a length header past the limit is rejected from the header
+    // alone — the server never waits for (or buffers) the payload.
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\",\"framing\":\"lp1\"}\n").unwrap();
+    let pong = lp1_read(&mut stream).unwrap();
+    assert!(pong.contains("\"pong\":true"), "{pong}");
+    stream.write_all(&(1u32 << 24).to_be_bytes()).unwrap();
+    let err = Json::parse(&lp1_read(&mut stream).unwrap()).unwrap();
+    assert_eq!(error_kind(&err), Some("protocol"));
+    assert!(error_message(&err).contains("lp1"), "{err:?}");
+    let mut rest = Vec::new();
+    assert_eq!(stream.read_to_end(&mut rest).unwrap(), 0, "expected EOF after bad length");
+
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Admission control
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overload_sheds_pipelined_requests_with_structured_errors() {
+    let server =
+        exact_server(ServeConfig { shards: 1, max_inflight: 1, ..ServeConfig::default() });
+
+    // One write delivers an uncached pareto sweep followed by a burst of
+    // pings. With an in-flight budget of 1, the pings that land while the
+    // sweep occupies the budget are shed — and because responses flush in
+    // request order, the reply sequence is still exactly one line per
+    // request, in order, on the same connection.
+    const PINGS: usize = 64;
+    let mut burst = String::from(r#"{"v":1,"op":"pareto","partitioner":"heuristic"}"#);
+    burst.push('\n');
+    for _ in 0..PINGS {
+        burst.push_str(r#"{"v":1,"op":"ping"}"#);
+        burst.push('\n');
+    }
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.write_all(burst.as_bytes()).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let pareto = Json::parse(line.trim()).unwrap();
+    assert_eq!(pareto.get("ok"), Some(&Json::Bool(true)), "{}", pareto.to_string_compact());
+
+    let mut shed = 0usize;
+    for i in 0..PINGS {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection dropped at ping {i}");
+        let resp = Json::parse(line.trim()).unwrap_or_else(|e| panic!("ping {i}: {e}: {line}"));
+        match error_kind(&resp) {
+            None => assert_eq!(resp.get("pong"), Some(&Json::Bool(true)), "ping {i}"),
+            Some("overload") => {
+                assert!(error_message(&resp).contains("retry"), "{resp:?}");
+                shed += 1;
+            }
+            Some(other) => panic!("ping {i}: unexpected error kind {other}: {resp:?}"),
+        }
+    }
+    assert!(shed >= 1, "no pings were shed despite max_inflight = 1");
+
+    // The sheds are observable in the metrics plane.
+    let metrics = server.ask(r#"{"v":1,"op":"metrics","filter":"serve_"}"#).to_string_compact();
+    assert!(metrics.contains("serve_shed_total"), "missing shed counter: {metrics}");
+
+    // The connection is still healthy after shedding.
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(line.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic teardown and shutdown draining
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+fn open_fd_count() -> usize {
+    std::fs::read_dir("/proc/self/fd").unwrap().count()
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn rapid_connect_disconnect_cycles_leak_no_fds() {
+    let server = exact_server(ServeConfig::default());
+
+    // Warm up (lazy fds: epoll, wake pipe, shard threads).
+    for _ in 0..8 {
+        let r = server.ask(r#"{"v":1,"op":"ping"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    }
+    let baseline = open_fd_count();
+
+    for cycle in 0..1_000 {
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        if cycle % 2 == 0 {
+            // Half the cycles complete a request; half just slam the door.
+            s.write_all(b"{\"v\":1,\"op\":\"ping\"}\n").unwrap();
+            let mut r = BufReader::new(&mut s);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(!line.is_empty(), "cycle {cycle}: dropped");
+        }
+        drop(s);
+    }
+
+    // The event loop closes its side of each connection deterministically;
+    // give it a moment to observe the hangups, then the fd table must be
+    // back at (or below) the warmed-up baseline.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let now = open_fd_count();
+        if now <= baseline {
+            break;
+        }
+        assert!(Instant::now() < deadline, "fd count stuck at {now} (baseline {baseline})");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_flushes_inflight_responses_before_closing() {
+    let server = exact_server(ServeConfig::default());
+
+    // Kick off an uncached solve on connection A, then immediately ask for
+    // shutdown on connection B. The drain phase must flush A's response
+    // before the listener closes.
+    let mut a = TcpStream::connect(server.addr).unwrap();
+    a.write_all(b"{\"v\":1,\"op\":\"evaluate\",\"partitioner\":\"heuristic\",\"budget\":null}\n")
+        .unwrap();
+    // Give the event loop a beat to read and dispatch A's frame — frames
+    // still unread when the stop flag is observed are (by design) not
+    // admitted during the drain.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let mut b = TcpStream::connect(server.addr).unwrap();
+    b.write_all(b"{\"v\":1,\"op\":\"shutdown\"}\n").unwrap();
+    let mut rb = BufReader::new(b);
+    let mut bye = String::new();
+    rb.read_line(&mut bye).unwrap();
+    assert_eq!(Json::parse(bye.trim()).unwrap().get("shutdown"), Some(&Json::Bool(true)));
+
+    let mut ra = BufReader::new(a);
+    let mut resp = String::new();
+    ra.read_line(&mut resp).unwrap();
+    assert!(!resp.is_empty(), "in-flight response lost at shutdown");
+    let resp = Json::parse(resp.trim()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string_compact());
+
+    let mut server = server;
+    server.handle.take().unwrap().join().unwrap().unwrap();
+}
