@@ -287,6 +287,7 @@ impl ExperimentConfig {
         if let Some(s) = root.get("serve") {
             set_usize(s, "shards", &mut cfg.serve.shards)?;
             set_f64(s, "read_timeout_secs", &mut cfg.serve.read_timeout_secs)?;
+            set_f64(s, "idle_timeout_secs", &mut cfg.serve.idle_timeout_secs)?;
             set_usize(s, "max_request_bytes", &mut cfg.serve.max_request_bytes)?;
             set_usize(s, "max_inflight", &mut cfg.serve.max_inflight)?;
             cfg.serve.validate()?;
@@ -504,26 +505,30 @@ mod tests {
     #[test]
     fn serve_section_parses_and_validates() {
         let c = ExperimentConfig::parse(
-            "[serve]\nshards = 8\nread_timeout_secs = 2.5\n\
+            "[serve]\nshards = 8\nread_timeout_secs = 2.5\nidle_timeout_secs = 120\n\
              max_request_bytes = 65536\nmax_inflight = 512",
         )
         .unwrap();
         assert_eq!(c.serve.shards, 8);
         assert!((c.serve.read_timeout_secs - 2.5).abs() < 1e-12);
+        assert!((c.serve.idle_timeout_secs - 120.0).abs() < 1e-12);
         assert_eq!(c.serve.max_request_bytes, 65536);
         assert_eq!(c.serve.max_inflight, 512);
         // The per-shard queue cap splits the in-flight budget.
         assert_eq!(c.serve.queue_cap(), 64);
-        // Defaults: 4 shards, 30s deadline, 1 MiB frames, 256 in flight.
+        // Defaults: 4 shards, 30s read deadline, idle reaping off, 1 MiB
+        // frames, 256 in flight.
         let c = ExperimentConfig::parse("").unwrap();
         assert_eq!(c.serve.shards, 4);
         assert!((c.serve.read_timeout_secs - 30.0).abs() < 1e-12);
+        assert!(c.serve.idle_timeout_secs.abs() < 1e-12);
         assert_eq!(c.serve.max_request_bytes, 1 << 20);
         assert_eq!(c.serve.max_inflight, 256);
         // Bad values are config errors.
         assert!(ExperimentConfig::parse("[serve]\nshards = 0").is_err());
         assert!(ExperimentConfig::parse("[serve]\nshards = 1000").is_err());
         assert!(ExperimentConfig::parse("[serve]\nread_timeout_secs = 0").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nidle_timeout_secs = -1").is_err());
         assert!(ExperimentConfig::parse("[serve]\nmax_request_bytes = 8").is_err());
         assert!(ExperimentConfig::parse("[serve]\nmax_inflight = 0").is_err());
     }

@@ -68,6 +68,12 @@ pub const MAX_CONN_BUFFER: usize = 4 << 20;
 /// Read chunk size per readiness event.
 const READ_CHUNK: usize = 16 * 1024;
 
+/// Most bytes drained from the socket per [`Conn::fill`] call. The poller
+/// is level-triggered, so leftover bytes re-surface as readiness on the
+/// next wait — capping the burst keeps one firehose client from starving
+/// every other connection for the duration of its backlog.
+const FILL_BURST: usize = 8 * READ_CHUNK;
+
 /// One live connection owned by the event loop.
 pub struct Conn {
     pub stream: TcpStream,
@@ -97,9 +103,13 @@ pub struct Conn {
     /// Peer half-closed its write side; serve remaining responses, then
     /// drop.
     pub eof: bool,
-    /// Close as soon as every queued response byte has flushed (set after
-    /// fatal protocol errors and timeouts).
+    /// Close as soon as every queued and in-flight response has flushed
+    /// (set after fatal protocol errors and timeouts). Set it via
+    /// [`Conn::begin_close`] so the grace clock is stamped.
     pub closing: bool,
+    /// When `closing` was first set: bounds how long a closing connection
+    /// may wait for in-flight responses before being torn down regardless.
+    pub closing_since: Option<Instant>,
 }
 
 impl Conn {
@@ -119,16 +129,36 @@ impl Conn {
             frame_started: None,
             eof: false,
             closing: false,
+            closing_since: None,
         }
     }
 
-    /// Non-blocking read until `WouldBlock`/EOF. Returns `Ok(true)` if any
-    /// bytes arrived; EOF sets `self.eof`. Errors mean the connection is
-    /// gone.
-    pub fn fill(&mut self) -> io::Result<bool> {
+    /// Mark the connection for close-once-drained, stamping the grace
+    /// clock on the first call (repeat calls keep the original deadline).
+    pub fn begin_close(&mut self) {
+        if !self.closing {
+            self.closing = true;
+            self.closing_since = Some(Instant::now());
+        }
+    }
+
+    /// Non-blocking read until `WouldBlock`/EOF — bounded per call by
+    /// [`FILL_BURST`] and by `max_buffered` bytes already queued (a
+    /// newline frame past the request-size limit errors in `next_frame`
+    /// without buffering the rest of the burst; level-triggered polling
+    /// re-delivers whatever stayed in the kernel buffer). Returns
+    /// `Ok(true)` if any bytes arrived; EOF sets `self.eof`. Errors mean
+    /// the connection is gone.
+    pub fn fill(&mut self, max_buffered: usize) -> io::Result<bool> {
         let mut any = false;
+        let mut total = 0usize;
         let mut chunk = [0u8; READ_CHUNK];
-        loop {
+        // The 4-byte headroom is the lp1 header: a frame of exactly
+        // `max_buffered` payload bytes needs `4 + max_buffered` in the
+        // buffer, so whenever this loop refuses to read, `next_frame` is
+        // guaranteed to extract a frame or raise a typed error — refusal
+        // can never strand a legitimate frame.
+        while total < FILL_BURST && self.read_buf.len() <= max_buffered.saturating_add(4) {
             match self.stream.read(&mut chunk) {
                 Ok(0) => {
                     self.eof = true;
@@ -139,6 +169,7 @@ impl Conn {
                         self.frame_started = Some(Instant::now());
                     }
                     self.read_buf.extend_from_slice(&chunk[..n]);
+                    total += n;
                     any = true;
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -311,7 +342,7 @@ mod tests {
         let (mut conn, mut client) = conn_pair();
         client.write_all(b"{\"a\":1}\r\n{\"b\":2}\npartial").unwrap();
         std::thread::sleep(std::time::Duration::from_millis(50));
-        assert!(conn.fill().unwrap());
+        assert!(conn.fill(1024).unwrap());
         assert_eq!(conn.next_frame(1024).unwrap().as_deref(), Some("{\"a\":1}"));
         assert_eq!(conn.next_frame(1024).unwrap().as_deref(), Some("{\"b\":2}"));
         assert_eq!(conn.next_frame(1024).unwrap(), None);
@@ -323,7 +354,7 @@ mod tests {
         let (mut conn, mut client) = conn_pair();
         client.write_all(&vec![b'x'; 200]).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(50));
-        conn.fill().unwrap();
+        conn.fill(100).unwrap();
         assert!(matches!(conn.next_frame(100), Err(FrameError::TooLarge { limit: 100 })));
     }
 
@@ -334,7 +365,7 @@ mod tests {
         client.write_all(&lp1_frame("{\"op\":\"ping\"}")).unwrap();
         client.write_all(&[0, 0, 0, 0]).unwrap(); // zero-length header
         std::thread::sleep(std::time::Duration::from_millis(50));
-        conn.fill().unwrap();
+        conn.fill(1024).unwrap();
         assert_eq!(conn.next_frame(1024).unwrap().as_deref(), Some("{\"op\":\"ping\"}"));
         assert!(matches!(conn.next_frame(1024), Err(FrameError::BadLength { len: 0, .. })));
     }
@@ -372,6 +403,48 @@ mod tests {
         conn.pump();
         let queued = String::from_utf8(conn.out.clone()).unwrap();
         assert_eq!(queued, "{\"event\":\"started\"}\n{\"ok\":true}\n{\"b\":1}\n");
+    }
+
+    #[test]
+    fn fill_caps_the_bytes_read_per_call() {
+        let (mut conn, client) = conn_pair();
+        // A writer thread pushes well past FILL_BURST (write_all would
+        // deadlock a single thread once the socket buffers fill).
+        let payload = vec![b'x'; FILL_BURST * 2];
+        let writer = std::thread::spawn(move || {
+            let mut client = client;
+            client.write_all(&payload).unwrap();
+            client.flush().unwrap();
+        });
+        // Drain in bounded bites: no single call may exceed the burst cap.
+        let mut got = 0usize;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while got < FILL_BURST * 2 {
+            assert!(std::time::Instant::now() < deadline, "stalled at {got} bytes");
+            conn.fill(usize::MAX).unwrap();
+            // The cap is checked before each chunk read, so one call can
+            // overshoot by at most a chunk.
+            assert!(
+                conn.read_buf.len() < FILL_BURST + READ_CHUNK,
+                "one fill buffered {} bytes (cap {FILL_BURST})",
+                conn.read_buf.len()
+            );
+            got += conn.read_buf.len();
+            conn.read_buf.clear();
+        }
+        writer.join().unwrap();
+
+        // And the buffered-bytes bail-out: once read_buf is past the cap
+        // handed in, fill stops growing it (modulo one final chunk).
+        let (mut conn, mut client) = conn_pair();
+        client.write_all(&vec![b'y'; 4 * READ_CHUNK]).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        conn.fill(64).unwrap();
+        assert!(
+            conn.read_buf.len() <= 64 + READ_CHUNK,
+            "fill kept reading past its buffer cap: {}",
+            conn.read_buf.len()
+        );
     }
 
     #[test]

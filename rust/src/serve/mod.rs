@@ -23,7 +23,10 @@
 //! `{"ok":false,"error":{"kind":"overload",...}}` when exceeded, keeping
 //! reads (and `shutdown`) responsive under load. Slow-loris and oversized
 //! requests are bounded by `[serve] read_timeout_secs` and
-//! `[serve] max_request_bytes`. Everything is observable through the
+//! `[serve] max_request_bytes`; fully idle connections stay open forever
+//! unless `[serve] idle_timeout_secs` opts into reaping them (the legacy
+//! server kept them open, so the default is 0 = disabled). Everything is
+//! observable through the
 //! metrics registry: `serve_connections`, `serve_shard_queue_depth`,
 //! `serve_shed_total{reason=}` and `serve_request_latency_secs{op=}`.
 //!
@@ -50,8 +53,13 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Per-connection read deadline, seconds: an incomplete request frame
     /// older than this is answered with a typed protocol error and the
-    /// connection closed; a fully idle connection is closed silently.
+    /// connection closed (the slow-loris guard).
     pub read_timeout_secs: f64,
+    /// Close fully idle connections (no partial frame, nothing in flight,
+    /// nothing to flush) after this many seconds. `0` — the default —
+    /// keeps idle connections open indefinitely, matching the legacy
+    /// thread-per-connection server.
+    pub idle_timeout_secs: f64,
     /// Maximum bytes of one request frame, in both framing modes.
     pub max_request_bytes: usize,
     /// Global in-flight request budget; excess requests are shed with an
@@ -64,6 +72,7 @@ impl Default for ServeConfig {
         ServeConfig {
             shards: 4,
             read_timeout_secs: 30.0,
+            idle_timeout_secs: 0.0,
             max_request_bytes: 1 << 20,
             max_inflight: 256,
         }
@@ -87,6 +96,11 @@ impl ServeConfig {
         if !self.read_timeout_secs.is_finite() || self.read_timeout_secs <= 0.0 {
             return Err(CloudshapesError::config(
                 "serve.read_timeout_secs must be a positive number of seconds",
+            ));
+        }
+        if !self.idle_timeout_secs.is_finite() || self.idle_timeout_secs < 0.0 {
+            return Err(CloudshapesError::config(
+                "serve.idle_timeout_secs must be a non-negative number of seconds (0 disables)",
             ));
         }
         if self.max_request_bytes < 64 {
@@ -153,6 +167,12 @@ mod event_loop {
     /// Hard ceiling on the post-shutdown drain: in-flight responses get
     /// this long to finish and flush before the loop gives up on them.
     const DRAIN_DEADLINE_SECS: u64 = 10;
+
+    /// Hard ceiling on a single connection's close: a connection marked
+    /// `closing` still waits for its in-flight responses to finish and
+    /// flush (the in-order flush-before-close guarantee), but a stuck job
+    /// cannot pin the connection past this grace period.
+    const CLOSE_GRACE_SECS: u64 = 10;
 
     /// Everything the frame/admission path needs besides the connection
     /// table and the poller (which the loop keeps separate so `&mut Conn`
@@ -233,11 +253,15 @@ mod event_loop {
         let mut last_sweep = Instant::now();
         let mut drain_deadline: Option<Instant> = None;
 
-        loop {
+        // The loop breaks with its Result instead of `?`-returning so every
+        // exit — clean drain or a poller failure — runs the same teardown:
+        // connections dropped (closing their fds) and the shard workers
+        // joined, never left parked on their condvars.
+        let loop_result: Result<()> = loop {
             events.clear();
-            poller
-                .wait(Some(tick), &mut events)
-                .map_err(|e| CloudshapesError::runtime(format!("poll wait: {e}")))?;
+            if let Err(e) = poller.wait(Some(tick), &mut events) {
+                break Err(CloudshapesError::runtime(format!("poll wait: {e}")));
+            }
             // Connections that changed this iteration and need their output
             // pumped/flushed and their poller interest refreshed.
             let mut dirty: BTreeSet<u64> = BTreeSet::new();
@@ -253,8 +277,8 @@ mod event_loop {
                 }
                 let Some(conn) = conns.get_mut(&ev.token) else { continue };
                 if (ev.readable || ev.hangup) && !ctx.draining {
-                    if conn.fill().is_err() {
-                        conn.closing = true;
+                    if conn.fill(ctx.cfg.max_request_bytes).is_err() {
+                        conn.begin_close();
                         conn.eof = true;
                     }
                     process_frames(conn, &mut ctx);
@@ -321,17 +345,19 @@ mod event_loop {
                     ctx.inflight == 0 && conns.values().all(|c| !c.has_pending_output());
                 let expired = drain_deadline.is_some_and(|d| Instant::now() >= d);
                 if flushed || expired {
-                    break;
+                    break Ok(());
                 }
             }
-        }
+        };
 
-        // In-flight responses have flushed (or the drain deadline passed):
-        // only now does the listener close and the pool join its workers.
+        // In-flight responses have flushed (or the drain deadline passed,
+        // or the poller failed): only now does the listener close and the
+        // pool join its workers.
         drop(listener);
         drop(conns);
+        connections_gauge.set(0.0);
         pool.shutdown();
-        Ok(())
+        loop_result
     }
 
     fn accept_all(
@@ -389,13 +415,15 @@ mod event_loop {
         }
     }
 
-    /// Answer a fatal framing error in-order, then close once it flushes.
+    /// Answer a fatal framing error in-order, then close once every
+    /// earlier pipelined response (in flight or queued) and the error
+    /// itself have flushed.
     fn frame_fatal(conn: &mut Conn, message: String) {
         let framing = conn.framing;
         let seq = conn.open_slot(framing);
         let e = CloudshapesError::protocol(message);
         conn.finish(seq, &error_response(&e).to_string_compact());
-        conn.closing = true;
+        conn.begin_close();
     }
 
     fn process_request(conn: &mut Conn, text: &str, ctx: &mut Ctx<'_>) {
@@ -477,8 +505,11 @@ mod event_loop {
 
     /// Enforce `[serve] read_timeout_secs`: an incomplete frame older than
     /// the deadline gets a typed error then close (slow-loris — the clock
-    /// starts at the frame's FIRST byte, so a trickle never resets it); a
-    /// fully idle connection past the deadline closes silently.
+    /// starts at the frame's FIRST byte, so a trickle never resets it).
+    /// Fully idle connections close silently after
+    /// `[serve] idle_timeout_secs`, if that knob is enabled. Closing
+    /// connections are re-checked against their drain grace period so a
+    /// stuck in-flight job cannot pin one forever.
     fn sweep_deadlines(
         conns: &mut HashMap<u64, Conn>,
         ctx: &mut Ctx<'_>,
@@ -486,8 +517,17 @@ mod event_loop {
     ) {
         let now = Instant::now();
         let deadline = Duration::from_secs_f64(ctx.cfg.read_timeout_secs);
+        let idle_after = (ctx.cfg.idle_timeout_secs > 0.0)
+            .then(|| Duration::from_secs_f64(ctx.cfg.idle_timeout_secs));
+        let grace = Duration::from_secs(CLOSE_GRACE_SECS);
         for (&token, conn) in conns.iter_mut() {
             if conn.closing {
+                // No new events may arrive for a closing connection that is
+                // waiting on in-flight responses; marking it dirty lets
+                // `finalize` enforce the grace deadline.
+                if conn.closing_since.is_some_and(|t| now.duration_since(t) >= grace) {
+                    dirty.insert(token);
+                }
                 continue;
             }
             if let Some(started) = conn.frame_started {
@@ -504,11 +544,12 @@ mod event_loop {
                     continue;
                 }
             }
+            let Some(idle_after) = idle_after else { continue };
             let idle = conn.inflight == 0
                 && !conn.has_partial_frame()
                 && !conn.has_pending_output();
-            if idle && now.duration_since(conn.idle_since) >= deadline {
-                conn.closing = true; // nothing queued: closes immediately
+            if idle && now.duration_since(conn.idle_since) >= idle_after {
+                conn.begin_close(); // nothing queued: closes immediately
                 dirty.insert(token);
             }
         }
@@ -538,7 +579,15 @@ mod event_loop {
             close_conn(token, conns, poller);
             return;
         }
-        let done_closing = conn.closing && !write_pending;
+        // A closing connection still owes its in-flight and reorder-slot
+        // responses (a frame error or timeout on a pipelined connection
+        // queues its error BEHIND earlier requests): close only once
+        // nothing remains to deliver, or the grace period expires.
+        let drained = !write_pending && !conn.has_pending_output() && conn.inflight == 0;
+        let grace_expired = conn
+            .closing_since
+            .is_some_and(|t| t.elapsed() >= Duration::from_secs(CLOSE_GRACE_SECS));
+        let done_closing = conn.closing && (drained || grace_expired);
         let done_eof = conn.eof && conn.inflight == 0 && !conn.has_pending_output();
         if done_closing || done_eof {
             close_conn(token, conns, poller);

@@ -289,6 +289,130 @@ fn oversized_requests_are_rejected_in_both_framings() {
     server.shutdown();
 }
 
+#[test]
+fn frame_error_flushes_inflight_pipelined_response_before_close() {
+    // Regression: a frame error used to close the connection as soon as the
+    // flush buffer was empty, dropping responses still parked in reorder
+    // slots or in flight at a shard. One write delivers an uncached
+    // evaluate followed by an oversized junk frame: the evaluate is in
+    // flight when the junk trips the size limit, and BOTH the evaluate
+    // response and the (later-sequenced) error must arrive before EOF.
+    let server = exact_server(ServeConfig { max_request_bytes: 256, ..ServeConfig::default() });
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut burst = Vec::new();
+    burst.extend_from_slice(
+        b"{\"v\":1,\"op\":\"evaluate\",\"partitioner\":\"heuristic\",\"budget\":null}\n",
+    );
+    burst.extend_from_slice(&vec![b'x'; 512]); // no newline: oversize junk
+    stream.write_all(&burst).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let evaluated = Json::parse(line.trim()).unwrap();
+    assert_eq!(
+        evaluated.get("ok"),
+        Some(&Json::Bool(true)),
+        "in-flight response lost to the frame error: {}",
+        evaluated.to_string_compact()
+    );
+
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let err = Json::parse(line.trim()).unwrap();
+    assert_eq!(error_kind(&err), Some("protocol"));
+    assert!(error_message(&err).contains("max_request_bytes"), "{err:?}");
+
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF, got {rest:?}");
+
+    server.shutdown();
+}
+
+#[test]
+fn read_timeout_flushes_inflight_pipelined_response_before_close() {
+    // Same guarantee for the slow-loris sweep: the timeout's typed error
+    // queues BEHIND the in-flight evaluate and both flush before close.
+    let server = exact_server(ServeConfig { read_timeout_secs: 0.3, ..ServeConfig::default() });
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream
+        .write_all(b"{\"v\":1,\"op\":\"evaluate\",\"partitioner\":\"heuristic\",\"budget\":null}\n{\"v\":1")
+        .unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let evaluated = Json::parse(line.trim()).unwrap();
+    assert_eq!(
+        evaluated.get("ok"),
+        Some(&Json::Bool(true)),
+        "in-flight response lost to the read timeout: {}",
+        evaluated.to_string_compact()
+    );
+
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let err = Json::parse(line.trim()).unwrap();
+    assert_eq!(error_kind(&err), Some("protocol"));
+    assert!(error_message(&err).contains("timed out"), "{err:?}");
+
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF, got {rest:?}");
+
+    server.shutdown();
+}
+
+#[test]
+fn idle_connections_outlive_the_read_deadline_by_default() {
+    // Compat with the legacy thread-per-connection server: a connection
+    // idle BETWEEN requests is never reaped unless idle_timeout_secs opts
+    // in — read_timeout_secs only guards partial frames.
+    let server = exact_server(ServeConfig { read_timeout_secs: 0.3, ..ServeConfig::default() });
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for pause in [Duration::ZERO, Duration::from_millis(800)] {
+        std::thread::sleep(pause);
+        stream.write_all(b"{\"v\":1,\"op\":\"ping\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "idle connection was closed after {pause:?}");
+        assert_eq!(Json::parse(line.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn idle_timeout_reaps_quiet_connections_when_enabled() {
+    let server =
+        exact_server(ServeConfig { idle_timeout_secs: 0.3, ..ServeConfig::default() });
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(b"{\"v\":1,\"op\":\"ping\"}\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(line.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+
+    // Go quiet: the server closes the connection silently (EOF, no error).
+    let start = Instant::now();
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF, got {rest:?}");
+    assert!(
+        start.elapsed() >= Duration::from_millis(250),
+        "reaped suspiciously early: {:?}",
+        start.elapsed()
+    );
+
+    server.shutdown();
+}
+
 // ---------------------------------------------------------------------------
 // Admission control
 // ---------------------------------------------------------------------------
