@@ -1,0 +1,321 @@
+//! Perf: the market-storm scheduling path — a seeded tick stream of
+//! correlated burst re-prices driven into the online scheduler twice, once
+//! with predictive autoscaling (forecaster-driven pre-rent/drain) and once
+//! with the rent-everything baseline. Emits `results/BENCH_storm.json` so
+//! the perf trajectory accumulates data across PRs.
+//!
+//! Gates (the CI regression contract, `--smoke` shrinks the stream):
+//!   - every job in the forecasted run meets its P99 deadline SLO,
+//!   - no job is lost (failed/cancelled/shed) in either run,
+//!   - the forecasted run bills strictly less than the baseline (idle
+//!     rentals included),
+//!   - the incremental re-plan path (delta-admit + plan memo) is at least
+//!     as fast per plan as the cold full solve it replaces.
+//!
+//! Everything executes on the simulated cluster in cluster-virtual time, so
+//! the stream is deterministic and the bench runs in wall-clock seconds
+//! while modelling >1M Monte Carlo path re-prices.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use cloudshapes::coordinator::{
+    ExecutorConfig, HeuristicPartitioner, JobState, OnlineScheduler, SchedulerConfig,
+    SchedulerStats,
+};
+use cloudshapes::models::{ForecastConfig, MarketSim, PlatformPrior, StormConfig};
+use cloudshapes::platforms::{Catalogue, Cluster, SimConfig};
+use cloudshapes::util::json::{obj, Json};
+
+/// One scheduler run over the full tick stream.
+struct VariantOut {
+    p99_s: f64,
+    max_latency_s: f64,
+    billed: f64,
+    job_cost: f64,
+    idle_cost: f64,
+    shed: usize,
+    stats: SchedulerStats,
+    wall_s: f64,
+}
+
+fn p99(latencies: &mut [f64]) -> f64 {
+    assert!(!latencies.is_empty(), "no completed jobs to take a P99 over");
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((latencies.len() as f64 * 0.99).ceil() as usize).clamp(1, latencies.len());
+    latencies[idx - 1]
+}
+
+/// Drive the whole tick stream through one scheduler instance. Each tick's
+/// jobs are submitted together (the correlated burst), then the driver
+/// waits for at least one epoch boundary so ticks map ~1:1 onto epochs and
+/// the forecaster sees the storm cadence as a periodic arrival series.
+fn run_variant(storm: &StormConfig, counts: &[usize], max_in_flight: usize, forecast: bool) -> VariantOut {
+    let catalogue = Catalogue::small();
+    let specs = catalogue.instantiate(counts, false).expect("storm testbed instantiates");
+    let cluster = Cluster::simulated(&specs, &SimConfig::exact(), 21).expect("simulated cluster");
+    let priors: Vec<PlatformPrior> = cluster
+        .specs()
+        .iter()
+        .map(|s| PlatformPrior {
+            throughput_flops: s.app_gflops.max(1e-9) * 1e9,
+            setup_secs: s.setup_secs,
+        })
+        .collect();
+    let cfg = SchedulerConfig {
+        enabled: true,
+        max_in_flight,
+        forecast: ForecastConfig {
+            enabled: forecast,
+            // One season = one storm period, so the seasonal term can learn
+            // the burst cadence and pre-rent ahead of it.
+            season_len: storm.storm_every.max(2),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let sched = OnlineScheduler::start(cluster, priors, ExecutorConfig::default(), cfg, || {
+        Ok(Box::new(HeuristicPartitioner::default()))
+    })
+    .expect("scheduler starts");
+
+    let sim = MarketSim::new(storm.clone()).expect("valid storm config");
+    let mut ids = Vec::with_capacity(sim.total_jobs());
+    let mut shed = 0usize;
+    let label = if forecast { "storm+forecast" } else { "storm baseline" };
+    let (_, wall_s) = common::timed(label, || {
+        for t in 0..sim.ticks() {
+            let tick = sim.tick(t).expect("tick in range");
+            let epoch_before = sched.counters().epochs;
+            for job in tick.jobs {
+                match sched.submit(job) {
+                    Ok(id) => ids.push(id),
+                    Err(e) if e.kind() == "overload" => shed += 1,
+                    Err(e) => panic!("submit failed: {e}"),
+                }
+            }
+            // Pace the stream: let the epoch loop consume this tick's
+            // arrivals before the next market move fires. A tick whose last
+            // job already drained counts as consumed (the loop can park
+            // between ticks, so epoch counters alone would stall here).
+            let pace = Instant::now() + Duration::from_secs(20);
+            while sched.counters().epochs <= epoch_before && Instant::now() < pace {
+                let drained = ids.last().map_or(true, |&id| {
+                    sched.job_status(id).map_or(true, |s| s.state.is_terminal())
+                });
+                if drained {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        // Drain: every submitted job must reach a terminal state.
+        let deadline = Instant::now() + Duration::from_secs(300);
+        for &id in &ids {
+            loop {
+                let st = sched.job_status(id).expect("job tracked");
+                if st.state.is_terminal() {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "job {id} never drained: {st:?}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    });
+
+    let mut latencies = Vec::with_capacity(ids.len());
+    let mut job_cost = 0.0;
+    for &id in &ids {
+        let st = sched.job_status(id).expect("job tracked");
+        assert_eq!(st.state, JobState::Done, "job {id} not done: {:?}", st.state);
+        latencies.push(st.finished_s.expect("terminal jobs are stamped") - st.arrival_s);
+        job_cost += st.cost;
+    }
+    let stats = sched.stats();
+    sched.shutdown();
+    let p99_s = p99(&mut latencies);
+    let max_latency_s = latencies.last().copied().unwrap_or(0.0);
+    VariantOut {
+        p99_s,
+        max_latency_s,
+        billed: job_cost + stats.idle_cost,
+        job_cost,
+        idle_cost: stats.idle_cost,
+        shed,
+        stats,
+        wall_s,
+    }
+}
+
+fn variant_json(v: &VariantOut) -> Json {
+    obj(vec![
+        ("p99_latency_s", v.p99_s.into()),
+        ("max_latency_s", v.max_latency_s.into()),
+        ("billed_cost", v.billed.into()),
+        ("job_cost", v.job_cost.into()),
+        ("idle_cost", v.idle_cost.into()),
+        ("shed", v.shed.into()),
+        ("epochs", v.stats.epochs.into()),
+        ("full_solves", v.stats.resolves.into()),
+        ("replans_incremental", v.stats.replans_incremental.into()),
+        ("replans_full", v.stats.replans_full.into()),
+        ("memo_hits", v.stats.memo_hits.into()),
+        ("warm_reuses", v.stats.warm_reuses.into()),
+        ("plan_secs_incremental", v.stats.plan_secs_incremental.into()),
+        ("plan_secs_full", v.stats.plan_secs_full.into()),
+        ("rented_instances_last", v.stats.rented_instances.into()),
+        (
+            "forecast_error",
+            v.stats.forecast_error.map_or(Json::Null, Json::from),
+        ),
+        ("wall_s", v.wall_s.into()),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // The simulated trading day: a steady base load with a correlated
+    // portfolio-wide re-price storm every `storm_every` ticks.
+    let storm = if smoke {
+        StormConfig {
+            ticks: 12,
+            base_jobs: 1,
+            storm_every: 4,
+            storm_jobs: 8,
+            accuracy: 0.2,
+            ..Default::default()
+        }
+    } else {
+        StormConfig {
+            ticks: 48,
+            base_jobs: 2,
+            storm_every: 12,
+            storm_jobs: 64,
+            // Tighter CI target -> bigger N per task -> storms span epochs,
+            // which is what exercises delta-admit against surviving work.
+            accuracy: 0.05,
+            ..Default::default()
+        }
+    };
+    let counts = if smoke { vec![1, 1, 1] } else { vec![2, 2, 2] };
+    let max_in_flight = if smoke { 16 } else { 64 };
+
+    let sim = MarketSim::new(storm.clone()).expect("valid storm config");
+    let total_sims = sim.total_sims().expect("stream enumerates");
+    println!(
+        "== perf: market storm ({} ticks, {} jobs, {:.1}M path re-prices, deadline {}s) ==",
+        sim.ticks(),
+        sim.total_jobs(),
+        total_sims as f64 / 1e6,
+        storm.deadline_secs
+    );
+    assert!(total_sims >= 1_000_000, "stream too small to call a storm: {total_sims}");
+
+    // The catalogue's spot markets over the simulated day — the price series
+    // that makes shape decisions time-of-day dependent (sampled per tick at
+    // the default epoch cadence; offers without spot terms are omitted).
+    let catalogue = Catalogue::small();
+    let epoch_secs = SchedulerConfig::default().epoch_secs;
+    let mut spot_curves = Vec::new();
+    for (t, offer) in catalogue.offers().iter().enumerate() {
+        let rates: Vec<Json> = (0..sim.ticks())
+            .filter_map(|k| {
+                catalogue.spot_rate_at(t, k as f64 * epoch_secs, storm.spot_volatility)
+            })
+            .map(Json::from)
+            .collect();
+        if !rates.is_empty() {
+            spot_curves.push(obj(vec![
+                ("offer", offer.spec.name.as_str().into()),
+                ("rate_per_hour", Json::Arr(rates)),
+            ]));
+        }
+    }
+
+    let baseline = run_variant(&storm, &counts, max_in_flight, false);
+    let forecast = run_variant(&storm, &counts, max_in_flight, true);
+
+    // Per-plan wall-clock: incremental (delta-admit + memo hits are both
+    // "cheap path" plans) vs the cold full solve. Pool both runs for a
+    // stable average; the baseline exercises the same re-plan machinery.
+    let cheap_plans = baseline.stats.replans_incremental + forecast.stats.replans_incremental;
+    let cheap_secs = baseline.stats.plan_secs_incremental + forecast.stats.plan_secs_incremental;
+    let full_plans = baseline.stats.resolves + forecast.stats.resolves;
+    let full_secs = baseline.stats.plan_secs_full + forecast.stats.plan_secs_full;
+    assert!(
+        forecast.stats.replans_incremental >= 1,
+        "the forecasted storm never took the incremental re-plan path"
+    );
+    assert!(full_plans >= 1, "no full solve ever ran");
+    let avg_cheap = cheap_secs / cheap_plans.max(1) as f64;
+    let avg_full = full_secs / full_plans as f64;
+    let speedup = avg_full / avg_cheap.max(1e-12);
+    println!(
+        "[perf] re-plan: {} incremental at {:.1}us avg vs {} full at {:.1}us avg ({:.1}x)",
+        cheap_plans,
+        avg_cheap * 1e6,
+        full_plans,
+        avg_full * 1e6,
+        speedup
+    );
+    println!(
+        "[perf] billed: baseline ${:.3} (idle ${:.3}) vs forecast ${:.3} (idle ${:.3}); \
+         P99 {:.0}s vs {:.0}s",
+        baseline.billed,
+        baseline.idle_cost,
+        forecast.billed,
+        forecast.idle_cost,
+        baseline.p99_s,
+        forecast.p99_s
+    );
+
+    // Regression gates (see module docs).
+    assert!(
+        forecast.p99_s <= storm.deadline_secs + 1e-6,
+        "P99 {:.0}s misses the {:.0}s deadline SLO",
+        forecast.p99_s,
+        storm.deadline_secs
+    );
+    for (name, v) in [("baseline", &baseline), ("forecast", &forecast)] {
+        assert_eq!(v.shed, 0, "{name}: storm shed {} jobs", v.shed);
+        assert_eq!(
+            v.stats.failed + v.stats.cancelled,
+            0,
+            "{name}: lost jobs (failed {}, cancelled {})",
+            v.stats.failed,
+            v.stats.cancelled
+        );
+    }
+    assert!(
+        forecast.billed < baseline.billed,
+        "forecasting did not cut the bill: ${:.3} vs ${:.3}",
+        forecast.billed,
+        baseline.billed
+    );
+    assert!(
+        speedup >= 1.0,
+        "incremental re-plan slower than cold solve: {:.1}us vs {:.1}us",
+        avg_cheap * 1e6,
+        avg_full * 1e6
+    );
+
+    let json = obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("ticks", sim.ticks().into()),
+        ("jobs", sim.total_jobs().into()),
+        ("total_sims", (total_sims as f64).into()),
+        ("deadline_s", storm.deadline_secs.into()),
+        ("instances", counts.iter().sum::<usize>().into()),
+        ("spot_curves", Json::Arr(spot_curves)),
+        ("baseline", variant_json(&baseline)),
+        ("forecast", variant_json(&forecast)),
+        ("replan_speedup", speedup.into()),
+        (
+            "billed_saving_pct",
+            (100.0 * (1.0 - forecast.billed / baseline.billed)).into(),
+        ),
+    ]);
+    common::save("BENCH_storm.json", &json.to_string_pretty());
+    println!("perf_storm bench OK");
+}

@@ -18,6 +18,7 @@
 //! {"v":1,"op":"status","run_id":3}                  # poll a background run
 //! {"v":1,"op":"submit","tasks":4,"deadline":3600}   # online scheduler job
 //! {"v":1,"op":"submit","tasks":1,"budget":2.5,"payoff":"asian"}
+//! {"v":1,"op":"submit_batch","jobs":[{"tasks":2,"deadline":3600},...]}
 //! {"v":1,"op":"jobs"}                               # every tracked job
 //! {"v":1,"op":"jobs","job_id":3}                    # one job's status
 //! {"v":1,"op":"cancel","job_id":3}
@@ -75,6 +76,14 @@
 //! response. On sessions without the scheduler these ops answer a typed
 //! `config` error.
 //!
+//! `submit_batch` enqueues many jobs in one round trip — a re-price storm
+//! submitted as one request instead of thousands. `jobs` is an array of at
+//! most [`MAX_BATCH_JOBS`] objects, each carrying the same fields as
+//! `submit` (minus `stream`). Like `batch`, entries are independent: the
+//! response's `results` array holds `{"ok":true,"job_id":N}` or
+//! `{"ok":false,"error":{...}}` per entry, in request order, so one bad
+//! book entry (or one shed admission) never fails its neighbours.
+//!
 //! `run` starts a chunked execution. Without `stream` it returns
 //! immediately with a `run_id`; `status` polls the run's progress counters
 //! (chunks done, retries, straggler migrations, tasks priced) and, once
@@ -106,6 +115,22 @@ pub const MAX_BATCH_BUDGETS: usize = 1024;
 /// [`JobSpec::MAX_TASKS`](crate::coordinator::scheduler::JobSpec::MAX_TASKS),
 /// re-exported at the wire layer so the two can never diverge.
 pub const MAX_JOB_TASKS: usize = crate::coordinator::scheduler::JobSpec::MAX_TASKS;
+
+/// Upper bound on the `jobs` array of a `submit_batch` request — the same
+/// one-line-of-work discipline as [`MAX_BATCH_BUDGETS`].
+pub const MAX_BATCH_JOBS: usize = 1024;
+
+/// One job of a `submit`/`submit_batch` request: the wire fields of a
+/// scheduler submission (everything but the connection-level `stream`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitEntry {
+    pub tasks: usize,
+    pub payoff: Option<String>,
+    pub accuracy: Option<f64>,
+    pub seed: Option<u64>,
+    pub deadline: Option<f64>,
+    pub budget: Option<f64>,
+}
 
 /// A parsed v1 request.
 #[derive(Debug, Clone, PartialEq)]
@@ -141,6 +166,8 @@ pub enum Request {
         budget: Option<f64>,
         stream: bool,
     },
+    /// Submit many jobs at once; one `results` entry per job, in order.
+    SubmitBatch { jobs: Vec<SubmitEntry> },
     /// Snapshot every scheduler job, or one when `job_id` is given.
     Jobs { job_id: Option<u64> },
     /// Cancel a scheduler job.
@@ -167,6 +194,7 @@ impl Request {
             Request::Run { .. } => "run",
             Request::Status { .. } => "status",
             Request::Submit { .. } => "submit",
+            Request::SubmitBatch { .. } => "submit_batch",
             Request::Jobs { .. } => "jobs",
             Request::Cancel { .. } => "cancel",
             Request::Metrics { .. } => "metrics",
@@ -267,59 +295,49 @@ impl Request {
                 Ok(Request::Status { run_id })
             }
             "submit" => {
-                let tasks = match req.get("tasks") {
-                    None | Some(Json::Null) => 1,
-                    Some(v) => v.as_u64().ok_or_else(|| {
-                        CloudshapesError::protocol("'tasks' must be a positive integer")
-                    })? as usize,
-                };
-                if tasks == 0 || tasks > MAX_JOB_TASKS {
-                    return Err(CloudshapesError::protocol(format!(
-                        "'tasks' must be 1..={MAX_JOB_TASKS}, got {tasks}"
-                    )));
-                }
-                let payoff = match req.get("payoff") {
-                    None | Some(Json::Null) => None,
-                    Some(v) => Some(
-                        v.as_str()
-                            .ok_or_else(|| {
-                                CloudshapesError::protocol("'payoff' must be a string")
-                            })?
-                            .to_string(),
-                    ),
-                };
-                let num = |key: &str| -> Result<Option<f64>> {
-                    match req.get(key) {
-                        None | Some(Json::Null) => Ok(None),
-                        Some(v) => v.as_f64().map(Some).ok_or_else(|| {
-                            CloudshapesError::protocol(format!("'{key}' must be a number"))
-                        }),
-                    }
-                };
-                let accuracy = num("accuracy")?;
-                let seed = match req.get("seed") {
-                    None | Some(Json::Null) => None,
-                    Some(v) => Some(v.as_u64().ok_or_else(|| {
-                        CloudshapesError::protocol("'seed' must be a non-negative integer")
-                    })?),
-                };
-                let (deadline, budget) = (num("deadline")?, num("budget")?);
-                if matches!(
-                    (deadline, budget),
-                    (Some(_), Some(_)) | (None, None)
-                ) {
-                    return Err(CloudshapesError::protocol(
-                        "op 'submit' requires exactly one of 'deadline' (virtual seconds) \
-                         or 'budget' ($) as the job's SLO",
-                    ));
-                }
+                let entry = submit_entry_fields(req, "op 'submit'")?;
                 let stream = match req.get("stream") {
                     None | Some(Json::Null) => false,
                     Some(v) => v.as_bool().ok_or_else(|| {
                         CloudshapesError::protocol("'stream' must be a boolean")
                     })?,
                 };
+                let SubmitEntry { tasks, payoff, accuracy, seed, deadline, budget } = entry;
                 Ok(Request::Submit { tasks, payoff, accuracy, seed, deadline, budget, stream })
+            }
+            "submit_batch" => {
+                let arr = match req.get("jobs") {
+                    None => {
+                        return Err(CloudshapesError::protocol(
+                            "op 'submit_batch' requires 'jobs' (an array of submit objects)",
+                        ))
+                    }
+                    Some(v) => v.as_arr().ok_or_else(|| {
+                        CloudshapesError::protocol("'jobs' must be an array of objects")
+                    })?,
+                };
+                if arr.is_empty() {
+                    return Err(CloudshapesError::protocol("'jobs' must not be empty"));
+                }
+                if arr.len() > MAX_BATCH_JOBS {
+                    return Err(CloudshapesError::protocol(format!(
+                        "'jobs' has {} entries (max {MAX_BATCH_JOBS} per request)",
+                        arr.len()
+                    )));
+                }
+                let jobs = arr
+                    .iter()
+                    .enumerate()
+                    .map(|(k, entry)| {
+                        if entry.as_obj().is_none() {
+                            return Err(CloudshapesError::protocol(format!(
+                                "'jobs[{k}]' must be an object"
+                            )));
+                        }
+                        submit_entry_fields(entry, &format!("'jobs[{k}]'"))
+                    })
+                    .collect::<Result<Vec<SubmitEntry>>>()?;
+                Ok(Request::SubmitBatch { jobs })
             }
             "jobs" => {
                 let job_id = match req.get("job_id") {
@@ -358,10 +376,62 @@ impl Request {
             "shutdown" => Ok(Request::Shutdown),
             other => Err(CloudshapesError::protocol(format!(
                 "unknown op '{other}' (ops: ping, specs, partition, evaluate, pareto, shape, \
-                 batch, run, status, submit, jobs, cancel, metrics, shutdown)"
+                 batch, run, status, submit, submit_batch, jobs, cancel, metrics, shutdown)"
             ))),
         }
     }
+}
+
+/// Parse the shared job fields of `submit`/`submit_batch` from `req` —
+/// `ctx` labels whose fields a failure message blames (`"op 'submit'"` vs
+/// `"'jobs[3]'"`).
+fn submit_entry_fields(req: &Json, ctx: &str) -> Result<SubmitEntry> {
+    let tasks = match req.get("tasks") {
+        None | Some(Json::Null) => 1,
+        Some(v) => v.as_u64().ok_or_else(|| {
+            CloudshapesError::protocol(format!("{ctx}: 'tasks' must be a positive integer"))
+        })? as usize,
+    };
+    if tasks == 0 || tasks > MAX_JOB_TASKS {
+        return Err(CloudshapesError::protocol(format!(
+            "{ctx}: 'tasks' must be 1..={MAX_JOB_TASKS}, got {tasks}"
+        )));
+    }
+    let payoff = match req.get("payoff") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| {
+                    CloudshapesError::protocol(format!("{ctx}: 'payoff' must be a string"))
+                })?
+                .to_string(),
+        ),
+    };
+    let num = |key: &str| -> Result<Option<f64>> {
+        match req.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+                CloudshapesError::protocol(format!("{ctx}: '{key}' must be a number"))
+            }),
+        }
+    };
+    let accuracy = num("accuracy")?;
+    let seed = match req.get("seed") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_u64().ok_or_else(|| {
+            CloudshapesError::protocol(format!(
+                "{ctx}: 'seed' must be a non-negative integer"
+            ))
+        })?),
+    };
+    let (deadline, budget) = (num("deadline")?, num("budget")?);
+    if matches!((deadline, budget), (Some(_), Some(_)) | (None, None)) {
+        return Err(CloudshapesError::protocol(format!(
+            "{ctx} requires exactly one of 'deadline' (virtual seconds) or 'budget' ($) \
+             as the job's SLO"
+        )));
+    }
+    Ok(SubmitEntry { tasks, payoff, accuracy, seed, deadline, budget })
 }
 
 fn partitioner_field(req: &Json) -> Result<Option<String>> {
@@ -585,6 +655,70 @@ mod tests {
             Request::parse(r#"{"v":1,"op":"cancel","job_id":3}"#).unwrap(),
             Request::Cancel { job_id: 3 }
         );
+    }
+
+    #[test]
+    fn parses_submit_batch() {
+        assert_eq!(
+            Request::parse(
+                r#"{"v":1,"op":"submit_batch","jobs":[{"tasks":2,"deadline":3600},{"budget":2.5,"payoff":"asian","accuracy":0.05,"seed":9}]}"#
+            )
+            .unwrap(),
+            Request::SubmitBatch {
+                jobs: vec![
+                    SubmitEntry {
+                        tasks: 2,
+                        payoff: None,
+                        accuracy: None,
+                        seed: None,
+                        deadline: Some(3600.0),
+                        budget: None,
+                    },
+                    SubmitEntry {
+                        tasks: 1,
+                        payoff: Some("asian".into()),
+                        accuracy: Some(0.05),
+                        seed: Some(9),
+                        deadline: None,
+                        budget: Some(2.5),
+                    },
+                ],
+            }
+        );
+        assert_eq!(
+            Request::parse(r#"{"v":1,"op":"submit_batch","jobs":[{"deadline":1}]}"#)
+                .unwrap()
+                .op(),
+            "submit_batch"
+        );
+    }
+
+    #[test]
+    fn submit_batch_validation() {
+        for bad in [
+            r#"{"v":1,"op":"submit_batch"}"#,                    // missing jobs
+            r#"{"v":1,"op":"submit_batch","jobs":[]}"#,          // empty
+            r#"{"v":1,"op":"submit_batch","jobs":7}"#,           // not an array
+            r#"{"v":1,"op":"submit_batch","jobs":[7]}"#,         // entry not object
+            r#"{"v":1,"op":"submit_batch","jobs":[{}]}"#,        // entry without SLO
+            r#"{"v":1,"op":"submit_batch","jobs":[{"deadline":1,"budget":2}]}"#, // both
+            r#"{"v":1,"op":"submit_batch","jobs":[{"deadline":1,"tasks":0}]}"#,  // bad tasks
+        ] {
+            let e = Request::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "protocol", "{bad} -> {e}");
+        }
+        // Entry-indexed messages point at the offending job.
+        let e = Request::parse(
+            r#"{"v":1,"op":"submit_batch","jobs":[{"deadline":1},{"budget":"x"}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.message().contains("jobs[1]"), "{e}");
+        let huge = format!(
+            r#"{{"v":1,"op":"submit_batch","jobs":[{}]}}"#,
+            vec![r#"{"deadline":1}"#; MAX_BATCH_JOBS + 1].join(",")
+        );
+        let e = Request::parse(&huge).unwrap_err();
+        assert!(e.message().contains("max"), "{e}");
     }
 
     #[test]

@@ -831,6 +831,16 @@ impl TradeoffSession {
         self.scheduler()?.submit(spec)
     }
 
+    /// Submit many jobs at once (the `submit_batch` op's path): one
+    /// scheduler handle lookup, then one independent submit per spec —
+    /// entry `k` of the result is spec `k`'s job id or its typed error
+    /// (e.g. an `overload` shed), so one refused job never fails the rest
+    /// of the book. The outer error covers only a disabled scheduler.
+    pub fn submit_jobs(&self, specs: Vec<JobSpec>) -> Result<Vec<Result<u64>>> {
+        let s = self.scheduler()?;
+        Ok(specs.into_iter().map(|spec| s.submit(spec)).collect())
+    }
+
     /// Snapshot one job (`Ok(None)` for unknown ids; an error when the
     /// scheduler is disabled).
     pub fn job_status(&self, id: u64) -> Result<Option<JobStatus>> {

@@ -362,14 +362,31 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     let job_budget = args.flag_f64("job-budget")?.unwrap_or(1000.0);
     let families = [None, Some(Payoff::European), Some(Payoff::Asian), Some(Payoff::Barrier)];
 
-    let mut ids = Vec::with_capacity(count);
+    // Build the whole book first, then submit it as one batch — the same
+    // path the serve plane's `submit_batch` op takes, so a shed entry
+    // (overload) is reported per job instead of aborting the demo.
+    let mut specs = Vec::with_capacity(count);
+    let mut slos = Vec::with_capacity(count);
     for k in 0..count {
         let slo = if k % 2 == 0 { Slo::Deadline(deadline) } else { Slo::Budget(job_budget) };
-        let spec =
-            JobSpec::generate(families[k % families.len()], tasks, accuracy, 1 + k as u64, slo)?;
-        let id = s.submit_job(spec)?;
-        println!("submitted job {id}: {tasks} tasks, SLO {slo:?}");
-        ids.push(id);
+        specs.push(JobSpec::generate(
+            families[k % families.len()],
+            tasks,
+            accuracy,
+            1 + k as u64,
+            slo,
+        )?);
+        slos.push(slo);
+    }
+    let mut ids = Vec::with_capacity(count);
+    for (slo, outcome) in slos.iter().zip(s.submit_jobs(specs)?) {
+        match outcome {
+            Ok(id) => {
+                println!("submitted job {id}: {tasks} tasks, SLO {slo:?}");
+                ids.push(id);
+            }
+            Err(e) => println!("submit refused ({}): {}", e.kind(), e.message()),
+        }
     }
 
     let mut last: Vec<Option<String>> = vec![None; ids.len()];

@@ -18,6 +18,7 @@
 //! {"v":1,"op":"run","budget":2.5}              # background execution
 //! {"v":1,"op":"status","run_id":3}             # poll a background run
 //! {"v":1,"op":"submit","tasks":4,"deadline":3600}  # scheduler job
+//! {"v":1,"op":"submit_batch","jobs":[{"tasks":2,"deadline":3600},...]}
 //! {"v":1,"op":"jobs"}                          # job statuses
 //! {"v":1,"op":"cancel","job_id":3}
 //! {"v":1,"op":"metrics"}                       # telemetry snapshot
@@ -279,6 +280,51 @@ fn dispatch_inner(req: Request, session: &TradeoffSession, stop: &AtomicBool) ->
                 ("job_id", Json::Num(job_id as f64)),
                 ("status", "queued".into()),
             ]))
+        }
+        Request::SubmitBatch { jobs } => {
+            // Entries are independent, mirroring `batch`: a bad book entry
+            // (unknown payoff) or a shed admission (overload) yields an
+            // inline error object, never a failed storm. A *disabled*
+            // scheduler still fails the request as a whole, like `submit`.
+            let built: Vec<Result<JobSpec>> = jobs
+                .iter()
+                .map(|e| {
+                    build_job_spec(
+                        e.tasks,
+                        e.payoff.as_deref(),
+                        e.accuracy,
+                        e.seed,
+                        e.deadline,
+                        e.budget,
+                    )
+                })
+                .collect();
+            // One scheduler handle lookup for the whole storm.
+            let mut submitted = session
+                .submit_jobs(built.iter().filter_map(|r| r.as_ref().ok()).cloned().collect())?
+                .into_iter();
+            let results: Vec<Json> = built
+                .into_iter()
+                .map(|b| {
+                    match b.and_then(|_| submitted.next().expect("one submit per built spec")) {
+                        Ok(id) => obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("job_id", Json::Num(id as f64)),
+                        ]),
+                        Err(e) => obj(vec![
+                            ("ok", Json::Bool(false)),
+                            (
+                                "error",
+                                obj(vec![
+                                    ("kind", e.kind().into()),
+                                    ("message", e.message().into()),
+                                ]),
+                            ),
+                        ]),
+                    }
+                })
+                .collect();
+            Ok(ok_response(vec![("results", Json::Arr(results))]))
         }
         Request::Jobs { job_id: None } => {
             let jobs: Vec<Json> =
@@ -949,6 +995,54 @@ mod tests {
         assert_eq!(sched.get("submitted").unwrap().as_u64(), Some(1));
         assert_eq!(sched.get("completed").unwrap().as_u64(), Some(1));
         assert!(sched.get("epochs").unwrap().as_u64().unwrap() >= 1);
+    }
+
+    #[test]
+    fn submit_batch_mixes_inline_results() {
+        use crate::coordinator::scheduler::SchedulerConfig;
+        let s = SessionBuilder::quick()
+            .partitioner("heuristic")
+            .scheduler(SchedulerConfig { enabled: true, ..Default::default() })
+            .build()
+            .unwrap();
+        let stop = AtomicBool::new(false);
+        // Good, bad-payoff, good: the bad entry errors inline, its
+        // neighbours get job ids, order is preserved.
+        let r = handle_request(
+            r#"{"v":1,"op":"submit_batch","jobs":[
+                {"tasks":1,"payoff":"european","budget":1000},
+                {"tasks":1,"payoff":"swaption","budget":1000},
+                {"tasks":1,"payoff":"asian","budget":1000}]}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{}", r.to_string_compact());
+        let results = r.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(results[2].get("ok"), Some(&Json::Bool(true)));
+        let id0 = results[0].get("job_id").unwrap().as_u64().unwrap();
+        let id2 = results[2].get("job_id").unwrap().as_u64().unwrap();
+        assert!(id2 > id0, "ids assigned in entry order");
+        assert_eq!(results[1].get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            results[1].get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("workload")
+        );
+        // Both accepted jobs are tracked.
+        let r = handle_request(r#"{"v":1,"op":"jobs"}"#, &s, &stop);
+        assert_eq!(r.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+        // Without the scheduler the whole request is a typed config error.
+        let plain = session();
+        let r = handle_request(
+            r#"{"v":1,"op":"submit_batch","jobs":[{"tasks":1,"deadline":10}]}"#,
+            &plain,
+            &stop,
+        );
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("config")
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::coordinator::executor::ExecutorConfig;
 use crate::coordinator::partitioner::MilpConfig;
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::coordinator::{BenchmarkConfig, SweepConfig};
+use crate::models::market::StormConfig;
 use crate::obs::ObsConfig;
 use crate::platforms::sim::SimConfig;
 use crate::serve::ServeConfig;
@@ -69,7 +70,12 @@ pub struct ExperimentConfig {
     pub milp: MilpConfig,
     pub executor: ExecutorConfig,
     /// Online job scheduler knobs (`[scheduler]`; disabled by default).
+    /// The nested `[forecast]` section (predictive autoscaling) maps onto
+    /// `scheduler.forecast`.
     pub scheduler: SchedulerConfig,
+    /// Market-storm tick-stream knobs (`[storm]`; drives the storm bench
+    /// and any burst-arrival harness).
+    pub storm: StormConfig,
     /// Telemetry knobs (`[obs]`; enabled by default).
     pub obs: ObsConfig,
     /// Serve-plane knobs (`[serve]`: worker/cache shards, read deadline,
@@ -89,6 +95,7 @@ impl Default for ExperimentConfig {
             milp: MilpConfig::default(),
             executor: ExecutorConfig::default(),
             scheduler: SchedulerConfig::default(),
+            storm: StormConfig::default(),
             obs: ObsConfig::default(),
             serve: ServeConfig::default(),
             artifact_dir: "artifacts".to_string(),
@@ -276,7 +283,33 @@ impl ExperimentConfig {
             set_usize(s, "max_in_flight", &mut cfg.scheduler.max_in_flight)?;
             set_usize(s, "refit_window", &mut cfg.scheduler.refit_window)?;
             set_f64(s, "resolve_drift", &mut cfg.scheduler.resolve_drift)?;
+            set_f64(s, "repair_quality", &mut cfg.scheduler.repair_quality)?;
+            set_usize(s, "plan_memo", &mut cfg.scheduler.plan_memo)?;
             cfg.scheduler.validate()?;
+        }
+        // Predictive autoscaling rides the scheduler (its own section for
+        // readability; programmatically it is `scheduler.forecast`).
+        if let Some(f) = root.get("forecast") {
+            set_bool(f, "enabled", &mut cfg.scheduler.forecast.enabled)?;
+            set_f64(f, "alpha", &mut cfg.scheduler.forecast.alpha)?;
+            set_usize(f, "season_len", &mut cfg.scheduler.forecast.season_len)?;
+            set_f64(f, "safety", &mut cfg.scheduler.forecast.safety)?;
+            set_usize(f, "drain_epochs", &mut cfg.scheduler.forecast.drain_epochs)?;
+            set_usize(f, "min_rented", &mut cfg.scheduler.forecast.min_rented)?;
+            set_f64(f, "rent_lead_secs", &mut cfg.scheduler.forecast.rent_lead_secs)?;
+            cfg.scheduler.forecast.validate()?;
+        }
+        if let Some(s) = root.get("storm") {
+            set_u64(s, "seed", &mut cfg.storm.seed)?;
+            set_usize(s, "ticks", &mut cfg.storm.ticks)?;
+            set_usize(s, "base_jobs", &mut cfg.storm.base_jobs)?;
+            set_usize(s, "storm_every", &mut cfg.storm.storm_every)?;
+            set_usize(s, "storm_jobs", &mut cfg.storm.storm_jobs)?;
+            set_usize(s, "tasks_per_job", &mut cfg.storm.tasks_per_job)?;
+            set_f64(s, "accuracy", &mut cfg.storm.accuracy)?;
+            set_f64(s, "deadline_secs", &mut cfg.storm.deadline_secs)?;
+            set_f64(s, "spot_volatility", &mut cfg.storm.spot_volatility)?;
+            cfg.storm.validate()?;
         }
         if let Some(o) = root.get("obs") {
             set_bool(o, "enabled", &mut cfg.obs.enabled)?;
@@ -481,6 +514,65 @@ mod tests {
         assert!(ExperimentConfig::parse("[scheduler]\nepoch_secs = 0").is_err());
         assert!(ExperimentConfig::parse("[scheduler]\nmax_in_flight = 0").is_err());
         assert!(ExperimentConfig::parse("[scheduler]\nresolve_drift = -0.5").is_err());
+        // The re-plan fast-path knobs ride the same section.
+        let c = ExperimentConfig::parse("[scheduler]\nrepair_quality = 1.5\nplan_memo = 64")
+            .unwrap();
+        assert!((c.scheduler.repair_quality - 1.5).abs() < 1e-12);
+        assert_eq!(c.scheduler.plan_memo, 64);
+        assert!(ExperimentConfig::parse("[scheduler]\nrepair_quality = 0.5").is_err());
+    }
+
+    #[test]
+    fn forecast_section_parses_and_validates() {
+        let c = ExperimentConfig::parse(
+            "[forecast]\nenabled = true\nalpha = 0.5\nseason_len = 12\nsafety = 1.5\n\
+             drain_epochs = 3\nmin_rented = 2\nrent_lead_secs = 45.0",
+        )
+        .unwrap();
+        let f = &c.scheduler.forecast;
+        assert!(f.enabled);
+        assert!((f.alpha - 0.5).abs() < 1e-12);
+        assert_eq!(f.season_len, 12);
+        assert!((f.safety - 1.5).abs() < 1e-12);
+        assert_eq!(f.drain_epochs, 3);
+        assert_eq!(f.min_rented, 2);
+        assert!((f.rent_lead_secs - 45.0).abs() < 1e-12);
+        // Defaults: present but disabled (the static baseline).
+        let c = ExperimentConfig::parse("").unwrap();
+        assert!(!c.scheduler.forecast.enabled);
+        // Bad values are config errors.
+        assert!(ExperimentConfig::parse("[forecast]\nalpha = 0").is_err());
+        assert!(ExperimentConfig::parse("[forecast]\nalpha = 1.5").is_err());
+        assert!(ExperimentConfig::parse("[forecast]\nsafety = 0.5").is_err());
+        assert!(ExperimentConfig::parse("[forecast]\ndrain_epochs = 0").is_err());
+        assert!(ExperimentConfig::parse("[forecast]\nrent_lead_secs = -1").is_err());
+    }
+
+    #[test]
+    fn storm_section_parses_and_validates() {
+        let c = ExperimentConfig::parse(
+            "[storm]\nseed = 11\nticks = 96\nbase_jobs = 2\nstorm_every = 24\n\
+             storm_jobs = 32\ntasks_per_job = 4\naccuracy = 0.1\ndeadline_secs = 7200\n\
+             spot_volatility = 0.3",
+        )
+        .unwrap();
+        assert_eq!(c.storm.seed, 11);
+        assert_eq!(c.storm.ticks, 96);
+        assert_eq!(c.storm.base_jobs, 2);
+        assert_eq!(c.storm.storm_every, 24);
+        assert_eq!(c.storm.storm_jobs, 32);
+        assert_eq!(c.storm.tasks_per_job, 4);
+        assert!((c.storm.accuracy - 0.1).abs() < 1e-12);
+        assert!((c.storm.deadline_secs - 7200.0).abs() < 1e-12);
+        assert!((c.storm.spot_volatility - 0.3).abs() < 1e-12);
+        // Defaults survive an absent section.
+        let c = ExperimentConfig::parse("").unwrap();
+        assert_eq!(c.storm.ticks, 48);
+        // Bad values are config errors.
+        assert!(ExperimentConfig::parse("[storm]\nticks = 0").is_err());
+        assert!(ExperimentConfig::parse("[storm]\nstorm_jobs = 0").is_err());
+        assert!(ExperimentConfig::parse("[storm]\naccuracy = 0").is_err());
+        assert!(ExperimentConfig::parse("[storm]\nspot_volatility = 1.0").is_err());
     }
 
     #[test]

@@ -58,16 +58,18 @@
 //! # Ok::<(), cloudshapes::api::CloudshapesError>(())
 //! ```
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::api::error::{CloudshapesError, Result};
 use crate::coordinator::executor::{execute_epoch, EpochCtx, ExecEvent, ExecutorConfig};
 use crate::coordinator::objectives::ModelSet;
 use crate::coordinator::partitioner::Partitioner;
 use crate::coordinator::Allocation;
+use crate::models::forecast::{Autoscaler, ForecastConfig, PlatformEcon};
 use crate::models::online::{OnlineLatencyFit, PlatformPrior};
-use crate::models::CostModel;
+use crate::models::{CostModel, LatencyModel};
 use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::platforms::Cluster;
 use crate::pricing::mc::{combine, PayoffStats, PriceEstimate};
@@ -90,6 +92,18 @@ pub struct SchedulerConfig {
     /// Relative throughput drift (vs the models of the last solve) that
     /// forces a re-solve at the next epoch boundary.
     pub resolve_drift: f64,
+    /// Incremental re-plan quality gate: a delta-admitted (or memoized)
+    /// allocation is accepted only while its predicted makespan stays
+    /// within this factor of the batch's fluid lower bound (plus one worst
+    /// setup); past that the cheap path is mispricing the batch and the
+    /// full solve runs. Must be >= 1.
+    pub repair_quality: f64,
+    /// Entries kept in the memoized plan cache, keyed on the quantised
+    /// remaining-work signature (0 disables memoization).
+    pub plan_memo: usize,
+    /// Predictive autoscaling — arrival forecasting, pre-rent and drain
+    /// (`[forecast]`, see `docs/CONFIG.md`).
+    pub forecast: ForecastConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -100,6 +114,9 @@ impl Default for SchedulerConfig {
             max_in_flight: 8,
             refit_window: 64,
             resolve_drift: 0.15,
+            repair_quality: 2.0,
+            plan_memo: 256,
+            forecast: ForecastConfig::default(),
         }
     }
 }
@@ -123,6 +140,13 @@ impl SchedulerConfig {
                 self.resolve_drift
             )));
         }
+        if !(self.repair_quality >= 1.0 && self.repair_quality.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "scheduler.repair_quality must be >= 1 and finite, got {}",
+                self.repair_quality
+            )));
+        }
+        self.forecast.validate()?;
         Ok(())
     }
 }
@@ -303,6 +327,27 @@ pub struct SchedulerStats {
     pub resolves: usize,
     /// Epochs that reused the warm incumbent.
     pub warm_reuses: usize,
+    /// Epochs re-planned incrementally: new arrivals delta-admitted into
+    /// the incumbent instead of a cold re-solve.
+    pub replans_incremental: usize,
+    /// Epochs that fell back to a full solve despite holding an incumbent
+    /// (drift, budget change, or repair-quality failure) — the cold path a
+    /// storm would otherwise take every epoch. A subset of `resolves`.
+    pub replans_full: usize,
+    /// Epochs planned straight from the memoized signature cache.
+    pub memo_hits: usize,
+    /// Wall-clock seconds spent in incremental planning / in full solves
+    /// (the storm bench's speedup numerator and denominator).
+    pub plan_secs_incremental: f64,
+    pub plan_secs_full: f64,
+    /// Instances the autoscaler held rented at the last epoch boundary.
+    pub rented_instances: usize,
+    /// Holding cost of rented-but-idle instances accumulated so far, $ —
+    /// billed to the operator, never attributed to a job's budget.
+    pub idle_cost: f64,
+    /// Arrival forecaster relative-error EWMA (None until the first
+    /// scored forecast).
+    pub forecast_error: Option<f64>,
     /// Model error of the first / most recent epoch — the re-fit
     /// tightening metric.
     pub first_model_error: Option<f64>,
@@ -394,6 +439,9 @@ struct SchedState {
     clock: f64,
     shutdown: bool,
     stats: SchedulerStats,
+    /// Work (flops) submitted since the last epoch boundary — drained by
+    /// the epoch thread into the arrival forecaster.
+    arrived_flops: f64,
     /// Set when the partitioner factory failed on the epoch thread.
     fatal: Option<CloudshapesError>,
 }
@@ -412,6 +460,15 @@ struct SchedMetrics {
     epochs: Arc<Counter>,
     resolves: Arc<Counter>,
     warm_reuses: Arc<Counter>,
+    replans_incremental: Arc<Counter>,
+    replans_full: Arc<Counter>,
+    memo_hits: Arc<Counter>,
+    /// Submits refused with the registry live-full — the scheduler's lane
+    /// of the serve plane's `serve_shed_total{reason=}` family, so storms
+    /// shed visibly.
+    shed_jobs_full: Arc<Counter>,
+    rented_instances: Arc<Gauge>,
+    forecast_error: Arc<Gauge>,
     model_error_first: Arc<Gauge>,
     model_error_last: Arc<Gauge>,
     epoch_model_error: Arc<Histogram>,
@@ -427,6 +484,12 @@ impl SchedMetrics {
             epochs: reg.counter("scheduler_epochs_total", ""),
             resolves: reg.counter("scheduler_resolves_total", ""),
             warm_reuses: reg.counter("scheduler_warm_reuses_total", ""),
+            replans_incremental: reg.counter("scheduler_replans_incremental_total", ""),
+            replans_full: reg.counter("scheduler_replans_full_total", ""),
+            memo_hits: reg.counter("scheduler_plan_memo_hits_total", ""),
+            shed_jobs_full: reg.counter("serve_shed_total", "reason=jobs_full"),
+            rented_instances: reg.gauge("scheduler_rented_instances", ""),
+            forecast_error: reg.gauge("scheduler_forecast_error", ""),
             model_error_first: reg.gauge("scheduler_model_error", "stage=first"),
             model_error_last: reg.gauge("scheduler_model_error", "stage=last"),
             epoch_model_error: reg.histogram("scheduler_epoch_model_error", ""),
@@ -518,6 +581,7 @@ impl OnlineScheduler {
                 clock: 0.0,
                 shutdown: false,
                 stats: SchedulerStats::default(),
+                arrived_flops: 0.0,
                 fatal: None,
             }),
             wake: Condvar::new(),
@@ -558,10 +622,17 @@ impl OnlineScheduler {
                     st.jobs.remove(&v);
                 }
                 None => {
-                    return Err(CloudshapesError::runtime(format!(
-                        "too many live jobs (max {MAX_TRACKED_JOBS}): wait for completions \
-                         or cancel before submitting more"
-                    )))
+                    // Shed, typed and counted: storms hitting the registry
+                    // cap must be visible (serve_shed_total) and
+                    // distinguishable from real failures (Overload).
+                    if let Some(m) = &self.inner.metrics {
+                        m.shed_jobs_full.inc();
+                    }
+                    return Err(CloudshapesError::overload(format!(
+                        "job registry live-full ({MAX_TRACKED_JOBS} jobs queued or \
+                         running): wait for completions or cancel before submitting \
+                         more"
+                    )));
                 }
             }
         }
@@ -584,6 +655,10 @@ impl OnlineScheduler {
             })
             .collect();
         let sims_total = tasks.iter().map(|t| t.task.n_sims).sum();
+        st.arrived_flops += tasks
+            .iter()
+            .map(|t| t.task.n_sims as f64 * t.task.flops_per_path())
+            .sum::<f64>();
         let arrival_s = st.clock;
         st.jobs.insert(
             id,
@@ -664,6 +739,14 @@ impl OnlineScheduler {
             epochs: s.epochs,
             resolves: s.resolves,
             warm_reuses: s.warm_reuses,
+            replans_incremental: s.replans_incremental,
+            replans_full: s.replans_full,
+            memo_hits: s.memo_hits,
+            plan_secs_incremental: s.plan_secs_incremental,
+            plan_secs_full: s.plan_secs_full,
+            rented_instances: s.rented_instances,
+            idle_cost: s.idle_cost,
+            forecast_error: s.forecast_error,
             first_model_error: s.first_model_error,
             last_model_error: s.last_model_error,
             records: Vec::new(),
@@ -694,6 +777,9 @@ struct PlanInput {
     deadline_slack: Option<f64>,
     /// Sum of remaining budgets when EVERY admitted job is budget-SLO'd.
     budget_cap: Option<f64>,
+    /// Remaining work (flops) across ALL live jobs, admitted or still
+    /// queued — the autoscaler's backlog pressure.
+    backlog_flops: f64,
 }
 
 /// The warm incumbent carried across epochs.
@@ -716,6 +802,165 @@ fn budget_still_covered(warm: Option<f64>, current: Option<f64>, tolerance: f64)
         (Some(w), Some(c)) => c >= w * (1.0 - tolerance),
         _ => false,
     }
+}
+
+/// How one epoch's allocation was obtained, cheapest first. Only the two
+/// `Full*` variants count as `resolved` in [`EpochRecord`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PlanKind {
+    /// Incumbent projected onto the surviving keys verbatim.
+    WarmReuse,
+    /// New arrivals delta-admitted into the incumbent (repair).
+    Incremental,
+    /// A memoized plan with a matching remaining-work signature.
+    MemoHit,
+    /// Cold full solve (no usable incumbent existed).
+    FullSolve,
+    /// Full solve forced by drift or repair-quality failure.
+    FullReplan,
+}
+
+/// Fluid (infinitely-divisible, setup-free) lower bound on the batch
+/// makespan: all platforms run in parallel, so the harmonic sum of their
+/// solo work times bounds any real schedule from below.
+fn fluid_bound(models: &ModelSet, input: &PlanInput) -> f64 {
+    let mut inv = 0.0f64;
+    for i in 0..models.mu {
+        let w: f64 = (0..input.tasks.len()).map(|j| models.work_secs(i, j)).sum();
+        if w > 0.0 {
+            inv += 1.0 / w;
+        }
+    }
+    if inv > 0.0 {
+        1.0 / inv
+    } else {
+        0.0
+    }
+}
+
+/// Cheap-plan quality gate: accept a repaired/memoized allocation only if
+/// its predicted makespan is within `quality`× of the fluid lower bound
+/// (plus one worst-case setup, so setup-dominated small epochs are not
+/// rejected forever). Failing the gate forces a full re-solve.
+fn plan_quality_ok(
+    alloc: &Allocation,
+    models: &ModelSet,
+    input: &PlanInput,
+    quality: f64,
+) -> bool {
+    let lb = fluid_bound(models, input);
+    let mut max_setup = 0.0f64;
+    for i in 0..models.mu {
+        for j in 0..input.tasks.len() {
+            max_setup = max_setup.max(models.setup_secs(i, j));
+        }
+    }
+    models.makespan(alloc) <= quality * lb + max_setup + 1e-9
+}
+
+/// Repair the incumbent for a batch that *grew*: surviving keys keep their
+/// columns, fresh keys are placed whole, longest-first, each onto the
+/// platform finishing it soonest given the inherited load. Returns `None`
+/// when there is nothing to repair (no fresh keys — projection's job), the
+/// shapes do not line up, or the repaired plan fails the quality gate.
+fn delta_admit(
+    w: &Warm,
+    input: &PlanInput,
+    models: &ModelSet,
+    quality: f64,
+) -> Option<Allocation> {
+    let mu = models.mu;
+    let tau = input.tasks.len();
+    if w.alloc.n_platforms() != mu {
+        return None;
+    }
+    let cols: Vec<Option<usize>> = input
+        .keys
+        .iter()
+        .map(|k| w.keys.iter().position(|wk| wk == k))
+        .collect();
+    let fresh: Vec<usize> =
+        (0..tau).filter(|&j| cols[j].is_none()).collect();
+    if fresh.is_empty() {
+        return None;
+    }
+    let mut a = Allocation::zero(mu, tau);
+    for (j_new, col) in cols.iter().enumerate() {
+        if let Some(j_old) = col {
+            for i in 0..mu {
+                a.set(i, j_new, w.alloc.get(i, *j_old));
+            }
+        }
+    }
+    // Inherited per-platform load under the *current* models (drift-
+    // refreshed betas, rent-lead penalties included).
+    let mut load: Vec<f64> = (0..mu).map(|i| models.platform_latency(&a, i)).collect();
+    // LPT over the fresh tasks: biggest remaining work placed first.
+    let mut order = fresh;
+    order.sort_by(|&x, &y| {
+        let wx = input.tasks[x].n_sims as f64 * input.tasks[x].flops_per_path();
+        let wy = input.tasks[y].n_sims as f64 * input.tasks[y].flops_per_path();
+        wy.partial_cmp(&wx).unwrap_or(std::cmp::Ordering::Equal).then(x.cmp(&y))
+    });
+    for j in order {
+        let mut best = 0usize;
+        let mut best_finish = f64::INFINITY;
+        for i in 0..mu {
+            let finish = load[i] + models.work_secs(i, j) + models.setup_secs(i, j);
+            if finish < best_finish {
+                best_finish = finish;
+                best = i;
+            }
+        }
+        a.set(best, j, 1.0);
+        load[best] = best_finish;
+    }
+    if plan_quality_ok(&a, models, input, quality) {
+        Some(a)
+    } else {
+        None
+    }
+}
+
+/// Octave-quantised log bucket: `v` and any value within the same
+/// `1/per_octave`-octave band map to one bucket. Non-positive and
+/// non-finite values collapse to bucket 0.
+fn qlog(v: f64, per_octave: f64) -> u64 {
+    if v > 0.0 && v.is_finite() {
+        (v.log2() * per_octave).round() as i64 as u64
+    } else {
+        0
+    }
+}
+
+/// Memo key: FNV-1a over the *quantised* remaining-work signature of the
+/// batch — per-task work buckets (positional), per-platform throughput
+/// buckets, and the budget bucket. Batches whose quantised signatures
+/// match are close enough for one plan to serve both (the storm case:
+/// thousands of near-identical re-price batches, a handful of keys).
+fn plan_signature(input: &PlanInput, throughput: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut fold = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    fold(input.keys.len() as u64);
+    for t in &input.tasks {
+        // Whole octaves for N (doubling the work is a different batch),
+        // quarter octaves for the per-path shape.
+        fold(qlog(t.n_sims as f64, 1.0));
+        fold(qlog(t.flops_per_path(), 4.0));
+    }
+    for &tp in throughput {
+        fold(qlog(tp, 4.0));
+    }
+    fold(match input.budget_cap {
+        None => u64::MAX,
+        Some(b) => qlog(b, 4.0),
+    });
+    h
 }
 
 fn epoch_loop<F>(inner: Arc<Inner>, make_partitioner: F)
@@ -755,10 +1000,23 @@ where
     let mut fit = OnlineLatencyFit::new(inner.priors.clone(), inner.cfg.refit_window);
     let mut warm: Option<Warm> = None;
     let mut stalled = 0usize;
+    let econ: Vec<PlatformEcon> = specs
+        .iter()
+        .zip(&inner.priors)
+        .map(|(s, p)| PlatformEcon {
+            throughput_flops: p.throughput_flops,
+            rate_per_hour: s.rate_per_hour,
+        })
+        .collect();
+    let mut autoscaler = Autoscaler::new(inner.cfg.forecast.clone(), econ);
+    // Memoized plans keyed on the quantised remaining-work signature: a
+    // storm's thousands of near-identical batches collapse onto a handful
+    // of keys, so planning cost is amortised across the burst.
+    let mut memo: HashMap<u64, Allocation> = HashMap::new();
 
     loop {
         // ── Phase 1: wait for runnable work, admit arrivals. ────────────
-        let input = {
+        let (input, arrived_flops) = {
             let mut st = inner.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -773,7 +1031,8 @@ where
                 }
                 st = inner.wake.wait(st).unwrap();
             }
-            collect_plan_input(&st)
+            let arrived = std::mem::take(&mut st.arrived_flops);
+            (collect_plan_input(&st), arrived)
         };
         if input.tasks.is_empty() {
             continue;
@@ -781,13 +1040,30 @@ where
         // One span per epoch: plan → execute → apply.
         let _span = crate::span!("scheduler_epoch");
 
+        // ── Predictive autoscaling: observe arrivals, forecast, re-rent.
+        // With `[forecast]` disabled everything stays rented (the static
+        // over-provisioned baseline); enabled, the forecaster pre-rents
+        // ahead of predicted storms and drains idle rentals after.
+        let rented: Vec<bool> = autoscaler
+            .plan(arrived_flops, input.backlog_flops, inner.cfg.epoch_secs)
+            .to_vec();
+
         // ── Phase 2: refreshed models for the batch. ────────────────────
         let tau = input.tasks.len();
         let mu = inner.cluster.len();
+        let lead = inner.cfg.forecast.rent_lead_secs;
         let mut latency = Vec::with_capacity(mu * tau);
         for i in 0..mu {
             for t in &input.tasks {
-                latency.push(fit.model(i, t.flops_per_path()));
+                let base = fit.model(i, t.flops_per_path());
+                // Un-rented platforms stay usable mid-storm, but pay the
+                // rent lead (API/boot) on top of their setup — the planner
+                // steers work onto pre-rented capacity first.
+                latency.push(if rented[i] {
+                    base
+                } else {
+                    LatencyModel::new(base.beta, base.gamma + lead)
+                });
             }
         }
         let models = ModelSet::new(
@@ -797,7 +1073,7 @@ where
             platform_names.clone(),
         );
 
-        // ── Phase 3: warm-reuse or re-solve. ────────────────────────────
+        // ── Phase 3: warm-reuse, delta-admit, memo, or re-solve. ────────
         let snapshot = fit.snapshot();
         // The incumbent survives task completions (its columns project
         // onto the surviving keys) but not new arrivals.
@@ -814,29 +1090,90 @@ where
                     )
             })
             .unwrap_or(false);
-        let (alloc, budget, resolved, predicted) = match (projected, warm_pred, reuse_ok) {
-            (Some(a), Some(pred), true) => {
+        let had_warm = warm.is_some();
+        let sig = plan_signature(&input, &snapshot);
+        let mut plan: Option<(Allocation, Option<f64>, PlanKind, f64, f64)> = None;
+        if reuse_ok {
+            if let (Some(a), Some(pred)) = (projected, warm_pred) {
                 let budget = warm.as_ref().and_then(|w| w.budget_cap);
-                (a, budget, false, pred)
-            }
-            _ => match plan_allocation(partitioner.as_ref(), &models, &input) {
-                Ok((alloc, budget)) => {
-                    let pred = models.makespan(&alloc);
+                plan = Some((a, budget, PlanKind::WarmReuse, pred, 0.0));
+            } else {
+                // New keys defeated the projection (the storm case): try
+                // delta-admitting them into the incumbent before paying
+                // for a cold solve.
+                let t0 = Instant::now();
+                if let Some(a) = delta_admit(
+                    warm.as_ref().expect("reuse_ok implies an incumbent"),
+                    &input,
+                    &models,
+                    inner.cfg.repair_quality,
+                ) {
+                    let secs = t0.elapsed().as_secs_f64();
+                    let pred = models.makespan(&a);
                     warm = Some(Warm {
                         keys: input.keys.clone(),
-                        alloc: alloc.clone(),
-                        throughput: snapshot,
+                        alloc: a.clone(),
+                        throughput: snapshot.clone(),
                         budget_cap: input.budget_cap,
                     });
-                    (alloc, budget, true, pred)
+                    plan = Some((a, input.budget_cap, PlanKind::Incremental, pred, secs));
                 }
-                Err(e) => {
-                    fail_running_jobs(&inner, &format!("epoch solve failed: {e}"));
-                    warm = None;
-                    continue;
+            }
+        }
+        // Memoized plans only stand in for unconstrained solves — budget
+        // caps change what "optimal" means, so capped batches always pay
+        // the real solve.
+        if plan.is_none() && input.budget_cap.is_none() {
+            if let Some(a) = memo.get(&sig) {
+                if a.n_platforms() == mu
+                    && a.n_tasks() == tau
+                    && plan_quality_ok(a, &models, &input, inner.cfg.repair_quality)
+                {
+                    let a = a.clone();
+                    let pred = models.makespan(&a);
+                    warm = Some(Warm {
+                        keys: input.keys.clone(),
+                        alloc: a.clone(),
+                        throughput: snapshot.clone(),
+                        budget_cap: input.budget_cap,
+                    });
+                    plan = Some((a, input.budget_cap, PlanKind::MemoHit, pred, 0.0));
                 }
-            },
+            }
+        }
+        let (alloc, budget, plan_kind, predicted, plan_secs) = match plan {
+            Some(p) => p,
+            None => {
+                let t0 = Instant::now();
+                match plan_allocation(partitioner.as_ref(), &models, &input) {
+                    Ok((alloc, budget)) => {
+                        let secs = t0.elapsed().as_secs_f64();
+                        let pred = models.makespan(&alloc);
+                        if inner.cfg.plan_memo > 0 && budget.is_none() {
+                            if memo.len() >= inner.cfg.plan_memo {
+                                memo.clear();
+                            }
+                            memo.insert(sig, alloc.clone());
+                        }
+                        warm = Some(Warm {
+                            keys: input.keys.clone(),
+                            alloc: alloc.clone(),
+                            throughput: snapshot,
+                            budget_cap: input.budget_cap,
+                        });
+                        let kind =
+                            if had_warm { PlanKind::FullReplan } else { PlanKind::FullSolve };
+                        (alloc, budget, kind, pred, secs)
+                    }
+                    Err(e) => {
+                        fail_running_jobs(&inner, &format!("epoch solve failed: {e}"));
+                        warm = None;
+                        continue;
+                    }
+                }
+            }
         };
+        let resolved = matches!(plan_kind, PlanKind::FullSolve | PlanKind::FullReplan);
 
         // ── Phase 4: execute one epoch. ─────────────────────────────────
         let workload = Workload::new(input.tasks.clone());
@@ -994,12 +1331,34 @@ where
             stalled = 0;
             warm = None;
         }
+        // Idle holding cost: rented-but-unused platforms bill the operator
+        // for the epoch even though no job's budget is charged — this is
+        // the waste predictive autoscaling exists to trim.
+        let used = alloc.used_platforms();
+        for (i, spec) in specs.iter().enumerate() {
+            if rented[i] && !used.contains(&i) {
+                st.stats.idle_cost +=
+                    spec.rate_per_hour / 3600.0 * outcome.exec.makespan_secs;
+            }
+        }
+        st.stats.rented_instances = rented.iter().filter(|&&r| r).count();
+        st.stats.forecast_error = autoscaler.forecast_error();
         // Epoch record + counters.
         st.stats.epochs += 1;
-        if resolved {
-            st.stats.resolves += 1;
-        } else {
-            st.stats.warm_reuses += 1;
+        match plan_kind {
+            PlanKind::WarmReuse => st.stats.warm_reuses += 1,
+            PlanKind::Incremental => {
+                st.stats.replans_incremental += 1;
+                st.stats.plan_secs_incremental += plan_secs;
+            }
+            PlanKind::MemoHit => st.stats.memo_hits += 1,
+            PlanKind::FullSolve | PlanKind::FullReplan => {
+                st.stats.resolves += 1;
+                st.stats.plan_secs_full += plan_secs;
+                if plan_kind == PlanKind::FullReplan {
+                    st.stats.replans_full += 1;
+                }
+            }
         }
         let first_error = st.stats.first_model_error.is_none() && err_n > 0;
         if first_error {
@@ -1010,10 +1369,20 @@ where
         }
         if let Some(m) = &inner.metrics {
             m.epochs.inc();
-            if resolved {
-                m.resolves.inc();
-            } else {
-                m.warm_reuses.inc();
+            match plan_kind {
+                PlanKind::WarmReuse => m.warm_reuses.inc(),
+                PlanKind::Incremental => m.replans_incremental.inc(),
+                PlanKind::MemoHit => m.memo_hits.inc(),
+                PlanKind::FullSolve | PlanKind::FullReplan => {
+                    m.resolves.inc();
+                    if plan_kind == PlanKind::FullReplan {
+                        m.replans_full.inc();
+                    }
+                }
+            }
+            m.rented_instances.set(st.stats.rented_instances as f64);
+            if let Some(err) = st.stats.forecast_error {
+                m.forecast_error.set(err);
             }
             if first_error {
                 m.model_error_first.set(model_error);
@@ -1069,7 +1438,15 @@ fn collect_plan_input(st: &SchedState) -> PlanInput {
     let mut bases = Vec::new();
     let mut deadline_slack: Option<f64> = None;
     let mut budget_cap = Some(0.0f64);
+    let mut backlog_flops = 0.0f64;
     for job in st.jobs.values() {
+        if !job.state.is_terminal() {
+            backlog_flops += job
+                .tasks
+                .iter()
+                .map(|jt| jt.remaining as f64 * jt.task.flops_per_path())
+                .sum::<f64>();
+        }
         if job.state != JobState::Running {
             continue;
         }
@@ -1097,7 +1474,7 @@ fn collect_plan_input(st: &SchedState) -> PlanInput {
             bases.push(jt.cursor);
         }
     }
-    PlanInput { keys, tasks, bases, deadline_slack, budget_cap }
+    PlanInput { keys, tasks, bases, deadline_slack, budget_cap, backlog_flops }
 }
 
 /// Project the warm incumbent onto the current key set: identical key
@@ -1265,6 +1642,15 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = SchedulerConfig { resolve_drift: -1.0, ..Default::default() };
         assert!(bad.validate().is_err());
+        let bad = SchedulerConfig { repair_quality: 0.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        // plan_memo = 0 just disables memoization.
+        let ok = SchedulerConfig { plan_memo: 0, ..Default::default() };
+        assert!(ok.validate().is_ok());
+        // Nested forecast knobs surface through the scheduler validate.
+        let mut bad = SchedulerConfig::default();
+        bad.forecast.alpha = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]
@@ -1289,6 +1675,126 @@ mod tests {
         s.shutdown();
         assert!(s.submit(JobSpec::generate(None, 1, 0.05, 1, Slo::Budget(1.0)).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn overload_refusal_is_typed_and_counted() {
+        let c = cluster();
+        let p = priors(&c);
+        let reg = Arc::new(MetricsRegistry::default());
+        // Park the epoch thread in the factory so no job ever leaves the
+        // registry: the 1025th live submit must shed.
+        let s = OnlineScheduler::start_instrumented(
+            c,
+            p,
+            ExecutorConfig::default(),
+            SchedulerConfig { enabled: true, ..Default::default() },
+            Some(reg.clone()),
+            || {
+                std::thread::sleep(Duration::from_secs(60));
+                Ok(Box::new(HeuristicPartitioner::default()))
+            },
+        )
+        .unwrap();
+        for k in 0..MAX_TRACKED_JOBS {
+            let job =
+                JobSpec::generate(Some(Payoff::European), 1, 0.5, k as u64, Slo::Deadline(1e9))
+                    .unwrap();
+            s.submit(job).unwrap();
+        }
+        let job = JobSpec::generate(Some(Payoff::European), 1, 0.5, 9999, Slo::Deadline(1e9))
+            .unwrap();
+        let e = s.submit(job).unwrap_err();
+        assert_eq!(e.kind(), "overload");
+        assert_eq!(reg.counter_value("serve_shed_total", "reason=jobs_full"), 1);
+        s.shutdown();
+    }
+
+    /// Builds a 6-task batch whose first 4 keys carry a warm incumbent;
+    /// delta-admitting the 2 fresh keys must stay within the repair
+    /// quality gate of the full re-solve.
+    #[test]
+    fn delta_admit_matches_full_solve_on_no_drift_epoch() {
+        let specs = small_cluster();
+        let w6 = crate::workload::generate(&crate::workload::GeneratorConfig::small(6, 0.1, 9));
+        let models6 = crate::coordinator::ModelSet::from_specs(&specs, &w6);
+        let keys6: Vec<(u64, usize)> = (0..6).map(|j| (0u64, j)).collect();
+        let input = PlanInput {
+            keys: keys6,
+            tasks: w6.tasks.clone(),
+            bases: vec![0; 6],
+            deadline_slack: None,
+            budget_cap: None,
+            backlog_flops: 0.0,
+        };
+        let part = HeuristicPartitioner::default();
+        // Incumbent over the first 4 tasks only.
+        let w4 = Workload::new(w6.tasks[..4].to_vec());
+        let models4 = crate::coordinator::ModelSet::from_specs(&specs, &w4);
+        let alloc4 = part.partition(&models4, None).unwrap();
+        let warm = Warm {
+            keys: (0..4).map(|j| (0u64, j)).collect(),
+            alloc: alloc4,
+            throughput: specs.iter().map(|s| s.app_gflops * 1e9).collect(),
+            budget_cap: None,
+        };
+        let quality = SchedulerConfig::default().repair_quality;
+        let repaired = delta_admit(&warm, &input, &models6, quality)
+            .expect("repair passes the quality gate on a no-drift epoch");
+        repaired.validate().unwrap();
+        let full = part.partition(&models6, None).unwrap();
+        let mut max_setup = 0.0f64;
+        for i in 0..models6.mu {
+            for j in 0..6 {
+                max_setup = max_setup.max(models6.setup_secs(i, j));
+            }
+        }
+        // The gate bounds the repair against the fluid LB; the full solve
+        // sits above that LB, so quality x full + setup bounds the repair.
+        assert!(
+            models6.makespan(&repaired)
+                <= quality * models6.makespan(&full) + max_setup + 1e-9,
+            "repair makespan {} vs full {}",
+            models6.makespan(&repaired),
+            models6.makespan(&full)
+        );
+        // Nothing fresh -> nothing to repair (projection's job).
+        let covered = Warm {
+            keys: input.keys.clone(),
+            alloc: part.partition(&models6, None).unwrap(),
+            throughput: warm.throughput.clone(),
+            budget_cap: None,
+        };
+        assert!(delta_admit(&covered, &input, &models6, quality).is_none());
+    }
+
+    #[test]
+    fn plan_signature_quantises_remaining_work() {
+        let w = crate::workload::generate(&crate::workload::GeneratorConfig::small(1, 0.1, 5));
+        let input_with = |n: u64| {
+            let mut tasks = w.tasks.clone();
+            tasks[0].n_sims = n;
+            PlanInput {
+                keys: vec![(0, 0)],
+                tasks,
+                bases: vec![0],
+                deadline_slack: None,
+                budget_cap: None,
+                backlog_flops: 0.0,
+            }
+        };
+        let tp = [1e9, 2e9, 4e9];
+        // Same log2 bucket (both round to 20 octaves): one memo key.
+        let a = plan_signature(&input_with(1 << 20), &tp);
+        let b = plan_signature(&input_with(1_000_000), &tp);
+        assert_eq!(a, b);
+        // 4x the remaining work is a different batch.
+        let c = plan_signature(&input_with(1 << 22), &tp);
+        assert_ne!(a, c);
+        // Budget-capped batches never alias unconstrained ones.
+        let mut capped = input_with(1 << 20);
+        capped.budget_cap = Some(10.0);
+        assert_ne!(a, plan_signature(&capped, &tp));
     }
 
     #[test]

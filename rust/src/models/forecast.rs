@@ -1,0 +1,453 @@
+//! Arrival forecasting and predictive autoscaling (ROADMAP item 5: rent
+//! capacity *before* the storm, drain it after).
+//!
+//! The online scheduler sees arrival work per epoch. [`ArrivalForecaster`]
+//! fits that series with an EWMA level plus an additive seasonal term
+//! (Holt–Winters without trend), so a market that storms every N epochs is
+//! predicted one epoch ahead. [`Autoscaler`] turns the prediction into a
+//! rent/drain decision over the cluster's instances: expansion (pre-rent)
+//! applies immediately, shrinking waits out a hysteresis window so one
+//! quiet epoch mid-storm does not churn the fleet. The autoscaler only
+//! *steers* — un-rented platforms stay usable at a rent-lead setup penalty
+//! (see `coordinator::scheduler`), so a wrong forecast costs money, never
+//! correctness.
+//!
+//! Quota discipline: the autoscaler operates over an already-instantiated
+//! cluster, and [`Catalogue::instantiate`](crate::platforms::Catalogue::instantiate)
+//! refuses compositions beyond per-type `available` caps — so the rented
+//! set can never exceed catalogue quotas by construction.
+
+use crate::api::error::{CloudshapesError, Result};
+
+/// `[forecast]` configuration keys (see `docs/CONFIG.md`).
+#[derive(Debug, Clone)]
+pub struct ForecastConfig {
+    /// Whether predictive autoscaling runs at all. Disabled (the default),
+    /// every instance stays rented — the static over-provisioned baseline.
+    pub enabled: bool,
+    /// EWMA smoothing factor for the level, seasonal and error terms, in
+    /// (0, 1]; higher adapts faster, lower smooths harder.
+    pub alpha: f64,
+    /// Seasonal buckets (epochs per period); 0 fits a level-only EWMA.
+    pub season_len: usize,
+    /// Capacity head-room multiplier on the predicted demand, >= 1.
+    pub safety: f64,
+    /// Consecutive low-demand epochs required before rentals shrink (the
+    /// drain hysteresis), >= 1.
+    pub drain_epochs: usize,
+    /// Instances kept rented even at zero predicted demand.
+    pub min_rented: usize,
+    /// Extra setup seconds the planner charges work placed on un-rented
+    /// platforms (API/boot lead time), >= 0.
+    pub rent_lead_secs: f64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            enabled: false,
+            alpha: 0.3,
+            season_len: 8,
+            safety: 1.25,
+            drain_epochs: 2,
+            min_rented: 1,
+            rent_lead_secs: 30.0,
+        }
+    }
+}
+
+impl ForecastConfig {
+    /// Validate the knobs (the config parser and the scheduler both route
+    /// through this).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(CloudshapesError::config(format!(
+                "forecast.alpha must be in (0, 1], got {}",
+                self.alpha
+            )));
+        }
+        if !(self.safety >= 1.0 && self.safety.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "forecast.safety must be >= 1 and finite, got {}",
+                self.safety
+            )));
+        }
+        if self.drain_epochs == 0 {
+            return Err(CloudshapesError::config("forecast.drain_epochs must be >= 1"));
+        }
+        if !(self.rent_lead_secs >= 0.0 && self.rent_lead_secs.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "forecast.rent_lead_secs must be non-negative, got {}",
+                self.rent_lead_secs
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// EWMA level + additive seasonal fit over per-epoch arrival work.
+///
+/// Feed one [`observe`](Self::observe) per epoch; ask
+/// [`forecast_next`](Self::forecast_next) for the next epoch's prediction.
+/// Each issued forecast is scored against the next observation into a
+/// relative-error EWMA ([`error`](Self::error)) — the
+/// `scheduler_forecast_error` gauge.
+#[derive(Debug, Clone)]
+pub struct ArrivalForecaster {
+    alpha: f64,
+    /// Additive seasonal offsets, one per bucket (empty = level only).
+    season: Vec<f64>,
+    level: Option<f64>,
+    /// Observations consumed so far (indexes the seasonal bucket).
+    epoch: usize,
+    /// The forecast issued for the epoch now being observed.
+    pending: Option<f64>,
+    /// EWMA of the relative |forecast − actual| error.
+    err: Option<f64>,
+}
+
+impl ArrivalForecaster {
+    pub fn new(alpha: f64, season_len: usize) -> ArrivalForecaster {
+        assert!(alpha > 0.0 && alpha <= 1.0, "forecaster alpha must be in (0, 1]: {alpha}");
+        ArrivalForecaster {
+            alpha,
+            season: vec![0.0; season_len],
+            level: None,
+            epoch: 0,
+            pending: None,
+            err: None,
+        }
+    }
+
+    /// Observations consumed so far.
+    pub fn len(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.epoch == 0
+    }
+
+    /// Feed one epoch's observed arrival work. Non-finite or negative
+    /// observations are ignored (same discipline as `OnlineLatencyFit`).
+    pub fn observe(&mut self, actual: f64) {
+        if !actual.is_finite() || actual < 0.0 {
+            return;
+        }
+        if let Some(f) = self.pending.take() {
+            // Score the forecast issued for this epoch. Normalising by
+            // max(actual, forecast, 1) bounds the error in [0, 1] even on
+            // zero-arrival epochs.
+            let rel = (f - actual).abs() / actual.max(f).max(1.0);
+            self.err = Some(match self.err {
+                Some(e) => self.alpha * rel + (1.0 - self.alpha) * e,
+                None => rel,
+            });
+        }
+        let bucket = if self.season.is_empty() {
+            None
+        } else {
+            Some(self.epoch % self.season.len())
+        };
+        match self.level {
+            None => self.level = Some(actual),
+            Some(l) => {
+                let deseason = actual - bucket.map_or(0.0, |b| self.season[b]);
+                self.level = Some(self.alpha * deseason + (1.0 - self.alpha) * l);
+            }
+        }
+        if let (Some(b), Some(l)) = (bucket, self.level) {
+            self.season[b] = self.alpha * (actual - l) + (1.0 - self.alpha) * self.season[b];
+        }
+        self.epoch += 1;
+    }
+
+    /// Predicted arrival work for the next epoch (never negative). The
+    /// prediction is recorded so the next [`observe`](Self::observe) can
+    /// score it.
+    pub fn forecast_next(&mut self) -> f64 {
+        let level = self.level.unwrap_or(0.0);
+        let seasonal = if self.season.is_empty() {
+            0.0
+        } else {
+            self.season[self.epoch % self.season.len()]
+        };
+        let f = (level + seasonal).max(0.0);
+        self.pending = Some(f);
+        f
+    }
+
+    /// EWMA of the relative |forecast − actual| error (`None` until the
+    /// first scored forecast).
+    pub fn error(&self) -> Option<f64> {
+        self.err
+    }
+}
+
+/// The economics of one rentable instance the autoscaler chooses between.
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformEcon {
+    /// Sustained throughput prior, flops/s.
+    pub throughput_flops: f64,
+    /// Holding rate while rented, $/hour.
+    pub rate_per_hour: f64,
+}
+
+/// Forecast-driven rent/drain policy over a fixed instance fleet.
+///
+/// Each epoch boundary, [`plan`](Self::plan) observes that epoch's arrival
+/// work, forecasts the next, and greedily rents instances in descending
+/// cost-efficiency (throughput per dollar) until the predicted demand rate
+/// (with `safety` head-room) is covered. Pre-renting is immediate;
+/// draining waits for `drain_epochs` consecutive low-demand epochs and
+/// never goes below `min_rented`.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: ForecastConfig,
+    forecaster: ArrivalForecaster,
+    econ: Vec<PlatformEcon>,
+    /// Instance indices in rent order (descending throughput per dollar).
+    order: Vec<usize>,
+    rented: Vec<bool>,
+    low_streak: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: ForecastConfig, econ: Vec<PlatformEcon>) -> Autoscaler {
+        for e in &econ {
+            assert!(
+                e.throughput_flops > 0.0 && e.throughput_flops.is_finite(),
+                "autoscaler throughput prior must be positive: {e:?}"
+            );
+            assert!(
+                e.rate_per_hour >= 0.0 && e.rate_per_hour.is_finite(),
+                "autoscaler rate must be non-negative: {e:?}"
+            );
+        }
+        let mut order: Vec<usize> = (0..econ.len()).collect();
+        order.sort_by(|&a, &b| {
+            let ea = econ[a].throughput_flops / econ[a].rate_per_hour.max(1e-12);
+            let eb = econ[b].throughput_flops / econ[b].rate_per_hour.max(1e-12);
+            eb.partial_cmp(&ea).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let n = econ.len();
+        let forecaster = ArrivalForecaster::new(cfg.alpha, cfg.season_len);
+        Autoscaler { cfg, forecaster, econ, order, rented: vec![true; n], low_streak: 0 }
+    }
+
+    /// One planning step at an epoch boundary: observe `arrived_flops` (new
+    /// work submitted during the epoch just ended), forecast the next
+    /// epoch, and re-decide the rented set given the outstanding
+    /// `backlog_flops`. Returns the rented mask, instance-index aligned.
+    pub fn plan(&mut self, arrived_flops: f64, backlog_flops: f64, epoch_secs: f64) -> &[bool] {
+        if !self.cfg.enabled {
+            for r in &mut self.rented {
+                *r = true;
+            }
+            return &self.rented;
+        }
+        self.forecaster.observe(arrived_flops);
+        let predicted = self.forecaster.forecast_next();
+        let demand =
+            (predicted + backlog_flops.max(0.0)) * self.cfg.safety / epoch_secs.max(1e-9);
+        let mut target = vec![false; self.econ.len()];
+        let mut capacity = 0.0f64;
+        let mut count = 0usize;
+        for &i in &self.order {
+            if count >= self.cfg.min_rented && capacity >= demand {
+                break;
+            }
+            target[i] = true;
+            capacity += self.econ[i].throughput_flops;
+            count += 1;
+        }
+        let current = self.rented.iter().filter(|r| **r).count();
+        if count < current {
+            self.low_streak += 1;
+            if self.low_streak < self.cfg.drain_epochs {
+                return &self.rented; // hold: not drained long enough yet
+            }
+            self.low_streak = 0;
+        } else {
+            self.low_streak = 0;
+        }
+        self.rented = target;
+        &self.rented
+    }
+
+    /// The current rented mask (instance-index aligned).
+    pub fn rented(&self) -> &[bool] {
+        &self.rented
+    }
+
+    pub fn rented_count(&self) -> usize {
+        self.rented.iter().filter(|r| **r).count()
+    }
+
+    /// The forecaster's relative-error EWMA.
+    pub fn forecast_error(&self) -> Option<f64> {
+        self.forecaster.error()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms::Catalogue;
+
+    #[test]
+    fn config_validation() {
+        assert!(ForecastConfig::default().validate().is_ok());
+        let bad = ForecastConfig { alpha: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ForecastConfig { alpha: 1.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ForecastConfig { safety: 0.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ForecastConfig { drain_epochs: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ForecastConfig { rent_lead_secs: -1.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn seasonal_fit_converges_on_periodic_trace() {
+        // Period-4 arrivals: three quiet epochs, then a spike.
+        let trace = [0.0, 0.0, 0.0, 400.0];
+        let mut fc = ArrivalForecaster::new(0.5, 4);
+        for k in 0..60 {
+            let _ = fc.forecast_next();
+            fc.observe(trace[k % 4]);
+        }
+        // epoch = 60 -> next bucket 0 (quiet), then walk to the spike.
+        assert!(fc.forecast_next() < 60.0, "quiet bucket over-forecast");
+        fc.observe(trace[0]);
+        fc.observe(trace[1]);
+        fc.observe(trace[2]);
+        // Next bucket is 63 % 4 == 3: the spike.
+        let spike = fc.forecast_next();
+        assert!(spike > 250.0, "spike bucket under-forecast: {spike}");
+        // Converged forecasts score well.
+        let err = fc.error().expect("forecasts were scored");
+        assert!(err < 0.5, "error EWMA failed to converge: {err}");
+    }
+
+    #[test]
+    fn level_only_fit_tracks_the_mean() {
+        let mut fc = ArrivalForecaster::new(0.5, 0);
+        for _ in 0..20 {
+            fc.observe(100.0);
+        }
+        let f = fc.forecast_next();
+        assert!((f - 100.0).abs() < 1e-6, "level-only forecast: {f}");
+        // Garbage observations are ignored.
+        fc.observe(f64::NAN);
+        fc.observe(-5.0);
+        assert_eq!(fc.len(), 20);
+    }
+
+    fn flat_econ(n: usize) -> Vec<PlatformEcon> {
+        vec![PlatformEcon { throughput_flops: 100.0, rate_per_hour: 1.0 }; n]
+    }
+
+    #[test]
+    fn disabled_keeps_everything_rented() {
+        let cfg = ForecastConfig { enabled: false, ..Default::default() };
+        let mut asc = Autoscaler::new(cfg, flat_econ(4));
+        for _ in 0..10 {
+            asc.plan(0.0, 0.0, 1.0);
+        }
+        assert_eq!(asc.rented_count(), 4);
+        assert!(asc.forecast_error().is_none());
+    }
+
+    #[test]
+    fn pre_rents_before_predicted_spike_and_drains_after() {
+        let cfg = ForecastConfig {
+            enabled: true,
+            alpha: 0.5,
+            season_len: 4,
+            safety: 1.25,
+            drain_epochs: 2,
+            min_rented: 1,
+            rent_lead_secs: 30.0,
+        };
+        let mut asc = Autoscaler::new(cfg, flat_econ(4));
+        let trace = [0.0, 0.0, 0.0, 400.0];
+        for k in 0..14 {
+            asc.plan(trace[k % 4], 0.0, 1.0);
+        }
+        // The 15th call observes a QUIET epoch (index 14, bucket 2) but
+        // forecasts the spike bucket — pre-renting must fire on the
+        // forecast, ahead of any arrival.
+        asc.plan(trace[14 % 4], 0.0, 1.0);
+        assert!(
+            asc.rented_count() >= 3,
+            "no pre-rent ahead of the spike: {} rented",
+            asc.rented_count()
+        );
+        // Post-storm: a long run of quiet epochs drains back to the floor
+        // (the seasonal ghost of the spike takes a few periods to decay,
+        // and every shrink waits out the hysteresis window).
+        for _ in 0..32 {
+            asc.plan(0.0, 0.0, 1.0);
+        }
+        assert_eq!(asc.rented_count(), 1, "drain did not trim to min_rented");
+    }
+
+    #[test]
+    fn rent_order_prefers_throughput_per_dollar() {
+        let econ = vec![
+            PlatformEcon { throughput_flops: 100.0, rate_per_hour: 10.0 }, // 10 flops/$
+            PlatformEcon { throughput_flops: 50.0, rate_per_hour: 1.0 },   // 50 flops/$
+        ];
+        let cfg = ForecastConfig {
+            enabled: true,
+            season_len: 0,
+            min_rented: 1,
+            drain_epochs: 1,
+            ..Default::default()
+        };
+        let mut asc = Autoscaler::new(cfg, econ);
+        // Tiny steady demand: only the efficient instance stays rented.
+        for _ in 0..6 {
+            asc.plan(10.0, 0.0, 1.0);
+        }
+        assert_eq!(asc.rented(), &[false, true]);
+    }
+
+    #[test]
+    fn pre_rent_never_exceeds_catalogue_quotas() {
+        // The fleet the autoscaler scales over is an instantiated
+        // composition, which the catalogue bounds by `available` — so even
+        // unbounded demand can only rent what the quota admitted.
+        let cat = Catalogue::small();
+        let counts = cat.availability();
+        let specs = cat.instantiate(&counts, false).unwrap();
+        let econ: Vec<PlatformEcon> = specs
+            .iter()
+            .map(|s| PlatformEcon {
+                throughput_flops: s.app_gflops.max(1e-9) * 1e9,
+                rate_per_hour: s.rate_per_hour,
+            })
+            .collect();
+        let cfg = ForecastConfig { enabled: true, ..Default::default() };
+        let mut asc = Autoscaler::new(cfg, econ);
+        asc.plan(1e18, 1e18, 1.0); // storm far beyond total capacity
+        let offer_of = cat.instance_offers(&counts);
+        for (t, cap) in cat.availability().iter().enumerate() {
+            let rented_of_type = asc
+                .rented()
+                .iter()
+                .zip(&offer_of)
+                .filter(|(r, o)| **r && **o == t)
+                .count();
+            assert!(rented_of_type <= *cap, "type {t}: {rented_of_type} > quota {cap}");
+        }
+        // And a composition beyond quota is refused before the autoscaler
+        // ever sees it.
+        let mut over = counts.clone();
+        over[0] += 1;
+        assert!(cat.instantiate(&over, false).is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! Seeded market-tick simulator: correlated burst re-pricing storms.
+//!
+//! The paper's algorithmic-trading case study (§V) prices a book once; the
+//! real workload it gestures at is a *tick stream* — market moves trigger
+//! portfolio-wide re-pricing storms, thousands of near-identical jobs
+//! clustered in time. [`MarketSim`] generates that stream deterministically
+//! from a seed: a steady base load of mixed-book jobs every tick, plus a
+//! storm every `storm_every` ticks in which the whole portfolio of one
+//! payoff family re-prices at once (correlated: one market move, one asset
+//! class). The stream drives the online scheduler in
+//! `rust/benches/perf_storm.rs` and anywhere else a reproducible burst
+//! arrival pattern is needed.
+//!
+//! Everything is counter-based (SplitMix64 over `(seed, tick, job)`), the
+//! same no-global-RNG discipline as the pricing kernels: tick `t` has the
+//! same jobs no matter how many times or in what order it is generated.
+
+use crate::api::error::{CloudshapesError, Result};
+use crate::coordinator::scheduler::{JobSpec, Slo};
+use crate::workload::Payoff;
+
+/// `[storm]` configuration keys (see `docs/CONFIG.md`).
+#[derive(Debug, Clone)]
+pub struct StormConfig {
+    /// Seed of the whole stream (jobs, families, clustering).
+    pub seed: u64,
+    /// Ticks in the simulated trading day.
+    pub ticks: usize,
+    /// Mixed-book jobs submitted every tick (the base load; 0 = quiet
+    /// between storms).
+    pub base_jobs: usize,
+    /// A storm fires every this many ticks (0 = never).
+    pub storm_every: usize,
+    /// Correlated re-price jobs per storm.
+    pub storm_jobs: usize,
+    /// Option tasks per job.
+    pub tasks_per_job: usize,
+    /// CI half-width accuracy target sizing each task's N.
+    pub accuracy: f64,
+    /// Deadline SLO attached to every job, cluster-virtual seconds.
+    pub deadline_secs: f64,
+    /// Daily spot-price swing amplitude handed to
+    /// [`Catalogue::spot_rate_at`](crate::platforms::Catalogue::spot_rate_at),
+    /// in [0, 1).
+    pub spot_volatility: f64,
+}
+
+impl Default for StormConfig {
+    fn default() -> Self {
+        StormConfig {
+            seed: 7,
+            ticks: 48,
+            base_jobs: 1,
+            storm_every: 12,
+            storm_jobs: 64,
+            tasks_per_job: 2,
+            accuracy: 0.2,
+            deadline_secs: 14_400.0,
+            spot_volatility: 0.2,
+        }
+    }
+}
+
+impl StormConfig {
+    /// Validate the knobs (the config parser and [`MarketSim::new`] both
+    /// route through this).
+    pub fn validate(&self) -> Result<()> {
+        if self.ticks == 0 {
+            return Err(CloudshapesError::config("storm.ticks must be >= 1"));
+        }
+        if self.storm_every > 0 && self.storm_jobs == 0 {
+            return Err(CloudshapesError::config(
+                "storm.storm_jobs must be >= 1 when storms fire (storm_every > 0)",
+            ));
+        }
+        if self.tasks_per_job == 0 || self.tasks_per_job > JobSpec::MAX_TASKS {
+            return Err(CloudshapesError::config(format!(
+                "storm.tasks_per_job must be in 1..={}, got {}",
+                JobSpec::MAX_TASKS,
+                self.tasks_per_job
+            )));
+        }
+        if !(self.accuracy > 0.0 && self.accuracy.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "storm.accuracy must be positive and finite, got {}",
+                self.accuracy
+            )));
+        }
+        if !(self.deadline_secs > 0.0 && self.deadline_secs.is_finite()) {
+            return Err(CloudshapesError::config(format!(
+                "storm.deadline_secs must be positive and finite, got {}",
+                self.deadline_secs
+            )));
+        }
+        if !(self.spot_volatility >= 0.0 && self.spot_volatility < 1.0) {
+            return Err(CloudshapesError::config(format!(
+                "storm.spot_volatility must be in [0, 1), got {}",
+                self.spot_volatility
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One tick's submissions.
+#[derive(Debug, Clone)]
+pub struct MarketTick {
+    pub index: usize,
+    pub is_storm: bool,
+    /// The payoff family the storm's correlated portfolio re-prices
+    /// (`None` on base-load ticks: a mixed book).
+    pub family: Option<Payoff>,
+    pub jobs: Vec<JobSpec>,
+}
+
+/// Deterministic tick-stream generator over a [`StormConfig`].
+#[derive(Debug, Clone)]
+pub struct MarketSim {
+    cfg: StormConfig,
+}
+
+impl MarketSim {
+    pub fn new(cfg: StormConfig) -> Result<MarketSim> {
+        cfg.validate()?;
+        Ok(MarketSim { cfg })
+    }
+
+    pub fn config(&self) -> &StormConfig {
+        &self.cfg
+    }
+
+    /// Ticks in the stream.
+    pub fn ticks(&self) -> usize {
+        self.cfg.ticks
+    }
+
+    fn is_storm(&self, t: usize) -> bool {
+        self.cfg.storm_every > 0 && (t + 1) % self.cfg.storm_every == 0
+    }
+
+    fn jobs_at(&self, t: usize) -> usize {
+        self.cfg.base_jobs + if self.is_storm(t) { self.cfg.storm_jobs } else { 0 }
+    }
+
+    /// Total jobs across the whole stream (for sizing harnesses).
+    pub fn total_jobs(&self) -> usize {
+        (0..self.cfg.ticks).map(|t| self.jobs_at(t)).sum()
+    }
+
+    /// Total simulation paths across the whole stream — the "~1M option
+    /// re-prices" scale knob the storm bench reports.
+    pub fn total_sims(&self) -> Result<u64> {
+        let mut sims = 0u64;
+        for t in 0..self.cfg.ticks {
+            for job in self.tick(t)?.jobs {
+                sims += job.tasks.iter().map(|x| x.n_sims).sum::<u64>();
+            }
+        }
+        Ok(sims)
+    }
+
+    /// Generate tick `t` (out-of-range is a config error). Storm ticks
+    /// submit `storm_jobs` correlated jobs — one payoff family, clustered
+    /// seeds — on top of the base load; every job carries the deadline SLO.
+    pub fn tick(&self, t: usize) -> Result<MarketTick> {
+        if t >= self.cfg.ticks {
+            return Err(CloudshapesError::config(format!(
+                "tick {t} out of range (stream has {} ticks)",
+                self.cfg.ticks
+            )));
+        }
+        let storm = self.is_storm(t);
+        let family = if storm {
+            const FAMILIES: [Payoff; 3] = [Payoff::European, Payoff::Asian, Payoff::Barrier];
+            Some(FAMILIES[(mix(self.cfg.seed ^ (t as u64)) % 3) as usize])
+        } else {
+            None
+        };
+        let n = self.jobs_at(t);
+        let mut jobs = Vec::with_capacity(n);
+        for k in 0..n {
+            let seed = mix(self
+                .cfg
+                .seed
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add((t as u64) << 20)
+                .wrapping_add(k as u64));
+            jobs.push(JobSpec::generate(
+                family,
+                self.cfg.tasks_per_job,
+                self.cfg.accuracy,
+                seed,
+                Slo::Deadline(self.cfg.deadline_secs),
+            )?);
+        }
+        Ok(MarketTick { index: t, is_storm: storm, family, jobs })
+    }
+}
+
+/// SplitMix64 finaliser — the counter-based mixer behind tick determinism.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        assert!(StormConfig::default().validate().is_ok());
+        assert!(StormConfig { ticks: 0, ..Default::default() }.validate().is_err());
+        assert!(StormConfig { storm_jobs: 0, ..Default::default() }.validate().is_err());
+        // No storms -> storm_jobs unconstrained.
+        assert!(StormConfig { storm_every: 0, storm_jobs: 0, ..Default::default() }
+            .validate()
+            .is_ok());
+        assert!(StormConfig { tasks_per_job: 0, ..Default::default() }.validate().is_err());
+        assert!(StormConfig { accuracy: 0.0, ..Default::default() }.validate().is_err());
+        assert!(StormConfig { deadline_secs: -1.0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(StormConfig { spot_volatility: 1.0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(MarketSim::new(StormConfig { ticks: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn storms_fire_on_cadence_with_correlated_families() {
+        let cfg = StormConfig {
+            ticks: 24,
+            base_jobs: 2,
+            storm_every: 8,
+            storm_jobs: 5,
+            ..Default::default()
+        };
+        let sim = MarketSim::new(cfg).unwrap();
+        let mut storms = 0;
+        for t in 0..sim.ticks() {
+            let tick = sim.tick(t).unwrap();
+            assert_eq!(tick.index, t);
+            if tick.is_storm {
+                storms += 1;
+                assert_eq!(tick.jobs.len(), 7);
+                let fam = tick.family.expect("storm ticks name a family");
+                // Correlated: every storm job re-prices the same family.
+                for job in &tick.jobs[2..] {
+                    assert!(job.tasks.iter().all(|x| x.payoff == fam), "mixed storm");
+                }
+            } else {
+                assert_eq!(tick.jobs.len(), 2);
+                assert!(tick.family.is_none());
+            }
+        }
+        assert_eq!(storms, 3); // ticks 7, 15, 23
+        assert_eq!(sim.total_jobs(), 24 * 2 + 3 * 5);
+        assert!(sim.tick(24).is_err());
+    }
+
+    #[test]
+    fn stream_is_deterministic_and_seed_sensitive() {
+        let sim = MarketSim::new(StormConfig::default()).unwrap();
+        let a = sim.tick(11).unwrap();
+        let b = sim.tick(11).unwrap();
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(ja.tasks.len(), jb.tasks.len());
+            for (ta, tb) in ja.tasks.iter().zip(&jb.tasks) {
+                assert_eq!(ta.payoff, tb.payoff);
+                assert_eq!(ta.n_sims, tb.n_sims);
+                assert_eq!(ta.spot, tb.spot);
+            }
+        }
+        // A different seed reshuffles the book.
+        let other =
+            MarketSim::new(StormConfig { seed: 1234, ..Default::default() }).unwrap();
+        let c = other.tick(11).unwrap();
+        let differs = a
+            .jobs
+            .iter()
+            .zip(&c.jobs)
+            .any(|(ja, jc)| {
+                ja.tasks.iter().zip(&jc.tasks).any(|(x, y)| x.spot != y.spot)
+            });
+        assert!(differs, "seed change left tick 11 identical");
+        assert!(sim.total_sims().unwrap() > 0);
+    }
+}

@@ -1,16 +1,21 @@
 //! Predictive runtime-characteristic models (§III.A of the paper):
 //! latency `L(N) = βN + γ`, quantised IaaS cost `C = ⌈L/ρ⌉π`, the
 //! TCO-based rate derivation for devices without market prices (Eq. 2),
-//! and [`online`] incremental re-fitting of the latency models from
-//! latencies measured while a long-running scheduler executes.
+//! [`online`] incremental re-fitting of the latency models from latencies
+//! measured while a long-running scheduler executes, [`forecast`] arrival
+//! prediction + autoscaling, and the [`market`] storm-tick simulator.
 
 pub mod cost;
+pub mod forecast;
 pub mod latency;
+pub mod market;
 pub mod online;
 pub mod tco;
 
 pub use cost::CostModel;
+pub use forecast::{ArrivalForecaster, Autoscaler, ForecastConfig, PlatformEcon};
 pub use latency::LatencyModel;
+pub use market::{MarketSim, MarketTick, StormConfig};
 pub use online::{OnlineLatencyFit, PlatformPrior};
 pub use tco::{DatacentreModel, TcoInputs};
 

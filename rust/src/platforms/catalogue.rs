@@ -180,6 +180,64 @@ impl Catalogue {
             .flat_map(|(t, &c)| std::iter::repeat(t).take(c))
             .collect()
     }
+
+    /// The simulated spot rate of offer `t` at cluster-virtual `t_secs`: a
+    /// deterministic daily time series instead of the static quote, so
+    /// shape decisions shift across the simulated day (ROADMAP item 5).
+    /// Two superposed sinusoids (24 h and 12 h periods) with a stable
+    /// per-offer phase swing the quote by up to ±`volatility` (in [0, 1)).
+    /// `volatility = 0` reproduces [`SpotTerms::rate_per_hour`] exactly —
+    /// every pre-existing static caller is unaffected. `None` for offers
+    /// with no spot market or out-of-range `t`.
+    pub fn spot_rate_at(&self, t: usize, t_secs: f64, volatility: f64) -> Option<f64> {
+        let offer = self.offers.get(t)?;
+        let s = offer.spot?;
+        Some(s.rate_per_hour * spot_modulation(t_secs, volatility, name_phase(&offer.spec.name)))
+    }
+
+    /// As [`instantiate`](Self::instantiate), but spot rentals are billed
+    /// at the simulated time-of-day rate ([`spot_rate_at`](Self::spot_rate_at))
+    /// instead of the static quote. `volatility = 0` is exactly
+    /// `instantiate`.
+    pub fn instantiate_at(
+        &self,
+        counts: &[usize],
+        spot: bool,
+        t_secs: f64,
+        volatility: f64,
+    ) -> Result<Vec<PlatformSpec>> {
+        let mut specs = self.instantiate(counts, spot)?;
+        if spot && volatility != 0.0 {
+            for (k, t) in self.instance_offers(counts).iter().enumerate() {
+                if let Some(rate) = self.spot_rate_at(*t, t_secs, volatility) {
+                    specs[k].rate_per_hour = rate;
+                }
+            }
+        }
+        Ok(specs)
+    }
+}
+
+/// Daily spot-price modulation factor at virtual `t_secs` — deterministic,
+/// always positive, identity at zero volatility.
+fn spot_modulation(t_secs: f64, volatility: f64, phase: f64) -> f64 {
+    if volatility == 0.0 {
+        return 1.0;
+    }
+    let day = t_secs / 86_400.0 * std::f64::consts::TAU;
+    let swing = 0.6 * (day + phase).sin() + 0.4 * (2.0 * day + 1.7 * phase).sin();
+    (1.0 + volatility * swing).max(0.05)
+}
+
+/// Stable per-offer phase in [0, τ) from the type name (FNV-1a), so
+/// different spot markets peak at different times of day.
+fn name_phase(name: &str) -> f64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % 10_000) as f64 / 10_000.0 * std::f64::consts::TAU
 }
 
 /// One device-type row of Table II as a catalogue offer.
@@ -396,6 +454,63 @@ mod tests {
         assert!(cats.contains(&Category::Fpga));
         assert!(cats.contains(&Category::Gpu));
         assert!(cats.contains(&Category::Cpu));
+    }
+
+    #[test]
+    fn spot_series_is_deterministic_and_static_at_zero_volatility() {
+        let c = Catalogue::paper();
+        let gpu = c.find("gk104").unwrap();
+        let base = c.offer(gpu).spot.unwrap().rate_per_hour;
+        // Zero volatility: the static quote, at any time of day.
+        for t_secs in [0.0, 3600.0, 43_200.0] {
+            assert_eq!(c.spot_rate_at(gpu, t_secs, 0.0), Some(base));
+        }
+        // Deterministic: same (offer, time, volatility) -> same price.
+        assert_eq!(
+            c.spot_rate_at(gpu, 7200.0, 0.5),
+            c.spot_rate_at(gpu, 7200.0, 0.5)
+        );
+        // The price actually moves across the day, positively, within the
+        // volatility envelope.
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for k in 0..96 {
+            let r = c.spot_rate_at(gpu, k as f64 * 900.0, 0.5).unwrap();
+            assert!(r > 0.0 && r <= base * 1.5 + 1e-9);
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        assert!(hi > lo * 1.1, "flat spot series: [{lo}, {hi}]");
+        // Offers without a spot market have no series.
+        let fpga = c.find("virtex6").unwrap();
+        assert_eq!(c.spot_rate_at(fpga, 0.0, 0.5), None);
+        assert_eq!(c.spot_rate_at(99, 0.0, 0.5), None);
+    }
+
+    #[test]
+    fn instantiate_at_bills_the_time_of_day_rate() {
+        let c = Catalogue::paper();
+        let gpu = c.find("gk104").unwrap();
+        let mut counts = vec![0; c.len()];
+        counts[gpu] = 2;
+        // volatility 0 == the plain instantiate.
+        let static_specs = c.instantiate(&counts, true).unwrap();
+        let at_zero = c.instantiate_at(&counts, true, 5000.0, 0.0).unwrap();
+        assert_eq!(static_specs, at_zero);
+        // Sampled across a day, the composition's spot bill moves.
+        let mut rates = Vec::new();
+        for k in 0..24 {
+            let specs = c.instantiate_at(&counts, true, k as f64 * 3600.0, 0.5).unwrap();
+            assert_eq!(specs[0].rate_per_hour, specs[1].rate_per_hour);
+            assert!(specs[0].preemptible.is_some());
+            rates.push(specs[0].rate_per_hour);
+        }
+        let lo = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rates.iter().cloned().fold(0.0f64, f64::max);
+        assert!(hi > lo, "spot bill never moved across the day");
+        // On-demand rentals ignore the series entirely.
+        let on_demand = c.instantiate_at(&counts, false, 5000.0, 0.5).unwrap();
+        assert_eq!(on_demand, c.instantiate(&counts, false).unwrap());
     }
 
     #[test]
