@@ -29,6 +29,7 @@ fn main() -> Result<(), CloudshapesError> {
         steps: 1,
         target_accuracy: 0.01,
         n_sims: 1 << 18,
+        ..OptionTask::default()
     };
     let stats = engine
         .price(&task, task.n_sims, 42)

@@ -1,7 +1,10 @@
 //! Perf: the cluster executor — static (one-shot) vs chunked vs
 //! chunked+rebalance on the paper workload (noise-free sim), a straggler
 //! recovery scenario, and the Monte Carlo kernel's paths/second, scalar
-//! vs batched per payoff family. Emits `results/BENCH_executor.json`
+//! vs batched, for all six payoff families. Each exotic family clears an
+//! independent oracle gate (LSMC vs binomial tree, basket vs
+//! moment-matched lognormal, degenerate Heston vs Black-Scholes) before
+//! its throughput is published. Emits `results/BENCH_executor.json`
 //! (executor trajectory) and `results/BENCH_kernel.json` (kernel
 //! throughput gate) so the perf trajectory is tracked across PRs.
 //!
@@ -19,7 +22,7 @@ use cloudshapes::coordinator::{HeuristicPartitioner, ModelSet};
 use cloudshapes::obs::{self, MetricsRegistry};
 use cloudshapes::platforms::spec::{paper_cluster, small_cluster};
 use cloudshapes::platforms::{Cluster, Platform, SimConfig, SimPlatform};
-use cloudshapes::pricing::{batch, mc};
+use cloudshapes::pricing::{batch, blackscholes, combine, mc};
 use cloudshapes::util::json::{obj, Json};
 use cloudshapes::workload::{generate, GeneratorConfig, Payoff};
 
@@ -167,16 +170,75 @@ fn main() {
     barrier.payoff = Payoff::Barrier;
     barrier.barrier = task.spot * 1.4;
     barrier.steps = 64;
+    let mut amer = task.clone();
+    amer.payoff = Payoff::American;
+    amer.strike = task.spot * 1.1; // ITM put: a real early-exercise region
+    amer.steps = 32;
+    let mut basket = task.clone();
+    basket.payoff = Payoff::Basket;
+    basket.assets = 4;
+    basket.correlation = 0.5;
+    basket.steps = 16;
+    let mut heston = task.clone();
+    heston.payoff = Payoff::Heston;
+    heston.correlation = -0.7;
+    heston.steps = 64;
+
+    // Oracle gates (run in --smoke too): every exotic family must agree
+    // with its independent oracle before its throughput number is
+    // published — a fast kernel pricing the wrong thing is not a result.
+    println!("\n== perf: exotic-kernel oracle gates ==");
+    let gate_n = if smoke { 1u32 << 13 } else { 1 << 15 };
+    let est = combine(&mc::simulate(&amer, 42, 0, gate_n), amer.discount());
+    let crr = blackscholes::american_put_binomial(
+        amer.spot, amer.strike, amer.rate, amer.sigma, amer.maturity, 1000,
+    );
+    assert!(
+        (est.price - crr).abs() < 4.0 * est.std_error + 0.1 * crr,
+        "lsmc gate: {est:?} vs binomial {crr}"
+    );
+    println!("        lsmc vs binomial: {:.4} ± {:.4} vs {crr:.4}", est.price, est.std_error);
+    let est = combine(&mc::simulate(&basket, 42, 0, gate_n), basket.discount());
+    let mm = blackscholes::basket_call_moment_matched(
+        basket.spot, basket.strike, basket.rate, basket.sigma, basket.maturity,
+        basket.assets, basket.correlation,
+    );
+    assert!(
+        (est.price - mm).abs() < 4.0 * est.std_error + 0.03 * mm,
+        "basket gate: {est:?} vs moment-matched {mm}"
+    );
+    println!("        basket vs moment-matched: {:.4} ± {:.4} vs {mm:.4}", est.price, est.std_error);
+    let mut degenerate = heston.clone();
+    degenerate.xi = 0.0;
+    degenerate.v0 = degenerate.theta;
+    let est = combine(&mc::simulate(&degenerate, 42, 0, gate_n), degenerate.discount());
+    let bs = blackscholes::call(
+        degenerate.spot, degenerate.strike, degenerate.rate,
+        degenerate.theta.sqrt(), degenerate.maturity,
+    );
+    assert!(
+        (est.price - bs).abs() < 4.0 * est.std_error + 0.05,
+        "heston gate: {est:?} vs bs(sqrt theta) {bs}"
+    );
+    println!("        heston(xi=0) vs black-scholes: {:.4} ± {:.4} vs {bs:.4}", est.price, est.std_error);
+
     let kernel_runs = runs.max(3);
     let mut kernel_rows: Vec<(&str, Json)> = vec![
         ("smoke", Json::Bool(smoke)),
         ("lanes", batch::LANES.into()),
     ];
     let mut euro_speedup = 0.0;
+    // Exotic rows: LSMC re-fits its pilot policy inside every simulate()
+    // call, so its paths/s includes the regression — the per-chunk cost the
+    // per-family latency models see. American has no lane formulation
+    // (cross-path regression); its "batched" column is the scalar route.
     for (family, t, n) in [
         ("european", &task, if smoke { 1u32 << 18 } else { 1 << 22 }),
         ("asian64", &asian, if smoke { 1 << 12 } else { 1 << 16 }),
         ("barrier64", &barrier, if smoke { 1 << 12 } else { 1 << 16 }),
+        ("lsmc32", &amer, if smoke { 1 << 11 } else { 1 << 14 }),
+        ("basket4x16", &basket, if smoke { 1 << 12 } else { 1 << 15 }),
+        ("heston64", &heston, if smoke { 1 << 11 } else { 1 << 14 }),
     ] {
         assert_eq!(
             mc::simulate(t, 1, 0, 4099), // odd n: the ragged tail too

@@ -23,6 +23,7 @@ fn task(payoff: Payoff) -> OptionTask {
         steps: 64,
         target_accuracy: 0.01,
         n_sims: 1 << 20,
+        ..OptionTask::default()
     }
 }
 

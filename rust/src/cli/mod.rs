@@ -360,7 +360,10 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     let accuracy = args.flag_f64("accuracy")?.unwrap_or(0.05);
     let deadline = args.flag_f64("deadline")?.unwrap_or(1e6);
     let job_budget = args.flag_f64("job-budget")?.unwrap_or(1000.0);
-    let families = [None, Some(Payoff::European), Some(Payoff::Asian), Some(Payoff::Barrier)];
+    // A mixed job first, then one single-family job per payoff family —
+    // derived from Payoff::ALL so new families rotate in automatically.
+    let families: Vec<Option<Payoff>> =
+        std::iter::once(None).chain(Payoff::ALL.into_iter().map(Some)).collect();
 
     // Build the whole book first, then submit it as one batch — the same
     // path the serve plane's `submit_batch` op takes, so a shed entry

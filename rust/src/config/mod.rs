@@ -152,13 +152,24 @@ impl ExperimentConfig {
                 let arr = mix.as_arr().ok_or_else(|| {
                     CloudshapesError::config("workload.payoff_mix must be an array")
                 })?;
-                if arr.len() != 3 {
-                    return Err(CloudshapesError::config("payoff_mix needs 3 weights"));
+                // Pre-exotics configs list 3 weights; missing trailing
+                // families get weight 0 (never drawn). More than one weight
+                // per family is a config error.
+                if arr.len() < 3 || arr.len() > Payoff::COUNT {
+                    return Err(CloudshapesError::config(format!(
+                        "payoff_mix needs 3..={} weights ({}), got {}",
+                        Payoff::COUNT,
+                        Payoff::NAMES.join(", "),
+                        arr.len()
+                    )));
                 }
-                let g = |k: usize| {
-                    arr[k].as_f64().ok_or_else(|| CloudshapesError::config("bad mix weight"))
-                };
-                cfg.workload.payoff_mix = (g(0)?, g(1)?, g(2)?);
+                let mut weights = [0.0f64; Payoff::COUNT];
+                for (k, v) in arr.iter().enumerate() {
+                    weights[k] = v
+                        .as_f64()
+                        .ok_or_else(|| CloudshapesError::config("bad mix weight"))?;
+                }
+                cfg.workload.payoff_mix = weights;
             }
             // A single payoff family by name overrides the mix weights;
             // unknown names are typed workload errors listing the valid
@@ -169,6 +180,16 @@ impl ExperimentConfig {
                 })?;
                 cfg.workload.payoff_mix = Payoff::parse(name)?.one_hot_mix();
             }
+            // Exotic-family knobs (only validated when the mix can reach
+            // the family they parameterise).
+            let mut assets = cfg.workload.basket_assets as u64;
+            set_u64(w, "basket_assets", &mut assets)?;
+            cfg.workload.basket_assets = assets as u32;
+            set_f64(w, "basket_rho", &mut cfg.workload.basket_rho)?;
+            set_f64(w, "heston_kappa", &mut cfg.workload.heston_kappa)?;
+            set_f64(w, "heston_theta", &mut cfg.workload.heston_theta)?;
+            set_f64(w, "heston_xi", &mut cfg.workload.heston_xi)?;
+            set_f64(w, "heston_rho", &mut cfg.workload.heston_rho)?;
             // Reject bad generator parameters (negative/all-zero payoff
             // mixes) at parse time, before they flow into sampling.
             cfg.workload.validate()?;
@@ -282,6 +303,7 @@ impl ExperimentConfig {
             set_f64(s, "epoch_secs", &mut cfg.scheduler.epoch_secs)?;
             set_usize(s, "max_in_flight", &mut cfg.scheduler.max_in_flight)?;
             set_usize(s, "refit_window", &mut cfg.scheduler.refit_window)?;
+            set_bool(s, "family_refit", &mut cfg.scheduler.family_refit)?;
             set_f64(s, "resolve_drift", &mut cfg.scheduler.resolve_drift)?;
             set_f64(s, "repair_quality", &mut cfg.scheduler.repair_quality)?;
             set_usize(s, "plan_memo", &mut cfg.scheduler.plan_memo)?;
@@ -418,7 +440,7 @@ mod tests {
         let c = ExperimentConfig::parse(text).unwrap();
         assert_eq!(c.workload.n_tasks, 16);
         assert_eq!(c.workload.step_choices, vec![64, 128]);
-        assert_eq!(c.workload.payoff_mix, (1.0, 0.5, 0.5));
+        assert_eq!(c.workload.payoff_mix, [1.0, 0.5, 0.5, 0.0, 0.0, 0.0]);
         assert_eq!(c.cluster.kind, ClusterKind::Small);
         assert!((c.cluster.sim.failure_rate - 0.1).abs() < 1e-12);
         assert!(c.cluster.with_native);
@@ -628,17 +650,70 @@ mod tests {
     #[test]
     fn workload_payoff_key_picks_one_family_or_errors_with_names() {
         let c = ExperimentConfig::parse("[workload]\npayoff = \"asian\"").unwrap();
-        assert_eq!(c.workload.payoff_mix, (0.0, 1.0, 0.0));
-        let c = ExperimentConfig::parse("[workload]\npayoff = \"barrier\"").unwrap();
-        assert_eq!(c.workload.payoff_mix, (0.0, 0.0, 1.0));
+        assert_eq!(c.workload.payoff_mix, Payoff::Asian.one_hot_mix());
+        let c = ExperimentConfig::parse("[workload]\npayoff = \"heston\"").unwrap();
+        assert_eq!(c.workload.payoff_mix, Payoff::Heston.one_hot_mix());
         // The unknown-name bugfix: a typed workload error listing the
         // valid families, not a silent default.
         let e = ExperimentConfig::parse("[workload]\npayoff = \"swaption\"").unwrap_err();
         assert_eq!(e.kind(), "workload");
-        assert!(e.message().contains("european"), "{e}");
-        assert!(e.message().contains("asian"), "{e}");
-        assert!(e.message().contains("barrier"), "{e}");
+        for name in Payoff::NAMES {
+            assert!(e.message().contains(name), "{e} missing {name}");
+        }
         assert!(ExperimentConfig::parse("[workload]\npayoff = 3").is_err());
+    }
+
+    #[test]
+    fn payoff_mix_accepts_legacy_and_full_length_arrays() {
+        // 3 weights (pre-exotics configs): trailing families get weight 0.
+        let c = ExperimentConfig::parse("[workload]\npayoff_mix = [0.2, 0.3, 0.5]").unwrap();
+        assert_eq!(c.workload.payoff_mix, [0.2, 0.3, 0.5, 0.0, 0.0, 0.0]);
+        // Full-length arrays reach the exotic families.
+        let c = ExperimentConfig::parse(
+            "[workload]\npayoff_mix = [0.0, 0.0, 0.0, 0.4, 0.3, 0.3]",
+        )
+        .unwrap();
+        assert_eq!(c.workload.payoff_mix, [0.0, 0.0, 0.0, 0.4, 0.3, 0.3]);
+        // Too many weights is a config error naming the families.
+        let e = ExperimentConfig::parse(
+            "[workload]\npayoff_mix = [1.0, 0, 0, 0, 0, 0, 0]",
+        )
+        .unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.message().contains("heston"), "{e}");
+    }
+
+    #[test]
+    fn exotic_workload_knobs_parse_and_validate() {
+        let c = ExperimentConfig::parse(
+            "[workload]\npayoff = \"basket\"\nbasket_assets = 6\nbasket_rho = 0.3",
+        )
+        .unwrap();
+        assert_eq!(c.workload.basket_assets, 6);
+        assert!((c.workload.basket_rho - 0.3).abs() < 1e-12);
+        let c = ExperimentConfig::parse(
+            "[workload]\npayoff = \"heston\"\nheston_kappa = 2.0\nheston_theta = 0.09\nheston_xi = 0.3\nheston_rho = -0.5",
+        )
+        .unwrap();
+        assert!((c.workload.heston_kappa - 2.0).abs() < 1e-12);
+        assert!((c.workload.heston_theta - 0.09).abs() < 1e-12);
+        assert!((c.workload.heston_xi - 0.3).abs() < 1e-12);
+        assert!((c.workload.heston_rho + 0.5).abs() < 1e-12);
+        // Unreachable nonsense knobs don't fail legacy configs…
+        assert!(ExperimentConfig::parse("[workload]\nbasket_assets = 1").is_ok());
+        // …but reachable ones are validated at parse time.
+        let e = ExperimentConfig::parse(
+            "[workload]\npayoff = \"basket\"\nbasket_assets = 1",
+        )
+        .unwrap_err();
+        assert_eq!(e.kind(), "workload");
+    }
+
+    #[test]
+    fn scheduler_family_refit_knob_parses() {
+        let c = ExperimentConfig::parse("[scheduler]\nfamily_refit = false").unwrap();
+        assert!(!c.scheduler.family_refit);
+        assert!(ExperimentConfig::default().scheduler.family_refit);
     }
 
     #[test]

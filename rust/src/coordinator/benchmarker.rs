@@ -127,7 +127,8 @@ pub fn benchmark(cluster: &Cluster, workload: &Workload, cfg: &BenchmarkConfig) 
         specs.iter().map(|s| s.cost_model()).collect(),
         workload.tasks.iter().map(|t| t.n_sims).collect(),
         specs.iter().map(|s| s.name.clone()).collect(),
-    );
+    )
+    .with_task_families(workload.tasks.iter().map(|t| t.payoff).collect());
     BenchmarkReport { models, samples }
 }
 

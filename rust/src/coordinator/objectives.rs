@@ -14,7 +14,7 @@
 use crate::api::error::{CloudshapesError, Result};
 use crate::models::{CostModel, LatencyModel};
 use crate::platforms::spec::PlatformSpec;
-use crate::workload::Workload;
+use crate::workload::{Payoff, Workload};
 
 use super::allocation::{Allocation, ALLOC_TOL};
 
@@ -31,6 +31,10 @@ pub struct ModelSet {
     pub n_sims: Vec<u64>,
     /// Platform names for reporting.
     pub platform_names: Vec<String>,
+    /// Payoff family per task — empty when unknown (hand-built sets);
+    /// populated via [`with_task_families`](Self::with_task_families) so
+    /// reports can aggregate model quality per family.
+    families: Vec<Payoff>,
 }
 
 impl ModelSet {
@@ -45,7 +49,38 @@ impl ModelSet {
         assert_eq!(latency.len(), mu * tau, "latency matrix shape");
         assert_eq!(platform_names.len(), mu);
         assert!(mu > 0 && tau > 0);
-        ModelSet { mu, tau, latency, cost, n_sims, platform_names }
+        ModelSet { mu, tau, latency, cost, n_sims, platform_names, families: Vec::new() }
+    }
+
+    /// Tag each task with its payoff family (one entry per task). Purely
+    /// additive metadata: reporting and the per-family diagnostics use it;
+    /// the objective reductions never look at it.
+    pub fn with_task_families(mut self, families: Vec<Payoff>) -> ModelSet {
+        assert_eq!(families.len(), self.tau, "one family per task");
+        self.families = families;
+        self
+    }
+
+    /// The payoff family of task `j`, when tagged.
+    pub fn task_family(&self, j: usize) -> Option<Payoff> {
+        self.families.get(j).copied()
+    }
+
+    /// Mean fitted β of `family`'s tasks on `platform` — `None` when the
+    /// set is untagged or holds no task of that family. The per-family
+    /// latency diagnostics compare this across families: on a fitted set a
+    /// basket path should cost a multiple of a barrier path, which a
+    /// single pooled line cannot express.
+    pub fn family_beta(&self, platform: usize, family: Payoff) -> Option<f64> {
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for (j, f) in self.families.iter().enumerate() {
+            if *f == family {
+                total += self.model(platform, j).beta;
+                count += 1;
+            }
+        }
+        (count > 0).then(|| total / count as f64)
     }
 
     /// Nominal models straight from platform specs: β from application
@@ -68,6 +103,7 @@ impl ModelSet {
             workload.tasks.iter().map(|t| t.n_sims).collect(),
             specs.iter().map(|s| s.name.clone()).collect(),
         )
+        .with_task_families(workload.tasks.iter().map(|t| t.payoff).collect())
     }
 
     /// Expand a *per-type* model set into a *per-instance* one: `counts[t]`
@@ -102,7 +138,11 @@ impl ModelSet {
                 ));
             }
         }
-        Ok(ModelSet::new(latency, cost, self.n_sims.clone(), names))
+        let mut set = ModelSet::new(latency, cost, self.n_sims.clone(), names);
+        if !self.families.is_empty() {
+            set = set.with_task_families(self.families.clone());
+        }
+        Ok(set)
     }
 
     pub fn model(&self, i: usize, j: usize) -> &LatencyModel {
@@ -291,6 +331,35 @@ mod tests {
         for j in 0..5 {
             assert!(m.model(gpu, j).beta < m.model(cpu, j).beta);
         }
+    }
+
+    #[test]
+    fn family_tags_expose_per_family_betas() {
+        let specs = small_cluster();
+        let cfg = GeneratorConfig {
+            payoff_mix: [0.0, 0.0, 0.5, 0.0, 0.5, 0.0],
+            ..GeneratorConfig::small(24, 0.05, 3)
+        };
+        let w = generate(&cfg);
+        let m = ModelSet::from_specs(&specs, &w);
+        for (j, t) in w.tasks.iter().enumerate() {
+            assert_eq!(m.task_family(j), Some(t.payoff));
+        }
+        // Nominal betas are flops/throughput, so the multi-asset basket's
+        // mean beta must exceed the single-asset barrier's on every
+        // platform — exactly the spread one pooled line cannot express.
+        for i in 0..m.mu {
+            let barrier = m.family_beta(i, Payoff::Barrier).unwrap();
+            let basket = m.family_beta(i, Payoff::Basket).unwrap();
+            assert!(basket > barrier, "platform {i}: {basket} vs {barrier}");
+            assert!(m.family_beta(i, Payoff::Heston).is_none());
+        }
+        // Untagged sets answer None rather than lying.
+        assert!(toy_models().family_beta(0, Payoff::European).is_none());
+        assert_eq!(toy_models().task_family(0), None);
+        // Replication preserves the tags.
+        let r = m.replicate(&[1, 2, 0]).unwrap();
+        assert_eq!(r.task_family(0), m.task_family(0));
     }
 
     #[test]

@@ -86,9 +86,13 @@ pub struct SchedulerConfig {
     pub epoch_secs: f64,
     /// Jobs optimised concurrently; arrivals beyond this wait queued.
     pub max_in_flight: usize,
-    /// Observed chunk-latency samples kept per platform for the
-    /// incremental re-fit; 0 disables re-fitting.
+    /// Observed chunk-latency samples kept per (platform, payoff family)
+    /// for the incremental re-fit; 0 disables re-fitting.
     pub refit_window: usize,
+    /// Re-fit latency models per payoff family (fallback chain: family
+    /// window → platform-pooled → prior). `false` is the ablation switch
+    /// back to the single pooled line per platform.
+    pub family_refit: bool,
     /// Relative throughput drift (vs the models of the last solve) that
     /// forces a re-solve at the next epoch boundary.
     pub resolve_drift: f64,
@@ -113,6 +117,7 @@ impl Default for SchedulerConfig {
             epoch_secs: 600.0,
             max_in_flight: 8,
             refit_window: 64,
+            family_refit: true,
             resolve_drift: 0.15,
             repair_quality: 2.0,
             plan_memo: 256,
@@ -226,6 +231,7 @@ impl JobSpec {
             accuracy,
             payoff_mix,
             step_choices: vec![64],
+            ..GeneratorConfig::default()
         };
         let workload = try_generate(&cfg)?;
         JobSpec::new(workload.tasks, slo)
@@ -997,7 +1003,11 @@ where
     let specs = inner.cluster.specs();
     let cost_models: Vec<CostModel> = specs.iter().map(|s| s.cost_model()).collect();
     let platform_names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
-    let mut fit = OnlineLatencyFit::new(inner.priors.clone(), inner.cfg.refit_window);
+    let mut fit = if inner.cfg.family_refit {
+        OnlineLatencyFit::new(inner.priors.clone(), inner.cfg.refit_window)
+    } else {
+        OnlineLatencyFit::single_line(inner.priors.clone(), inner.cfg.refit_window)
+    };
     let mut warm: Option<Warm> = None;
     let mut stalled = 0usize;
     let econ: Vec<PlatformEcon> = specs
@@ -1055,7 +1065,7 @@ where
         let mut latency = Vec::with_capacity(mu * tau);
         for i in 0..mu {
             for t in &input.tasks {
-                let base = fit.model(i, t.flops_per_path());
+                let base = fit.model(i, t.payoff, t.flops_per_path());
                 // Un-rented platforms stay usable mid-storm, but pay the
                 // rent lead (API/boot) on top of their setup — the planner
                 // steers work onto pre-rented capacity first.
@@ -1071,7 +1081,8 @@ where
             cost_models.clone(),
             input.tasks.iter().map(|t| t.n_sims).collect(),
             platform_names.clone(),
-        );
+        )
+        .with_task_families(input.tasks.iter().map(|t| t.payoff).collect());
 
         // ── Phase 3: warm-reuse, delta-admit, memo, or re-solve. ────────
         let snapshot = fit.snapshot();
@@ -1212,8 +1223,9 @@ where
                         // itself noisy) — observe() drops the non-positive
                         // sample instead of us clamping it into a bogus
                         // near-infinite throughput.
+                        let family = workload_ref.tasks[*task].payoff;
                         let flops = workload_ref.tasks[*task].flops_per_path() * *n as f64;
-                        fit.observe(*platform, flops, latency_secs - setup);
+                        fit.observe(*platform, family, flops, latency_secs - setup);
                         if let Some(reg) = reg {
                             reg.observe(
                                 "exec_chunk_latency_secs",
@@ -1224,8 +1236,9 @@ where
                                 reg.observe(
                                     "exec_model_error_rel",
                                     &format!(
-                                        "platform={},task={task}",
-                                        platform_names[*platform]
+                                        "platform={},task={task},family={}",
+                                        platform_names[*platform],
+                                        family.name()
                                     ),
                                     (predicted - latency_secs).abs() / latency_secs,
                                 );

@@ -5,8 +5,18 @@
 //! Coefficients are fitted from benchmark samples with *weighted* least
 //! squares (§III.A); we use 1/L² weights so relative error is what's
 //! minimised — matching the paper's Fig. 2 evaluation metric.
+//!
+//! [`FamilyLatencyFit`] extends the single line to *per-payoff-family*
+//! coefficients: exotic kernels (LSMC regression, d-asset baskets, Heston's
+//! two draws per step) have per-path costs that differ by large constant
+//! factors a single `L(N)` line cannot express — the β it fits is a
+//! mix-weighted average that over-predicts cheap families and
+//! under-predicts expensive ones. Fitting one line per family (with the
+//! pooled line as fallback for families the benchmark never sampled)
+//! recovers the Fig. 2 error levels on heterogeneous workloads.
 
 use crate::util::stats::{self, LinearFit};
+use crate::workload::option::Payoff;
 
 /// `L(N) = beta*N + gamma`, latencies in seconds, N in simulations.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -71,6 +81,87 @@ impl LatencyModel {
     }
 }
 
+/// Per-payoff-family latency coefficients with a pooled fallback line.
+///
+/// Fitted from `(family, n, latency_secs)` benchmark samples: one WLS line
+/// per family that has enough samples, plus the pooled single line over
+/// everything. [`model`](Self::model) answers with the family line when one
+/// exists and the pooled line otherwise, so callers never lose coverage by
+/// switching to the per-family fit.
+#[derive(Debug, Clone)]
+pub struct FamilyLatencyFit {
+    per_family: [Option<LatencyModel>; Payoff::COUNT],
+    pooled: Option<LatencyModel>,
+}
+
+impl FamilyLatencyFit {
+    /// Fit from `(family, n, latency_secs)` samples. Returns `None` only
+    /// when *no* line — pooled or per-family — is fittable.
+    pub fn fit(samples: &[(Payoff, u64, f64)]) -> Option<FamilyLatencyFit> {
+        let all: Vec<(u64, f64)> = samples.iter().map(|&(_, n, l)| (n, l)).collect();
+        let pooled = LatencyModel::fit(&all);
+        let mut per_family = [None; Payoff::COUNT];
+        for family in Payoff::ALL {
+            let fam: Vec<(u64, f64)> = samples
+                .iter()
+                .filter(|&&(p, _, _)| p == family)
+                .map(|&(_, n, l)| (n, l))
+                .collect();
+            per_family[family.index()] = LatencyModel::fit(&fam);
+        }
+        if pooled.is_none() && per_family.iter().all(Option::is_none) {
+            return None;
+        }
+        Some(FamilyLatencyFit { per_family, pooled })
+    }
+
+    /// The model for `family`: its own fitted line, else the pooled line.
+    pub fn model(&self, family: Payoff) -> Option<&LatencyModel> {
+        self.per_family[family.index()].as_ref().or(self.pooled.as_ref())
+    }
+
+    /// The pooled single-line fit over every sample (the pre-per-family
+    /// behaviour; `None` when the pooled sample set was degenerate).
+    pub fn pooled(&self) -> Option<&LatencyModel> {
+        self.pooled.as_ref()
+    }
+
+    /// Mean relative prediction error over `samples` using the per-family
+    /// models (the Fig. 2 metric, per-family edition). NaN-free: empty
+    /// input or no usable model yields `f64::INFINITY`.
+    pub fn mean_relative_error(&self, samples: &[(Payoff, u64, f64)]) -> f64 {
+        mean_error(samples, |family| self.model(family))
+    }
+
+    /// Mean relative prediction error over `samples` under the pooled
+    /// single line — the baseline the per-family fit is judged against.
+    pub fn pooled_mean_relative_error(&self, samples: &[(Payoff, u64, f64)]) -> f64 {
+        mean_error(samples, |_| self.pooled())
+    }
+}
+
+fn mean_error<'a, F>(samples: &[(Payoff, u64, f64)], model: F) -> f64
+where
+    F: Fn(Payoff) -> Option<&'a LatencyModel>,
+{
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for &(family, n, observed) in samples {
+        match model(family) {
+            Some(m) => {
+                total += m.relative_error(n, observed);
+                count += 1;
+            }
+            None => return f64::INFINITY,
+        }
+    }
+    if count == 0 {
+        f64::INFINITY
+    } else {
+        total / count as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +222,65 @@ mod tests {
     #[should_panic(expected = "beta")]
     fn zero_beta_rejected() {
         LatencyModel::new(0.0, 1.0);
+    }
+
+    /// Synthetic two-family cluster where basket paths cost 4x barrier
+    /// paths (same setup): the deterministic ground truth the per-family
+    /// fit must recover and the single line must not.
+    fn mixed_family_samples() -> Vec<(Payoff, u64, f64)> {
+        let barrier = LatencyModel::new(1e-6, 1.0);
+        let basket = LatencyModel::new(4e-6, 1.0);
+        let mut samples = Vec::new();
+        for i in 1..=12u64 {
+            let n = i * 50_000;
+            samples.push((Payoff::Barrier, n, barrier.predict(n)));
+            samples.push((Payoff::Basket, n, basket.predict(n)));
+        }
+        samples
+    }
+
+    #[test]
+    fn per_family_fit_beats_the_single_line_on_heterogeneous_cost() {
+        let samples = mixed_family_samples();
+        let fit = FamilyLatencyFit::fit(&samples).unwrap();
+        // Each family's line recovers its true beta almost exactly...
+        let barrier = fit.model(Payoff::Barrier).unwrap();
+        let basket = fit.model(Payoff::Basket).unwrap();
+        assert!((barrier.beta - 1e-6).abs() / 1e-6 < 1e-6, "barrier beta {}", barrier.beta);
+        assert!((basket.beta - 4e-6).abs() / 4e-6 < 1e-6, "basket beta {}", basket.beta);
+        // ...while the pooled line is forced between them.
+        let pooled = fit.pooled().unwrap();
+        assert!(pooled.beta > 1.2e-6 && pooled.beta < 3.8e-6, "pooled beta {}", pooled.beta);
+        // The headline claim: per-family mean relative error is far below
+        // the single-line fit's on the same noiseless samples.
+        let per_family_err = fit.mean_relative_error(&samples);
+        let pooled_err = fit.pooled_mean_relative_error(&samples);
+        assert!(per_family_err < 1e-6, "per-family error {per_family_err}");
+        assert!(pooled_err > 0.20, "pooled error {pooled_err}");
+        assert!(per_family_err < pooled_err / 100.0);
+    }
+
+    #[test]
+    fn unsampled_families_fall_back_to_the_pooled_line() {
+        let samples = mixed_family_samples();
+        let fit = FamilyLatencyFit::fit(&samples).unwrap();
+        let heston = fit.model(Payoff::Heston).unwrap();
+        let pooled = fit.pooled().unwrap();
+        assert_eq!(heston.beta, pooled.beta);
+        assert_eq!(heston.gamma, pooled.gamma);
+    }
+
+    #[test]
+    fn family_fit_rejects_fully_degenerate_input() {
+        assert!(FamilyLatencyFit::fit(&[]).is_none());
+        assert!(FamilyLatencyFit::fit(&[(Payoff::European, 10, 1.0)]).is_none());
+        // One fittable family is enough, and it also feeds the pooled line.
+        let ok = FamilyLatencyFit::fit(&[
+            (Payoff::European, 10, 1.0),
+            (Payoff::European, 20, 1.5),
+        ])
+        .unwrap();
+        assert!(ok.model(Payoff::European).is_some());
+        assert!(ok.model(Payoff::Heston).is_some()); // via pooled fallback
     }
 }

@@ -171,8 +171,11 @@ impl MarketSim {
         }
         let storm = self.is_storm(t);
         let family = if storm {
-            const FAMILIES: [Payoff; 3] = [Payoff::European, Payoff::Asian, Payoff::Barrier];
-            Some(FAMILIES[(mix(self.cfg.seed ^ (t as u64)) % 3) as usize])
+            // Every family the workload layer knows, not a hard-coded
+            // subset — new payoff families join the storm rotation
+            // automatically.
+            let pick = mix(self.cfg.seed ^ (t as u64)) % Payoff::ALL.len() as u64;
+            Some(Payoff::ALL[pick as usize])
         } else {
             None
         };

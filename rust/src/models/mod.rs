@@ -14,7 +14,7 @@ pub mod tco;
 
 pub use cost::CostModel;
 pub use forecast::{ArrivalForecaster, Autoscaler, ForecastConfig, PlatformEcon};
-pub use latency::LatencyModel;
+pub use latency::{FamilyLatencyFit, LatencyModel};
 pub use market::{MarketSim, MarketTick, StormConfig};
 pub use online::{OnlineLatencyFit, PlatformPrior};
 pub use tco::{DatacentreModel, TcoInputs};

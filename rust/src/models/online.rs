@@ -8,14 +8,23 @@
 //! the benchmark saw.
 //!
 //! [`OnlineLatencyFit`] keeps a bounded window of work samples per
-//! platform. The throughput estimate is total work over total time across
-//! the window — the work-weighted harmonic mean, which is robust to mixed
-//! chunk sizes — and it degrades gracefully to the prior while a platform
-//! has produced too few samples to trust.
+//! *(platform, payoff family)*. Exotic kernels realise very different
+//! effective FLOP rates on the same silicon (LSMC's regression pass and
+//! basket's Cholesky correlate poorly with the RNG-bound families), so a
+//! single per-platform scalar systematically mis-prices a mixed queue; the
+//! per-family window captures each family's realised rate. The estimate is
+//! total work over total time within the window — the work-weighted
+//! harmonic mean, robust to mixed chunk sizes — and degrades gracefully:
+//! family window (when it has enough samples) → pooled across the
+//! platform's families → the benchmark-derived prior. The
+//! [`single_line`](OnlineLatencyFit::single_line) constructor disables the
+//! family level, reproducing the pre-per-family behaviour for ablation
+//! (`[scheduler] family_refit = false`).
 
 use std::collections::VecDeque;
 
 use crate::models::LatencyModel;
+use crate::workload::option::Payoff;
 
 /// Per-platform prior the fit falls back to before observations arrive:
 /// effective throughput (FLOP/s) and per-stream setup seconds, usually
@@ -28,25 +37,38 @@ pub struct PlatformPrior {
     pub setup_secs: f64,
 }
 
-/// Fewest window samples before the windowed estimate replaces the prior.
+/// Fewest window samples before a windowed estimate replaces its fallback.
 const MIN_SAMPLES: usize = 2;
 
-/// Windowed per-platform throughput re-fit.
+/// Windowed per-(platform, family) throughput re-fit.
 #[derive(Debug, Clone)]
 pub struct OnlineLatencyFit {
-    /// Samples kept per platform; 0 disables re-fitting entirely (the
-    /// priors are then authoritative forever).
+    /// Samples kept per (platform, family) ring; 0 disables re-fitting
+    /// entirely (the priors are then authoritative forever).
     window: usize,
+    /// When false, the family level is bypassed: every estimate is the
+    /// platform-pooled one (the legacy single-line behaviour).
+    per_family: bool,
     priors: Vec<PlatformPrior>,
-    /// Per-platform ring of `(work_flops, work_secs)` observations.
-    samples: Vec<VecDeque<(f64, f64)>>,
+    /// `samples[platform][family]`: ring of `(work_flops, work_secs)`.
+    samples: Vec<[VecDeque<(f64, f64)>; Payoff::COUNT]>,
 }
 
 impl OnlineLatencyFit {
-    /// A fit seeded with one prior per platform. Priors must carry positive
-    /// finite throughput (asserted: they come from fitted or nominal
-    /// models, both of which guarantee it).
+    /// A per-family fit seeded with one prior per platform. Priors must
+    /// carry positive finite throughput (asserted: they come from fitted or
+    /// nominal models, both of which guarantee it).
     pub fn new(priors: Vec<PlatformPrior>, window: usize) -> OnlineLatencyFit {
+        Self::build(priors, window, true)
+    }
+
+    /// The ablation constructor: identical bookkeeping, but every model
+    /// collapses to the platform-pooled single line.
+    pub fn single_line(priors: Vec<PlatformPrior>, window: usize) -> OnlineLatencyFit {
+        Self::build(priors, window, false)
+    }
+
+    fn build(priors: Vec<PlatformPrior>, window: usize, per_family: bool) -> OnlineLatencyFit {
         for (i, p) in priors.iter().enumerate() {
             assert!(
                 p.throughput_flops > 0.0 && p.throughput_flops.is_finite(),
@@ -59,8 +81,11 @@ impl OnlineLatencyFit {
                 p.setup_secs
             );
         }
-        let samples = priors.iter().map(|_| VecDeque::new()).collect();
-        OnlineLatencyFit { window, priors, samples }
+        let samples = priors
+            .iter()
+            .map(|_| std::array::from_fn(|_| VecDeque::new()))
+            .collect();
+        OnlineLatencyFit { window, per_family, priors, samples }
     }
 
     pub fn len(&self) -> usize {
@@ -71,39 +96,71 @@ impl OnlineLatencyFit {
         self.priors.is_empty()
     }
 
-    /// Record one successful chunk: `flops` of work observed to take `secs`
-    /// of *work time* (callers subtract the setup γ from cold chunks).
-    /// Non-positive or non-finite samples are ignored rather than poisoning
-    /// the window.
-    pub fn observe(&mut self, platform: usize, flops: f64, secs: f64) {
+    /// Whether the family level is active (false under
+    /// [`single_line`](Self::single_line)).
+    pub fn is_per_family(&self) -> bool {
+        self.per_family
+    }
+
+    /// Record one successful chunk of `family` work: `flops` observed to
+    /// take `secs` of *work time* (callers subtract the setup γ from cold
+    /// chunks). Non-positive or non-finite samples are ignored rather than
+    /// poisoning the window.
+    pub fn observe(&mut self, platform: usize, family: Payoff, flops: f64, secs: f64) {
         if self.window == 0 {
             return;
         }
         if !(flops > 0.0 && flops.is_finite() && secs > 0.0 && secs.is_finite()) {
             return;
         }
-        let ring = &mut self.samples[platform];
+        let ring = &mut self.samples[platform][family.index()];
         ring.push_back((flops, secs));
         while ring.len() > self.window {
             ring.pop_front();
         }
     }
 
-    /// Current throughput estimate for `platform`, FLOP/s: windowed when
-    /// enough samples exist, the prior otherwise.
-    pub fn throughput(&self, platform: usize) -> f64 {
-        let ring = &self.samples[platform];
+    /// Windowed throughput of one ring, `None` below [`MIN_SAMPLES`].
+    fn ring_throughput(ring: &VecDeque<(f64, f64)>) -> Option<f64> {
         if ring.len() < MIN_SAMPLES {
-            return self.priors[platform].throughput_flops;
+            return None;
         }
         let (flops, secs) = ring
             .iter()
             .fold((0.0f64, 0.0f64), |(f, s), (df, ds)| (f + df, s + ds));
-        if secs > 0.0 {
+        (secs > 0.0).then(|| flops / secs)
+    }
+
+    /// Platform-pooled throughput across every family's window, falling
+    /// back to the prior — the legacy single-line estimate, and what
+    /// [`snapshot`](Self::snapshot)/[`drift`](Self::drift) key on.
+    pub fn throughput(&self, platform: usize) -> f64 {
+        let (flops, secs, count) = self.samples[platform].iter().fold(
+            (0.0f64, 0.0f64, 0usize),
+            |(f, s, c), ring| {
+                let (df, ds) = ring
+                    .iter()
+                    .fold((0.0f64, 0.0f64), |(f2, s2), (a, b)| (f2 + a, s2 + b));
+                (f + df, s + ds, c + ring.len())
+            },
+        );
+        if count >= MIN_SAMPLES && secs > 0.0 {
             flops / secs
         } else {
             self.priors[platform].throughput_flops
         }
+    }
+
+    /// `family`'s realised throughput on `platform` under the fallback
+    /// chain: family window → platform-pooled → prior. Under
+    /// [`single_line`](Self::single_line) the family level is skipped.
+    pub fn family_throughput(&self, platform: usize, family: Payoff) -> f64 {
+        if self.per_family {
+            if let Some(tp) = Self::ring_throughput(&self.samples[platform][family.index()]) {
+                return tp;
+            }
+        }
+        self.throughput(platform)
     }
 
     /// The (prior) per-stream setup estimate for `platform`, seconds.
@@ -111,20 +168,21 @@ impl OnlineLatencyFit {
         self.priors[platform].setup_secs
     }
 
-    /// Latency model for a task with `flops_per_path` FLOPs per simulated
-    /// path on `platform`, under the current throughput estimate.
-    pub fn model(&self, platform: usize, flops_per_path: f64) -> LatencyModel {
-        let beta = (flops_per_path / self.throughput(platform)).max(1e-15);
+    /// Latency model for a `family` task with `flops_per_path` FLOPs per
+    /// simulated path on `platform`, under the current estimates.
+    pub fn model(&self, platform: usize, family: Payoff, flops_per_path: f64) -> LatencyModel {
+        let beta = (flops_per_path / self.family_throughput(platform, family)).max(1e-15);
         LatencyModel::new(beta, self.setup_secs(platform))
     }
 
-    /// All current throughputs — snapshot this at solve time, then compare
-    /// with [`drift`](Self::drift) to decide when a re-solve is due.
+    /// All current pooled throughputs — snapshot this at solve time, then
+    /// compare with [`drift`](Self::drift) to decide when a re-solve is
+    /// due.
     pub fn snapshot(&self) -> Vec<f64> {
         (0..self.len()).map(|i| self.throughput(i)).collect()
     }
 
-    /// Largest relative throughput shift of any platform vs a prior
+    /// Largest relative pooled-throughput shift of any platform vs a prior
     /// [`snapshot`](Self::snapshot) (0.0 = models unchanged).
     pub fn drift(&self, snapshot: &[f64]) -> f64 {
         debug_assert_eq!(snapshot.len(), self.len());
@@ -152,9 +210,9 @@ mod tests {
     fn falls_back_to_prior_until_samples_arrive() {
         let mut fit = OnlineLatencyFit::new(priors(), 8);
         assert_eq!(fit.throughput(0), 1e9);
-        fit.observe(0, 1e9, 2.0); // one sample is not enough
+        fit.observe(0, Payoff::European, 1e9, 2.0); // one sample is not enough
         assert_eq!(fit.throughput(0), 1e9);
-        fit.observe(0, 1e9, 2.0);
+        fit.observe(0, Payoff::European, 1e9, 2.0);
         assert!((fit.throughput(0) - 5e8).abs() / 5e8 < 1e-12);
         // Platform 1 untouched.
         assert_eq!(fit.throughput(1), 4e9);
@@ -166,12 +224,12 @@ mod tests {
         // Fill with on-prior samples, then shift to half speed: the window
         // forgets the old regime.
         for _ in 0..4 {
-            fit.observe(0, 1e9, 1.0);
+            fit.observe(0, Payoff::European, 1e9, 1.0);
         }
         let snap = fit.snapshot();
         assert!((fit.throughput(0) - 1e9).abs() < 1.0);
         for _ in 0..4 {
-            fit.observe(0, 1e9, 2.0);
+            fit.observe(0, Payoff::European, 1e9, 2.0);
         }
         assert!((fit.throughput(0) - 5e8).abs() < 1.0);
         assert!((fit.drift(&snap) - 0.5).abs() < 1e-9);
@@ -181,7 +239,7 @@ mod tests {
     fn window_zero_disables_refit() {
         let mut fit = OnlineLatencyFit::new(priors(), 0);
         for _ in 0..10 {
-            fit.observe(0, 1e9, 10.0);
+            fit.observe(0, Payoff::European, 1e9, 10.0);
         }
         assert_eq!(fit.throughput(0), 1e9);
         assert_eq!(fit.drift(&fit.snapshot()), 0.0);
@@ -190,25 +248,64 @@ mod tests {
     #[test]
     fn bad_samples_are_ignored() {
         let mut fit = OnlineLatencyFit::new(priors(), 4);
-        fit.observe(0, -1.0, 1.0);
-        fit.observe(0, 1.0, 0.0);
-        fit.observe(0, f64::NAN, 1.0);
-        fit.observe(0, 1.0, f64::INFINITY);
+        fit.observe(0, Payoff::European, -1.0, 1.0);
+        fit.observe(0, Payoff::European, 1.0, 0.0);
+        fit.observe(0, Payoff::European, f64::NAN, 1.0);
+        fit.observe(0, Payoff::European, 1.0, f64::INFINITY);
         assert_eq!(fit.throughput(0), 1e9);
     }
 
     #[test]
     fn models_scale_with_observed_throughput() {
         let mut fit = OnlineLatencyFit::new(priors(), 4);
-        let before = fit.model(0, 1000.0);
+        let before = fit.model(0, Payoff::European, 1000.0);
         assert!((before.beta - 1e-6).abs() < 1e-15);
         assert_eq!(before.gamma, 2.0);
-        // A 5x straggler doubles nothing but beta.
+        // A 5x straggler changes nothing but beta.
         for _ in 0..4 {
-            fit.observe(0, 1e9, 5.0);
+            fit.observe(0, Payoff::European, 1e9, 5.0);
         }
-        let after = fit.model(0, 1000.0);
+        let after = fit.model(0, Payoff::European, 1000.0);
         assert!((after.beta - 5e-6).abs() < 1e-12);
         assert_eq!(after.gamma, 2.0);
+    }
+
+    #[test]
+    fn families_are_tracked_independently() {
+        // Barrier runs on-prior; basket realises a quarter of the FLOP rate
+        // (4x cost per path). The family estimates must separate while the
+        // pooled one blends.
+        let mut fit = OnlineLatencyFit::new(priors(), 8);
+        for _ in 0..4 {
+            fit.observe(0, Payoff::Barrier, 1e9, 1.0);
+            fit.observe(0, Payoff::Basket, 1e9, 4.0);
+        }
+        assert!((fit.family_throughput(0, Payoff::Barrier) - 1e9).abs() < 1.0);
+        assert!((fit.family_throughput(0, Payoff::Basket) - 2.5e8).abs() < 1.0);
+        let pooled = fit.throughput(0);
+        assert!(pooled > 2.5e8 && pooled < 1e9, "pooled {pooled}");
+        // Unsampled families fall back to the pooled estimate.
+        assert_eq!(fit.family_throughput(0, Payoff::Heston), pooled);
+        // And the per-family models price the same FLOPs differently.
+        let cheap = fit.model(0, Payoff::Barrier, 1000.0);
+        let dear = fit.model(0, Payoff::Basket, 1000.0);
+        assert!((dear.beta / cheap.beta - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_line_mode_ignores_family_distinctions() {
+        let mut fit = OnlineLatencyFit::single_line(priors(), 8);
+        assert!(!fit.is_per_family());
+        for _ in 0..4 {
+            fit.observe(0, Payoff::Barrier, 1e9, 1.0);
+            fit.observe(0, Payoff::Basket, 1e9, 4.0);
+        }
+        let pooled = fit.throughput(0);
+        for family in Payoff::ALL {
+            assert_eq!(fit.family_throughput(0, family), pooled, "{family:?}");
+        }
+        let a = fit.model(0, Payoff::Barrier, 1000.0);
+        let b = fit.model(0, Payoff::Basket, 1000.0);
+        assert_eq!(a.beta, b.beta);
     }
 }

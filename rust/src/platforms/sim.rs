@@ -23,7 +23,7 @@ use std::sync::Mutex;
 use crate::pricing::batch::KernelConfig;
 use crate::pricing::mc::PayoffStats;
 use crate::util::rng::{Rng, SplitMix64};
-use crate::workload::option::OptionTask;
+use crate::workload::option::{OptionTask, Payoff};
 
 use super::spec::PlatformSpec;
 use super::{ChunkCtx, ExecOutcome, Platform};
@@ -72,6 +72,11 @@ pub struct SimPlatform {
     /// Hidden per-platform throughput factor (the benchmarker must discover
     /// its effect; it is not exposed).
     hidden_factor: f64,
+    /// Hidden *per-payoff-family* throughput multipliers (all 1.0 by
+    /// default): how much slower/faster this platform runs each kernel
+    /// family relative to its pooled rate. The per-family re-fit harnesses
+    /// pin these to make one family cost a known multiple of another.
+    family_factors: [f64; Payoff::COUNT],
     /// Hidden setup-time factor.
     gamma_true: f64,
     noise_rng: Mutex<Rng>,
@@ -86,7 +91,15 @@ impl SimPlatform {
         let hidden_factor = 1.0 + cfg.hidden_spread * (2.0 * rng.f64() - 1.0);
         let gamma_true = spec.setup_secs * (1.0 + 0.2 * (2.0 * rng.f64() - 1.0));
         let bench_salt = rng.next_u64();
-        SimPlatform { spec, cfg, hidden_factor, gamma_true, noise_rng: Mutex::new(rng), bench_salt }
+        SimPlatform {
+            spec,
+            cfg,
+            hidden_factor,
+            family_factors: [1.0; Payoff::COUNT],
+            gamma_true,
+            noise_rng: Mutex::new(rng),
+            bench_salt,
+        }
     }
 
     /// As [`new`](Self::new), but with the hidden throughput factor pinned —
@@ -104,10 +117,30 @@ impl SimPlatform {
         p
     }
 
+    /// As [`new`](Self::new), but with hidden per-family throughput
+    /// multipliers pinned — the per-family re-fit harnesses use this to
+    /// make e.g. basket paths cost a known multiple of barrier paths in a
+    /// way no single per-platform line can model.
+    pub fn with_family_factors(
+        spec: PlatformSpec,
+        cfg: SimConfig,
+        seed: u64,
+        family_factors: [f64; Payoff::COUNT],
+    ) -> SimPlatform {
+        for (i, f) in family_factors.iter().enumerate() {
+            assert!(*f > 0.0 && f.is_finite(), "family {i}: invalid factor {f}");
+        }
+        let mut p = SimPlatform::new(spec, cfg, seed);
+        p.family_factors = family_factors;
+        p
+    }
+
     /// Ground-truth β for a task on this platform, seconds per path.
     /// Private to the simulator — exposed only for white-box tests.
     pub(crate) fn beta_true(&self, task: &OptionTask) -> f64 {
-        task.flops_per_path() / (self.spec.app_gflops * 1e9) * self.hidden_factor
+        task.flops_per_path() / (self.spec.app_gflops * 1e9)
+            * self.hidden_factor
+            * self.family_factors[task.payoff.index()]
     }
 
     #[cfg_attr(not(test), allow(dead_code))]
@@ -291,6 +324,25 @@ mod tests {
         let slow = SimPlatform::with_hidden_factor(gpu_spec(), SimConfig::exact(), 3, 5.0);
         let t = task();
         assert!((slow.beta_true(&t) / base.beta_true(&t) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn family_factors_scale_only_their_family() {
+        use crate::workload::option::Payoff;
+        let mut factors = [1.0; Payoff::COUNT];
+        factors[Payoff::Basket.index()] = 4.0;
+        let base = SimPlatform::new(gpu_spec(), SimConfig::exact(), 3);
+        let skewed =
+            SimPlatform::with_family_factors(gpu_spec(), SimConfig::exact(), 3, factors);
+        let mut barrier = task();
+        barrier.payoff = Payoff::Barrier;
+        barrier.steps = 32;
+        let mut basket = barrier.clone();
+        basket.payoff = Payoff::Basket;
+        basket.assets = 4;
+        basket.correlation = 0.5;
+        assert_eq!(skewed.beta_true(&barrier), base.beta_true(&barrier));
+        assert!((skewed.beta_true(&basket) / base.beta_true(&basket) - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Correlated multi-asset basket call via Cholesky-factored paths.
+//!
+//! Prices an equally-weighted call on `d = task.assets` identical lognormal
+//! assets (common spot/vol) under pairwise equicorrelation
+//! `ρ = task.correlation`. Each step draws `d` independent Threefry normals
+//! (counter sub-index `step·d + a`, staying inside the [`STEP_BITS`]
+//! budget — validated per task) and correlates them through the
+//! lower-triangular Cholesky factor `L` of the equicorrelation matrix:
+//! `z = L·ε` is standard normal per asset with the required cross-asset
+//! correlation.
+//!
+//! Greeks are pathwise (the basket payoff is a.s. differentiable): delta
+//! `1{B>K}·B/S₀` (every asset scales with the common spot), vega
+//! `1{B>K}·(1/d)·Σ_a Sᵀ_a·(√dt·W_a − σT)` with `W_a` the running sum of
+//! asset `a`'s correlated normals.
+
+use crate::util::rng::threefry_normal;
+use crate::workload::option::{OptionTask, Payoff, MAX_BASKET_ASSETS};
+
+use super::mc::{PayoffStats, STEP_BITS};
+
+const MAX_D: usize = MAX_BASKET_ASSETS as usize;
+
+/// Lower-triangular Cholesky factor of the `d×d` equicorrelation matrix
+/// (ones on the diagonal, `rho` off it), computed in f64 and rounded to the
+/// kernels' f32 once. Panics on infeasible `rho` (validation rejects
+/// `rho <= -1/(d-1)` long before execution).
+pub(crate) fn equicorrelation_cholesky(d: usize, rho: f64) -> [[f32; MAX_D]; MAX_D] {
+    assert!(d >= 1 && d <= MAX_D);
+    let mut a = [[0.0f64; MAX_D]; MAX_D];
+    for (i, row) in a.iter_mut().enumerate().take(d) {
+        for (j, v) in row.iter_mut().enumerate().take(d) {
+            *v = if i == j { 1.0 } else { rho };
+        }
+    }
+    let mut l = [[0.0f64; MAX_D]; MAX_D];
+    for i in 0..d {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                assert!(s > 0.0, "equicorrelation rho={rho} not positive-definite for d={d}");
+                l[i][j] = s.sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    let mut lf = [[0.0f32; MAX_D]; MAX_D];
+    for i in 0..d {
+        for j in 0..=i {
+            lf[i][j] = l[i][j] as f32;
+        }
+    }
+    lf
+}
+
+/// Simulate `n` basket paths at counter `offset` — same counter bijection
+/// as [`mc::simulate`](super::mc::simulate) with per-path sub-draws
+/// `step·d + a`, so chunked execution composes to identical statistics.
+pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStats {
+    assert_eq!(task.payoff, Payoff::Basket, "basket kernel requires a Basket task");
+    let d = task.assets as usize;
+    assert!((2..=MAX_D).contains(&d), "task {}: basket dimension {d}", task.id);
+    let words = task.steps as u64 * task.assets as u64;
+    assert!(
+        words < (1 << STEP_BITS),
+        "task {}: {words} counter words per path exceed the 2^{STEP_BITS} budget",
+        task.id
+    );
+    let chol = equicorrelation_cholesky(d, task.correlation);
+    let k0 = task.id as u32;
+    let k1 = seed;
+    let ctr = |p: u32| -> (u32, u32) {
+        let g = offset.wrapping_add(p as u64);
+        (g as u32, ((g >> 32) as u32) << STEP_BITS)
+    };
+    let steps = task.steps;
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let dt = t / steps as f32;
+    let drift = (r - 0.5 * sigma * sigma) * dt;
+    let vol = sigma * dt.sqrt();
+    let sqrt_dt = dt.sqrt();
+    let df = d as f32;
+    let mut sum = 0.0f64;
+    let mut sum_sq = 0.0f64;
+    let mut delta_sum = 0.0f64;
+    let mut vega_sum = 0.0f64;
+    for p in 0..n {
+        let (c0, hi) = ctr(p);
+        let mut log_s = [s0.ln(); MAX_D];
+        // Pathwise-vega state: running correlated-normal sum per asset.
+        let mut w = [0.0f32; MAX_D];
+        let mut eps = [0.0f32; MAX_D];
+        for step in 0..steps {
+            for (a, e) in eps.iter_mut().enumerate().take(d) {
+                *e = threefry_normal(k0, k1, c0, hi | (step * d as u32 + a as u32));
+            }
+            for a in 0..d {
+                let mut z = 0.0f32;
+                for b in 0..=a {
+                    z += chol[a][b] * eps[b];
+                }
+                log_s[a] += drift + vol * z;
+                w[a] += z;
+            }
+        }
+        let mut basket = 0.0f32;
+        let mut vacc = 0.0f32;
+        for a in 0..d {
+            let st = log_s[a].exp();
+            basket += st;
+            vacc += st * (sqrt_dt * w[a] - sigma * t);
+        }
+        basket /= df;
+        let payoff = (basket - k).max(0.0) as f64;
+        sum += payoff;
+        sum_sq += payoff * payoff;
+        if basket > k {
+            delta_sum += (basket / s0) as f64;
+            vega_sum += (vacc / df) as f64;
+        }
+    }
+    PayoffStats { sum, sum_sq, delta_sum, vega_sum, n: n as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pricing::blackscholes;
+    use crate::pricing::mc::combine;
+
+    fn basket() -> OptionTask {
+        OptionTask {
+            id: 5,
+            payoff: Payoff::Basket,
+            spot: 100.0,
+            strike: 105.0,
+            rate: 0.05,
+            sigma: 0.25,
+            maturity: 1.0,
+            steps: 16,
+            assets: 4,
+            correlation: 0.5,
+            ..OptionTask::default()
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs_equicorrelation() {
+        for (d, rho) in [(2, 0.8), (4, 0.5), (8, -0.1)] {
+            let l = equicorrelation_cholesky(d, rho);
+            for i in 0..d {
+                for j in 0..d {
+                    let mut v = 0.0f64;
+                    for k in 0..d {
+                        v += l[i][k] as f64 * l[j][k] as f64;
+                    }
+                    let want = if i == j { 1.0 } else { rho };
+                    assert!((v - want).abs() < 1e-6, "d={d} rho={rho} [{i}][{j}]: {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_is_exactly_additive() {
+        let t = basket();
+        let whole = simulate(&t, 1, 0, 4096);
+        let lo = simulate(&t, 1, 0, 1000);
+        let hi = simulate(&t, 1, 1000, 3096);
+        let merged = lo.merge(&hi);
+        assert!((whole.sum - merged.sum).abs() < 1e-9 * whole.sum.abs().max(1.0));
+        assert!((whole.sum_sq - merged.sum_sq).abs() < 1e-9 * whole.sum_sq.abs().max(1.0));
+        assert_eq!(whole.n, merged.n);
+    }
+
+    #[test]
+    fn full_correlation_degenerates_to_single_asset() {
+        // rho -> 1: every asset follows the same path, so the basket call
+        // is just a European call (cross-checked against Black-Scholes).
+        let mut t = basket();
+        t.correlation = 0.999_999;
+        let est = combine(&simulate(&t, 9, 0, 1 << 15), t.discount());
+        let eur = blackscholes::call(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!(
+            (est.price - eur).abs() < 4.0 * est.std_error + 0.05,
+            "mc {} ± {} vs eur {eur}",
+            est.price,
+            est.std_error
+        );
+    }
+
+    #[test]
+    fn diversification_cheapens_the_otm_call() {
+        // Lower correlation shrinks basket variance, cheapening the OTM
+        // call — the qualitative ordering the closed forms predict.
+        let mut t = basket();
+        t.correlation = 0.1;
+        let lo = combine(&simulate(&t, 3, 0, 1 << 15), t.discount()).price;
+        t.correlation = 0.8;
+        let hi = combine(&simulate(&t, 3, 0, 1 << 15), t.discount()).price;
+        assert!(lo < hi, "rho=0.1 {lo} vs rho=0.8 {hi}");
+    }
+}

@@ -9,10 +9,10 @@
 //! (`python/compile/kernels/mc.py`): a block of `N` independent paths
 //! advances through the step loop together, with the Threefry counters,
 //! Box-Muller normals and payoff state (log-spot, Asian accumulator,
-//! Barrier alive-mask) held in fixed-size per-lane arrays the compiler can
-//! autovectorise. Randomness dominates the work (§IV.A.1), and Threefry is
-//! embarrassingly SIMD-friendly — lanes share a key and differ only in
-//! counters.
+//! Barrier alive-mask, basket asset vector, Heston variance) held in
+//! fixed-size per-lane arrays the compiler can autovectorise. Randomness
+//! dominates the work (§IV.A.1), and Threefry is embarrassingly
+//! SIMD-friendly — lanes share a key and differ only in counters.
 //!
 //! **Bit-parity contract.** Batched results are *bit-identical* to the
 //! scalar path, not merely close:
@@ -22,14 +22,20 @@
 //!   as [`mc::simulate`] does (see [`STEP_BITS`]);
 //! * same per-path f32 rounding — each lane applies the identical sequence
 //!   of f32 operations the scalar loop applies to that path;
-//! * same merge order — block payoffs reduce into the f64
-//!   [`PayoffStats`] accumulators in ascending path order, so the f64
-//!   additions happen in exactly the scalar loop's sequence.
+//! * same merge order — block payoffs (and Greek estimators) reduce into
+//!   the f64 [`PayoffStats`] accumulators in ascending path order, so the
+//!   f64 additions happen in exactly the scalar loop's sequence.
 //!
 //! A ragged tail (`n` not a multiple of the lane width) computes a full
 //! block but folds only the live lanes into the sums; the dead lanes'
 //! counters belong to neighbouring chunks, and their discarded samples
 //! cannot bias anything (counter-based RNG carries no state).
+//!
+//! **Family coverage.** European/Asian/Barrier/Basket/Heston have lane
+//! formulations (independent paths, per-lane state). American (LSMC) does
+//! not — its regression pass couples paths across the chunk — so the
+//! batched entry points route it to the scalar kernel, which is the oracle
+//! anyway; results stay bit-identical by construction.
 //!
 //! The scalar path is kept as the differential oracle:
 //! `rust/tests/pricing_batch.rs` holds `simulate_batch == simulate`
@@ -40,8 +46,9 @@
 
 use crate::api::error::{CloudshapesError, Result};
 use crate::util::rng::threefry_normal_lanes;
-use crate::workload::option::{OptionTask, Payoff};
+use crate::workload::option::{OptionTask, Payoff, MAX_BASKET_ASSETS};
 
+use super::basket::equicorrelation_cholesky;
 use super::mc::{self, PayoffStats, STEP_BITS};
 
 /// Default lane width. 8 × u32 fills a 256-bit vector register — wide
@@ -127,14 +134,28 @@ fn lane_counters<const N: usize>(base: u64) -> ([u32; N], [u32; N]) {
     (c0, hi)
 }
 
-/// Fold the first `live` lanes of a block's payoffs into the f64 sums in
-/// ascending path order — the exact addition sequence of the scalar loop.
+/// Accumulator quartet the lane blocks fold into.
+#[derive(Default)]
+struct Acc {
+    sum: f64,
+    sum_sq: f64,
+    delta: f64,
+    vega: f64,
+}
+
+/// Fold the first `live` lanes of a block's payoffs and per-path Greek
+/// estimators into the f64 sums in ascending path order — the exact
+/// addition sequence of the scalar loop. (The scalar loop skips the Greek
+/// add for OTM paths; adding the `0.0` the dead branch would have added is
+/// bit-identical for finite accumulators.)
 #[inline]
-fn reduce(pay: &[f32], live: usize, sum: &mut f64, sum_sq: &mut f64) {
-    for &p in &pay[..live] {
-        let x = p as f64;
-        *sum += x;
-        *sum_sq += x * x;
+fn reduce(pay: &[f32], del: &[f64], veg: &[f64], live: usize, acc: &mut Acc) {
+    for i in 0..live {
+        let x = pay[i] as f64;
+        acc.sum += x;
+        acc.sum_sq += x * x;
+        acc.delta += del[i];
+        acc.vega += veg[i];
     }
 }
 
@@ -147,16 +168,21 @@ pub fn simulate_lanes<const N: usize>(
     offset: u64,
     n: u32,
 ) -> PayoffStats {
+    // LSMC's cross-path regression has no independent-lane formulation;
+    // the scalar kernel is the (only, and oracle) implementation.
+    if task.payoff == Payoff::American {
+        return mc::simulate(task, seed, offset, n);
+    }
     let k0 = task.id as u32;
     let k1 = seed;
     // Same hard counter-layout check as the scalar oracle (workload
     // validation rejects such tasks long before execution; this is the
     // kernel-level backstop).
+    let words = task.payoff.counter_words_per_path(task.steps, task.assets);
     assert!(
-        task.steps < (1 << STEP_BITS),
-        "task {}: {} steps exceed the counter layout's 2^{STEP_BITS} budget",
-        task.id,
-        task.steps
+        words < (1 << STEP_BITS),
+        "task {}: {words} counter words per path exceed the 2^{STEP_BITS} budget",
+        task.id
     );
     let (s0, k, r, sigma, t) = (
         task.spot as f32,
@@ -165,23 +191,30 @@ pub fn simulate_lanes<const N: usize>(
         task.sigma as f32,
         task.maturity as f32,
     );
-    let mut sum = 0.0f64;
-    let mut sum_sq = 0.0f64;
+    let mut acc2 = Acc::default();
+    let acc = &mut acc2;
     let mut done: u32 = 0;
     match task.payoff {
         Payoff::European => {
             let drift = (r - 0.5 * sigma * sigma) * t;
             let vol = sigma * t.sqrt();
+            let sqrt_t = t.sqrt();
             while done < n {
                 let live = ((n - done) as usize).min(N);
                 let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
                 let z = threefry_normal_lanes(k0, k1, c0, hi);
                 let mut pay = [0.0f32; N];
+                let mut del = [0.0f64; N];
+                let mut veg = [0.0f64; N];
                 for i in 0..N {
                     let st = s0 * (drift + vol * z[i]).exp();
                     pay[i] = (st - k).max(0.0);
+                    if st > k {
+                        del[i] = (st / s0) as f64;
+                        veg[i] = (st * (sqrt_t * z[i] - sigma * t)) as f64;
+                    }
                 }
-                reduce(&pay, live, &mut sum, &mut sum_sq);
+                reduce(&pay, &del, &veg, live, acc);
                 done += live as u32;
             }
         }
@@ -190,11 +223,14 @@ pub fn simulate_lanes<const N: usize>(
             let dt = t / steps as f32;
             let drift = (r - 0.5 * sigma * sigma) * dt;
             let vol = sigma * dt.sqrt();
+            let sqrt_dt = dt.sqrt();
             while done < n {
                 let live = ((n - done) as usize).min(N);
                 let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
                 let mut log_s = [s0.ln(); N];
-                let mut acc = [0.0f32; N];
+                let mut acc_s = [0.0f32; N];
+                let mut w = [0.0f32; N];
+                let mut vacc = [0.0f32; N];
                 for step in 0..steps {
                     let mut c1 = [0u32; N];
                     for i in 0..N {
@@ -203,14 +239,24 @@ pub fn simulate_lanes<const N: usize>(
                     let z = threefry_normal_lanes(k0, k1, c0, c1);
                     for i in 0..N {
                         log_s[i] += drift + vol * z[i];
-                        acc[i] += log_s[i].exp();
+                        acc_s[i] += log_s[i].exp();
+                        w[i] += z[i];
+                        vacc[i] +=
+                            log_s[i].exp() * (sqrt_dt * w[i] - sigma * (dt * (step + 1) as f32));
                     }
                 }
                 let mut pay = [0.0f32; N];
+                let mut del = [0.0f64; N];
+                let mut veg = [0.0f64; N];
                 for i in 0..N {
-                    pay[i] = ((acc[i] / steps as f32) - k).max(0.0);
+                    let avg = acc_s[i] / steps as f32;
+                    pay[i] = (avg - k).max(0.0);
+                    if avg > k {
+                        del[i] = (avg / s0) as f64;
+                        veg[i] = (vacc[i] / steps as f32) as f64;
+                    }
                 }
-                reduce(&pay, live, &mut sum, &mut sum_sq);
+                reduce(&pay, &del, &veg, live, acc);
                 done += live as u32;
             }
         }
@@ -220,11 +266,15 @@ pub fn simulate_lanes<const N: usize>(
             let dt = t / steps as f32;
             let drift = (r - 0.5 * sigma * sigma) * dt;
             let vol = sigma * dt.sqrt();
+            let sqrt_dt = dt.sqrt();
+            let lr_denom = s0 * sigma * sqrt_dt;
             while done < n {
                 let live = ((n - done) as usize).min(N);
                 let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
                 let mut log_s = [s0.ln(); N];
                 let mut alive = [s0 < barrier; N];
+                let mut z1 = [0.0f32; N];
+                let mut score_v = [0.0f32; N];
                 for step in 0..steps {
                     let mut c1 = [0u32; N];
                     for i in 0..N {
@@ -232,6 +282,10 @@ pub fn simulate_lanes<const N: usize>(
                     }
                     let z = threefry_normal_lanes(k0, k1, c0, c1);
                     for i in 0..N {
+                        if step == 0 {
+                            z1[i] = z[i];
+                        }
+                        score_v[i] += (z[i] * z[i] - 1.0) / sigma - z[i] * sqrt_dt;
                         log_s[i] += drift + vol * z[i];
                         // `&` (not `&&`): branch-free per lane; value-equal
                         // to the scalar short-circuit since exp() is pure.
@@ -239,15 +293,141 @@ pub fn simulate_lanes<const N: usize>(
                     }
                 }
                 let mut pay = [0.0f32; N];
+                let mut del = [0.0f64; N];
+                let mut veg = [0.0f64; N];
                 for i in 0..N {
                     pay[i] = if alive[i] { (log_s[i].exp() - k).max(0.0) } else { 0.0 };
+                    let payoff = pay[i] as f64;
+                    del[i] = payoff * (z1[i] / lr_denom) as f64;
+                    veg[i] = payoff * score_v[i] as f64;
                 }
-                reduce(&pay, live, &mut sum, &mut sum_sq);
+                reduce(&pay, &del, &veg, live, acc);
                 done += live as u32;
             }
         }
+        Payoff::Basket => {
+            const MAX_D: usize = MAX_BASKET_ASSETS as usize;
+            let d = task.assets as usize;
+            let chol = equicorrelation_cholesky(d, task.correlation);
+            let steps = task.steps;
+            let dt = t / steps as f32;
+            let drift = (r - 0.5 * sigma * sigma) * dt;
+            let vol = sigma * dt.sqrt();
+            let sqrt_dt = dt.sqrt();
+            let df = d as f32;
+            while done < n {
+                let live = ((n - done) as usize).min(N);
+                let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
+                let mut log_s = [[s0.ln(); MAX_D]; N];
+                let mut w = [[0.0f32; MAX_D]; N];
+                let mut eps = [[0.0f32; MAX_D]; N];
+                for step in 0..steps {
+                    for a in 0..d {
+                        let mut c1 = [0u32; N];
+                        for i in 0..N {
+                            c1[i] = hi[i] | (step * d as u32 + a as u32);
+                        }
+                        let z = threefry_normal_lanes(k0, k1, c0, c1);
+                        for i in 0..N {
+                            eps[i][a] = z[i];
+                        }
+                    }
+                    for i in 0..N {
+                        for a in 0..d {
+                            let mut z = 0.0f32;
+                            for b in 0..=a {
+                                z += chol[a][b] * eps[i][b];
+                            }
+                            log_s[i][a] += drift + vol * z;
+                            w[i][a] += z;
+                        }
+                    }
+                }
+                let mut pay = [0.0f32; N];
+                let mut del = [0.0f64; N];
+                let mut veg = [0.0f64; N];
+                for i in 0..N {
+                    let mut basket = 0.0f32;
+                    let mut vacc = 0.0f32;
+                    for a in 0..d {
+                        let st = log_s[i][a].exp();
+                        basket += st;
+                        vacc += st * (sqrt_dt * w[i][a] - sigma * t);
+                    }
+                    basket /= df;
+                    pay[i] = (basket - k).max(0.0);
+                    if basket > k {
+                        del[i] = (basket / s0) as f64;
+                        veg[i] = (vacc / df) as f64;
+                    }
+                }
+                reduce(&pay, &del, &veg, live, acc);
+                done += live as u32;
+            }
+        }
+        Payoff::Heston => {
+            let steps = task.steps;
+            let (kappa, theta, xi, v0, rho) = (
+                task.kappa as f32,
+                task.theta as f32,
+                task.xi as f32,
+                task.v0 as f32,
+                task.correlation as f32,
+            );
+            let dt = t / steps as f32;
+            let rho_perp = (1.0 - rho * rho).sqrt();
+            while done < n {
+                let live = ((n - done) as usize).min(N);
+                let (c0, hi) = lane_counters::<N>(offset.wrapping_add(done as u64));
+                let mut log_s = [s0.ln(); N];
+                let mut v = [v0; N];
+                let mut dv = [1.0f32; N];
+                let mut g = [0.0f32; N];
+                for step in 0..steps {
+                    let mut c1a = [0u32; N];
+                    let mut c1b = [0u32; N];
+                    for i in 0..N {
+                        c1a[i] = hi[i] | (2 * step);
+                        c1b[i] = hi[i] | (2 * step + 1);
+                    }
+                    let zs = threefry_normal_lanes(k0, k1, c0, c1a);
+                    let z2 = threefry_normal_lanes(k0, k1, c0, c1b);
+                    for i in 0..N {
+                        let z_v = rho * zs[i] + rho_perp * z2[i];
+                        let vp = v[i].max(0.0);
+                        let sq = (vp * dt).sqrt();
+                        let ind = if v[i] > 0.0 { 1.0f32 } else { 0.0 };
+                        let dsq = if sq > 0.0 { ind * dv[i] * dt / (2.0 * sq) } else { 0.0 };
+                        log_s[i] += (r - 0.5 * vp) * dt + sq * zs[i];
+                        g[i] += -0.5 * ind * dv[i] * dt + zs[i] * dsq;
+                        v[i] += kappa * (theta - vp) * dt + xi * sq * z_v;
+                        dv[i] += -kappa * ind * dv[i] * dt + xi * z_v * dsq;
+                    }
+                }
+                let mut pay = [0.0f32; N];
+                let mut del = [0.0f64; N];
+                let mut veg = [0.0f64; N];
+                for i in 0..N {
+                    let st = log_s[i].exp();
+                    pay[i] = (st - k).max(0.0);
+                    if st > k {
+                        del[i] = (st / s0) as f64;
+                        veg[i] = (st * g[i] * 2.0 * v0.sqrt()) as f64;
+                    }
+                }
+                reduce(&pay, &del, &veg, live, acc);
+                done += live as u32;
+            }
+        }
+        Payoff::American => unreachable!("routed to the scalar kernel above"),
     }
-    PayoffStats { sum, sum_sq, n: n as u64 }
+    PayoffStats {
+        sum: acc2.sum,
+        sum_sq: acc2.sum_sq,
+        delta_sum: acc2.delta,
+        vega_sum: acc2.vega,
+        n: n as u64,
+    }
 }
 
 #[cfg(test)]
@@ -266,14 +446,19 @@ mod tests {
             maturity: 1.0,
             barrier: 140.0,
             steps: if payoff == Payoff::European { 1 } else { 16 },
-            target_accuracy: 0.01,
-            n_sims: 1 << 18,
+            assets: if payoff == Payoff::Basket { 4 } else { 1 },
+            correlation: match payoff {
+                Payoff::Basket => 0.5,
+                Payoff::Heston => -0.7,
+                _ => 0.0,
+            },
+            ..OptionTask::default()
         }
     }
 
     #[test]
     fn batch_is_bitwise_scalar_per_family() {
-        for payoff in [Payoff::European, Payoff::Asian, Payoff::Barrier] {
+        for payoff in Payoff::ALL {
             let t = task(payoff);
             let a = mc::simulate(&t, 42, 0, 4096);
             let b = simulate_batch(&t, 42, 0, 4096);
@@ -283,20 +468,28 @@ mod tests {
 
     #[test]
     fn ragged_tails_are_bitwise_scalar() {
-        let t = task(Payoff::Asian);
-        for n in [1u32, 3, 7, 8, 9, 100, 1023] {
-            assert_eq!(mc::simulate(&t, 1, 5, n), simulate_batch(&t, 1, 5, n), "n={n}");
+        for payoff in [Payoff::Asian, Payoff::Basket, Payoff::Heston] {
+            let t = task(payoff);
+            for n in [1u32, 3, 7, 8, 9, 100, 1023] {
+                assert_eq!(
+                    mc::simulate(&t, 1, 5, n),
+                    simulate_batch(&t, 1, 5, n),
+                    "{payoff:?} n={n}"
+                );
+            }
         }
     }
 
     #[test]
     fn every_supported_lane_width_agrees() {
-        let t = task(Payoff::Barrier);
-        let oracle = mc::simulate(&t, 9, 100, 333);
-        assert_eq!(simulate_lanes::<4>(&t, 9, 100, 333), oracle);
-        assert_eq!(simulate_lanes::<8>(&t, 9, 100, 333), oracle);
-        assert_eq!(simulate_lanes::<16>(&t, 9, 100, 333), oracle);
-        assert_eq!(simulate_lanes::<32>(&t, 9, 100, 333), oracle);
+        for payoff in [Payoff::Barrier, Payoff::Basket, Payoff::Heston] {
+            let t = task(payoff);
+            let oracle = mc::simulate(&t, 9, 100, 333);
+            assert_eq!(simulate_lanes::<4>(&t, 9, 100, 333), oracle, "{payoff:?}");
+            assert_eq!(simulate_lanes::<8>(&t, 9, 100, 333), oracle, "{payoff:?}");
+            assert_eq!(simulate_lanes::<16>(&t, 9, 100, 333), oracle, "{payoff:?}");
+            assert_eq!(simulate_lanes::<32>(&t, 9, 100, 333), oracle, "{payoff:?}");
+        }
     }
 
     #[test]
@@ -317,6 +510,16 @@ mod tests {
     }
 
     #[test]
+    fn american_routes_to_the_scalar_oracle() {
+        // No lane formulation exists (cross-path regression); the batched
+        // entry points must return the scalar kernel's exact stats.
+        let t = task(Payoff::American);
+        let oracle = mc::simulate(&t, 4, 64, 777);
+        assert_eq!(simulate_batch(&t, 4, 64, 777), oracle);
+        assert_eq!(KernelConfig::default().simulate(&t, 4, 64, 777), oracle);
+    }
+
+    #[test]
     fn zero_paths_is_empty_stats() {
         let t = task(Payoff::European);
         assert_eq!(simulate_batch(&t, 1, 0, 0), PayoffStats::default());
@@ -326,6 +529,14 @@ mod tests {
     fn generated_workload_is_bitwise_scalar() {
         for t in &generate(&GeneratorConfig::small(6, 0.1, 11)).tasks {
             assert_eq!(mc::simulate(t, 1, 0, 2048), simulate_batch(t, 1, 0, 2048), "{t:?}");
+        }
+        // And for an all-exotics mix, which the default config never draws.
+        let cfg = GeneratorConfig {
+            payoff_mix: [0.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+            ..GeneratorConfig::small(6, 0.1, 13)
+        };
+        for t in &generate(&cfg).tasks {
+            assert_eq!(mc::simulate(t, 1, 0, 512), simulate_batch(t, 1, 0, 512), "{t:?}");
         }
     }
 }

@@ -22,6 +22,11 @@ pub fn norm_cdf(x: f64) -> f64 {
     0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
 }
 
+/// Standard normal density.
+pub fn norm_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
 /// Black-Scholes European call price (discounted).
 pub fn call(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
     assert!(s0 > 0.0 && k > 0.0 && sigma > 0.0 && t > 0.0);
@@ -33,6 +38,105 @@ pub fn call(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
 /// Black-Scholes European put price (via put-call parity).
 pub fn put(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
     call(s0, k, r, sigma, t) - s0 + k * (-r * t).exp()
+}
+
+/// Black-Scholes European call delta, `N(d1)` — the closed-form oracle the
+/// pathwise Monte Carlo delta is tested against.
+pub fn call_delta(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
+    let d1 = ((s0 / k).ln() + (r + 0.5 * sigma * sigma) * t) / (sigma * t.sqrt());
+    norm_cdf(d1)
+}
+
+/// Black-Scholes European call vega, `S·φ(d1)·√T`.
+pub fn call_vega(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
+    let d1 = ((s0 / k).ln() + (r + 0.5 * sigma * sigma) * t) / (sigma * t.sqrt());
+    s0 * norm_pdf(d1) * t.sqrt()
+}
+
+/// Black formula on a lognormal forward: `df·(F·N(d1) − K·N(d2))` with
+/// `d1 = (ln(F/K) + s²/2)/s`, `s` the total log-volatility to expiry.
+fn black(fwd: f64, k: f64, s: f64, df: f64) -> f64 {
+    assert!(fwd > 0.0 && k > 0.0 && s > 0.0);
+    let d1 = ((fwd / k).ln() + 0.5 * s * s) / s;
+    let d2 = d1 - s;
+    df * (fwd * norm_cdf(d1) - k * norm_cdf(d2))
+}
+
+/// Closed-form call on the *geometric* mean of `d` identical lognormal
+/// assets (spot `s0`, vol `sigma`) under pairwise equicorrelation `rho` —
+/// a strict lower bound for the arithmetic-basket call the MC kernel
+/// prices (AM–GM), exact in the `rho → 1` limit.
+pub fn geometric_basket_call(
+    s0: f64,
+    k: f64,
+    r: f64,
+    sigma: f64,
+    t: f64,
+    d: u32,
+    rho: f64,
+) -> f64 {
+    assert!(d >= 1);
+    let df = d as f64;
+    // Var[(1/d)·Σ ln Sᵢ] = σ²t·(1 + (d−1)ρ)/d.
+    let var_g = sigma * sigma * t * (1.0 + (df - 1.0) * rho) / df;
+    assert!(var_g > 0.0, "degenerate basket variance");
+    // ln G has the single-asset drift (r − σ²/2)t; the forward of G picks
+    // up the +var_g/2 Itô correction of *its own* (smaller) variance.
+    let fwd = s0 * ((r - 0.5 * sigma * sigma) * t + 0.5 * var_g).exp();
+    black(fwd, k, var_g.sqrt(), (-r * t).exp())
+}
+
+/// Moment-matched (Lévy) lognormal approximation of the *arithmetic*
+/// equally-weighted basket call: matches the basket's first two moments,
+/// accurate to a few tenths of a percent at moderate vols — the
+/// independent oracle `pricing::basket` is tested against.
+pub fn basket_call_moment_matched(
+    s0: f64,
+    k: f64,
+    r: f64,
+    sigma: f64,
+    t: f64,
+    d: u32,
+    rho: f64,
+) -> f64 {
+    assert!(d >= 1);
+    let df = d as f64;
+    let m1 = s0 * (r * t).exp();
+    let v = sigma * sigma * t;
+    // E[B²] = (s0² e^{2rt}/d²)·(d·e^{σ²t} + d(d−1)·e^{ρσ²t}).
+    let m2 = (s0 * s0 * (2.0 * r * t).exp() / (df * df))
+        * (df * v.exp() + df * (df - 1.0) * (rho * v).exp());
+    let s_eff = (m2 / (m1 * m1)).ln().max(1e-30).sqrt();
+    black(m1, k, s_eff, (-r * t).exp())
+}
+
+/// American put via a Cox-Ross-Rubinstein binomial tree with `n` time
+/// steps — the dependency-free early-exercise oracle the LSMC kernel is
+/// tested against. O(n²) time, O(n) space; converges O(1/n).
+pub fn american_put_binomial(s0: f64, k: f64, r: f64, sigma: f64, t: f64, n: u32) -> f64 {
+    assert!(s0 > 0.0 && k > 0.0 && sigma > 0.0 && t > 0.0 && n > 0);
+    let nf = n as usize;
+    let dt = t / n as f64;
+    let u = (sigma * dt.sqrt()).exp();
+    let d = 1.0 / u;
+    let disc = (-r * dt).exp();
+    let p = ((r * dt).exp() - d) / (u - d);
+    assert!((0.0..=1.0).contains(&p), "CRR risk-neutral prob {p} outside [0,1]");
+    // Terminal layer: node j holds S = s0·u^j·d^(n-j).
+    let mut values: Vec<f64> = (0..=nf)
+        .map(|j| {
+            let s = s0 * u.powi(j as i32) * d.powi((nf - j) as i32);
+            (k - s).max(0.0)
+        })
+        .collect();
+    for layer in (0..nf).rev() {
+        for j in 0..=layer {
+            let s = s0 * u.powi(j as i32) * d.powi((layer - j) as i32);
+            let cont = disc * (p * values[j + 1] + (1.0 - p) * values[j]);
+            values[j] = cont.max(k - s);
+        }
+    }
+    values[0]
 }
 
 /// Kemna-Vorst geometric-average Asian call with `m` discrete fixings —
@@ -108,6 +212,65 @@ mod tests {
         let g = geometric_asian_call(100.0, 100.0, 0.05, 0.25, 1.0, 64);
         assert!(g < e);
         assert!(g > 0.0);
+    }
+
+    #[test]
+    fn delta_and_vega_match_finite_differences() {
+        let (s0, k, r, sigma, t) = (100.0, 105.0, 0.05, 0.2, 1.0);
+        let h = 1e-4;
+        let fd_delta = (call(s0 + h, k, r, sigma, t) - call(s0 - h, k, r, sigma, t)) / (2.0 * h);
+        assert!((call_delta(s0, k, r, sigma, t) - fd_delta).abs() < 1e-6);
+        let fd_vega = (call(s0, k, r, sigma + h, t) - call(s0, k, r, sigma - h, t)) / (2.0 * h);
+        assert!((call_vega(s0, k, r, sigma, t) - fd_vega).abs() < 1e-4);
+    }
+
+    #[test]
+    fn geometric_basket_degenerates_to_single_asset() {
+        // d = 1, and d > 1 at rho = 1, are both just one lognormal asset.
+        let e = call(100.0, 95.0, 0.05, 0.3, 1.0);
+        let g1 = geometric_basket_call(100.0, 95.0, 0.05, 0.3, 1.0, 1, 0.0);
+        assert!((e - g1).abs() < 1e-9, "{e} vs {g1}");
+        let g4 = geometric_basket_call(100.0, 95.0, 0.05, 0.3, 1.0, 4, 0.999999);
+        assert!((e - g4).abs() < 1e-3, "{e} vs {g4}");
+    }
+
+    #[test]
+    fn basket_oracles_are_ordered() {
+        // Geometric <= arithmetic (AM-GM), and lower correlation shrinks
+        // basket variance hence the OTM call price.
+        let (s0, k, r, sigma, t) = (100.0, 105.0, 0.05, 0.25, 1.0);
+        let geo = geometric_basket_call(s0, k, r, sigma, t, 4, 0.5);
+        let arith = basket_call_moment_matched(s0, k, r, sigma, t, 4, 0.5);
+        assert!(geo < arith, "{geo} vs {arith}");
+        let lo = basket_call_moment_matched(s0, k, r, sigma, t, 4, 0.1);
+        assert!(lo < arith, "{lo} vs {arith}");
+        // Both collapse to the European call in the rho -> 1 limit.
+        let e = call(s0, k, r, sigma, t);
+        assert!((basket_call_moment_matched(s0, k, r, sigma, t, 4, 0.999999) - e).abs() < 1e-3);
+    }
+
+    #[test]
+    fn binomial_put_converges_to_european_without_early_exercise() {
+        // r = 0 kills the early-exercise premium of an American put, so the
+        // CRR tree must converge to the European closed form. (The pricer
+        // accepts r = 0 even though workload validation wants r > 0.)
+        let (s0, k, sigma, t) = (100.0, 105.0, 0.2, 1.0);
+        let amer = american_put_binomial(s0, k, 1e-12, sigma, t, 2000);
+        let eur = put(s0, k, 1e-12, sigma, t);
+        assert!((amer - eur).abs() < 0.02, "{amer} vs {eur}");
+    }
+
+    #[test]
+    fn binomial_put_carries_early_exercise_premium() {
+        let (s0, k, r, sigma, t) = (100.0, 110.0, 0.05, 0.2, 1.0);
+        let amer = american_put_binomial(s0, k, r, sigma, t, 1000);
+        let eur = put(s0, k, r, sigma, t);
+        assert!(amer > eur + 0.05, "premium missing: {amer} vs {eur}");
+        // And it is bounded by intrinsic + European (crude upper bound).
+        assert!(amer < eur + (k - s0).max(0.0) + 5.0);
+        // Refinement is stable to the third decimal by n=1000.
+        let finer = american_put_binomial(s0, k, r, sigma, t, 2000);
+        assert!((amer - finer).abs() < 5e-3, "{amer} vs {finer}");
     }
 
     #[test]

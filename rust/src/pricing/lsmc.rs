@@ -1,0 +1,323 @@
+//! American put pricing via Longstaff-Schwartz regression Monte Carlo.
+//!
+//! The classic LSMC algorithm regresses continuation values on in-the-money
+//! path states and exercises where intrinsic beats the fit. Done naively it
+//! breaks the executor's chunking contract: the regression couples every
+//! path in a chunk, so two half-chunks would price a *different* option
+//! than one whole chunk.
+//!
+//! This kernel restores chunk-additivity by splitting policy from pricing:
+//!
+//! 1. **Pilot regression** — a fixed block of [`PILOT_PATHS`] paths drawn
+//!    under a *salted* key (`seed ^ PILOT_SALT`, counters from 0) fits the
+//!    per-date continuation polynomials. The policy is therefore a pure
+//!    function of `(task, seed)`: every chunk of the same task recomputes
+//!    bit-identical coefficients, wherever its counter range starts.
+//! 2. **Out-of-sample pricing** — the requested `[offset, offset+n)` paths
+//!    walk forward under the ordinary key and *apply* the frozen policy.
+//!    Using paths disjoint from the regression set also removes the classic
+//!    in-sample look-ahead bias (Longstaff & Schwartz 2001 §1).
+//!
+//! Exercised payoffs are stored forward-compounded to maturity
+//! (`intrinsic·e^{r(T−τ)}`), so the caller's uniform `e^{−rT}` discount in
+//! [`combine`](super::mc::combine) nets to the correct `e^{−rτ}`.
+//!
+//! Greeks use likelihood-ratio estimators (the exercise boundary makes the
+//! payoff non-differentiable pathwise): delta score `z₁/(S₀σ√dt)`, vega
+//! score `Σ_{j≤τ}[(z_j²−1)/σ − z_j√dt]` accumulated up to the exercise date.
+
+use crate::util::rng::threefry_normal;
+use crate::workload::option::{OptionTask, Payoff};
+
+use super::mc::{PayoffStats, STEP_BITS};
+
+/// Pilot paths behind the regression. Fixed (not a config knob): the policy
+/// must be a pure function of `(task, seed)` for chunk-additivity.
+pub const PILOT_PATHS: u32 = 4096;
+
+/// Key salt separating the pilot stream from the pricing stream — the
+/// out-of-sample split that removes LSMC's in-sample bias.
+const PILOT_SALT: u32 = 0xA5A5_5A5A;
+
+/// Quadratic regression basis in moneyness `x = S/K`: `[1, x, x²]`.
+const BASIS: usize = 3;
+
+/// Per-exercise-date continuation-value fit; `None` where too few ITM pilot
+/// paths existed to regress (continuation then wins by default — never
+/// exercising on no evidence is the conservative choice).
+type Policy = Vec<Option<[f64; BASIS]>>;
+
+#[inline]
+fn basis_eval(c: &[f64; BASIS], x: f64) -> f64 {
+    c[0] + c[1] * x + c[2] * x * x
+}
+
+/// Solve the 3×3 normal equations `A·c = b` by Gaussian elimination with
+/// partial pivoting; `None` on (near-)singular systems.
+fn solve3(mut a: [[f64; BASIS]; BASIS], mut b: [f64; BASIS]) -> Option<[f64; BASIS]> {
+    for col in 0..BASIS {
+        let pivot = (col..BASIS).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..BASIS {
+            let f = a[row][col] / a[col][col];
+            for c in col..BASIS {
+                a[row][c] -= f * a[col][c];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; BASIS];
+    for row in (0..BASIS).rev() {
+        let mut acc = b[row];
+        for c in row + 1..BASIS {
+            acc -= a[row][c] * x[c];
+        }
+        x[row] = acc / a[row][row];
+    }
+    if x.iter().all(|v| v.is_finite()) {
+        Some(x)
+    } else {
+        None
+    }
+}
+
+/// Fit the exercise policy from the salted pilot stream — deterministic in
+/// `(task, seed)`, independent of the pricing chunk's counter range.
+fn fit_policy(task: &OptionTask, seed: u32) -> Policy {
+    let k0 = task.id as u32;
+    let k1 = seed ^ PILOT_SALT;
+    let steps = task.steps as usize;
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let dt = t / task.steps as f32;
+    let drift = (r - 0.5 * sigma * sigma) * dt;
+    let vol = sigma * dt.sqrt();
+    // Pilot path matrix: spot at every exercise date (dates 1..=steps map
+    // to rows 0..steps).
+    let np = PILOT_PATHS as usize;
+    let mut spots = vec![0.0f32; np * steps];
+    for p in 0..PILOT_PATHS {
+        let mut log_s = s0.ln();
+        for step in 0..task.steps {
+            let z = threefry_normal(k0, k1, p, step);
+            log_s += drift + vol * z;
+            spots[p as usize * steps + step as usize] = log_s.exp();
+        }
+    }
+    let kf = task.strike;
+    let disc = (-(task.rate) * (task.maturity / task.steps as f64)).exp();
+    // Backward induction in f64: `value[p]` holds the option value at the
+    // current date under the policy fitted so far.
+    let mut value: Vec<f64> = (0..np)
+        .map(|p| (kf - spots[p * steps + steps - 1] as f64).max(0.0))
+        .collect();
+    let mut policy: Policy = vec![None; steps + 1];
+    for date in (1..steps).rev() {
+        // Discount one date back: value of continuing, seen from `date`.
+        for v in value.iter_mut() {
+            *v *= disc;
+        }
+        // Regress continuation on the ITM pilot states.
+        let mut a = [[0.0f64; BASIS]; BASIS];
+        let mut b = [0.0f64; BASIS];
+        let mut itm = 0usize;
+        for p in 0..np {
+            let s = spots[p * steps + (date - 1)] as f64;
+            if s >= kf {
+                continue;
+            }
+            itm += 1;
+            let x = s / kf;
+            let phi = [1.0, x, x * x];
+            for i in 0..BASIS {
+                for j in 0..BASIS {
+                    a[i][j] += phi[i] * phi[j];
+                }
+                b[i] += phi[i] * value[p];
+            }
+        }
+        let coeffs = if itm >= 2 * BASIS { solve3(a, b) } else { None };
+        if let Some(c) = coeffs {
+            // Apply the exercise decision to the pilot values so earlier
+            // dates regress against the improved policy.
+            for p in 0..np {
+                let s = spots[p * steps + (date - 1)] as f64;
+                if s < kf {
+                    let intrinsic = kf - s;
+                    if intrinsic > basis_eval(&c, s / kf) {
+                        value[p] = intrinsic;
+                    }
+                }
+            }
+        }
+        policy[date] = coeffs;
+    }
+    policy
+}
+
+/// Simulate `n` pricing paths of the American put at counter `offset` —
+/// same counter bijection as [`mc::simulate`](super::mc::simulate), so
+/// chunked execution composes to identical statistics.
+pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStats {
+    assert_eq!(task.payoff, Payoff::American, "lsmc kernel requires an American task");
+    assert!(
+        task.steps < (1 << STEP_BITS),
+        "task {}: {} steps exceed the counter layout's 2^{STEP_BITS} budget",
+        task.id,
+        task.steps
+    );
+    let policy = fit_policy(task, seed);
+    let k0 = task.id as u32;
+    let k1 = seed;
+    let ctr = |p: u32| -> (u32, u32) {
+        let g = offset.wrapping_add(p as u64);
+        (g as u32, ((g >> 32) as u32) << STEP_BITS)
+    };
+    let steps = task.steps;
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let dt = t / steps as f32;
+    let drift = (r - 0.5 * sigma * sigma) * dt;
+    let vol = sigma * dt.sqrt();
+    let sqrt_dt = dt.sqrt();
+    let lr_denom = s0 * sigma * sqrt_dt;
+    let kf = task.strike;
+    // Forward-compounding factor per remaining date (f64 — payoff algebra
+    // below the accumulators is f64 like the other kernels' casts).
+    let dtf = task.maturity / steps as f64;
+    let mut sum = 0.0f64;
+    let mut sum_sq = 0.0f64;
+    let mut delta_sum = 0.0f64;
+    let mut vega_sum = 0.0f64;
+    for p in 0..n {
+        let (c0, hi) = ctr(p);
+        let mut log_s = s0.ln();
+        let mut z1 = 0.0f32;
+        let mut score_v = 0.0f32;
+        let mut payoff = 0.0f64;
+        for step in 0..steps {
+            let z = threefry_normal(k0, k1, c0, hi | step);
+            if step == 0 {
+                z1 = z;
+            }
+            score_v += (z * z - 1.0) / sigma - z * sqrt_dt;
+            log_s += drift + vol * z;
+            let date = step as usize + 1;
+            let s = log_s.exp() as f64;
+            if date == steps as usize {
+                payoff = (kf - s).max(0.0);
+                break;
+            }
+            if s < kf {
+                if let Some(c) = &policy[date] {
+                    let intrinsic = kf - s;
+                    if intrinsic > basis_eval(c, s / kf) {
+                        // Forward-compound to maturity so the caller's
+                        // e^{−rT} discount nets to e^{−rτ}.
+                        payoff = intrinsic * (task.rate * dtf * (steps as usize - date) as f64).exp();
+                        break;
+                    }
+                }
+            }
+        }
+        sum += payoff;
+        sum_sq += payoff * payoff;
+        delta_sum += payoff * (z1 / lr_denom) as f64;
+        vega_sum += payoff * score_v as f64;
+    }
+    PayoffStats { sum, sum_sq, delta_sum, vega_sum, n: n as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pricing::blackscholes;
+    use crate::pricing::mc::combine;
+
+    fn american() -> OptionTask {
+        OptionTask {
+            id: 3,
+            payoff: Payoff::American,
+            spot: 100.0,
+            strike: 110.0,
+            rate: 0.05,
+            sigma: 0.2,
+            maturity: 1.0,
+            steps: 32,
+            ..OptionTask::default()
+        }
+    }
+
+    #[test]
+    fn chunking_is_exactly_additive() {
+        let t = american();
+        let whole = simulate(&t, 5, 0, 4096);
+        let lo = simulate(&t, 5, 0, 1536);
+        let hi = simulate(&t, 5, 1536, 2560);
+        let merged = lo.merge(&hi);
+        assert!((whole.sum - merged.sum).abs() < 1e-9 * whole.sum.abs().max(1.0));
+        assert!((whole.sum_sq - merged.sum_sq).abs() < 1e-9 * whole.sum_sq.abs().max(1.0));
+        assert_eq!(whole.n, merged.n);
+    }
+
+    #[test]
+    fn policy_is_independent_of_chunk_offset() {
+        // The same path priced from two different chunk layouts must see
+        // the same exercise policy: a path at global counter g contributes
+        // identically wherever the chunk boundary falls.
+        let t = american();
+        let a = simulate(&t, 7, 1000, 64);
+        let b0 = simulate(&t, 7, 1000, 32);
+        let b1 = simulate(&t, 7, 1032, 32);
+        assert_eq!(a, b0.merge(&b1));
+    }
+
+    #[test]
+    fn price_brackets_european_and_binomial() {
+        let t = american();
+        let est = combine(&simulate(&t, 42, 0, 1 << 16), t.discount());
+        let eur = blackscholes::put(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        let crr = blackscholes::american_put_binomial(
+            t.spot, t.strike, t.rate, t.sigma, t.maturity, 2000,
+        );
+        // Early-exercise premium strictly positive…
+        assert!(
+            est.price > eur + 2.0 * est.std_error,
+            "no premium: mc {} ± {} vs eur {eur}",
+            est.price,
+            est.std_error
+        );
+        // …and the suboptimal-policy estimate cannot beat the true price.
+        assert!(
+            est.price <= crr + 3.0 * est.std_error,
+            "above binomial: mc {} ± {} vs crr {crr}",
+            est.price,
+            est.std_error
+        );
+    }
+
+    #[test]
+    fn seeds_decorrelate_but_agree() {
+        let t = american();
+        let a = combine(&simulate(&t, 1, 0, 1 << 14), t.discount());
+        let b = combine(&simulate(&t, 2, 0, 1 << 14), t.discount());
+        assert_ne!(a.price, b.price);
+        assert!((a.price - b.price).abs() < 4.0 * (a.std_error + b.std_error));
+    }
+}

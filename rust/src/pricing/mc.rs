@@ -7,15 +7,35 @@
 //! (b) a cross-check oracle on the PJRT path, and (c) the workhorse of the
 //! pure-simulation benchmarks where numerical payoffs don't matter but
 //! realistic statistics do.
+//!
+//! The exotic families live in their own modules and are dispatched from
+//! [`simulate`]: [`lsmc`](super::lsmc) (American), [`basket`](super::basket)
+//! (correlated multi-asset) and [`heston`](super::heston) (stochastic vol).
+//!
+//! Besides price statistics every kernel accumulates first-order **Greeks**
+//! (delta, vega): pathwise estimators where the payoff is a.s. differentiable
+//! in the parameter (European, Asian, Basket, Heston), likelihood-ratio
+//! estimators where it is not (Barrier's knock-out indicator, American's
+//! exercise boundary). The Greek accumulators are additive exactly like the
+//! price sums, so chunked execution merges Greeks for free — and they are
+//! appended *after* the price accumulation of each path, keeping `sum` /
+//! `sum_sq` bit-identical to the pre-Greeks kernels (asserted by
+//! `rust/tests/pricing_greeks.rs`).
 
 use crate::util::rng::threefry_normal;
 use crate::workload::option::{OptionTask, Payoff};
 
 /// Raw (undiscounted) payoff statistics of a batch of simulated paths.
+///
+/// `delta_sum` / `vega_sum` hold the per-path Greek estimator sums
+/// (pathwise or likelihood-ratio depending on family — see module docs);
+/// like `sum` they are undiscounted and combine additively across chunks.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct PayoffStats {
     pub sum: f64,
     pub sum_sq: f64,
+    pub delta_sum: f64,
+    pub vega_sum: f64,
     pub n: u64,
 }
 
@@ -24,6 +44,8 @@ impl PayoffStats {
         PayoffStats {
             sum: self.sum + other.sum,
             sum_sq: self.sum_sq + other.sum_sq,
+            delta_sum: self.delta_sum + other.delta_sum,
+            vega_sum: self.vega_sum + other.vega_sum,
             n: self.n + other.n,
         }
     }
@@ -34,6 +56,16 @@ impl PayoffStats {
 pub struct PriceEstimate {
     pub price: f64,
     pub std_error: f64,
+    pub n: u64,
+}
+
+/// First-order sensitivities of the discounted price.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GreekEstimate {
+    /// ∂price/∂spot.
+    pub delta: f64,
+    /// ∂price/∂vol (initial vol √v₀ for Heston).
+    pub vega: f64,
     pub n: u64,
 }
 
@@ -51,13 +83,28 @@ pub fn combine(stats: &PayoffStats, discount: f64) -> PriceEstimate {
     }
 }
 
+/// Combine the Greek accumulators into discounted sensitivities — same
+/// discounting as [`combine`] (the estimators are stored undiscounted).
+pub fn combine_greeks(stats: &PayoffStats, discount: f64) -> GreekEstimate {
+    assert!(stats.n > 0, "no paths simulated");
+    let nf = stats.n as f64;
+    GreekEstimate {
+        delta: discount * stats.delta_sum / nf,
+        vega: discount * stats.vega_sum / nf,
+        n: stats.n,
+    }
+}
+
 /// How far the step counter reaches into the second Threefry word: the low
 /// [`STEP_BITS`] bits of `c1` carry the path step, the high bits carry the
 /// overflow (bits 32+) of the 64-bit path counter. For paths below `2^32`
 /// the layout is bit-identical to the original 32-bit scheme (`c1 = step`),
 /// so golden values and artifact cross-checks are unaffected; beyond it the
 /// counter space extends to `2^(32 + 32 - STEP_BITS)` paths without any
-/// (path, step) collision as long as `steps < 2^STEP_BITS`.
+/// (path, step) collision as long as each path draws fewer than
+/// `2^STEP_BITS` counter words (families with several draws per step —
+/// basket assets, Heston's two factors — consume the budget faster; see
+/// [`Payoff::counter_words_per_path`]).
 pub const STEP_BITS: u32 = 20;
 
 /// Simulate `n` paths of `task` starting at (64-bit) path counter `offset`
@@ -68,6 +115,14 @@ pub const STEP_BITS: u32 = 20;
 /// a 32-bit offset would wrap and overlap slices (see [`STEP_BITS`] for how
 /// the extra bits are folded into the counter pair).
 pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStats {
+    // Exotic families have their own kernels (same counter discipline, own
+    // per-step draw layout).
+    match task.payoff {
+        Payoff::American => return super::lsmc::simulate(task, seed, offset, n),
+        Payoff::Basket => return super::basket::simulate(task, seed, offset, n),
+        Payoff::Heston => return super::heston::simulate(task, seed, offset, n),
+        Payoff::European | Payoff::Asian | Payoff::Barrier => {}
+    }
     let k0 = task.id as u32;
     let k1 = seed;
     // A hard check, not a debug_assert: in release builds a `steps` beyond
@@ -97,10 +152,13 @@ pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStat
     );
     let mut sum = 0.0f64;
     let mut sum_sq = 0.0f64;
+    let mut delta_sum = 0.0f64;
+    let mut vega_sum = 0.0f64;
     match task.payoff {
         Payoff::European => {
             let drift = (r - 0.5 * sigma * sigma) * t;
             let vol = sigma * t.sqrt();
+            let sqrt_t = t.sqrt();
             for p in 0..n {
                 let (c0, hi) = ctr(p);
                 let z = threefry_normal(k0, k1, c0, hi);
@@ -108,6 +166,12 @@ pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStat
                 let payoff = (st - k).max(0.0) as f64;
                 sum += payoff;
                 sum_sq += payoff * payoff;
+                // Pathwise: ∂(Sᴛ−K)⁺/∂S₀ = 1{Sᴛ>K}·Sᴛ/S₀,
+                //           ∂Sᴛ/∂σ = Sᴛ·(√T·z − σT).
+                if st > k {
+                    delta_sum += (st / s0) as f64;
+                    vega_sum += (st * (sqrt_t * z - sigma * t)) as f64;
+                }
             }
         }
         Payoff::Asian => {
@@ -115,18 +179,30 @@ pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStat
             let dt = t / steps as f32;
             let drift = (r - 0.5 * sigma * sigma) * dt;
             let vol = sigma * dt.sqrt();
+            let sqrt_dt = dt.sqrt();
             for p in 0..n {
                 let (c0, hi) = ctr(p);
                 let mut log_s = s0.ln();
                 let mut acc = 0.0f32;
+                // Pathwise vega state: running normal sum W_j and
+                // Σ_j S_j·(√dt·W_j − σ·t_j) (= ∂(Σ S_j)/∂σ).
+                let mut w = 0.0f32;
+                let mut vacc = 0.0f32;
                 for step in 0..steps {
                     let z = threefry_normal(k0, k1, c0, hi | step);
                     log_s += drift + vol * z;
                     acc += log_s.exp();
+                    w += z;
+                    vacc += log_s.exp() * (sqrt_dt * w - sigma * (dt * (step + 1) as f32));
                 }
-                let payoff = ((acc / steps as f32) - k).max(0.0) as f64;
+                let avg = acc / steps as f32;
+                let payoff = (avg - k).max(0.0) as f64;
                 sum += payoff;
                 sum_sq += payoff * payoff;
+                if avg > k {
+                    delta_sum += (avg / s0) as f64;
+                    vega_sum += (vacc / steps as f32) as f64;
+                }
             }
         }
         Payoff::Barrier => {
@@ -135,27 +211,46 @@ pub fn simulate(task: &OptionTask, seed: u32, offset: u64, n: u32) -> PayoffStat
             let dt = t / steps as f32;
             let drift = (r - 0.5 * sigma * sigma) * dt;
             let vol = sigma * dt.sqrt();
+            let sqrt_dt = dt.sqrt();
+            // Likelihood-ratio scores (the knock-out indicator kills the
+            // pathwise derivative): delta score z₁/(S₀σ√dt), vega score
+            // Σ_j[(z_j²−1)/σ − z_j√dt].
+            let lr_denom = s0 * sigma * sqrt_dt;
             for p in 0..n {
                 let (c0, hi) = ctr(p);
                 let mut log_s = s0.ln();
                 let mut alive = s0 < barrier;
+                let mut z1 = 0.0f32;
+                let mut score_v = 0.0f32;
                 for step in 0..steps {
                     let z = threefry_normal(k0, k1, c0, hi | step);
+                    if step == 0 {
+                        z1 = z;
+                    }
+                    score_v += (z * z - 1.0) / sigma - z * sqrt_dt;
                     log_s += drift + vol * z;
                     alive = alive && log_s.exp() < barrier;
                 }
                 let payoff = if alive { (log_s.exp() - k).max(0.0) as f64 } else { 0.0 };
                 sum += payoff;
                 sum_sq += payoff * payoff;
+                delta_sum += payoff * (z1 / lr_denom) as f64;
+                vega_sum += payoff * score_v as f64;
             }
         }
+        Payoff::American | Payoff::Basket | Payoff::Heston => unreachable!("dispatched above"),
     }
-    PayoffStats { sum, sum_sq, n: n as u64 }
+    PayoffStats { sum, sum_sq, delta_sum, vega_sum, n: n as u64 }
 }
 
 /// Price a task natively with `n` paths (convenience wrapper).
 pub fn price(task: &OptionTask, seed: u32, n: u32) -> PriceEstimate {
     combine(&simulate(task, seed, 0, n), task.discount())
+}
+
+/// Greeks of a task natively with `n` paths (convenience wrapper).
+pub fn greeks(task: &OptionTask, seed: u32, n: u32) -> GreekEstimate {
+    combine_greeks(&simulate(task, seed, 0, n), task.discount())
 }
 
 #[cfg(test)]
@@ -177,6 +272,7 @@ mod tests {
             steps: 1,
             target_accuracy: 0.01,
             n_sims: 1 << 18,
+            ..OptionTask::default()
         }
     }
 
@@ -202,6 +298,10 @@ mod tests {
         let merged = lo.merge(&hi);
         assert!((whole.sum - merged.sum).abs() < 1e-9 * whole.sum.abs().max(1.0));
         assert!((whole.sum_sq - merged.sum_sq).abs() < 1e-9 * whole.sum_sq.abs().max(1.0));
+        assert!(
+            (whole.delta_sum - merged.delta_sum).abs() < 1e-9 * whole.delta_sum.abs().max(1.0)
+        );
+        assert!((whole.vega_sum - merged.vega_sum).abs() < 1e-9 * whole.vega_sum.abs().max(1.0));
         assert_eq!(whole.n, merged.n);
     }
 
@@ -304,6 +404,39 @@ mod tests {
             assert!(est.price >= 0.0, "negative price for {t:?}");
             assert!(est.price < t.spot, "call above spot for {t:?}");
         }
+    }
+
+    #[test]
+    fn every_family_simulates_through_the_dispatcher() {
+        // `simulate` must route every Payoff variant to a working kernel —
+        // the exhaustiveness backstop at the pricing layer.
+        for p in Payoff::ALL {
+            let mut t = european();
+            t.payoff = p;
+            t.steps = if p == Payoff::European { 1 } else { 16 };
+            t.barrier = 150.0;
+            t.assets = if p == Payoff::Basket { 4 } else { 1 };
+            t.correlation = match p {
+                Payoff::Basket => 0.5,
+                Payoff::Heston => -0.7,
+                _ => 0.0,
+            };
+            let stats = simulate(&t, 11, 0, 2048);
+            assert_eq!(stats.n, 2048, "{p:?}");
+            let est = combine(&stats, t.discount());
+            assert!(est.price.is_finite() && est.price >= 0.0, "{p:?}: {est:?}");
+            assert!(est.price < 2.0 * t.spot, "{p:?}: {est:?}");
+        }
+    }
+
+    #[test]
+    fn european_greeks_match_closed_form() {
+        let t = european();
+        let g = greeks(&t, 42, 1 << 17);
+        let delta = blackscholes::call_delta(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        let vega = blackscholes::call_vega(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+        assert!((g.delta - delta).abs() < 0.01, "mc delta {} vs bs {delta}", g.delta);
+        assert!((g.vega - vega).abs() / vega < 0.05, "mc vega {} vs bs {vega}", g.vega);
     }
 
     #[test]

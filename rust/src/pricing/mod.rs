@@ -1,10 +1,19 @@
 //! Option pricing: closed-form oracles and the native Monte Carlo mirror of
 //! the L1 kernels — scalar ([`mc`], the differential oracle) and batched
 //! ([`batch`], the vectorisation-ready hot path; bit-identical results).
+//!
+//! Exotic payoff families have dedicated kernels — [`lsmc`] (American,
+//! Longstaff-Schwartz regression MC), [`basket`] (correlated multi-asset,
+//! Cholesky-factored paths) and [`heston`] (stochastic volatility,
+//! full-truncation Euler) — all sharing the counter-based Threefry
+//! discipline, so every price stays seed-deterministic and chunk-additive.
 
+pub mod basket;
 pub mod batch;
 pub mod blackscholes;
+pub mod heston;
+pub mod lsmc;
 pub mod mc;
 
 pub use batch::{simulate_batch, KernelConfig, LANES, SUPPORTED_LANES};
-pub use mc::{combine, simulate, PayoffStats, PriceEstimate};
+pub use mc::{combine, combine_greeks, simulate, GreekEstimate, PayoffStats, PriceEstimate};

@@ -99,7 +99,8 @@ impl Engine {
                 sq_l.to_vec::<f32>()?[0] as f64,
             )
         };
-        Ok(PayoffStats { sum, sum_sq, n })
+        // AOT artifacts predate the Greek accumulators; price-only stats.
+        Ok(PayoffStats { sum, sum_sq, n, ..Default::default() })
     }
 
     /// Price `n` paths of `task` by looping chunk executions with advancing

@@ -6,11 +6,16 @@
 //! from the Kaiserslautern option pricing benchmark") and the $0.001
 //! accuracy target that sizes each task's N. This generator reproduces those
 //! properties deterministically from a seed — see DESIGN.md §2.
+//!
+//! Exotic families (american/basket/heston) draw their extra parameters
+//! *conditionally*: a config whose mix gives them zero weight consumes the
+//! exact RNG stream the original three-family generator consumed, so every
+//! seed-pinned legacy workload stays bit-identical.
 
 use crate::api::error::{CloudshapesError, Result};
 use crate::util::rng::Rng;
 
-use super::option::{OptionTask, Payoff};
+use super::option::{OptionTask, Payoff, MAX_BASKET_ASSETS};
 use super::Workload;
 
 /// Generation parameters. Defaults reproduce the paper's setup: 128 tasks,
@@ -22,10 +27,23 @@ pub struct GeneratorConfig {
     pub seed: u64,
     /// CI half-width each task must reach, $.
     pub accuracy: f64,
-    /// Mix weights (european, asian, barrier); need not be normalised.
-    pub payoff_mix: (f64, f64, f64),
+    /// Mix weights, indexed by [`Payoff::index`] (declaration order of
+    /// [`Payoff::ALL`]); need not be normalised.
+    pub payoff_mix: [f64; Payoff::COUNT],
     /// Fixing-date choices for path-dependent payoffs.
     pub step_choices: Vec<u32>,
+    /// Basket dimension for basket tasks.
+    pub basket_assets: u32,
+    /// Pairwise asset correlation for basket tasks.
+    pub basket_rho: f64,
+    /// Heston mean-reversion speed κ.
+    pub heston_kappa: f64,
+    /// Heston long-run variance θ.
+    pub heston_theta: f64,
+    /// Heston vol-of-vol ξ.
+    pub heston_xi: f64,
+    /// Heston spot–variance correlation ρ (equity-like: negative).
+    pub heston_rho: f64,
 }
 
 impl Default for GeneratorConfig {
@@ -34,8 +52,14 @@ impl Default for GeneratorConfig {
             n_tasks: 128,
             seed: 2015,
             accuracy: 0.001,
-            payoff_mix: (0.25, 0.45, 0.30),
+            payoff_mix: [0.25, 0.45, 0.30, 0.0, 0.0, 0.0],
             step_choices: vec![256, 512],
+            basket_assets: 4,
+            basket_rho: 0.5,
+            heston_kappa: 1.5,
+            heston_theta: 0.04,
+            heston_xi: 0.5,
+            heston_rho: -0.7,
         }
     }
 }
@@ -56,17 +80,16 @@ impl GeneratorConfig {
     /// weights, and an all-zero mix, would silently skew (or wedge) the
     /// sampling below — reject them as typed workload errors instead.
     pub fn validate(&self) -> Result<()> {
-        let (we, wa, wb) = self.payoff_mix;
-        for (name, w) in [("european", we), ("asian", wa), ("barrier", wb)] {
+        for (name, w) in Payoff::NAMES.iter().zip(self.payoff_mix) {
             if !(w >= 0.0 && w.is_finite()) {
                 return Err(CloudshapesError::workload(format!(
                     "payoff_mix: {name} weight must be a non-negative finite number, got {w}"
                 )));
             }
         }
-        if we + wa + wb <= 0.0 {
+        if self.payoff_mix.iter().sum::<f64>() <= 0.0 {
             return Err(CloudshapesError::workload(
-                "payoff_mix must have positive total weight (all three weights are zero)",
+                "payoff_mix must have positive total weight (all weights are zero)",
             ));
         }
         if self.step_choices.is_empty() {
@@ -79,6 +102,48 @@ impl GeneratorConfig {
                 "accuracy must be a positive CI half-width, got {}",
                 self.accuracy
             )));
+        }
+        // Exotic parameters are validated only when the mix can produce the
+        // family — a legacy config with a nonsense (unused) basket knob must
+        // not start failing.
+        if self.payoff_mix[Payoff::Basket.index()] > 0.0 {
+            if !(2..=MAX_BASKET_ASSETS).contains(&self.basket_assets) {
+                return Err(CloudshapesError::workload(format!(
+                    "basket_assets must be 2..={MAX_BASKET_ASSETS}, got {}",
+                    self.basket_assets
+                )));
+            }
+            let rho_min = -1.0 / (self.basket_assets as f64 - 1.0);
+            if !(self.basket_rho > rho_min && self.basket_rho < 1.0) {
+                return Err(CloudshapesError::workload(format!(
+                    "basket_rho {} outside ({rho_min:.4}, 1) for {} assets",
+                    self.basket_rho, self.basket_assets
+                )));
+            }
+        }
+        if self.payoff_mix[Payoff::Heston.index()] > 0.0 {
+            for (name, v) in [
+                ("heston_kappa", self.heston_kappa),
+                ("heston_theta", self.heston_theta),
+            ] {
+                if !(v > 0.0 && v.is_finite()) {
+                    return Err(CloudshapesError::workload(format!(
+                        "{name} must be positive, got {v}"
+                    )));
+                }
+            }
+            if !(self.heston_xi >= 0.0 && self.heston_xi.is_finite()) {
+                return Err(CloudshapesError::workload(format!(
+                    "heston_xi must be non-negative, got {}",
+                    self.heston_xi
+                )));
+            }
+            if !(self.heston_rho > -1.0 && self.heston_rho < 1.0) {
+                return Err(CloudshapesError::workload(format!(
+                    "heston_rho {} outside (-1, 1)",
+                    self.heston_rho
+                )));
+            }
         }
         Ok(())
     }
@@ -98,23 +163,32 @@ pub fn try_generate(cfg: &GeneratorConfig) -> Result<Workload> {
 pub fn generate(cfg: &GeneratorConfig) -> Workload {
     cfg.validate().expect("invalid generator config");
     let mut rng = Rng::new(cfg.seed);
-    let (we, wa, wb) = cfg.payoff_mix;
-    let total_w = we + wa + wb;
+    let total_w: f64 = cfg.payoff_mix.iter().sum();
+    // Fall-through family when fp rounding pushes the draw past the last
+    // positive cumulative weight: the last family with positive weight
+    // (matches the old three-family `else` branch exactly).
+    let last_positive = Payoff::ALL
+        .into_iter()
+        .rev()
+        .find(|p| cfg.payoff_mix[p.index()] > 0.0)
+        .expect("validated mix has positive weight");
     let mut tasks = Vec::with_capacity(cfg.n_tasks);
     for id in 0..cfg.n_tasks {
         let draw = rng.f64() * total_w;
-        let payoff = if draw < we {
-            Payoff::European
-        } else if draw < we + wa {
-            Payoff::Asian
-        } else {
-            Payoff::Barrier
-        };
+        let mut payoff = last_positive;
+        let mut acc = 0.0;
+        for p in Payoff::ALL {
+            acc += cfg.payoff_mix[p.index()];
+            if draw < acc {
+                payoff = p;
+                break;
+            }
+        }
         // Kaiserslautern-style market parameter ranges.
         let spot = rng.range_f64(80.0, 120.0);
         let strike = spot * rng.range_f64(0.8, 1.2);
         let rate = rng.range_f64(0.01, 0.05);
-        let sigma = rng.range_f64(0.10, 0.45);
+        let mut sigma = rng.range_f64(0.10, 0.45);
         let maturity = rng.range_f64(0.25, 2.0);
         let barrier = spot * rng.range_f64(1.15, 1.6);
         let steps = if payoff == Payoff::European {
@@ -122,8 +196,9 @@ pub fn generate(cfg: &GeneratorConfig) -> Workload {
         } else {
             *rng.choose(&cfg.step_choices)
         };
-        let n_sims = OptionTask::size_n(payoff, spot, sigma, maturity, cfg.accuracy);
-        let task = OptionTask {
+        // Exotic parameters — drawn *conditionally* so legacy mixes consume
+        // the identical RNG stream (see module docs).
+        let mut task = OptionTask {
             id,
             payoff,
             spot,
@@ -134,8 +209,36 @@ pub fn generate(cfg: &GeneratorConfig) -> Workload {
             barrier,
             steps,
             target_accuracy: cfg.accuracy,
-            n_sims,
+            n_sims: 0,
+            ..OptionTask::default()
         };
+        match payoff {
+            Payoff::Basket => {
+                task.assets = cfg.basket_assets;
+                task.correlation = cfg.basket_rho;
+                // Keep every basket path inside the counter-word budget
+                // regardless of the configured fixing grid.
+                let word_cap = (1u64 << crate::pricing::mc::STEP_BITS) - 1;
+                let step_cap = (word_cap / cfg.basket_assets as u64).max(1) as u32;
+                task.steps = steps.min(step_cap);
+            }
+            Payoff::Heston => {
+                task.kappa = cfg.heston_kappa;
+                task.theta = cfg.heston_theta;
+                task.xi = cfg.heston_xi;
+                task.correlation = cfg.heston_rho;
+                task.v0 = cfg.heston_theta * rng.range_f64(0.5, 1.5);
+                // Heston's vol comes from v₀/θ, not the lognormal draw;
+                // keep `sigma` as the effective initial vol so N-sizing and
+                // FLOP accounting see the right dispersion scale.
+                sigma = task.v0.sqrt();
+                task.sigma = sigma;
+                let step_cap = ((1u64 << crate::pricing::mc::STEP_BITS) / 2 - 1) as u32;
+                task.steps = steps.min(step_cap);
+            }
+            _ => {}
+        }
+        task.n_sims = OptionTask::size_n(payoff, spot, sigma, maturity, cfg.accuracy);
         debug_assert!(task.validate().is_ok(), "{:?}", task.validate());
         tasks.push(task);
     }
@@ -162,10 +265,14 @@ mod tests {
         for t in &w.tasks {
             assert!(t.validate().is_ok());
         }
-        // All three payoff families present.
+        // The paper's three payoff families present (the default mix gives
+        // the exotics zero weight — legacy seed streams stay bit-identical).
         for p in [Payoff::European, Payoff::Asian, Payoff::Barrier] {
             assert!(w.tasks.iter().any(|t| t.payoff == p), "missing {p:?}");
         }
+        assert!(w.tasks.iter().all(|t| {
+            !matches!(t.payoff, Payoff::American | Payoff::Basket | Payoff::Heston)
+        }));
         // Work sizes spread over at least an order of magnitude.
         let flops: Vec<f64> = w.tasks.iter().map(|t| t.total_flops()).collect();
         let max = flops.iter().cloned().fold(0.0, f64::max);
@@ -185,7 +292,7 @@ mod tests {
     #[test]
     fn mix_weights_respected() {
         let cfg = GeneratorConfig {
-            payoff_mix: (1.0, 0.0, 0.0),
+            payoff_mix: Payoff::European.one_hot_mix(),
             ..GeneratorConfig::default()
         };
         let w = generate(&cfg);
@@ -193,8 +300,55 @@ mod tests {
     }
 
     #[test]
+    fn every_family_generates_valid_tasks() {
+        for p in Payoff::ALL {
+            let cfg = GeneratorConfig {
+                payoff_mix: p.one_hot_mix(),
+                ..GeneratorConfig::small(6, 0.05, 17)
+            };
+            let w = try_generate(&cfg).unwrap();
+            assert_eq!(w.tasks.len(), 6);
+            for t in &w.tasks {
+                assert_eq!(t.payoff, p);
+                assert!(t.validate().is_ok(), "{:?}", t.validate());
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_mix_produces_every_family() {
+        let cfg = GeneratorConfig {
+            payoff_mix: [1.0; Payoff::COUNT],
+            ..GeneratorConfig::small(96, 0.05, 5)
+        };
+        let w = generate(&cfg);
+        for p in Payoff::ALL {
+            assert!(w.tasks.iter().any(|t| t.payoff == p), "missing {p:?}");
+        }
+    }
+
+    #[test]
+    fn legacy_mixes_are_stream_compatible() {
+        // Adding zero-weight exotic families must not perturb the tasks a
+        // legacy three-family config generates (seed-pinned goldens, Table
+        // II reproduction and the differential harness all rely on this).
+        let legacy = generate(&GeneratorConfig::default());
+        let padded = generate(&GeneratorConfig {
+            basket_assets: 5,
+            heston_xi: 0.9,
+            ..GeneratorConfig::default()
+        });
+        assert_eq!(legacy.tasks, padded.tasks);
+    }
+
+    #[test]
     fn bad_payoff_mixes_are_workload_errors() {
-        for mix in [(0.0, 0.0, 0.0), (-1.0, 0.5, 0.5), (f64::NAN, 1.0, 1.0)] {
+        let mixes: [[f64; Payoff::COUNT]; 3] = [
+            [0.0; Payoff::COUNT],
+            [-1.0, 0.5, 0.5, 0.0, 0.0, 0.0],
+            [f64::NAN, 1.0, 1.0, 0.0, 0.0, 0.0],
+        ];
+        for mix in mixes {
             let cfg = GeneratorConfig { payoff_mix: mix, ..GeneratorConfig::default() };
             let e = try_generate(&cfg).unwrap_err();
             assert_eq!(e.kind(), "workload", "{mix:?} -> {e}");
@@ -204,5 +358,25 @@ mod tests {
         let cfg = GeneratorConfig { accuracy: 0.0, ..GeneratorConfig::default() };
         assert_eq!(try_generate(&cfg).unwrap_err().kind(), "workload");
         assert!(try_generate(&GeneratorConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn bad_exotic_knobs_error_only_when_reachable() {
+        // Nonsense basket knobs are ignored while the mix can't reach them…
+        let cfg = GeneratorConfig { basket_assets: 1, ..GeneratorConfig::default() };
+        assert!(try_generate(&cfg).is_ok());
+        // …and typed workload errors once it can.
+        let cfg = GeneratorConfig {
+            basket_assets: 1,
+            payoff_mix: Payoff::Basket.one_hot_mix(),
+            ..GeneratorConfig::default()
+        };
+        assert_eq!(try_generate(&cfg).unwrap_err().kind(), "workload");
+        let cfg = GeneratorConfig {
+            heston_rho: 1.5,
+            payoff_mix: Payoff::Heston.one_hot_mix(),
+            ..GeneratorConfig::default()
+        };
+        assert_eq!(try_generate(&cfg).unwrap_err().kind(), "workload");
     }
 }

@@ -6,12 +6,25 @@
 
 use crate::api::error::CloudshapesError;
 
-/// Payoff family — one per AOT kernel variant.
+/// Payoff family — one per kernel variant.
+///
+/// The first three are the paper's original workload (all of which share a
+/// single FLOP-per-step cost line); the exotic families deliberately break
+/// that line — LSMC's regression pass, the basket's d-dimensional
+/// correlation, Heston's two-factor stepping — so per-family latency models
+/// have something to earn their keep on (ROADMAP item 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Payoff {
     European,
     Asian,
     Barrier,
+    /// American put via Longstaff-Schwartz regression Monte Carlo.
+    American,
+    /// Equally-weighted call on a correlated multi-asset basket.
+    Basket,
+    /// European call under Heston stochastic volatility (full-truncation
+    /// Euler).
+    Heston,
 }
 
 impl Payoff {
@@ -20,19 +33,39 @@ impl Payoff {
             Payoff::European => "european",
             Payoff::Asian => "asian",
             Payoff::Barrier => "barrier",
+            Payoff::American => "american",
+            Payoff::Basket => "basket",
+            Payoff::Heston => "heston",
         }
     }
 
+    /// Number of payoff families.
+    pub const COUNT: usize = 6;
+
+    /// Every payoff family, in declaration order. Derive family lists from
+    /// this (never a hand-written array) so new families cannot silently
+    /// miss storm/CLI/bench coverage.
+    pub const ALL: [Payoff; Payoff::COUNT] = [
+        Payoff::European,
+        Payoff::Asian,
+        Payoff::Barrier,
+        Payoff::American,
+        Payoff::Basket,
+        Payoff::Heston,
+    ];
+
     /// Every payoff family name, in declaration order.
-    pub const NAMES: [&'static str; 3] = ["european", "asian", "barrier"];
+    pub const NAMES: [&'static str; Payoff::COUNT] =
+        ["european", "asian", "barrier", "american", "basket", "heston"];
+
+    /// Position in [`ALL`](Payoff::ALL)/[`NAMES`](Payoff::NAMES) — the index
+    /// used by per-family model tables and mix-weight arrays.
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
 
     pub fn from_name(s: &str) -> Option<Payoff> {
-        match s {
-            "european" => Some(Payoff::European),
-            "asian" => Some(Payoff::Asian),
-            "barrier" => Some(Payoff::Barrier),
-            _ => None,
-        }
+        Payoff::ALL.into_iter().find(|p| p.name() == s)
     }
 
     /// As [`from_name`](Payoff::from_name), but unknown names surface as a
@@ -51,23 +84,47 @@ impl Payoff {
     /// The generator mix weights that select exactly this family — shared
     /// by every "single-payoff workload" surface (`[workload] payoff`, the
     /// serve `submit` op) so the mapping lives in one place.
-    pub fn one_hot_mix(&self) -> (f64, f64, f64) {
+    pub fn one_hot_mix(&self) -> [f64; Payoff::COUNT] {
+        let mut mix = [0.0; Payoff::COUNT];
+        mix[self.index()] = 1.0;
+        mix
+    }
+
+    /// Threefry counter words one path consumes in the second-word step
+    /// field: the kernels index sub-draws as `hi | sub` with
+    /// `sub < 2^STEP_BITS`, so this must stay under the layout budget
+    /// (checked by [`OptionTask::validate`]).
+    pub fn counter_words_per_path(&self, steps: u32, assets: u32) -> u64 {
         match self {
-            Payoff::European => (1.0, 0.0, 0.0),
-            Payoff::Asian => (0.0, 1.0, 0.0),
-            Payoff::Barrier => (0.0, 0.0, 1.0),
+            Payoff::European => 1,
+            Payoff::Asian | Payoff::Barrier | Payoff::American => steps as u64,
+            Payoff::Basket => steps as u64 * assets as u64,
+            Payoff::Heston => 2 * steps as u64,
         }
     }
 
     /// Approximate floating-point operations per simulated path, used to
     /// translate device GFLOPS into a Monte Carlo throughput (β). Counts the
-    /// Threefry rounds (~`steps`×90 ALU ops), Box-Muller, and path update.
-    pub fn flops_per_path(&self, steps: u32) -> f64 {
+    /// Threefry rounds (~90 ALU ops per draw), Box-Muller, and the
+    /// family-specific path update: LSMC adds the per-step regression
+    /// evaluation and exercise test, the basket pays `assets` draws plus an
+    /// O(assets²) Cholesky correlation per step, Heston draws two normals
+    /// and advances two factors per step.
+    pub fn flops_per_path(&self, steps: u32, assets: u32) -> f64 {
         const RNG_FLOPS: f64 = 130.0; // threefry-20rounds + box-muller
         const STEP_FLOPS: f64 = 12.0; // exp/log-spot update, accumulate
+        let m = steps as f64;
+        let d = assets as f64;
         match self {
             Payoff::European => RNG_FLOPS + 25.0,
-            Payoff::Asian | Payoff::Barrier => steps as f64 * (RNG_FLOPS + STEP_FLOPS) + 25.0,
+            Payoff::Asian | Payoff::Barrier => m * (RNG_FLOPS + STEP_FLOPS) + 25.0,
+            // Regression basis evaluation + exercise test per date, plus the
+            // (amortised) pilot regression pass.
+            Payoff::American => m * (RNG_FLOPS + STEP_FLOPS + 18.0) + 90.0,
+            // d draws per step plus the O(d²) lower-triangular correlation.
+            Payoff::Basket => m * d * (RNG_FLOPS + STEP_FLOPS) + m * 2.0 * d * d + 25.0,
+            // Two draws and two factor updates (spot, variance) per step.
+            Payoff::Heston => m * (2.0 * RNG_FLOPS + 40.0) + 25.0,
         }
     }
 }
@@ -84,13 +141,57 @@ pub struct OptionTask {
     pub maturity: f64,
     /// Knock-out level (Barrier payoff only; ignored otherwise).
     pub barrier: f64,
-    /// Fixing/monitoring dates for path-dependent payoffs.
+    /// Fixing/monitoring/exercise dates for path-dependent payoffs.
     pub steps: u32,
+    /// Basket dimension (Basket payoff only; 1 otherwise).
+    pub assets: u32,
+    /// Pairwise asset correlation (Basket) or spot–variance correlation ρ
+    /// (Heston); ignored by the single-factor lognormal families.
+    pub correlation: f64,
+    /// Heston mean-reversion speed κ.
+    pub kappa: f64,
+    /// Heston long-run variance θ.
+    pub theta: f64,
+    /// Heston vol-of-vol ξ.
+    pub xi: f64,
+    /// Heston initial variance v₀.
+    pub v0: f64,
     /// Half-width of the 95% confidence interval the task must reach, $.
     pub target_accuracy: f64,
     /// Simulations required to reach `target_accuracy` (the task's N).
     pub n_sims: u64,
 }
+
+impl Default for OptionTask {
+    /// A valid ATM European call — the `..OptionTask::default()` base that
+    /// keeps task literals short now that exotic families carry extra
+    /// parameters most tasks never read.
+    fn default() -> Self {
+        OptionTask {
+            id: 0,
+            payoff: Payoff::European,
+            spot: 100.0,
+            strike: 100.0,
+            rate: 0.05,
+            sigma: 0.2,
+            maturity: 1.0,
+            barrier: 0.0,
+            steps: 1,
+            assets: 1,
+            correlation: 0.0,
+            kappa: 1.5,
+            theta: 0.04,
+            xi: 0.5,
+            v0: 0.04,
+            target_accuracy: 0.01,
+            n_sims: 1 << 16,
+        }
+    }
+}
+
+/// Largest supported basket dimension (per-step scratch arrays are
+/// stack-sized to this in the kernels).
+pub const MAX_BASKET_ASSETS: u32 = 8;
 
 impl OptionTask {
     /// Size a task's N from its accuracy target via the CLT:
@@ -105,6 +206,9 @@ impl OptionTask {
             Payoff::European => 0.8,
             Payoff::Asian => 0.5,   // averaging shrinks dispersion
             Payoff::Barrier => 0.9, // knock-out adds dispersion near the barrier
+            Payoff::American => 0.9, // early exercise truncates the left tail only
+            Payoff::Basket => 0.6,  // cross-asset averaging shrinks dispersion
+            Payoff::Heston => 1.0,  // stochastic vol fattens the tails
         };
         let payoff_std = family_factor * spot * sigma * maturity.sqrt();
         let z = 1.96;
@@ -112,7 +216,9 @@ impl OptionTask {
         n.clamp(1 << 16, 1 << 34)
     }
 
-    /// The f32[8] parameter vector the AOT kernels take.
+    /// The f32[8] parameter vector the AOT kernels take (original three
+    /// families only — the exotic families have no AOT variants yet and are
+    /// priced by the native kernels).
     pub fn to_params(&self) -> [f32; 8] {
         [
             self.spot as f32,
@@ -133,7 +239,7 @@ impl OptionTask {
 
     /// FLOPs of one simulated path of this task.
     pub fn flops_per_path(&self) -> f64 {
-        self.payoff.flops_per_path(self.steps)
+        self.payoff.flops_per_path(self.steps, self.assets)
     }
 
     /// Total FLOPs of the whole task.
@@ -169,6 +275,47 @@ impl OptionTask {
                 self.id, self.barrier, self.spot
             )));
         }
+        if self.payoff == Payoff::Basket {
+            if !(2..=MAX_BASKET_ASSETS).contains(&self.assets) {
+                return Err(CloudshapesError::workload(format!(
+                    "task {}: basket needs 2..={MAX_BASKET_ASSETS} assets, got {}",
+                    self.id, self.assets
+                )));
+            }
+            // Equicorrelation matrices are positive-definite only above
+            // -1/(d-1); at or below it the Cholesky factorisation fails.
+            let rho_min = -1.0 / (self.assets as f64 - 1.0);
+            if !(self.correlation > rho_min && self.correlation < 1.0) {
+                return Err(CloudshapesError::workload(format!(
+                    "task {}: basket correlation {} outside ({rho_min:.4}, 1) \
+                     for {} assets",
+                    self.id, self.correlation, self.assets
+                )));
+            }
+        }
+        if self.payoff == Payoff::Heston {
+            let pos_h = [("kappa", self.kappa), ("theta", self.theta), ("v0", self.v0)];
+            for (name, v) in pos_h {
+                if !(v > 0.0 && v.is_finite()) {
+                    return Err(CloudshapesError::workload(format!(
+                        "task {}: heston {name} must be positive, got {v}",
+                        self.id
+                    )));
+                }
+            }
+            if !(self.xi >= 0.0 && self.xi.is_finite()) {
+                return Err(CloudshapesError::workload(format!(
+                    "task {}: heston xi must be non-negative, got {}",
+                    self.id, self.xi
+                )));
+            }
+            if !(self.correlation > -1.0 && self.correlation < 1.0) {
+                return Err(CloudshapesError::workload(format!(
+                    "task {}: heston correlation {} outside (-1, 1)",
+                    self.id, self.correlation
+                )));
+            }
+        }
         if self.n_sims == 0 {
             return Err(CloudshapesError::workload(format!(
                 "task {}: zero simulations",
@@ -182,16 +329,21 @@ impl OptionTask {
             )));
         }
         // The RNG counter layout reserves STEP_BITS of the second Threefry
-        // word for the step index; more steps than that would alias
-        // (path, step) counter pairs and bias every merged price. Checked
-        // here — at workload validation time — so the kernels' hard assert
-        // is never the first thing to notice.
-        let step_cap = 1u32 << crate::pricing::mc::STEP_BITS;
-        if self.steps >= step_cap {
+        // word for the per-path sub-draw index; more draws than that would
+        // alias (path, draw) counter pairs and bias every merged price.
+        // Families with several draws per step (basket assets, Heston's two
+        // factors) consume the budget proportionally faster — checked here,
+        // at workload validation time, so the kernels' hard assert is never
+        // the first thing to notice.
+        let step_cap = 1u64 << crate::pricing::mc::STEP_BITS;
+        let words = self.payoff.counter_words_per_path(self.steps, self.assets);
+        if words >= step_cap {
             return Err(CloudshapesError::workload(format!(
-                "task {}: {} steps exceed the RNG counter layout's budget of {step_cap} \
-                 (2^{} — see pricing::mc::STEP_BITS)",
+                "task {}: {} counter words per path ({} steps) exceed the RNG \
+                 counter layout's budget of {step_cap} (2^{} — see \
+                 pricing::mc::STEP_BITS)",
                 self.id,
+                words,
                 self.steps,
                 crate::pricing::mc::STEP_BITS
             )));
@@ -217,17 +369,43 @@ mod tests {
             steps: 1,
             target_accuracy: 0.001,
             n_sims: 1 << 20,
+            ..OptionTask::default()
         }
     }
 
     #[test]
     fn payoff_names_roundtrip() {
-        for p in [Payoff::European, Payoff::Asian, Payoff::Barrier] {
+        for p in Payoff::ALL {
             assert_eq!(Payoff::from_name(p.name()), Some(p));
             assert_eq!(Payoff::parse(p.name()).unwrap(), p);
             assert!(Payoff::NAMES.contains(&p.name()));
         }
         assert_eq!(Payoff::from_name("swaption"), None);
+    }
+
+    /// Compile-time-ish exhaustiveness: this match has no wildcard arm, so
+    /// adding a `Payoff` variant without growing `ALL`/`NAMES`/`index` (and
+    /// every per-family table keyed by them) fails to compile here first.
+    #[test]
+    fn family_tables_are_exhaustive() {
+        for (i, p) in Payoff::ALL.into_iter().enumerate() {
+            let expected_name = match p {
+                Payoff::European => "european",
+                Payoff::Asian => "asian",
+                Payoff::Barrier => "barrier",
+                Payoff::American => "american",
+                Payoff::Basket => "basket",
+                Payoff::Heston => "heston",
+            };
+            assert_eq!(p.name(), expected_name);
+            assert_eq!(p.index(), i, "ALL order must match index()");
+            assert_eq!(Payoff::NAMES[i], p.name(), "NAMES order must match ALL");
+            let mix = p.one_hot_mix();
+            assert_eq!(mix[i], 1.0);
+            assert_eq!(mix.iter().sum::<f64>(), 1.0);
+        }
+        assert_eq!(Payoff::ALL.len(), Payoff::COUNT);
+        assert_eq!(Payoff::NAMES.len(), Payoff::COUNT);
     }
 
     #[test]
@@ -272,11 +450,29 @@ mod tests {
 
     #[test]
     fn flops_scale_with_steps_for_path_dependent() {
-        let e = Payoff::European.flops_per_path(1);
-        let a64 = Payoff::Asian.flops_per_path(64);
-        let a128 = Payoff::Asian.flops_per_path(128);
+        let e = Payoff::European.flops_per_path(1, 1);
+        let a64 = Payoff::Asian.flops_per_path(64, 1);
+        let a128 = Payoff::Asian.flops_per_path(128, 1);
         assert!(a64 > 10.0 * e);
         assert!((a128 / a64 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn exotic_families_break_the_single_cost_line() {
+        // At the same step count, each exotic family's per-path cost sits on
+        // its own line — this spread is exactly what per-family latency
+        // models exist to capture.
+        let barrier = Payoff::Barrier.flops_per_path(64, 1);
+        let american = Payoff::American.flops_per_path(64, 1);
+        let basket4 = Payoff::Basket.flops_per_path(64, 4);
+        let heston = Payoff::Heston.flops_per_path(64, 1);
+        assert!(american > barrier);
+        assert!(heston > 1.5 * barrier, "{heston} vs {barrier}");
+        assert!(basket4 > 3.5 * barrier, "{basket4} vs {barrier}");
+        // Basket cost grows with dimension.
+        assert!(
+            Payoff::Basket.flops_per_path(64, 8) > 1.9 * Payoff::Basket.flops_per_path(64, 4)
+        );
     }
 
     #[test]
@@ -298,6 +494,40 @@ mod tests {
     }
 
     #[test]
+    fn validation_checks_exotic_parameters() {
+        // Basket: dimension bounds and correlation feasibility.
+        let mut t = task();
+        t.payoff = Payoff::Basket;
+        t.steps = 16;
+        t.assets = 1;
+        assert!(t.validate().is_err(), "basket of one asset");
+        t.assets = MAX_BASKET_ASSETS + 1;
+        assert!(t.validate().is_err(), "basket too wide");
+        t.assets = 4;
+        t.correlation = -0.5; // below -1/(d-1) = -1/3: not positive-definite
+        assert!(t.validate().is_err(), "infeasible equicorrelation");
+        t.correlation = 1.0;
+        assert!(t.validate().is_err(), "degenerate rho = 1");
+        t.correlation = 0.5;
+        assert!(t.validate().is_ok());
+
+        // Heston: positive variance parameters, correlation in (-1, 1).
+        let mut t = task();
+        t.payoff = Payoff::Heston;
+        t.steps = 64;
+        t.correlation = -0.7;
+        assert!(t.validate().is_ok());
+        t.v0 = 0.0;
+        assert!(t.validate().is_err(), "zero initial variance");
+        t.v0 = 0.04;
+        t.xi = -0.1;
+        assert!(t.validate().is_err(), "negative vol-of-vol");
+        t.xi = 0.5;
+        t.correlation = -1.0;
+        assert!(t.validate().is_err(), "perfect anti-correlation");
+    }
+
+    #[test]
     fn steps_beyond_the_counter_layout_are_a_typed_workload_error() {
         // Regression: this used to be a debug_assert deep in the pricer —
         // release builds silently allowed (path, step) counter collisions.
@@ -310,6 +540,29 @@ mod tests {
         assert!(e.message().contains("steps"), "{e}");
         // The boundary itself is the last valid value.
         t.steps = (1 << STEP_BITS) - 1;
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn counter_budget_scales_with_draws_per_step() {
+        use crate::pricing::mc::STEP_BITS;
+        // Heston consumes two counter words per step, so its step budget is
+        // half the single-factor one.
+        let mut t = task();
+        t.payoff = Payoff::Heston;
+        t.correlation = -0.5;
+        t.steps = 1 << (STEP_BITS - 1);
+        assert!(t.validate().is_err());
+        t.steps = (1 << (STEP_BITS - 1)) - 1;
+        assert!(t.validate().is_ok());
+        // A 4-asset basket consumes four words per step.
+        let mut t = task();
+        t.payoff = Payoff::Basket;
+        t.assets = 4;
+        t.correlation = 0.3;
+        t.steps = 1 << (STEP_BITS - 2);
+        assert!(t.validate().is_err());
+        t.steps = (1 << (STEP_BITS - 2)) - 1;
         assert!(t.validate().is_ok());
     }
 

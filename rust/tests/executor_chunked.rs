@@ -102,8 +102,9 @@ fn failures_with_retries_never_lose_a_price() {
         n_tasks: 8,
         seed: 5,
         accuracy: 0.02,
-        payoff_mix: (1.0, 0.0, 0.0), // closed-form checkable
+        payoff_mix: Payoff::European.one_hot_mix(), // closed-form checkable
         step_choices: vec![64],
+        ..GeneratorConfig::default()
     });
     let models = ModelSet::from_specs(&specs, &workload);
     let alloc = HeuristicPartitioner::upper_bound_allocation(&models);
@@ -235,6 +236,7 @@ fn u64_offsets_keep_giant_tasks_unbiased() {
         steps: 1,
         target_accuracy: 1e-4,
         n_sims: 1 << 33,
+        ..OptionTask::default()
     };
     let workload = Workload::new(vec![task.clone()]);
     let alloc = Allocation::proportional(2, 1, &[1.0, 1.0]);

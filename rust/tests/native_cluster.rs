@@ -49,8 +49,9 @@ fn hybrid_execution_prices_correctly_and_uses_native() {
         n_tasks: 4,
         seed: 5,
         accuracy: 0.05,
-        payoff_mix: (1.0, 0.0, 0.0),
+        payoff_mix: Payoff::European.one_hot_mix(),
         step_choices: vec![64],
+        ..GeneratorConfig::default()
     });
     // Benchmark the hybrid cluster (native rungs burn real wall-clock, so
     // keep the ladder modest) and partition with the fitted models.

@@ -30,14 +30,24 @@ fn task(payoff: Payoff, steps: u32) -> OptionTask {
         steps,
         target_accuracy: 0.01,
         n_sims: 1 << 20,
+        assets: if payoff == Payoff::Basket { 4 } else { 1 },
+        correlation: match payoff {
+            Payoff::Basket => 0.5,
+            Payoff::Heston => -0.7,
+            _ => 0.0,
+        },
+        ..OptionTask::default()
     }
 }
 
-fn families() -> [OptionTask; 3] {
+fn families() -> [OptionTask; 6] {
     [
         task(Payoff::European, 1),
         task(Payoff::Asian, 16),
         task(Payoff::Barrier, 16),
+        task(Payoff::American, 16),
+        task(Payoff::Basket, 16),
+        task(Payoff::Heston, 16),
     ]
 }
 
@@ -102,16 +112,37 @@ fn steps_at_the_counter_layout_boundary_are_bitwise_scalar() {
             "{payoff:?}"
         );
     }
+    // Multi-draw families fill the budget at steps·draws_per_step words:
+    // basket (4 assets) tops out at 2^18−1 steps, Heston at 2^19−1.
+    let basket = task(Payoff::Basket, (1u32 << (STEP_BITS - 2)) - 1);
+    assert_eq!(
+        simulate(&basket, 5, (1u64 << 32) + 2, 2),
+        simulate_batch(&basket, 5, (1u64 << 32) + 2, 2)
+    );
+    let heston = task(Payoff::Heston, (1u32 << (STEP_BITS - 1)) - 1);
+    assert_eq!(
+        simulate(&heston, 5, (1u64 << 32) + 2, 2),
+        simulate_batch(&heston, 5, (1u64 << 32) + 2, 2)
+    );
 }
 
 #[test]
 fn every_lane_width_is_bitwise_scalar_on_a_generated_workload() {
-    for t in &generate(&GeneratorConfig::small(6, 0.05, 23)).tasks {
-        let oracle = simulate(t, 11, 101, 1000);
-        assert_eq!(simulate_lanes::<4>(t, 11, 101, 1000), oracle, "{t:?}");
-        assert_eq!(simulate_lanes::<8>(t, 11, 101, 1000), oracle, "{t:?}");
-        assert_eq!(simulate_lanes::<16>(t, 11, 101, 1000), oracle, "{t:?}");
-        assert_eq!(simulate_lanes::<32>(t, 11, 101, 1000), oracle, "{t:?}");
+    // Legacy default mix plus an all-exotics mix: generated (not
+    // hand-built) parameters through every lane width.
+    let legacy = GeneratorConfig::small(6, 0.05, 23);
+    let exotics = GeneratorConfig {
+        payoff_mix: [0.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+        ..GeneratorConfig::small(6, 0.05, 29)
+    };
+    for cfg in [legacy, exotics] {
+        for t in &generate(&cfg).tasks {
+            let oracle = simulate(t, 11, 101, 1000);
+            assert_eq!(simulate_lanes::<4>(t, 11, 101, 1000), oracle, "{t:?}");
+            assert_eq!(simulate_lanes::<8>(t, 11, 101, 1000), oracle, "{t:?}");
+            assert_eq!(simulate_lanes::<16>(t, 11, 101, 1000), oracle, "{t:?}");
+            assert_eq!(simulate_lanes::<32>(t, 11, 101, 1000), oracle, "{t:?}");
+        }
     }
 }
 

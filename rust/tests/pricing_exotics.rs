@@ -1,0 +1,286 @@
+//! Oracle-backed validation of the exotic payoff families (ISSUE 10):
+//!
+//! - **American (LSMC)** against a Cox-Ross-Rubinstein binomial tree — the
+//!   estimate must carry a strictly positive early-exercise premium over
+//!   the European put closed form, yet never beat the (true) tree price;
+//! - **Basket** against the geometric-basket closed form (a strict lower
+//!   bound via AM-GM) and the Lévy moment-matched lognormal approximation;
+//! - **Heston** in the degenerate `ξ = 0, v₀ = θ` limit against a
+//!   test-local constant-vol GBM that replays the *same* Threefry stream —
+//!   agreement to 1e-12 relative, independent of sampling noise — plus the
+//!   Black-Scholes closed form at `√θ` vol within Monte Carlo error.
+//!
+//! Every test pins its seeds, so failures reproduce deterministically.
+
+use cloudshapes::pricing::{blackscholes, combine, mc};
+use cloudshapes::util::rng::threefry_normal;
+use cloudshapes::workload::option::{OptionTask, Payoff};
+
+fn american() -> OptionTask {
+    OptionTask {
+        id: 31,
+        payoff: Payoff::American,
+        spot: 100.0,
+        strike: 110.0,
+        rate: 0.05,
+        sigma: 0.2,
+        maturity: 1.0,
+        steps: 32,
+        ..OptionTask::default()
+    }
+}
+
+fn basket() -> OptionTask {
+    OptionTask {
+        id: 33,
+        payoff: Payoff::Basket,
+        spot: 100.0,
+        strike: 105.0,
+        rate: 0.05,
+        sigma: 0.25,
+        maturity: 1.0,
+        steps: 16,
+        assets: 4,
+        correlation: 0.5,
+        ..OptionTask::default()
+    }
+}
+
+fn heston() -> OptionTask {
+    OptionTask {
+        id: 35,
+        payoff: Payoff::Heston,
+        spot: 100.0,
+        strike: 105.0,
+        rate: 0.05,
+        maturity: 1.0,
+        steps: 64,
+        kappa: 1.5,
+        theta: 0.04,
+        xi: 0.5,
+        v0: 0.04,
+        correlation: -0.7,
+        ..OptionTask::default()
+    }
+}
+
+// ───────────────────────────── American / LSMC ──────────────────────────
+
+#[test]
+fn lsmc_american_put_sits_between_european_and_binomial() {
+    let t = american();
+    let est = combine(&mc::simulate(&t, 42, 0, 1 << 16), t.discount());
+    let eur = blackscholes::put(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+    let crr =
+        blackscholes::american_put_binomial(t.spot, t.strike, t.rate, t.sigma, t.maturity, 2000);
+    // Early exercise must be worth something...
+    assert!(
+        est.price > eur + 3.0 * est.std_error,
+        "no early-exercise premium: lsmc {} ± {} vs european {eur}",
+        est.price,
+        est.std_error
+    );
+    // ...but a (suboptimal) regression policy priced out-of-sample cannot
+    // beat the true price.
+    assert!(
+        est.price <= crr + 3.0 * est.std_error,
+        "lsmc {} ± {} above the binomial oracle {crr}",
+        est.price,
+        est.std_error
+    );
+    // And it should land near the oracle, not merely below it (32 exercise
+    // dates vs the tree's continuous-exercise limit cost a little).
+    assert!(
+        (est.price - crr).abs() < 3.0 * est.std_error + 0.08 * crr,
+        "lsmc {} ± {} far from binomial {crr}",
+        est.price,
+        est.std_error
+    );
+}
+
+#[test]
+fn lsmc_tracks_the_binomial_oracle_across_moneyness() {
+    // Deep ITM, ATM, OTM: the premium structure must follow the tree.
+    for (strike, id) in [(90.0, 41u64), (100.0, 42), (120.0, 43)] {
+        let mut t = american();
+        t.id = id;
+        t.strike = strike;
+        let est = combine(&mc::simulate(&t, 7, 0, 1 << 16), t.discount());
+        let crr = blackscholes::american_put_binomial(
+            t.spot, t.strike, t.rate, t.sigma, t.maturity, 2000,
+        );
+        assert!(
+            (est.price - crr).abs() < 3.0 * est.std_error + 0.08 * crr.max(0.5),
+            "K={strike}: lsmc {} ± {} vs binomial {crr}",
+            est.price,
+            est.std_error
+        );
+    }
+}
+
+#[test]
+fn lsmc_premium_grows_with_more_exercise_dates() {
+    // More exercise opportunities can only add value (up to MC noise): the
+    // 64-date estimate must not fall materially below the 8-date one.
+    let mut coarse = american();
+    coarse.steps = 8;
+    let mut fine = american();
+    fine.steps = 64;
+    let lo = combine(&mc::simulate(&coarse, 11, 0, 1 << 16), coarse.discount());
+    let hi = combine(&mc::simulate(&fine, 11, 0, 1 << 16), fine.discount());
+    assert!(
+        hi.price > lo.price - 3.0 * (lo.std_error + hi.std_error),
+        "64 dates {} ± {} below 8 dates {} ± {}",
+        hi.price,
+        hi.std_error,
+        lo.price,
+        lo.std_error
+    );
+}
+
+// ──────────────────────────────── Basket ────────────────────────────────
+
+#[test]
+fn basket_dominates_its_geometric_lower_bound() {
+    // AM >= GM pathwise, so the arithmetic-basket call dominates the
+    // geometric-basket closed form at every correlation.
+    for (rho, id) in [(0.1, 51u64), (0.5, 52), (0.8, 53)] {
+        let mut t = basket();
+        t.id = id;
+        t.correlation = rho;
+        let est = combine(&mc::simulate(&t, 17, 0, 1 << 16), t.discount());
+        let geo = blackscholes::geometric_basket_call(
+            t.spot,
+            t.strike,
+            t.rate,
+            t.sigma,
+            t.maturity,
+            t.assets,
+            rho,
+        );
+        assert!(
+            est.price > geo - 3.0 * est.std_error,
+            "rho={rho}: mc {} ± {} below geometric bound {geo}",
+            est.price,
+            est.std_error
+        );
+    }
+}
+
+#[test]
+fn basket_matches_the_moment_matched_oracle() {
+    // The Lévy lognormal approximation is good to a few tenths of a percent
+    // at these vols — an independent numerical oracle for the level, not
+    // just the ordering.
+    for (rho, d, id) in [(0.5, 4u32, 61u64), (0.3, 8, 62), (0.8, 2, 63)] {
+        let mut t = basket();
+        t.id = id;
+        t.assets = d;
+        t.correlation = rho;
+        let est = combine(&mc::simulate(&t, 29, 0, 1 << 16), t.discount());
+        let mm = blackscholes::basket_call_moment_matched(
+            t.spot, t.strike, t.rate, t.sigma, t.maturity, d, rho,
+        );
+        assert!(
+            (est.price - mm).abs() < 4.0 * est.std_error + 0.015 * mm,
+            "d={d} rho={rho}: mc {} ± {} vs moment-matched {mm}",
+            est.price,
+            est.std_error
+        );
+    }
+}
+
+// ──────────────────────────────── Heston ────────────────────────────────
+
+/// Constant-vol GBM on the Heston kernel's `z_s` stream, replicating its
+/// f32 arithmetic term for term. At `ξ = 0, v₀ = θ` the Heston variance
+/// recursion is *exactly* constant (the κ(θ−v⁺)dt increment is a product
+/// with an exact zero), so the kernel must reproduce this loop to the last
+/// bit of its accumulators.
+fn replay_degenerate_gbm(task: &OptionTask, seed: u32, offset: u64, n: u32) -> (f64, f64) {
+    assert_eq!(task.xi, 0.0);
+    assert_eq!(task.v0, task.theta);
+    let k0 = task.id as u32;
+    let k1 = seed;
+    let steps = task.steps;
+    let (s0, k, r, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.maturity as f32,
+    );
+    let v0 = task.v0 as f32;
+    let dt = t / steps as f32;
+    let sq = (v0 * dt).sqrt();
+    let mut sum = 0.0f64;
+    let mut sum_sq = 0.0f64;
+    for p in 0..n {
+        let g = offset.wrapping_add(p as u64);
+        let (c0, hi) = (g as u32, ((g >> 32) as u32) << mc::STEP_BITS);
+        let mut log_s = s0.ln();
+        for step in 0..steps {
+            // Sub-draw 2·step is the kernel's z_s; 2·step+1 (the variance
+            // shock) is dead weight at ξ = 0 and never touches the price.
+            let z_s = threefry_normal(k0, k1, c0, hi | (2 * step));
+            log_s += (r - 0.5 * v0) * dt + sq * z_s;
+        }
+        let payoff = ((log_s.exp() - k).max(0.0)) as f64;
+        sum += payoff;
+        sum_sq += payoff * payoff;
+    }
+    (sum, sum_sq)
+}
+
+#[test]
+fn heston_degenerate_limit_replays_gbm_to_1e12() {
+    let mut t = heston();
+    t.xi = 0.0;
+    t.v0 = t.theta;
+    let stats = mc::simulate(&t, 42, 0, 1 << 14);
+    let (sum, sum_sq) = replay_degenerate_gbm(&t, 42, 0, 1 << 14);
+    let rel = (stats.sum - sum).abs() / sum.abs().max(1.0);
+    assert!(rel <= 1e-12, "sum: heston {} vs gbm replay {} (rel {rel})", stats.sum, sum);
+    let rel2 = (stats.sum_sq - sum_sq).abs() / sum_sq.abs().max(1.0);
+    assert!(rel2 <= 1e-12, "sum_sq: heston {} vs gbm replay {}", stats.sum_sq, sum_sq);
+    assert_eq!(stats.n, 1 << 14);
+
+    // Chunked offsets replay identically too (the counter bijection, not
+    // just the zero-offset stream).
+    let stats = mc::simulate(&t, 7, 1 << 10, 512);
+    let (sum, _) = replay_degenerate_gbm(&t, 7, 1 << 10, 512);
+    assert!((stats.sum - sum).abs() / sum.abs().max(1.0) <= 1e-12);
+}
+
+#[test]
+fn heston_degenerate_limit_matches_black_scholes() {
+    let mut t = heston();
+    t.xi = 0.0;
+    t.v0 = t.theta;
+    let est = combine(&mc::simulate(&t, 13, 0, 1 << 16), t.discount());
+    let bs = blackscholes::call(t.spot, t.strike, t.rate, t.theta.sqrt(), t.maturity);
+    assert!(
+        (est.price - bs).abs() < 3.0 * est.std_error + 0.03,
+        "mc {} ± {} vs bs(√θ) {bs}",
+        est.price,
+        est.std_error
+    );
+}
+
+#[test]
+fn heston_mean_reversion_pulls_prices_between_the_vol_extremes() {
+    // v₀ far from θ: the effective vol over [0, T] sits between √v₀ and
+    // √θ, so the price must lie between the two Black-Scholes extremes
+    // (with an ξ cushion — vol-of-vol convexity shifts OTM prices).
+    let mut t = heston();
+    t.v0 = 0.09; // starts at 30% vol, reverts toward 20%
+    t.xi = 0.2;
+    let est = combine(&mc::simulate(&t, 19, 0, 1 << 16), t.discount());
+    let hi = blackscholes::call(t.spot, t.strike, t.rate, 0.3, t.maturity);
+    let lo = blackscholes::call(t.spot, t.strike, t.rate, 0.2, t.maturity);
+    assert!(
+        est.price > lo - 4.0 * est.std_error && est.price < hi + 4.0 * est.std_error,
+        "mc {} ± {} outside BS envelope [{lo}, {hi}]",
+        est.price,
+        est.std_error
+    );
+}

@@ -1,0 +1,317 @@
+//! Greeks validation (ISSUE 10):
+//!
+//! - **No-regression**: the Greek accumulators were appended *after* each
+//!   path's price accumulation, so `sum` / `sum_sq` / `n` of the legacy
+//!   families (European, Asian, Barrier) must be **bit-identical** to
+//!   price-only replicas of the pre-Greeks kernels (reimplemented locally,
+//!   term for term).
+//! - **Pathwise estimators** (European, Asian, Basket, Heston) against
+//!   central finite differences under common random numbers — and, for the
+//!   European call, against the Black-Scholes closed forms.
+//! - **Likelihood-ratio estimators** (Barrier, American — the knock-out
+//!   indicator and exercise boundary kill the pathwise derivative) against
+//!   the same CRN finite differences at looser, variance-appropriate
+//!   tolerances.
+//!
+//! Seeds are pinned throughout.
+
+use cloudshapes::pricing::mc::{self, GreekEstimate};
+use cloudshapes::pricing::{blackscholes, combine};
+use cloudshapes::util::rng::threefry_normal;
+use cloudshapes::workload::option::{OptionTask, Payoff};
+
+fn assert_close(got: f64, want: f64, rel: f64, abs: f64, what: &str) {
+    assert!(
+        (got - want).abs() <= rel * want.abs() + abs,
+        "{what}: estimator {got} vs oracle {want} (rel {rel}, abs {abs})"
+    );
+}
+
+fn base(payoff: Payoff) -> OptionTask {
+    OptionTask {
+        id: 23,
+        payoff,
+        spot: 100.0,
+        strike: 105.0,
+        rate: 0.05,
+        sigma: 0.2,
+        maturity: 1.0,
+        barrier: 140.0,
+        steps: if payoff == Payoff::European { 1 } else { 64 },
+        assets: if payoff == Payoff::Basket { 4 } else { 1 },
+        correlation: match payoff {
+            Payoff::Basket => 0.5,
+            Payoff::Heston => -0.7,
+            _ => 0.0,
+        },
+        ..OptionTask::default()
+    }
+}
+
+/// Central finite differences of the discounted price in spot and vol,
+/// re-simulated under the *same* seed (common random numbers) so the
+/// difference variance collapses. The vol bump hits `sigma` for the GBM
+/// families and the initial vol `√v₀` for Heston.
+fn fd_greeks(task: &OptionTask, seed: u32, n: u32, h_s: f64, h_v: f64) -> (f64, f64) {
+    let price = |t: &OptionTask| combine(&mc::simulate(t, seed, 0, n), t.discount()).price;
+    let mut su = task.clone();
+    su.spot += h_s;
+    let mut sd = task.clone();
+    sd.spot -= h_s;
+    let delta = (price(&su) - price(&sd)) / (2.0 * h_s);
+    let mut vu = task.clone();
+    let mut vd = task.clone();
+    if task.payoff == Payoff::Heston {
+        vu.v0 = (task.v0.sqrt() + h_v).powi(2);
+        vd.v0 = (task.v0.sqrt() - h_v).powi(2);
+    } else {
+        vu.sigma += h_v;
+        vd.sigma -= h_v;
+    }
+    let vega = (price(&vu) - price(&vd)) / (2.0 * h_v);
+    (delta, vega)
+}
+
+fn greeks(task: &OptionTask, seed: u32, n: u32) -> GreekEstimate {
+    mc::combine_greeks(&mc::simulate(task, seed, 0, n), task.discount())
+}
+
+// ─────────────────── sum/sum_sq bit-identity (no regression) ─────────────
+
+/// Price-only European kernel exactly as it stood before the Greek
+/// accumulators landed.
+fn european_price_only(task: &OptionTask, seed: u32, offset: u64, n: u32) -> (f64, f64) {
+    let (k0, k1) = (task.id as u32, seed);
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let drift = (r - 0.5 * sigma * sigma) * t;
+    let vol = sigma * t.sqrt();
+    let (mut sum, mut sum_sq) = (0.0f64, 0.0f64);
+    for p in 0..n {
+        let g = offset.wrapping_add(p as u64);
+        let (c0, hi) = (g as u32, ((g >> 32) as u32) << mc::STEP_BITS);
+        let z = threefry_normal(k0, k1, c0, hi);
+        let st = s0 * (drift + vol * z).exp();
+        let payoff = (st - k).max(0.0) as f64;
+        sum += payoff;
+        sum_sq += payoff * payoff;
+    }
+    (sum, sum_sq)
+}
+
+/// Price-only Asian kernel (pre-Greeks).
+fn asian_price_only(task: &OptionTask, seed: u32, offset: u64, n: u32) -> (f64, f64) {
+    let (k0, k1) = (task.id as u32, seed);
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let steps = task.steps;
+    let dt = t / steps as f32;
+    let drift = (r - 0.5 * sigma * sigma) * dt;
+    let vol = sigma * dt.sqrt();
+    let (mut sum, mut sum_sq) = (0.0f64, 0.0f64);
+    for p in 0..n {
+        let g = offset.wrapping_add(p as u64);
+        let (c0, hi) = (g as u32, ((g >> 32) as u32) << mc::STEP_BITS);
+        let mut log_s = s0.ln();
+        let mut acc = 0.0f32;
+        for step in 0..steps {
+            let z = threefry_normal(k0, k1, c0, hi | step);
+            log_s += drift + vol * z;
+            acc += log_s.exp();
+        }
+        let avg = acc / steps as f32;
+        let payoff = (avg - k).max(0.0) as f64;
+        sum += payoff;
+        sum_sq += payoff * payoff;
+    }
+    (sum, sum_sq)
+}
+
+/// Price-only Barrier kernel (pre-Greeks).
+fn barrier_price_only(task: &OptionTask, seed: u32, offset: u64, n: u32) -> (f64, f64) {
+    let (k0, k1) = (task.id as u32, seed);
+    let (s0, k, r, sigma, t) = (
+        task.spot as f32,
+        task.strike as f32,
+        task.rate as f32,
+        task.sigma as f32,
+        task.maturity as f32,
+    );
+    let steps = task.steps;
+    let barrier = task.barrier as f32;
+    let dt = t / steps as f32;
+    let drift = (r - 0.5 * sigma * sigma) * dt;
+    let vol = sigma * dt.sqrt();
+    let (mut sum, mut sum_sq) = (0.0f64, 0.0f64);
+    for p in 0..n {
+        let g = offset.wrapping_add(p as u64);
+        let (c0, hi) = (g as u32, ((g >> 32) as u32) << mc::STEP_BITS);
+        let mut log_s = s0.ln();
+        let mut alive = s0 < barrier;
+        for step in 0..steps {
+            let z = threefry_normal(k0, k1, c0, hi | step);
+            log_s += drift + vol * z;
+            alive = alive && log_s.exp() < barrier;
+        }
+        let payoff = if alive { (log_s.exp() - k).max(0.0) as f64 } else { 0.0 };
+        sum += payoff;
+        sum_sq += payoff * payoff;
+    }
+    (sum, sum_sq)
+}
+
+#[test]
+fn greek_accumulators_leave_price_sums_bit_identical() {
+    // The pre-Greeks replicas and the live kernels must agree to the LAST
+    // BIT — Greeks ride along, they never perturb the price stream.
+    type Replica = fn(&OptionTask, u32, u64, u32) -> (f64, f64);
+    let cases: [(Payoff, Replica); 3] = [
+        (Payoff::European, european_price_only),
+        (Payoff::Asian, asian_price_only),
+        (Payoff::Barrier, barrier_price_only),
+    ];
+    for (payoff, replica) in cases {
+        let t = base(payoff);
+        for (seed, offset, n) in [(1u32, 0u64, 4096u32), (9, 1 << 9, 777), (5, 1u64 << 33, 512)] {
+            let stats = mc::simulate(&t, seed, offset, n);
+            let (sum, sum_sq) = replica(&t, seed, offset, n);
+            assert_eq!(stats.sum, sum, "{payoff:?} seed {seed} offset {offset}: sum drifted");
+            assert_eq!(stats.sum_sq, sum_sq, "{payoff:?} seed {seed}: sum_sq drifted");
+            assert_eq!(stats.n, n as u64, "{payoff:?}: path count");
+        }
+    }
+}
+
+// ─────────────────────────── pathwise families ───────────────────────────
+
+#[test]
+fn european_pathwise_greeks_match_closed_form_and_fd() {
+    let t = base(Payoff::European);
+    let g = greeks(&t, 42, 1 << 17);
+    let bs_delta = blackscholes::call_delta(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+    let bs_vega = blackscholes::call_vega(t.spot, t.strike, t.rate, t.sigma, t.maturity);
+    assert_close(g.delta, bs_delta, 0.03, 0.01, "european delta vs closed form");
+    assert_close(g.vega, bs_vega, 0.06, 0.2, "european vega vs closed form");
+    let (fd_delta, fd_vega) = fd_greeks(&t, 42, 1 << 17, 1.0, 0.01);
+    assert_close(g.delta, fd_delta, 0.05, 0.02, "european delta vs CRN FD");
+    assert_close(g.vega, fd_vega, 0.10, 0.5, "european vega vs CRN FD");
+}
+
+#[test]
+fn asian_pathwise_greeks_match_crn_finite_differences() {
+    let t = base(Payoff::Asian);
+    let g = greeks(&t, 7, 1 << 16);
+    let (fd_delta, fd_vega) = fd_greeks(&t, 7, 1 << 16, 1.0, 0.01);
+    // Sanity: an average-rate call has delta in (0, 1) and positive vega.
+    assert!(g.delta > 0.0 && g.delta < 1.0, "asian delta {}", g.delta);
+    assert!(g.vega > 0.0, "asian vega {}", g.vega);
+    assert_close(g.delta, fd_delta, 0.10, 0.03, "asian delta vs CRN FD");
+    assert_close(g.vega, fd_vega, 0.15, 1.0, "asian vega vs CRN FD");
+}
+
+#[test]
+fn basket_pathwise_greeks_match_crn_finite_differences() {
+    let t = base(Payoff::Basket);
+    let g = greeks(&t, 11, 1 << 16);
+    let (fd_delta, fd_vega) = fd_greeks(&t, 11, 1 << 16, 1.0, 0.01);
+    assert!(g.delta > 0.0 && g.delta < 1.0, "basket delta {}", g.delta);
+    assert!(g.vega > 0.0, "basket vega {}", g.vega);
+    assert_close(g.delta, fd_delta, 0.10, 0.03, "basket delta vs CRN FD");
+    assert_close(g.vega, fd_vega, 0.15, 1.5, "basket vega vs CRN FD");
+}
+
+#[test]
+fn heston_pathwise_greeks_match_crn_finite_differences() {
+    let t = base(Payoff::Heston);
+    let g = greeks(&t, 13, 1 << 16);
+    // Vega is taken wrt the initial vol √v₀ — bump √v₀ in the FD too.
+    let (fd_delta, fd_vega) = fd_greeks(&t, 13, 1 << 16, 1.0, 0.01);
+    assert!(g.delta > 0.0 && g.delta < 1.0, "heston delta {}", g.delta);
+    assert_close(g.delta, fd_delta, 0.10, 0.03, "heston delta vs CRN FD");
+    // The truncation subgradient and f32 chain-rule state cost accuracy:
+    // looser than the GBM families, still unambiguous.
+    assert_close(g.vega, fd_vega, 0.25, 2.0, "heston vega vs CRN FD");
+}
+
+#[test]
+fn heston_degenerate_vega_matches_black_scholes() {
+    // ξ = 0, v₀ = θ: Heston IS Black-Scholes at σ = √θ, and the pathwise
+    // chain-rule vega must collapse to the European pathwise vega.
+    let mut t = base(Payoff::Heston);
+    t.xi = 0.0;
+    t.v0 = t.theta;
+    let g = greeks(&t, 17, 1 << 17);
+    let sigma = t.theta.sqrt();
+    let bs_delta = blackscholes::call_delta(t.spot, t.strike, t.rate, sigma, t.maturity);
+    let bs_vega = blackscholes::call_vega(t.spot, t.strike, t.rate, sigma, t.maturity);
+    assert_close(g.delta, bs_delta, 0.04, 0.01, "degenerate heston delta");
+    assert_close(g.vega, bs_vega, 0.10, 0.5, "degenerate heston vega");
+}
+
+// ─────────────────────── likelihood-ratio families ───────────────────────
+
+#[test]
+fn barrier_lr_greeks_match_crn_finite_differences() {
+    let t = base(Payoff::Barrier);
+    let g = greeks(&t, 3, 1 << 17);
+    let (fd_delta, fd_vega) = fd_greeks(&t, 3, 1 << 17, 1.0, 0.01);
+    // LR estimators are unbiased but noisy; CRN FD of a discontinuous
+    // payoff carries O(h) kink noise — meet in the middle with loose
+    // tolerances that still pin sign and scale.
+    assert_close(g.delta, fd_delta, 0.25, 0.08, "barrier LR delta vs CRN FD");
+    assert_close(g.vega, fd_vega, 0.30, 4.0, "barrier LR vega vs CRN FD");
+}
+
+#[test]
+fn american_lr_greeks_match_crn_finite_differences() {
+    let t = OptionTask {
+        id: 27,
+        payoff: Payoff::American,
+        spot: 100.0,
+        strike: 110.0,
+        rate: 0.05,
+        sigma: 0.2,
+        maturity: 1.0,
+        steps: 32,
+        ..OptionTask::default()
+    };
+    let g = greeks(&t, 5, 1 << 17);
+    let (fd_delta, fd_vega) = fd_greeks(&t, 5, 1 << 17, 1.0, 0.01);
+    // An ITM American put: delta decidedly negative, vega positive.
+    assert!(g.delta < -0.2, "american put delta {}", g.delta);
+    assert!(g.vega > 0.0, "american put vega {}", g.vega);
+    assert_close(g.delta, fd_delta, 0.25, 0.10, "american LR delta vs CRN FD");
+    assert_close(g.vega, fd_vega, 0.30, 5.0, "american LR vega vs CRN FD");
+}
+
+#[test]
+fn greek_accumulators_merge_additively_across_chunks() {
+    // Chunked execution must merge Greeks exactly like prices — for every
+    // family, including the LR ones whose scores weight the payoff.
+    for payoff in Payoff::ALL {
+        let mut t = base(payoff);
+        t.steps = if payoff == Payoff::European { 1 } else { 16 };
+        let whole = mc::simulate(&t, 21, 0, 2048);
+        let merged = mc::simulate(&t, 21, 0, 800).merge(&mc::simulate(&t, 21, 800, 1248));
+        let tol = |x: f64| 1e-9 * x.abs().max(1.0);
+        assert!(
+            (whole.delta_sum - merged.delta_sum).abs() < tol(whole.delta_sum),
+            "{payoff:?} delta_sum"
+        );
+        assert!(
+            (whole.vega_sum - merged.vega_sum).abs() < tol(whole.vega_sum),
+            "{payoff:?} vega_sum"
+        );
+        assert_eq!(whole.n, merged.n, "{payoff:?}");
+    }
+}

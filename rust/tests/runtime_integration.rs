@@ -28,6 +28,7 @@ fn task(payoff: Payoff) -> OptionTask {
         steps: 64, // matches the AOT variants for path-dependent payoffs
         target_accuracy: 0.05,
         n_sims: 1 << 16,
+        ..OptionTask::default()
     }
 }
 

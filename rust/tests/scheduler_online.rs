@@ -5,8 +5,13 @@
 //!   re-solve whose predicted makespan strictly improves on the stale warm
 //!   incumbent, and model error tightens between the first and last epoch;
 //! - `cancel` releases in-flight capacity back to the queue;
-//! - `serve --scheduler` handles 8 concurrent `submit`s with mixed
-//!   deadline/budget SLOs over TCP, all meeting their SLOs.
+//! - per-family re-fit (ISSUE 10): on a cluster where basket chunks
+//!   secretly cost 4x the modelled FLOP rate, the family-aware fit cuts
+//!   the latency-prediction error vs the single pooled line and predicts
+//!   the realised makespan better;
+//! - `serve --scheduler` handles 8 concurrent `submit`s spanning all six
+//!   payoff families with mixed deadline/budget SLOs over TCP, all
+//!   meeting their SLOs.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -16,17 +21,18 @@ use std::time::{Duration, Instant};
 use cloudshapes::api::{SessionBuilder, TradeoffSession};
 use cloudshapes::cli::serve::serve_until_shutdown;
 use cloudshapes::config::ExperimentConfig;
+use cloudshapes::coordinator::executor::execute_static;
 use cloudshapes::coordinator::partitioner::HeuristicPartitioner;
 use cloudshapes::coordinator::scheduler::{
     JobSpec, JobState, OnlineScheduler, SchedulerConfig, Slo,
 };
 use cloudshapes::coordinator::{ExecutorConfig, ModelSet, Partitioner};
-use cloudshapes::models::PlatformPrior;
+use cloudshapes::models::{OnlineLatencyFit, PlatformPrior};
 use cloudshapes::platforms::sim::{SimConfig, SimPlatform};
 use cloudshapes::platforms::spec::small_cluster;
-use cloudshapes::platforms::{Cluster, Platform};
+use cloudshapes::platforms::{ChunkCtx, Cluster, Platform};
 use cloudshapes::util::json::Json;
-use cloudshapes::workload::Payoff;
+use cloudshapes::workload::{generate, GeneratorConfig, Payoff};
 
 /// Nominal (spec-derived) priors — deliberately blind to hidden factors.
 fn nominal_priors(cluster: &Cluster) -> Vec<PlatformPrior> {
@@ -217,6 +223,141 @@ fn cancel_releases_capacity_back_to_the_queue() {
     s.shutdown();
 }
 
+#[test]
+fn per_family_refit_beats_the_single_line_on_a_mixed_exotic_queue() {
+    // ISSUE 10 acceptance: basket chunks secretly cost 4x the FLOP rate the
+    // models assume while barrier chunks run on-model. Fed identical
+    // observations, the per-family fit must (a) cut the mean relative
+    // chunk-latency prediction error vs the single pooled line and (b)
+    // predict the realised makespan of the resulting plan better.
+    let specs = small_cluster();
+    let mut factors = [1.0; Payoff::COUNT];
+    factors[Payoff::Basket.index()] = 4.0;
+    let platforms: Vec<Arc<dyn Platform>> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| -> Arc<dyn Platform> {
+            Arc::new(SimPlatform::with_family_factors(
+                s.clone(),
+                SimConfig::exact(),
+                21 + i as u64,
+                factors,
+            ))
+        })
+        .collect();
+    let cluster = Cluster::new(platforms).unwrap();
+    let mut mix = [0.0; Payoff::COUNT];
+    mix[Payoff::Barrier.index()] = 0.5;
+    mix[Payoff::Basket.index()] = 0.5;
+    let workload = generate(&GeneratorConfig {
+        n_tasks: 12,
+        seed: 31,
+        accuracy: 0.02,
+        payoff_mix: mix,
+        step_choices: vec![64],
+        ..GeneratorConfig::default()
+    });
+    assert!(workload.tasks.iter().any(|t| t.payoff == Payoff::Barrier));
+    assert!(workload.tasks.iter().any(|t| t.payoff == Payoff::Basket));
+
+    // Warm chunks carry no setup, so each observation is pure work time —
+    // exactly what `observe` expects after the scheduler's γ subtraction.
+    let priors = nominal_priors(&cluster);
+    let mut family = OnlineLatencyFit::new(priors.clone(), 64);
+    let mut single = OnlineLatencyFit::single_line(priors, 64);
+    const CHUNK: u64 = 1 << 15;
+    let warm = ChunkCtx { offset: 0, prior_sims: CHUNK };
+    for i in 0..cluster.len() {
+        for t in &workload.tasks {
+            for _ in 0..2 {
+                let out = cluster.platform(i).execute(t, CHUNK, 3, warm);
+                assert!(out.error.is_none(), "{:?}", out.error);
+                let flops = t.flops_per_path() * CHUNK as f64;
+                family.observe(i, t.payoff, flops, out.latency_secs);
+                single.observe(i, t.payoff, flops, out.latency_secs);
+            }
+        }
+    }
+
+    // (a) Warm-chunk latency prediction error over every (platform, task)
+    // pairing. The exact simulator has no noise, so the family fit should
+    // recover each family's realised rate essentially exactly while the
+    // pooled line mis-prices both sides of the 4x split.
+    let mean_err = |fit: &OnlineLatencyFit| {
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for i in 0..cluster.len() {
+            for t in &workload.tasks {
+                let truth = cluster.platform(i).execute(t, CHUNK, 5, warm).latency_secs;
+                let pred = fit.model(i, t.payoff, t.flops_per_path()).beta * CHUNK as f64;
+                total += (pred - truth).abs() / truth;
+                count += 1;
+            }
+        }
+        total / count as f64
+    };
+    let err_family = mean_err(&family);
+    let err_single = mean_err(&single);
+    assert!(err_family < 1e-6, "family fit should nail the exact sim, got {err_family}");
+    assert!(err_single > 0.15, "pooled line should mis-price a 4x family split, got {err_single}");
+
+    // (b) Build a ModelSet from each fit, plan on the family-aware one and
+    // execute for real: the family-aware makespan prediction must sit near
+    // the realised value, the single-line one visibly off it.
+    let cost_models: Vec<_> = specs.iter().map(|s| s.cost_model()).collect();
+    let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+    let model_set = |fit: &OnlineLatencyFit| {
+        let mut latency = Vec::with_capacity(cluster.len() * workload.len());
+        for i in 0..cluster.len() {
+            for t in &workload.tasks {
+                latency.push(fit.model(i, t.payoff, t.flops_per_path()));
+            }
+        }
+        ModelSet::new(
+            latency,
+            cost_models.clone(),
+            workload.tasks.iter().map(|t| t.n_sims).collect(),
+            names.clone(),
+        )
+        .with_task_families(workload.tasks.iter().map(|t| t.payoff).collect())
+    };
+    let m_family = model_set(&family);
+    let m_single = model_set(&single);
+    let alloc = HeuristicPartitioner::default().partition(&m_family, None).unwrap();
+    let realised = execute_static(&cluster, &workload, &alloc, &ExecutorConfig::default())
+        .unwrap()
+        .makespan_secs;
+    let gap_family = (m_family.makespan(&alloc) - realised).abs() / realised;
+    let gap_single = (m_single.makespan(&alloc) - realised).abs() / realised;
+    assert!(
+        gap_family < 0.10,
+        "family-aware prediction should track the realised makespan: {gap_family}"
+    );
+    assert!(
+        gap_single > 2.0 * gap_family,
+        "single-line prediction should be visibly worse: family {gap_family} vs single {gap_single}"
+    );
+}
+
+#[test]
+fn scheduler_completes_mixed_exotics_with_family_refit_disabled() {
+    // The `family_refit = false` ablation path must still drive an exotic
+    // job through the full scheduler loop (single pooled line per
+    // platform, as before ISSUE 10).
+    let cluster = exact_cluster();
+    let job = JobSpec::generate(Some(Payoff::Basket), 2, 0.05, 41, Slo::Deadline(1e9)).unwrap();
+    let s = start_scheduler(
+        cluster,
+        SchedulerConfig { enabled: true, family_refit: false, ..Default::default() },
+    );
+    let id = s.submit(job).unwrap();
+    let st = wait_terminal(&s, id);
+    assert_eq!(st.state, JobState::Done, "{st:?}");
+    assert_eq!(st.slo_met, Some(true));
+    assert!(st.prices.iter().all(Option::is_some));
+    s.shutdown();
+}
+
 // ───────────────────────── serve --scheduler, end to end ────────────────
 
 struct Server {
@@ -260,7 +401,9 @@ impl Server {
 #[test]
 fn serve_scheduler_handles_eight_concurrent_mixed_slo_submits() {
     let server = Arc::new(start_scheduler_server());
-    let payoffs = ["european", "asian", "barrier"];
+    // Every payoff family crosses the wire (the exotics exercise the same
+    // `Payoff::parse` dispatch, so no serve-layer change was needed).
+    let payoffs = Payoff::NAMES;
     // 8 concurrent clients, mixed deadline/budget SLOs. Client 0 streams.
     let mut handles = Vec::new();
     for k in 0..8usize {
